@@ -1,0 +1,79 @@
+//! The §3.4 consistency-price ablation: "as a price, the servers must
+//! keep all related clients updated when applications modify the
+//! permission of a file/directory".
+//!
+//! N clients cache the same directory; one chmod then has to push an
+//! invalidation to every one of them and wait for all acks before it
+//! applies. This driver measures that barrier cost as N grows — the
+//! trade the paper accepts because permission changes "usually don't
+//! occur frequently".
+//!
+//! Run: `cargo run --release --example chmod_storm -- [--clients 1,4,16,64]`
+
+use std::time::Instant;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::simnet::NetConfig;
+use buffetfs::types::{Credentials, OpenFlags};
+use buffetfs::util::args::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let counts: Vec<usize> = args
+        .get_or("clients", "1,2,4,8,16,32,64")
+        .split(',')
+        .filter_map(|v| v.trim().parse().ok())
+        .collect();
+
+    println!("chmod invalidation barrier cost vs #caching clients (one-way {}µs)", 100);
+    println!("{:>8} {:>14} {:>14} {:>16}", "clients", "chmod_ms", "invalidations", "reopen_refetches");
+
+    for &n in &counts {
+        let cluster = BuffetCluster::spawn(1, NetConfig::infiniband(), Backing::Mem, false);
+        let (admin_agent, _) = cluster.make_agent();
+        let admin = Buffet::process(admin_agent, Credentials::root());
+        admin.mkdir("/shared", 0o755).unwrap();
+        admin.put("/shared/doc.txt", b"shared data for everyone").unwrap();
+        // group 1000 owns the file; the storm toggles modes that keep
+        // group-read so clients stay authorized throughout
+        admin.chown("/shared/doc.txt", 1000, 1000).unwrap();
+        admin.chmod("/shared/doc.txt", 0o644).unwrap();
+
+        // N clients warm their caches on the same directory
+        let clients: Vec<Buffet> = (0..n)
+            .map(|_| {
+                let (agent, _) = cluster.make_agent();
+                let c = Buffet::process(agent, Credentials::new(2000, 1000));
+                let fd = c.open("/shared/doc.txt", OpenFlags::RDONLY).unwrap();
+                c.read(fd, 16).unwrap();
+                c.close(fd).unwrap();
+                c
+            })
+            .collect();
+        let server = &cluster.servers[0];
+        let pushed_before = server.stats.invalidations_pushed.load(std::sync::atomic::Ordering::Relaxed);
+
+        // the storm: one chmod must invalidate all N caches first
+        let owner_agent = cluster.make_agent().0;
+        let owner = Buffet::process(owner_agent, Credentials::new(1000, 1000));
+        let t0 = Instant::now();
+        owner.chmod("/shared/doc.txt", 0o640).unwrap();
+        let chmod_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let pushed = server.stats.invalidations_pushed.load(std::sync::atomic::Ordering::Relaxed) - pushed_before;
+
+        // every client revalidates on next access (refetch = 1 dir fetch),
+        // and the new mode is enforced locally
+        let mut refetches = 0u64;
+        for c in &clients {
+            let (_, _, fetches_before) = c.agent().cache_stats();
+            let fd = c.open("/shared/doc.txt", OpenFlags::RDONLY).unwrap();
+            c.close(fd).unwrap();
+            let (_, _, fetches_after) = c.agent().cache_stats();
+            refetches += fetches_after - fetches_before;
+        }
+        println!("{:>8} {:>14.3} {:>14} {:>16}", n, chmod_ms, pushed, refetches);
+    }
+    println!("\n(chmod blocks until every caching client acks — §3.4 strong consistency)");
+}

@@ -1,0 +1,87 @@
+//! The three-layer story in one place: the BAgent offloads *batched*
+//! permission checks to the AOT-compiled Pallas kernel running under
+//! PJRT (L1/L2), while scalar opens stay native. Verifies the kernel
+//! verdicts against the native oracle, then measures throughput of the
+//! three backends (native loop / PJRT+Pallas / PJRT+pure-jnp reference).
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example kernel_offload`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::perm::{BatchPathChecker, NativeBatchChecker};
+use buffetfs::runtime::KernelRuntime;
+use buffetfs::simnet::NetConfig;
+use buffetfs::types::{AccessMask, Credentials, OpenFlags, PermBlob};
+use buffetfs::util::rng::XorShift;
+
+fn main() {
+    let rt = KernelRuntime::load(KernelRuntime::default_dir())
+        .expect("artifacts missing — run `make artifacts` first");
+
+    // ---- integrated: open_many through the agent with the kernel -----------
+    let cluster = BuffetCluster::spawn(1, NetConfig::zero(), Backing::Mem, false);
+    let (agent, _) = cluster.make_agent();
+    agent.set_checker(rt.clone());
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/batch", 0o755).unwrap();
+    for i in 0..512 {
+        // half the files are private to root
+        let mode = if i % 2 == 0 { 0o644 } else { 0o600 };
+        admin.create(&format!("/batch/f{i:03}"), mode).unwrap();
+    }
+    let user = Buffet::process(agent.clone(), Credentials::new(1000, 1000));
+    let paths: Vec<String> = (0..512).map(|i| format!("/batch/f{i:03}")).collect();
+    let path_refs: Vec<&str> = paths.iter().map(|s| s.as_str()).collect();
+    let fds = user.open_many(&path_refs, OpenFlags::RDONLY);
+    let granted = fds.iter().filter(|r| r.is_ok()).count();
+    let denied = fds.iter().filter(|r| r.is_err()).count();
+    println!("open_many over the Pallas kernel: {granted} granted, {denied} denied (expect 256/256)");
+    assert_eq!((granted, denied), (256, 256));
+    assert!(agent.stats.batch_checks.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+
+    // ---- cross-check + throughput ------------------------------------------
+    let mut rng = XorShift::new(0xbea7);
+    let chains: Vec<Vec<PermBlob>> = (0..4096)
+        .map(|_| {
+            (0..1 + rng.below(8) as usize)
+                .map(|_| PermBlob::new(rng.below(0o1000) as u16, rng.below(8) as u32, rng.below(8) as u32))
+                .collect()
+        })
+        .collect();
+    let cred = Credentials::with_groups(3, 4, vec![5]);
+    let native = NativeBatchChecker.check_paths(&chains, &cred, AccessMask::READ).unwrap();
+    let kernel = rt.check_paths(&chains, &cred, AccessMask::READ).unwrap();
+    assert_eq!(native, kernel, "kernel and native oracle must agree");
+    println!("verdict cross-check on 4096 random path chains: EXACT MATCH");
+
+    let bench = |name: &str, f: &mut dyn FnMut()| {
+        // warmup
+        f();
+        let t0 = Instant::now();
+        let reps = 20;
+        for _ in 0..reps {
+            f();
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "{name:<28} {:>10.2} ms / 4096 chains  ({:>10.0} checks/s)",
+            per * 1e3,
+            4096.0 / per
+        );
+    };
+    bench("native scalar loop", &mut || {
+        NativeBatchChecker.check_paths(&chains, &cred, AccessMask::READ).unwrap();
+    });
+    bench("PJRT + Pallas kernel", &mut || {
+        rt.check_paths_via(&chains, &cred, AccessMask::READ, false).unwrap();
+    });
+    bench("PJRT + pure-jnp reference", &mut || {
+        rt.check_paths_via(&chains, &cred, AccessMask::READ, true).unwrap();
+    });
+    let _ = Arc::strong_count(&rt);
+    println!("kernel_offload OK");
+}

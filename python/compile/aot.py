@@ -1,0 +1,68 @@
+"""AOT step: lower the L2 graphs to HLO **text** for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids, which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Runs once at build time (``make artifacts``); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple so Rust can
+    unwrap uniformly with to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str) -> str:
+    fn, specs = model.ENTRY_POINTS[name]
+    lowered = jax.jit(fn).lower(*specs())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: also write the primary artifact here")
+    ap.add_argument("--only", default=None, help="lower a single entry point")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [args.only] if args.only else list(model.ENTRY_POINTS)
+    manifest = [
+        f"B={model.B} D={model.D} G={model.G} N={model.N}",
+    ]
+    for name in names:
+        text = lower_entry(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}.hlo.txt bytes={len(text)}")
+        print(f"wrote {path} ({len(text)} chars)")
+        if args.out and name == "batch_open":
+            with open(args.out, "w") as f:
+                f.write(text)
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Pure-jnp and scalar-python oracles for the permission-check kernels.
+
+These mirror ``rust/src/perm.rs`` exactly — the three implementations
+(rust native, jnp reference, Pallas kernel) must agree bit-for-bit.
+
+Semantics (POSIX access(2)-style, matching the BuffetFS paper's
+"permission check" = ownership + grouping + rwx mixed mode):
+
+* ``mode``  — low 9 bits are ``rwxrwxrwx`` (owner, group, other classes).
+* ``want``  — requested access mask: R=4, W=2, X=1 (octal-class layout).
+* class selection is exclusive and ordered: the *owner* class applies iff
+  ``cred.uid == uid`` (even if it denies and group would allow); else the
+  *group* class applies iff ``gid`` is among the credential's groups
+  (primary gid is included in ``gids`` by convention); else *other*.
+* root override: ``cred.uid == 0`` grants R and W unconditionally and X
+  iff any execute bit is set in ``mode``.
+* verdict: allowed iff ``want & ~granted == 0``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+R, W, X = 4, 2, 1
+
+# AOT shapes — keep in sync with rust/src/runtime/shapes.rs and model.py.
+BATCH_B = 256  # open requests per batch_open invocation
+DEPTH_D = 16  # max path components per request
+GROUPS_G = 16  # supplementary-group slots per credential
+DIRSCAN_N = 1024  # directory entries per dirscan invocation
+
+
+# ---------------------------------------------------------------------------
+# Scalar python oracle (ground truth for tests; mirrors rust perm.rs)
+# ---------------------------------------------------------------------------
+
+
+def granted_bits_scalar(mode: int, uid: int, gid: int, cred_uid: int, cred_gids) -> int:
+    """Bits (R|W|X) the credential holds on a file with (mode, uid, gid)."""
+    if cred_uid == 0:
+        x = X if (mode & 0o111) != 0 else 0
+        return R | W | x
+    if cred_uid == uid:
+        return (mode >> 6) & 7
+    if gid in cred_gids:
+        return (mode >> 3) & 7
+    return mode & 7
+
+
+def check_scalar(mode: int, uid: int, gid: int, cred_uid: int, cred_gids, want: int) -> bool:
+    return (want & ~granted_bits_scalar(mode, uid, gid, cred_uid, cred_gids)) == 0
+
+
+def path_check_scalar(modes, uids, gids, depth, cred_uid, cred_gids, want):
+    """Walk one path: X on every ancestor, ``want`` on the leaf.
+
+    Returns (allowed: bool, fail_idx: int) where fail_idx is the first
+    failing component index, or -1 when allowed.
+    """
+    for d in range(depth):
+        req = want if d == depth - 1 else X
+        if not check_scalar(modes[d], uids[d], gids[d], cred_uid, cred_gids, req):
+            return False, d
+    return True, -1
+
+
+# ---------------------------------------------------------------------------
+# Vectorized jnp reference (the L2 graph semantics, no Pallas)
+# ---------------------------------------------------------------------------
+
+
+def granted_bits_jnp(modes, uids, gids, cred_uid, cred_gids, ngroups):
+    """Vectorized granted-bits. Entry arrays share a leading shape S;
+    cred_uid/ngroups broadcast against S; cred_gids has shape S + (G,)
+    or (G,) broadcastable to it."""
+    modes = modes.astype(jnp.int32)
+    owner = (modes >> 6) & 7
+    group = (modes >> 3) & 7
+    other = modes & 7
+
+    is_owner = uids == cred_uid
+    g = cred_gids.shape[-1]
+    slot = jnp.arange(g, dtype=jnp.int32)
+    live = slot < jnp.expand_dims(jnp.broadcast_to(ngroups, gids.shape), -1)
+    hit = (cred_gids == jnp.expand_dims(gids, -1)) & live
+    in_group = jnp.any(hit, axis=-1)
+
+    granted = jnp.where(is_owner, owner, jnp.where(in_group, group, other))
+    root_x = jnp.where((modes & 0o111) != 0, X, 0)
+    root_granted = R | W | root_x
+    return jnp.where(cred_uid == 0, root_granted, granted).astype(jnp.int32)
+
+
+def check_jnp(modes, uids, gids, cred_uid, cred_gids, ngroups, want):
+    granted = granted_bits_jnp(modes, uids, gids, cred_uid, cred_gids, ngroups)
+    return (want & ~granted) == 0
+
+
+def batch_path_check_ref(modes, uids, gids, depth, cred_uid, cred_gids, ngroups, want):
+    """Reference for the batch_open graph.
+
+    Shapes: modes/uids/gids i32[B,D]; depth/cred_uid/ngroups/want i32[B];
+    cred_gids i32[B,G].  Returns (allow i32[B], fail_idx i32[B]).
+    """
+    b, d = modes.shape
+    didx = jnp.arange(d, dtype=jnp.int32)[None, :]
+    depth_c = depth[:, None]
+    is_leaf = didx == depth_c - 1
+    in_path = didx < depth_c
+    required = jnp.where(is_leaf, want[:, None], jnp.where(in_path, X, 0)).astype(jnp.int32)
+
+    ok = check_jnp(
+        modes,
+        uids,
+        gids,
+        cred_uid[:, None],
+        cred_gids[:, None, :],
+        ngroups[:, None],
+        required,
+    )
+    ok = ok | ~in_path  # padding components never fail
+    allow = jnp.all(ok, axis=1)
+    first_bad = jnp.argmax(~ok, axis=1).astype(jnp.int32)
+    fail_idx = jnp.where(allow, -1, first_bad)
+    return allow.astype(jnp.int32), fail_idx
+
+
+def dir_scan_ref(modes, uids, gids, valid, cred_uid, cred_gids, ngroups, want):
+    """Reference for the dirscan graph.
+
+    Shapes: modes/uids/gids/valid i32[N]; cred_uid/ngroups/want i32 scalars
+    (rank-0 or shape (1,)); cred_gids i32[G].  Returns allow i32[N]
+    (invalid entries report 0).
+    """
+    cred_uid = jnp.reshape(cred_uid, ())
+    ngroups = jnp.reshape(ngroups, ())
+    want = jnp.reshape(want, ())
+    ok = check_jnp(modes, uids, gids, cred_uid, cred_gids[None, :], ngroups, want)
+    return (ok & (valid != 0)).astype(jnp.int32)

@@ -1,0 +1,79 @@
+"""L2 graphs exported to the Rust coordinator.
+
+Two entry points, both thin compositions over the L1 Pallas kernels, with
+**fixed AOT shapes** (the PJRT executable is compiled once; Rust pads):
+
+* ``batch_open``  — B=256 open() requests × D=16 path components × G=16
+  group slots → (allow i32[B], fail_idx i32[B]).
+* ``dirscan``     — N=1024 directory entries × one credential →
+  allow i32[N].
+
+Rust-side constants live in ``rust/src/runtime/shapes.rs``; the AOT step
+also emits ``artifacts/manifest.txt`` so the runtime can sanity-check.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import permcheck, ref
+
+B, D, G, N = ref.BATCH_B, ref.DEPTH_D, ref.GROUPS_G, ref.DIRSCAN_N
+
+
+def batch_open(modes, uids, gids, depth, cred_uid, cred_gids, ngroups, want):
+    """The exported batch-open permission pipeline (Pallas inside)."""
+    allow, fail_idx = permcheck.batch_path_check(
+        modes, uids, gids, depth, cred_uid, cred_gids, ngroups, want
+    )
+    return allow, fail_idx
+
+
+def dirscan(modes, uids, gids, valid, cred_uid, cred_gids, ngroups, want):
+    """The exported directory-population permission scan (Pallas inside)."""
+    return (permcheck.dir_scan(modes, uids, gids, valid, cred_uid, cred_gids, ngroups, want),)
+
+
+def batch_open_ref(modes, uids, gids, depth, cred_uid, cred_gids, ngroups, want):
+    """Pure-jnp twin of ``batch_open`` (AOT'd too, as the kernel A/B ablation)."""
+    return ref.batch_path_check_ref(modes, uids, gids, depth, cred_uid, cred_gids, ngroups, want)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def batch_open_specs():
+    """Example-arg specs for AOT lowering of batch_open (and its ref twin)."""
+    return (
+        _i32((B, D)),  # modes
+        _i32((B, D)),  # uids
+        _i32((B, D)),  # gids
+        _i32((B,)),  # depth
+        _i32((B,)),  # cred_uid
+        _i32((B, G)),  # cred_gids
+        _i32((B,)),  # ngroups
+        _i32((B,)),  # want
+    )
+
+
+def dirscan_specs():
+    """Example-arg specs for AOT lowering of dirscan."""
+    return (
+        _i32((N,)),  # modes
+        _i32((N,)),  # uids
+        _i32((N,)),  # gids
+        _i32((N,)),  # valid
+        _i32((1,)),  # cred_uid
+        _i32((G,)),  # cred_gids
+        _i32((1,)),  # ngroups
+        _i32((1,)),  # want
+    )
+
+
+ENTRY_POINTS = {
+    "batch_open": (batch_open, batch_open_specs),
+    "batch_open_ref": (batch_open_ref, batch_open_specs),
+    "dirscan": (dirscan, dirscan_specs),
+}

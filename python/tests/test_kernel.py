@@ -1,0 +1,223 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Three implementations must agree bit-for-bit on every input:
+  1. ``ref.check_scalar`` — scalar python (mirrors rust/src/perm.rs),
+  2. ``ref.*_ref``        — vectorized pure-jnp reference,
+  3. ``permcheck.*``      — the Pallas kernels (interpret=True).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import permcheck, ref
+
+R, W, X = ref.R, ref.W, ref.X
+
+ids = st.integers(min_value=0, max_value=9)  # small id space → frequent matches
+modes = st.integers(min_value=0, max_value=0o777)
+wants = st.integers(min_value=0, max_value=7)
+
+
+def np_i32(x):
+    return np.asarray(x, dtype=np.int32)
+
+
+def run_dirscan(modes_a, uids_a, gids_a, valid_a, cred_uid, cred_gids, ngroups, want, block):
+    return np.asarray(
+        permcheck.dir_scan(
+            np_i32(modes_a),
+            np_i32(uids_a),
+            np_i32(gids_a),
+            np_i32(valid_a),
+            np_i32([cred_uid]),
+            np_i32(cred_gids),
+            np_i32([ngroups]),
+            np_i32([want]),
+            block=block,
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# dirscan: pallas vs scalar oracle vs jnp ref
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    entries=st.lists(st.tuples(modes, ids, ids, st.booleans()), min_size=1, max_size=48),
+    cred_uid=ids,
+    cred_gids=st.lists(ids, min_size=0, max_size=ref.GROUPS_G),
+    want=wants,
+    data=st.data(),
+)
+def test_dirscan_matches_oracles(entries, cred_uid, cred_gids, want, data):
+    n_pad = 16 * ((len(entries) + 15) // 16)
+    block = data.draw(st.sampled_from([b for b in (8, 16, n_pad) if n_pad % b == 0]))
+    m = np.zeros(n_pad, np.int32)
+    u = np.zeros(n_pad, np.int32)
+    g = np.zeros(n_pad, np.int32)
+    v = np.zeros(n_pad, np.int32)
+    for i, (mode, uid, gid, valid) in enumerate(entries):
+        m[i], u[i], g[i], v[i] = mode, uid, gid, int(valid)
+    gid_slots = np.zeros(ref.GROUPS_G, np.int32)
+    gid_slots[: len(cred_gids)] = cred_gids
+    # poison unused slots: membership must respect ngroups, not array length
+    gid_slots[len(cred_gids):] = 999
+
+    got = run_dirscan(m, u, g, v, cred_uid, gid_slots, len(cred_gids), want, block)
+
+    want_ref = np.asarray(
+        ref.dir_scan_ref(
+            np_i32(m), np_i32(u), np_i32(g), np_i32(v),
+            np_i32([cred_uid]), np_i32(gid_slots), np_i32([len(cred_gids)]), np_i32([want]),
+        )
+    )
+    np.testing.assert_array_equal(got, want_ref)
+
+    for i in range(n_pad):
+        expect = v[i] != 0 and ref.check_scalar(
+            int(m[i]), int(u[i]), int(g[i]), cred_uid, list(cred_gids), want
+        )
+        assert bool(got[i]) == expect, (
+            f"entry {i}: mode={oct(m[i])} uid={u[i]} gid={g[i]} "
+            f"cred=({cred_uid},{cred_gids}) want={want}"
+        )
+
+
+@pytest.mark.parametrize(
+    "mode,uid,gid,cred_uid,cred_gids,want,expect",
+    [
+        # owner class wins even when it denies and group would allow
+        (0o077, 5, 6, 5, [6], R, False),
+        (0o070, 5, 6, 7, [6], R | W | X, True),
+        # other class
+        (0o004, 5, 6, 7, [8], R, True),
+        (0o004, 5, 6, 7, [8], W, False),
+        # root: rw always, x only if some x bit set
+        (0o000, 5, 6, 0, [], R | W, True),
+        (0o000, 5, 6, 0, [], X, False),
+        (0o100, 5, 6, 0, [], X, True),
+        # want=0 always allowed
+        (0o000, 5, 6, 7, [], 0, True),
+    ],
+)
+def test_dirscan_posix_corners(mode, uid, gid, cred_uid, cred_gids, want, expect):
+    gid_slots = np.full(ref.GROUPS_G, 999, np.int32)
+    gid_slots[: len(cred_gids)] = cred_gids
+    got = run_dirscan(
+        [mode] * 8, [uid] * 8, [gid] * 8, [1] * 8, cred_uid, gid_slots, len(cred_gids), want, 8
+    )
+    assert bool(got[0]) == expect
+    assert ref.check_scalar(mode, uid, gid, cred_uid, cred_gids, want) == expect
+
+
+def test_dirscan_invalid_entries_denied():
+    got = run_dirscan([0o777] * 8, [1] * 8, [1] * 8, [0] * 8, 1, np.zeros(16, np.int32), 0, R, 8)
+    assert not got.any()
+
+
+# ---------------------------------------------------------------------------
+# batch path check: pallas vs scalar oracle vs jnp ref
+# ---------------------------------------------------------------------------
+
+
+def run_pathcheck(m, u, g, depth, cred_uid, cred_gids, ngroups, want, block):
+    allow, fail = permcheck.batch_path_check(
+        np_i32(m), np_i32(u), np_i32(g), np_i32(depth), np_i32(cred_uid),
+        np_i32(cred_gids), np_i32(ngroups), np_i32(want), block=block,
+    )
+    return np.asarray(allow), np.asarray(fail)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    reqs=st.lists(
+        st.tuples(
+            st.lists(st.tuples(modes, ids, ids), min_size=1, max_size=ref.DEPTH_D),  # path
+            ids,  # cred uid
+            st.lists(ids, min_size=0, max_size=4),  # cred gids
+            wants,
+        ),
+        min_size=1,
+        max_size=24,
+    ),
+    data=st.data(),
+)
+def test_pathcheck_matches_oracles(reqs, data):
+    b_pad = 8 * ((len(reqs) + 7) // 8)
+    block = data.draw(st.sampled_from([b for b in (4, 8, b_pad) if b_pad % b == 0]))
+    D, G = ref.DEPTH_D, ref.GROUPS_G
+    m = np.zeros((b_pad, D), np.int32)
+    u = np.zeros((b_pad, D), np.int32)
+    g = np.zeros((b_pad, D), np.int32)
+    depth = np.ones(b_pad, np.int32)
+    cu = np.zeros(b_pad, np.int32)
+    cg = np.full((b_pad, G), 999, np.int32)
+    ng = np.zeros(b_pad, np.int32)
+    w = np.zeros(b_pad, np.int32)
+    for i, (path, cred_uid, cred_gids, want) in enumerate(reqs):
+        for d, (mode, uid, gid) in enumerate(path):
+            m[i, d], u[i, d], g[i, d] = mode, uid, gid
+        depth[i] = len(path)
+        cu[i] = cred_uid
+        cg[i, : len(cred_gids)] = cred_gids
+        ng[i] = len(cred_gids)
+        w[i] = want
+
+    allow, fail = run_pathcheck(m, u, g, depth, cu, cg, ng, w, block)
+
+    ra, rf = ref.batch_path_check_ref(
+        np_i32(m), np_i32(u), np_i32(g), np_i32(depth), np_i32(cu), np_i32(cg), np_i32(ng), np_i32(w)
+    )
+    np.testing.assert_array_equal(allow, np.asarray(ra))
+    np.testing.assert_array_equal(fail, np.asarray(rf))
+
+    for i, (path, cred_uid, cred_gids, want) in enumerate(reqs):
+        pm = [p[0] for p in path]
+        pu = [p[1] for p in path]
+        pg = [p[2] for p in path]
+        ok, idx = ref.path_check_scalar(pm, pu, pg, len(path), cred_uid, list(cred_gids), want)
+        assert bool(allow[i]) == ok, f"req {i}: {path} cred=({cred_uid},{cred_gids}) want={want}"
+        assert int(fail[i]) == idx
+
+
+def test_pathcheck_ancestor_needs_x_only():
+    # ancestor dir is r-- for us: path walk must fail at component 0
+    D, G = ref.DEPTH_D, ref.GROUPS_G
+    m = np.zeros((8, D), np.int32)
+    u = np.zeros((8, D), np.int32)
+    g = np.zeros((8, D), np.int32)
+    m[:, 0] = 0o400  # owner r--
+    m[:, 1] = 0o700
+    u[:, :] = 5
+    depth = np.full(8, 2, np.int32)
+    allow, fail = run_pathcheck(
+        m, u, g, depth, np.full(8, 5, np.int32), np.full((8, G), 999, np.int32),
+        np.zeros(8, np.int32), np.full(8, R, np.int32), 8,
+    )
+    assert not allow.any()
+    assert (fail == 0).all()
+    # give ancestors x: now leaf check governs
+    m[:, 0] = 0o100
+    allow, fail = run_pathcheck(
+        m, u, g, depth, np.full(8, 5, np.int32), np.full((8, G), 999, np.int32),
+        np.zeros(8, np.int32), np.full(8, R, np.int32), 8,
+    )
+    assert allow.all()
+    assert (fail == -1).all()
+
+
+def test_pathcheck_depth_one_is_leaf_only():
+    D, G = ref.DEPTH_D, ref.GROUPS_G
+    m = np.full((8, D), 0o644, np.int32)
+    u = np.full((8, D), 5, np.int32)
+    g = np.zeros((8, D), np.int32)
+    allow, _ = run_pathcheck(
+        m, u, g, np.ones(8, np.int32), np.full(8, 5, np.int32),
+        np.full((8, G), 999, np.int32), np.zeros(8, np.int32), np.full(8, R | W, np.int32), 8,
+    )
+    assert allow.all()

@@ -1,0 +1,33 @@
+//! Ablation (ours): where does BuffetFS's advantage come from? Sweep the
+//! one-way network latency and watch the warm single-file access time —
+//! the gap vs Lustre-Normal is exactly one round trip, so it grows
+//! linearly with RTT while the DoM/BuffetFS pair stays parallel.
+//! `cargo bench --bench ablation_rtt`.
+
+use buffetfs::harness::{ablation_rtt, BenchCfg};
+use buffetfs::workload::FileSetSpec;
+
+fn main() {
+    let mut cfg = BenchCfg::default();
+    cfg.spec = FileSetSpec { n_files: 1000, n_dirs: 10, file_size: 4096, uid: 1000, gid: 1000 };
+    let sweep = [0u64, 25, 50, 100, 200, 500, 1000, 2000];
+    println!("warm single-file access total (µs) vs one-way latency\n");
+    println!(
+        "{:<12} {:>12} {:>14} {:>12} {:>18}",
+        "one_way_us", "BuffetFS", "Lustre-Normal", "Lustre-DoM", "gain_vs_normal_%"
+    );
+    for (us, rows) in ablation_rtt(&cfg, &sweep, 120) {
+        let get = |s: &str| rows.iter().find(|r| r.system == s).map(|r| r.total_us).unwrap_or(0.0);
+        let b = get("BuffetFS");
+        let n = get("Lustre-Normal");
+        println!(
+            "{:<12} {:>12.1} {:>14.1} {:>12.1} {:>18.1}",
+            us,
+            b,
+            n,
+            get("Lustre-DoM"),
+            (1.0 - b / n) * 100.0
+        );
+    }
+    println!("\n(the paper's effect is RPC-count × RTT: the absolute gap ≈ one round trip)");
+}

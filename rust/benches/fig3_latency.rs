@@ -1,0 +1,34 @@
+//! Regenerates **paper Fig. 3**: latency of accessing a single small
+//! file (open / read / close breakdown, single process) for BuffetFS,
+//! Lustre-Normal and Lustre-DoM. `cargo bench --bench fig3_latency`.
+//!
+//! Scale notes: 2 000 files is plenty for steady-state here (Fig. 3 is a
+//! single-file latency figure); the full Fig. 4 population is exercised
+//! by `fig4_concurrency` and `examples/small_files`.
+
+use buffetfs::harness::{fig3, print_fig3, BenchCfg};
+use buffetfs::workload::FileSetSpec;
+
+fn main() {
+    let mut cfg = BenchCfg::default();
+    cfg.spec = FileSetSpec { n_files: 2000, n_dirs: 10, file_size: 4096, uid: 1000, gid: 1000 };
+    let iters = std::env::var("FIG3_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
+    println!(
+        "config: one-way={}µs jitter={}µs servers={} svc_slots={} file=4KiB iters={iters}\n",
+        cfg.net.one_way_us, cfg.net.jitter_us, cfg.n_servers, cfg.svc.slots
+    );
+    let rows = fig3(&cfg, iters);
+    print_fig3(&rows);
+
+    let warm = |sys: &str| rows.iter().find(|r| r.system == sys && r.warm).unwrap();
+    let b = warm("BuffetFS");
+    let n = warm("Lustre-Normal");
+    let d = warm("Lustre-DoM");
+    println!(
+        "\nshape check: BuffetFS {:.0}µs ≤ DoM {:.0}µs < Normal {:.0}µs — gain vs Normal {:.1}%",
+        b.total_us,
+        d.total_us,
+        n.total_us,
+        (1.0 - b.total_us / n.total_us) * 100.0
+    );
+}

@@ -1,0 +1,38 @@
+//! Regenerates **paper Fig. 4**: total execution time of concurrent
+//! random access (P processes × `accesses` opens over the file set),
+//! for the three systems. `cargo bench --bench fig4_concurrency`.
+//!
+//! Default scale is 1/10 of the paper (10 000 files, 100 accesses/proc)
+//! so the whole sweep stays in CI time; `FIG4_PAPER=1` runs the full
+//! 100 000 × 1000 configuration (see also `examples/small_files`).
+
+use buffetfs::harness::{fig4, print_fig4, BenchCfg};
+use buffetfs::workload::FileSetSpec;
+
+fn main() {
+    let paper = std::env::var("FIG4_PAPER").is_ok();
+    let mut cfg = BenchCfg::default();
+    let (files, accesses) = if paper { (100_000, 1000) } else { (10_000, 250) };
+    cfg.spec = FileSetSpec { n_files: files, n_dirs: 100, file_size: 4096, uid: 1000, gid: 1000 };
+    let procs = [1usize, 2, 4, 8, 16, 32, 64];
+    println!(
+        "config: files={files} accesses/proc={accesses} one-way={}µs svc_slots={}\n",
+        cfg.net.one_way_us, cfg.svc.slots
+    );
+    let rows = fig4(&cfg, &procs, accesses);
+    print_fig4(&rows);
+
+    // shape check at the largest process count
+    let pmax = *procs.last().unwrap();
+    let t = |sys: &str| rows.iter().find(|r| r.system == sys && r.processes == pmax).unwrap();
+    let b = t("BuffetFS");
+    let n = t("Lustre-Normal");
+    let d = t("Lustre-DoM");
+    println!(
+        "\nshape check @P={pmax}: BuffetFS {:.2}s < DoM {:.2}s < Normal {:.2}s — gain vs Normal {:.1}% (paper: up to 70%)",
+        b.total_s,
+        d.total_s,
+        n.total_s,
+        (1.0 - b.total_s / n.total_s) * 100.0
+    );
+}

@@ -1,0 +1,58 @@
+//! L1 kernel benchmark: batched permission checking through the
+//! AOT-compiled Pallas kernel (PJRT) vs the pure-jnp reference artifact
+//! vs the native scalar loop, across batch sizes.
+//! `cargo bench --bench kernel_permcheck` (requires `make artifacts`).
+
+use buffetfs::harness::bench_loop;
+use buffetfs::perm::{BatchPathChecker, NativeBatchChecker};
+use buffetfs::runtime::{shapes, KernelRuntime};
+use buffetfs::types::{AccessMask, Credentials, PermBlob};
+use buffetfs::util::rng::XorShift;
+
+fn chains(n: usize, seed: u64) -> Vec<Vec<PermBlob>> {
+    let mut r = XorShift::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..1 + r.below(shapes::DEPTH_D as u64 - 1) as usize)
+                .map(|_| PermBlob::new(r.below(0o1000) as u16, r.below(16) as u32, r.below(16) as u32))
+                .collect()
+        })
+        .collect()
+}
+
+fn main() {
+    let rt = match KernelRuntime::load(KernelRuntime::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping kernel bench: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+    let cred = Credentials::with_groups(3, 4, vec![5, 6]);
+    println!("batched open() path-check throughput by backend\n");
+    for &n in &[256usize, 1024, 4096, 16384] {
+        let cs = chains(n, 0x1234 + n as u64);
+        // correctness first: all backends agree on this batch
+        let native = NativeBatchChecker.check_paths(&cs, &cred, AccessMask::READ).unwrap();
+        assert_eq!(native, rt.check_paths_via(&cs, &cred, AccessMask::READ, false).unwrap());
+        assert_eq!(native, rt.check_paths_via(&cs, &cred, AccessMask::READ, true).unwrap());
+
+        let s1 = bench_loop(&format!("native-scalar        n={n}"), 2, 20, || {
+            NativeBatchChecker.check_paths(&cs, &cred, AccessMask::READ).unwrap();
+        });
+        let s2 = bench_loop(&format!("pjrt-pallas          n={n}"), 2, 20, || {
+            rt.check_paths_via(&cs, &cred, AccessMask::READ, false).unwrap();
+        });
+        let s3 = bench_loop(&format!("pjrt-jnp-reference   n={n}"), 2, 20, || {
+            rt.check_paths_via(&cs, &cred, AccessMask::READ, true).unwrap();
+        });
+        println!(
+            "  → checks/s: native {:>12.0}   pallas {:>12.0}   jnp-ref {:>12.0}\n",
+            n as f64 / (s1.mean_ns / 1e9),
+            n as f64 / (s2.mean_ns / 1e9),
+            n as f64 / (s3.mean_ns / 1e9)
+        );
+    }
+    println!("(interpret-mode Pallas on CPU is a correctness artifact; DESIGN.md §Hardware-");
+    println!(" Adaptation estimates the real-TPU roofline from the BlockSpec instead)");
+}

@@ -1,0 +1,92 @@
+//! Substrate micro-benchmarks — the §Perf baseline numbers for the L3
+//! hot path: wire codec round trips, native permission checks, cache-tree
+//! operations, object-store I/O, and a zero-latency end-to-end access
+//! (pure coordinator overhead, no simulated network).
+//! `cargo bench --bench micro_substrate`.
+
+use std::sync::Arc;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::codec::Wire;
+use buffetfs::harness::bench_loop;
+use buffetfs::perm;
+use buffetfs::simnet::NetConfig;
+use buffetfs::store::data::MemData;
+use buffetfs::store::ObjectStore;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::{AccessMask, Credentials, Ino, OpenFlags, PermBlob};
+use buffetfs::util::rng::XorShift;
+use buffetfs::wire::{OpenCtx, Request, Response};
+
+fn main() {
+    println!("substrate micro-benches (release profile advised)\n");
+
+    // -- codec ---------------------------------------------------------------
+    let req = Request::Read {
+        ino: Ino::new(1, 0, 42),
+        off: 4096,
+        len: 4096,
+        open_ctx: Some(OpenCtx {
+            client: 3,
+            handle: 7,
+            flags: OpenFlags::RDONLY,
+            cred: Credentials::with_groups(1000, 1000, vec![4, 24]),
+        }),
+    };
+    bench_loop("codec: encode Read+OpenCtx", 1000, 200_000, || {
+        std::hint::black_box(req.to_bytes());
+    });
+    let bytes = req.to_bytes();
+    bench_loop("codec: decode Read+OpenCtx", 1000, 200_000, || {
+        std::hint::black_box(Request::from_bytes(&bytes).unwrap());
+    });
+    let resp = Response::Data { data: vec![7u8; 4096], size: 4096 };
+    bench_loop("codec: encode 4KiB Data resp", 1000, 50_000, || {
+        std::hint::black_box(resp.to_bytes());
+    });
+
+    // -- permission oracle ----------------------------------------------------
+    let mut r = XorShift::new(9);
+    let blobs: Vec<PermBlob> =
+        (0..64).map(|_| PermBlob::new(r.below(0o1000) as u16, r.below(8) as u32, r.below(8) as u32)).collect();
+    let cred = Credentials::with_groups(3, 4, vec![5]);
+    bench_loop("perm: check_path depth=4", 1000, 500_000, || {
+        std::hint::black_box(perm::check_path(&blobs[..4], &cred, AccessMask::READ).is_ok());
+    });
+
+    // -- object store ----------------------------------------------------------
+    let mem = MemData::new();
+    mem.write(1, 0, &vec![0u8; 1 << 20]).unwrap();
+    bench_loop("store: MemData read 4KiB", 1000, 100_000, || {
+        std::hint::black_box(mem.read(1, 4096, 4096).unwrap());
+    });
+
+    // -- zero-latency end-to-end (coordinator overhead only) -------------------
+    let cluster =
+        BuffetCluster::spawn_with(1, NetConfig::zero(), Backing::Mem, false, ServiceConfig::unbounded());
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/bench", 0o777).unwrap();
+    for i in 0..256 {
+        admin.put(&format!("/bench/f{i:03}"), &[7u8; 4096]).unwrap();
+    }
+    let user = Buffet::process(agent.clone(), Credentials::new(1000, 1000));
+    user.get("/bench/f000", 4096).unwrap(); // warm the tree
+    let mut i = 0u64;
+    bench_loop("e2e: open+read4KiB+close, zero-latency net", 200, 20_000, || {
+        let path = format!("/bench/f{:03}", i % 256);
+        i += 1;
+        let fd = user.open(&path, OpenFlags::RDONLY).unwrap();
+        std::hint::black_box(user.read(fd, 4096).unwrap());
+        user.close(fd).unwrap();
+    });
+    bench_loop("e2e: warm open only (the local Step 1)", 200, 100_000, || {
+        let path = format!("/bench/f{:03}", i % 256);
+        i += 1;
+        let fd = user.open(&path, OpenFlags::RDONLY).unwrap();
+        user.close(fd).unwrap();
+    });
+    let _ = Arc::strong_count(&agent);
+    println!("\ntotal client RPCs during e2e section: {}", metrics.total_rpcs());
+}

@@ -1,0 +1,335 @@
+//! The BAgent's cached directory tree (§3.1, §3.3).
+//!
+//! "Each client in BuffetFS maintains an **incomplete directory tree**
+//! structure that consists of directories accessed before and their
+//! children. Besides, each client holds the complete permission
+//! information in the directory tree."
+//!
+//! A node exists for every entry of every directory the client has
+//! fetched; only *directory* nodes whose contents were fetched have
+//! `children = Some(...)`. Every node carries the 10-byte perm blob its
+//! parent directory published, which is exactly what the local open()
+//! permission check needs. Invalidation (§3.4) flips `valid` on a
+//! directory node: its blob and children must be refetched before use.
+
+use std::collections::HashMap;
+
+use crate::types::{DirEntry, FileKind, Ino, PermBlob};
+
+#[derive(Clone, Debug)]
+pub struct CacheNode {
+    pub entry: DirEntry,
+    /// `Some(name → child ino)` iff this directory's contents are cached.
+    pub children: Option<HashMap<String, Ino>>,
+    /// Cleared by a server invalidation; a hit on an invalid node forces
+    /// a refetch of the *parent* listing (perm blob) / own listing
+    /// (children).
+    pub valid: bool,
+    /// Invalidation generation: bumped every time this node is
+    /// invalidated. A fetch that started before an invalidation must not
+    /// resurrect the node — `install_dir` checks the generation it
+    /// snapshotted before the RPC.
+    pub gen: u64,
+}
+
+#[derive(Default)]
+pub struct CacheStats {
+    pub node_hits: u64,
+    pub node_misses: u64,
+    pub dir_fetches: u64,
+    pub invalidations: u64,
+}
+
+/// The incomplete directory tree. Nodes are keyed by [`Ino`] (globally
+/// unique across the decentralized namespace).
+pub struct CacheTree {
+    nodes: HashMap<Ino, CacheNode>,
+    root: Ino,
+    pub stats: CacheStats,
+}
+
+impl CacheTree {
+    /// Create a tree anchored at the cluster root. The root starts
+    /// *unfetched*: its perm blob is installed by the first ReadDir's
+    /// directory attr.
+    pub fn new(root: Ino) -> CacheTree {
+        let mut nodes = HashMap::new();
+        nodes.insert(
+            root,
+            CacheNode {
+                entry: DirEntry {
+                    name: "/".to_string(),
+                    ino: root,
+                    kind: FileKind::Directory,
+                    // placeholder; replaced on first fetch
+                    perm: PermBlob::new(0o755, 0, 0),
+                },
+                children: None,
+                valid: true,
+                gen: 0,
+            },
+        );
+        CacheTree { nodes, root, stats: CacheStats::default() }
+    }
+
+    pub fn root(&self) -> Ino {
+        self.root
+    }
+
+    pub fn get(&mut self, ino: Ino) -> Option<&CacheNode> {
+        let hit = self.nodes.get(&ino).map(|n| n.valid).unwrap_or(false);
+        if hit {
+            self.stats.node_hits += 1;
+            self.nodes.get(&ino)
+        } else {
+            self.stats.node_misses += 1;
+            None
+        }
+    }
+
+    /// Peek without stats / validity filtering.
+    pub fn peek(&self, ino: Ino) -> Option<&CacheNode> {
+        self.nodes.get(&ino)
+    }
+
+    /// Child ino by name, only if `dir`'s contents are cached and valid.
+    pub fn child(&mut self, dir: Ino, name: &str) -> ChildLookup {
+        match self.nodes.get(&dir) {
+            Some(n) if n.valid => match &n.children {
+                None => ChildLookup::DirNotCached,
+                Some(c) => match c.get(name) {
+                    Some(ino) => {
+                        self.stats.node_hits += 1;
+                        ChildLookup::Found(*ino)
+                    }
+                    None => ChildLookup::NoSuchEntry,
+                },
+            },
+            _ => ChildLookup::DirNotCached,
+        }
+    }
+
+    /// Invalidation generation of a directory node (0 if unknown).
+    /// Snapshot this BEFORE issuing a ReadDir RPC and hand it back to
+    /// [`CacheTree::install_dir`].
+    pub fn gen_of(&self, dir: Ino) -> u64 {
+        self.nodes.get(&dir).map(|n| n.gen).unwrap_or(0)
+    }
+
+    /// Install a fetched directory: its own attr blob + all children
+    /// (each child gets/updates a node carrying its perm blob).
+    /// `snap_gen` is the generation observed before the fetch; if an
+    /// invalidation landed in between, the stale listing is DROPPED and
+    /// the caller must refetch. Returns whether the install happened.
+    pub fn install_dir(&mut self, dir: Ino, dir_perm: PermBlob, entries: &[DirEntry], snap_gen: u64) -> bool {
+        if self.gen_of(dir) != snap_gen {
+            return false; // raced with an invalidation: listing untrusted
+        }
+        self.stats.dir_fetches += 1;
+        let mut children = HashMap::with_capacity(entries.len());
+        for e in entries {
+            children.insert(e.name.clone(), e.ino);
+            let node = self.nodes.entry(e.ino).or_insert_with(|| CacheNode {
+                entry: e.clone(),
+                children: None,
+                valid: true,
+                gen: 0,
+            });
+            node.entry = e.clone();
+            node.valid = true;
+        }
+        let dnode = self.nodes.entry(dir).or_insert_with(|| CacheNode {
+            entry: DirEntry {
+                name: String::new(),
+                ino: dir,
+                kind: FileKind::Directory,
+                perm: dir_perm,
+            },
+            children: None,
+            valid: true,
+            gen: snap_gen,
+        });
+        dnode.entry.perm = dir_perm;
+        dnode.entry.kind = FileKind::Directory;
+        dnode.children = Some(children);
+        dnode.valid = true;
+        true
+    }
+
+    /// Server invalidation (§3.4): mark the directory node invalid and
+    /// drop its child listing; child nodes whose blobs came from this
+    /// directory are invalidated too (their perm copy is now suspect).
+    pub fn invalidate_dir(&mut self, dir: Ino) {
+        self.stats.invalidations += 1;
+        let children: Vec<Ino> = match self.nodes.get(&dir) {
+            Some(n) => n.children.as_ref().map(|c| c.values().copied().collect()).unwrap_or_default(),
+            None => Vec::new(),
+        };
+        for c in children {
+            if let Some(n) = self.nodes.get_mut(&c) {
+                n.valid = false;
+            }
+        }
+        match self.nodes.get_mut(&dir) {
+            Some(n) => {
+                n.children = None;
+                n.gen += 1;
+                if dir != self.root {
+                    n.valid = false;
+                }
+            }
+            None => {
+                // never seen: record the invalidation anyway so an
+                // in-flight first fetch can detect it
+                self.nodes.insert(
+                    dir,
+                    CacheNode {
+                        entry: DirEntry {
+                            name: String::new(),
+                            ino: dir,
+                            kind: FileKind::Directory,
+                            perm: PermBlob::new(0, 0, 0),
+                        },
+                        children: None,
+                        valid: false,
+                        gen: 1,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Drop one cached entry (after unlink/rename through this client).
+    pub fn evict_entry(&mut self, dir: Ino, name: &str) {
+        let child = self
+            .nodes
+            .get_mut(&dir)
+            .and_then(|n| n.children.as_mut())
+            .and_then(|c| c.remove(name));
+        if let Some(c) = child {
+            self.nodes.remove(&c);
+        }
+    }
+
+    /// Insert a single new entry into a cached directory (after a create
+    /// through this client, so the follow-up open hits the cache).
+    pub fn insert_entry(&mut self, dir: Ino, entry: DirEntry) {
+        if let Some(n) = self.nodes.get_mut(&dir) {
+            if let Some(c) = n.children.as_mut() {
+                c.insert(entry.name.clone(), entry.ino);
+            }
+        }
+        self.nodes.insert(
+            entry.ino,
+            CacheNode { entry, children: None, valid: true, gen: 0 },
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum ChildLookup {
+    /// Entry found in a valid cached listing.
+    Found(Ino),
+    /// Directory contents cached + valid, and no such entry exists —
+    /// an authoritative local ENOENT, no RPC needed.
+    NoSuchEntry,
+    /// Directory contents not cached (or invalidated): fetch required.
+    DirNotCached,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn de(name: &str, file: u64, kind: FileKind, mode: u16) -> DirEntry {
+        DirEntry {
+            name: name.to_string(),
+            ino: Ino::new(0, 0, file),
+            kind,
+            perm: PermBlob::new(mode, 1, 1),
+        }
+    }
+
+    fn root() -> Ino {
+        Ino::new(0, 0, 1)
+    }
+
+    #[test]
+    fn install_and_lookup_children() {
+        let mut t = CacheTree::new(root());
+        assert_eq!(t.child(root(), "a"), ChildLookup::DirNotCached);
+        t.install_dir(
+            root(),
+            PermBlob::new(0o755, 0, 0),
+            &[de("a", 2, FileKind::Directory, 0o750), de("f", 3, FileKind::Regular, 0o640)],
+            t.gen_of(root()),
+        );
+        assert_eq!(t.child(root(), "a"), ChildLookup::Found(Ino::new(0, 0, 2)));
+        assert_eq!(t.child(root(), "zz"), ChildLookup::NoSuchEntry);
+        // child node carries the blob from the listing
+        let n = t.get(Ino::new(0, 0, 3)).unwrap();
+        assert_eq!(n.entry.perm.mode.0, 0o640);
+    }
+
+    #[test]
+    fn invalidation_clears_listing_and_children() {
+        let mut t = CacheTree::new(root());
+        t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("f", 3, FileKind::Regular, 0o640)], 0);
+        let f = Ino::new(0, 0, 3);
+        assert!(t.get(f).is_some());
+        t.invalidate_dir(root());
+        assert_eq!(t.child(root(), "f"), ChildLookup::DirNotCached);
+        assert!(t.get(f).is_none(), "child blob must be distrusted after invalidation");
+        assert_eq!(t.stats.invalidations, 1);
+        // a STALE install (generation snapshotted before the invalidation)
+        // must be rejected…
+        assert!(!t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("f", 3, FileKind::Regular, 0o600)], 0));
+        assert_eq!(t.child(root(), "f"), ChildLookup::DirNotCached);
+        // …while a fresh refetch (current generation) restores the node
+        let g = t.gen_of(root());
+        assert!(t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("f", 3, FileKind::Regular, 0o600)], g));
+        assert_eq!(t.get(f).unwrap().entry.perm.mode.0, 0o600);
+    }
+
+    #[test]
+    fn evict_and_insert_entry() {
+        let mut t = CacheTree::new(root());
+        t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("a", 2, FileKind::Regular, 0o644)], 0);
+        t.evict_entry(root(), "a");
+        assert_eq!(t.child(root(), "a"), ChildLookup::NoSuchEntry);
+        t.insert_entry(root(), de("b", 4, FileKind::Regular, 0o600));
+        assert_eq!(t.child(root(), "b"), ChildLookup::Found(Ino::new(0, 0, 4)));
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut t = CacheTree::new(root());
+        t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("a", 2, FileKind::Regular, 0o644)], 0);
+        let _ = t.child(root(), "a"); // hit
+        let _ = t.get(Ino::new(0, 0, 99)); // miss
+        assert!(t.stats.node_hits >= 1);
+        assert!(t.stats.node_misses >= 1);
+        assert_eq!(t.stats.dir_fetches, 1);
+    }
+
+    #[test]
+    fn nested_dirs_cache_independently() {
+        let mut t = CacheTree::new(root());
+        let a = Ino::new(0, 0, 2);
+        t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("a", 2, FileKind::Directory, 0o755)], 0);
+        t.install_dir(a, PermBlob::new(0o755, 1, 1), &[de("x", 5, FileKind::Regular, 0o644)], 0);
+        assert_eq!(t.child(a, "x"), ChildLookup::Found(Ino::new(0, 0, 5)));
+        // invalidating the child dir leaves the root listing intact
+        t.invalidate_dir(a);
+        assert_eq!(t.child(root(), "a"), ChildLookup::Found(a));
+        assert_eq!(t.child(a, "x"), ChildLookup::DirNotCached);
+    }
+}

@@ -1,0 +1,133 @@
+//! Per-process contexts (§3.1): "a BAgent also maintains a corresponding
+//! context to a user process including the PID, file descriptors, and
+//! file objects."
+
+use std::collections::HashMap;
+
+use crate::error::{FsError, FsResult};
+use crate::types::{Credentials, Fd, Ino, OpenFlags, Pid};
+
+/// One open file as the client sees it. `incomplete` is the paper's
+/// *incomplete-opened* mark: set at open(), cleared when the first
+/// read/write piggy-backs the open record to the server.
+#[derive(Clone, Debug)]
+pub struct FileHandle {
+    pub ino: Ino,
+    pub flags: OpenFlags,
+    pub offset: u64,
+    pub incomplete: bool,
+    /// Server-side open identity (client id + this handle).
+    pub handle: u64,
+    pub cred: Credentials,
+    /// Known size at open (for append positioning); refreshed on I/O.
+    pub size_hint: u64,
+}
+
+#[derive(Default)]
+struct ProcCtx {
+    fds: HashMap<Fd, FileHandle>,
+    next_fd: Fd,
+}
+
+/// All process contexts of one BAgent.
+#[derive(Default)]
+pub struct FdTable {
+    procs: HashMap<Pid, ProcCtx>,
+}
+
+pub const FIRST_FD: Fd = 3; // 0/1/2 belong to stdio, as ever
+
+impl FdTable {
+    pub fn new() -> FdTable {
+        FdTable::default()
+    }
+
+    pub fn open(&mut self, pid: Pid, fh: FileHandle) -> Fd {
+        let ctx = self.procs.entry(pid).or_insert_with(|| ProcCtx { fds: HashMap::new(), next_fd: FIRST_FD });
+        let fd = ctx.next_fd;
+        ctx.next_fd += 1;
+        ctx.fds.insert(fd, fh);
+        fd
+    }
+
+    pub fn get(&self, pid: Pid, fd: Fd) -> FsResult<&FileHandle> {
+        self.procs.get(&pid).and_then(|c| c.fds.get(&fd)).ok_or(FsError::BadFd)
+    }
+
+    pub fn get_mut(&mut self, pid: Pid, fd: Fd) -> FsResult<&mut FileHandle> {
+        self.procs.get_mut(&pid).and_then(|c| c.fds.get_mut(&fd)).ok_or(FsError::BadFd)
+    }
+
+    pub fn close(&mut self, pid: Pid, fd: Fd) -> FsResult<FileHandle> {
+        self.procs.get_mut(&pid).and_then(|c| c.fds.remove(&fd)).ok_or(FsError::BadFd)
+    }
+
+    /// Drop a whole process (exit): returns its open handles for wrap-up.
+    pub fn drop_process(&mut self, pid: Pid) -> Vec<FileHandle> {
+        self.procs.remove(&pid).map(|c| c.fds.into_values().collect()).unwrap_or_default()
+    }
+
+    pub fn open_count(&self, pid: Pid) -> usize {
+        self.procs.get(&pid).map_or(0, |c| c.fds.len())
+    }
+
+    pub fn processes(&self) -> usize {
+        self.procs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fh(file: u64) -> FileHandle {
+        FileHandle {
+            ino: Ino::new(0, 0, file),
+            flags: OpenFlags::RDONLY,
+            offset: 0,
+            incomplete: true,
+            handle: file * 10,
+            cred: Credentials::new(1, 1),
+            size_hint: 0,
+        }
+    }
+
+    #[test]
+    fn fds_start_at_three_and_are_per_process() {
+        let mut t = FdTable::new();
+        assert_eq!(t.open(1, fh(10)), 3);
+        assert_eq!(t.open(1, fh(11)), 4);
+        assert_eq!(t.open(2, fh(12)), 3, "each process gets its own fd space");
+        assert_eq!(t.processes(), 2);
+    }
+
+    #[test]
+    fn get_close_badfd() {
+        let mut t = FdTable::new();
+        let fd = t.open(1, fh(10));
+        assert_eq!(t.get(1, fd).unwrap().ino.file, 10);
+        assert!(matches!(t.get(2, fd), Err(FsError::BadFd)));
+        t.close(1, fd).unwrap();
+        assert!(matches!(t.get(1, fd), Err(FsError::BadFd)));
+        assert!(matches!(t.close(1, fd), Err(FsError::BadFd)));
+    }
+
+    #[test]
+    fn offset_advances_via_get_mut() {
+        let mut t = FdTable::new();
+        let fd = t.open(1, fh(10));
+        t.get_mut(1, fd).unwrap().offset += 4096;
+        assert_eq!(t.get(1, fd).unwrap().offset, 4096);
+    }
+
+    #[test]
+    fn drop_process_returns_open_handles() {
+        let mut t = FdTable::new();
+        t.open(1, fh(10));
+        t.open(1, fh(11));
+        let left = t.drop_process(1);
+        assert_eq!(left.len(), 2);
+        assert_eq!(t.processes(), 0);
+        assert!(t.drop_process(1).is_empty());
+    }
+}

@@ -1,0 +1,721 @@
+//! The BAgent — one per client node (§3.1).
+//!
+//! This is where the paper's contribution lives: `open()` never leaves
+//! the client. The agent resolves the path against its cached directory
+//! tree (fetching whole directories — entries **with** their 10-byte perm
+//! blobs — on miss), performs the permission check locally (Step 1),
+//! hands out an fd marked *incomplete-opened*, and defers the server-side
+//! open record (Step 2) to the first read/write RPC. A denied open costs
+//! **zero** RPCs; a granted open of a cached path costs zero RPCs too.
+//!
+//! Locking discipline: the cache and fd-table mutexes are NEVER held
+//! across an RPC — invalidation pushes (which take the cache lock on the
+//! server's pushing thread) would otherwise deadlock against the §3.4
+//! ack barrier.
+
+pub mod cache;
+pub mod fdtable;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::cluster::ClusterView;
+use crate::error::{FsError, FsResult};
+use crate::metrics::RpcMetrics;
+use crate::perm::{self, BatchPathChecker};
+use crate::transport::NotifySink;
+use crate::types::{
+    AccessMask, ClientId, Credentials, DirEntry, Fd, FileKind, Ino, OpenFlags, PermBlob, Pid,
+    W_OK, X_OK,
+};
+use crate::wire::{Notify, NotifyAck, OpenCtx, Request, Response};
+
+use self::cache::{CacheTree, ChildLookup};
+use self::fdtable::{FdTable, FileHandle};
+
+#[derive(Default)]
+pub struct AgentStats {
+    /// Local (client-side) permission checks performed.
+    pub local_checks: AtomicU64,
+    /// Opens denied locally — each one is an RPC the server never saw.
+    pub local_denies: AtomicU64,
+    /// Successful opens that issued no RPC at all.
+    pub rpc_free_opens: AtomicU64,
+    /// Directory fetches (cold cache / post-invalidation).
+    pub dir_fetches: AtomicU64,
+    /// X-only traversals that fell back to single-entry Lookup RPCs.
+    pub fallback_lookups: AtomicU64,
+    /// Batch checks routed through the AOT kernel backend.
+    pub batch_checks: AtomicU64,
+    /// Invalidations received from servers.
+    pub invalidations_rx: AtomicU64,
+}
+
+/// Result of a path resolution: the leaf entry plus the perm-blob chain
+/// (root first, leaf last) the permission check walks.
+#[derive(Clone, Debug)]
+pub struct Resolved {
+    pub leaf: DirEntry,
+    pub chain: Vec<PermBlob>,
+    pub parent: Ino,
+}
+
+pub struct BAgent {
+    id: ClientId,
+    cluster: ClusterView,
+    cache: Mutex<CacheTree>,
+    fds: Mutex<FdTable>,
+    handle_seq: AtomicU64,
+    metrics: Arc<RpcMetrics>,
+    /// Optional AOT-kernel batch checker (PJRT); used by [`BAgent::open_many`].
+    checker: RwLock<Option<Arc<dyn BatchPathChecker>>>,
+    pub stats: AgentStats,
+}
+
+impl BAgent {
+    pub fn new(id: ClientId, cluster: ClusterView, metrics: Arc<RpcMetrics>) -> Arc<BAgent> {
+        let root = cluster.root();
+        Arc::new(BAgent {
+            id,
+            cluster,
+            cache: Mutex::new(CacheTree::new(root)),
+            fds: Mutex::new(FdTable::new()),
+            handle_seq: AtomicU64::new(1),
+            metrics,
+            checker: RwLock::new(None),
+            stats: AgentStats::default(),
+        })
+    }
+
+    pub fn id(&self) -> ClientId {
+        self.id
+    }
+
+    pub fn cluster(&self) -> &ClusterView {
+        &self.cluster
+    }
+
+    pub fn metrics(&self) -> &Arc<RpcMetrics> {
+        &self.metrics
+    }
+
+    /// Plug in the PJRT batch checker (see `runtime::BatchChecker`).
+    pub fn set_checker(&self, c: Arc<dyn BatchPathChecker>) {
+        *self.checker.write().unwrap() = Some(c);
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64, u64) {
+        let c = self.cache.lock().unwrap();
+        (c.stats.node_hits, c.stats.node_misses, c.stats.dir_fetches)
+    }
+
+    // -- path resolution over the cached tree --------------------------------
+
+    fn split_path(path: &str) -> FsResult<Vec<&str>> {
+        if !path.starts_with('/') {
+            return Err(FsError::Invalid(format!("path must be absolute: {path:?}")));
+        }
+        Ok(path.split('/').filter(|c| !c.is_empty()).collect())
+    }
+
+    /// Ensure a directory's listing is cached; returns its perm blob.
+    fn ensure_dir_cached(&self, dir: Ino, cred: &Credentials) -> FsResult<PermBlob> {
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if let Some(n) = cache.get(dir) {
+                if n.children.is_some() {
+                    return Ok(n.entry.perm);
+                }
+            }
+        }
+        // fetch the whole directory: entries + blobs, and register for
+        // invalidations (§3.4). If an invalidation lands while the fetch
+        // is in flight the listing is untrusted — drop it and refetch.
+        for _ in 0..32 {
+            let snap_gen = self.cache.lock().unwrap().gen_of(dir);
+            self.stats.dir_fetches.fetch_add(1, Ordering::Relaxed);
+            let resp = self.cluster.transport(dir)?.call(Request::ReadDir {
+                dir,
+                client: self.id,
+                register: true,
+                cred: cred.clone(),
+            })?;
+            match resp {
+                Response::Entries { dir: attr, entries } => {
+                    let mut cache = self.cache.lock().unwrap();
+                    if cache.install_dir(dir, attr.perm, &entries, snap_gen) {
+                        return Ok(attr.perm);
+                    }
+                    // raced: loop and refetch
+                }
+                other => return Err(FsError::Protocol(format!("readdir returned {other:?}"))),
+            }
+        }
+        Err(FsError::Busy)
+    }
+
+    /// Look one name up under `dir`, via cache or fetch. The X-only
+    /// fallback covers directories the cred may traverse but not read.
+    /// Retries a bounded number of times: a concurrent §3.4 invalidation
+    /// can land between the fetch and the lookup, which merely means
+    /// "fetch again", never ENOENT.
+    fn lookup_child(&self, dir: Ino, name: &str, cred: &Credentials) -> FsResult<DirEntry> {
+        for _attempt in 0..32 {
+            {
+                let mut cache = self.cache.lock().unwrap();
+                match cache.child(dir, name) {
+                    ChildLookup::Found(ino) => {
+                        if let Some(n) = cache.peek(ino) {
+                            return Ok(n.entry.clone());
+                        }
+                    }
+                    ChildLookup::NoSuchEntry => return Err(FsError::NotFound),
+                    ChildLookup::DirNotCached => {}
+                }
+            }
+            match self.lookup_child_fetch(dir, name, cred)? {
+                Some(entry) => return Ok(entry),
+                None => continue, // invalidated mid-flight: refetch
+            }
+        }
+        Err(FsError::Busy)
+    }
+
+    /// One fetch attempt; `Ok(None)` = invalidated between fetch and use.
+    fn lookup_child_fetch(&self, dir: Ino, name: &str, cred: &Credentials) -> FsResult<Option<DirEntry>> {
+        match self.ensure_dir_cached(dir, cred) {
+            Ok(_) => {
+                let mut cache = self.cache.lock().unwrap();
+                match cache.child(dir, name) {
+                    ChildLookup::Found(ino) => {
+                        Ok(Some(cache.peek(ino).map(|n| n.entry.clone()).ok_or(FsError::NotFound)?))
+                    }
+                    ChildLookup::NoSuchEntry => Err(FsError::NotFound),
+                    ChildLookup::DirNotCached => Ok(None),
+                }
+            }
+            Err(FsError::PermissionDenied) => {
+                // can't read the directory; X-only traversal via Lookup RPC
+                self.stats.fallback_lookups.fetch_add(1, Ordering::Relaxed);
+                let resp = self.cluster.transport(dir)?.call(Request::Lookup {
+                    dir,
+                    name: name.to_string(),
+                    cred: cred.clone(),
+                })?;
+                match resp {
+                    Response::Entry(e) => Ok(Some(e)),
+                    other => Err(FsError::Protocol(format!("lookup returned {other:?}"))),
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Resolve `path` to its leaf entry + perm-blob chain (root → leaf).
+    pub fn resolve(&self, path: &str, cred: &Credentials) -> FsResult<Resolved> {
+        let comps = Self::split_path(path)?;
+        let root = self.cluster.root();
+        let root_perm = self.ensure_dir_cached(root, cred).or_else(|e| {
+            // even an unreadable root can be traversed; use cached/default blob
+            if e == FsError::PermissionDenied {
+                Ok(self.cache.lock().unwrap().peek(root).map(|n| n.entry.perm).unwrap_or(PermBlob::new(0o755, 0, 0)))
+            } else {
+                Err(e)
+            }
+        })?;
+        let mut chain = vec![root_perm];
+        let mut cur = DirEntry {
+            name: "/".into(),
+            ino: root,
+            kind: FileKind::Directory,
+            perm: root_perm,
+        };
+        let mut parent = root;
+        for (i, name) in comps.iter().enumerate() {
+            if cur.kind != FileKind::Directory {
+                return Err(FsError::NotADirectory);
+            }
+            parent = cur.ino;
+            let child = self.lookup_child(cur.ino, name, cred)?;
+            chain.push(child.perm);
+            cur = child;
+            let _ = i;
+        }
+        Ok(Resolved { leaf: cur, chain, parent })
+    }
+
+    /// Resolve the parent directory of `path`; returns (parent resolution,
+    /// leaf name).
+    fn resolve_parent<'a>(&self, path: &'a str, cred: &Credentials) -> FsResult<(Resolved, &'a str)> {
+        let comps = Self::split_path(path)?;
+        let (leaf, parents) = comps.split_last().ok_or_else(|| FsError::Invalid("root has no parent".into()))?;
+        let parent_path = if parents.is_empty() {
+            "/".to_string()
+        } else {
+            format!("/{}", parents.join("/"))
+        };
+        Ok((self.resolve(&parent_path, cred)?, leaf))
+    }
+
+    // -- the dis-aggregated open() -------------------------------------------
+
+    /// Step 1 only: local permission check, fd allocation, incomplete
+    /// mark. No RPC on the happy path (cache warm, no O_CREAT/O_TRUNC/
+    /// O_APPEND).
+    pub fn open(&self, pid: Pid, path: &str, flags: OpenFlags, cred: &Credentials) -> FsResult<Fd> {
+        let rpcs_before = self.metrics.total_rpcs();
+        let want = flags.access_mask();
+
+        let resolved = match self.resolve(path, cred) {
+            Err(FsError::NotFound) if flags.create => self.create_at(path, flags, cred)?,
+            r => r?,
+        };
+        if resolved.leaf.kind == FileKind::Directory && (flags.write || flags.truncate) {
+            return Err(FsError::IsADirectory);
+        }
+
+        // ---- Step 1, served locally: X on ancestors, `want` on the leaf
+        self.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if let Err(_idx) = perm::check_path(&resolved.chain, cred, want) {
+            self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+
+        let mut offset = 0;
+        let mut size_hint = 0;
+        if flags.append {
+            // O_APPEND needs the current size (one GetAttr round trip —
+            // outside the paper's measured workloads)
+            let resp = self.cluster.transport(resolved.leaf.ino)?.call(Request::GetAttr {
+                ino: resolved.leaf.ino,
+            })?;
+            if let Response::AttrR(a) = resp {
+                offset = a.size;
+                size_hint = a.size;
+            }
+        }
+        if flags.truncate {
+            self.cluster.transport(resolved.leaf.ino)?.call(Request::Truncate {
+                ino: resolved.leaf.ino,
+                size: 0,
+                cred: cred.clone(),
+            })?;
+            offset = 0;
+            size_hint = 0;
+        }
+
+        let handle = self.handle_seq.fetch_add(1, Ordering::Relaxed);
+        let fd = self.fds.lock().unwrap().open(
+            pid,
+            FileHandle {
+                ino: resolved.leaf.ino,
+                flags,
+                offset,
+                incomplete: true,
+                handle,
+                cred: cred.clone(),
+                size_hint,
+            },
+        );
+        if self.metrics.total_rpcs() == rpcs_before {
+            self.stats.rpc_free_opens.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(fd)
+    }
+
+    /// O_CREAT slow path: make the file (one Create RPC to the parent's
+    /// server), then continue the open with the fresh entry.
+    fn create_at(&self, path: &str, flags: OpenFlags, cred: &Credentials) -> FsResult<Resolved> {
+        let (parent, name) = self.resolve_parent(path, cred)?;
+        if parent.leaf.kind != FileKind::Directory {
+            return Err(FsError::NotADirectory);
+        }
+        // local checks: X along the way (ancestors), WX on the parent
+        self.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if perm::check_path(&parent.chain, cred, AccessMask(W_OK | X_OK)).is_err() {
+            self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+        let resp = self.cluster.transport(parent.leaf.ino)?.call(Request::Create {
+            dir: parent.leaf.ino,
+            name: name.to_string(),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: cred.clone(),
+            client: self.id,
+        })?;
+        let entry = match resp {
+            Response::Created(e) => e,
+            other => return Err(FsError::Protocol(format!("create returned {other:?}"))),
+        };
+        let _ = flags;
+        let mut cache = self.cache.lock().unwrap();
+        cache.insert_entry(parent.leaf.ino, entry.clone());
+        let mut chain = parent.chain.clone();
+        chain.push(entry.perm);
+        Ok(Resolved { leaf: entry, chain, parent: parent.leaf.ino })
+    }
+
+    /// Batch open: resolve every path, run ONE batched permission check
+    /// (through the AOT Pallas kernel when plugged in), then allot fds.
+    pub fn open_many(
+        &self,
+        pid: Pid,
+        paths: &[&str],
+        flags: OpenFlags,
+        cred: &Credentials,
+    ) -> Vec<FsResult<Fd>> {
+        let want = flags.access_mask();
+        let resolved: Vec<FsResult<Resolved>> =
+            paths.iter().map(|p| self.resolve(p, cred)).collect();
+        let chains: Vec<Vec<PermBlob>> = resolved
+            .iter()
+            .filter_map(|r| r.as_ref().ok().map(|r| r.chain.clone()))
+            .collect();
+        let checker = self.checker.read().unwrap().clone();
+        let verdicts = match &checker {
+            Some(c) => {
+                self.stats.batch_checks.fetch_add(1, Ordering::Relaxed);
+                c.check_paths(&chains, cred, want)
+            }
+            None => perm::NativeBatchChecker.check_paths(&chains, cred, want),
+        };
+        let verdicts = match verdicts {
+            Ok(v) => v,
+            Err(e) => return paths.iter().map(|_| Err(e.clone())).collect(),
+        };
+        let mut vi = 0;
+        resolved
+            .into_iter()
+            .map(|r| match r {
+                Err(e) => Err(e),
+                Ok(res) => {
+                    let verdict = verdicts[vi];
+                    vi += 1;
+                    self.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+                    if verdict.is_err() {
+                        self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+                        return Err(FsError::PermissionDenied);
+                    }
+                    let handle = self.handle_seq.fetch_add(1, Ordering::Relaxed);
+                    let fd = self.fds.lock().unwrap().open(
+                        pid,
+                        FileHandle {
+                            ino: res.leaf.ino,
+                            flags,
+                            offset: 0,
+                            incomplete: true,
+                            handle,
+                            cred: cred.clone(),
+                            size_hint: 0,
+                        },
+                    );
+                    self.stats.rpc_free_opens.fetch_add(1, Ordering::Relaxed);
+                    Ok(fd)
+                }
+            })
+            .collect()
+    }
+
+    // -- data path (Step 2 piggy-backs here) ----------------------------------
+
+    fn snapshot_handle(&self, pid: Pid, fd: Fd) -> FsResult<FileHandle> {
+        Ok(self.fds.lock().unwrap().get(pid, fd)?.clone())
+    }
+
+    fn open_ctx_for(&self, h: &FileHandle) -> Option<OpenCtx> {
+        if h.incomplete {
+            Some(OpenCtx { client: self.id, handle: h.handle, flags: h.flags, cred: h.cred.clone() })
+        } else {
+            None
+        }
+    }
+
+    pub fn read(&self, pid: Pid, fd: Fd, len: u32) -> FsResult<Vec<u8>> {
+        let h = self.snapshot_handle(pid, fd)?;
+        if !h.flags.read {
+            return Err(FsError::PermissionDenied);
+        }
+        let data = self.read_at_inner(&h, h.offset, len)?;
+        let mut fds = self.fds.lock().unwrap();
+        if let Ok(hm) = fds.get_mut(pid, fd) {
+            hm.offset = h.offset + data.len() as u64;
+            hm.incomplete = false;
+        }
+        Ok(data)
+    }
+
+    pub fn pread(&self, pid: Pid, fd: Fd, off: u64, len: u32) -> FsResult<Vec<u8>> {
+        let h = self.snapshot_handle(pid, fd)?;
+        if !h.flags.read {
+            return Err(FsError::PermissionDenied);
+        }
+        let data = self.read_at_inner(&h, off, len)?;
+        if h.incomplete {
+            let mut fds = self.fds.lock().unwrap();
+            if let Ok(hm) = fds.get_mut(pid, fd) {
+                hm.incomplete = false;
+            }
+        }
+        Ok(data)
+    }
+
+    fn read_at_inner(&self, h: &FileHandle, off: u64, len: u32) -> FsResult<Vec<u8>> {
+        let resp = self.cluster.transport(h.ino)?.call(Request::Read {
+            ino: h.ino,
+            off,
+            len,
+            open_ctx: self.open_ctx_for(h),
+        })?;
+        match resp {
+            Response::Data { data, .. } => Ok(data),
+            other => Err(FsError::Protocol(format!("read returned {other:?}"))),
+        }
+    }
+
+    pub fn write(&self, pid: Pid, fd: Fd, data: &[u8]) -> FsResult<u32> {
+        let h = self.snapshot_handle(pid, fd)?;
+        if !h.flags.write && !h.flags.append {
+            return Err(FsError::PermissionDenied);
+        }
+        let off = h.offset;
+        let (written, new_size) = self.write_at_inner(&h, off, data)?;
+        let mut fds = self.fds.lock().unwrap();
+        if let Ok(hm) = fds.get_mut(pid, fd) {
+            hm.offset = off + written as u64;
+            hm.incomplete = false;
+            hm.size_hint = new_size;
+        }
+        Ok(written)
+    }
+
+    pub fn pwrite(&self, pid: Pid, fd: Fd, off: u64, data: &[u8]) -> FsResult<u32> {
+        let h = self.snapshot_handle(pid, fd)?;
+        if !h.flags.write && !h.flags.append {
+            return Err(FsError::PermissionDenied);
+        }
+        let (written, _) = self.write_at_inner(&h, off, data)?;
+        if h.incomplete {
+            let mut fds = self.fds.lock().unwrap();
+            if let Ok(hm) = fds.get_mut(pid, fd) {
+                hm.incomplete = false;
+            }
+        }
+        Ok(written)
+    }
+
+    fn write_at_inner(&self, h: &FileHandle, off: u64, data: &[u8]) -> FsResult<(u32, u64)> {
+        let resp = self.cluster.transport(h.ino)?.call(Request::Write {
+            ino: h.ino,
+            off,
+            data: data.to_vec(),
+            open_ctx: self.open_ctx_for(h),
+        })?;
+        match resp {
+            Response::Written { written, new_size } => Ok((written, new_size)),
+            other => Err(FsError::Protocol(format!("write returned {other:?}"))),
+        }
+    }
+
+    /// close(): returns immediately; the server wrap-up RPC is
+    /// asynchronous (§3.3). An open that never did I/O has no server-side
+    /// record, so it closes with **zero** RPCs.
+    pub fn close(&self, pid: Pid, fd: Fd) -> FsResult<()> {
+        let h = self.fds.lock().unwrap().close(pid, fd)?;
+        if !h.incomplete {
+            let t = self.cluster.transport(h.ino)?;
+            let _ = t.call_async(Request::Close { ino: h.ino, client: self.id, handle: h.handle });
+        }
+        Ok(())
+    }
+
+    /// Process exit: close every fd the process still holds.
+    pub fn exit_process(&self, pid: Pid) {
+        let handles = self.fds.lock().unwrap().drop_process(pid);
+        for h in handles {
+            if !h.incomplete {
+                if let Ok(t) = self.cluster.transport(h.ino) {
+                    let _ = t.call_async(Request::Close { ino: h.ino, client: self.id, handle: h.handle });
+                }
+            }
+        }
+    }
+
+    // -- metadata operations ---------------------------------------------------
+
+    pub fn stat(&self, path: &str, cred: &Credentials) -> FsResult<crate::types::Attr> {
+        let r = self.resolve(path, cred)?;
+        // ancestors need X
+        if perm::check_path(&r.chain[..r.chain.len() - 1], cred, AccessMask::EXEC).is_err() {
+            return Err(FsError::PermissionDenied);
+        }
+        match self.cluster.transport(r.leaf.ino)?.call(Request::GetAttr { ino: r.leaf.ino })? {
+            Response::AttrR(a) => Ok(a),
+            other => Err(FsError::Protocol(format!("getattr returned {other:?}"))),
+        }
+    }
+
+    pub fn readdir(&self, path: &str, cred: &Credentials) -> FsResult<Vec<DirEntry>> {
+        let r = self.resolve(path, cred)?;
+        if r.leaf.kind != FileKind::Directory {
+            return Err(FsError::NotADirectory);
+        }
+        self.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if perm::check_path(&r.chain, cred, AccessMask::READ).is_err() {
+            self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+        self.ensure_dir_cached(r.leaf.ino, cred)?;
+        let cache = self.cache.lock().unwrap();
+        let names: Vec<(String, Ino)> = match cache.peek(r.leaf.ino).and_then(|n| n.children.as_ref()) {
+            Some(c) => c.iter().map(|(n, i)| (n.clone(), *i)).collect(),
+            None => return Err(FsError::CacheInvalidated),
+        };
+        let mut out: Vec<DirEntry> = names
+            .into_iter()
+            .filter_map(|(_, ino)| cache.peek(ino).map(|n| n.entry.clone()))
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(out)
+    }
+
+    pub fn mkdir(&self, path: &str, mode: u16, cred: &Credentials) -> FsResult<DirEntry> {
+        let (parent, name) = self.resolve_parent(path, cred)?;
+        self.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if perm::check_path(&parent.chain, cred, AccessMask(W_OK | X_OK)).is_err() {
+            self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+        let resp = self.cluster.transport(parent.leaf.ino)?.call(Request::Mkdir {
+            dir: parent.leaf.ino,
+            name: name.to_string(),
+            mode,
+            cred: cred.clone(),
+        })?;
+        match resp {
+            Response::Created(e) => {
+                self.cache.lock().unwrap().insert_entry(parent.leaf.ino, e.clone());
+                Ok(e)
+            }
+            other => Err(FsError::Protocol(format!("mkdir returned {other:?}"))),
+        }
+    }
+
+    pub fn create_file(&self, path: &str, mode: u16, cred: &Credentials) -> FsResult<DirEntry> {
+        let (parent, name) = self.resolve_parent(path, cred)?;
+        self.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if perm::check_path(&parent.chain, cred, AccessMask(W_OK | X_OK)).is_err() {
+            self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+        let resp = self.cluster.transport(parent.leaf.ino)?.call(Request::Create {
+            dir: parent.leaf.ino,
+            name: name.to_string(),
+            mode,
+            kind: FileKind::Regular,
+            cred: cred.clone(),
+            client: self.id,
+        })?;
+        match resp {
+            Response::Created(e) => {
+                self.cache.lock().unwrap().insert_entry(parent.leaf.ino, e.clone());
+                Ok(e)
+            }
+            other => Err(FsError::Protocol(format!("create returned {other:?}"))),
+        }
+    }
+
+    pub fn unlink(&self, path: &str, cred: &Credentials) -> FsResult<()> {
+        let (parent, name) = self.resolve_parent(path, cred)?;
+        self.cluster.transport(parent.leaf.ino)?.call(Request::Unlink {
+            dir: parent.leaf.ino,
+            name: name.to_string(),
+            cred: cred.clone(),
+        })?;
+        self.cache.lock().unwrap().evict_entry(parent.leaf.ino, name);
+        Ok(())
+    }
+
+    pub fn rmdir(&self, path: &str, cred: &Credentials) -> FsResult<()> {
+        let (parent, name) = self.resolve_parent(path, cred)?;
+        self.cluster.transport(parent.leaf.ino)?.call(Request::Rmdir {
+            dir: parent.leaf.ino,
+            name: name.to_string(),
+            cred: cred.clone(),
+        })?;
+        self.cache.lock().unwrap().evict_entry(parent.leaf.ino, name);
+        Ok(())
+    }
+
+    pub fn chmod(&self, path: &str, mode: u16, cred: &Credentials) -> FsResult<()> {
+        let r = self.resolve(path, cred)?;
+        // the chmod RPC goes to the server *owning the inode* (§3.2);
+        // that server runs the §3.4 invalidation barrier (which will call
+        // back into this agent's NotifySink — cache lock must be free)
+        self.cluster.transport(r.leaf.ino)?.call(Request::Chmod {
+            ino: r.leaf.ino,
+            mode,
+            cred: cred.clone(),
+        })?;
+        Ok(())
+    }
+
+    pub fn chown(&self, path: &str, uid: u32, gid: u32, cred: &Credentials) -> FsResult<()> {
+        let r = self.resolve(path, cred)?;
+        self.cluster.transport(r.leaf.ino)?.call(Request::Chown {
+            ino: r.leaf.ino,
+            uid,
+            gid,
+            cred: cred.clone(),
+        })?;
+        Ok(())
+    }
+
+    pub fn rename(&self, src: &str, dst: &str, cred: &Credentials) -> FsResult<()> {
+        let (sparent, sname) = self.resolve_parent(src, cred)?;
+        let (dparent, dname) = self.resolve_parent(dst, cred)?;
+        if sparent.leaf.ino.host != dparent.leaf.ino.host {
+            return Err(FsError::Invalid("cross-server rename unsupported".into()));
+        }
+        self.cluster.transport(sparent.leaf.ino)?.call(Request::Rename {
+            sdir: sparent.leaf.ino,
+            sname: sname.to_string(),
+            ddir: dparent.leaf.ino,
+            dname: dname.to_string(),
+            cred: cred.clone(),
+        })?;
+        let mut cache = self.cache.lock().unwrap();
+        cache.evict_entry(sparent.leaf.ino, sname);
+        cache.invalidate_dir(dparent.leaf.ino);
+        Ok(())
+    }
+
+    pub fn truncate(&self, path: &str, size: u64, cred: &Credentials) -> FsResult<()> {
+        let r = self.resolve(path, cred)?;
+        self.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if perm::check_path(&r.chain, cred, AccessMask::WRITE).is_err() {
+            self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+        self.cluster.transport(r.leaf.ino)?.call(Request::Truncate {
+            ino: r.leaf.ino,
+            size,
+            cred: cred.clone(),
+        })?;
+        Ok(())
+    }
+}
+
+/// §3.4 receive side: invalidate the named directories and ack. Runs on
+/// the server's pushing thread; only takes the cache lock.
+impl NotifySink for BAgent {
+    fn notify(&self, n: Notify) -> NotifyAck {
+        let Notify::Invalidate { seq, dirs } = n;
+        self.stats.invalidations_rx.fetch_add(1, Ordering::Relaxed);
+        let mut cache = self.cache.lock().unwrap();
+        for d in dirs {
+            cache.invalidate_dir(d);
+        }
+        NotifyAck { client: self.id, seq }
+    }
+}

@@ -1,0 +1,410 @@
+//! The Lustre client simulator.
+//!
+//! Dentry caching follows §5: "Lustre keeps directory entries valid on a
+//! client after accessed. The following visits to the valid entries do
+//! not need to contact the Metadata Server." — lookups are cached, but
+//! **every `open()` still costs one MDS round trip** (server-side
+//! permission check + open record + layout/lock), which is precisely the
+//! RPC BuffetFS eliminates.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::agent::fdtable::{FdTable, FileHandle};
+use crate::baseline::ldlm::{LdlmClient, LockMode};
+use crate::baseline::{LustreMode, MdsServer};
+use crate::error::{FsError, FsResult};
+use crate::metrics::RpcMetrics;
+use crate::transport::SharedTransport;
+use crate::types::{
+    Attr, ClientId, Credentials, DirEntry, Fd, FileKind, Ino, OpenFlags, Pid,
+};
+use crate::wire::{Request, Response};
+
+#[derive(Default)]
+pub struct LustreClientStats {
+    pub open_rpcs: AtomicU64,
+    pub dentry_hits: AtomicU64,
+    pub dentry_misses: AtomicU64,
+    pub inline_reads: AtomicU64,
+}
+
+pub struct LustreClient {
+    id: ClientId,
+    mode: LustreMode,
+    mds: SharedTransport,
+    oss: Vec<SharedTransport>,
+    root: Ino,
+    dentry: Mutex<HashMap<(Ino, String), DirEntry>>,
+    fds: Mutex<FdTable>,
+    /// DoM inline payloads delivered by open, keyed per (pid, fd).
+    inline: Mutex<HashMap<(Pid, Fd), Arc<Vec<u8>>>>,
+    handle_seq: AtomicU64,
+    pub ldlm: Option<LdlmClient>,
+    metrics: Arc<RpcMetrics>,
+    pub stats: LustreClientStats,
+}
+
+impl LustreClient {
+    pub fn new(
+        id: ClientId,
+        mode: LustreMode,
+        mds: SharedTransport,
+        oss: Vec<SharedTransport>,
+        metrics: Arc<RpcMetrics>,
+    ) -> LustreClient {
+        LustreClient {
+            id,
+            mode,
+            mds,
+            oss,
+            root: Ino::new(super::MDS_HOST, 0, crate::store::inode::ROOT_FILE_ID),
+            dentry: Mutex::new(HashMap::new()),
+            fds: Mutex::new(FdTable::new()),
+            inline: Mutex::new(HashMap::new()),
+            handle_seq: AtomicU64::new(1),
+            ldlm: None,
+            metrics,
+            stats: LustreClientStats::default(),
+        }
+    }
+
+    pub fn id(&self) -> ClientId {
+        self.id
+    }
+
+    pub fn metrics(&self) -> &Arc<RpcMetrics> {
+        &self.metrics
+    }
+
+    pub fn attach_ldlm(&mut self, ldlm: LdlmClient) {
+        self.ldlm = Some(ldlm);
+    }
+
+    fn oss_transport(&self, file: u64) -> &SharedTransport {
+        let host = MdsServer::oss_for(self.oss.len() as u16, file);
+        &self.oss[(host - 1) as usize]
+    }
+
+    fn split_path(path: &str) -> FsResult<Vec<&str>> {
+        if !path.starts_with('/') {
+            return Err(FsError::Invalid(format!("path must be absolute: {path:?}")));
+        }
+        Ok(path.split('/').filter(|c| !c.is_empty()).collect())
+    }
+
+    /// Path walk through the dentry cache; misses go to the MDS (one
+    /// Lookup RPC per uncached component — Lustre's per-component intent
+    /// lookups).
+    fn resolve(&self, path: &str, cred: &Credentials) -> FsResult<DirEntry> {
+        let comps = Self::split_path(path)?;
+        let mut cur = DirEntry {
+            name: "/".into(),
+            ino: self.root,
+            kind: FileKind::Directory,
+            perm: crate::types::PermBlob::new(0o755, 0, 0),
+        };
+        for name in comps {
+            if cur.kind != FileKind::Directory {
+                return Err(FsError::NotADirectory);
+            }
+            // the kernel client enforces X on each traversed component
+            // against the (leased) dentry it holds — same as a local FS
+            crate::perm::require_access(&cur.perm, cred, crate::types::AccessMask::EXEC)?;
+            let key = (cur.ino, name.to_string());
+            let cached = self.dentry.lock().unwrap().get(&key).cloned();
+            cur = match cached {
+                Some(e) => {
+                    self.stats.dentry_hits.fetch_add(1, Ordering::Relaxed);
+                    e
+                }
+                None => {
+                    self.stats.dentry_misses.fetch_add(1, Ordering::Relaxed);
+                    let resp = self.mds.call(Request::Lookup {
+                        dir: cur.ino,
+                        name: name.to_string(),
+                        cred: cred.clone(),
+                    })?;
+                    match resp {
+                        Response::Entry(e) => {
+                            self.dentry.lock().unwrap().insert(key, e.clone());
+                            e
+                        }
+                        other => return Err(FsError::Protocol(format!("lookup returned {other:?}"))),
+                    }
+                }
+            };
+        }
+        Ok(cur)
+    }
+
+    /// open(): dentry walk over the *parent* components (cached), then
+    /// the unavoidable MDS round trip — an intent open (lookup + check +
+    /// open record in one RPC) when the leaf dentry is cold, a plain open
+    /// when it is cached. Either way: exactly one MDS round trip.
+    pub fn open(&self, pid: Pid, path: &str, flags: OpenFlags, cred: &Credentials) -> FsResult<Fd> {
+        let (dir, name) = self.parent_of(path, cred)?;
+        // traversal permission on the final directory (resolve checked
+        // the components *above* it)
+        crate::perm::require_access(&dir.perm, cred, crate::types::AccessMask::EXEC)?;
+        let handle = self.handle_seq.fetch_add(1, Ordering::Relaxed);
+        self.stats.open_rpcs.fetch_add(1, Ordering::Relaxed);
+        let want_inline = matches!(self.mode, LustreMode::Dom { .. }) && flags.read && !flags.write;
+        let key = (dir.ino, name.to_string());
+        let cached = self.dentry.lock().unwrap().get(&key).cloned();
+        let resp = match &cached {
+            Some(leaf) => {
+                self.stats.dentry_hits.fetch_add(1, Ordering::Relaxed);
+                if leaf.kind == FileKind::Directory && (flags.write || flags.truncate) {
+                    return Err(FsError::IsADirectory);
+                }
+                self.mds.call(Request::Open {
+                    ino: leaf.ino,
+                    flags,
+                    cred: cred.clone(),
+                    client: self.id,
+                    handle,
+                    want_inline,
+                })
+            }
+            None => {
+                self.stats.dentry_misses.fetch_add(1, Ordering::Relaxed);
+                self.mds.call(Request::OpenByName {
+                    dir: dir.ino,
+                    name: name.to_string(),
+                    flags,
+                    cred: cred.clone(),
+                    client: self.id,
+                    handle,
+                    want_inline,
+                })
+            }
+        };
+        let resp = match resp {
+            Err(FsError::NotFound) if flags.create => {
+                let leaf = self.create(path, 0o644, cred)?;
+                self.stats.open_rpcs.fetch_add(1, Ordering::Relaxed);
+                self.mds.call(Request::Open {
+                    ino: leaf.ino,
+                    flags,
+                    cred: cred.clone(),
+                    client: self.id,
+                    handle,
+                    want_inline,
+                })?
+            }
+            r => r?,
+        };
+        let (attr, inline) = match resp {
+            Response::Opened { attr, inline } => (attr, inline),
+            other => return Err(FsError::Protocol(format!("open returned {other:?}"))),
+        };
+        if attr.kind == FileKind::Directory && (flags.write || flags.truncate) {
+            return Err(FsError::IsADirectory);
+        }
+        // the intent reply doubles as the dentry
+        let leaf = DirEntry { name: name.to_string(), ino: attr.ino, kind: attr.kind, perm: attr.perm };
+        self.dentry.lock().unwrap().insert(key, leaf.clone());
+        if flags.truncate {
+            self.data_truncate(&leaf, 0, cred)?;
+        }
+        let fd = self.fds.lock().unwrap().open(
+            pid,
+            FileHandle {
+                ino: leaf.ino,
+                flags,
+                offset: if flags.append { attr.size } else { 0 },
+                incomplete: false, // Lustre opens are complete by definition
+                handle,
+                cred: cred.clone(),
+                size_hint: attr.size,
+            },
+        );
+        if let Some(data) = inline {
+            self.inline.lock().unwrap().insert((pid, fd), Arc::new(data));
+        }
+        Ok(fd)
+    }
+
+    pub fn read(&self, pid: Pid, fd: Fd, len: u32) -> FsResult<Vec<u8>> {
+        let h = self.fds.lock().unwrap().get(pid, fd)?.clone();
+        if !h.flags.read {
+            return Err(FsError::PermissionDenied);
+        }
+        // DoM: serve from the inline copy shipped with the open reply
+        if let Some(data) = self.inline.lock().unwrap().get(&(pid, fd)).cloned() {
+            self.stats.inline_reads.fetch_add(1, Ordering::Relaxed);
+            let off = h.offset as usize;
+            let end = (off + len as usize).min(data.len());
+            let out = if off < data.len() { data[off..end].to_vec() } else { Vec::new() };
+            self.fds.lock().unwrap().get_mut(pid, fd)?.offset += out.len() as u64;
+            return Ok(out);
+        }
+        if let Some(l) = &self.ldlm {
+            l.lock(h.ino.file, LockMode::Shared);
+        }
+        let (t, ino) = self.data_route(&h);
+        let resp = t.call(Request::Read { ino, off: h.offset, len, open_ctx: None })?;
+        match resp {
+            Response::Data { data, .. } => {
+                self.fds.lock().unwrap().get_mut(pid, fd)?.offset += data.len() as u64;
+                Ok(data)
+            }
+            other => Err(FsError::Protocol(format!("read returned {other:?}"))),
+        }
+    }
+
+    pub fn write(&self, pid: Pid, fd: Fd, data: &[u8]) -> FsResult<u32> {
+        let h = self.fds.lock().unwrap().get(pid, fd)?.clone();
+        if !h.flags.write && !h.flags.append {
+            return Err(FsError::PermissionDenied);
+        }
+        if let Some(l) = &self.ldlm {
+            l.lock(h.ino.file, LockMode::Exclusive);
+        }
+        // writes invalidate any inline copy
+        self.inline.lock().unwrap().remove(&(pid, fd));
+        let (t, ino) = self.data_route(&h);
+        let resp = t.call(Request::Write { ino, off: h.offset, data: data.to_vec(), open_ctx: None })?;
+        match resp {
+            Response::Written { written, .. } => {
+                self.fds.lock().unwrap().get_mut(pid, fd)?.offset += written as u64;
+                Ok(written)
+            }
+            other => Err(FsError::Protocol(format!("write returned {other:?}"))),
+        }
+    }
+
+    /// Where does this handle's data live? DoM small files: the MDS.
+    /// Normal: the layout-selected OSS (object id = MDS file id).
+    fn data_route(&self, h: &FileHandle) -> (SharedTransport, Ino) {
+        match self.mode {
+            LustreMode::Dom { max_inline } if h.size_hint <= max_inline as u64 => {
+                (Arc::clone(&self.mds), h.ino)
+            }
+            _ => {
+                let host = MdsServer::oss_for(self.oss.len() as u16, h.ino.file);
+                (Arc::clone(self.oss_transport(h.ino.file)), Ino::new(host, 0, h.ino.file))
+            }
+        }
+    }
+
+    fn data_truncate(&self, leaf: &DirEntry, size: u64, cred: &Credentials) -> FsResult<()> {
+        match self.mode {
+            LustreMode::Dom { .. } => {
+                self.mds.call(Request::Truncate { ino: leaf.ino, size, cred: cred.clone() })?;
+            }
+            LustreMode::Normal => {
+                let host = MdsServer::oss_for(self.oss.len() as u16, leaf.ino.file);
+                self.oss_transport(leaf.ino.file).call(Request::Truncate {
+                    ino: Ino::new(host, 0, leaf.ino.file),
+                    size,
+                    cred: cred.clone(),
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// close(): asynchronous MDS wrap-up, same as BuffetFS (§3.3 grants
+    /// both systems this).
+    pub fn close(&self, pid: Pid, fd: Fd) -> FsResult<()> {
+        let h = self.fds.lock().unwrap().close(pid, fd)?;
+        self.inline.lock().unwrap().remove(&(pid, fd));
+        let _ = self.mds.call_async(Request::Close { ino: h.ino, client: self.id, handle: h.handle });
+        Ok(())
+    }
+
+    // -- namespace ops (setup paths; all MDS) -------------------------------
+
+    pub fn create(&self, path: &str, mode: u16, cred: &Credentials) -> FsResult<DirEntry> {
+        let (dir, name) = self.parent_of(path, cred)?;
+        let resp = self.mds.call(Request::Create {
+            dir: dir.ino,
+            name: name.to_string(),
+            mode,
+            kind: FileKind::Regular,
+            cred: cred.clone(),
+            client: self.id,
+        })?;
+        match resp {
+            Response::Created(e) => {
+                self.dentry.lock().unwrap().insert((dir.ino, name.to_string()), e.clone());
+                Ok(e)
+            }
+            other => Err(FsError::Protocol(format!("create returned {other:?}"))),
+        }
+    }
+
+    pub fn mkdir(&self, path: &str, mode: u16, cred: &Credentials) -> FsResult<DirEntry> {
+        let (dir, name) = self.parent_of(path, cred)?;
+        let resp = self.mds.call(Request::Mkdir {
+            dir: dir.ino,
+            name: name.to_string(),
+            mode,
+            cred: cred.clone(),
+        })?;
+        match resp {
+            Response::Created(e) => {
+                self.dentry.lock().unwrap().insert((dir.ino, name.to_string()), e.clone());
+                Ok(e)
+            }
+            other => Err(FsError::Protocol(format!("mkdir returned {other:?}"))),
+        }
+    }
+
+    pub fn unlink(&self, path: &str, cred: &Credentials) -> FsResult<()> {
+        let (dir, name) = self.parent_of(path, cred)?;
+        let leaf = self.resolve(path, cred)?;
+        self.mds.call(Request::Unlink { dir: dir.ino, name: name.to_string(), cred: cred.clone() })?;
+        self.dentry.lock().unwrap().remove(&(dir.ino, name.to_string()));
+        if self.mode == LustreMode::Normal {
+            let host = MdsServer::oss_for(self.oss.len() as u16, leaf.ino.file);
+            let _ = self.oss_transport(leaf.ino.file).call(Request::DropObject {
+                ino: Ino::new(host, 0, leaf.ino.file),
+            });
+        }
+        Ok(())
+    }
+
+    pub fn chmod(&self, path: &str, mode: u16, cred: &Credentials) -> FsResult<()> {
+        let leaf = self.resolve(path, cred)?;
+        self.mds.call(Request::Chmod { ino: leaf.ino, mode, cred: cred.clone() })?;
+        // Lustre invalidates the client dentry on attribute change
+        self.dentry.lock().unwrap().retain(|_, e| e.ino != leaf.ino);
+        Ok(())
+    }
+
+    pub fn stat(&self, path: &str, cred: &Credentials) -> FsResult<Attr> {
+        let leaf = self.resolve(path, cred)?;
+        match self.mds.call(Request::GetAttr { ino: leaf.ino })? {
+            Response::AttrR(a) => Ok(a),
+            other => Err(FsError::Protocol(format!("getattr returned {other:?}"))),
+        }
+    }
+
+    fn parent_of<'a>(&self, path: &'a str, cred: &Credentials) -> FsResult<(DirEntry, &'a str)> {
+        let comps = Self::split_path(path)?;
+        let (leaf, parents) = comps
+            .split_last()
+            .ok_or_else(|| FsError::Invalid("root has no parent".into()))?;
+        let parent_path =
+            if parents.is_empty() { "/".to_string() } else { format!("/{}", parents.join("/")) };
+        Ok((self.resolve(&parent_path, cred)?, leaf))
+    }
+
+    /// Convenience mirrors of the Buffet surface for the harnesses.
+    pub fn put(&self, pid: Pid, path: &str, data: &[u8], cred: &Credentials) -> FsResult<()> {
+        let fd = self.open(pid, path, OpenFlags::RDWR.with_create(), cred)?;
+        self.write(pid, fd, data)?;
+        self.close(pid, fd)
+    }
+
+    pub fn get(&self, pid: Pid, path: &str, len: u32, cred: &Credentials) -> FsResult<Vec<u8>> {
+        let fd = self.open(pid, path, OpenFlags::RDONLY, cred)?;
+        let data = self.read(pid, fd, len)?;
+        self.close(pid, fd)?;
+        Ok(data)
+    }
+}

@@ -1,0 +1,210 @@
+//! A compact LDLM (Lustre Distributed Lock Manager) flavour.
+//!
+//! §2.2: "distributed file systems usually maintain a global lock manager
+//! to preserve the data and metadata integrity ... one side-effect of
+//! global lock management is that it introduces external permission
+//! management." §4 credits part of BuffetFS's win to keeping locks inside
+//! the BServer while "Lustre arranges its distributed file locks among
+//! all of its clients".
+//!
+//! Model: each client caches granted locks; a cache hit costs nothing
+//! (Lustre's common case — the paper's 2-RPC count assumes piggybacked
+//! grants). A miss acquires from the shared [`LockSpace`]; conflicting
+//! grants held by *other clients* are revoked via callbacks. In
+//! `explicit` mode the acquirer additionally pays one lock round trip
+//! plus one per revocation — the `ablation_dom`/`ablation_rtt` knob for
+//! showing how much worse client-distributed locking can get.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::simnet::LatencyModel;
+use crate::types::{ClientId, FileId};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockMode {
+    Shared,
+    Exclusive,
+}
+
+impl LockMode {
+    fn compatible(self, other: LockMode) -> bool {
+        self == LockMode::Shared && other == LockMode::Shared
+    }
+}
+
+/// The cluster-wide grant table (conceptually sharded over MDS/OSSes;
+/// one table suffices for the simulation — contention semantics are
+/// identical).
+#[derive(Default)]
+pub struct LockSpace {
+    grants: Mutex<HashMap<FileId, Vec<(ClientId, LockMode)>>>,
+    /// Client lock caches registered for revocation callbacks.
+    caches: Mutex<HashMap<ClientId, Arc<Mutex<HashMap<FileId, LockMode>>>>>,
+    pub revocations: AtomicU64,
+    pub grant_requests: AtomicU64,
+}
+
+impl LockSpace {
+    pub fn new() -> Arc<LockSpace> {
+        Arc::new(LockSpace::default())
+    }
+
+    fn register(&self, client: ClientId, cache: Arc<Mutex<HashMap<FileId, LockMode>>>) {
+        self.caches.lock().unwrap().insert(client, cache);
+    }
+
+    /// Grant `mode` on `file` to `client`, revoking incompatible grants
+    /// held by other clients. Returns the number of revocation callbacks
+    /// issued (each is a server→client→server round trip in real Lustre).
+    pub fn acquire(&self, client: ClientId, file: FileId, mode: LockMode) -> usize {
+        self.grant_requests.fetch_add(1, Ordering::Relaxed);
+        let mut grants = self.grants.lock().unwrap();
+        let v = grants.entry(file).or_default();
+        let mut revoked = Vec::new();
+        v.retain(|(c, m)| {
+            if *c != client && !(mode.compatible(*m)) {
+                revoked.push(*c);
+                false
+            } else {
+                true
+            }
+        });
+        // upgrade/replace our own grant
+        v.retain(|(c, _)| *c != client);
+        v.push((client, mode));
+        drop(grants);
+        // revocation callbacks: evict from the victims' caches
+        if !revoked.is_empty() {
+            let caches = self.caches.lock().unwrap();
+            for c in &revoked {
+                if let Some(cache) = caches.get(c) {
+                    cache.lock().unwrap().remove(&file);
+                }
+            }
+            self.revocations.fetch_add(revoked.len() as u64, Ordering::Relaxed);
+        }
+        revoked.len()
+    }
+
+    /// Drop all grants held by a client (unmount).
+    pub fn release_client(&self, client: ClientId) {
+        let mut grants = self.grants.lock().unwrap();
+        grants.retain(|_, v| {
+            v.retain(|(c, _)| *c != client);
+            !v.is_empty()
+        });
+    }
+}
+
+#[derive(Default)]
+pub struct LdlmStats {
+    pub cache_hits: AtomicU64,
+    pub grant_rpcs: AtomicU64,
+    pub revocations_triggered: AtomicU64,
+}
+
+/// Per-client lock cache + acquisition front-end.
+pub struct LdlmClient {
+    id: ClientId,
+    space: Arc<LockSpace>,
+    cache: Arc<Mutex<HashMap<FileId, LockMode>>>,
+    /// When set, lock misses pay real round trips on this link.
+    explicit_net: Option<Arc<LatencyModel>>,
+    pub stats: LdlmStats,
+}
+
+impl LdlmClient {
+    pub fn new(id: ClientId, space: Arc<LockSpace>, explicit_net: Option<Arc<LatencyModel>>) -> LdlmClient {
+        let cache = Arc::new(Mutex::new(HashMap::new()));
+        space.register(id, cache.clone());
+        LdlmClient { id, space, cache, explicit_net, stats: LdlmStats::default() }
+    }
+
+    /// Acquire (or reuse) a lock ahead of a data op.
+    pub fn lock(&self, file: FileId, mode: LockMode) {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(held) = cache.get(&file) {
+                if *held == mode || *held == LockMode::Exclusive {
+                    self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+        }
+        self.stats.grant_rpcs.fetch_add(1, Ordering::Relaxed);
+        let revoked = self.space.acquire(self.id, file, mode);
+        self.stats.revocations_triggered.fetch_add(revoked as u64, Ordering::Relaxed);
+        if let Some(net) = &self.explicit_net {
+            // one grant round trip + one per revocation callback
+            for _ in 0..=(revoked) {
+                net.transmit(64);
+                net.transmit(64);
+            }
+        }
+        self.cache.lock().unwrap().insert(file, mode);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_locks_coexist_exclusive_revokes() {
+        let space = LockSpace::new();
+        let a = LdlmClient::new(1, space.clone(), None);
+        let b = LdlmClient::new(2, space.clone(), None);
+        a.lock(10, LockMode::Shared);
+        b.lock(10, LockMode::Shared);
+        assert_eq!(space.revocations.load(Ordering::Relaxed), 0);
+        // b goes exclusive → a's grant revoked
+        b.lock(10, LockMode::Exclusive);
+        assert_eq!(space.revocations.load(Ordering::Relaxed), 1);
+        // a must re-acquire (cache was invalidated by the callback)
+        a.lock(10, LockMode::Shared);
+        assert_eq!(a.stats.grant_rpcs.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn cache_hit_avoids_grant() {
+        let space = LockSpace::new();
+        let a = LdlmClient::new(1, space.clone(), None);
+        a.lock(5, LockMode::Shared);
+        a.lock(5, LockMode::Shared);
+        a.lock(5, LockMode::Shared);
+        assert_eq!(a.stats.grant_rpcs.load(Ordering::Relaxed), 1);
+        assert_eq!(a.stats.cache_hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn exclusive_grant_serves_shared_reuse() {
+        let space = LockSpace::new();
+        let a = LdlmClient::new(1, space, None);
+        a.lock(5, LockMode::Exclusive);
+        a.lock(5, LockMode::Shared); // exclusive covers shared
+        assert_eq!(a.stats.grant_rpcs.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn upgrade_shared_to_exclusive_requires_grant() {
+        let space = LockSpace::new();
+        let a = LdlmClient::new(1, space, None);
+        a.lock(5, LockMode::Shared);
+        a.lock(5, LockMode::Exclusive);
+        assert_eq!(a.stats.grant_rpcs.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn release_client_clears_grants() {
+        let space = LockSpace::new();
+        let a = LdlmClient::new(1, space.clone(), None);
+        let b = LdlmClient::new(2, space.clone(), None);
+        a.lock(5, LockMode::Exclusive);
+        space.release_client(1);
+        b.lock(5, LockMode::Exclusive);
+        // nothing to revoke: a's grants were released
+        assert_eq!(space.revocations.load(Ordering::Relaxed), 0);
+    }
+}

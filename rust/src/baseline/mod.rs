@@ -1,0 +1,157 @@
+//! The Lustre baselines the paper compares against (§4): a centralized
+//! MDS + OSS cluster with a client-side dentry cache, in two flavours —
+//!
+//! * **Lustre-Normal**: `open()` RPCs the MDS (server-side permission
+//!   check + open record + layout), data RPCs go to the OSS that owns the
+//!   object, `close()` RPCs the MDS asynchronously. Per small-file access
+//!   that is ≥ 2 synchronous round trips.
+//! * **Lustre-DoM** (Data-on-MDT, §5): files ≤ `max_inline` live on the
+//!   MDS; the open reply carries their data inline, so open-read-close is
+//!   one synchronous round trip — but *writes* still hit the MDS, which
+//!   both congests it and burns its capacity (the §5 criticism, measured
+//!   by `ablation_dom`).
+//!
+//! Both run on the same [`crate::store`], [`crate::simnet`] and wire
+//! protocol as BuffetFS, so every measured difference is the protocol
+//! schedule, not the substrate.
+
+pub mod client;
+pub mod ldlm;
+pub mod mds;
+pub mod oss;
+
+use std::sync::Arc;
+
+use crate::metrics::RpcMetrics;
+use crate::simnet::{LatencyModel, NetConfig};
+use crate::store::fs::LocalFs;
+use crate::transport::capacity::{CapService, ServiceConfig};
+use crate::transport::chan::ChanTransport;
+use crate::types::HostId;
+
+pub use client::LustreClient;
+pub use mds::MdsServer;
+pub use oss::OssServer;
+
+/// Which Lustre flavour a cluster runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LustreMode {
+    Normal,
+    /// Data-on-MDT with the given inline-data ceiling (Lustre's default
+    /// `dom_stripesize` is 1 MiB; the paper's files are 4 KiB).
+    Dom { max_inline: u32 },
+}
+
+impl LustreMode {
+    pub fn dom_default() -> LustreMode {
+        LustreMode::Dom { max_inline: 1 << 20 }
+    }
+
+    pub fn inline_ceiling(&self) -> u32 {
+        match self {
+            LustreMode::Normal => 0,
+            LustreMode::Dom { max_inline } => *max_inline,
+        }
+    }
+}
+
+/// MDS is always host 0; OSSes are hosts 1..=n.
+pub const MDS_HOST: HostId = 0;
+
+/// An in-process Lustre cluster (1 MDS + n OSS, like the paper's testbed
+/// of 1 MDS + 4 OSS).
+pub struct LustreCluster {
+    pub mds: Arc<MdsServer>,
+    pub osses: Vec<Arc<OssServer>>,
+    capped_mds: Arc<CapService>,
+    capped_oss: Vec<Arc<CapService>>,
+    pub mode: LustreMode,
+    pub net_cfg: NetConfig,
+    pub svc_cfg: ServiceConfig,
+    /// Shared distributed-lock grant table (LDLM substrate).
+    pub lockspace: Arc<ldlm::LockSpace>,
+    /// When true, LDLM lock misses pay explicit round trips (ablation).
+    pub explicit_locks: bool,
+    next_client: std::sync::atomic::AtomicU32,
+}
+
+impl LustreCluster {
+    pub fn spawn(n_oss: u16, mode: LustreMode, net_cfg: NetConfig, backing: crate::cluster::Backing) -> LustreCluster {
+        Self::spawn_with(n_oss, mode, net_cfg, backing, ServiceConfig::default())
+    }
+
+    pub fn spawn_with(
+        n_oss: u16,
+        mode: LustreMode,
+        net_cfg: NetConfig,
+        backing: crate::cluster::Backing,
+        svc_cfg: ServiceConfig,
+    ) -> LustreCluster {
+        assert!(n_oss >= 1);
+        let mds = MdsServer::new(LocalFs::new(MDS_HOST, 0, backing_make(&backing, MDS_HOST)), mode, n_oss);
+        let osses: Vec<Arc<OssServer>> = (1..=n_oss)
+            .map(|h| OssServer::new(h, backing_make(&backing, h)))
+            .collect();
+        let capped_mds = CapService::wrap(mds.clone(), svc_cfg);
+        let capped_oss: Vec<Arc<CapService>> =
+            osses.iter().map(|o| CapService::wrap(o.clone(), svc_cfg)).collect();
+        LustreCluster {
+            mds,
+            osses,
+            capped_mds,
+            capped_oss,
+            mode,
+            net_cfg,
+            svc_cfg,
+            lockspace: ldlm::LockSpace::new(),
+            explicit_locks: false,
+            next_client: std::sync::atomic::AtomicU32::new(1),
+        }
+    }
+
+    /// Ablation knob: make LDLM lock misses pay explicit round trips.
+    pub fn with_explicit_locks(mut self) -> LustreCluster {
+        self.explicit_locks = true;
+        self
+    }
+
+    /// Create a Lustre client with its own metrics and latency-injected
+    /// links to the MDS and every OSS.
+    pub fn make_client(&self) -> (LustreClient, Arc<RpcMetrics>) {
+        self.make_client_with(self.net_cfg)
+    }
+
+    /// Client with a custom link config (zero latency for setup phases).
+    pub fn make_client_with(&self, net_cfg: NetConfig) -> (LustreClient, Arc<RpcMetrics>) {
+        let id = self.next_client.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let metrics = Arc::new(RpcMetrics::new());
+        let mk = |svc: Arc<dyn crate::transport::Service>, host: HostId| {
+            let net = Arc::new(LatencyModel::new(
+                net_cfg.with_seed(net_cfg.seed ^ ((id as u64) << 20 | host as u64)),
+            ));
+            ChanTransport::new(svc, net, metrics.clone())
+        };
+        let mds_t = mk(self.capped_mds.clone(), MDS_HOST);
+        let oss_t: Vec<crate::transport::SharedTransport> = self
+            .capped_oss
+            .iter()
+            .zip(&self.osses)
+            .map(|(c, o)| { let _ = o; mk(c.clone(), o.host()) as crate::transport::SharedTransport })
+            .collect();
+        let mut client = LustreClient::new(id, self.mode, mds_t, oss_t, metrics.clone());
+        let lock_net = self.explicit_locks.then(|| {
+            Arc::new(LatencyModel::new(self.net_cfg.with_seed(self.net_cfg.seed ^ (0x10cc ^ id as u64))))
+        });
+        client.attach_ldlm(ldlm::LdlmClient::new(id, self.lockspace.clone(), lock_net));
+        (client, metrics)
+    }
+}
+
+fn backing_make(b: &crate::cluster::Backing, host: HostId) -> Box<dyn crate::store::ObjectStore> {
+    match b {
+        crate::cluster::Backing::Mem => Box::new(crate::store::data::MemData::new()),
+        crate::cluster::Backing::Disk(root) => Box::new(
+            crate::store::data::DiskData::new(root.join(format!("lustre-host{host}"))).expect("disk store"),
+        ),
+    }
+}

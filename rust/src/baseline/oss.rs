@@ -1,0 +1,124 @@
+//! The Lustre OSS simulator: a pure data server. Objects are keyed by
+//! the MDS-allocated FileId; no namespace, no permission checks (Lustre
+//! OSSes trust the MDS-issued open — our clients present the capability
+//! implicitly by knowing the FileId from the open reply).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{FsError, FsResult};
+use crate::server::locks::FileLocks;
+use crate::store::ObjectStore;
+use crate::transport::Service;
+use crate::types::HostId;
+use crate::wire::{Request, Response};
+
+#[derive(Default)]
+pub struct OssStats {
+    pub reads: AtomicU64,
+    pub writes: AtomicU64,
+}
+
+pub struct OssServer {
+    host: HostId,
+    data: Box<dyn ObjectStore>,
+    locks: FileLocks,
+    pub stats: OssStats,
+}
+
+impl OssServer {
+    pub fn new(host: HostId, data: Box<dyn ObjectStore>) -> Arc<OssServer> {
+        Arc::new(OssServer { host, data, locks: FileLocks::new(), stats: OssStats::default() })
+    }
+
+    pub fn host(&self) -> HostId {
+        self.host
+    }
+
+    pub fn bytes_stored(&self) -> u64 {
+        self.data.total_bytes()
+    }
+
+    fn handle_inner(&self, req: Request) -> FsResult<Response> {
+        match req {
+            Request::Hello { .. } => Ok(Response::Unit),
+            Request::Read { ino, off, len, .. } => {
+                if ino.host != self.host {
+                    return Err(FsError::NoSuchServer(ino.host));
+                }
+                self.stats.reads.fetch_add(1, Ordering::Relaxed);
+                let _g = self.locks.read(ino.file);
+                let data = self.data.read(ino.file, off, len)?;
+                let size = data.len() as u64 + off;
+                Ok(Response::Data { data, size })
+            }
+            Request::Write { ino, off, data, .. } => {
+                if ino.host != self.host {
+                    return Err(FsError::NoSuchServer(ino.host));
+                }
+                self.stats.writes.fetch_add(1, Ordering::Relaxed);
+                let _g = self.locks.write(ino.file);
+                let new_size = self.data.write(ino.file, off, &data)?;
+                Ok(Response::Written { written: data.len() as u32, new_size })
+            }
+            Request::Truncate { ino, size, .. } => {
+                let _g = self.locks.write(ino.file);
+                self.data.truncate(ino.file, size)?;
+                Ok(Response::Unit)
+            }
+            Request::DropObject { ino } => {
+                self.data.delete(ino.file)?;
+                self.locks.forget(ino.file);
+                Ok(Response::Unit)
+            }
+            Request::Statfs { .. } => Ok(Response::Statfs { files: 0, bytes: self.data.total_bytes() }),
+            other => Err(FsError::Protocol(format!("OSS cannot handle {:?}", other.op()))),
+        }
+    }
+}
+
+impl Service for OssServer {
+    fn handle(&self, req: Request) -> Response {
+        match self.handle_inner(req) {
+            Ok(r) => r,
+            Err(e) => Response::Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::data::MemData;
+    use crate::types::Ino;
+
+    #[test]
+    fn data_round_trip() {
+        let o = OssServer::new(2, Box::new(MemData::new()));
+        let ino = Ino::new(2, 0, 77);
+        let r = o.handle(Request::Write { ino, off: 0, data: vec![5; 4096], open_ctx: None });
+        assert!(matches!(r, Response::Written { written: 4096, .. }));
+        let r = o.handle(Request::Read { ino, off: 0, len: 4096, open_ctx: None });
+        match r {
+            Response::Data { data, .. } => assert_eq!(data, vec![5; 4096]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(o.bytes_stored(), 4096);
+        o.handle(Request::DropObject { ino });
+        assert_eq!(o.bytes_stored(), 0);
+    }
+
+    #[test]
+    fn wrong_host_rejected() {
+        let o = OssServer::new(2, Box::new(MemData::new()));
+        let r = o.handle(Request::Read { ino: Ino::new(3, 0, 1), off: 0, len: 1, open_ctx: None });
+        assert_eq!(r, Response::Err(FsError::NoSuchServer(3)));
+    }
+
+    #[test]
+    fn namespace_ops_rejected() {
+        let o = OssServer::new(1, Box::new(MemData::new()));
+        let r = o.handle(Request::GetAttr { ino: Ino::new(1, 0, 1) });
+        assert!(matches!(r, Response::Err(FsError::Protocol(_))));
+    }
+}

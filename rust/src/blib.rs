@@ -1,0 +1,139 @@
+//! BLib — the POSIX-style library surface (§3.1).
+//!
+//! In the paper BLib is an `LD_PRELOAD`-style dynamic library that
+//! intercepts POSIX calls and redirects them to the node's BAgent. Here
+//! it is the public Rust API with the same shape: a [`Buffet`] handle is
+//! one *process's* view (pid + credentials) onto the shared per-node
+//! [`BAgent`]. Examples and the figure harnesses program against this.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use crate::agent::BAgent;
+use crate::error::FsResult;
+use crate::types::{Attr, Credentials, DirEntry, Fd, OpenFlags, Pid};
+
+static NEXT_PID: AtomicU32 = AtomicU32::new(100);
+
+/// One simulated process: POSIX-ish calls against the shared BAgent.
+pub struct Buffet {
+    agent: Arc<BAgent>,
+    pid: Pid,
+    cred: Credentials,
+}
+
+impl Buffet {
+    /// "Fork" a process on this client node.
+    pub fn process(agent: Arc<BAgent>, cred: Credentials) -> Buffet {
+        Buffet { agent, pid: NEXT_PID.fetch_add(1, Ordering::Relaxed), cred }
+    }
+
+    pub fn with_pid(agent: Arc<BAgent>, pid: Pid, cred: Credentials) -> Buffet {
+        Buffet { agent, pid, cred }
+    }
+
+    pub fn pid(&self) -> Pid {
+        self.pid
+    }
+
+    pub fn agent(&self) -> &Arc<BAgent> {
+        &self.agent
+    }
+
+    pub fn cred(&self) -> &Credentials {
+        &self.cred
+    }
+
+    // -- the POSIX survivors the paper names (§6: open/read/write/close) --
+
+    pub fn open(&self, path: &str, flags: OpenFlags) -> FsResult<Fd> {
+        self.agent.open(self.pid, path, flags, &self.cred)
+    }
+
+    pub fn read(&self, fd: Fd, len: u32) -> FsResult<Vec<u8>> {
+        self.agent.read(self.pid, fd, len)
+    }
+
+    pub fn pread(&self, fd: Fd, off: u64, len: u32) -> FsResult<Vec<u8>> {
+        self.agent.pread(self.pid, fd, off, len)
+    }
+
+    pub fn write(&self, fd: Fd, data: &[u8]) -> FsResult<u32> {
+        self.agent.write(self.pid, fd, data)
+    }
+
+    pub fn pwrite(&self, fd: Fd, off: u64, data: &[u8]) -> FsResult<u32> {
+        self.agent.pwrite(self.pid, fd, off, data)
+    }
+
+    pub fn close(&self, fd: Fd) -> FsResult<()> {
+        self.agent.close(self.pid, fd)
+    }
+
+    // -- the rest of the surface ------------------------------------------
+
+    pub fn open_many(&self, paths: &[&str], flags: OpenFlags) -> Vec<FsResult<Fd>> {
+        self.agent.open_many(self.pid, paths, flags, &self.cred)
+    }
+
+    pub fn stat(&self, path: &str) -> FsResult<Attr> {
+        self.agent.stat(path, &self.cred)
+    }
+
+    pub fn readdir(&self, path: &str) -> FsResult<Vec<DirEntry>> {
+        self.agent.readdir(path, &self.cred)
+    }
+
+    pub fn mkdir(&self, path: &str, mode: u16) -> FsResult<DirEntry> {
+        self.agent.mkdir(path, mode, &self.cred)
+    }
+
+    pub fn create(&self, path: &str, mode: u16) -> FsResult<DirEntry> {
+        self.agent.create_file(path, mode, &self.cred)
+    }
+
+    pub fn unlink(&self, path: &str) -> FsResult<()> {
+        self.agent.unlink(path, &self.cred)
+    }
+
+    pub fn rmdir(&self, path: &str) -> FsResult<()> {
+        self.agent.rmdir(path, &self.cred)
+    }
+
+    pub fn chmod(&self, path: &str, mode: u16) -> FsResult<()> {
+        self.agent.chmod(path, mode, &self.cred)
+    }
+
+    pub fn chown(&self, path: &str, uid: u32, gid: u32) -> FsResult<()> {
+        self.agent.chown(path, uid, gid, &self.cred)
+    }
+
+    pub fn rename(&self, src: &str, dst: &str) -> FsResult<()> {
+        self.agent.rename(src, dst, &self.cred)
+    }
+
+    pub fn truncate(&self, path: &str, size: u64) -> FsResult<()> {
+        self.agent.truncate(path, size, &self.cred)
+    }
+
+    /// Convenience: write a whole file (create if needed).
+    pub fn put(&self, path: &str, data: &[u8]) -> FsResult<()> {
+        let fd = self.open(path, OpenFlags::RDWR.with_create().with_truncate())?;
+        self.agent.pwrite(self.pid, fd, 0, data)?;
+        self.close(fd)
+    }
+
+    /// Convenience: the paper's measured unit — open, read it all, close.
+    pub fn get(&self, path: &str, len: u32) -> FsResult<Vec<u8>> {
+        let fd = self.open(path, OpenFlags::RDONLY)?;
+        let data = self.read(fd, len)?;
+        self.close(fd)?;
+        Ok(data)
+    }
+}
+
+impl Drop for Buffet {
+    fn drop(&mut self) {
+        self.agent.exit_process(self.pid);
+    }
+}

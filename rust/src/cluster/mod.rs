@@ -1,0 +1,185 @@
+//! Cluster wiring: the decentralized namespace map and in-process
+//! cluster bootstrap used by examples, tests and the figure harnesses.
+//!
+//! §3.2: "the BAgent on each client maintains a local configuration file
+//! that maps a tuple (a hostID and a version number) to a server
+//! address" — [`ClusterView`] is that configuration; with the in-process
+//! transport the "address" is a [`SharedTransport`] handle, with TCP it
+//! is a socket address parsed from [`HostMapFile`].
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::agent::BAgent;
+use crate::error::{FsError, FsResult};
+use crate::metrics::RpcMetrics;
+use crate::server::{BServer, Placement};
+use crate::simnet::{LatencyModel, NetConfig};
+use crate::store::data::{DiskData, MemData};
+use crate::store::fs::LocalFs;
+use crate::transport::capacity::{CapService, ServiceConfig};
+use crate::transport::chan::{ChanNotify, ChanTransport};
+use crate::transport::SharedTransport;
+use crate::types::{ClientId, HostId, Ino, Version};
+
+/// The client-side host map: `(hostID, version) → transport`.
+pub struct ClusterView {
+    root: Ino,
+    transports: HashMap<HostId, (Version, SharedTransport)>,
+}
+
+impl ClusterView {
+    pub fn new(root: Ino) -> ClusterView {
+        ClusterView { root, transports: HashMap::new() }
+    }
+
+    pub fn add(&mut self, host: HostId, version: Version, t: SharedTransport) {
+        self.transports.insert(host, (version, t));
+    }
+
+    pub fn root(&self) -> Ino {
+        self.root
+    }
+
+    pub fn hosts(&self) -> usize {
+        self.transports.len()
+    }
+
+    /// Locate the server for an inode — purely from the inode number,
+    /// "without requesting their location and metadata from other
+    /// clients" (§1).
+    pub fn transport(&self, ino: Ino) -> FsResult<SharedTransport> {
+        match self.transports.get(&ino.host) {
+            None => Err(FsError::NoSuchServer(ino.host)),
+            Some((v, _)) if *v != ino.version => Err(FsError::Stale),
+            Some((_, t)) => Ok(Arc::clone(t)),
+        }
+    }
+}
+
+/// Storage backend selector for cluster bootstrap.
+pub enum Backing {
+    Mem,
+    Disk(std::path::PathBuf),
+}
+
+impl Backing {
+    fn make(&self, host: HostId) -> Box<dyn crate::store::ObjectStore> {
+        match self {
+            Backing::Mem => Box::new(MemData::new()),
+            Backing::Disk(root) => {
+                Box::new(DiskData::new(root.join(format!("host{host}"))).expect("disk store"))
+            }
+        }
+    }
+}
+
+/// An in-process BuffetFS cluster: N BServers + shared latency model.
+pub struct BuffetCluster {
+    pub servers: Vec<Arc<BServer>>,
+    /// Capacity-bounded request frontends (what client transports target).
+    capped: Vec<Arc<CapService>>,
+    pub net_cfg: NetConfig,
+    pub svc_cfg: ServiceConfig,
+    next_client: std::sync::atomic::AtomicU32,
+}
+
+impl BuffetCluster {
+    /// Spawn `n_servers` BServers (host ids 0..n). `spread` selects the
+    /// decentralized name-hash placement; otherwise files are co-located
+    /// with their parent directory.
+    pub fn spawn(n_servers: u16, net_cfg: NetConfig, backing: Backing, spread: bool) -> BuffetCluster {
+        Self::spawn_with(n_servers, net_cfg, backing, spread, ServiceConfig::default())
+    }
+
+    pub fn spawn_with(
+        n_servers: u16,
+        net_cfg: NetConfig,
+        backing: Backing,
+        spread: bool,
+        svc_cfg: ServiceConfig,
+    ) -> BuffetCluster {
+        assert!(n_servers >= 1);
+        let placement = if spread {
+            Placement::SpreadByNameHash { hosts: n_servers }
+        } else {
+            Placement::Local
+        };
+        let servers: Vec<Arc<BServer>> = (0..n_servers)
+            .map(|h| BServer::with_placement(LocalFs::new(h, 0, backing.make(h)), placement))
+            .collect();
+        let capped: Vec<Arc<CapService>> =
+            servers.iter().map(|s| CapService::wrap(s.clone(), svc_cfg)).collect();
+        // server↔server peer links (zero-latency in-process is wrong: peers
+        // cross the same fabric — use the same latency model per link)
+        let peer_metrics = Arc::new(RpcMetrics::new());
+        for a in &servers {
+            for (b, bc) in servers.iter().zip(&capped) {
+                if a.host() != b.host() {
+                    let net = Arc::new(LatencyModel::new(net_cfg.with_seed(
+                        net_cfg.seed ^ ((a.host() as u64) << 16 | b.host() as u64),
+                    )));
+                    a.add_peer(b.host(), ChanTransport::new(bc.clone(), net, peer_metrics.clone()));
+                }
+            }
+        }
+        BuffetCluster { servers, capped, net_cfg, svc_cfg, next_client: std::sync::atomic::AtomicU32::new(1) }
+    }
+
+    pub fn root(&self) -> Ino {
+        self.servers[0].fs.root_ino()
+    }
+
+    /// Create a client: one BAgent wired to every server over latency-
+    /// injected channel transports, with its invalidation sink registered
+    /// on every server. Returns the agent and its private RPC metrics.
+    pub fn make_agent(&self) -> (Arc<BAgent>, Arc<RpcMetrics>) {
+        self.make_agent_with(self.net_cfg)
+    }
+
+    /// Agent with a custom link config (e.g. zero latency for unmeasured
+    /// file-set setup).
+    pub fn make_agent_with(&self, net_cfg: NetConfig) -> (Arc<BAgent>, Arc<RpcMetrics>) {
+        let id: ClientId = self
+            .next_client
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let metrics = Arc::new(RpcMetrics::new());
+        let mut view = ClusterView::new(self.root());
+        let mut links = Vec::new();
+        for (s, sc) in self.servers.iter().zip(&self.capped) {
+            let net = Arc::new(LatencyModel::new(
+                net_cfg.with_seed(net_cfg.seed ^ ((id as u64) << 20 | s.host() as u64)),
+            ));
+            view.add(s.host(), 0, ChanTransport::new(sc.clone(), net.clone(), metrics.clone()));
+            links.push((s, net));
+        }
+        let agent = BAgent::new(id, view, metrics.clone());
+        for (s, net) in links {
+            s.register_pusher(id, ChanNotify::new(agent.clone(), net));
+        }
+        (agent, metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_resolves_by_host_and_version() {
+        let cluster = BuffetCluster::spawn(2, NetConfig::zero(), Backing::Mem, false);
+        let (agent, _) = cluster.make_agent();
+        let view = agent.cluster();
+        assert_eq!(view.hosts(), 2);
+        assert!(view.transport(Ino::new(0, 0, 1)).is_ok());
+        assert!(view.transport(Ino::new(1, 0, 1)).is_ok());
+        match view.transport(Ino::new(5, 0, 1)) {
+            Err(e) => assert_eq!(e, FsError::NoSuchServer(5)),
+            Ok(_) => panic!("unknown host must fail"),
+        }
+        match view.transport(Ino::new(0, 3, 1)) {
+            Err(e) => assert_eq!(e, FsError::Stale),
+            Ok(_) => panic!("stale version must fail"),
+        }
+    }
+}

@@ -1,0 +1,382 @@
+//! Hand-rolled binary wire codec.
+//!
+//! The offline crate universe has no serde/bincode, so BuffetFS speaks a
+//! small fixed-width little-endian format: every wire type implements
+//! [`Wire`]; frames on the TCP transport are `u32` length-prefixed.
+//! Decoding is strict — trailing bytes or truncation are protocol errors,
+//! which the fuzz-ish tests below exercise.
+
+use crate::error::{FsError, FsResult};
+use crate::types::{
+    Attr, DirEntry, FileKind, Ino, OpenFlags, PermBlob, PERM_BLOB_BYTES,
+};
+
+/// Append-only encoder over a byte buffer.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::with_capacity(64) }
+    }
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+    pub fn raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+}
+
+/// Strict cursor decoder.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> FsResult<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(FsError::Protocol(format!(
+                "truncated: need {n} at {}, have {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> FsResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u16(&mut self) -> FsResult<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub fn u32(&mut self) -> FsResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> FsResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn i32(&mut self) -> FsResult<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn i64(&mut self) -> FsResult<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn bool(&mut self) -> FsResult<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn bytes(&mut self) -> FsResult<Vec<u8>> {
+        let n = self.u32()? as usize;
+        if n > 64 << 20 {
+            return Err(FsError::Protocol(format!("oversized field: {n}")));
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn str(&mut self) -> FsResult<String> {
+        String::from_utf8(self.bytes()?)
+            .map_err(|_| FsError::Protocol("invalid utf8".to_string()))
+    }
+
+    /// All input consumed?
+    pub fn finish(self) -> FsResult<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(FsError::Protocol(format!(
+                "{} trailing bytes",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Types that travel on the wire.
+pub trait Wire: Sized {
+    fn enc(&self, e: &mut Enc);
+    fn dec(d: &mut Dec) -> FsResult<Self>;
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        self.enc(&mut e);
+        e.buf
+    }
+
+    fn from_bytes(buf: &[u8]) -> FsResult<Self> {
+        let mut d = Dec::new(buf);
+        let v = Self::dec(&mut d)?;
+        d.finish()?;
+        Ok(v)
+    }
+}
+
+impl Wire for Ino {
+    fn enc(&self, e: &mut Enc) {
+        e.u16(self.host);
+        e.u16(self.version);
+        e.u64(self.file);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(Ino { host: d.u16()?, version: d.u16()?, file: d.u64()? })
+    }
+}
+
+impl Wire for PermBlob {
+    fn enc(&self, e: &mut Enc) {
+        // NB: call the inherent 10-byte serializer explicitly — plain
+        // `self.to_bytes()` would resolve to `Wire::to_bytes` (autoref
+        // beats the by-value inherent method) and recurse forever.
+        e.raw(&PermBlob::to_bytes(*self));
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        let mut b = [0u8; PERM_BLOB_BYTES];
+        b.copy_from_slice(d.take(PERM_BLOB_BYTES)?);
+        Ok(PermBlob::from_bytes(&b))
+    }
+}
+
+impl Wire for FileKind {
+    fn enc(&self, e: &mut Enc) {
+        e.u8(self.to_wire());
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        let v = d.u8()?;
+        FileKind::from_wire(v).ok_or_else(|| FsError::Protocol(format!("bad kind {v}")))
+    }
+}
+
+impl Wire for OpenFlags {
+    fn enc(&self, e: &mut Enc) {
+        e.u8(self.to_wire());
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(OpenFlags::from_wire(d.u8()?))
+    }
+}
+
+impl Wire for Attr {
+    fn enc(&self, e: &mut Enc) {
+        self.ino.enc(e);
+        self.kind.enc(e);
+        self.perm.enc(e);
+        e.u64(self.size);
+        e.u32(self.nlink);
+        e.u64(self.atime);
+        e.u64(self.mtime);
+        e.u64(self.ctime);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(Attr {
+            ino: Ino::dec(d)?,
+            kind: FileKind::dec(d)?,
+            perm: PermBlob::dec(d)?,
+            size: d.u64()?,
+            nlink: d.u32()?,
+            atime: d.u64()?,
+            mtime: d.u64()?,
+            ctime: d.u64()?,
+        })
+    }
+}
+
+impl Wire for DirEntry {
+    fn enc(&self, e: &mut Enc) {
+        e.str(&self.name);
+        self.ino.enc(e);
+        self.kind.enc(e);
+        self.perm.enc(e);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(DirEntry {
+            name: d.str()?,
+            ino: Ino::dec(d)?,
+            kind: FileKind::dec(d)?,
+            perm: PermBlob::dec(d)?,
+        })
+    }
+}
+
+impl<T: Wire> Wire for Vec<T> {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.len() as u32);
+        for item in self {
+            item.enc(e);
+        }
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        let n = d.u32()? as usize;
+        if n > 16 << 20 {
+            return Err(FsError::Protocol(format!("oversized vec: {n}")));
+        }
+        let mut out = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            out.push(T::dec(d)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: Wire> Wire for Option<T> {
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            None => e.u8(0),
+            Some(v) => {
+                e.u8(1);
+                v.enc(e);
+            }
+        }
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(match d.u8()? {
+            0 => None,
+            1 => Some(T::dec(d)?),
+            v => return Err(FsError::Protocol(format!("bad option tag {v}"))),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    fn attr(seed: u64) -> Attr {
+        let mut r = XorShift::new(seed);
+        Attr {
+            ino: Ino::new(r.below(9) as u16, r.below(9) as u16, r.next_u64()),
+            kind: FileKind::from_wire((r.below(3)) as u8).unwrap(),
+            perm: PermBlob::new((r.below(0o7777)) as u16, r.below(100) as u32, r.below(100) as u32),
+            size: r.next_u64(),
+            nlink: r.below(10) as u32,
+            atime: r.next_u64(),
+            mtime: r.next_u64(),
+            ctime: r.next_u64(),
+        }
+    }
+
+    #[test]
+    fn primitive_roundtrip() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.u16(300);
+        e.u32(70_000);
+        e.u64(u64::MAX);
+        e.i32(-5);
+        e.i64(-6);
+        e.bool(true);
+        e.str("héllo");
+        e.bytes(&[1, 2, 3]);
+        let mut d = Dec::new(&e.buf);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u16().unwrap(), 300);
+        assert_eq!(d.u32().unwrap(), 70_000);
+        assert_eq!(d.u64().unwrap(), u64::MAX);
+        assert_eq!(d.i32().unwrap(), -5);
+        assert_eq!(d.i64().unwrap(), -6);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.str().unwrap(), "héllo");
+        assert_eq!(d.bytes().unwrap(), vec![1, 2, 3]);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn struct_roundtrips() {
+        for seed in 0..50 {
+            let a = attr(seed);
+            assert_eq!(Attr::from_bytes(&a.to_bytes()).unwrap(), a);
+        }
+        let de = DirEntry {
+            name: "foo.dat".into(),
+            ino: Ino::new(1, 2, 3),
+            kind: FileKind::Regular,
+            perm: PermBlob::new(0o640, 10, 20),
+        };
+        assert_eq!(DirEntry::from_bytes(&de.to_bytes()).unwrap(), de);
+        let v = vec![de.clone(), de];
+        assert_eq!(Vec::<DirEntry>::from_bytes(&v.to_bytes()).unwrap(), v);
+        let o: Option<Ino> = Some(Ino::new(4, 5, 6));
+        assert_eq!(Option::<Ino>::from_bytes(&o.to_bytes()).unwrap(), o);
+        let n: Option<Ino> = None;
+        assert_eq!(Option::<Ino>::from_bytes(&n.to_bytes()).unwrap(), n);
+    }
+
+    #[test]
+    fn truncation_is_detected_everywhere() {
+        let a = attr(1);
+        let bytes = a.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                Attr::from_bytes(&bytes[..cut]).is_err(),
+                "cut at {cut} should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = Ino::new(1, 2, 3).to_bytes();
+        bytes.push(0xff);
+        assert!(matches!(Ino::from_bytes(&bytes), Err(FsError::Protocol(_))));
+    }
+
+    #[test]
+    fn random_garbage_never_panics() {
+        let mut r = XorShift::new(99);
+        for _ in 0..2000 {
+            let n = r.below(64) as usize;
+            let garbage: Vec<u8> = (0..n).map(|_| r.next_u64() as u8).collect();
+            let _ = Attr::from_bytes(&garbage);
+            let _ = DirEntry::from_bytes(&garbage);
+            let _ = Vec::<DirEntry>::from_bytes(&garbage);
+        }
+    }
+
+    #[test]
+    fn oversized_vec_rejected() {
+        let mut e = Enc::new();
+        e.u32(u32::MAX);
+        assert!(matches!(
+            Vec::<Ino>::from_bytes(&e.buf),
+            Err(FsError::Protocol(_))
+        ));
+    }
+}

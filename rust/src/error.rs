@@ -1,0 +1,146 @@
+//! errno-style error type shared by every layer and carried on the wire.
+
+use thiserror::Error;
+
+/// File-system errors. Wire codes are stable (see `to_wire`/`from_wire`)
+/// so client and server can exchange them without a shared binary.
+#[derive(Error, Debug, Clone, PartialEq, Eq)]
+pub enum FsError {
+    #[error("no such file or directory")]
+    NotFound,
+    #[error("permission denied")]
+    PermissionDenied,
+    #[error("not a directory")]
+    NotADirectory,
+    #[error("is a directory")]
+    IsADirectory,
+    #[error("file exists")]
+    AlreadyExists,
+    #[error("directory not empty")]
+    NotEmpty,
+    #[error("bad file descriptor")]
+    BadFd,
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+    #[error("stale handle (server version changed)")]
+    Stale,
+    #[error("cache entry invalidated, refetch required")]
+    CacheInvalidated,
+    #[error("no such server: host {0}")]
+    NoSuchServer(u16),
+    #[error("server busy")]
+    Busy,
+    #[error("name too long")]
+    NameTooLong,
+    #[error("transport failure: {0}")]
+    Transport(String),
+    #[error("protocol violation: {0}")]
+    Protocol(String),
+    #[error("I/O error: {0}")]
+    Io(String),
+}
+
+impl FsError {
+    /// Stable wire code (u16) + optional message payload.
+    pub fn to_wire(&self) -> (u16, &str) {
+        match self {
+            FsError::NotFound => (1, ""),
+            FsError::PermissionDenied => (2, ""),
+            FsError::NotADirectory => (3, ""),
+            FsError::IsADirectory => (4, ""),
+            FsError::AlreadyExists => (5, ""),
+            FsError::NotEmpty => (6, ""),
+            FsError::BadFd => (7, ""),
+            FsError::Invalid(m) => (8, m),
+            FsError::Stale => (9, ""),
+            FsError::CacheInvalidated => (10, ""),
+            FsError::NoSuchServer(_) => (11, ""),
+            FsError::Busy => (12, ""),
+            FsError::NameTooLong => (13, ""),
+            FsError::Transport(m) => (14, m),
+            FsError::Protocol(m) => (15, m),
+            FsError::Io(m) => (16, m),
+        }
+    }
+
+    pub fn from_wire(code: u16, msg: String, aux: u16) -> FsError {
+        match code {
+            1 => FsError::NotFound,
+            2 => FsError::PermissionDenied,
+            3 => FsError::NotADirectory,
+            4 => FsError::IsADirectory,
+            5 => FsError::AlreadyExists,
+            6 => FsError::NotEmpty,
+            7 => FsError::BadFd,
+            8 => FsError::Invalid(msg),
+            9 => FsError::Stale,
+            10 => FsError::CacheInvalidated,
+            11 => FsError::NoSuchServer(aux),
+            12 => FsError::Busy,
+            13 => FsError::NameTooLong,
+            14 => FsError::Transport(msg),
+            15 => FsError::Protocol(msg),
+            16 => FsError::Io(msg),
+            other => FsError::Protocol(format!("unknown error code {other}")),
+        }
+    }
+
+    /// The `aux` u16 carried next to the code (host id for NoSuchServer).
+    pub fn wire_aux(&self) -> u16 {
+        match self {
+            FsError::NoSuchServer(h) => *h,
+            _ => 0,
+        }
+    }
+}
+
+impl From<std::io::Error> for FsError {
+    fn from(e: std::io::Error) -> Self {
+        match e.kind() {
+            std::io::ErrorKind::NotFound => FsError::NotFound,
+            std::io::ErrorKind::PermissionDenied => FsError::PermissionDenied,
+            std::io::ErrorKind::AlreadyExists => FsError::AlreadyExists,
+            _ => FsError::Io(e.to_string()),
+        }
+    }
+}
+
+pub type FsResult<T> = Result<T, FsError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip_all_variants() {
+        let all = vec![
+            FsError::NotFound,
+            FsError::PermissionDenied,
+            FsError::NotADirectory,
+            FsError::IsADirectory,
+            FsError::AlreadyExists,
+            FsError::NotEmpty,
+            FsError::BadFd,
+            FsError::Invalid("bad".into()),
+            FsError::Stale,
+            FsError::CacheInvalidated,
+            FsError::NoSuchServer(7),
+            FsError::Busy,
+            FsError::NameTooLong,
+            FsError::Transport("down".into()),
+            FsError::Protocol("junk".into()),
+            FsError::Io("disk".into()),
+        ];
+        for e in all {
+            let (code, msg) = e.to_wire();
+            let back = FsError::from_wire(code, msg.to_string(), e.wire_aux());
+            assert_eq!(back, e);
+        }
+    }
+
+    #[test]
+    fn io_error_mapping() {
+        let nf = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
+        assert_eq!(FsError::from(nf), FsError::NotFound);
+    }
+}

@@ -1,0 +1,516 @@
+//! Figure-regeneration harness: one driver per paper figure plus the
+//! ablations DESIGN.md §5 lists. Used by `cargo bench`, the `buffetfs
+//! bench` CLI and the examples — all numbers in EXPERIMENTS.md come out
+//! of these functions.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::baseline::{LustreCluster, LustreMode};
+use crate::cluster::{Backing, BuffetCluster};
+use crate::simnet::NetConfig;
+use crate::transport::capacity::ServiceConfig;
+use crate::types::OpenFlags;
+use crate::workload::{build_fileset_buffet, build_fileset_lustre, workload_cred, AccessStream, FileSetSpec};
+
+/// The three systems of Figs. 3/4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    Buffet,
+    LustreNormal,
+    LustreDom,
+}
+
+pub const ALL_SYSTEMS: [SystemKind; 3] =
+    [SystemKind::Buffet, SystemKind::LustreNormal, SystemKind::LustreDom];
+
+impl SystemKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SystemKind::Buffet => "BuffetFS",
+            SystemKind::LustreNormal => "Lustre-Normal",
+            SystemKind::LustreDom => "Lustre-DoM",
+        }
+    }
+}
+
+/// Common experiment configuration (defaults = the paper's testbed,
+/// translated to the simulator).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchCfg {
+    pub net: NetConfig,
+    pub svc: ServiceConfig,
+    /// OSS count for Lustre / BServer count for BuffetFS (paper: 4 OSS).
+    pub n_servers: u16,
+    pub spec: FileSetSpec,
+    pub seed: u64,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg {
+            net: NetConfig::infiniband(),
+            svc: ServiceConfig::default(),
+            n_servers: 4,
+            spec: FileSetSpec::paper_scale(),
+            seed: 42,
+        }
+    }
+}
+
+impl BenchCfg {
+    /// Small config for unit/CI runs.
+    pub fn smoke() -> BenchCfg {
+        BenchCfg {
+            spec: FileSetSpec { n_files: 200, n_dirs: 4, file_size: 4096, uid: 1000, gid: 1000 },
+            ..Default::default()
+        }
+    }
+}
+
+/// One system instance with a running file set — what the drivers
+/// measure against.
+pub enum Sut {
+    Buffet { cluster: BuffetCluster, agent: Arc<crate::agent::BAgent>, metrics: Arc<crate::metrics::RpcMetrics> },
+    Lustre { cluster: LustreCluster, client: Arc<crate::baseline::LustreClient>, metrics: Arc<crate::metrics::RpcMetrics> },
+}
+
+impl Sut {
+    /// Build the system + file set (setup is unmetered) and a measured
+    /// client.
+    pub fn bring_up(kind: SystemKind, cfg: &BenchCfg) -> Sut {
+        match kind {
+            SystemKind::Buffet => {
+                // decentralized placement: file data spreads across all
+                // BServers by name hash, mirroring Lustre's 4-OSS striping
+                let cluster =
+                    BuffetCluster::spawn_with(cfg.n_servers, cfg.net, Backing::Mem, true, cfg.svc);
+                build_fileset_buffet(&cluster, &cfg.spec).expect("fileset");
+                let (agent, metrics) = cluster.make_agent();
+                Sut::Buffet { cluster, agent, metrics }
+            }
+            kind => {
+                let mode = if kind == SystemKind::LustreDom {
+                    LustreMode::dom_default()
+                } else {
+                    LustreMode::Normal
+                };
+                let cluster =
+                    LustreCluster::spawn_with(cfg.n_servers, mode, cfg.net, Backing::Mem, cfg.svc);
+                build_fileset_lustre(&cluster, &cfg.spec).expect("fileset");
+                let (client, metrics) = cluster.make_client();
+                Sut::Lustre { cluster, client: Arc::new(client), metrics }
+            }
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<crate::metrics::RpcMetrics> {
+        match self {
+            Sut::Buffet { metrics, .. } => metrics,
+            Sut::Lustre { metrics, .. } => metrics,
+        }
+    }
+
+    /// The paper's measured unit, instrumented per phase:
+    /// open → read whole file → close. Returns (open, read, close) times.
+    pub fn access_once(&self, pid: u32, path: &str, len: u32) -> (Duration, Duration, Duration) {
+        let cred = workload_cred(&self.spec_of());
+        match self {
+            Sut::Buffet { agent, .. } => {
+                let t0 = Instant::now();
+                let fd = agent.open(pid, path, OpenFlags::RDONLY, &cred).expect("open");
+                let t1 = Instant::now();
+                let data = agent.read(pid, fd, len).expect("read");
+                assert_eq!(data.len() as u32, len);
+                let t2 = Instant::now();
+                agent.close(pid, fd).expect("close");
+                let t3 = Instant::now();
+                (t1 - t0, t2 - t1, t3 - t2)
+            }
+            Sut::Lustre { client, .. } => {
+                let t0 = Instant::now();
+                let fd = client.open(pid, path, OpenFlags::RDONLY, &cred).expect("open");
+                let t1 = Instant::now();
+                let data = client.read(pid, fd, len).expect("read");
+                assert_eq!(data.len() as u32, len);
+                let t2 = Instant::now();
+                client.close(pid, fd).expect("close");
+                let t3 = Instant::now();
+                (t1 - t0, t2 - t1, t3 - t2)
+            }
+        }
+    }
+
+    /// Open-write-close (the DoM write-congestion ablation).
+    pub fn write_once(&self, pid: u32, path: &str, payload: &[u8]) -> Duration {
+        let cred = workload_cred(&self.spec_of());
+        let t0 = Instant::now();
+        match self {
+            Sut::Buffet { agent, .. } => {
+                let fd = agent.open(pid, path, OpenFlags::WRONLY, &cred).expect("open");
+                agent.write(pid, fd, payload).expect("write");
+                agent.close(pid, fd).expect("close");
+            }
+            Sut::Lustre { client, .. } => {
+                let fd = client.open(pid, path, OpenFlags::WRONLY, &cred).expect("open");
+                client.write(pid, fd, payload).expect("write");
+                client.close(pid, fd).expect("close");
+            }
+        }
+        t0.elapsed()
+    }
+
+    fn spec_of(&self) -> FileSetSpec {
+        // spec is only used for the credential; uid/gid are fixed
+        FileSetSpec { n_files: 0, n_dirs: 1, file_size: 0, uid: 1000, gid: 1000 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3 — single-process small-file access latency, per phase
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub system: &'static str,
+    pub warm: bool,
+    pub open_us: f64,
+    pub read_us: f64,
+    pub close_us: f64,
+    pub total_us: f64,
+    pub sync_rpcs_per_access: f64,
+}
+
+/// Latency of accessing a single small file (open/read/close breakdown),
+/// cold (first touch of the directory) and warm (directory tree cached).
+pub fn fig3(cfg: &BenchCfg, iters: usize) -> Vec<Fig3Row> {
+    let mut rows = Vec::new();
+    for kind in ALL_SYSTEMS {
+        let sut = Sut::bring_up(kind, cfg);
+        let len = cfg.spec.file_size;
+        // cold: the very first access after mount
+        let (o, r, c) = sut.access_once(1, &cfg.spec.path(0), len);
+        let cold = Fig3Row {
+            system: kind.label(),
+            warm: false,
+            open_us: o.as_secs_f64() * 1e6,
+            read_us: r.as_secs_f64() * 1e6,
+            close_us: c.as_secs_f64() * 1e6,
+            total_us: (o + r + c).as_secs_f64() * 1e6,
+            sync_rpcs_per_access: 0.0,
+        };
+        // warm-up: touch every directory once so the whole tree is
+        // cached ("requests the directory data once and built the
+        // directory tree on the client"), unmeasured
+        for d in 0..cfg.spec.n_dirs.min(cfg.spec.n_files) {
+            sut.access_once(1, &cfg.spec.path(d), len);
+        }
+        // warm: steady state over `iters` distinct files in cached dirs
+        let before = sut.metrics().sync_rpcs();
+        let (mut so, mut sr, mut sc) = (Duration::ZERO, Duration::ZERO, Duration::ZERO);
+        for i in 0..iters {
+            let idx = 1 + (i % (cfg.spec.n_files - 1));
+            let (o, r, c) = sut.access_once(1, &cfg.spec.path(idx), len);
+            so += o;
+            sr += r;
+            sc += c;
+        }
+        let sync_rpcs = (sut.metrics().sync_rpcs() - before) as f64 / iters as f64;
+        let n = iters as f64;
+        rows.push(cold);
+        rows.push(Fig3Row {
+            system: kind.label(),
+            warm: true,
+            open_us: so.as_secs_f64() * 1e6 / n,
+            read_us: sr.as_secs_f64() * 1e6 / n,
+            close_us: sc.as_secs_f64() * 1e6 / n,
+            total_us: (so + sr + sc).as_secs_f64() * 1e6 / n,
+            sync_rpcs_per_access: sync_rpcs,
+        });
+    }
+    rows
+}
+
+pub fn print_fig3(rows: &[Fig3Row]) {
+    println!("Fig.3 — latency of accessing a single small file (µs, single process)");
+    println!(
+        "{:<14} {:>6} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "system", "cache", "open", "read", "close", "total", "syncRPC/op"
+    );
+    for r in rows {
+        println!(
+            "{:<14} {:>6} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>10.2}",
+            r.system,
+            if r.warm { "warm" } else { "cold" },
+            r.open_us,
+            r.read_us,
+            r.close_us,
+            r.total_us,
+            r.sync_rpcs_per_access
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — concurrent random access, total execution time vs process count
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub system: &'static str,
+    pub processes: usize,
+    pub total_s: f64,
+    pub accesses: usize,
+    pub sync_rpcs: u64,
+}
+
+/// P processes each randomly open+read `accesses_per_proc` of the
+/// `spec.n_files` files; file set regenerated per point (fresh cluster),
+/// exactly like the paper.
+pub fn fig4(cfg: &BenchCfg, processes: &[usize], accesses_per_proc: usize) -> Vec<Fig4Row> {
+    let mut rows = Vec::new();
+    for kind in ALL_SYSTEMS {
+        for &p in processes {
+            let sut = Arc::new(Sut::bring_up(kind, cfg));
+            let len = cfg.spec.file_size;
+            let done = AtomicU64::new(0);
+            let t0 = Instant::now();
+            std::thread::scope(|scope| {
+                for w in 0..p {
+                    let sut = Arc::clone(&sut);
+                    let done = &done;
+                    let spec = cfg.spec;
+                    let seed = cfg.seed ^ ((w as u64) << 32) ^ 0xf19_4;
+                    scope.spawn(move || {
+                        let mut stream = AccessStream::new(seed, spec.n_files, 0.0);
+                        let pid = 1000 + w as u32;
+                        for _ in 0..accesses_per_proc {
+                            let idx = stream.next_index();
+                            sut.access_once(pid, &spec.path(idx), len);
+                            done.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+            });
+            let total = t0.elapsed();
+            rows.push(Fig4Row {
+                system: kind.label(),
+                processes: p,
+                total_s: total.as_secs_f64(),
+                accesses: p * accesses_per_proc,
+                sync_rpcs: sut.metrics().sync_rpcs(),
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_fig4(rows: &[Fig4Row]) {
+    println!("Fig.4 — total execution time of concurrent access (s)");
+    println!(
+        "{:<14} {:>6} {:>10} {:>10} {:>12} {:>14}",
+        "system", "procs", "total_s", "accesses", "sync_rpcs", "ms/access"
+    );
+    for r in rows {
+        println!(
+            "{:<14} {:>6} {:>10.3} {:>10} {:>12} {:>14.3}",
+            r.system,
+            r.processes,
+            r.total_s,
+            r.accesses,
+            r.sync_rpcs,
+            r.total_s * 1e3 / r.accesses as f64
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ablations
+// ---------------------------------------------------------------------------
+
+/// RTT sweep: warm single-file access latency vs one-way latency.
+pub fn ablation_rtt(cfg: &BenchCfg, one_way_us: &[u64], iters: usize) -> Vec<(u64, Vec<Fig3Row>)> {
+    one_way_us
+        .iter()
+        .map(|&us| {
+            let mut c = *cfg;
+            c.net = c.net.with_one_way_us(us);
+            let rows = fig3(&c, iters)
+                .into_iter()
+                .filter(|r| r.warm)
+                .collect::<Vec<_>>();
+            (us, rows)
+        })
+        .collect()
+}
+
+/// Directory fan-out sweep: cold-open cost when the first access must
+/// fetch a directory of F entries (BuffetFS) vs per-component lookups
+/// (Lustre).
+pub fn ablation_fanout(cfg: &BenchCfg, fanouts: &[usize]) -> Vec<(usize, Vec<Fig3Row>)> {
+    fanouts
+        .iter()
+        .map(|&f| {
+            let mut c = *cfg;
+            c.spec = FileSetSpec { n_files: f, n_dirs: 1, ..c.spec };
+            let rows = fig3(&c, 16).into_iter().collect::<Vec<_>>();
+            (f, rows)
+        })
+        .collect()
+}
+
+/// DoM read/write asymmetry: mean per-op latency at varying write
+/// fraction (the §5 "DoM is not write-friendly" claim), under
+/// concurrency so MDS congestion shows.
+pub fn ablation_dom(cfg: &BenchCfg, write_fractions: &[f64], procs: usize, ops: usize) -> Vec<(f64, Vec<(String, f64)>)> {
+    let mut out = Vec::new();
+    for &wf in write_fractions {
+        let mut results = Vec::new();
+        for kind in ALL_SYSTEMS {
+            let sut = Arc::new(Sut::bring_up(kind, cfg));
+            let len = cfg.spec.file_size;
+            let payload = vec![0x5au8; len as usize];
+            let t0 = Instant::now();
+            std::thread::scope(|scope| {
+                for w in 0..procs {
+                    let sut = Arc::clone(&sut);
+                    let payload = payload.clone();
+                    let spec = cfg.spec;
+                    let seed = cfg.seed ^ ((w as u64) << 24) ^ 0xd0_4;
+                    scope.spawn(move || {
+                        let mut stream = AccessStream::new(seed, spec.n_files, 0.0);
+                        let mut rng = crate::util::rng::XorShift::new(seed ^ 1);
+                        let pid = 2000 + w as u32;
+                        for _ in 0..ops {
+                            let idx = stream.next_index();
+                            if rng.f64() < wf {
+                                sut.write_once(pid, &spec.path(idx), &payload);
+                            } else {
+                                sut.access_once(pid, &spec.path(idx), len);
+                            }
+                        }
+                    });
+                }
+            });
+            let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / (procs * ops) as f64;
+            results.push((kind.label().to_string(), mean_ms));
+        }
+        out.push((wf, results));
+    }
+    out
+}
+
+/// One Buffet process doing the paper's open-read-close on every file of
+/// a pre-built SUT — helper for criterion-style loops.
+pub fn steady_access(sut: &Sut, spec: &FileSetSpec, stream: &mut AccessStream, pid: u32) {
+    let idx = stream.next_index();
+    sut.access_once(pid, &spec.path(idx), spec.file_size);
+}
+
+// ---------------------------------------------------------------------------
+// Minimal bench runner (criterion is unavailable offline): warmup + N
+// timed iterations, mean/p50/p99 printed as one row.
+// ---------------------------------------------------------------------------
+
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+impl BenchStats {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} iters={:<7} mean={:>10.2}µs p50={:>10.2}µs p99={:>10.2}µs",
+            self.name,
+            self.iters,
+            self.mean_ns / 1e3,
+            self.p50_ns as f64 / 1e3,
+            self.p99_ns as f64 / 1e3
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured ones.
+pub fn bench_loop(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut h = crate::util::hist::Histogram::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        h.record(t0.elapsed().as_nanos() as u64);
+    }
+    let st = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ns: h.mean(),
+        p50_ns: h.percentile(50.0),
+        p99_ns: h.percentile(99.0),
+    };
+    println!("{}", st.row());
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchCfg {
+        BenchCfg {
+            net: NetConfig { one_way_us: 200, per_kb_us: 0, jitter_us: 0, seed: 7 },
+            svc: ServiceConfig::unbounded(),
+            n_servers: 2,
+            spec: FileSetSpec { n_files: 64, n_dirs: 4, file_size: 1024, uid: 1000, gid: 1000 },
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn fig3_shape_buffet_beats_lustre_normal_warm() {
+        let rows = fig3(&fast_cfg(), 8);
+        let warm = |sys: &str| {
+            rows.iter()
+                .find(|r| r.system == sys && r.warm)
+                .unwrap()
+                .clone()
+        };
+        let buffet = warm("BuffetFS");
+        let normal = warm("Lustre-Normal");
+        let dom = warm("Lustre-DoM");
+        // the paper's ordering: BuffetFS lowest; DoM between (one RPC,
+        // like BuffetFS, so roughly comparable); Normal worst
+        assert!(
+            buffet.total_us < normal.total_us * 0.75,
+            "BuffetFS {:.0}µs not clearly under Lustre-Normal {:.0}µs",
+            buffet.total_us,
+            normal.total_us
+        );
+        assert!(dom.total_us < normal.total_us, "DoM should beat Normal on reads");
+        // BuffetFS warm open is local: far below one round trip (400µs)
+        assert!(buffet.open_us < 100.0, "warm open should be RPC-free, got {:.0}µs", buffet.open_us);
+        // exactly one sync RPC per access for BuffetFS
+        assert!(buffet.sync_rpcs_per_access < 1.5);
+        assert!(normal.sync_rpcs_per_access > 1.5);
+    }
+
+    #[test]
+    fn fig4_shape_buffet_fastest_and_fewest_rpcs() {
+        let cfg = fast_cfg();
+        let rows = fig4(&cfg, &[2], 16);
+        let find = |sys: &str| rows.iter().find(|r| r.system == sys).unwrap();
+        let buffet = find("BuffetFS");
+        let normal = find("Lustre-Normal");
+        assert!(
+            buffet.total_s < normal.total_s,
+            "BuffetFS {:.3}s not under Lustre-Normal {:.3}s",
+            buffet.total_s,
+            normal.total_s
+        );
+        assert!(buffet.sync_rpcs < normal.sync_rpcs);
+    }
+}

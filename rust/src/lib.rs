@@ -1,0 +1,34 @@
+//! # BuffetFS
+//!
+//! A user-level distributed file system that **serves permission checks
+//! itself** — reproducing *"BuffetFS: Serve Yourself Permission Checks
+//! without Remote Procedure Calls"* (Zou et al., 2021) as a three-layer
+//! Rust + JAX + Pallas system (AOT via xla/PJRT).
+//!
+//! `open()` is dis-aggregated: the permission check (Step 1) runs on the
+//! client against a cached directory tree whose entries each carry 10
+//! extra bytes of permission information; the open record (Step 2) is
+//! deferred and piggy-backed on the first `read()`/`write()` RPC. A small
+//! file is then accessed with **one** synchronous round trip instead of
+//! Lustre's two-plus.
+//!
+//! See `DESIGN.md` for the module inventory and the experiment index.
+
+pub mod agent;
+pub mod baseline;
+pub mod blib;
+pub mod cluster;
+pub mod codec;
+pub mod error;
+pub mod harness;
+pub mod metrics;
+pub mod perm;
+pub mod runtime;
+pub mod server;
+pub mod simnet;
+pub mod store;
+pub mod transport;
+pub mod types;
+pub mod util;
+pub mod wire;
+pub mod workload;

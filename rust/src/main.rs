@@ -1,0 +1,278 @@
+//! The `buffetfs` CLI: figure regeneration, motivation stats, a TCP
+//! server/client pair for real multi-process deployment, and a selftest.
+//!
+//! ```text
+//! buffetfs bench fig3   [--one-way-us 100] [--files 2000] [--iters 200]
+//! buffetfs bench fig4   [--procs 1,2,4,8,16] [--accesses 1000] [--files 100000] [--dirs 100]
+//! buffetfs bench motivation [--accesses 200000]
+//! buffetfs bench rtt    [--sweep 0,25,50,100,200,500,1000]
+//! buffetfs bench fanout [--sweep 10,100,1000,10000]
+//! buffetfs bench dom    [--writes 0,0.5,1.0] [--procs 8]
+//! buffetfs serve  --addr 127.0.0.1:7700 [--host 0] [--dir /tmp/buffet0]
+//! buffetfs client --addr 127.0.0.1:7700 [--op put|get] --path /f [--data xyz]
+//! buffetfs selftest
+//! ```
+
+use std::sync::Arc;
+
+use buffetfs::harness::{self, BenchCfg};
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::util::args::Args;
+use buffetfs::workload::{motivation, FileSetSpec};
+
+fn main() {
+    buffetfs::util::logger::init();
+    let args = Args::from_env();
+    let pos = args.positional().to_vec();
+    match pos.first().map(|s| s.as_str()) {
+        Some("bench") => bench(&args, pos.get(1).map(|s| s.as_str()).unwrap_or("fig3")),
+        Some("serve") => serve(&args),
+        Some("client") => client(&args),
+        Some("selftest") => selftest(),
+        _ => {
+            eprintln!("usage: buffetfs <bench fig3|fig4|motivation|rtt|fanout|dom | serve | client | selftest> [--flags]");
+            eprintln!("(see module docs at the top of rust/src/main.rs)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cfg_from(args: &Args) -> BenchCfg {
+    let mut cfg = BenchCfg::default();
+    cfg.net = NetConfig::infiniband().with_one_way_us(args.get_u64("one-way-us", 100));
+    cfg.net.seed = args.get_u64("seed", 42);
+    if args.flag("unbounded-server") {
+        cfg.svc = ServiceConfig::unbounded();
+    }
+    cfg.n_servers = args.get_u64("servers", 4) as u16;
+    cfg.spec = FileSetSpec {
+        n_files: args.get_usize("files", 100_000),
+        n_dirs: args.get_usize("dirs", 100),
+        file_size: args.get_u64("size", 4096) as u32,
+        uid: 1000,
+        gid: 1000,
+    };
+    cfg.seed = args.get_u64("seed", 42);
+    cfg
+}
+
+fn parse_list(s: &str) -> Vec<u64> {
+    s.split(',').filter_map(|v| v.trim().parse().ok()).collect()
+}
+
+fn bench(args: &Args, which: &str) {
+    match which {
+        "fig3" => {
+            let mut cfg = cfg_from(args);
+            cfg.spec.n_files = args.get_usize("files", 2000);
+            cfg.spec.n_dirs = args.get_usize("dirs", 10);
+            let rows = harness::fig3(&cfg, args.get_usize("iters", 200));
+            harness::print_fig3(&rows);
+        }
+        "fig4" => {
+            let cfg = cfg_from(args);
+            let procs: Vec<usize> = parse_list(args.get_or("procs", "1,2,4,8,16"))
+                .into_iter()
+                .map(|v| v as usize)
+                .collect();
+            let rows = harness::fig4(&cfg, &procs, args.get_usize("accesses", 1000));
+            harness::print_fig4(&rows);
+        }
+        "motivation" => {
+            let mix = motivation::TraceMix::default();
+            let st = motivation::simulate(&mix, args.get_u64("accesses", 200_000), 42);
+            println!("§2.1 motivation statistics (synthetic trace, mix = {mix:?})");
+            println!("  total RPCs observed:            {}", st.total_rpcs);
+            println!(
+                "  RPCs from small-file accesses:  {:.1}%   (paper: >90%)",
+                st.small_rpc_share() * 100.0
+            );
+            println!(
+                "  open+close share of metadata:   {:.1}%   (paper: >70%)",
+                st.open_close_meta_share() * 100.0
+            );
+        }
+        "rtt" => {
+            let mut cfg = cfg_from(args);
+            cfg.spec.n_files = args.get_usize("files", 2000);
+            cfg.spec.n_dirs = args.get_usize("dirs", 10);
+            let sweep = parse_list(args.get_or("sweep", "0,25,50,100,200,500,1000"));
+            println!("RTT ablation — warm single-file access total (µs) vs one-way latency");
+            println!("{:<12} {:>14} {:>14} {:>14}", "one_way_us", "BuffetFS", "Lustre-Normal", "Lustre-DoM");
+            for (us, rows) in harness::ablation_rtt(&cfg, &sweep, args.get_usize("iters", 100)) {
+                let get = |s: &str| rows.iter().find(|r| r.system == s).map(|r| r.total_us).unwrap_or(0.0);
+                println!(
+                    "{:<12} {:>14.1} {:>14.1} {:>14.1}",
+                    us,
+                    get("BuffetFS"),
+                    get("Lustre-Normal"),
+                    get("Lustre-DoM")
+                );
+            }
+        }
+        "fanout" => {
+            let cfg = cfg_from(args);
+            let sweep: Vec<usize> = parse_list(args.get_or("sweep", "10,100,1000,10000"))
+                .into_iter()
+                .map(|v| v as usize)
+                .collect();
+            println!("Fan-out ablation — cold first-access open (µs) vs directory size");
+            println!("{:<10} {:>14} {:>14} {:>14}", "entries", "BuffetFS", "Lustre-Normal", "Lustre-DoM");
+            for (f, rows) in harness::ablation_fanout(&cfg, &sweep) {
+                let get = |s: &str| {
+                    rows.iter()
+                        .find(|r| r.system == s && !r.warm)
+                        .map(|r| r.open_us)
+                        .unwrap_or(0.0)
+                };
+                println!(
+                    "{:<10} {:>14.1} {:>14.1} {:>14.1}",
+                    f,
+                    get("BuffetFS"),
+                    get("Lustre-Normal"),
+                    get("Lustre-DoM")
+                );
+            }
+        }
+        "dom" => {
+            let mut cfg = cfg_from(args);
+            cfg.spec.n_files = args.get_usize("files", 2000);
+            cfg.spec.n_dirs = args.get_usize("dirs", 10);
+            let fractions: Vec<f64> = args
+                .get_or("writes", "0,0.5,1.0")
+                .split(',')
+                .filter_map(|v| v.trim().parse().ok())
+                .collect();
+            let procs = args.get_usize("procs", 8);
+            println!("DoM ablation — mean ms/op vs write fraction ({procs} procs)");
+            println!("{:<10} {:>14} {:>14} {:>14}", "write_frac", "BuffetFS", "Lustre-Normal", "Lustre-DoM");
+            for (wf, rows) in harness::ablation_dom(&cfg, &fractions, procs, args.get_usize("ops", 50)) {
+                let get = |s: &str| rows.iter().find(|(n, _)| n == s).map(|(_, v)| *v).unwrap_or(0.0);
+                println!(
+                    "{:<10.2} {:>14.3} {:>14.3} {:>14.3}",
+                    wf,
+                    get("BuffetFS"),
+                    get("Lustre-Normal"),
+                    get("Lustre-DoM")
+                );
+            }
+        }
+        other => {
+            eprintln!("unknown bench {other:?}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Serve one BServer over real TCP.
+fn serve(args: &Args) {
+    use buffetfs::server::BServer;
+    use buffetfs::store::data::DiskData;
+    use buffetfs::store::fs::LocalFs;
+    use buffetfs::transport::tcp::TcpServer;
+
+    let addr = args.get_or("addr", "127.0.0.1:7700").to_string();
+    let host = args.get_u64("host", 0) as u16;
+    let dir = args.get_or("dir", "/tmp/buffetfs-data").to_string();
+    let fs = LocalFs::new(host, 0, Box::new(DiskData::new(&dir).expect("data dir")));
+    let server = BServer::new(fs);
+    let tcp = TcpServer::spawn(&addr, server).expect("bind");
+    println!("BServer host={host} serving on {} (data under {dir}); Ctrl-C to stop", tcp.local_addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Minimal TCP client: put/get one file (proves the wire protocol over a
+/// real socket; the full client surface runs in-process).
+fn client(args: &Args) {
+    use buffetfs::codec::Wire as _;
+    use buffetfs::metrics::RpcMetrics;
+    use buffetfs::transport::tcp::TcpTransport;
+    use buffetfs::transport::Transport as _;
+    use buffetfs::types::{Credentials, FileKind, Ino};
+    use buffetfs::wire::{Request, Response};
+
+    let addr = args.get_or("addr", "127.0.0.1:7700").to_string();
+    let path = args.get_or("path", "/hello.txt").to_string();
+    let op = args.get_or("op", "put").to_string();
+    let metrics = Arc::new(RpcMetrics::new());
+    let t = TcpTransport::connect(&addr, metrics.clone()).expect("connect");
+    let cred = Credentials::root();
+    let root = Ino::new(args.get_u64("host", 0) as u16, 0, 1);
+    let name = path.trim_start_matches('/').to_string();
+    match op.as_str() {
+        "put" => {
+            let data = args.get_or("data", "hello from the buffetfs TCP client").as_bytes().to_vec();
+            let resp = t
+                .call(Request::Create {
+                    dir: root,
+                    name: name.clone(),
+                    mode: 0o644,
+                    kind: FileKind::Regular,
+                    cred: cred.clone(),
+                    client: 1,
+                })
+                .or_else(|e| {
+                    if e == buffetfs::error::FsError::AlreadyExists {
+                        t.call(Request::Lookup { dir: root, name: name.clone(), cred: cred.clone() })
+                    } else {
+                        Err(e)
+                    }
+                })
+                .expect("create/lookup");
+            let ino = match resp {
+                Response::Created(e) | Response::Entry(e) => e.ino,
+                other => panic!("unexpected {other:?}"),
+            };
+            t.call(Request::Write { ino, off: 0, data: data.clone(), open_ctx: None }).expect("write");
+            println!("put {} bytes to {path} (ino {ino})", data.len());
+        }
+        "get" => {
+            let resp = t
+                .call(Request::Lookup { dir: root, name, cred: cred.clone() })
+                .expect("lookup");
+            let ino = match resp {
+                Response::Entry(e) => e.ino,
+                other => panic!("unexpected {other:?}"),
+            };
+            match t.call(Request::Read { ino, off: 0, len: 1 << 20, open_ctx: None }).expect("read") {
+                Response::Data { data, .. } => {
+                    println!("{}", String::from_utf8_lossy(&data));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        other => {
+            eprintln!("unknown op {other:?} (put|get)");
+            std::process::exit(2);
+        }
+    }
+    let _ = Request::Hello { client: 1 }.to_bytes(); // keep Wire import honest
+}
+
+/// Quick end-to-end smoke across the whole stack.
+fn selftest() {
+    let mut cfg = BenchCfg::default();
+    cfg.spec = FileSetSpec { n_files: 200, n_dirs: 4, file_size: 4096, uid: 1000, gid: 1000 };
+    cfg.net = cfg.net.with_one_way_us(50);
+    let rows = harness::fig3(&cfg, 20);
+    harness::print_fig3(&rows);
+    let warm_buffet = rows.iter().find(|r| r.system == "BuffetFS" && r.warm).unwrap();
+    let warm_normal = rows.iter().find(|r| r.system == "Lustre-Normal" && r.warm).unwrap();
+    assert!(warm_buffet.total_us < warm_normal.total_us);
+    match buffetfs::runtime::KernelRuntime::load(buffetfs::runtime::KernelRuntime::default_dir()) {
+        Ok(rt) => {
+            use buffetfs::perm::BatchPathChecker;
+            let chains = vec![vec![buffetfs::types::PermBlob::new(0o755, 0, 0)]; 10];
+            let v = rt
+                .check_paths(&chains, &buffetfs::types::Credentials::new(1, 1), buffetfs::types::AccessMask::READ)
+                .expect("kernel check");
+            assert!(v.iter().all(|r| r.is_ok()));
+            println!("PJRT kernel runtime: OK ({} checks)", chains.len());
+        }
+        Err(e) => println!("PJRT kernel runtime skipped: {e} (run `make artifacts`)"),
+    }
+    println!("selftest OK");
+}

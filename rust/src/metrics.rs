@@ -1,0 +1,160 @@
+//! RPC counters and per-operation latency recording.
+//!
+//! Every transport records (op, bytes, latency) here; the figure
+//! harnesses and the §2.1 motivation analyzer read it back. Counters are
+//! lock-free; histograms take a short mutex (off the 99 % path — only on
+//! RPC completion, which already costs a simulated round trip).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::hist::Histogram;
+
+/// Known op names (fixed set → lock-free counters by index).
+pub const OPS: &[&str] = &[
+    "lookup", "readdir", "getattr", "open", "read", "write", "close", "create", "mkdir",
+    "unlink", "rmdir", "rename", "chmod", "chown", "truncate", "statfs", "hello", "invalidate",
+];
+
+fn op_index(op: &str) -> usize {
+    OPS.iter().position(|&o| o == op).unwrap_or(OPS.len() - 1)
+}
+
+#[derive(Default)]
+pub struct RpcMetrics {
+    counts: [AtomicU64; 18],
+    bytes_out: AtomicU64,
+    bytes_in: AtomicU64,
+    lat: Mutex<BTreeMap<&'static str, Histogram>>,
+}
+
+impl RpcMetrics {
+    pub fn new() -> RpcMetrics {
+        RpcMetrics::default()
+    }
+
+    pub fn record(&self, op: &'static str, sent: usize, received: usize, latency: Duration) {
+        self.counts[op_index(op)].fetch_add(1, Ordering::Relaxed);
+        self.bytes_out.fetch_add(sent as u64, Ordering::Relaxed);
+        self.bytes_in.fetch_add(received as u64, Ordering::Relaxed);
+        let mut lat = self.lat.lock().unwrap();
+        lat.entry(op).or_default().record(latency.as_nanos() as u64);
+    }
+
+    pub fn count(&self, op: &str) -> u64 {
+        self.counts[op_index(op)].load(Ordering::Relaxed)
+    }
+
+    pub fn total_rpcs(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total *synchronous* RPCs (close is asynchronous in BuffetFS and
+    /// Lustre alike — the paper excludes it from the latency path).
+    pub fn sync_rpcs(&self) -> u64 {
+        self.total_rpcs() - self.count("close") - self.count("hello")
+    }
+
+    pub fn metadata_rpcs(&self) -> u64 {
+        OPS.iter()
+            .filter(|&&op| op != "read" && op != "write")
+            .map(|&op| self.count(op))
+            .sum()
+    }
+
+    pub fn bytes(&self) -> (u64, u64) {
+        (self.bytes_out.load(Ordering::Relaxed), self.bytes_in.load(Ordering::Relaxed))
+    }
+
+    pub fn latency_summary(&self) -> Vec<(String, String)> {
+        let lat = self.lat.lock().unwrap();
+        lat.iter().map(|(op, h)| (op.to_string(), h.summary_us())).collect()
+    }
+
+    pub fn histogram(&self, op: &str) -> Option<Histogram> {
+        let lat = self.lat.lock().unwrap();
+        lat.iter().find(|(o, _)| **o == op).map(|(_, h)| h.clone())
+    }
+
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.bytes_out.store(0, Ordering::Relaxed);
+        self.bytes_in.store(0, Ordering::Relaxed);
+        self.lat.lock().unwrap().clear();
+    }
+
+    /// Multi-line per-op report (counts + latency) for the CLI.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for &op in OPS {
+            let n = self.count(op);
+            if n == 0 {
+                continue;
+            }
+            out.push_str(&format!("  {op:<10} n={n:<8}"));
+            if let Some(h) = self.histogram(op) {
+                out.push_str(&h.summary_us());
+            }
+            out.push('\n');
+        }
+        let (bo, bi) = self.bytes();
+        out.push_str(&format!(
+            "  total rpcs={} sync={} meta={} bytes_out={} bytes_in={}\n",
+            self.total_rpcs(),
+            self.sync_rpcs(),
+            self.metadata_rpcs(),
+            bo,
+            bi
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_by_op() {
+        let m = RpcMetrics::new();
+        m.record("open", 64, 32, Duration::from_micros(100));
+        m.record("open", 64, 32, Duration::from_micros(200));
+        m.record("read", 64, 4096, Duration::from_micros(300));
+        m.record("close", 64, 8, Duration::from_micros(1));
+        assert_eq!(m.count("open"), 2);
+        assert_eq!(m.count("read"), 1);
+        assert_eq!(m.total_rpcs(), 4);
+        assert_eq!(m.sync_rpcs(), 3);
+        assert_eq!(m.metadata_rpcs(), 3);
+        assert_eq!(m.bytes(), (64 * 4, 32 + 32 + 4096 + 8));
+    }
+
+    #[test]
+    fn unknown_op_goes_to_last_bucket() {
+        let m = RpcMetrics::new();
+        m.record("invalidate", 1, 1, Duration::from_nanos(5));
+        assert_eq!(m.count("invalidate"), 1);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = RpcMetrics::new();
+        m.record("read", 10, 10, Duration::from_micros(10));
+        m.reset();
+        assert_eq!(m.total_rpcs(), 0);
+        assert!(m.histogram("read").is_none());
+    }
+
+    #[test]
+    fn report_mentions_ops() {
+        let m = RpcMetrics::new();
+        m.record("write", 4096, 16, Duration::from_micros(50));
+        let r = m.report();
+        assert!(r.contains("write"));
+        assert!(r.contains("total rpcs=1"));
+    }
+}

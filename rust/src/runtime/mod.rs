@@ -1,0 +1,351 @@
+//! The PJRT runtime: loads the AOT-compiled L2/L1 artifacts (HLO text
+//! emitted by `python/compile/aot.py`) and serves batched permission
+//! checks from the BuffetFS request path. Python never runs here.
+//!
+//! The `xla` crate's wrappers hold raw pointers and are neither `Send`
+//! nor `Sync`, so the compiled executables live on a dedicated runtime
+//! thread; [`KernelRuntime`] is a `Send + Sync` front-end that ships jobs
+//! over a channel. One thread is plenty: a single batch_open evaluates
+//! 256 path walks (≈4096 component checks) per call.
+
+pub mod shapes;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{FsError, FsResult};
+use crate::perm::{self, BatchPathChecker};
+use crate::types::{AccessMask, Credentials, PermBlob};
+
+use shapes::{BATCH_B, DEPTH_D, DIRSCAN_N, GROUPS_G};
+
+/// Raw i32 inputs for one batch_open execution (pre-padded).
+struct BatchOpenJob {
+    modes: Vec<i32>,     // B*D
+    uids: Vec<i32>,      // B*D
+    gids: Vec<i32>,      // B*D
+    depth: Vec<i32>,     // B
+    cred_uid: Vec<i32>,  // B
+    cred_gids: Vec<i32>, // B*G
+    ngroups: Vec<i32>,   // B
+    want: Vec<i32>,      // B
+}
+
+struct DirScanJob {
+    modes: Vec<i32>, // N
+    uids: Vec<i32>,
+    gids: Vec<i32>,
+    valid: Vec<i32>,
+    cred_uid: i32,
+    cred_gids: Vec<i32>, // G
+    ngroups: i32,
+    want: i32,
+}
+
+enum Job {
+    BatchOpen(BatchOpenJob, SyncSender<FsResult<(Vec<i32>, Vec<i32>)>>),
+    DirScan(DirScanJob, SyncSender<FsResult<Vec<i32>>>),
+    /// Run batch_open through the pure-jnp reference artifact instead
+    /// (A/B ablation for `kernel_permcheck`).
+    BatchOpenRef(BatchOpenJob, SyncSender<FsResult<(Vec<i32>, Vec<i32>)>>),
+}
+
+#[derive(Default)]
+pub struct RuntimeStats {
+    pub batch_open_calls: AtomicU64,
+    pub dirscan_calls: AtomicU64,
+    pub requests_checked: AtomicU64,
+}
+
+/// Send+Sync handle to the PJRT runtime thread.
+pub struct KernelRuntime {
+    tx: Mutex<mpsc::Sender<Job>>,
+    pub stats: RuntimeStats,
+}
+
+impl KernelRuntime {
+    /// Default artifact location (`make artifacts` output), overridable
+    /// via `BUFFETFS_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("BUFFETFS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Spin up the runtime thread: PJRT CPU client + compile the three
+    /// artifacts. Fails fast if the artifacts are missing or their
+    /// manifest disagrees with [`shapes`].
+    pub fn load(dir: impl AsRef<Path>) -> FsResult<Arc<KernelRuntime>> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .map_err(|e| FsError::Io(format!("artifacts not built? ({e})")))?;
+        let expect = shapes::manifest_line();
+        if manifest.lines().next() != Some(expect.as_str()) {
+            return Err(FsError::Invalid(format!(
+                "artifact shape mismatch: manifest says {:?}, runtime expects {expect:?} — re-run `make artifacts`",
+                manifest.lines().next().unwrap_or("")
+            )));
+        }
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<(), String>>(1);
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || runtime_thread(dir, rx, ready_tx))
+            .map_err(|e| FsError::Io(format!("spawn runtime thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| FsError::Io("runtime thread died during startup".into()))?
+            .map_err(FsError::Io)?;
+        Ok(Arc::new(KernelRuntime { tx: Mutex::new(tx), stats: RuntimeStats::default() }))
+    }
+
+    fn submit(&self, job: Job) -> FsResult<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(job)
+            .map_err(|_| FsError::Io("pjrt runtime thread gone".into()))
+    }
+
+    /// Raw batched path check (padded shapes). `use_ref` routes through
+    /// the pure-jnp artifact instead of the Pallas kernel.
+    fn batch_open_raw(&self, job: BatchOpenJob, use_ref: bool) -> FsResult<(Vec<i32>, Vec<i32>)> {
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        self.submit(if use_ref { Job::BatchOpenRef(job, rtx) } else { Job::BatchOpen(job, rtx) })?;
+        self.stats.batch_open_calls.fetch_add(1, Ordering::Relaxed);
+        rrx.recv().map_err(|_| FsError::Io("pjrt runtime dropped reply".into()))?
+    }
+
+    /// Batched directory permission scan: one credential against up to
+    /// [`DIRSCAN_N`] entries (the BAgent's directory-population check).
+    pub fn dirscan(
+        &self,
+        entries: &[PermBlob],
+        cred: &Credentials,
+        want: AccessMask,
+    ) -> FsResult<Vec<bool>> {
+        if cred.groups.len() > GROUPS_G {
+            return Err(FsError::Invalid(format!("more than {GROUPS_G} groups")));
+        }
+        let mut out = Vec::with_capacity(entries.len());
+        for chunk in entries.chunks(DIRSCAN_N) {
+            let mut modes = vec![0i32; DIRSCAN_N];
+            let mut uids = vec![0i32; DIRSCAN_N];
+            let mut gids = vec![0i32; DIRSCAN_N];
+            let mut valid = vec![0i32; DIRSCAN_N];
+            for (i, p) in chunk.iter().enumerate() {
+                modes[i] = p.mode.0 as i32;
+                uids[i] = p.uid as i32;
+                gids[i] = p.gid as i32;
+                valid[i] = 1;
+            }
+            let mut cred_gids = vec![i32::MIN; GROUPS_G]; // poison unused slots
+            for (i, g) in cred.groups.iter().enumerate() {
+                cred_gids[i] = *g as i32;
+            }
+            let job = DirScanJob {
+                modes,
+                uids,
+                gids,
+                valid,
+                cred_uid: cred.uid as i32,
+                cred_gids,
+                ngroups: cred.groups.len() as i32,
+                want: want.0 as i32,
+            };
+            let (rtx, rrx) = mpsc::sync_channel(1);
+            self.submit(Job::DirScan(job, rtx))?;
+            self.stats.dirscan_calls.fetch_add(1, Ordering::Relaxed);
+            let allow = rrx.recv().map_err(|_| FsError::Io("pjrt runtime dropped reply".into()))??;
+            out.extend(chunk.iter().enumerate().map(|(i, _)| allow[i] != 0));
+        }
+        Ok(out)
+    }
+
+    /// Check many path chains (the [`BatchPathChecker`] impl body, also
+    /// exposed with a `use_ref` switch for the kernel-vs-jnp ablation).
+    pub fn check_paths_via(
+        &self,
+        chains: &[Vec<PermBlob>],
+        cred: &Credentials,
+        want: AccessMask,
+        use_ref: bool,
+    ) -> FsResult<Vec<Result<(), usize>>> {
+        // anything the static shapes can't express falls back to native
+        let fallback = |c: &Vec<PermBlob>| c.len() > DEPTH_D || c.is_empty();
+        if cred.groups.len() > GROUPS_G {
+            return perm::NativeBatchChecker.check_paths(chains, cred, want);
+        }
+        let mut out: Vec<Result<(), usize>> = Vec::with_capacity(chains.len());
+        let mut cred_gids_row = vec![i32::MIN; GROUPS_G];
+        for (i, g) in cred.groups.iter().enumerate() {
+            cred_gids_row[i] = *g as i32;
+        }
+        for chunk in chains.chunks(BATCH_B) {
+            let b = BATCH_B;
+            let mut job = BatchOpenJob {
+                modes: vec![0; b * DEPTH_D],
+                uids: vec![0; b * DEPTH_D],
+                gids: vec![0; b * DEPTH_D],
+                depth: vec![1; b],
+                cred_uid: vec![cred.uid as i32; b],
+                cred_gids: Vec::with_capacity(b * GROUPS_G),
+                ngroups: vec![cred.groups.len() as i32; b],
+                want: vec![want.0 as i32; b],
+            };
+            for _ in 0..b {
+                job.cred_gids.extend_from_slice(&cred_gids_row);
+            }
+            for (r, chain) in chunk.iter().enumerate() {
+                if fallback(chain) {
+                    continue; // resolved natively below
+                }
+                job.depth[r] = chain.len() as i32;
+                for (d, p) in chain.iter().enumerate() {
+                    job.modes[r * DEPTH_D + d] = p.mode.0 as i32;
+                    job.uids[r * DEPTH_D + d] = p.uid as i32;
+                    job.gids[r * DEPTH_D + d] = p.gid as i32;
+                }
+            }
+            let (allow, fail) = self.batch_open_raw(job, use_ref)?;
+            self.stats
+                .requests_checked
+                .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+            for (r, chain) in chunk.iter().enumerate() {
+                if fallback(chain) {
+                    out.push(perm::check_path(chain, cred, want));
+                } else if allow[r] != 0 {
+                    out.push(Ok(()));
+                } else {
+                    out.push(Err(fail[r].max(0) as usize));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl BatchPathChecker for KernelRuntime {
+    fn check_paths(
+        &self,
+        chains: &[Vec<PermBlob>],
+        cred: &Credentials,
+        want: AccessMask,
+    ) -> FsResult<Vec<Result<(), usize>>> {
+        self.check_paths_via(chains, cred, want, false)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-pallas"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the runtime thread
+// ---------------------------------------------------------------------------
+
+fn compile(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable, String> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| format!("parse {path:?}: {e}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| format!("compile {path:?}: {e}"))
+}
+
+fn runtime_thread(dir: PathBuf, rx: Receiver<Job>, ready: SyncSender<Result<(), String>>) {
+    let setup = (|| -> Result<_, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        let batch_open = compile(&client, &dir.join("batch_open.hlo.txt"))?;
+        let batch_open_ref = compile(&client, &dir.join("batch_open_ref.hlo.txt"))?;
+        let dirscan = compile(&client, &dir.join("dirscan.hlo.txt"))?;
+        Ok((client, batch_open, batch_open_ref, dirscan))
+    })();
+    let (_client, batch_open, batch_open_ref, dirscan) = match setup {
+        Ok(t) => {
+            let _ = ready.send(Ok(()));
+            t
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    for job in rx {
+        match job {
+            Job::BatchOpen(j, reply) => {
+                let _ = reply.send(run_batch_open(&batch_open, &j));
+            }
+            Job::BatchOpenRef(j, reply) => {
+                let _ = reply.send(run_batch_open(&batch_open_ref, &j));
+            }
+            Job::DirScan(j, reply) => {
+                let _ = reply.send(run_dirscan(&dirscan, &j));
+            }
+        }
+    }
+}
+
+fn lit2(v: &[i32], rows: usize, cols: usize) -> FsResult<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| FsError::Io(format!("literal reshape: {e}")))
+}
+
+fn lit1(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn run_batch_open(
+    exe: &xla::PjRtLoadedExecutable,
+    j: &BatchOpenJob,
+) -> FsResult<(Vec<i32>, Vec<i32>)> {
+    let inputs = [
+        lit2(&j.modes, BATCH_B, DEPTH_D)?,
+        lit2(&j.uids, BATCH_B, DEPTH_D)?,
+        lit2(&j.gids, BATCH_B, DEPTH_D)?,
+        lit1(&j.depth),
+        lit1(&j.cred_uid),
+        lit2(&j.cred_gids, BATCH_B, GROUPS_G)?,
+        lit1(&j.ngroups),
+        lit1(&j.want),
+    ];
+    let result = exe
+        .execute::<xla::Literal>(&inputs)
+        .map_err(|e| FsError::Io(format!("pjrt execute: {e}")))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| FsError::Io(format!("pjrt sync: {e}")))?;
+    let parts = result.to_tuple().map_err(|e| FsError::Io(format!("tuple: {e}")))?;
+    if parts.len() != 2 {
+        return Err(FsError::Io(format!("batch_open returned {}-tuple", parts.len())));
+    }
+    let allow = parts[0].to_vec::<i32>().map_err(|e| FsError::Io(format!("allow: {e}")))?;
+    let fail = parts[1].to_vec::<i32>().map_err(|e| FsError::Io(format!("fail: {e}")))?;
+    Ok((allow, fail))
+}
+
+fn run_dirscan(exe: &xla::PjRtLoadedExecutable, j: &DirScanJob) -> FsResult<Vec<i32>> {
+    let inputs = [
+        lit1(&j.modes),
+        lit1(&j.uids),
+        lit1(&j.gids),
+        lit1(&j.valid),
+        lit1(&[j.cred_uid]),
+        lit1(&j.cred_gids),
+        lit1(&[j.ngroups]),
+        lit1(&[j.want]),
+    ];
+    let result = exe
+        .execute::<xla::Literal>(&inputs)
+        .map_err(|e| FsError::Io(format!("pjrt execute: {e}")))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| FsError::Io(format!("pjrt sync: {e}")))?;
+    let out = result
+        .to_tuple1()
+        .map_err(|e| FsError::Io(format!("tuple: {e}")))?;
+    out.to_vec::<i32>().map_err(|e| FsError::Io(format!("allow: {e}")))
+}

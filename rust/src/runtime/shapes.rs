@@ -1,0 +1,18 @@
+//! Static AOT shapes — MUST match `python/compile/kernels/ref.py`
+//! (`BATCH_B`, `DEPTH_D`, `GROUPS_G`, `DIRSCAN_N`). The AOT step also
+//! writes `artifacts/manifest.txt`, which [`super::KernelRuntime`] checks
+//! at load time so a stale artifact fails fast instead of mis-executing.
+
+/// Open requests per batch_open invocation.
+pub const BATCH_B: usize = 256;
+/// Max path components (root included) per request.
+pub const DEPTH_D: usize = 16;
+/// Supplementary-group slots per credential.
+pub const GROUPS_G: usize = 16;
+/// Directory entries per dirscan invocation.
+pub const DIRSCAN_N: usize = 1024;
+
+/// Expected first line of artifacts/manifest.txt.
+pub fn manifest_line() -> String {
+    format!("B={BATCH_B} D={DEPTH_D} G={GROUPS_G} N={DIRSCAN_N}")
+}

@@ -1,0 +1,223 @@
+//! Server-side file locks.
+//!
+//! "BuffetFS arranges files locks **inside the BServer** for concurrency
+//! while Lustre arranges its distributed file locks among all of its
+//! clients" (§4) — one of the two reasons for Fig. 3's gap. Reads take
+//! shared locks, writes exclusive, all local to the server. The baseline's
+//! LDLM flavour (extra client round trips) lives in `baseline::`.
+//!
+//! Implemented as a small owning reader–writer lock (Mutex + Condvar)
+//! because std's `RwLock` guards borrow and cannot be returned from a
+//! per-file lock table; writers are preferred to avoid starvation.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::types::FileId;
+
+#[derive(Default)]
+struct LockState {
+    readers: u32,
+    writer: bool,
+    writers_waiting: u32,
+}
+
+#[derive(Default)]
+struct FileLock {
+    state: Mutex<LockState>,
+    cond: Condvar,
+}
+
+impl FileLock {
+    fn lock_shared(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.writer || st.writers_waiting > 0 {
+            st = self.cond.wait(st).unwrap();
+        }
+        st.readers += 1;
+    }
+
+    fn lock_exclusive(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.writers_waiting += 1;
+        while st.writer || st.readers > 0 {
+            st = self.cond.wait(st).unwrap();
+        }
+        st.writers_waiting -= 1;
+        st.writer = true;
+    }
+
+    fn unlock(&self, exclusive: bool) {
+        let mut st = self.state.lock().unwrap();
+        if exclusive {
+            st.writer = false;
+        } else {
+            st.readers -= 1;
+        }
+        drop(st);
+        self.cond.notify_all();
+    }
+}
+
+#[derive(Default)]
+pub struct FileLocks {
+    locks: Mutex<HashMap<FileId, Arc<FileLock>>>,
+}
+
+impl FileLocks {
+    pub fn new() -> FileLocks {
+        FileLocks::default()
+    }
+
+    fn entry(&self, file: FileId) -> Arc<FileLock> {
+        let mut locks = self.locks.lock().unwrap();
+        Arc::clone(locks.entry(file).or_default())
+    }
+
+    /// Shared (read) lock held for the guard's lifetime.
+    pub fn read(&self, file: FileId) -> LockGuard {
+        let lock = self.entry(file);
+        lock.lock_shared();
+        LockGuard { lock, exclusive: false }
+    }
+
+    /// Exclusive (write) lock held for the guard's lifetime.
+    pub fn write(&self, file: FileId) -> LockGuard {
+        let lock = self.entry(file);
+        lock.lock_exclusive();
+        LockGuard { lock, exclusive: true }
+    }
+
+    /// GC the entry for a deleted file if nobody holds it.
+    pub fn forget(&self, file: FileId) {
+        let mut locks = self.locks.lock().unwrap();
+        if let Some(l) = locks.get(&file) {
+            if Arc::strong_count(l) == 1 {
+                locks.remove(&file);
+            }
+        }
+    }
+
+    pub fn tracked(&self) -> usize {
+        self.locks.lock().unwrap().len()
+    }
+}
+
+/// Owning RAII guard over one file's lock.
+pub struct LockGuard {
+    lock: Arc<FileLock>,
+    exclusive: bool,
+}
+
+impl LockGuard {
+    pub fn is_exclusive(&self) -> bool {
+        self.exclusive
+    }
+}
+
+impl Drop for LockGuard {
+    fn drop(&mut self) {
+        self.lock.unlock(self.exclusive);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn shared_readers_coexist() {
+        let locks = Arc::new(FileLocks::new());
+        let g1 = locks.read(1);
+        let g2 = locks.read(1);
+        assert!(!g1.is_exclusive());
+        drop(g1);
+        drop(g2);
+    }
+
+    #[test]
+    fn writer_excludes_readers() {
+        let locks = Arc::new(FileLocks::new());
+        let counter = Arc::new(AtomicU32::new(0));
+        let g = locks.write(1);
+        let l2 = Arc::clone(&locks);
+        let c2 = Arc::clone(&counter);
+        let t = std::thread::spawn(move || {
+            let _g = l2.read(1);
+            c2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(counter.load(Ordering::SeqCst), 0, "reader got in under writer");
+        drop(g);
+        t.join().unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn writer_waits_for_readers() {
+        let locks = Arc::new(FileLocks::new());
+        let counter = Arc::new(AtomicU32::new(0));
+        let g = locks.read(1);
+        let l2 = Arc::clone(&locks);
+        let c2 = Arc::clone(&counter);
+        let t = std::thread::spawn(move || {
+            let _g = l2.write(1);
+            c2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(counter.load(Ordering::SeqCst), 0, "writer got in under reader");
+        drop(g);
+        t.join().unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn independent_files_do_not_contend() {
+        let locks = Arc::new(FileLocks::new());
+        let _g1 = locks.write(1);
+        let _g2 = locks.write(2); // must not block
+        assert_eq!(locks.tracked(), 2);
+    }
+
+    #[test]
+    fn forget_gcs_unheld_entries() {
+        let locks = FileLocks::new();
+        drop(locks.write(5));
+        assert_eq!(locks.tracked(), 1);
+        locks.forget(5);
+        assert_eq!(locks.tracked(), 0);
+        // held entries survive
+        let g = locks.read(6);
+        locks.forget(6);
+        assert_eq!(locks.tracked(), 1);
+        drop(g);
+    }
+
+    #[test]
+    fn stress_many_threads_mixed() {
+        let locks = Arc::new(FileLocks::new());
+        let shared = Arc::new(Mutex::new(0i64));
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let locks = Arc::clone(&locks);
+            let shared = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || {
+                for j in 0..200 {
+                    if (i + j) % 3 == 0 {
+                        let _g = locks.write(1);
+                        let mut s = shared.lock().unwrap();
+                        *s += 1;
+                    } else {
+                        let _g = locks.read(1);
+                        let _ = *shared.lock().unwrap();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,724 @@
+//! The BServer — per-server coordinator of the BuffetFS protocol.
+//!
+//! Responsibilities (paper §3):
+//! * serve directory data (entries + 10-byte perm blobs) and register the
+//!   requesting client in the cache registry;
+//! * complete **deferred opens**: the first read/write carrying an
+//!   [`OpenCtx`] executes "the rest operations of open()" (Fig. 2(b));
+//! * run the §3.4 consistency protocol on permission / namespace changes:
+//!   push invalidations to every caching client, wait for all acks, only
+//!   then apply;
+//! * keep file locks *inside the server* (§4) — shared for reads,
+//!   exclusive for writes;
+//! * coordinate cross-server metadata (a child inode on this server whose
+//!   dirent lives on another) via peer RPCs.
+
+pub mod locks;
+pub mod openlist;
+pub mod registry;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::error::{FsError, FsResult};
+use crate::perm;
+use crate::store::fs::LocalFs;
+use crate::transport::{NotifyPush, Service, SharedTransport};
+use crate::types::{
+    AccessMask, ClientId, Credentials, FileId, FileKind, HostId, Ino, W_OK, X_OK,
+};
+use crate::wire::{Notify, OpenCtx, Request, Response};
+
+use self::locks::FileLocks;
+use self::openlist::{OpenList, OpenRec};
+use self::registry::CacheRegistry;
+
+/// Placement policy for new regular files created under this server's
+/// directories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Data lives on the same server as the parent directory.
+    Local,
+    /// Data spread across all servers by name hash (decentralized mode).
+    SpreadByNameHash { hosts: u16 },
+}
+
+#[derive(Default)]
+pub struct ServerStats {
+    pub deferred_opens: AtomicU64,
+    pub explicit_opens: AtomicU64,
+    pub invalidation_barriers: AtomicU64,
+    pub invalidations_pushed: AtomicU64,
+    pub cross_server_ops: AtomicU64,
+}
+
+pub struct BServer {
+    pub fs: LocalFs,
+    openlist: OpenList,
+    registry: CacheRegistry,
+    locks: FileLocks,
+    /// host → transport to the peer server (server↔server ops).
+    peers: RwLock<HashMap<HostId, SharedTransport>>,
+    /// client → push endpoint for invalidations.
+    pushers: RwLock<HashMap<ClientId, Arc<dyn NotifyPush>>>,
+    seq: AtomicU64,
+    placement: Placement,
+    pub stats: ServerStats,
+}
+
+impl BServer {
+    pub fn new(fs: LocalFs) -> Arc<BServer> {
+        Self::with_placement(fs, Placement::Local)
+    }
+
+    pub fn with_placement(fs: LocalFs, placement: Placement) -> Arc<BServer> {
+        Arc::new(BServer {
+            fs,
+            openlist: OpenList::new(),
+            registry: CacheRegistry::new(),
+            locks: FileLocks::new(),
+            peers: RwLock::new(HashMap::new()),
+            pushers: RwLock::new(HashMap::new()),
+            seq: AtomicU64::new(1),
+            placement,
+            stats: ServerStats::default(),
+        })
+    }
+
+    pub fn host(&self) -> HostId {
+        self.fs.host
+    }
+
+    /// Wire up a peer server (cluster bootstrap).
+    pub fn add_peer(&self, host: HostId, t: SharedTransport) {
+        self.peers.write().unwrap().insert(host, t);
+    }
+
+    /// Register a client's invalidation push endpoint (cluster bootstrap —
+    /// over TCP this is established by the Hello handshake).
+    pub fn register_pusher(&self, client: ClientId, p: Arc<dyn NotifyPush>) {
+        self.pushers.write().unwrap().insert(client, p);
+    }
+
+    pub fn drop_client(&self, client: ClientId) {
+        self.pushers.write().unwrap().remove(&client);
+        self.registry.drop_client(client);
+        self.openlist.drop_client(client);
+    }
+
+    pub fn open_files(&self) -> usize {
+        self.openlist.total_open()
+    }
+
+    pub fn openers_of(&self, file: FileId) -> usize {
+        self.openlist.openers(file)
+    }
+
+    pub fn clients_caching(&self, dir: FileId) -> Vec<ClientId> {
+        self.registry.peek(dir)
+    }
+
+    fn peer(&self, host: HostId) -> FsResult<SharedTransport> {
+        self.peers
+            .read()
+            .unwrap()
+            .get(&host)
+            .cloned()
+            .ok_or(FsError::NoSuchServer(host))
+    }
+
+    // -- §3.4: invalidate-then-apply ---------------------------------------
+
+    /// Push `Invalidate(dir)` to every client caching it; wait for all
+    /// acks. Pushes run in parallel (one thread per client) — the paper's
+    /// server fires RPCs to all related clients, then gathers responses.
+    fn invalidate_barrier(&self, dir: FileId) {
+        let clients = self.registry.take(dir);
+        if clients.is_empty() {
+            return;
+        }
+        self.stats.invalidation_barriers.fetch_add(1, Ordering::Relaxed);
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ino = self.fs.ino(dir);
+        let pushers = self.pushers.read().unwrap();
+        std::thread::scope(|scope| {
+            for c in &clients {
+                if let Some(p) = pushers.get(c) {
+                    let p = Arc::clone(p);
+                    self.stats.invalidations_pushed.fetch_add(1, Ordering::Relaxed);
+                    scope.spawn(move || {
+                        let _ = p.push(Notify::Invalidate { seq, dirs: vec![ino] });
+                    });
+                }
+            }
+        });
+    }
+
+    /// Invalidate the directory containing `file` (resolving a possibly
+    /// remote parent), before a permission change on `file` is applied.
+    fn invalidate_parent_of(&self, file: FileId) -> FsResult<Option<(Ino, String)>> {
+        let parent = self.fs.parent_of(file)?;
+        match &parent {
+            None => {}
+            Some((p, _name)) if p.host == self.fs.host => self.invalidate_barrier(p.file),
+            Some((p, _name)) => {
+                // parent dirent lives on another server: delegate the barrier
+                self.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+                self.peer(p.host)?.call(Request::PrepareInvalidate { dir: *p })?;
+            }
+        }
+        Ok(parent)
+    }
+
+    /// Sync the 10-byte dirent blob after a perm change (remote parents
+    /// via peer RPC; local parents were synced inside LocalFs).
+    fn sync_remote_dirent(
+        &self,
+        parent: &Option<(Ino, String)>,
+        perm: crate::types::PermBlob,
+    ) -> FsResult<()> {
+        if let Some((p, name)) = parent {
+            if p.host != self.fs.host {
+                self.peer(p.host)?.call(Request::UpdateDirentPerm {
+                    dir: *p,
+                    name: name.clone(),
+                    perm,
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    // -- deferred open (Step 2) ---------------------------------------------
+
+    fn complete_open(&self, file: FileId, ctx: &OpenCtx, deferred: bool) {
+        let inserted = self.openlist.record(
+            file,
+            OpenRec { client: ctx.client, handle: ctx.handle, flags: ctx.flags, deferred },
+        );
+        if inserted && deferred {
+            self.stats.deferred_opens.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    // -- server-side permission enforcement (mutations only; the read
+    //    path's check is the *client's* job in BuffetFS) ---------------------
+
+    fn require_dir_access(&self, dir: FileId, cred: &Credentials, want: AccessMask) -> FsResult<()> {
+        let attr = self.fs.getattr(dir)?;
+        if attr.kind != FileKind::Directory {
+            return Err(FsError::NotADirectory);
+        }
+        perm::require_access(&attr.perm, cred, want)
+    }
+
+    fn require_owner(&self, file: FileId, cred: &Credentials) -> FsResult<()> {
+        let attr = self.fs.getattr(file)?;
+        if cred.uid == 0 || cred.uid == attr.perm.uid {
+            Ok(())
+        } else {
+            Err(FsError::PermissionDenied)
+        }
+    }
+
+    // -- request handlers -----------------------------------------------------
+
+    fn handle_inner(&self, req: Request) -> FsResult<Response> {
+        match req {
+            Request::Hello { client } => {
+                let _ = client;
+                Ok(Response::Unit)
+            }
+            Request::Lookup { dir, name, cred } => {
+                let dir = self.fs.validate(dir)?;
+                self.require_dir_access(dir, &cred, AccessMask::EXEC)?;
+                Ok(Response::Entry(self.fs.lookup(dir, &name)?))
+            }
+            Request::ReadDir { dir, client, register, cred } => {
+                let dir = self.fs.validate(dir)?;
+                self.require_dir_access(dir, &cred, AccessMask::READ)?;
+                // shared dir lock: the registration and the listing must
+                // be atomic w.r.t. a concurrent mutation's
+                // invalidate-then-apply sequence, or a client could
+                // install a listing that predates a change it was never
+                // told about
+                let _g = self.locks.read(dir);
+                if register {
+                    self.registry.register(dir, client);
+                }
+                let (attr, entries) = self.fs.readdir(dir)?;
+                Ok(Response::Entries { dir: attr, entries })
+            }
+            Request::GetAttr { ino } => {
+                let file = self.fs.validate(ino)?;
+                Ok(Response::AttrR(self.fs.getattr(file)?))
+            }
+            Request::OpenByName { dir, name, flags, cred, client, handle, want_inline } => {
+                // intent form (baseline compatibility): resolve + open
+                let dir_file = self.fs.validate(dir)?;
+                self.require_dir_access(dir_file, &cred, AccessMask(X_OK))?;
+                let entry = self.fs.lookup(dir_file, &name)?;
+                self.handle_inner(Request::Open { ino: entry.ino, flags, cred, client, handle, want_inline })
+            }
+            Request::Open { ino, flags, cred, client, handle, want_inline } => {
+                // Explicit open: only the Lustre baselines use this against
+                // an MDS; a BServer still honours it (e.g. fallback paths).
+                let file = self.fs.validate(ino)?;
+                let attr = self.fs.getattr(file)?;
+                perm::require_access(&attr.perm, &cred, flags.access_mask())?;
+                self.complete_open(file, &OpenCtx { client, handle, flags, cred }, false);
+                self.stats.explicit_opens.fetch_add(1, Ordering::Relaxed);
+                let _ = want_inline; // BServers never inline (DoM is MDS-only)
+                Ok(Response::Opened { attr, inline: None })
+            }
+            Request::Read { ino, off, len, open_ctx } => {
+                let file = self.fs.validate(ino)?;
+                if let Some(ctx) = &open_ctx {
+                    self.complete_open(file, ctx, true);
+                }
+                let _g = self.locks.read(file);
+                let (data, size) = self.fs.read(file, off, len)?;
+                Ok(Response::Data { data, size })
+            }
+            Request::Write { ino, off, data, open_ctx } => {
+                let file = self.fs.validate(ino)?;
+                if let Some(ctx) = &open_ctx {
+                    self.complete_open(file, ctx, true);
+                }
+                let _g = self.locks.write(file);
+                let (written, new_size) = self.fs.write(file, off, &data)?;
+                Ok(Response::Written { written, new_size })
+            }
+            Request::Close { ino, client, handle } => {
+                let file = self.fs.validate(ino)?;
+                self.openlist.close(file, client, handle);
+                Ok(Response::Unit)
+            }
+            Request::Create { dir, name, mode, kind, cred, client } => {
+                let dir_file = self.fs.validate(dir)?;
+                self.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+                // exclusive dir lock across invalidate+insert (§3.4:
+                // invalidate first, THEN apply — atomically vs readers)
+                let _g = self.locks.write(dir_file);
+                // a new entry changes the directory other clients cache
+                self.invalidate_barrier(dir_file);
+                let entry = match (self.placement, kind) {
+                    (Placement::SpreadByNameHash { hosts }, FileKind::Regular) => {
+                        let target = (name_hash(&name) % hosts as u64) as HostId;
+                        if target == self.fs.host {
+                            self.fs.create(dir_file, &name, mode, kind, cred.uid, cred.gid)?
+                        } else {
+                            // allocate the object on the target server, then
+                            // hang its dirent (with the authoritative perm
+                            // blob) off our directory
+                            self.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+
+                            let resp = self.peer(target)?.call(Request::CreateOrphan {
+                                parent: self.fs.ino(dir_file),
+                                name: name.clone(),
+                                mode,
+                                kind,
+                                uid: cred.uid,
+                                gid: cred.gid,
+                            })?;
+                            let _ = client;
+                            match resp {
+                                Response::Created(e) => {
+                                    self.fs.insert_remote_entry(dir_file, e.clone())?;
+                                    e
+                                }
+                                other => {
+                                    return Err(FsError::Protocol(format!(
+                                        "peer create returned {other:?}"
+                                    )))
+                                }
+                            }
+                        }
+                    }
+                    _ => self.fs.create(dir_file, &name, mode, kind, cred.uid, cred.gid)?,
+                };
+                Ok(Response::Created(entry))
+            }
+            Request::CreateOrphan { parent, name, mode, kind, uid, gid } => {
+                // server↔server: allocate a local object whose dirent lives
+                // on the calling (directory-owning) server
+                let entry = self.fs.create_orphan(parent, &name, mode, kind, uid, gid)?;
+                Ok(Response::Created(entry))
+            }
+            Request::Mkdir { dir, name, mode, cred } => {
+                let dir_file = self.fs.validate(dir)?;
+                self.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+                let _g = self.locks.write(dir_file);
+                self.invalidate_barrier(dir_file);
+                let entry =
+                    self.fs.create(dir_file, &name, mode, FileKind::Directory, cred.uid, cred.gid)?;
+                Ok(Response::Created(entry))
+            }
+            Request::Unlink { dir, name, cred } => {
+                let dir_file = self.fs.validate(dir)?;
+                self.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+                let _g = self.locks.write(dir_file);
+                self.invalidate_barrier(dir_file);
+                let entry = self.fs.unlink(dir_file, &name)?;
+                if entry.ino.host != self.fs.host {
+                    // remote data object: ask its server to drop it
+                    self.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+                    let _ = self.peer(entry.ino.host)?.call(Request::DropObject { ino: entry.ino });
+                } else {
+                    self.locks.forget(entry.ino.file);
+                }
+                Ok(Response::Unit)
+            }
+            Request::DropObject { ino } => {
+                let file = self.fs.validate(ino)?;
+                self.fs.drop_local_object(file)?;
+                self.locks.forget(file);
+                Ok(Response::Unit)
+            }
+            Request::Rmdir { dir, name, cred } => {
+                let dir_file = self.fs.validate(dir)?;
+                self.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+                let _g = self.locks.write(dir_file);
+                self.invalidate_barrier(dir_file);
+                let entry = self.fs.rmdir(dir_file, &name)?;
+                // the removed dir itself may be cached by clients
+                if entry.ino.host == self.fs.host {
+                    self.invalidate_barrier(entry.ino.file);
+                }
+                Ok(Response::Unit)
+            }
+            Request::Rename { sdir, sname, ddir, dname, cred } => {
+                let s = self.fs.validate(sdir)?;
+                let d = self.fs.validate(ddir)?;
+                self.require_dir_access(s, &cred, AccessMask(W_OK | X_OK))?;
+                if s != d {
+                    self.require_dir_access(d, &cred, AccessMask(W_OK | X_OK))?;
+                }
+                let _gs = self.locks.write(s);
+                let _gd = if s != d { Some(self.locks.write(d)) } else { None };
+                self.invalidate_barrier(s);
+                if s != d {
+                    self.invalidate_barrier(d);
+                }
+                let entry = self.fs.rename(s, sname.as_str(), d, dname.as_str())?;
+                Ok(Response::Created(entry))
+            }
+            Request::Chmod { ino, mode, cred } => {
+                let file = self.fs.validate(ino)?;
+                self.require_owner(file, &cred)?;
+                // lock the (local) parent dir across invalidate+apply
+                let _g = match self.fs.parent_of(file)? {
+                    Some((p, _)) if p.host == self.fs.host => Some(self.locks.write(p.file)),
+                    _ => None,
+                };
+                // §3.4: invalidate every caching client *first*, then apply
+                let parent = self.invalidate_parent_of(file)?;
+                // if the target is itself a cached directory, its node
+                // carries perms too
+                if self.fs.getattr(file)?.kind == FileKind::Directory {
+                    self.invalidate_barrier(file);
+                }
+                let (perm_blob, _) = self.fs.chmod_apply(file, mode)?;
+                self.sync_remote_dirent(&parent, perm_blob)?;
+                Ok(Response::Unit)
+            }
+            Request::Chown { ino, uid, gid, cred } => {
+                let file = self.fs.validate(ino)?;
+                if cred.uid != 0 {
+                    return Err(FsError::PermissionDenied);
+                }
+                let _g = match self.fs.parent_of(file)? {
+                    Some((p, _)) if p.host == self.fs.host => Some(self.locks.write(p.file)),
+                    _ => None,
+                };
+                let parent = self.invalidate_parent_of(file)?;
+                if self.fs.getattr(file)?.kind == FileKind::Directory {
+                    self.invalidate_barrier(file);
+                }
+                let (perm_blob, _) = self.fs.chown_apply(file, uid, gid)?;
+                self.sync_remote_dirent(&parent, perm_blob)?;
+                Ok(Response::Unit)
+            }
+            Request::Truncate { ino, size, cred } => {
+                let file = self.fs.validate(ino)?;
+                let attr = self.fs.getattr(file)?;
+                perm::require_access(&attr.perm, &cred, AccessMask::WRITE)?;
+                let _g = self.locks.write(file);
+                self.fs.truncate(file, size)?;
+                Ok(Response::Unit)
+            }
+            Request::Statfs { host } => {
+                if host != self.fs.host {
+                    return Err(FsError::NoSuchServer(host));
+                }
+                let (files, bytes) = self.fs.statfs();
+                Ok(Response::Statfs { files, bytes })
+            }
+            Request::PrepareInvalidate { dir } => {
+                let dir_file = self.fs.validate(dir)?;
+                let _g = self.locks.write(dir_file);
+                self.invalidate_barrier(dir_file);
+                Ok(Response::Unit)
+            }
+            Request::UpdateDirentPerm { dir, name, perm } => {
+                let dir_file = self.fs.validate(dir)?;
+                self.fs.set_dirent_perm(dir_file, &name, perm)?;
+                Ok(Response::Unit)
+            }
+        }
+    }
+}
+
+pub(crate) fn name_hash(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl Service for BServer {
+    fn handle(&self, req: Request) -> Response {
+        match self.handle_inner(req) {
+            Ok(resp) => resp,
+            Err(e) => Response::Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::data::MemData;
+    use crate::store::inode::ROOT_FILE_ID;
+    use crate::types::{DirEntry, OpenFlags};
+    use crate::wire::NotifyAck;
+
+    fn server() -> Arc<BServer> {
+        BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())))
+    }
+
+    fn root() -> Ino {
+        Ino::new(0, 0, ROOT_FILE_ID)
+    }
+
+    fn cred() -> Credentials {
+        Credentials::root()
+    }
+
+    fn create(s: &BServer, name: &str, mode: u16) -> DirEntry {
+        match s.handle(Request::Create {
+            dir: root(),
+            name: name.into(),
+            mode,
+            kind: FileKind::Regular,
+            cred: cred(),
+            client: 1,
+        }) {
+            Response::Created(e) => e,
+            other => panic!("create: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deferred_open_completes_on_first_read() {
+        let s = server();
+        let e = create(&s, "f", 0o644);
+        s.handle(Request::Write { ino: e.ino, off: 0, data: vec![7; 16], open_ctx: None });
+        let ctx = OpenCtx { client: 1, handle: 42, flags: OpenFlags::RDONLY, cred: cred() };
+        let r = s.handle(Request::Read { ino: e.ino, off: 0, len: 16, open_ctx: Some(ctx.clone()) });
+        assert!(matches!(r, Response::Data { .. }));
+        assert_eq!(s.openers_of(e.ino.file), 1);
+        // second read with same ctx: idempotent
+        s.handle(Request::Read { ino: e.ino, off: 0, len: 16, open_ctx: Some(ctx) });
+        assert_eq!(s.openers_of(e.ino.file), 1);
+        assert_eq!(s.stats.deferred_opens.load(Ordering::Relaxed), 1);
+        // close removes the record
+        s.handle(Request::Close { ino: e.ino, client: 1, handle: 42 });
+        assert_eq!(s.openers_of(e.ino.file), 0);
+    }
+
+    #[test]
+    fn explicit_open_checks_permission_server_side() {
+        let s = server();
+        let e = create(&s, "secret", 0o600);
+        // owner is root (cred()); a stranger must be denied
+        let stranger = Credentials::new(7, 7);
+        let r = s.handle(Request::Open {
+            ino: e.ino,
+            flags: OpenFlags::RDONLY,
+            cred: stranger,
+            client: 2,
+            handle: 1,
+            want_inline: false,
+        });
+        assert_eq!(r, Response::Err(FsError::PermissionDenied));
+        let r = s.handle(Request::Open {
+            ino: e.ino,
+            flags: OpenFlags::RDONLY,
+            cred: cred(),
+            client: 2,
+            handle: 1,
+            want_inline: false,
+        });
+        assert!(matches!(r, Response::Opened { inline: None, .. }));
+        assert_eq!(s.stats.explicit_opens.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn readdir_registers_cache_and_chmod_invalidates() {
+        struct Recorder(std::sync::Mutex<Vec<(u64, Vec<Ino>)>>);
+        impl NotifyPush for Recorder {
+            fn push(&self, n: Notify) -> FsResult<NotifyAck> {
+                let Notify::Invalidate { seq, dirs } = n;
+                self.0.lock().unwrap().push((seq, dirs));
+                Ok(NotifyAck { client: 9, seq })
+            }
+        }
+        let s = server();
+        let e = create(&s, "f", 0o644);
+        let rec = Arc::new(Recorder(std::sync::Mutex::new(Vec::new())));
+        s.register_pusher(9, rec.clone());
+        // client 9 caches the root directory
+        let r = s.handle(Request::ReadDir { dir: root(), client: 9, register: true, cred: cred() });
+        assert!(matches!(r, Response::Entries { .. }));
+        assert_eq!(s.clients_caching(ROOT_FILE_ID), vec![9]);
+        // chmod triggers the invalidate-then-apply barrier
+        let r = s.handle(Request::Chmod { ino: e.ino, mode: 0o600, cred: cred() });
+        assert_eq!(r, Response::Unit);
+        {
+            let pushed = rec.0.lock().unwrap();
+            assert_eq!(pushed.len(), 1);
+            assert_eq!(pushed[0].1, vec![root()]);
+        }
+        // registry was taken: nobody caches root now
+        assert!(s.clients_caching(ROOT_FILE_ID).is_empty());
+        // and the dirent blob reflects the change
+        match s.handle(Request::Lookup { dir: root(), name: "f".into(), cred: cred() }) {
+            Response::Entry(de) => assert_eq!(de.perm.mode.0, 0o600),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn chmod_requires_owner() {
+        let s = server();
+        // root dir is 0755 root:root; make it world-writable so uid 5 can create
+        s.handle(Request::Chmod { ino: root(), mode: 0o777, cred: cred() });
+        let r = s.handle(Request::Create {
+            dir: root(),
+            name: "owned".into(),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: Credentials::new(5, 5),
+            client: 1,
+        });
+        let e = match r {
+            Response::Created(e) => e,
+            other => panic!("{other:?}"),
+        };
+        let r = s.handle(Request::Chmod { ino: e.ino, mode: 0o777, cred: Credentials::new(6, 6) });
+        assert_eq!(r, Response::Err(FsError::PermissionDenied));
+        let r = s.handle(Request::Chmod { ino: e.ino, mode: 0o640, cred: Credentials::new(5, 5) });
+        assert_eq!(r, Response::Unit);
+    }
+
+    #[test]
+    fn create_needs_wx_on_directory() {
+        let s = server();
+        // root dir is 0755 root:root → uid 5 cannot create
+        let r = s.handle(Request::Create {
+            dir: root(),
+            name: "nope".into(),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: Credentials::new(5, 5),
+            client: 1,
+        });
+        assert_eq!(r, Response::Err(FsError::PermissionDenied));
+    }
+
+    #[test]
+    fn stale_version_rejected() {
+        let s = server();
+        let r = s.handle(Request::GetAttr { ino: Ino::new(0, 9, ROOT_FILE_ID) });
+        assert_eq!(r, Response::Err(FsError::Stale));
+        let r = s.handle(Request::GetAttr { ino: Ino::new(3, 0, ROOT_FILE_ID) });
+        assert_eq!(r, Response::Err(FsError::NoSuchServer(3)));
+    }
+
+    #[test]
+    fn unlink_removes_object() {
+        let s = server();
+        let e = create(&s, "f", 0o644);
+        s.handle(Request::Write { ino: e.ino, off: 0, data: vec![7; 64], open_ctx: None });
+        let r = s.handle(Request::Unlink { dir: root(), name: "f".into(), cred: cred() });
+        assert_eq!(r, Response::Unit);
+        let r = s.handle(Request::GetAttr { ino: e.ino });
+        assert_eq!(r, Response::Err(FsError::NotFound));
+    }
+
+    #[test]
+    fn cross_server_create_and_chmod_via_peers() {
+        // host 0 owns the directory; host 1 stores spread files
+        let s0 = BServer::with_placement(
+            LocalFs::new(0, 0, Box::new(MemData::new())),
+            Placement::SpreadByNameHash { hosts: 2 },
+        );
+        let s1 = BServer::with_placement(
+            LocalFs::new(1, 0, Box::new(MemData::new())),
+            Placement::SpreadByNameHash { hosts: 2 },
+        );
+        // direct (zero-latency) peer wiring
+        let m = Arc::new(crate::metrics::RpcMetrics::new());
+        let net = Arc::new(crate::simnet::LatencyModel::new(crate::simnet::NetConfig::zero()));
+        let t01: SharedTransport =
+            crate::transport::chan::ChanTransport::new(s1.clone(), net.clone(), m.clone());
+        let t10: SharedTransport =
+            crate::transport::chan::ChanTransport::new(s0.clone(), net.clone(), m.clone());
+        s0.add_peer(1, t01);
+        s1.add_peer(0, t10);
+
+        // find a name that hashes to host 1
+        let name = (0..100)
+            .map(|i| format!("spread{i}.dat"))
+            .find(|n| name_hash(n) % 2 == 1)
+            .unwrap();
+        let r = s0.handle(Request::Create {
+            dir: root(),
+            name: name.clone(),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: cred(),
+            client: 1,
+        });
+        let e = match r {
+            Response::Created(e) => e,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(e.ino.host, 1, "object must live on host 1");
+        // dirent on host 0 points at it
+        match s0.handle(Request::Lookup { dir: root(), name: name.clone(), cred: cred() }) {
+            Response::Entry(de) => assert_eq!(de.ino, e.ino),
+            other => panic!("{other:?}"),
+        }
+        // data I/O goes straight to host 1 (one RPC — the paper's point)
+        let r = s1.handle(Request::Write { ino: e.ino, off: 0, data: vec![1; 8], open_ctx: None });
+        assert!(matches!(r, Response::Written { .. }));
+        // chmod goes to the *owner* (host 1) and must sync host 0's dirent
+        let r = s1.handle(Request::Chmod { ino: e.ino, mode: 0o600, cred: cred() });
+        assert_eq!(r, Response::Unit);
+        match s0.handle(Request::Lookup { dir: root(), name: name.clone(), cred: cred() }) {
+            Response::Entry(de) => assert_eq!(de.perm.mode.0, 0o600),
+            other => panic!("{other:?}"),
+        }
+        // unlink from host 0 drops the remote object on host 1
+        let r = s0.handle(Request::Unlink { dir: root(), name, cred: cred() });
+        assert_eq!(r, Response::Unit);
+        let r = s1.handle(Request::GetAttr { ino: e.ino });
+        assert_eq!(r, Response::Err(FsError::NotFound));
+    }
+}

@@ -1,0 +1,148 @@
+//! The opened-file list (§3.1): "for the open() operation, a BServer
+//! maintains a list of opened files to ensure data consistency for
+//! concurrent file modifications from multiple clients."
+//!
+//! BuffetFS entries arrive *deferred* — the first read/write carrying an
+//! [`crate::wire::OpenCtx`] completes Step 2 of the dis-aggregated open.
+//! Completion is idempotent per (client, handle): retransmits and the
+//! read-after-read case must not duplicate records.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use crate::types::{ClientId, FileId, OpenFlags};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OpenRec {
+    pub client: ClientId,
+    pub handle: u64,
+    pub flags: OpenFlags,
+    /// Deferred (true) means the record was created by an OpenCtx
+    /// piggy-back rather than an explicit Open RPC.
+    pub deferred: bool,
+}
+
+#[derive(Default)]
+pub struct OpenList {
+    open: RwLock<HashMap<FileId, Vec<OpenRec>>>,
+}
+
+impl OpenList {
+    pub fn new() -> OpenList {
+        OpenList::default()
+    }
+
+    /// Record an open (idempotent per (client, handle)). Returns true if
+    /// a new record was inserted.
+    pub fn record(&self, file: FileId, rec: OpenRec) -> bool {
+        let mut open = self.open.write().unwrap();
+        let v = open.entry(file).or_default();
+        if v.iter().any(|r| r.client == rec.client && r.handle == rec.handle) {
+            return false;
+        }
+        v.push(rec);
+        true
+    }
+
+    /// Remove one open record (the close wrap-up). Returns true if found.
+    pub fn close(&self, file: FileId, client: ClientId, handle: u64) -> bool {
+        let mut open = self.open.write().unwrap();
+        if let Some(v) = open.get_mut(&file) {
+            let before = v.len();
+            v.retain(|r| !(r.client == client && r.handle == handle));
+            let removed = v.len() < before;
+            if v.is_empty() {
+                open.remove(&file);
+            }
+            return removed;
+        }
+        false
+    }
+
+    /// Drop every record belonging to a client (client crash/unmount).
+    pub fn drop_client(&self, client: ClientId) -> usize {
+        let mut open = self.open.write().unwrap();
+        let mut dropped = 0;
+        open.retain(|_, v| {
+            let before = v.len();
+            v.retain(|r| r.client != client);
+            dropped += before - v.len();
+            !v.is_empty()
+        });
+        dropped
+    }
+
+    pub fn openers(&self, file: FileId) -> usize {
+        self.open.read().unwrap().get(&file).map_or(0, |v| v.len())
+    }
+
+    pub fn is_open(&self, file: FileId) -> bool {
+        self.openers(file) > 0
+    }
+
+    /// Any opener holding write intent? (used to decide lock strength)
+    pub fn write_openers(&self, file: FileId) -> usize {
+        self.open
+            .read()
+            .unwrap()
+            .get(&file)
+            .map_or(0, |v| v.iter().filter(|r| r.flags.write || r.flags.append).count())
+    }
+
+    pub fn total_open(&self) -> usize {
+        self.open.read().unwrap().values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(client: ClientId, handle: u64, write: bool) -> OpenRec {
+        OpenRec {
+            client,
+            handle,
+            flags: if write { OpenFlags::RDWR } else { OpenFlags::RDONLY },
+            deferred: true,
+        }
+    }
+
+    #[test]
+    fn record_and_close() {
+        let l = OpenList::new();
+        assert!(l.record(1, rec(1, 100, false)));
+        assert!(l.record(1, rec(2, 200, true)));
+        assert_eq!(l.openers(1), 2);
+        assert_eq!(l.write_openers(1), 1);
+        assert!(l.close(1, 1, 100));
+        assert!(!l.close(1, 1, 100), "double close must report missing");
+        assert_eq!(l.openers(1), 1);
+        assert!(l.is_open(1));
+        assert!(l.close(1, 2, 200));
+        assert!(!l.is_open(1));
+    }
+
+    #[test]
+    fn completion_is_idempotent() {
+        let l = OpenList::new();
+        assert!(l.record(7, rec(1, 5, false)));
+        // the same (client, handle) re-sent (e.g. second read piggy-back)
+        assert!(!l.record(7, rec(1, 5, false)));
+        assert_eq!(l.openers(7), 1);
+        // same client, different handle = a second open of the same file
+        assert!(l.record(7, rec(1, 6, false)));
+        assert_eq!(l.openers(7), 2);
+    }
+
+    #[test]
+    fn drop_client_cleans_up() {
+        let l = OpenList::new();
+        l.record(1, rec(1, 1, false));
+        l.record(1, rec(2, 2, false));
+        l.record(2, rec(1, 3, true));
+        assert_eq!(l.drop_client(1), 2);
+        assert_eq!(l.total_open(), 1);
+        assert!(l.is_open(1));
+        assert!(!l.is_open(2));
+    }
+}

@@ -1,0 +1,91 @@
+//! The client cache registry (§3.4): "for each directory, a BServer
+//! records a list of clients that cache the directory data", giving the
+//! server "the big picture of all the related clients" when a permission
+//! changes.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::RwLock;
+
+use crate::types::{ClientId, FileId};
+
+#[derive(Default)]
+pub struct CacheRegistry {
+    caching: RwLock<HashMap<FileId, HashSet<ClientId>>>,
+}
+
+impl CacheRegistry {
+    pub fn new() -> CacheRegistry {
+        CacheRegistry::default()
+    }
+
+    /// Client now caches this directory (on ReadDir with register=true).
+    pub fn register(&self, dir: FileId, client: ClientId) {
+        self.caching.write().unwrap().entry(dir).or_default().insert(client);
+    }
+
+    /// Clients currently caching `dir`. The set is *taken*: after an
+    /// invalidation they no longer cache it until the next ReadDir.
+    pub fn take(&self, dir: FileId) -> Vec<ClientId> {
+        let mut caching = self.caching.write().unwrap();
+        caching.remove(&dir).map(|s| {
+            let mut v: Vec<ClientId> = s.into_iter().collect();
+            v.sort_unstable();
+            v
+        }).unwrap_or_default()
+    }
+
+    /// Non-destructive view (metrics/diagnostics).
+    pub fn peek(&self, dir: FileId) -> Vec<ClientId> {
+        let caching = self.caching.read().unwrap();
+        caching.get(&dir).map(|s| {
+            let mut v: Vec<ClientId> = s.iter().copied().collect();
+            v.sort_unstable();
+            v
+        }).unwrap_or_default()
+    }
+
+    /// Forget a client entirely (unmount/crash).
+    pub fn drop_client(&self, client: ClientId) {
+        let mut caching = self.caching.write().unwrap();
+        caching.retain(|_, s| {
+            s.remove(&client);
+            !s.is_empty()
+        });
+    }
+
+    pub fn dirs_tracked(&self) -> usize {
+        self.caching.read().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_take_cycle() {
+        let r = CacheRegistry::new();
+        r.register(1, 10);
+        r.register(1, 11);
+        r.register(1, 10); // duplicate registration is fine
+        r.register(2, 12);
+        assert_eq!(r.peek(1), vec![10, 11]);
+        assert_eq!(r.take(1), vec![10, 11]);
+        // taken: nobody caches dir 1 anymore
+        assert!(r.take(1).is_empty());
+        assert_eq!(r.peek(2), vec![12]);
+        assert_eq!(r.dirs_tracked(), 1);
+    }
+
+    #[test]
+    fn drop_client_removes_everywhere() {
+        let r = CacheRegistry::new();
+        r.register(1, 10);
+        r.register(2, 10);
+        r.register(2, 11);
+        r.drop_client(10);
+        assert!(r.peek(1).is_empty());
+        assert_eq!(r.peek(2), vec![11]);
+        assert_eq!(r.dirs_tracked(), 1);
+    }
+}

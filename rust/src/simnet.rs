@@ -1,0 +1,166 @@
+//! Network latency model — the InfiniBand-testbed substitution.
+//!
+//! The paper's effect is `RPC count × round-trip time`; everything we must
+//! preserve is the *relative* cost of one round trip vs the rest of the
+//! stack. Each one-way message costs
+//!
+//! `one_way_us + per_kb_us × ⌈bytes/1024⌉ + U[0, jitter_us)`
+//!
+//! slept for real on the calling thread (a blocked RPC blocks the calling
+//! "process", exactly like the paper's synchronous RPCs). Jitter is drawn
+//! from a seeded xorshift so runs are reproducible. `ablation_rtt` sweeps
+//! `one_way_us` to show where BuffetFS's advantage comes from.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::XorShift;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetConfig {
+    /// Base one-way latency in microseconds (RTT = 2×).
+    pub one_way_us: u64,
+    /// Serialization/bandwidth cost per KiB, microseconds.
+    pub per_kb_us: u64,
+    /// Uniform jitter bound in microseconds.
+    pub jitter_us: u64,
+    /// Jitter RNG seed.
+    pub seed: u64,
+}
+
+impl NetConfig {
+    /// IB-verbs-flavoured testbed defaults (Lustre RPC ≈ hundreds of µs).
+    pub fn infiniband() -> NetConfig {
+        NetConfig { one_way_us: 100, per_kb_us: 1, jitter_us: 10, seed: 42 }
+    }
+    /// Commodity 10 GbE LAN.
+    pub fn lan() -> NetConfig {
+        NetConfig { one_way_us: 250, per_kb_us: 2, jitter_us: 40, seed: 42 }
+    }
+    /// Cross-site WAN.
+    pub fn wan() -> NetConfig {
+        NetConfig { one_way_us: 5000, per_kb_us: 2, jitter_us: 500, seed: 42 }
+    }
+    /// No injected latency (pure coordinator-overhead measurements).
+    pub fn zero() -> NetConfig {
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 42 }
+    }
+
+    pub fn with_one_way_us(mut self, us: u64) -> NetConfig {
+        self.one_way_us = us;
+        self
+    }
+    pub fn with_seed(mut self, seed: u64) -> NetConfig {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Shared latency model for one link (client↔server pair or whole fabric).
+pub struct LatencyModel {
+    cfg: NetConfig,
+    rng: Mutex<XorShift>,
+    messages: AtomicU64,
+    bytes: AtomicU64,
+    slept_us: AtomicU64,
+}
+
+impl LatencyModel {
+    pub fn new(cfg: NetConfig) -> LatencyModel {
+        LatencyModel {
+            cfg,
+            rng: Mutex::new(XorShift::new(cfg.seed)),
+            messages: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            slept_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> NetConfig {
+        self.cfg
+    }
+
+    /// Compute the one-way delay for a message of `bytes` (no sleep).
+    pub fn one_way_delay(&self, bytes: usize) -> Duration {
+        let kb = (bytes as u64).div_ceil(1024);
+        let jitter = if self.cfg.jitter_us > 0 {
+            self.rng.lock().unwrap().below(self.cfg.jitter_us)
+        } else {
+            0
+        };
+        Duration::from_micros(self.cfg.one_way_us + self.cfg.per_kb_us * kb + jitter)
+    }
+
+    /// Sleep one one-way delay on the calling thread and account it.
+    pub fn transmit(&self, bytes: usize) {
+        let d = self.one_way_delay(bytes);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.slept_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+        crate::util::precise_sleep(d);
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+    pub fn slept_us(&self) -> u64 {
+        self.slept_us.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_scales_with_bytes() {
+        let m = LatencyModel::new(NetConfig { one_way_us: 100, per_kb_us: 10, jitter_us: 0, seed: 1 });
+        assert_eq!(m.one_way_delay(0), Duration::from_micros(100));
+        assert_eq!(m.one_way_delay(1), Duration::from_micros(110));
+        assert_eq!(m.one_way_delay(1024), Duration::from_micros(110));
+        assert_eq!(m.one_way_delay(1025), Duration::from_micros(120));
+        assert_eq!(m.one_way_delay(4096), Duration::from_micros(140));
+    }
+
+    #[test]
+    fn jitter_bounded_and_deterministic() {
+        let cfg = NetConfig { one_way_us: 50, per_kb_us: 0, jitter_us: 20, seed: 9 };
+        let a: Vec<Duration> = {
+            let m = LatencyModel::new(cfg);
+            (0..100).map(|_| m.one_way_delay(0)).collect()
+        };
+        for d in &a {
+            assert!(*d >= Duration::from_micros(50) && *d < Duration::from_micros(70));
+        }
+        let b: Vec<Duration> = {
+            let m = LatencyModel::new(cfg);
+            (0..100).map(|_| m.one_way_delay(0)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_config_never_sleeps() {
+        let m = LatencyModel::new(NetConfig::zero());
+        let t0 = std::time::Instant::now();
+        for _ in 0..1000 {
+            m.transmit(4096);
+        }
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        assert_eq!(m.messages(), 1000);
+        assert_eq!(m.bytes_sent(), 4096 * 1000);
+    }
+
+    #[test]
+    fn transmit_accounts_sleep_time() {
+        let m = LatencyModel::new(NetConfig { one_way_us: 200, per_kb_us: 0, jitter_us: 0, seed: 1 });
+        let t0 = std::time::Instant::now();
+        m.transmit(10);
+        assert!(t0.elapsed() >= Duration::from_micros(200));
+        assert_eq!(m.slept_us(), 200);
+    }
+}

@@ -1,0 +1,234 @@
+//! Object-store backends: in-memory (tests/benches) and on-disk (real
+//! deployment; one file per object under a root directory).
+
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::error::FsResult;
+use crate::store::ObjectStore;
+use crate::types::FileId;
+
+// ---------------------------------------------------------------------------
+// MemData
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+pub struct MemData {
+    objects: RwLock<HashMap<FileId, Vec<u8>>>,
+    bytes: AtomicU64,
+}
+
+impl MemData {
+    pub fn new() -> MemData {
+        MemData::default()
+    }
+}
+
+impl ObjectStore for MemData {
+    fn read(&self, id: FileId, off: u64, len: u32) -> FsResult<Vec<u8>> {
+        let objects = self.objects.read().unwrap();
+        let data = objects.get(&id).map(|v| v.as_slice()).unwrap_or(&[]);
+        let off = off as usize;
+        if off >= data.len() {
+            return Ok(Vec::new());
+        }
+        let end = (off + len as usize).min(data.len());
+        Ok(data[off..end].to_vec())
+    }
+
+    fn write(&self, id: FileId, off: u64, data: &[u8]) -> FsResult<u64> {
+        let mut objects = self.objects.write().unwrap();
+        let obj = objects.entry(id).or_default();
+        let off = off as usize;
+        let needed = off + data.len();
+        let before = obj.len();
+        if obj.len() < needed {
+            obj.resize(needed, 0);
+        }
+        obj[off..needed].copy_from_slice(data);
+        if obj.len() > before {
+            self.bytes.fetch_add((obj.len() - before) as u64, Ordering::Relaxed);
+        }
+        Ok(obj.len() as u64)
+    }
+
+    fn truncate(&self, id: FileId, size: u64) -> FsResult<()> {
+        let mut objects = self.objects.write().unwrap();
+        let obj = objects.entry(id).or_default();
+        let before = obj.len() as u64;
+        obj.resize(size as usize, 0);
+        if size >= before {
+            self.bytes.fetch_add(size - before, Ordering::Relaxed);
+        } else {
+            self.bytes.fetch_sub(before - size, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn delete(&self, id: FileId) -> FsResult<()> {
+        if let Some(obj) = self.objects.write().unwrap().remove(&id) {
+            self.bytes.fetch_sub(obj.len() as u64, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DiskData
+// ---------------------------------------------------------------------------
+
+/// One file per object: `<root>/<id % 256>/<id>.obj` (fan-out dirs keep
+/// directory sizes sane at 100 k files — the Fig. 4 working set).
+pub struct DiskData {
+    root: PathBuf,
+    bytes: AtomicU64,
+}
+
+impl DiskData {
+    pub fn new(root: impl Into<PathBuf>) -> FsResult<DiskData> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(DiskData { root, bytes: AtomicU64::new(0) })
+    }
+
+    fn path(&self, id: FileId) -> PathBuf {
+        self.root.join(format!("{:02x}", id % 256)).join(format!("{id}.obj"))
+    }
+
+    fn open_rw(&self, id: FileId) -> FsResult<std::fs::File> {
+        let p = self.path(id);
+        if let Some(parent) = p.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(std::fs::OpenOptions::new().read(true).write(true).create(true).open(p)?)
+    }
+}
+
+impl ObjectStore for DiskData {
+    fn read(&self, id: FileId, off: u64, len: u32) -> FsResult<Vec<u8>> {
+        let p = self.path(id);
+        let mut f = match std::fs::File::open(p) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e.into()),
+        };
+        let size = f.metadata()?.len();
+        if off >= size {
+            return Ok(Vec::new());
+        }
+        f.seek(SeekFrom::Start(off))?;
+        let n = (len as u64).min(size - off) as usize;
+        let mut buf = vec![0u8; n];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn write(&self, id: FileId, off: u64, data: &[u8]) -> FsResult<u64> {
+        let mut f = self.open_rw(id)?;
+        let before = f.metadata()?.len();
+        f.seek(SeekFrom::Start(off))?;
+        f.write_all(data)?;
+        let after = f.metadata()?.len();
+        if after > before {
+            self.bytes.fetch_add(after - before, Ordering::Relaxed);
+        }
+        Ok(after)
+    }
+
+    fn truncate(&self, id: FileId, size: u64) -> FsResult<()> {
+        let f = self.open_rw(id)?;
+        let before = f.metadata()?.len();
+        f.set_len(size)?;
+        if size >= before {
+            self.bytes.fetch_add(size - before, Ordering::Relaxed);
+        } else {
+            self.bytes.fetch_sub(before - size, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    fn delete(&self, id: FileId) -> FsResult<()> {
+        let p = self.path(id);
+        match std::fs::metadata(&p) {
+            Ok(m) => {
+                self.bytes.fetch_sub(m.len(), Ordering::Relaxed);
+                std::fs::remove_file(p)?;
+                Ok(())
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(store: &dyn ObjectStore) {
+        // basic write/read
+        assert_eq!(store.write(1, 0, b"hello").unwrap(), 5);
+        assert_eq!(store.read(1, 0, 5).unwrap(), b"hello");
+        // offset write with hole
+        assert_eq!(store.write(2, 4, b"xy").unwrap(), 6);
+        assert_eq!(store.read(2, 0, 10).unwrap(), vec![0, 0, 0, 0, b'x', b'y']);
+        // short read at EOF
+        assert_eq!(store.read(1, 3, 100).unwrap(), b"lo");
+        assert_eq!(store.read(1, 5, 10).unwrap(), Vec::<u8>::new());
+        assert_eq!(store.read(1, 99, 10).unwrap(), Vec::<u8>::new());
+        // overwrite
+        store.write(1, 0, b"HE").unwrap();
+        assert_eq!(store.read(1, 0, 5).unwrap(), b"HEllo");
+        // truncate down then up
+        store.truncate(1, 2).unwrap();
+        assert_eq!(store.read(1, 0, 10).unwrap(), b"HE");
+        store.truncate(1, 4).unwrap();
+        assert_eq!(store.read(1, 0, 10).unwrap(), vec![b'H', b'E', 0, 0]);
+        // missing object reads empty
+        assert_eq!(store.read(999, 0, 10).unwrap(), Vec::<u8>::new());
+        // delete idempotent
+        store.delete(1).unwrap();
+        store.delete(1).unwrap();
+        assert_eq!(store.read(1, 0, 10).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn mem_semantics() {
+        let s = MemData::new();
+        exercise(&s);
+        assert_eq!(s.total_bytes(), 6); // object 2 remains
+    }
+
+    #[test]
+    fn disk_semantics() {
+        let dir = std::env::temp_dir().join(format!("buffetfs-data-test-{}", std::process::id()));
+        let s = DiskData::new(&dir).unwrap();
+        exercise(&s);
+        assert_eq!(s.total_bytes(), 6);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn mem_accounting_tracks_growth() {
+        let s = MemData::new();
+        s.write(1, 0, &[7; 100]).unwrap();
+        assert_eq!(s.total_bytes(), 100);
+        s.write(1, 50, &[8; 100]).unwrap(); // extends to 150
+        assert_eq!(s.total_bytes(), 150);
+        s.truncate(1, 10).unwrap();
+        assert_eq!(s.total_bytes(), 10);
+        s.delete(1).unwrap();
+        assert_eq!(s.total_bytes(), 0);
+    }
+}

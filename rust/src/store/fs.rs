@@ -1,0 +1,510 @@
+//! [`LocalFs`] — the composed per-server storage engine.
+//!
+//! Pure storage semantics, *no permission enforcement*: the paper's whole
+//! point is that who checks permissions (client vs server) is the design
+//! variable, so enforcement lives in `server::` (BuffetFS: client-side
+//! check + server-side mutation checks) and `baseline::` (Lustre: all
+//! server-side). Both are built on this engine, which keeps the
+//! comparison apples-to-apples.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{FsError, FsResult};
+use crate::store::dir::DirTable;
+use crate::store::inode::{InodeRec, InodeTable, ROOT_FILE_ID};
+use crate::store::ObjectStore;
+use crate::types::{Attr, DirEntry, FileId, FileKind, HostId, Ino, PermBlob, Version};
+use crate::util::unix_now;
+
+pub struct LocalFs {
+    pub host: HostId,
+    pub version: Version,
+    inodes: InodeTable,
+    dirs: DirTable,
+    data: Box<dyn ObjectStore>,
+    /// Monotonically increasing change counter (cheap cache-coherence
+    /// epoch; bumped on any namespace mutation).
+    epoch: AtomicU64,
+}
+
+impl LocalFs {
+    /// Create an engine whose root directory (`FileId` 1) is owned by
+    /// root:root with mode 0755. Only host 0's root is the global root;
+    /// other hosts' roots anchor their local subtrees.
+    pub fn new(host: HostId, version: Version, data: Box<dyn ObjectStore>) -> LocalFs {
+        let fs = LocalFs {
+            host,
+            version,
+            inodes: InodeTable::new(),
+            dirs: DirTable::new(),
+            data,
+            epoch: AtomicU64::new(1),
+        };
+        fs.inodes.insert(
+            ROOT_FILE_ID,
+            InodeRec::new(FileKind::Directory, PermBlob::new(0o755, 0, 0), None, "/"),
+        );
+        fs.dirs.create_dir(ROOT_FILE_ID);
+        fs
+    }
+
+    pub fn ino(&self, file: FileId) -> Ino {
+        Ino::new(self.host, self.version, file)
+    }
+
+    pub fn root_ino(&self) -> Ino {
+        self.ino(ROOT_FILE_ID)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    fn bump(&self) {
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Validate that `ino` belongs to this engine (host + version). A
+    /// version mismatch means the server restarted — the paper's `ESTALE`.
+    pub fn validate(&self, ino: Ino) -> FsResult<FileId> {
+        if ino.host != self.host {
+            return Err(FsError::NoSuchServer(ino.host));
+        }
+        if ino.version != self.version {
+            return Err(FsError::Stale);
+        }
+        Ok(ino.file)
+    }
+
+    // -- metadata ----------------------------------------------------------
+
+    pub fn getattr(&self, file: FileId) -> FsResult<Attr> {
+        Ok(self.inodes.get(file)?.attr(self.ino(file)))
+    }
+
+    pub fn lookup(&self, dir: FileId, name: &str) -> FsResult<DirEntry> {
+        self.require_dir(dir)?;
+        self.dirs.lookup(dir, name)
+    }
+
+    pub fn readdir(&self, dir: FileId) -> FsResult<(Attr, Vec<DirEntry>)> {
+        self.require_dir(dir)?;
+        let attr = self.getattr(dir)?;
+        Ok((attr, self.dirs.list(dir)?))
+    }
+
+    pub fn parent_of(&self, file: FileId) -> FsResult<Option<(Ino, String)>> {
+        let rec = self.inodes.get(file)?;
+        Ok(rec.parent.map(|p| (p, rec.name_in_parent)))
+    }
+
+    fn require_dir(&self, file: FileId) -> FsResult<()> {
+        match self.inodes.get(file)?.kind {
+            FileKind::Directory => Ok(()),
+            _ => Err(FsError::NotADirectory),
+        }
+    }
+
+    // -- namespace mutations -------------------------------------------------
+
+    /// Create a local child (file or directory) under a local directory.
+    pub fn create(
+        &self,
+        dir: FileId,
+        name: &str,
+        mode: u16,
+        kind: FileKind,
+        uid: u32,
+        gid: u32,
+    ) -> FsResult<DirEntry> {
+        self.require_dir(dir)?;
+        let perm = PermBlob::new(mode, uid, gid);
+        let id = self.inodes.alloc_id();
+        let entry = DirEntry { name: name.to_string(), ino: self.ino(id), kind, perm };
+        // dirent first (name conflicts detected before inode allocation is
+        // visible), then the inode + optional dir body
+        self.dirs.insert(dir, entry.clone())?;
+        self.inodes
+            .insert(id, InodeRec::new(kind, perm, Some(self.ino(dir)), name));
+        if kind == FileKind::Directory {
+            self.dirs.create_dir(id);
+        }
+        self.touch_dir(dir);
+        self.bump();
+        Ok(entry)
+    }
+
+    /// Insert an entry whose object lives on *another* server (the
+    /// decentralized-namespace case: the dirent carries the remote Ino and
+    /// the authoritative copy of its 10-byte perm blob).
+    pub fn insert_remote_entry(&self, dir: FileId, entry: DirEntry) -> FsResult<()> {
+        self.require_dir(dir)?;
+        if entry.ino.host == self.host {
+            return Err(FsError::Invalid("insert_remote_entry with local ino".into()));
+        }
+        self.dirs.insert(dir, entry)?;
+        self.touch_dir(dir);
+        self.bump();
+        Ok(())
+    }
+
+    /// Register a local object with no local parent (its dirent lives on
+    /// another server). Returns its entry for the remote insert.
+    pub fn create_orphan(
+        &self,
+        parent: Ino,
+        name: &str,
+        mode: u16,
+        kind: FileKind,
+        uid: u32,
+        gid: u32,
+    ) -> FsResult<DirEntry> {
+        let perm = PermBlob::new(mode, uid, gid);
+        let id = self.inodes.alloc_id();
+        self.inodes.insert(id, InodeRec::new(kind, perm, Some(parent), name));
+        if kind == FileKind::Directory {
+            self.dirs.create_dir(id);
+        }
+        self.bump();
+        Ok(DirEntry { name: name.to_string(), ino: self.ino(id), kind, perm })
+    }
+
+    pub fn unlink(&self, dir: FileId, name: &str) -> FsResult<DirEntry> {
+        self.require_dir(dir)?;
+        let entry = self.dirs.lookup(dir, name)?;
+        if entry.kind == FileKind::Directory {
+            return Err(FsError::IsADirectory);
+        }
+        self.dirs.remove(dir, name)?;
+        if entry.ino.host == self.host {
+            self.drop_local_object(entry.ino.file)?;
+        }
+        self.touch_dir(dir);
+        self.bump();
+        Ok(entry)
+    }
+
+    /// Remove a local object's inode + data (after its dirent is gone).
+    pub fn drop_local_object(&self, file: FileId) -> FsResult<()> {
+        let rec = self.inodes.remove(file)?;
+        if rec.kind == FileKind::Regular {
+            self.data.delete(file)?;
+        }
+        self.bump();
+        Ok(())
+    }
+
+    pub fn rmdir(&self, dir: FileId, name: &str) -> FsResult<DirEntry> {
+        self.require_dir(dir)?;
+        let entry = self.dirs.lookup(dir, name)?;
+        if entry.kind != FileKind::Directory {
+            return Err(FsError::NotADirectory);
+        }
+        if entry.ino.host == self.host {
+            if !self.dirs.is_empty(entry.ino.file)? {
+                return Err(FsError::NotEmpty);
+            }
+            self.dirs.remove(dir, name)?;
+            self.dirs.remove_dir(entry.ino.file)?;
+            self.inodes.remove(entry.ino.file)?;
+        } else {
+            // remote dir body: caller must have verified emptiness
+            self.dirs.remove(dir, name)?;
+        }
+        self.touch_dir(dir);
+        self.bump();
+        Ok(entry)
+    }
+
+    pub fn rename(&self, sdir: FileId, sname: &str, ddir: FileId, dname: &str) -> FsResult<DirEntry> {
+        self.require_dir(sdir)?;
+        self.require_dir(ddir)?;
+        let entry = self.dirs.rename(sdir, sname, ddir, dname)?;
+        if entry.ino.host == self.host {
+            self.inodes
+                .update(entry.ino.file, |rec| {
+                    rec.parent = Some(self.ino(ddir));
+                    rec.name_in_parent = dname.to_string();
+                    rec.ctime = unix_now();
+                })
+                .ok();
+        }
+        self.touch_dir(sdir);
+        if sdir != ddir {
+            self.touch_dir(ddir);
+        }
+        self.bump();
+        Ok(entry)
+    }
+
+    // -- permission mutations -------------------------------------------------
+
+    /// Apply a chmod to a *local* inode. Keeps the parent dirent's blob in
+    /// sync when the parent directory is local too; otherwise returns the
+    /// parent so the caller can sync it cross-server. The §3.4
+    /// invalidation protocol runs in the server layer *before* this.
+    pub fn chmod_apply(&self, file: FileId, mode: u16) -> FsResult<(PermBlob, Option<(Ino, String)>)> {
+        let (perm, parent) = self.inodes.update(file, |rec| {
+            rec.perm = PermBlob::new(mode, rec.perm.uid, rec.perm.gid);
+            rec.ctime = unix_now();
+            (rec.perm, rec.parent.map(|p| (p, rec.name_in_parent.clone())))
+        })?;
+        self.sync_parent_dirent(&perm, &parent)?;
+        self.bump();
+        Ok((perm, parent))
+    }
+
+    pub fn chown_apply(&self, file: FileId, uid: u32, gid: u32) -> FsResult<(PermBlob, Option<(Ino, String)>)> {
+        let (perm, parent) = self.inodes.update(file, |rec| {
+            rec.perm = PermBlob::new(rec.perm.mode.0, uid, gid);
+            rec.ctime = unix_now();
+            (rec.perm, rec.parent.map(|p| (p, rec.name_in_parent.clone())))
+        })?;
+        self.sync_parent_dirent(&perm, &parent)?;
+        self.bump();
+        Ok((perm, parent))
+    }
+
+    fn sync_parent_dirent(&self, perm: &PermBlob, parent: &Option<(Ino, String)>) -> FsResult<()> {
+        if let Some((p, name)) = parent {
+            if p.host == self.host {
+                self.dirs.set_perm(p.file, name, *perm)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Update the 10-byte blob of one dirent (the cross-server sync hook:
+    /// invoked via `Request::UpdateDirentPerm` when the child's inode
+    /// lives on another server).
+    pub fn set_dirent_perm(&self, dir: FileId, name: &str, perm: PermBlob) -> FsResult<()> {
+        self.dirs.set_perm(dir, name, perm)?;
+        self.bump();
+        Ok(())
+    }
+
+    // -- data plane ----------------------------------------------------------
+
+    pub fn read(&self, file: FileId, off: u64, len: u32) -> FsResult<(Vec<u8>, u64)> {
+        let rec = self.inodes.get(file)?;
+        if rec.kind != FileKind::Regular {
+            return Err(FsError::IsADirectory);
+        }
+        let data = self.data.read(file, off, len)?;
+        self.inodes.update(file, |r| r.atime = unix_now()).ok();
+        Ok((data, rec.size))
+    }
+
+    pub fn write(&self, file: FileId, off: u64, data: &[u8]) -> FsResult<(u32, u64)> {
+        let rec = self.inodes.get(file)?;
+        if rec.kind != FileKind::Regular {
+            return Err(FsError::IsADirectory);
+        }
+        let new_size = self.data.write(file, off, data)?;
+        self.inodes
+            .update(file, |r| {
+                r.size = new_size;
+                r.mtime = unix_now();
+            })
+            .ok();
+        Ok((data.len() as u32, new_size))
+    }
+
+    pub fn truncate(&self, file: FileId, size: u64) -> FsResult<()> {
+        let rec = self.inodes.get(file)?;
+        if rec.kind != FileKind::Regular {
+            return Err(FsError::IsADirectory);
+        }
+        self.data.truncate(file, size)?;
+        self.inodes
+            .update(file, |r| {
+                r.size = size;
+                r.mtime = unix_now();
+            })
+            .ok();
+        Ok(())
+    }
+
+    pub fn statfs(&self) -> (u64, u64) {
+        (self.inodes.len() as u64, self.data.total_bytes())
+    }
+
+    fn touch_dir(&self, dir: FileId) {
+        self.inodes
+            .update(dir, |r| {
+                r.mtime = unix_now();
+                r.size = 0; // size recomputed lazily for dirs
+            })
+            .ok();
+    }
+
+    /// Force a file's size metadata (Lustre keeps size on the OSS and
+    /// fetches it by "glimpse"; workload setup shortcuts that here).
+    pub fn force_size(&self, file: FileId, size: u64) {
+        self.inodes.update(file, |r| r.size = size).ok();
+    }
+
+    /// Direct xattr access (front-end metadata, §3.2).
+    pub fn set_xattr(&self, file: FileId, key: &str, value: Vec<u8>) -> FsResult<()> {
+        self.inodes.set_xattr(file, key, value)
+    }
+    pub fn get_xattr(&self, file: FileId, key: &str) -> FsResult<Option<Vec<u8>>> {
+        self.inodes.get_xattr(file, key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::data::MemData;
+
+    fn fs() -> LocalFs {
+        LocalFs::new(0, 0, Box::new(MemData::new()))
+    }
+
+    #[test]
+    fn root_exists() {
+        let f = fs();
+        let root = f.getattr(ROOT_FILE_ID).unwrap();
+        assert_eq!(root.kind, FileKind::Directory);
+        assert_eq!(root.perm.mode.0, 0o755);
+        assert_eq!(f.root_ino(), Ino::new(0, 0, 1));
+    }
+
+    #[test]
+    fn create_lookup_read_write() {
+        let f = fs();
+        let e = f.create(ROOT_FILE_ID, "a.txt", 0o644, FileKind::Regular, 10, 20).unwrap();
+        assert_eq!(f.lookup(ROOT_FILE_ID, "a.txt").unwrap(), e);
+        let (w, size) = f.write(e.ino.file, 0, b"hello world").unwrap();
+        assert_eq!((w, size), (11, 11));
+        let (data, sz) = f.read(e.ino.file, 6, 100).unwrap();
+        assert_eq!(data, b"world");
+        assert_eq!(sz, 11);
+        assert_eq!(f.getattr(e.ino.file).unwrap().size, 11);
+    }
+
+    #[test]
+    fn mkdir_nested_and_readdir_carries_perm_blobs() {
+        let f = fs();
+        let d = f.create(ROOT_FILE_ID, "dir", 0o750, FileKind::Directory, 5, 6).unwrap();
+        f.create(d.ino.file, "x", 0o600, FileKind::Regular, 5, 6).unwrap();
+        f.create(d.ino.file, "y", 0o640, FileKind::Regular, 5, 6).unwrap();
+        let (attr, entries) = f.readdir(d.ino.file).unwrap();
+        assert_eq!(attr.kind, FileKind::Directory);
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].perm, PermBlob::new(0o600, 5, 6));
+        assert_eq!(entries[1].perm, PermBlob::new(0o640, 5, 6));
+    }
+
+    #[test]
+    fn duplicate_create_fails_cleanly() {
+        let f = fs();
+        f.create(ROOT_FILE_ID, "a", 0o644, FileKind::Regular, 1, 1).unwrap();
+        assert_eq!(
+            f.create(ROOT_FILE_ID, "a", 0o644, FileKind::Regular, 1, 1),
+            Err(FsError::AlreadyExists)
+        );
+        // the failed create must not leak an inode
+        let (files, _) = f.statfs();
+        assert_eq!(files, 2); // root + a
+    }
+
+    #[test]
+    fn unlink_removes_inode_and_data() {
+        let f = fs();
+        let e = f.create(ROOT_FILE_ID, "a", 0o644, FileKind::Regular, 1, 1).unwrap();
+        f.write(e.ino.file, 0, &[7; 4096]).unwrap();
+        f.unlink(ROOT_FILE_ID, "a").unwrap();
+        assert_eq!(f.getattr(e.ino.file), Err(FsError::NotFound));
+        assert_eq!(f.statfs(), (1, 0));
+        assert_eq!(f.unlink(ROOT_FILE_ID, "a"), Err(FsError::NotFound));
+    }
+
+    #[test]
+    fn unlink_refuses_directories() {
+        let f = fs();
+        f.create(ROOT_FILE_ID, "d", 0o755, FileKind::Directory, 1, 1).unwrap();
+        assert_eq!(f.unlink(ROOT_FILE_ID, "d"), Err(FsError::IsADirectory));
+    }
+
+    #[test]
+    fn rmdir_requires_empty() {
+        let f = fs();
+        let d = f.create(ROOT_FILE_ID, "d", 0o755, FileKind::Directory, 1, 1).unwrap();
+        f.create(d.ino.file, "x", 0o644, FileKind::Regular, 1, 1).unwrap();
+        assert_eq!(f.rmdir(ROOT_FILE_ID, "d"), Err(FsError::NotEmpty));
+        f.unlink(d.ino.file, "x").unwrap();
+        f.rmdir(ROOT_FILE_ID, "d").unwrap();
+        assert_eq!(f.lookup(ROOT_FILE_ID, "d"), Err(FsError::NotFound));
+    }
+
+    #[test]
+    fn chmod_syncs_parent_dirent_blob() {
+        let f = fs();
+        let d = f.create(ROOT_FILE_ID, "d", 0o755, FileKind::Directory, 1, 1).unwrap();
+        let e = f.create(d.ino.file, "f", 0o644, FileKind::Regular, 1, 1).unwrap();
+        let (perm, parent) = f.chmod_apply(e.ino.file, 0o600).unwrap();
+        assert_eq!(perm.mode.0, 0o600);
+        assert_eq!(parent.unwrap().0, d.ino);
+        // the 10-byte blob in the parent directory must have followed
+        assert_eq!(f.lookup(d.ino.file, "f").unwrap().perm.mode.0, 0o600);
+    }
+
+    #[test]
+    fn chown_syncs_parent_dirent_blob() {
+        let f = fs();
+        let e = f.create(ROOT_FILE_ID, "f", 0o644, FileKind::Regular, 1, 1).unwrap();
+        f.chown_apply(e.ino.file, 42, 43).unwrap();
+        let got = f.lookup(ROOT_FILE_ID, "f").unwrap().perm;
+        assert_eq!((got.uid, got.gid, got.mode.0), (42, 43, 0o644));
+    }
+
+    #[test]
+    fn rename_updates_parent_links() {
+        let f = fs();
+        let d1 = f.create(ROOT_FILE_ID, "d1", 0o755, FileKind::Directory, 1, 1).unwrap();
+        let d2 = f.create(ROOT_FILE_ID, "d2", 0o755, FileKind::Directory, 1, 1).unwrap();
+        let e = f.create(d1.ino.file, "f", 0o644, FileKind::Regular, 1, 1).unwrap();
+        f.rename(d1.ino.file, "f", d2.ino.file, "g").unwrap();
+        assert_eq!(f.lookup(d2.ino.file, "g").unwrap().ino, e.ino);
+        assert_eq!(f.parent_of(e.ino.file).unwrap(), Some((d2.ino, "g".to_string())));
+        // chmod after rename must update the *new* parent's dirent
+        f.chmod_apply(e.ino.file, 0o400).unwrap();
+        assert_eq!(f.lookup(d2.ino.file, "g").unwrap().perm.mode.0, 0o400);
+    }
+
+    #[test]
+    fn remote_entries_and_orphans() {
+        let a = LocalFs::new(0, 0, Box::new(MemData::new()));
+        let b = LocalFs::new(1, 0, Box::new(MemData::new()));
+        // object lives on b, dirent lives on a's root
+        let child = b.create_orphan(a.root_ino(), "remote.dat", 0o640, FileKind::Regular, 9, 9).unwrap();
+        a.insert_remote_entry(ROOT_FILE_ID, child.clone()).unwrap();
+        assert_eq!(a.lookup(ROOT_FILE_ID, "remote.dat").unwrap().ino.host, 1);
+        // inserting a local ino through the remote path is a bug
+        let local = a.create_orphan(a.root_ino(), "x", 0o644, FileKind::Regular, 1, 1).unwrap();
+        assert!(matches!(a.insert_remote_entry(ROOT_FILE_ID, local), Err(FsError::Invalid(_))));
+        // cross-server chmod: b applies, parent is remote → returned for sync
+        let (perm, parent) = b.chmod_apply(child.ino.file, 0o600).unwrap();
+        assert_eq!(parent.unwrap().0, a.root_ino());
+        a.set_dirent_perm(ROOT_FILE_ID, "remote.dat", perm).unwrap();
+        assert_eq!(a.lookup(ROOT_FILE_ID, "remote.dat").unwrap().perm.mode.0, 0o600);
+    }
+
+    #[test]
+    fn validate_checks_host_and_version() {
+        let f = LocalFs::new(3, 7, Box::new(MemData::new()));
+        assert_eq!(f.validate(Ino::new(3, 7, 1)).unwrap(), 1);
+        assert_eq!(f.validate(Ino::new(4, 7, 1)), Err(FsError::NoSuchServer(4)));
+        assert_eq!(f.validate(Ino::new(3, 6, 1)), Err(FsError::Stale));
+    }
+
+    #[test]
+    fn epoch_bumps_on_mutation() {
+        let f = fs();
+        let e0 = f.epoch();
+        f.create(ROOT_FILE_ID, "a", 0o644, FileKind::Regular, 1, 1).unwrap();
+        assert!(f.epoch() > e0);
+    }
+}

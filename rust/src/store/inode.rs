@@ -1,0 +1,204 @@
+//! The inode table: back-end metadata plus the front-end metadata the
+//! paper stores in extended attributes of the actual file (§3.2).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::error::{FsError, FsResult};
+use crate::types::{Attr, FileId, FileKind, Ino, PermBlob};
+use crate::util::unix_now;
+
+/// One inode record. `parent`/`name_in_parent` let chmod locate the
+/// directory entry whose 10-byte perm blob must be kept in sync (the
+/// dirent may live on a *different* server — see `server::handler`).
+/// No hard links: every object has exactly one parent entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InodeRec {
+    pub kind: FileKind,
+    pub perm: PermBlob,
+    pub size: u64,
+    pub nlink: u32,
+    pub atime: u64,
+    pub mtime: u64,
+    pub ctime: u64,
+    pub parent: Option<Ino>,
+    pub name_in_parent: String,
+    /// Extended attributes — carries the front-end metadata (BuffetFS ino,
+    /// client-visible permissions) exactly as §3.2 describes.
+    pub xattrs: BTreeMap<String, Vec<u8>>,
+}
+
+impl InodeRec {
+    pub fn new(kind: FileKind, perm: PermBlob, parent: Option<Ino>, name: &str) -> InodeRec {
+        let now = unix_now();
+        InodeRec {
+            kind,
+            perm,
+            size: 0,
+            nlink: if kind == FileKind::Directory { 2 } else { 1 },
+            atime: now,
+            mtime: now,
+            ctime: now,
+            parent,
+            name_in_parent: name.to_string(),
+            xattrs: BTreeMap::new(),
+        }
+    }
+
+    pub fn attr(&self, ino: Ino) -> Attr {
+        Attr {
+            ino,
+            kind: self.kind,
+            perm: self.perm,
+            size: self.size,
+            nlink: self.nlink,
+            atime: self.atime,
+            mtime: self.mtime,
+            ctime: self.ctime,
+        }
+    }
+}
+
+/// Concurrent inode table with a monotone FileId allocator.
+/// FileId 1 is reserved for the root directory of host 0.
+pub struct InodeTable {
+    inodes: RwLock<HashMap<FileId, InodeRec>>,
+    next_id: AtomicU64,
+}
+
+pub const ROOT_FILE_ID: FileId = 1;
+
+impl Default for InodeTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InodeTable {
+    pub fn new() -> InodeTable {
+        InodeTable { inodes: RwLock::new(HashMap::new()), next_id: AtomicU64::new(ROOT_FILE_ID + 1) }
+    }
+
+    pub fn alloc_id(&self) -> FileId {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn insert(&self, id: FileId, rec: InodeRec) {
+        self.inodes.write().unwrap().insert(id, rec);
+    }
+
+    pub fn get(&self, id: FileId) -> FsResult<InodeRec> {
+        self.inodes.read().unwrap().get(&id).cloned().ok_or(FsError::NotFound)
+    }
+
+    pub fn exists(&self, id: FileId) -> bool {
+        self.inodes.read().unwrap().contains_key(&id)
+    }
+
+    pub fn remove(&self, id: FileId) -> FsResult<InodeRec> {
+        self.inodes.write().unwrap().remove(&id).ok_or(FsError::NotFound)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inodes.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mutate one record in place under the write lock.
+    pub fn update<R>(&self, id: FileId, f: impl FnOnce(&mut InodeRec) -> R) -> FsResult<R> {
+        let mut inodes = self.inodes.write().unwrap();
+        let rec = inodes.get_mut(&id).ok_or(FsError::NotFound)?;
+        Ok(f(rec))
+    }
+
+    pub fn set_xattr(&self, id: FileId, key: &str, value: Vec<u8>) -> FsResult<()> {
+        self.update(id, |rec| {
+            rec.xattrs.insert(key.to_string(), value);
+        })
+    }
+
+    pub fn get_xattr(&self, id: FileId, key: &str) -> FsResult<Option<Vec<u8>>> {
+        Ok(self.get(id)?.xattrs.get(key).cloned())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> InodeRec {
+        InodeRec::new(FileKind::Regular, PermBlob::new(0o644, 1, 2), None, "f")
+    }
+
+    #[test]
+    fn alloc_monotone_and_unique() {
+        let t = InodeTable::new();
+        let a = t.alloc_id();
+        let b = t.alloc_id();
+        assert!(b > a);
+        assert!(a > ROOT_FILE_ID);
+    }
+
+    #[test]
+    fn insert_get_remove() {
+        let t = InodeTable::new();
+        let id = t.alloc_id();
+        t.insert(id, rec());
+        assert!(t.exists(id));
+        assert_eq!(t.get(id).unwrap().perm.mode.0, 0o644);
+        t.remove(id).unwrap();
+        assert_eq!(t.get(id), Err(FsError::NotFound));
+        assert_eq!(t.remove(id), Err(FsError::NotFound));
+    }
+
+    #[test]
+    fn update_in_place() {
+        let t = InodeTable::new();
+        let id = t.alloc_id();
+        t.insert(id, rec());
+        t.update(id, |r| r.size = 4096).unwrap();
+        assert_eq!(t.get(id).unwrap().size, 4096);
+        assert_eq!(t.update(999, |_| ()), Err(FsError::NotFound));
+    }
+
+    #[test]
+    fn xattrs_store_front_end_metadata() {
+        let t = InodeTable::new();
+        let id = t.alloc_id();
+        t.insert(id, rec());
+        t.set_xattr(id, "buffet.ino", vec![1, 2, 3]).unwrap();
+        assert_eq!(t.get_xattr(id, "buffet.ino").unwrap(), Some(vec![1, 2, 3]));
+        assert_eq!(t.get_xattr(id, "missing").unwrap(), None);
+    }
+
+    #[test]
+    fn attr_projection() {
+        let ino = Ino::new(3, 1, 77);
+        let a = rec().attr(ino);
+        assert_eq!(a.ino, ino);
+        assert_eq!(a.nlink, 1);
+        let d = InodeRec::new(FileKind::Directory, PermBlob::new(0o755, 0, 0), None, "d");
+        assert_eq!(d.attr(ino).nlink, 2);
+    }
+
+    #[test]
+    fn concurrent_alloc_no_duplicates() {
+        let t = std::sync::Arc::new(InodeTable::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..1000).map(|_| t.alloc_id()).collect::<Vec<_>>()
+            }));
+        }
+        let mut all: Vec<FileId> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let n = all.len();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n);
+    }
+}

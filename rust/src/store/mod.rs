@@ -1,0 +1,33 @@
+//! Per-server storage engine — the "BuffetFS laying over ext4" substrate.
+//!
+//! Layering:
+//! * [`data`] — raw object stores ([`data::MemData`] for tests/benches,
+//!   [`data::DiskData`] over real files for deployment);
+//! * [`inode`] — the inode table (back-end metadata + the front-end
+//!   metadata the paper stores in extended attributes);
+//! * [`dir`] — directory tables whose entries each carry the paper's
+//!   **10 extra bytes** of permission information ([`crate::types::PermBlob`]);
+//! * [`fs`] — [`fs::LocalFs`], the composed engine the BServer and the
+//!   baseline MDS/OSS are built on. Enforcement-free by design: *who*
+//!   checks permissions and *where* is exactly the paper's variable, so
+//!   it lives in the server/agent layers, not the store.
+
+pub mod data;
+pub mod dir;
+pub mod fs;
+pub mod inode;
+
+use crate::error::FsResult;
+use crate::types::FileId;
+
+/// Raw file-data store (the data plane under one server).
+pub trait ObjectStore: Send + Sync {
+    /// Read up to `len` bytes at `off`; short reads at EOF.
+    fn read(&self, id: FileId, off: u64, len: u32) -> FsResult<Vec<u8>>;
+    /// Write at `off` (sparse holes zero-filled); returns resulting size.
+    fn write(&self, id: FileId, off: u64, data: &[u8]) -> FsResult<u64>;
+    fn truncate(&self, id: FileId, size: u64) -> FsResult<()>;
+    fn delete(&self, id: FileId) -> FsResult<()>;
+    /// Total bytes stored (statfs).
+    fn total_bytes(&self) -> u64;
+}

@@ -1,0 +1,59 @@
+//! Client↔server transports.
+//!
+//! * [`chan`] — in-process transport with simnet latency injection: RPCs
+//!   really serialize through the wire codec, sleep the modeled one-way
+//!   delay each direction, and dispatch into the server. This is what the
+//!   figures run on (one OS thread per simulated client process).
+//! * [`tcp`] — length-prefixed frames over real TCP for multi-process
+//!   deployment (`buffetfs serve` / `buffetfs client`).
+
+pub mod capacity;
+pub mod chan;
+pub mod tcp;
+
+use std::sync::Arc;
+
+use crate::error::FsResult;
+use crate::wire::{Notify, NotifyAck, Request, Response};
+
+/// A synchronous RPC endpoint to one server. One [`Transport::call`] is
+/// one round trip: the calling thread blocks exactly as the paper's
+/// synchronous RPCs do.
+pub trait Transport: Send + Sync {
+    fn call(&self, req: Request) -> FsResult<Response>;
+
+    /// Fire-and-forget (the asynchronous close wrap-up, §3.3). Default
+    /// falls back to a synchronous call; real transports override.
+    fn call_async(&self, req: Request) -> FsResult<()> {
+        self.call(req).map(|_| ())
+    }
+}
+
+/// Server side of the RPC boundary: handles one decoded request.
+pub trait Service: Send + Sync {
+    fn handle(&self, req: Request) -> Response;
+}
+
+impl<F> Service for F
+where
+    F: Fn(Request) -> Response + Send + Sync,
+{
+    fn handle(&self, req: Request) -> Response {
+        self(req)
+    }
+}
+
+/// Client side of the push channel: receives invalidation notifications
+/// (§3.4) and must answer with an ack.
+pub trait NotifySink: Send + Sync {
+    fn notify(&self, n: Notify) -> NotifyAck;
+}
+
+/// Server handle used to push notifications to one registered client.
+pub trait NotifyPush: Send + Sync {
+    /// Deliver the notification and block until the client acks (the
+    /// server applies permission changes only after all acks, §3.4).
+    fn push(&self, n: Notify) -> FsResult<NotifyAck>;
+}
+
+pub type SharedTransport = Arc<dyn Transport>;

@@ -1,0 +1,167 @@
+//! Real TCP transport: `u32` length-prefixed frames of the wire codec.
+//!
+//! Used by `buffetfs serve` / `buffetfs client` for actual multi-process
+//! deployment. The figures use the in-process [`super::chan`] transport
+//! (controlled latency); this module proves the protocol runs over a real
+//! socket too and is covered by `rust/tests/tcp_transport.rs`.
+
+use std::io::{Read, Write as IoWrite};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::codec::Wire;
+use crate::error::{FsError, FsResult};
+use crate::metrics::RpcMetrics;
+use crate::transport::{Service, Transport};
+use crate::wire::{Request, Response};
+
+const MAX_FRAME: usize = 128 << 20;
+
+pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> FsResult<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(FsError::Protocol(format!("frame too large: {}", payload.len())));
+    }
+    let len = (payload.len() as u32).to_le_bytes();
+    stream.write_all(&len).map_err(io_err)?;
+    stream.write_all(payload).map_err(io_err)?;
+    stream.flush().map_err(io_err)
+}
+
+pub fn read_frame(stream: &mut TcpStream) -> FsResult<Vec<u8>> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len).map_err(io_err)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(FsError::Protocol(format!("frame too large: {n}")));
+    }
+    let mut buf = vec![0u8; n];
+    stream.read_exact(&mut buf).map_err(io_err)?;
+    Ok(buf)
+}
+
+fn io_err(e: std::io::Error) -> FsError {
+    FsError::Transport(e.to_string())
+}
+
+/// Serve `service` on `addr` until `stop` flips. One thread per
+/// connection (thread-per-client matches the one-BAgent-per-client model).
+pub struct TcpServer {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    pub fn spawn(addr: &str, service: Arc<dyn Service>) -> FsResult<TcpServer> {
+        let listener = TcpListener::bind(addr).map_err(io_err)?;
+        let local_addr = listener.local_addr().map_err(io_err)?;
+        listener.set_nonblocking(true).map_err(io_err)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("tcp-accept".into())
+            .spawn(move || {
+                let mut conns = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            stream.set_nonblocking(false).ok();
+                            stream.set_nodelay(true).ok();
+                            let svc = Arc::clone(&service);
+                            let stop3 = Arc::clone(&stop2);
+                            conns.push(
+                                std::thread::Builder::new()
+                                    .name("tcp-conn".into())
+                                    .spawn(move || serve_conn(stream, svc, stop3))
+                                    .expect("spawn conn thread"),
+                            );
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })
+            .expect("spawn accept thread");
+        Ok(TcpServer { local_addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, service: Arc<dyn Service>, stop: Arc<AtomicBool>) {
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+        .ok();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(FsError::Transport(msg))
+                if msg.contains("timed out") || msg.contains("would block") || msg.contains("Resource temporarily") =>
+            {
+                continue;
+            }
+            Err(_) => return, // peer went away
+        };
+        let resp = match Request::from_bytes(&frame) {
+            Ok(req) => service.handle(req),
+            Err(e) => Response::Err(e),
+        };
+        if write_frame(&mut stream, &resp.to_bytes()).is_err() {
+            return;
+        }
+    }
+}
+
+/// Client endpoint over one TCP connection (serialized by a mutex — one
+/// in-flight RPC per connection, like a Lustre request slot).
+pub struct TcpTransport {
+    stream: Mutex<TcpStream>,
+    metrics: Arc<RpcMetrics>,
+}
+
+impl TcpTransport {
+    pub fn connect<A: ToSocketAddrs>(addr: A, metrics: Arc<RpcMetrics>) -> FsResult<Arc<TcpTransport>> {
+        let stream = TcpStream::connect(addr).map_err(io_err)?;
+        stream.set_nodelay(true).ok();
+        Ok(Arc::new(TcpTransport { stream: Mutex::new(stream), metrics }))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn call(&self, req: Request) -> FsResult<Response> {
+        let op = req.op();
+        let t0 = Instant::now();
+        let payload = req.to_bytes();
+        let mut stream = self.stream.lock().unwrap();
+        write_frame(&mut stream, &payload)?;
+        let frame = read_frame(&mut stream)?;
+        drop(stream);
+        let resp = Response::from_bytes(&frame)?;
+        self.metrics.record(op, payload.len(), frame.len(), t0.elapsed());
+        resp.into_result()
+    }
+}

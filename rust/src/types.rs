@@ -1,0 +1,362 @@
+//! Core value types shared across every layer of BuffetFS.
+//!
+//! The paper's namespace design (§3.2): an inode number is a triple
+//! `(hostID, version, fileID)` — the host identifies the BServer that
+//! stores the file, the version records server incarnations (reboot /
+//! restore), and the fileID is unique per server. A client can locate any
+//! file from its inode alone, which is what makes the decentralized
+//! (MDS-less) namespace possible.
+
+use std::fmt;
+
+/// Identifies a BServer (or an MDS/OSS in the baseline cluster).
+pub type HostId = u16;
+/// Server incarnation number (bumped on reboot/restore, §3.2).
+pub type Version = u16;
+/// Per-server unique file identifier.
+pub type FileId = u64;
+
+/// The BuffetFS inode number: `(hostID, version, fileID)` packed.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Ino {
+    pub host: HostId,
+    pub version: Version,
+    pub file: FileId,
+}
+
+impl Ino {
+    pub const fn new(host: HostId, version: Version, file: FileId) -> Self {
+        Ino { host, version, file }
+    }
+
+    /// Pack into a single u128 (wire/storage form).
+    pub fn pack(self) -> u128 {
+        ((self.host as u128) << 80) | ((self.version as u128) << 64) | self.file as u128
+    }
+
+    pub fn unpack(raw: u128) -> Self {
+        Ino {
+            host: (raw >> 80) as u16,
+            version: (raw >> 64) as u16,
+            file: raw as u64,
+        }
+    }
+}
+
+impl fmt::Debug for Ino {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}v{}:{}", self.host, self.version, self.file)
+    }
+}
+
+impl fmt::Display for Ino {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+/// Access mask bits, octal-class layout (matches `python/compile/kernels/ref.py`).
+pub const R_OK: u8 = 4;
+pub const W_OK: u8 = 2;
+pub const X_OK: u8 = 1;
+
+/// Requested access as a bitmask of `R_OK | W_OK | X_OK`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct AccessMask(pub u8);
+
+impl AccessMask {
+    pub const READ: AccessMask = AccessMask(R_OK);
+    pub const WRITE: AccessMask = AccessMask(W_OK);
+    pub const EXEC: AccessMask = AccessMask(X_OK);
+    pub const RW: AccessMask = AccessMask(R_OK | W_OK);
+    pub const NONE: AccessMask = AccessMask(0);
+
+    pub fn contains(self, other: AccessMask) -> bool {
+        self.0 & other.0 == other.0
+    }
+    pub fn union(self, other: AccessMask) -> AccessMask {
+        AccessMask(self.0 | other.0)
+    }
+}
+
+impl fmt::Debug for AccessMask {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let m = self.0;
+        write!(
+            f,
+            "{}{}{}",
+            if m & R_OK != 0 { 'r' } else { '-' },
+            if m & W_OK != 0 { 'w' } else { '-' },
+            if m & X_OK != 0 { 'x' } else { '-' }
+        )
+    }
+}
+
+/// What kind of object an inode refers to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum FileKind {
+    Regular,
+    Directory,
+    Symlink,
+}
+
+impl FileKind {
+    pub fn to_wire(self) -> u8 {
+        match self {
+            FileKind::Regular => 0,
+            FileKind::Directory => 1,
+            FileKind::Symlink => 2,
+        }
+    }
+    pub fn from_wire(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => FileKind::Regular,
+            1 => FileKind::Directory,
+            2 => FileKind::Symlink,
+            _ => return None,
+        })
+    }
+}
+
+/// Permission bits (low 12: setuid/setgid/sticky + rwxrwxrwx; only the low
+/// 9 participate in access checks, mirroring the kernels).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FileMode(pub u16);
+
+impl FileMode {
+    pub fn bits(self) -> u16 {
+        self.0 & 0o7777
+    }
+    pub fn owner_class(self) -> u8 {
+        ((self.0 >> 6) & 7) as u8
+    }
+    pub fn group_class(self) -> u8 {
+        ((self.0 >> 3) & 7) as u8
+    }
+    pub fn other_class(self) -> u8 {
+        (self.0 & 7) as u8
+    }
+    pub fn any_exec(self) -> bool {
+        self.0 & 0o111 != 0
+    }
+}
+
+impl fmt::Debug for FileMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "0o{:03o}", self.0)
+    }
+}
+
+/// A credential: who is asking. The primary gid is, by convention, also
+/// present in `groups` (mirrors the kernel oracles).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Credentials {
+    pub uid: u32,
+    pub gid: u32,
+    pub groups: Vec<u32>,
+}
+
+impl Credentials {
+    pub fn new(uid: u32, gid: u32) -> Self {
+        Credentials { uid, gid, groups: vec![gid] }
+    }
+    pub fn with_groups(uid: u32, gid: u32, mut extra: Vec<u32>) -> Self {
+        let mut groups = vec![gid];
+        groups.append(&mut extra);
+        Credentials { uid, gid, groups }
+    }
+    pub fn root() -> Self {
+        Credentials::new(0, 0)
+    }
+    pub fn in_group(&self, gid: u32) -> bool {
+        self.groups.iter().any(|&g| g == gid)
+    }
+}
+
+/// The 10 extra bytes BuffetFS stores per directory entry (§3.2): enough
+/// for a child's permission check without touching its inode —
+/// mode:u16 + uid:u32 + gid:u32 = 10 bytes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct PermBlob {
+    pub mode: FileMode,
+    pub uid: u32,
+    pub gid: u32,
+}
+
+pub const PERM_BLOB_BYTES: usize = 10;
+
+impl PermBlob {
+    pub fn new(mode: u16, uid: u32, gid: u32) -> Self {
+        PermBlob { mode: FileMode(mode), uid, gid }
+    }
+
+    pub fn to_bytes(self) -> [u8; PERM_BLOB_BYTES] {
+        let mut b = [0u8; PERM_BLOB_BYTES];
+        b[0..2].copy_from_slice(&self.mode.0.to_le_bytes());
+        b[2..6].copy_from_slice(&self.uid.to_le_bytes());
+        b[6..10].copy_from_slice(&self.gid.to_le_bytes());
+        b
+    }
+
+    pub fn from_bytes(b: &[u8; PERM_BLOB_BYTES]) -> Self {
+        PermBlob {
+            mode: FileMode(u16::from_le_bytes([b[0], b[1]])),
+            uid: u32::from_le_bytes([b[2], b[3], b[4], b[5]]),
+            gid: u32::from_le_bytes([b[6], b[7], b[8], b[9]]),
+        }
+    }
+}
+
+/// open(2)-style flags, reduced to what the paper's I/O path exercises.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct OpenFlags {
+    pub read: bool,
+    pub write: bool,
+    pub create: bool,
+    pub truncate: bool,
+    pub append: bool,
+}
+
+impl OpenFlags {
+    pub const RDONLY: OpenFlags =
+        OpenFlags { read: true, write: false, create: false, truncate: false, append: false };
+    pub const WRONLY: OpenFlags =
+        OpenFlags { read: false, write: true, create: false, truncate: false, append: false };
+    pub const RDWR: OpenFlags =
+        OpenFlags { read: true, write: true, create: false, truncate: false, append: false };
+
+    pub fn with_create(mut self) -> Self {
+        self.create = true;
+        self
+    }
+    pub fn with_truncate(mut self) -> Self {
+        self.truncate = true;
+        self
+    }
+    pub fn with_append(mut self) -> Self {
+        self.append = true;
+        self
+    }
+
+    /// The access mask the permission check must grant (leaf of the walk).
+    pub fn access_mask(self) -> AccessMask {
+        let mut m = 0;
+        if self.read {
+            m |= R_OK;
+        }
+        if self.write || self.truncate || self.append {
+            m |= W_OK;
+        }
+        AccessMask(m)
+    }
+
+    pub fn to_wire(self) -> u8 {
+        (self.read as u8)
+            | (self.write as u8) << 1
+            | (self.create as u8) << 2
+            | (self.truncate as u8) << 3
+            | (self.append as u8) << 4
+    }
+    pub fn from_wire(v: u8) -> Self {
+        OpenFlags {
+            read: v & 1 != 0,
+            write: v & 2 != 0,
+            create: v & 4 != 0,
+            truncate: v & 8 != 0,
+            append: v & 16 != 0,
+        }
+    }
+}
+
+/// Inode attributes as reported to clients (front-end metadata view).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Attr {
+    pub ino: Ino,
+    pub kind: FileKind,
+    pub perm: PermBlob,
+    pub size: u64,
+    pub nlink: u32,
+    /// seconds since epoch (paper: atime/mtime/ctime mirrored front/back)
+    pub atime: u64,
+    pub mtime: u64,
+    pub ctime: u64,
+}
+
+/// A directory entry as stored in the DirTable and shipped over the wire:
+/// name + child inode + the 10-byte permission blob + kind.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DirEntry {
+    pub name: String,
+    pub ino: Ino,
+    pub kind: FileKind,
+    pub perm: PermBlob,
+}
+
+/// Client identifier (one BAgent per client node).
+pub type ClientId = u32;
+/// Per-client process identifier (the BAgent keeps one context per pid).
+pub type Pid = u32;
+/// File descriptor handed to applications by BLib.
+pub type Fd = i32;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ino_pack_roundtrip() {
+        let cases = [
+            Ino::new(0, 0, 0),
+            Ino::new(1, 2, 3),
+            Ino::new(u16::MAX, u16::MAX, u64::MAX),
+            Ino::new(42, 7, 0xdead_beef_cafe),
+        ];
+        for ino in cases {
+            assert_eq!(Ino::unpack(ino.pack()), ino);
+        }
+    }
+
+    #[test]
+    fn perm_blob_is_ten_bytes_and_roundtrips() {
+        let p = PermBlob::new(0o754, 1000, 2000);
+        let b = p.to_bytes();
+        assert_eq!(b.len(), PERM_BLOB_BYTES);
+        assert_eq!(PermBlob::from_bytes(&b), p);
+    }
+
+    #[test]
+    fn mode_classes() {
+        let m = FileMode(0o754);
+        assert_eq!(m.owner_class(), 7);
+        assert_eq!(m.group_class(), 5);
+        assert_eq!(m.other_class(), 4);
+        assert!(m.any_exec());
+        assert!(!FileMode(0o644).any_exec());
+    }
+
+    #[test]
+    fn open_flags_roundtrip_and_mask() {
+        for raw in 0..32u8 {
+            let f = OpenFlags::from_wire(raw);
+            assert_eq!(OpenFlags::from_wire(f.to_wire()), f);
+        }
+        assert_eq!(OpenFlags::RDONLY.access_mask(), AccessMask::READ);
+        assert_eq!(OpenFlags::RDWR.access_mask(), AccessMask::RW);
+        assert_eq!(OpenFlags::WRONLY.with_append().access_mask(), AccessMask::WRITE);
+    }
+
+    #[test]
+    fn access_mask_contains() {
+        assert!(AccessMask::RW.contains(AccessMask::READ));
+        assert!(!AccessMask::READ.contains(AccessMask::WRITE));
+        assert!(AccessMask::NONE.contains(AccessMask::NONE));
+    }
+
+    #[test]
+    fn credentials_groups_include_primary() {
+        let c = Credentials::with_groups(5, 10, vec![20, 30]);
+        assert!(c.in_group(10));
+        assert!(c.in_group(30));
+        assert!(!c.in_group(40));
+    }
+}

@@ -1,0 +1,185 @@
+//! Log-bucketed latency histogram (hdrhistogram stand-in).
+//!
+//! Buckets are powers-of-two with 16 linear sub-buckets each, covering
+//! 1 ns .. ~1.2 h with ≤ 6.25 % relative error — plenty for figure
+//! regeneration.
+
+const SUB: usize = 16;
+const BUCKETS: usize = 42;
+
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; BUCKETS * SUB], total: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    fn index(value: u64) -> usize {
+        if value < SUB as u64 {
+            return value as usize;
+        }
+        let msb = 63 - value.leading_zeros() as usize;
+        let bucket = msb - 3; // values < 16 handled above; bucket 1 starts at 16
+        let shift = msb - 4; // sub-bucket width = 2^(msb)/16
+        let sub = ((value >> shift) & (SUB as u64 - 1)) as usize;
+        (bucket * SUB + sub).min(BUCKETS * SUB - 1)
+    }
+
+    pub fn record(&mut self, value_ns: u64) {
+        self.counts[Self::index(value_ns)] += 1;
+        self.total += 1;
+        self.sum += value_ns as u128;
+        self.min = self.min.min(value_ns);
+        self.max = self.max.max(value_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    /// Representative value of bucket i (lower edge).
+    fn bucket_value(i: usize) -> u64 {
+        let bucket = i / SUB;
+        let sub = (i % SUB) as u64;
+        if bucket == 0 {
+            return sub;
+        }
+        let base = 1u64 << (bucket + 3);
+        base + sub * (base / SUB as u64)
+    }
+
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min }
+    }
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// "mean p50 p99 max" in microseconds, for table rows.
+    pub fn summary_us(&self) -> String {
+        format!(
+            "mean={:9.1}us p50={:9.1}us p99={:9.1}us max={:9.1}us n={}",
+            self.mean() / 1e3,
+            self.percentile(50.0) as f64 / 1e3,
+            self.percentile(99.0) as f64 / 1e3,
+            self.max() as f64 / 1e3,
+            self.total
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(50.0), 0);
+    }
+
+    #[test]
+    fn exact_for_small_values() {
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 3, 4, 5] {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 5);
+        assert_eq!(h.percentile(50.0), 3);
+        assert!((h.mean() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_relative_error_bounded() {
+        let mut h = Histogram::new();
+        let mut r = XorShift::new(1);
+        let mut vals: Vec<u64> = (0..100_000).map(|_| r.range(100, 10_000_000)).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort();
+        for p in [50.0, 90.0, 99.0, 99.9] {
+            let exact = vals[((p / 100.0) * vals.len() as f64) as usize - 1];
+            let est = h.percentile(p);
+            let rel = (est as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.10, "p{p}: est={est} exact={exact} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(100);
+        b.record(200);
+        b.record(300);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 300);
+        assert_eq!(a.min(), 100);
+    }
+
+    #[test]
+    fn monotone_percentiles() {
+        let mut h = Histogram::new();
+        let mut r = XorShift::new(2);
+        for _ in 0..10_000 {
+            h.record(r.range(1, 1_000_000));
+        }
+        let mut last = 0;
+        for p in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let v = h.percentile(p);
+            assert!(v >= last, "p{p} went backwards: {v} < {last}");
+            last = v;
+        }
+    }
+}

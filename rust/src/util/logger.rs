@@ -1,0 +1,54 @@
+//! Minimal stderr logger backing the `log` facade (env_logger stand-in).
+//! Level comes from `BUFFETFS_LOG` (error|warn|info|debug|trace).
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{lvl}] {}: {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent; respects `BUFFETFS_LOG`).
+pub fn init() {
+    let level = match std::env::var("BUFFETFS_LOG").as_deref() {
+        Ok("trace") => LevelFilter::Trace,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("info") => LevelFilter::Info,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("error") => LevelFilter::Error,
+        _ => LevelFilter::Warn,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,50 @@
+//! Small self-contained utilities (the offline crate universe has no rand,
+//! no env_logger, no hdrhistogram — these are the minimal stand-ins).
+
+pub mod args;
+pub mod hist;
+pub mod logger;
+pub mod rng;
+
+/// Sleep with microsecond precision. `thread::sleep` overshoots by
+/// ~50–150µs on Linux (timer slack), which at simulated-RPC scale (100µs
+/// one-way) would distort every figure; for short waits we spin the tail.
+pub fn precise_sleep(d: std::time::Duration) {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::{Duration, Instant};
+    if d.is_zero() {
+        return;
+    }
+    // `thread::sleep` overshoots by a scheduler-dependent amount (~60µs
+    // idle, worse under load). We keep a global EWMA of the observed
+    // overshoot and subtract it from the requested sleep, then absorb the
+    // (small) residue in a bounded yield loop. This stays accurate on a
+    // loaded single-core box without burning the CPU that the simulated
+    // "processes" need — a pure spin or a long yield tail would serialize
+    // the whole simulation behind the sleeper.
+    static OVERSHOOT_NS: AtomicU64 = AtomicU64::new(60_000);
+    let deadline = Instant::now() + d;
+    let est = Duration::from_nanos(OVERSHOOT_NS.load(Ordering::Relaxed));
+    if d > est + Duration::from_micros(20) {
+        let t0 = Instant::now();
+        let ask = d - est;
+        std::thread::sleep(ask);
+        let over = Instant::now().duration_since(t0).saturating_sub(ask);
+        // EWMA, α = 1/8
+        let prev = OVERSHOOT_NS.load(Ordering::Relaxed);
+        let next = prev - prev / 8 + (over.as_nanos() as u64) / 8;
+        OVERSHOOT_NS.store(next.clamp(1_000, 2_000_000), Ordering::Relaxed);
+    }
+    // bounded residue: yields hand the core over when others are runnable
+    while Instant::now() < deadline {
+        std::thread::yield_now();
+    }
+}
+
+/// Current unix time in seconds (inode timestamps).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}

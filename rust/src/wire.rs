@@ -1,0 +1,696 @@
+//! The BuffetFS wire protocol: every client↔server message.
+//!
+//! One protocol serves both BuffetFS and the Lustre baselines so the
+//! comparison isolates the *schedule* of RPCs, not their encoding:
+//!
+//! * BuffetFS never sends [`Request::Open`]; the open record (paper
+//!   §3.3 "Step 2") travels as the [`OpenCtx`] piggy-backed on the first
+//!   [`Request::Read`]/[`Request::Write`] (the `incomplete-opened` flag).
+//! * The Lustre baselines always send [`Request::Open`] to the MDS; in
+//!   DoM mode the open reply carries the file data inline.
+//! * [`Notify`] messages flow server→client on the push channel
+//!   (permission-change invalidations, §3.4).
+
+use crate::codec::{Dec, Enc, Wire};
+use crate::error::{FsError, FsResult};
+use crate::types::{
+    Attr, ClientId, Credentials, DirEntry, FileKind, HostId, Ino, OpenFlags,
+};
+
+/// Deferred-open context: piggy-backs "Step 2 of open()" onto the first
+/// read/write of an incomplete-opened file (paper Fig. 2(b), b-2).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OpenCtx {
+    pub client: ClientId,
+    /// Client-chosen handle; identifies this open in the opened-file list.
+    pub handle: u64,
+    pub flags: OpenFlags,
+    pub cred: Credentials,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Resolve one name in a directory (baseline path walk).
+    Lookup { dir: Ino, name: String, cred: Credentials },
+    /// Fetch a whole directory (BuffetFS cache population). When
+    /// `register` is set the server records this client in the directory's
+    /// cache registry (§3.4) so later permission changes invalidate it.
+    ReadDir { dir: Ino, client: ClientId, register: bool, cred: Credentials },
+    GetAttr { ino: Ino },
+    /// Baseline-only: server-side open (permission check + open record).
+    /// `want_inline` asks a DoM MDS to return small file data inline.
+    Open { ino: Ino, flags: OpenFlags, cred: Credentials, client: ClientId, handle: u64, want_inline: bool },
+    Read { ino: Ino, off: u64, len: u32, open_ctx: Option<OpenCtx> },
+    Write { ino: Ino, off: u64, data: Vec<u8>, open_ctx: Option<OpenCtx> },
+    /// Asynchronous close wrap-up (removes the opened-file entry).
+    Close { ino: Ino, client: ClientId, handle: u64 },
+    Create { dir: Ino, name: String, mode: u16, kind: FileKind, cred: Credentials, client: ClientId },
+    Mkdir { dir: Ino, name: String, mode: u16, cred: Credentials },
+    Unlink { dir: Ino, name: String, cred: Credentials },
+    Rmdir { dir: Ino, name: String, cred: Credentials },
+    Rename { sdir: Ino, sname: String, ddir: Ino, dname: String, cred: Credentials },
+    /// Permission change: triggers the §3.4 invalidate-then-apply protocol.
+    Chmod { ino: Ino, mode: u16, cred: Credentials },
+    Chown { ino: Ino, uid: u32, gid: u32, cred: Credentials },
+    Truncate { ino: Ino, size: u64, cred: Credentials },
+    Statfs { host: HostId },
+    /// Client liveness/registration handshake (gives the server the push
+    /// channel for invalidations).
+    Hello { client: ClientId },
+    /// Server↔server: run the §3.4 invalidate-and-ack barrier for a
+    /// directory this server owns (called by the server owning a child
+    /// inode whose dirent lives here).
+    PrepareInvalidate { dir: Ino },
+    /// Server↔server: sync a dirent's 10-byte perm blob after a remote
+    /// child's chmod/chown.
+    UpdateDirentPerm { dir: Ino, name: String, perm: crate::types::PermBlob },
+    /// Server↔server: allocate an object here whose dirent lives on the
+    /// calling (directory-owning) server — decentralized placement.
+    CreateOrphan { parent: Ino, name: String, mode: u16, kind: FileKind, uid: u32, gid: u32 },
+    /// Server↔server: drop a local object after its remote dirent was
+    /// unlinked.
+    DropObject { ino: Ino },
+    /// Lustre intent open: lookup + permission check + open record in ONE
+    /// MDS round trip (how real Lustre opens a path whose dentry is not
+    /// cached). The reply's `attr.ino` doubles as the dentry.
+    OpenByName { dir: Ino, name: String, flags: OpenFlags, cred: Credentials, client: ClientId, handle: u64, want_inline: bool },
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    Entry(DirEntry),
+    /// Directory attr + all entries (each carrying its 10-byte PermBlob).
+    Entries { dir: Attr, entries: Vec<DirEntry> },
+    AttrR(Attr),
+    /// Baseline open reply; `inline` carries DoM data when present.
+    Opened { attr: Attr, inline: Option<Vec<u8>> },
+    Data { data: Vec<u8>, size: u64 },
+    Written { written: u32, new_size: u64 },
+    Created(DirEntry),
+    Statfs { files: u64, bytes: u64 },
+    Unit,
+    Err(FsError),
+}
+
+/// Server→client push messages (the §3.4 consistency protocol).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Notify {
+    /// Invalidate cached tree nodes for these directories (and every
+    /// child entry hanging off them). Client must ack before the server
+    /// applies the permission change.
+    Invalidate { seq: u64, dirs: Vec<Ino> },
+}
+
+/// Client→server ack for a [`Notify::Invalidate`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NotifyAck {
+    pub client: ClientId,
+    pub seq: u64,
+}
+
+impl Request {
+    /// Short op name for metrics.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Lookup { .. } => "lookup",
+            Request::ReadDir { .. } => "readdir",
+            Request::GetAttr { .. } => "getattr",
+            Request::Open { .. } => "open",
+            Request::Read { .. } => "read",
+            Request::Write { .. } => "write",
+            Request::Close { .. } => "close",
+            Request::Create { .. } => "create",
+            Request::Mkdir { .. } => "mkdir",
+            Request::Unlink { .. } => "unlink",
+            Request::Rmdir { .. } => "rmdir",
+            Request::Rename { .. } => "rename",
+            Request::Chmod { .. } => "chmod",
+            Request::Chown { .. } => "chown",
+            Request::Truncate { .. } => "truncate",
+            Request::Statfs { .. } => "statfs",
+            Request::Hello { .. } => "hello",
+            Request::PrepareInvalidate { .. } => "invalidate",
+            Request::UpdateDirentPerm { .. } => "invalidate",
+            Request::CreateOrphan { .. } => "create",
+            Request::DropObject { .. } => "unlink",
+            Request::OpenByName { .. } => "open",
+        }
+    }
+
+    /// Metadata op (vs data op)? Used by the §2.1 motivation analyzer.
+    pub fn is_metadata(&self) -> bool {
+        !matches!(self, Request::Read { .. } | Request::Write { .. })
+    }
+
+    /// Approximate payload size for the bandwidth model.
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Request::Write { data, .. } => 64 + data.len(),
+            _ => 64,
+        }
+    }
+}
+
+impl Response {
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Response::Data { data, .. } => 32 + data.len(),
+            Response::Entries { entries, .. } => 64 + entries.len() * 48,
+            Response::Opened { inline, .. } => 64 + inline.as_ref().map_or(0, |d| d.len()),
+            _ => 32,
+        }
+    }
+
+    /// Unwrap into a result (errors become `Err`).
+    pub fn into_result(self) -> FsResult<Response> {
+        match self {
+            Response::Err(e) => Err(e),
+            other => Ok(other),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire impls
+// ---------------------------------------------------------------------------
+
+impl Wire for Credentials {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.uid);
+        e.u32(self.gid);
+        e.u32(self.groups.len() as u32);
+        for g in &self.groups {
+            e.u32(*g);
+        }
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        let uid = d.u32()?;
+        let gid = d.u32()?;
+        let n = d.u32()? as usize;
+        if n > 1024 {
+            return Err(FsError::Protocol(format!("too many groups: {n}")));
+        }
+        let mut groups = Vec::with_capacity(n);
+        for _ in 0..n {
+            groups.push(d.u32()?);
+        }
+        Ok(Credentials { uid, gid, groups })
+    }
+}
+
+impl Wire for OpenCtx {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.client);
+        e.u64(self.handle);
+        self.flags.enc(e);
+        self.cred.enc(e);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(OpenCtx {
+            client: d.u32()?,
+            handle: d.u64()?,
+            flags: OpenFlags::dec(d)?,
+            cred: Credentials::dec(d)?,
+        })
+    }
+}
+
+macro_rules! tagged {
+    ($e:expr, $tag:expr) => {{
+        $e.u8($tag);
+    }};
+}
+
+impl Wire for Request {
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            Request::Lookup { dir, name, cred } => {
+                tagged!(e, 0);
+                dir.enc(e);
+                e.str(name);
+                cred.enc(e);
+            }
+            Request::ReadDir { dir, client, register, cred } => {
+                tagged!(e, 1);
+                dir.enc(e);
+                e.u32(*client);
+                e.bool(*register);
+                cred.enc(e);
+            }
+            Request::GetAttr { ino } => {
+                tagged!(e, 2);
+                ino.enc(e);
+            }
+            Request::Open { ino, flags, cred, client, handle, want_inline } => {
+                tagged!(e, 3);
+                ino.enc(e);
+                flags.enc(e);
+                cred.enc(e);
+                e.u32(*client);
+                e.u64(*handle);
+                e.bool(*want_inline);
+            }
+            Request::Read { ino, off, len, open_ctx } => {
+                tagged!(e, 4);
+                ino.enc(e);
+                e.u64(*off);
+                e.u32(*len);
+                open_ctx.enc(e);
+            }
+            Request::Write { ino, off, data, open_ctx } => {
+                tagged!(e, 5);
+                ino.enc(e);
+                e.u64(*off);
+                e.bytes(data);
+                open_ctx.enc(e);
+            }
+            Request::Close { ino, client, handle } => {
+                tagged!(e, 6);
+                ino.enc(e);
+                e.u32(*client);
+                e.u64(*handle);
+            }
+            Request::Create { dir, name, mode, kind, cred, client } => {
+                tagged!(e, 7);
+                dir.enc(e);
+                e.str(name);
+                e.u16(*mode);
+                kind.enc(e);
+                cred.enc(e);
+                e.u32(*client);
+            }
+            Request::Mkdir { dir, name, mode, cred } => {
+                tagged!(e, 8);
+                dir.enc(e);
+                e.str(name);
+                e.u16(*mode);
+                cred.enc(e);
+            }
+            Request::Unlink { dir, name, cred } => {
+                tagged!(e, 9);
+                dir.enc(e);
+                e.str(name);
+                cred.enc(e);
+            }
+            Request::Rmdir { dir, name, cred } => {
+                tagged!(e, 10);
+                dir.enc(e);
+                e.str(name);
+                cred.enc(e);
+            }
+            Request::Rename { sdir, sname, ddir, dname, cred } => {
+                tagged!(e, 11);
+                sdir.enc(e);
+                e.str(sname);
+                ddir.enc(e);
+                e.str(dname);
+                cred.enc(e);
+            }
+            Request::Chmod { ino, mode, cred } => {
+                tagged!(e, 12);
+                ino.enc(e);
+                e.u16(*mode);
+                cred.enc(e);
+            }
+            Request::Chown { ino, uid, gid, cred } => {
+                tagged!(e, 13);
+                ino.enc(e);
+                e.u32(*uid);
+                e.u32(*gid);
+                cred.enc(e);
+            }
+            Request::Truncate { ino, size, cred } => {
+                tagged!(e, 14);
+                ino.enc(e);
+                e.u64(*size);
+                cred.enc(e);
+            }
+            Request::Statfs { host } => {
+                tagged!(e, 15);
+                e.u16(*host);
+            }
+            Request::Hello { client } => {
+                tagged!(e, 16);
+                e.u32(*client);
+            }
+            Request::PrepareInvalidate { dir } => {
+                tagged!(e, 17);
+                dir.enc(e);
+            }
+            Request::UpdateDirentPerm { dir, name, perm } => {
+                tagged!(e, 18);
+                dir.enc(e);
+                e.str(name);
+                perm.enc(e);
+            }
+            Request::CreateOrphan { parent, name, mode, kind, uid, gid } => {
+                tagged!(e, 19);
+                parent.enc(e);
+                e.str(name);
+                e.u16(*mode);
+                kind.enc(e);
+                e.u32(*uid);
+                e.u32(*gid);
+            }
+            Request::DropObject { ino } => {
+                tagged!(e, 20);
+                ino.enc(e);
+            }
+            Request::OpenByName { dir, name, flags, cred, client, handle, want_inline } => {
+                tagged!(e, 21);
+                dir.enc(e);
+                e.str(name);
+                flags.enc(e);
+                cred.enc(e);
+                e.u32(*client);
+                e.u64(*handle);
+                e.bool(*want_inline);
+            }
+        }
+    }
+
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(match d.u8()? {
+            0 => Request::Lookup { dir: Ino::dec(d)?, name: d.str()?, cred: Credentials::dec(d)? },
+            1 => Request::ReadDir {
+                dir: Ino::dec(d)?,
+                client: d.u32()?,
+                register: d.bool()?,
+                cred: Credentials::dec(d)?,
+            },
+            2 => Request::GetAttr { ino: Ino::dec(d)? },
+            3 => Request::Open {
+                ino: Ino::dec(d)?,
+                flags: OpenFlags::dec(d)?,
+                cred: Credentials::dec(d)?,
+                client: d.u32()?,
+                handle: d.u64()?,
+                want_inline: d.bool()?,
+            },
+            4 => Request::Read {
+                ino: Ino::dec(d)?,
+                off: d.u64()?,
+                len: d.u32()?,
+                open_ctx: Option::<OpenCtx>::dec(d)?,
+            },
+            5 => Request::Write {
+                ino: Ino::dec(d)?,
+                off: d.u64()?,
+                data: d.bytes()?,
+                open_ctx: Option::<OpenCtx>::dec(d)?,
+            },
+            6 => Request::Close { ino: Ino::dec(d)?, client: d.u32()?, handle: d.u64()? },
+            7 => Request::Create {
+                dir: Ino::dec(d)?,
+                name: d.str()?,
+                mode: d.u16()?,
+                kind: FileKind::dec(d)?,
+                cred: Credentials::dec(d)?,
+                client: d.u32()?,
+            },
+            8 => Request::Mkdir { dir: Ino::dec(d)?, name: d.str()?, mode: d.u16()?, cred: Credentials::dec(d)? },
+            9 => Request::Unlink { dir: Ino::dec(d)?, name: d.str()?, cred: Credentials::dec(d)? },
+            10 => Request::Rmdir { dir: Ino::dec(d)?, name: d.str()?, cred: Credentials::dec(d)? },
+            11 => Request::Rename {
+                sdir: Ino::dec(d)?,
+                sname: d.str()?,
+                ddir: Ino::dec(d)?,
+                dname: d.str()?,
+                cred: Credentials::dec(d)?,
+            },
+            12 => Request::Chmod { ino: Ino::dec(d)?, mode: d.u16()?, cred: Credentials::dec(d)? },
+            13 => Request::Chown { ino: Ino::dec(d)?, uid: d.u32()?, gid: d.u32()?, cred: Credentials::dec(d)? },
+            14 => Request::Truncate { ino: Ino::dec(d)?, size: d.u64()?, cred: Credentials::dec(d)? },
+            15 => Request::Statfs { host: d.u16()? },
+            16 => Request::Hello { client: d.u32()? },
+            17 => Request::PrepareInvalidate { dir: Ino::dec(d)? },
+            18 => Request::UpdateDirentPerm {
+                dir: Ino::dec(d)?,
+                name: d.str()?,
+                perm: crate::types::PermBlob::dec(d)?,
+            },
+            19 => Request::CreateOrphan {
+                parent: Ino::dec(d)?,
+                name: d.str()?,
+                mode: d.u16()?,
+                kind: FileKind::dec(d)?,
+                uid: d.u32()?,
+                gid: d.u32()?,
+            },
+            20 => Request::DropObject { ino: Ino::dec(d)? },
+            21 => Request::OpenByName {
+                dir: Ino::dec(d)?,
+                name: d.str()?,
+                flags: OpenFlags::dec(d)?,
+                cred: Credentials::dec(d)?,
+                client: d.u32()?,
+                handle: d.u64()?,
+                want_inline: d.bool()?,
+            },
+            t => return Err(FsError::Protocol(format!("bad request tag {t}"))),
+        })
+    }
+}
+
+impl Wire for Response {
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            Response::Entry(de) => {
+                tagged!(e, 0);
+                de.enc(e);
+            }
+            Response::Entries { dir, entries } => {
+                tagged!(e, 1);
+                dir.enc(e);
+                entries.enc(e);
+            }
+            Response::AttrR(a) => {
+                tagged!(e, 2);
+                a.enc(e);
+            }
+            Response::Opened { attr, inline } => {
+                tagged!(e, 3);
+                attr.enc(e);
+                match inline {
+                    None => e.u8(0),
+                    Some(data) => {
+                        e.u8(1);
+                        e.bytes(data);
+                    }
+                }
+            }
+            Response::Data { data, size } => {
+                tagged!(e, 4);
+                e.bytes(data);
+                e.u64(*size);
+            }
+            Response::Written { written, new_size } => {
+                tagged!(e, 5);
+                e.u32(*written);
+                e.u64(*new_size);
+            }
+            Response::Created(de) => {
+                tagged!(e, 6);
+                de.enc(e);
+            }
+            Response::Statfs { files, bytes } => {
+                tagged!(e, 7);
+                e.u64(*files);
+                e.u64(*bytes);
+            }
+            Response::Unit => tagged!(e, 8),
+            Response::Err(err) => {
+                tagged!(e, 9);
+                let (code, msg) = err.to_wire();
+                e.u16(code);
+                e.str(msg);
+                e.u16(err.wire_aux());
+            }
+        }
+    }
+
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(match d.u8()? {
+            0 => Response::Entry(DirEntry::dec(d)?),
+            1 => Response::Entries { dir: Attr::dec(d)?, entries: Vec::<DirEntry>::dec(d)? },
+            2 => Response::AttrR(Attr::dec(d)?),
+            3 => {
+                let attr = Attr::dec(d)?;
+                let inline = match d.u8()? {
+                    0 => None,
+                    1 => Some(d.bytes()?),
+                    t => return Err(FsError::Protocol(format!("bad inline tag {t}"))),
+                };
+                Response::Opened { attr, inline }
+            }
+            4 => Response::Data { data: d.bytes()?, size: d.u64()? },
+            5 => Response::Written { written: d.u32()?, new_size: d.u64()? },
+            6 => Response::Created(DirEntry::dec(d)?),
+            7 => Response::Statfs { files: d.u64()?, bytes: d.u64()? },
+            8 => Response::Unit,
+            9 => {
+                let code = d.u16()?;
+                let msg = d.str()?;
+                let aux = d.u16()?;
+                Response::Err(FsError::from_wire(code, msg, aux))
+            }
+            t => return Err(FsError::Protocol(format!("bad response tag {t}"))),
+        })
+    }
+}
+
+impl Wire for Notify {
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            Notify::Invalidate { seq, dirs } => {
+                e.u8(0);
+                e.u64(*seq);
+                dirs.enc(e);
+            }
+        }
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(match d.u8()? {
+            0 => Notify::Invalidate { seq: d.u64()?, dirs: Vec::<Ino>::dec(d)? },
+            t => return Err(FsError::Protocol(format!("bad notify tag {t}"))),
+        })
+    }
+}
+
+impl Wire for NotifyAck {
+    fn enc(&self, e: &mut Enc) {
+        e.u32(self.client);
+        e.u64(self.seq);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(NotifyAck { client: d.u32()?, seq: d.u64()? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::PermBlob;
+    use crate::util::rng::XorShift;
+
+    fn cred() -> Credentials {
+        Credentials::with_groups(1000, 1000, vec![4, 24])
+    }
+
+    fn sample_requests() -> Vec<Request> {
+        let ino = Ino::new(1, 0, 42);
+        let ctx = OpenCtx { client: 3, handle: 7, flags: OpenFlags::RDWR, cred: cred() };
+        vec![
+            Request::Lookup { dir: ino, name: "a".into(), cred: cred() },
+            Request::ReadDir { dir: ino, client: 3, register: true, cred: cred() },
+            Request::GetAttr { ino },
+            Request::Open { ino, flags: OpenFlags::RDONLY, cred: cred(), client: 3, handle: 9, want_inline: true },
+            Request::Read { ino, off: 4096, len: 4096, open_ctx: Some(ctx.clone()) },
+            Request::Write { ino, off: 0, data: vec![9; 100], open_ctx: None },
+            Request::Close { ino, client: 3, handle: 7 },
+            Request::Create { dir: ino, name: "f".into(), mode: 0o644, kind: FileKind::Regular, cred: cred(), client: 3 },
+            Request::Mkdir { dir: ino, name: "d".into(), mode: 0o755, cred: cred() },
+            Request::Unlink { dir: ino, name: "f".into(), cred: cred() },
+            Request::Rmdir { dir: ino, name: "d".into(), cred: cred() },
+            Request::Rename { sdir: ino, sname: "x".into(), ddir: ino, dname: "y".into(), cred: cred() },
+            Request::Chmod { ino, mode: 0o600, cred: cred() },
+            Request::Chown { ino, uid: 1, gid: 2, cred: cred() },
+            Request::Truncate { ino, size: 0, cred: cred() },
+            Request::Statfs { host: 2 },
+            Request::Hello { client: 5 },
+            Request::PrepareInvalidate { dir: ino },
+            Request::UpdateDirentPerm { dir: ino, name: "f".into(), perm: PermBlob::new(0o600, 1, 2) },
+            Request::CreateOrphan { parent: ino, name: "o".into(), mode: 0o644, kind: FileKind::Regular, uid: 1, gid: 2 },
+            Request::DropObject { ino },
+            Request::OpenByName { dir: ino, name: "f".into(), flags: OpenFlags::RDONLY, cred: cred(), client: 1, handle: 2, want_inline: true },
+        ]
+    }
+
+    fn sample_responses() -> Vec<Response> {
+        let attr = Attr {
+            ino: Ino::new(1, 0, 42),
+            kind: FileKind::Regular,
+            perm: PermBlob::new(0o644, 1, 2),
+            size: 4096,
+            nlink: 1,
+            atime: 1,
+            mtime: 2,
+            ctime: 3,
+        };
+        let de = DirEntry {
+            name: "foo".into(),
+            ino: attr.ino,
+            kind: FileKind::Regular,
+            perm: attr.perm,
+        };
+        vec![
+            Response::Entry(de.clone()),
+            Response::Entries { dir: attr.clone(), entries: vec![de.clone(), de.clone()] },
+            Response::AttrR(attr.clone()),
+            Response::Opened { attr: attr.clone(), inline: Some(vec![1, 2, 3]) },
+            Response::Opened { attr: attr.clone(), inline: None },
+            Response::Data { data: vec![0; 4096], size: 4096 },
+            Response::Written { written: 100, new_size: 100 },
+            Response::Created(de),
+            Response::Statfs { files: 10, bytes: 40960 },
+            Response::Unit,
+            Response::Err(FsError::PermissionDenied),
+            Response::Err(FsError::NoSuchServer(3)),
+        ]
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        for r in sample_requests() {
+            let back = Request::from_bytes(&r.to_bytes()).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        for r in sample_responses() {
+            let back = Response::from_bytes(&r.to_bytes()).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn notify_roundtrip() {
+        let n = Notify::Invalidate { seq: 9, dirs: vec![Ino::new(1, 0, 2), Ino::new(2, 1, 3)] };
+        assert_eq!(Notify::from_bytes(&n.to_bytes()).unwrap(), n);
+        let a = NotifyAck { client: 4, seq: 9 };
+        assert_eq!(NotifyAck::from_bytes(&a.to_bytes()).unwrap(), a);
+    }
+
+    #[test]
+    fn every_request_truncation_fails_cleanly() {
+        for r in sample_requests() {
+            let bytes = r.to_bytes();
+            for cut in 0..bytes.len() {
+                assert!(Request::from_bytes(&bytes[..cut]).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn op_names_and_metadata_classification() {
+        for r in sample_requests() {
+            assert!(!r.op().is_empty());
+        }
+        assert!(Request::GetAttr { ino: Ino::new(0, 0, 0) }.is_metadata());
+        assert!(!Request::Read { ino: Ino::new(0, 0, 0), off: 0, len: 1, open_ctx: None }.is_metadata());
+    }
+
+    #[test]
+    fn fuzz_decode_never_panics() {
+        let mut r = XorShift::new(0xfeed);
+        for _ in 0..5000 {
+            let n = r.below(200) as usize;
+            let garbage: Vec<u8> = (0..n).map(|_| r.next_u64() as u8).collect();
+            let _ = Request::from_bytes(&garbage);
+            let _ = Response::from_bytes(&garbage);
+            let _ = Notify::from_bytes(&garbage);
+        }
+    }
+}

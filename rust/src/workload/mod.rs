@@ -1,0 +1,274 @@
+//! Workload generation: file sets, access streams, and the §2.1
+//! motivation-trace analyzer.
+//!
+//! File-set construction bypasses the simulated network and the service
+//! capacity model entirely (direct server calls) — the paper regenerates
+//! its 100 000-file set before every test and does not measure setup.
+
+pub mod motivation;
+
+
+use crate::baseline::{LustreCluster, LustreMode, MdsServer};
+use crate::cluster::BuffetCluster;
+use crate::error::FsResult;
+use crate::transport::Service;
+use crate::types::{Credentials, FileKind, Ino};
+use crate::util::rng::XorShift;
+use crate::wire::{Request, Response};
+
+/// The Fig. 4 file population: `n_files` files of `file_size` bytes spread
+/// over `n_dirs` directories ("file quantity: 100,000, file size: 4KB").
+#[derive(Clone, Copy, Debug)]
+pub struct FileSetSpec {
+    pub n_files: usize,
+    pub n_dirs: usize,
+    pub file_size: u32,
+    /// Owner of the generated files (processes run with this uid/gid).
+    pub uid: u32,
+    pub gid: u32,
+}
+
+impl FileSetSpec {
+    pub fn paper_scale() -> FileSetSpec {
+        FileSetSpec { n_files: 100_000, n_dirs: 100, file_size: 4096, uid: 1000, gid: 1000 }
+    }
+
+    pub fn scaled(self, factor: usize) -> FileSetSpec {
+        FileSetSpec {
+            n_files: (self.n_files / factor.max(1)).max(self.n_dirs),
+            ..self
+        }
+    }
+
+    pub fn dir_name(&self, i: usize) -> String {
+        format!("d{:03}", i % self.n_dirs)
+    }
+
+    pub fn dir_path(&self, i: usize) -> String {
+        format!("/{}", self.dir_name(i))
+    }
+
+    /// Path of file `i` (files round-robin over directories).
+    pub fn path(&self, i: usize) -> String {
+        format!("/{}/f{:06}.dat", self.dir_name(i), i)
+    }
+}
+
+/// Build the file set on a BuffetFS cluster via direct (unmetered)
+/// server calls. Returns the per-file payload used.
+pub fn build_fileset_buffet(cluster: &BuffetCluster, spec: &FileSetSpec) -> FsResult<Vec<u8>> {
+    let cred = Credentials::root();
+    let root = cluster.root();
+    let s0 = &cluster.servers[0];
+    let payload = vec![0xabu8; spec.file_size as usize];
+    let mut dirs: Vec<Ino> = Vec::with_capacity(spec.n_dirs);
+    for d in 0..spec.n_dirs {
+        let resp = s0.handle(Request::Mkdir {
+            dir: root,
+            name: spec.dir_name(d),
+            mode: 0o755,
+            cred: cred.clone(),
+        });
+        match resp {
+            Response::Created(e) => {
+                // hand the directory to the workload user so its
+                // processes can populate and later write files
+                s0.fs.chown_apply(e.ino.file, spec.uid, spec.gid)?;
+                dirs.push(e.ino);
+            }
+            other => return Err(unexpected(other)),
+        }
+    }
+    for i in 0..spec.n_files {
+        let dir = dirs[i % spec.n_dirs];
+        let resp = s0.handle(Request::Create {
+            dir,
+            name: format!("f{i:06}.dat"),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: Credentials::with_groups(spec.uid, spec.gid, vec![]),
+            client: 0,
+        });
+        let ino = match resp {
+            Response::Created(e) => e.ino,
+            other => return Err(unexpected(other)),
+        };
+        // data may live on another server in spread mode
+        let owner = &cluster.servers[ino.host as usize];
+        match owner.handle(Request::Write { ino, off: 0, data: payload.clone(), open_ctx: None }) {
+            Response::Written { .. } => {}
+            other => return Err(unexpected(other)),
+        }
+    }
+    Ok(payload)
+}
+
+/// Same for a Lustre cluster: namespace on the MDS, data on the
+/// layout-selected OSS (Normal) or the MDS itself (DoM).
+pub fn build_fileset_lustre(cluster: &LustreCluster, spec: &FileSetSpec) -> FsResult<Vec<u8>> {
+    let cred = Credentials::root();
+    let root = cluster.mds.fs.root_ino();
+    let payload = vec![0xabu8; spec.file_size as usize];
+    let mut dirs: Vec<Ino> = Vec::with_capacity(spec.n_dirs);
+    for d in 0..spec.n_dirs {
+        match cluster.mds.handle(Request::Mkdir {
+            dir: root,
+            name: spec.dir_name(d),
+            mode: 0o755,
+            cred: cred.clone(),
+        }) {
+            Response::Created(e) => {
+                cluster.mds.fs.chown_apply(e.ino.file, spec.uid, spec.gid)?;
+                dirs.push(e.ino);
+            }
+            other => return Err(unexpected(other)),
+        }
+    }
+    let dom = matches!(cluster.mode, LustreMode::Dom { .. });
+    for i in 0..spec.n_files {
+        let dir = dirs[i % spec.n_dirs];
+        let ino = match cluster.mds.handle(Request::Create {
+            dir,
+            name: format!("f{i:06}.dat"),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: Credentials::with_groups(spec.uid, spec.gid, vec![]),
+            client: 0,
+        }) {
+            Response::Created(e) => e.ino,
+            other => return Err(unexpected(other)),
+        };
+        if dom {
+            // DoM: small-file data resides on the MDS
+            match cluster.mds.handle(Request::Write { ino, off: 0, data: payload.clone(), open_ctx: None }) {
+                Response::Written { .. } => {}
+                other => return Err(unexpected(other)),
+            }
+        } else {
+            let host = MdsServer::oss_for(cluster.osses.len() as u16, ino.file);
+            let oss = &cluster.osses[(host - 1) as usize];
+            match oss.handle(Request::Write {
+                ino: Ino::new(host, 0, ino.file),
+                off: 0,
+                data: payload.clone(),
+                open_ctx: None,
+            }) {
+                Response::Written { .. } => {}
+                other => return Err(unexpected(other)),
+            }
+            // keep the MDS's size metadata honest (Lustre gets this via
+            // OSS glimpse; we shortcut at setup time)
+            let file = ino.file;
+            cluster.mds.fs.force_size(file, spec.file_size as u64);
+        }
+    }
+    Ok(payload)
+}
+
+fn unexpected(r: Response) -> crate::error::FsError {
+    crate::error::FsError::Protocol(format!("fileset setup: unexpected {r:?}"))
+}
+
+/// Random access stream over a file set ("randomly accesses 1000 files
+/// among 100000"). `zipf_s = 0` is the paper's uniform choice.
+pub struct AccessStream {
+    rng: XorShift,
+    n_files: usize,
+    zipf_s: f64,
+}
+
+impl AccessStream {
+    pub fn new(seed: u64, n_files: usize, zipf_s: f64) -> AccessStream {
+        AccessStream { rng: XorShift::new(seed), n_files, zipf_s }
+    }
+
+    pub fn next_index(&mut self) -> usize {
+        if self.zipf_s > 0.0 {
+            self.rng.zipf(self.n_files as u64, self.zipf_s) as usize
+        } else {
+            self.rng.below(self.n_files as u64) as usize
+        }
+    }
+}
+
+/// Worker credential for generated workloads (owner of the file set).
+pub fn workload_cred(spec: &FileSetSpec) -> Credentials {
+    Credentials::with_groups(spec.uid, spec.gid, vec![])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Backing;
+    use crate::simnet::NetConfig;
+    use crate::transport::capacity::ServiceConfig;
+
+    fn tiny_spec() -> FileSetSpec {
+        FileSetSpec { n_files: 50, n_dirs: 5, file_size: 256, uid: 1000, gid: 1000 }
+    }
+
+    #[test]
+    fn paths_are_stable_and_partitioned() {
+        let s = tiny_spec();
+        assert_eq!(s.path(0), "/d000/f000000.dat");
+        assert_eq!(s.path(7), "/d002/f000007.dat");
+        assert_eq!(s.dir_path(7), "/d002");
+    }
+
+    #[test]
+    fn buffet_fileset_readable_by_owner() {
+        let cluster = BuffetCluster::spawn_with(
+            1,
+            NetConfig::zero(),
+            Backing::Mem,
+            false,
+            ServiceConfig::unbounded(),
+        );
+        let spec = tiny_spec();
+        let payload = build_fileset_buffet(&cluster, &spec).unwrap();
+        let (agent, metrics) = cluster.make_agent();
+        let p = crate::blib::Buffet::process(agent, workload_cred(&spec));
+        let data = p.get(&spec.path(13), spec.file_size).unwrap();
+        assert_eq!(data, payload);
+        // one readdir (dir fetch) + one read; open cost zero RPCs
+        assert_eq!(metrics.count("open"), 0);
+        assert_eq!(metrics.count("read"), 1);
+    }
+
+    #[test]
+    fn lustre_fileset_readable_both_modes() {
+        for mode in [LustreMode::Normal, LustreMode::dom_default()] {
+            let cluster = LustreCluster::spawn_with(
+                4,
+                mode,
+                NetConfig::zero(),
+                Backing::Mem,
+                ServiceConfig::unbounded(),
+            );
+            let spec = tiny_spec();
+            let payload = build_fileset_lustre(&cluster, &spec).unwrap();
+            let (client, metrics) = cluster.make_client();
+            let cred = workload_cred(&spec);
+            let data = client.get(1, &spec.path(3), spec.file_size, &cred).unwrap();
+            assert_eq!(data, payload, "mode {mode:?}");
+            assert_eq!(metrics.count("open"), 1, "Lustre must RPC the open");
+            if mode == LustreMode::Normal {
+                assert_eq!(metrics.count("read"), 1);
+            } else {
+                assert_eq!(metrics.count("read"), 0, "DoM read must be served inline");
+            }
+        }
+    }
+
+    #[test]
+    fn access_stream_uniform_covers_range() {
+        let mut s = AccessStream::new(7, 100, 0.0);
+        let mut seen = vec![false; 100];
+        for _ in 0..5000 {
+            let i = s.next_index();
+            assert!(i < 100);
+            seen[i] = true;
+        }
+        assert!(seen.iter().filter(|&&b| b).count() > 90);
+    }
+}

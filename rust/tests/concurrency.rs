@@ -1,0 +1,167 @@
+//! Concurrency: many client processes hammering the stack at once —
+//! server-side lock correctness, deferred-open idempotency under racing
+//! first-reads, and capacity-model sanity.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::{Credentials, OpenFlags};
+
+fn cluster() -> BuffetCluster {
+    BuffetCluster::spawn_with(
+        2,
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 5 },
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    )
+}
+
+#[test]
+fn concurrent_writers_never_tear_whole_file_writes() {
+    let c = cluster();
+    let (agent, _) = c.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.put("/hot", &[0u8; 512]).unwrap();
+
+    // 8 writers each rewrite the whole file with their own byte; the
+    // server's exclusive write lock must keep every snapshot uniform
+    std::thread::scope(|scope| {
+        for w in 0..8u8 {
+            let agent = agent.clone();
+            scope.spawn(move || {
+                let p = Buffet::process(agent, Credentials::root());
+                for _ in 0..50 {
+                    let fd = p.open("/hot", OpenFlags::WRONLY).unwrap();
+                    p.pwrite(fd, 0, &[w + 1; 512]).unwrap();
+                    p.close(fd).unwrap();
+                }
+            });
+        }
+        let agent = agent.clone();
+        scope.spawn(move || {
+            let p = Buffet::process(agent, Credentials::root());
+            for _ in 0..200 {
+                let data = p.get("/hot", 512).unwrap();
+                assert!(!data.is_empty());
+                let first = data[0];
+                assert!(
+                    data.iter().all(|&b| b == first),
+                    "torn read: saw mixed bytes {:?}…",
+                    &data[..8]
+                );
+            }
+        });
+    });
+}
+
+#[test]
+fn racing_first_reads_complete_open_exactly_once() {
+    let c = cluster();
+    let (agent, _) = c.make_agent();
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.put("/race", &[1u8; 64]).unwrap();
+    p.get("/race", 1).unwrap(); // warm
+    let file = p.stat("/race").unwrap().ino.file;
+
+    let fd = p.open("/race", OpenFlags::RDONLY).unwrap();
+    let pid = p.pid();
+    // many threads race pread on the SAME incomplete fd
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            let agent = agent.clone();
+            scope.spawn(move || {
+                for _ in 0..20 {
+                    agent.pread(pid, fd, 0, 8).unwrap();
+                }
+            });
+        }
+    });
+    assert_eq!(
+        c.servers[0].openers_of(file),
+        1,
+        "deferred open must be recorded exactly once per handle"
+    );
+    p.close(fd).unwrap();
+}
+
+#[test]
+fn many_processes_many_files_all_data_correct() {
+    let c = cluster();
+    let (agent, _) = c.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/farm", 0o777).unwrap();
+    let total = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|scope| {
+        for w in 0..16 {
+            let agent = agent.clone();
+            let total = Arc::clone(&total);
+            scope.spawn(move || {
+                let p = Buffet::process(agent, Credentials::new(1000 + w, 1000));
+                for i in 0..25 {
+                    let path = format!("/farm/w{w}-{i}");
+                    let body = format!("{w}:{i}");
+                    p.put(&path, body.as_bytes()).unwrap();
+                    let back = p.get(&path, 64).unwrap();
+                    assert_eq!(back, body.as_bytes());
+                    total.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    assert_eq!(total.load(Ordering::Relaxed), 16 * 25);
+    assert_eq!(admin.readdir("/farm").unwrap().len(), 16 * 25);
+}
+
+#[test]
+fn bounded_capacity_under_load_still_correct() {
+    // 1 service slot: heavy queueing, but every byte still lands
+    let c = BuffetCluster::spawn_with(
+        1,
+        NetConfig::zero(),
+        Backing::Mem,
+        false,
+        ServiceConfig { slots: 1, meta_us: 50, data_us: 50, data_us_per_4k: 0 },
+    );
+    let (agent, _) = c.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/q", 0o777).unwrap();
+    std::thread::scope(|scope| {
+        for w in 0..6 {
+            let agent = agent.clone();
+            scope.spawn(move || {
+                let p = Buffet::process(agent, Credentials::root());
+                for i in 0..10 {
+                    p.put(&format!("/q/{w}-{i}"), &[w as u8; 128]).unwrap();
+                }
+            });
+        }
+    });
+    assert_eq!(admin.readdir("/q").unwrap().len(), 60);
+}
+
+#[test]
+fn async_closes_drain_under_churn() {
+    let c = cluster();
+    let (agent, _) = c.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.put("/churn", &[1u8; 32]).unwrap();
+    let file = p.stat("/churn").unwrap().ino.file;
+    for _ in 0..100 {
+        let fd = p.open("/churn", OpenFlags::RDONLY).unwrap();
+        p.read(fd, 4).unwrap();
+        p.close(fd).unwrap();
+    }
+    for _ in 0..200 {
+        if c.servers[0].openers_of(file) == 0 {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("async close backlog never drained: {} open", c.servers[0].openers_of(file));
+}

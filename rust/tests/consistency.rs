@@ -1,0 +1,139 @@
+//! The §3.4 strong-consistency protocol, end to end: invalidate every
+//! caching client, collect acks, only then apply — so no client can ever
+//! act on stale permission bits.
+
+use std::sync::atomic::Ordering;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::error::FsError;
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::{Credentials, OpenFlags};
+
+fn cluster() -> BuffetCluster {
+    BuffetCluster::spawn_with(
+        1,
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 3 },
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    )
+}
+
+#[test]
+fn chmod_invalidates_other_clients_before_applying() {
+    let c = cluster();
+    let (agent_a, _) = c.make_agent();
+    let (agent_b, _) = c.make_agent();
+    let admin = Buffet::process(agent_a.clone(), Credentials::root());
+    admin.mkdir("/shared", 0o755).unwrap();
+    admin.put("/shared/f", b"payload!").unwrap();
+    admin.chmod("/shared/f", 0o644).unwrap();
+
+    // B warms its cache and can read
+    let b = Buffet::process(agent_b.clone(), Credentials::new(500, 500));
+    assert_eq!(b.get("/shared/f", 8).unwrap(), b"payload!");
+    assert_eq!(c.servers[0].clients_caching(b.stat("/shared/f").unwrap().ino.file), Vec::<u32>::new());
+
+    // A revokes world-read; the server must have pushed an invalidation
+    // to B (and A) before the chmod returned
+    admin.chmod("/shared/f", 0o600).unwrap();
+    assert!(agent_b.stats.invalidations_rx.load(Ordering::Relaxed) >= 1);
+
+    // B's very next open re-fetches and is denied — no staleness window
+    assert_eq!(b.open("/shared/f", OpenFlags::RDONLY).unwrap_err(), FsError::PermissionDenied);
+
+    // and in the grant direction too: loosening propagates
+    admin.chmod("/shared/f", 0o444).unwrap();
+    assert_eq!(b.get("/shared/f", 8).unwrap(), b"payload!");
+}
+
+#[test]
+fn barrier_covers_all_caching_clients() {
+    let c = cluster();
+    let (admin_agent, _) = c.make_agent();
+    let admin = Buffet::process(admin_agent, Credentials::root());
+    admin.mkdir("/pop", 0o755).unwrap();
+    admin.put("/pop/f", b"x").unwrap();
+
+    let agents: Vec<_> = (0..8).map(|_| c.make_agent().0).collect();
+    for a in &agents {
+        let p = Buffet::process(a.clone(), Credentials::new(1, 1));
+        p.stat("/pop/f").unwrap(); // warms + registers
+    }
+    let pushed_before = c.servers[0].stats.invalidations_pushed.load(Ordering::Relaxed);
+    admin.chmod("/pop/f", 0o640).unwrap();
+    let pushed = c.servers[0].stats.invalidations_pushed.load(Ordering::Relaxed) - pushed_before;
+    assert!(pushed >= 8, "expected ≥8 invalidation pushes, saw {pushed}");
+    for a in &agents {
+        assert!(a.stats.invalidations_rx.load(Ordering::Relaxed) >= 1);
+    }
+}
+
+#[test]
+fn namespace_mutations_invalidate_too() {
+    // §3.4: "other metadata modifications, such as changing file name …
+    // need to ask the related clients to invalidate"
+    let c = cluster();
+    let (agent_a, _) = c.make_agent();
+    let (agent_b, metrics_b) = c.make_agent();
+    let a = Buffet::process(agent_a, Credentials::root());
+    a.mkdir("/ns", 0o755).unwrap();
+    a.put("/ns/old", b"v").unwrap();
+
+    let b = Buffet::process(agent_b.clone(), Credentials::root());
+    b.get("/ns/old", 1).unwrap(); // B caches /ns
+
+    a.rename("/ns/old", "/ns/new").unwrap();
+    // B's cached listing was invalidated; next access refetches and sees
+    // the new name (no stale ENOENT from the cache)
+    let before = metrics_b.total_rpcs();
+    assert_eq!(b.get("/ns/new", 1).unwrap(), b"v");
+    assert!(metrics_b.total_rpcs() > before, "B must refetch after rename invalidation");
+    assert_eq!(b.open("/ns/old", OpenFlags::RDONLY).unwrap_err(), FsError::NotFound);
+
+    // unlink through A likewise invalidates B
+    let rx_before = agent_b.stats.invalidations_rx.load(Ordering::Relaxed);
+    a.unlink("/ns/new").unwrap();
+    assert!(agent_b.stats.invalidations_rx.load(Ordering::Relaxed) > rx_before);
+    assert_eq!(b.open("/ns/new", OpenFlags::RDONLY).unwrap_err(), FsError::NotFound);
+}
+
+#[test]
+fn chown_propagates_ownership_to_cached_blobs() {
+    let c = cluster();
+    let (agent_a, _) = c.make_agent();
+    let (agent_b, _) = c.make_agent();
+    let admin = Buffet::process(agent_a, Credentials::root());
+    admin.mkdir("/own", 0o755).unwrap();
+    admin.put("/own/f", b"z").unwrap();
+    admin.chmod("/own/f", 0o640).unwrap(); // owner rw, group r
+
+    let b = Buffet::process(agent_b, Credentials::new(800, 800));
+    assert_eq!(b.open("/own/f", OpenFlags::RDONLY).unwrap_err(), FsError::PermissionDenied);
+    // give the file to uid 800
+    admin.chown("/own/f", 800, 800).unwrap();
+    assert_eq!(b.get("/own/f", 1).unwrap(), b"z");
+    // B's local blob now carries the new owner — a *write* open is local-checked too
+    let fd = b.open("/own/f", OpenFlags::RDWR).unwrap();
+    b.close(fd).unwrap();
+}
+
+#[test]
+fn self_inflicted_invalidation_keeps_own_cache_coherent() {
+    // the chmod-issuing client also caches the dir; the barrier must not
+    // deadlock on it and its own next check must see the new bits
+    let c = cluster();
+    let (agent, _) = c.make_agent();
+    let owner = Buffet::process(agent.clone(), Credentials::new(100, 100));
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/self", 0o777).unwrap();
+    owner.put("/self/mine", b"m").unwrap();
+    owner.get("/self/mine", 1).unwrap();
+
+    owner.chmod("/self/mine", 0o000).unwrap(); // revoke even own read
+    assert_eq!(owner.open("/self/mine", OpenFlags::RDONLY).unwrap_err(), FsError::PermissionDenied);
+    owner.chmod("/self/mine", 0o600).unwrap();
+    assert_eq!(owner.get("/self/mine", 1).unwrap(), b"m");
+}

@@ -1,0 +1,140 @@
+//! Failure injection: the §3.2 version mechanism (server reboot →
+//! ESTALE), client teardown, and protocol edge cases.
+
+use std::sync::Arc;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster, ClusterView};
+use buffetfs::error::FsError;
+use buffetfs::metrics::RpcMetrics;
+use buffetfs::server::BServer;
+use buffetfs::simnet::{LatencyModel, NetConfig};
+use buffetfs::store::data::MemData;
+use buffetfs::store::fs::LocalFs;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::transport::chan::ChanTransport;
+use buffetfs::types::{Credentials, Ino, OpenFlags};
+
+#[test]
+fn server_restart_bumps_version_and_old_inos_go_stale() {
+    // v0 incarnation
+    let s_v0 = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    let metrics = Arc::new(RpcMetrics::new());
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let t_v0 = ChanTransport::new(s_v0.clone(), net.clone(), metrics.clone());
+
+    let mut view = ClusterView::new(s_v0.fs.root_ino());
+    view.add(0, 0, t_v0);
+    let agent = buffetfs::agent::BAgent::new(1, view, metrics.clone());
+    let p = Buffet::with_pid(agent, 1, Credentials::root());
+    p.put("/precious", b"v0 data").unwrap();
+    let ino_v0 = p.stat("/precious").unwrap().ino;
+    assert_eq!(ino_v0.version, 0);
+
+    // "reboot": same host id, new incarnation (version 1)
+    let s_v1 = BServer::new(LocalFs::new(0, 1, Box::new(MemData::new())));
+    // a client still holding v0 inos and a v0 host map must see Stale,
+    // never wrong data
+    let err = s_v1
+        .fs
+        .validate(ino_v0)
+        .expect_err("v0 ino against v1 server must fail");
+    assert_eq!(err, FsError::Stale);
+
+    // and a v0-configured ClusterView refuses v1 inos symmetrically
+    let mut view_v0 = ClusterView::new(Ino::new(0, 0, 1));
+    let t_v1 = ChanTransport::new(s_v1.clone(), net, metrics);
+    view_v0.add(0, 0, t_v1);
+    let ino_v1 = Ino::new(0, 1, 5);
+    match view_v0.transport(ino_v1) {
+        Err(FsError::Stale) => {}
+        Err(other) => panic!("expected Stale, got {other:?}"),
+        Ok(_) => panic!("expected Stale, got a transport"),
+    }
+}
+
+#[test]
+fn client_teardown_cleans_server_state() {
+    let cluster = BuffetCluster::spawn_with(
+        1,
+        NetConfig::zero(),
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    );
+    let (agent, _) = cluster.make_agent();
+    let id = agent.id();
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.put("/f", b"x").unwrap();
+    // leave an open dangling and a cache registration behind
+    let fd = p.open("/f", OpenFlags::RDONLY).unwrap();
+    p.read(fd, 1).unwrap();
+    let file = p.stat("/f").unwrap().ino.file;
+    assert!(cluster.servers[0].openers_of(file) >= 1);
+
+    // client crash: the server reaps everything it owned
+    cluster.servers[0].drop_client(id);
+    assert_eq!(cluster.servers[0].openers_of(file), 0);
+    assert!(cluster.servers[0].clients_caching(1).is_empty());
+}
+
+#[test]
+fn name_too_long_rejected_end_to_end() {
+    let cluster = BuffetCluster::spawn_with(
+        1,
+        NetConfig::zero(),
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    );
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    let long = format!("/{}", "x".repeat(300));
+    assert_eq!(p.create(&long, 0o644).unwrap_err(), FsError::NameTooLong);
+}
+
+#[test]
+fn unknown_host_in_inode_fails_cleanly() {
+    let cluster = BuffetCluster::spawn_with(
+        1,
+        NetConfig::zero(),
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    );
+    let (agent, _) = cluster.make_agent();
+    // hand-crafted ino pointing at a host that does not exist
+    match agent.cluster().transport(Ino::new(42, 0, 7)) {
+        Err(FsError::NoSuchServer(42)) => {}
+        Err(other) => panic!("expected NoSuchServer, got {other:?}"),
+        Ok(_) => panic!("expected NoSuchServer, got a transport"),
+    }
+}
+
+#[test]
+fn deep_paths_resolve_and_check_correctly() {
+    let cluster = BuffetCluster::spawn_with(
+        1,
+        NetConfig::zero(),
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    );
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    // 24 components — deeper than the AOT kernel's D=16, exercising the
+    // native fallback in resolve/check
+    let mut path = String::new();
+    for i in 0..24 {
+        path.push_str(&format!("/d{i}"));
+        p.mkdir(&path, 0o755).unwrap();
+    }
+    path.push_str("/leaf");
+    p.put(&path, b"deep").unwrap();
+    assert_eq!(p.get(&path, 16).unwrap(), b"deep");
+    // an X-less component midway blocks the whole walk
+    p.chmod("/d0/d1/d2", 0o600).unwrap();
+    let user_cluster = p.agent().clone();
+    let user = Buffet::process(user_cluster, Credentials::new(5, 5));
+    assert_eq!(user.open(&path, OpenFlags::RDONLY).unwrap_err(), FsError::PermissionDenied);
+}

@@ -1,0 +1,152 @@
+//! Lustre baseline integration: MDS + OSS semantics, intent opens, the
+//! DoM inline path, LDLM interplay — and the RPC-schedule comparison
+//! against BuffetFS that underlies every figure.
+
+use buffetfs::baseline::{LustreCluster, LustreMode};
+use buffetfs::cluster::Backing;
+use buffetfs::error::FsError;
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::{Credentials, OpenFlags};
+
+fn cluster(mode: LustreMode) -> LustreCluster {
+    LustreCluster::spawn_with(
+        4,
+        mode,
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 1 },
+        Backing::Mem,
+        ServiceConfig::unbounded(),
+    )
+}
+
+#[test]
+fn normal_mode_schedule_is_two_sync_rpcs() {
+    let c = cluster(LustreMode::Normal);
+    let (client, metrics) = c.make_client();
+    let root = Credentials::root();
+    client.put(1, "/f.dat", &[7u8; 4096], &root).unwrap();
+
+    // warm access: intent-open (1) + OSS read (1); close is async
+    client.get(1, "/f.dat", 4096, &root).unwrap();
+    metrics.reset();
+    let data = client.get(1, "/f.dat", 4096, &root).unwrap();
+    assert_eq!(data.len(), 4096);
+    assert_eq!(metrics.count("open"), 1, "every Lustre access opens at the MDS");
+    assert_eq!(metrics.count("read"), 1, "data comes from the OSS");
+    assert_eq!(metrics.count("lookup"), 0, "warm dentries need no lookups");
+    assert_eq!(metrics.sync_rpcs(), 2);
+}
+
+#[test]
+fn dom_mode_inlines_reads_but_not_writes() {
+    let c = cluster(LustreMode::dom_default());
+    let (client, metrics) = c.make_client();
+    let root = Credentials::root();
+    client.put(1, "/small", &[1u8; 2048], &root).unwrap();
+
+    client.get(1, "/small", 2048, &root).unwrap();
+    metrics.reset();
+    // read path: ONE sync RPC (open carries the data)
+    let data = client.get(1, "/small", 2048, &root).unwrap();
+    assert_eq!(data, vec![1u8; 2048]);
+    assert_eq!(metrics.count("open"), 1);
+    assert_eq!(metrics.count("read"), 0, "DoM read served from the open reply");
+    assert_eq!(metrics.sync_rpcs(), 1);
+    assert!(c.mds.stats.inline_reads_served.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+
+    // write path: the MDS absorbs the data (the §5 congestion point)
+    metrics.reset();
+    let before = c.mds.stats.inline_writes_absorbed.load(std::sync::atomic::Ordering::Relaxed);
+    client.put(1, "/small", &[2u8; 2048], &root).unwrap();
+    assert!(c.mds.stats.inline_writes_absorbed.load(std::sync::atomic::Ordering::Relaxed) > before);
+    // and OSSes stored nothing
+    assert!(c.osses.iter().all(|o| o.bytes_stored() == 0));
+}
+
+#[test]
+fn normal_mode_spreads_data_over_osses() {
+    let c = cluster(LustreMode::Normal);
+    let (client, _) = c.make_client();
+    let root = Credentials::root();
+    for i in 0..32 {
+        client.put(1, &format!("/f{i}"), &[3u8; 1024], &root).unwrap();
+    }
+    let stored: Vec<u64> = c.osses.iter().map(|o| o.bytes_stored()).collect();
+    assert_eq!(stored.iter().sum::<u64>(), 32 * 1024);
+    assert!(stored.iter().filter(|&&b| b > 0).count() >= 3, "striping too skewed: {stored:?}");
+    // MDS holds no file data in Normal mode
+    let (_, mds_bytes) = c.mds.fs.statfs();
+    assert_eq!(mds_bytes, 0);
+}
+
+#[test]
+fn server_side_permission_check_costs_a_round_trip() {
+    let c = cluster(LustreMode::Normal);
+    let (client, metrics) = c.make_client();
+    let root = Credentials::root();
+    client.put(1, "/guarded", b"x", &root).unwrap();
+    client.chmod("/guarded", 0o600, &root).unwrap();
+
+    let stranger = Credentials::new(9, 9);
+    metrics.reset();
+    let err = client.open(1, "/guarded", OpenFlags::RDONLY, &stranger).unwrap_err();
+    assert_eq!(err, FsError::PermissionDenied);
+    // unlike BuffetFS, the denial burned a full MDS round trip
+    assert_eq!(metrics.count("open"), 1);
+}
+
+#[test]
+fn dentry_cache_avoids_lookup_rpcs() {
+    let c = cluster(LustreMode::Normal);
+    let (client, metrics) = c.make_client();
+    let root = Credentials::root();
+    client.mkdir("/deep", 0o755, &root).unwrap();
+    client.mkdir("/deep/er", 0o755, &root).unwrap();
+    client.put(1, "/deep/er/f", b"x", &root).unwrap();
+
+    client.get(1, "/deep/er/f", 1, &root).unwrap();
+    let misses = client.stats.dentry_misses.load(std::sync::atomic::Ordering::Relaxed);
+    client.get(1, "/deep/er/f", 1, &root).unwrap();
+    client.get(1, "/deep/er/f", 1, &root).unwrap();
+    assert_eq!(
+        client.stats.dentry_misses.load(std::sync::atomic::Ordering::Relaxed),
+        misses,
+        "warm dentries must not miss"
+    );
+    assert_eq!(metrics.count("lookup"), 0, "intent opens subsume leaf lookups");
+}
+
+#[test]
+fn ldlm_locks_cached_and_revoked_between_clients() {
+    let c = cluster(LustreMode::Normal);
+    let (a, _) = c.make_client();
+    let (b, _) = c.make_client();
+    let root = Credentials::root();
+    a.put(1, "/locked", &[1u8; 64], &root).unwrap();
+
+    // A reads twice: one grant, one cache hit
+    a.get(1, "/locked", 64, &root).unwrap();
+    a.get(1, "/locked", 64, &root).unwrap();
+    let la = a.ldlm.as_ref().unwrap();
+    assert!(la.stats.cache_hits.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+
+    // B writes: exclusive grant revokes A's shared lock
+    b.put(1, "/locked", &[2u8; 64], &root).unwrap();
+    assert!(c.lockspace.revocations.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+
+    // A reads again → re-grant (its cache entry was revoked)
+    let grants_before = la.stats.grant_rpcs.load(std::sync::atomic::Ordering::Relaxed);
+    a.get(1, "/locked", 64, &root).unwrap();
+    assert!(la.stats.grant_rpcs.load(std::sync::atomic::Ordering::Relaxed) > grants_before);
+}
+
+#[test]
+fn create_through_open_with_ocreat() {
+    let c = cluster(LustreMode::Normal);
+    let (client, _) = c.make_client();
+    let root = Credentials::root();
+    let fd = client.open(1, "/fresh", OpenFlags::RDWR.with_create(), &root).unwrap();
+    client.write(1, fd, b"new").unwrap();
+    client.close(1, fd).unwrap();
+    assert_eq!(client.get(1, "/fresh", 16, &root).unwrap(), b"new");
+}

@@ -1,0 +1,230 @@
+//! Full-stack BuffetFS integration: BLib → BAgent → transport → BServer
+//! → store, over the latency-injected channel transport.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::error::FsError;
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::{Credentials, FileKind, OpenFlags};
+
+/// Wait for background async-close traffic to drain so RPC counters and
+/// the opened-file list are stable before an assertion window.
+fn quiesce(cluster: &BuffetCluster, metrics: &buffetfs::metrics::RpcMetrics) {
+    let mut last = metrics.total_rpcs();
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(5));
+        let now = metrics.total_rpcs();
+        if now == last && cluster.servers.iter().map(|s| s.open_files()).sum::<usize>() == 0 {
+            return;
+        }
+        last = now;
+    }
+}
+
+fn fast_cluster() -> BuffetCluster {
+    BuffetCluster::spawn_with(
+        2,
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 1 },
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    )
+}
+
+#[test]
+fn open_costs_zero_rpcs_when_warm() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/w", 0o755).unwrap();
+    for i in 0..10 {
+        admin.put(&format!("/w/f{i}"), b"0123456789").unwrap();
+    }
+    admin.get("/w/f0", 10).unwrap(); // warm the tree
+    quiesce(&cluster, &metrics); // async closes must drain before counting
+
+    let before = metrics.total_rpcs();
+    let fd = admin.open("/w/f7", OpenFlags::RDONLY).unwrap();
+    assert_eq!(metrics.total_rpcs(), before, "warm open must be RPC-free");
+    let data = admin.read(fd, 10).unwrap();
+    assert_eq!(data, b"0123456789");
+    assert_eq!(metrics.total_rpcs(), before + 1, "read carries the deferred open");
+    admin.close(fd).unwrap();
+    assert!(agent.stats.rpc_free_opens.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn denied_open_is_free_and_correct() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/p", 0o755).unwrap();
+    admin.put("/p/secret", b"top").unwrap();
+    admin.chmod("/p/secret", 0o600).unwrap();
+
+    let user = Buffet::process(agent.clone(), Credentials::new(777, 777));
+    user.stat("/p/secret").ok(); // warm (stat itself is allowed: x on dirs)
+    quiesce(&cluster, &metrics);
+    let before = metrics.total_rpcs();
+    assert_eq!(user.open("/p/secret", OpenFlags::RDONLY).unwrap_err(), FsError::PermissionDenied);
+    assert_eq!(metrics.total_rpcs(), before, "local denial must not produce RPCs");
+    assert!(agent.stats.local_denies.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn open_close_without_io_never_contacts_server() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Buffet::process(agent, Credentials::root());
+    admin.put("/nop", b"x").unwrap();
+    admin.get("/nop", 1).unwrap();
+    quiesce(&cluster, &metrics);
+    let before = metrics.total_rpcs();
+    let fd = admin.open("/nop", OpenFlags::RDONLY).unwrap();
+    admin.close(fd).unwrap();
+    std::thread::sleep(Duration::from_millis(30)); // let any async close drain
+    assert_eq!(metrics.total_rpcs(), before, "no I/O → no server-side open → no close RPC");
+    assert_eq!(cluster.servers[0].open_files(), 0);
+}
+
+#[test]
+fn openlist_settles_after_close() {
+    let cluster = fast_cluster();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.put("/f", &[9u8; 128]).unwrap();
+    // the put's async close must drain before we count openers
+    for _ in 0..100 {
+        if cluster.servers[0].open_files() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let fd1 = p.open("/f", OpenFlags::RDONLY).unwrap();
+    let fd2 = p.open("/f", OpenFlags::RDONLY).unwrap();
+    p.read(fd1, 8).unwrap();
+    p.read(fd2, 8).unwrap();
+    let file = p.stat("/f").unwrap().ino.file;
+    assert_eq!(cluster.servers[0].openers_of(file), 2);
+    p.close(fd1).unwrap();
+    p.close(fd2).unwrap();
+    // close wrap-up is asynchronous — poll for it
+    for _ in 0..100 {
+        if cluster.servers[0].openers_of(file) == 0 {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("opened-file list never drained");
+}
+
+#[test]
+fn posix_file_semantics() {
+    let cluster = fast_cluster();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/d", 0o755).unwrap();
+
+    // sequential read/write offsets
+    let fd = p.open("/d/f", OpenFlags::RDWR.with_create()).unwrap();
+    p.write(fd, b"hello ").unwrap();
+    p.write(fd, b"world").unwrap();
+    p.close(fd).unwrap();
+    assert_eq!(p.get("/d/f", 64).unwrap(), b"hello world");
+
+    // pread/pwrite
+    let fd = p.open("/d/f", OpenFlags::RDWR).unwrap();
+    p.pwrite(fd, 6, b"WORLD").unwrap();
+    assert_eq!(p.pread(fd, 0, 64).unwrap(), b"hello WORLD");
+    p.close(fd).unwrap();
+
+    // truncate via open flag
+    let fd = p.open("/d/f", OpenFlags::WRONLY.with_truncate()).unwrap();
+    p.close(fd).unwrap();
+    assert_eq!(p.stat("/d/f").unwrap().size, 0);
+
+    // append
+    let fd = p.open("/d/f", OpenFlags::WRONLY.with_append()).unwrap();
+    p.write(fd, b"aa").unwrap();
+    p.close(fd).unwrap();
+    let fd = p.open("/d/f", OpenFlags::WRONLY.with_append()).unwrap();
+    p.write(fd, b"bb").unwrap();
+    p.close(fd).unwrap();
+    assert_eq!(p.get("/d/f", 64).unwrap(), b"aabb");
+
+    // bad fd
+    assert_eq!(p.read(12345, 1).unwrap_err(), FsError::BadFd);
+
+    // readdir sees both perm blobs and names
+    let entries = p.readdir("/d").unwrap();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].name, "f");
+    assert_eq!(entries[0].kind, FileKind::Regular);
+}
+
+#[test]
+fn namespace_ops_full_cycle() {
+    let cluster = fast_cluster();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/a", 0o755).unwrap();
+    p.mkdir("/a/b", 0o755).unwrap();
+    p.put("/a/b/one", b"1").unwrap();
+
+    // rename within the same server
+    p.rename("/a/b/one", "/a/b/uno").unwrap();
+    assert_eq!(p.get("/a/b/uno", 4).unwrap(), b"1");
+    assert_eq!(p.open("/a/b/one", OpenFlags::RDONLY).unwrap_err(), FsError::NotFound);
+
+    // unlink + enoent
+    p.unlink("/a/b/uno").unwrap();
+    assert_eq!(p.stat("/a/b/uno").unwrap_err(), FsError::NotFound);
+
+    // rmdir requires empty
+    p.put("/a/b/two", b"2").unwrap();
+    assert_eq!(p.rmdir("/a/b").unwrap_err(), FsError::NotEmpty);
+    p.unlink("/a/b/two").unwrap();
+    p.rmdir("/a/b").unwrap();
+    assert_eq!(p.readdir("/a").unwrap().len(), 0);
+}
+
+#[test]
+fn authoritative_local_enoent_and_resolution_errors() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/dir", 0o755).unwrap();
+    p.put("/dir/real", b"x").unwrap();
+    p.readdir("/dir").unwrap(); // cache the listing
+    quiesce(&cluster, &metrics);
+    let before = metrics.total_rpcs();
+    assert_eq!(p.open("/dir/ghost", OpenFlags::RDONLY).unwrap_err(), FsError::NotFound);
+    assert_eq!(metrics.total_rpcs(), before, "cached ENOENT must be served locally");
+
+    // path through a file is ENOTDIR
+    assert_eq!(p.open("/dir/real/xx", OpenFlags::RDONLY).unwrap_err(), FsError::NotADirectory);
+    // relative paths rejected
+    assert!(matches!(p.open("dir/real", OpenFlags::RDONLY).unwrap_err(), FsError::Invalid(_)));
+}
+
+#[test]
+fn x_only_traversal_falls_back_to_lookup() {
+    let cluster = fast_cluster();
+    let (agent, _) = cluster.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/vault", 0o711).unwrap(); // others: x only
+    admin.put("/vault/known", b"k").unwrap();
+    admin.chmod("/vault/known", 0o644).unwrap();
+
+    let user = Buffet::process(agent.clone(), Credentials::new(55, 55));
+    // cannot list the vault…
+    assert_eq!(user.readdir("/vault").unwrap_err(), FsError::PermissionDenied);
+    // …but can open a known name through it
+    let data = user.get("/vault/known", 4).unwrap();
+    assert_eq!(data, b"k");
+    assert!(agent.stats.fallback_lookups.load(Ordering::Relaxed) >= 1);
+}

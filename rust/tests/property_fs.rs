@@ -1,0 +1,180 @@
+//! Property-style randomized invariants (seeded, reproducible — the
+//! offline stand-in for proptest):
+//!
+//! 1. **Model equivalence** — a random op sequence through the full
+//!    BuffetFS stack must agree byte-for-byte with a flat in-memory
+//!    model (HashMap of path → contents).
+//! 2. **Cache transparency** — every read served through a warm agent
+//!    cache equals a read through a brand-new (cold) agent.
+//! 3. **Permission equivalence** — BuffetFS's client-side verdict equals
+//!    the Lustre baseline's server-side verdict on identical trees.
+
+use std::collections::HashMap;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::error::FsError;
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::{Credentials, OpenFlags};
+use buffetfs::util::rng::XorShift;
+
+fn cluster() -> BuffetCluster {
+    BuffetCluster::spawn_with(2, NetConfig::zero(), Backing::Mem, false, ServiceConfig::unbounded())
+}
+
+#[derive(Debug)]
+enum Op {
+    Put(usize, Vec<u8>),
+    Append(usize, Vec<u8>),
+    Truncate(usize, u64),
+    Unlink(usize),
+    Read(usize),
+}
+
+fn gen_ops(seed: u64, n: usize, files: usize) -> Vec<Op> {
+    let mut r = XorShift::new(seed);
+    (0..n)
+        .map(|_| {
+            let f = r.below(files as u64) as usize;
+            match r.below(5) {
+                0 => Op::Put(f, (0..r.below(200)).map(|_| r.next_u64() as u8).collect()),
+                1 => Op::Append(f, (0..r.below(64)).map(|_| r.next_u64() as u8).collect()),
+                2 => Op::Truncate(f, r.below(128)),
+                3 => Op::Unlink(f),
+                _ => Op::Read(f),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn random_op_sequences_match_flat_model() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        let c = cluster();
+        let (agent, _) = c.make_agent();
+        let p = Buffet::process(agent, Credentials::root());
+        p.mkdir("/m", 0o777).unwrap();
+        let mut model: HashMap<usize, Vec<u8>> = HashMap::new();
+
+        for (step, op) in gen_ops(seed, 300, 12).iter().enumerate() {
+            let path = |f: &usize| format!("/m/file{f}");
+            match op {
+                Op::Put(f, data) => {
+                    p.put(&path(f), data).unwrap();
+                    model.insert(*f, data.clone());
+                }
+                Op::Append(f, data) => {
+                    let fd = p.open(&path(f), OpenFlags::WRONLY.with_create().with_append()).unwrap();
+                    p.write(fd, data).unwrap();
+                    p.close(fd).unwrap();
+                    model.entry(*f).or_default().extend_from_slice(data);
+                }
+                Op::Truncate(f, size) => {
+                    if model.contains_key(f) {
+                        p.truncate(&path(f), *size).unwrap();
+                        let v = model.get_mut(f).unwrap();
+                        v.resize(*size as usize, 0);
+                    } else {
+                        assert_eq!(p.truncate(&path(f), *size).unwrap_err(), FsError::NotFound);
+                    }
+                }
+                Op::Unlink(f) => {
+                    if model.remove(f).is_some() {
+                        p.unlink(&path(f)).unwrap();
+                    } else {
+                        assert_eq!(p.unlink(&path(f)).unwrap_err(), FsError::NotFound);
+                    }
+                }
+                Op::Read(f) => match model.get(f) {
+                    Some(expect) => {
+                        let got = p.get(&path(f), (expect.len() as u32).max(1)).unwrap();
+                        assert_eq!(&got, expect, "seed {seed} step {step}: {op:?}");
+                    }
+                    None => {
+                        assert_eq!(
+                            p.open(&path(f), OpenFlags::RDONLY).unwrap_err(),
+                            FsError::NotFound,
+                            "seed {seed} step {step}"
+                        );
+                    }
+                },
+            }
+        }
+        // final sweep: model and fs agree on the survivors
+        let listed: Vec<String> = p.readdir("/m").unwrap().into_iter().map(|e| e.name).collect();
+        assert_eq!(listed.len(), model.len(), "seed {seed}: {listed:?}");
+    }
+}
+
+#[test]
+fn warm_cache_reads_equal_cold_client_reads() {
+    let c = cluster();
+    let (warm_agent, _) = c.make_agent();
+    let warm = Buffet::process(warm_agent, Credentials::root());
+    warm.mkdir("/eq", 0o777).unwrap();
+    let mut r = XorShift::new(77);
+    for i in 0..40 {
+        let body: Vec<u8> = (0..r.range(1, 300)).map(|_| r.next_u64() as u8).collect();
+        warm.put(&format!("/eq/f{i}"), &body).unwrap();
+    }
+    // warm agent has everything cached; a cold agent starts from scratch
+    let (cold_agent, _) = c.make_agent();
+    let cold = Buffet::process(cold_agent, Credentials::root());
+    for i in 0..40 {
+        let path = format!("/eq/f{i}");
+        let a = warm.get(&path, 512).unwrap();
+        let b = cold.get(&path, 512).unwrap();
+        assert_eq!(a, b, "{path}");
+    }
+}
+
+#[test]
+fn client_side_verdicts_equal_server_side_verdicts() {
+    use buffetfs::baseline::{LustreCluster, LustreMode};
+    let mut r = XorShift::new(0xACCE55);
+    for round in 0..5 {
+        // identical tree on both systems: /t/dX/fY with random modes
+        let bc = cluster();
+        let lc = LustreCluster::spawn_with(
+            1,
+            LustreMode::Normal,
+            NetConfig::zero(),
+            Backing::Mem,
+            ServiceConfig::unbounded(),
+        );
+        let (ba, _) = bc.make_agent();
+        let buffet_admin = Buffet::process(ba.clone(), Credentials::root());
+        let (lclient, _) = lc.make_client();
+        let root = Credentials::root();
+
+        let mut cases = Vec::new();
+        for d in 0..3 {
+            let dmode = 0o700 | (r.below(8) as u16) << 3 | r.below(8) as u16;
+            buffet_admin.mkdir(&format!("/d{d}"), dmode).unwrap();
+            lclient.mkdir(&format!("/d{d}"), dmode, &root).unwrap();
+            for f in 0..6 {
+                let fmode = (r.below(0o1000)) as u16;
+                let path = format!("/d{d}/f{f}");
+                buffet_admin.create(&path, fmode).unwrap();
+                lclient.create(&path, fmode, &root).unwrap();
+                cases.push(path);
+            }
+        }
+        let cred = Credentials::with_groups(r.below(4) as u32 + 1, r.below(4) as u32, vec![]);
+        let buffet_user = Buffet::process(ba.clone(), cred.clone());
+        for path in &cases {
+            let b = buffet_user.open(path, OpenFlags::RDONLY).map(|fd| {
+                buffet_user.close(fd).ok();
+            });
+            let l = lclient.open(9, path, OpenFlags::RDONLY, &cred).map(|fd| {
+                lclient.close(9, fd).ok();
+            });
+            assert_eq!(
+                b.is_ok(),
+                l.is_ok(),
+                "round {round} {path}: buffet(client-side)={b:?} lustre(server-side)={l:?} cred={cred:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Cross-language correctness: the AOT-compiled Pallas kernel (loaded
+//! via PJRT) must agree bit-for-bit with the native Rust oracle on
+//! randomized inputs — the rust-side half of the L1 correctness story
+//! (the python side is pytest vs ref.py).
+
+use std::sync::Arc;
+
+use buffetfs::perm::{self, BatchPathChecker, NativeBatchChecker};
+use buffetfs::runtime::{shapes, KernelRuntime};
+use buffetfs::types::{AccessMask, Credentials, PermBlob};
+use buffetfs::util::rng::XorShift;
+
+fn runtime() -> Arc<KernelRuntime> {
+    KernelRuntime::load(KernelRuntime::default_dir()).expect("artifacts built? run `make artifacts`")
+}
+
+fn random_chain(r: &mut XorShift, max_depth: usize) -> Vec<PermBlob> {
+    let depth = 1 + r.below(max_depth as u64) as usize;
+    (0..depth)
+        .map(|_| {
+            PermBlob::new((r.below(0o1000)) as u16, r.below(8) as u32, r.below(8) as u32)
+        })
+        .collect()
+}
+
+fn random_cred(r: &mut XorShift) -> Credentials {
+    let uid = r.below(8) as u32;
+    let gid = r.below(8) as u32;
+    let extra: Vec<u32> = (0..r.below(4)).map(|_| r.below(8) as u32).collect();
+    Credentials::with_groups(uid, gid, extra)
+}
+
+#[test]
+fn pjrt_kernel_matches_native_oracle() {
+    let rt = runtime();
+    let mut r = XorShift::new(0x5eed);
+    for round in 0..20 {
+        let cred = random_cred(&mut r);
+        let want = AccessMask((r.below(8)) as u8);
+        let chains: Vec<Vec<PermBlob>> =
+            (0..r.range(1, 300)).map(|_| random_chain(&mut r, shapes::DEPTH_D)).collect();
+
+        let native = NativeBatchChecker.check_paths(&chains, &cred, want).unwrap();
+        let kernel = rt.check_paths(&chains, &cred, want).unwrap();
+        assert_eq!(native.len(), kernel.len());
+        for (i, (n, k)) in native.iter().zip(kernel.iter()).enumerate() {
+            assert_eq!(
+                n, k,
+                "round {round} chain {i}: native={n:?} kernel={k:?} \
+                 chain={:?} cred={cred:?} want={want:?}",
+                chains[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_ref_artifact_matches_kernel_artifact() {
+    let rt = runtime();
+    let mut r = XorShift::new(0xabcd);
+    let cred = random_cred(&mut r);
+    let want = AccessMask::READ;
+    let chains: Vec<Vec<PermBlob>> =
+        (0..500).map(|_| random_chain(&mut r, shapes::DEPTH_D)).collect();
+    let pallas = rt.check_paths_via(&chains, &cred, want, false).unwrap();
+    let jnp_ref = rt.check_paths_via(&chains, &cred, want, true).unwrap();
+    assert_eq!(pallas, jnp_ref);
+}
+
+#[test]
+fn dirscan_matches_scalar_check() {
+    let rt = runtime();
+    let mut r = XorShift::new(0x77);
+    for _ in 0..10 {
+        let cred = random_cred(&mut r);
+        let want = AccessMask((r.below(8)) as u8);
+        let entries: Vec<PermBlob> = (0..r.range(1, 2500))
+            .map(|_| PermBlob::new((r.below(0o1000)) as u16, r.below(8) as u32, r.below(8) as u32))
+            .collect();
+        let got = rt.dirscan(&entries, &cred, want).unwrap();
+        assert_eq!(got.len(), entries.len());
+        for (i, p) in entries.iter().enumerate() {
+            assert_eq!(
+                got[i],
+                perm::check_access(p, &cred, want),
+                "entry {i}: {p:?} cred={cred:?} want={want:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn deep_chains_fall_back_to_native() {
+    let rt = runtime();
+    let mut r = XorShift::new(0x99);
+    // chains deeper than DEPTH_D can't ride the kernel; the runtime must
+    // still answer correctly via the native fallback
+    let chains: Vec<Vec<PermBlob>> =
+        (0..40).map(|_| random_chain(&mut r, shapes::DEPTH_D * 2)).collect();
+    let cred = random_cred(&mut r);
+    let native = NativeBatchChecker.check_paths(&chains, &cred, AccessMask::RW).unwrap();
+    let kernel = rt.check_paths(&chains, &cred, AccessMask::RW).unwrap();
+    assert_eq!(native, kernel);
+}
+
+#[test]
+fn root_credential_and_empty_want_edge_cases() {
+    let rt = runtime();
+    let chains = vec![
+        vec![PermBlob::new(0o000, 5, 5)],
+        vec![PermBlob::new(0o100, 5, 5), PermBlob::new(0o000, 5, 5)],
+    ];
+    // root: rw on anything, x only when some x bit set
+    let root = Credentials::root();
+    let v = rt.check_paths(&chains, &root, AccessMask::RW).unwrap();
+    assert_eq!(v, vec![Ok(()), Ok(())]);
+    let v = rt.check_paths(&chains, &root, AccessMask::EXEC).unwrap();
+    assert_eq!(v[0], Err(0));
+    // want=0 always allowed for anyone with X on ancestors
+    let user = Credentials::new(5, 5);
+    let v = rt.check_paths(&chains, &user, AccessMask::NONE).unwrap();
+    assert_eq!(v, vec![Ok(()), Ok(())]);
+}

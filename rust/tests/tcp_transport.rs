@@ -1,0 +1,126 @@
+//! The wire protocol over a real TCP socket: a BServer behind
+//! `TcpServer`, driven by `TcpTransport` clients (what `buffetfs serve` /
+//! `buffetfs client` deploy).
+
+use std::sync::Arc;
+
+use buffetfs::metrics::RpcMetrics;
+use buffetfs::server::BServer;
+use buffetfs::store::data::MemData;
+use buffetfs::store::fs::LocalFs;
+use buffetfs::transport::tcp::{TcpServer, TcpTransport};
+use buffetfs::transport::Transport;
+use buffetfs::types::{Credentials, FileKind, Ino};
+use buffetfs::wire::{OpenCtx, Request, Response};
+
+fn spawn_server() -> (TcpServer, std::net::SocketAddr) {
+    let fs = LocalFs::new(0, 0, Box::new(MemData::new()));
+    let server = BServer::new(fs);
+    let tcp = TcpServer::spawn("127.0.0.1:0", server).expect("bind");
+    let addr = tcp.local_addr;
+    (tcp, addr)
+}
+
+#[test]
+fn full_file_cycle_over_tcp() {
+    let (server, addr) = spawn_server();
+    let metrics = Arc::new(RpcMetrics::new());
+    let t = TcpTransport::connect(addr, metrics.clone()).unwrap();
+    let root = Ino::new(0, 0, 1);
+    let cred = Credentials::root();
+
+    // create
+    let resp = t
+        .call(Request::Create {
+            dir: root,
+            name: "net.dat".into(),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: cred.clone(),
+            client: 1,
+        })
+        .unwrap();
+    let ino = match resp {
+        Response::Created(e) => e.ino,
+        other => panic!("{other:?}"),
+    };
+
+    // write with deferred-open ctx (the BuffetFS schedule over real TCP)
+    let ctx = OpenCtx { client: 1, handle: 99, flags: buffetfs::types::OpenFlags::RDWR, cred: cred.clone() };
+    let resp = t
+        .call(Request::Write { ino, off: 0, data: b"over the wire".to_vec(), open_ctx: Some(ctx) })
+        .unwrap();
+    assert!(matches!(resp, Response::Written { written: 13, .. }));
+
+    // read it back
+    match t.call(Request::Read { ino, off: 5, len: 32, open_ctx: None }).unwrap() {
+        Response::Data { data, .. } => assert_eq!(data, b"the wire"),
+        other => panic!("{other:?}"),
+    }
+
+    // close wrap-up
+    assert_eq!(t.call(Request::Close { ino, client: 1, handle: 99 }).unwrap(), Response::Unit);
+    assert_eq!(metrics.total_rpcs(), 4);
+    server.shutdown();
+}
+
+#[test]
+fn errors_cross_the_wire_intact() {
+    let (server, addr) = spawn_server();
+    let metrics = Arc::new(RpcMetrics::new());
+    let t = TcpTransport::connect(addr, metrics).unwrap();
+    let root = Ino::new(0, 0, 1);
+    let err = t
+        .call(Request::Lookup { dir: root, name: "ghost".into(), cred: Credentials::root() })
+        .unwrap_err();
+    assert_eq!(err, buffetfs::error::FsError::NotFound);
+    // stale version
+    let err = t.call(Request::GetAttr { ino: Ino::new(0, 7, 1) }).unwrap_err();
+    assert_eq!(err, buffetfs::error::FsError::Stale);
+    server.shutdown();
+}
+
+#[test]
+fn multiple_concurrent_tcp_clients() {
+    let (server, addr) = spawn_server();
+    let root = Ino::new(0, 0, 1);
+    std::thread::scope(|scope| {
+        for w in 0..4 {
+            scope.spawn(move || {
+                let metrics = Arc::new(RpcMetrics::new());
+                let t = TcpTransport::connect(addr, metrics).unwrap();
+                let cred = Credentials::root();
+                for i in 0..10 {
+                    let name = format!("c{w}-{i}");
+                    let resp = t
+                        .call(Request::Create {
+                            dir: root,
+                            name,
+                            mode: 0o644,
+                            kind: FileKind::Regular,
+                            cred: cred.clone(),
+                            client: w,
+                        })
+                        .unwrap();
+                    let ino = match resp {
+                        Response::Created(e) => e.ino,
+                        other => panic!("{other:?}"),
+                    };
+                    t.call(Request::Write { ino, off: 0, data: vec![w as u8; 64], open_ctx: None })
+                        .unwrap();
+                }
+            });
+        }
+    });
+    // all 40 files landed
+    let metrics = Arc::new(RpcMetrics::new());
+    let t = TcpTransport::connect(addr, metrics).unwrap();
+    match t
+        .call(Request::ReadDir { dir: root, client: 9, register: false, cred: Credentials::root() })
+        .unwrap()
+    {
+        Response::Entries { entries, .. } => assert_eq!(entries.len(), 40),
+        other => panic!("{other:?}"),
+    }
+    server.shutdown();
+}
