@@ -1,11 +1,42 @@
-//! Ablation (ours): where does BuffetFS's advantage come from? Sweep the
-//! one-way network latency and watch the warm single-file access time —
-//! the gap vs Lustre-Normal is exactly one round trip, so it grows
-//! linearly with RTT while the DoM/BuffetFS pair stays parallel.
+//! Ablation (ours): where does BuffetFS's advantage come from?
+//!
+//! Part 1 — sweep the one-way network latency and watch the warm
+//! single-file access time: the gap vs Lustre-Normal is exactly one round
+//! trip, so it grows linearly with RTT while the DoM/BuffetFS pair stays
+//! parallel.
+//!
+//! Part 2 — cold-walk depth sweep (tentpole): first open of a depth-D
+//! path, batched `ResolvePath` (one RPC) vs per-level `ReadDir`
+//! (depth+1 RPCs). Results are also emitted as `BENCH_resolvepath.json`.
+//!
 //! `cargo bench --bench ablation_rtt`.
 
-use buffetfs::harness::{ablation_rtt, BenchCfg};
+use buffetfs::harness::{ablation_cold_walk, ablation_rtt, print_cold_walk, BenchCfg, ColdWalkRow};
+use buffetfs::simnet::NetConfig;
 use buffetfs::workload::FileSetSpec;
+
+fn cold_walk_json(one_way_us: u64, iters: usize, rows: &[ColdWalkRow]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"resolvepath_cold_walk\",\n");
+    out.push_str(&format!("  \"one_way_us\": {one_way_us},\n"));
+    out.push_str(&format!("  \"iters_per_point\": {iters},\n"));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"depth\": {}, \"resolvepath_us\": {:.1}, \"resolvepath_rpcs\": {:.2}, \
+             \"per_level_us\": {:.1}, \"per_level_rpcs\": {:.2}, \"speedup\": {:.2}}}{}\n",
+            r.depth,
+            r.batched_us,
+            r.batched_rpcs,
+            r.per_level_us,
+            r.per_level_rpcs,
+            if r.batched_us > 0.0 { r.per_level_us / r.batched_us } else { 0.0 },
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
 
 fn main() {
     let mut cfg = BenchCfg::default();
@@ -30,4 +61,21 @@ fn main() {
         );
     }
     println!("\n(the paper's effect is RPC-count × RTT: the absolute gap ≈ one round trip)");
+
+    // ---- Part 2: cold-walk depth sweep --------------------------------
+    let one_way_us = 100;
+    let iters = 40;
+    let depths: Vec<usize> = (1..=8).collect();
+    println!();
+    let rows = ablation_cold_walk(
+        NetConfig { one_way_us, per_kb_us: 0, jitter_us: 0, seed: 7 },
+        &depths,
+        iters,
+    );
+    print_cold_walk(&rows);
+    let json = cold_walk_json(one_way_us, iters, &rows);
+    match std::fs::write("BENCH_resolvepath.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_resolvepath.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_resolvepath.json: {e}"),
+    }
 }

@@ -5,25 +5,63 @@
 //! children. Besides, each client holds the complete permission
 //! information in the directory tree."
 //!
-//! A node exists for every entry of every directory the client has
-//! fetched; only *directory* nodes whose contents were fetched have
-//! `children = Some(...)`. Every node carries the 10-byte perm blob its
-//! parent directory published, which is exactly what the local open()
-//! permission check needs. Invalidation (§3.4) flips `valid` on a
-//! directory node: its blob and children must be refetched before use.
+//! A node exists for every *directory* the client has listed (plus the
+//! root and invalidation tombstones). The node embeds the full
+//! `DirEntry` — including the 10-byte perm blob — of every child, which
+//! is exactly what the local open() permission check needs, and makes an
+//! install/invalidate a single atomic update under one shard lock: a
+//! listing and its perm blobs can never be observed half-replaced.
+//!
+//! ## Sharding
+//!
+//! Nodes are spread over [`SHARD_COUNT`] shards keyed by inode hash,
+//! each behind its own `RwLock`, and all statistics are atomics — the
+//! warm path (`child`) takes one shared read lock, so N reader threads
+//! proceed concurrently. Writers lock one shard at a time and never hold
+//! two locks, so there is no lock-ordering hazard.
+//!
+//! ## Consistency vs §3.4 invalidations
+//!
+//! Correctness invariant: a listing fetched *before* an invalidation
+//! completed must never be trusted *after* it. Two mechanisms enforce it:
+//!
+//! * per-directory generation counters (`gen`), re-checked under the
+//!   directory's shard write lock at publish time
+//!   ([`CacheTree::install_dir`]);
+//! * a global invalidation `epoch`, bumped before any `gen`, which lets
+//!   a batched multi-directory install (`Request::ResolvePath`) detect
+//!   that *some* invalidation landed mid-flight and retry. The epoch
+//!   read is ordered after the per-shard gen reads, so the shard locks'
+//!   happens-before edges make a plain load sufficient: if a gen read
+//!   observed an invalidation, the epoch read observes its bump too.
+//!
+//! Invalidating a directory drops its embedded child entries wholesale
+//! (their blobs all came from that one listing). A child directory's
+//! *own* listing is a separate node under its own generation — the
+//! server pushes a separate invalidation for it when its content is
+//! affected (§3.4: chmod of a directory invalidates both the parent's
+//! dirent copy and the directory itself).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 
 use crate::types::{DirEntry, FileKind, Ino, PermBlob};
 
+/// Power of two; 16 shards keeps writer collisions rare at the client
+/// thread counts the paper measures (≤ 32) without bloating the struct.
+const SHARD_COUNT: usize = 16;
+
+/// One listed directory (or the root / an invalidation tombstone).
 #[derive(Clone, Debug)]
-pub struct CacheNode {
-    pub entry: DirEntry,
-    /// `Some(name → child ino)` iff this directory's contents are cached.
-    pub children: Option<HashMap<String, Ino>>,
-    /// Cleared by a server invalidation; a hit on an invalid node forces
-    /// a refetch of the *parent* listing (perm blob) / own listing
-    /// (children).
+pub struct DirNode {
+    /// The directory's own perm blob (from its listing's attr; for the
+    /// root it starts as a placeholder until the first fetch).
+    pub perm: PermBlob,
+    /// `Some(name → full child entry)` iff the listing is cached.
+    pub children: Option<HashMap<String, DirEntry>>,
+    /// Cleared by a server invalidation; an invalid node's listing (if
+    /// any survived) must not be used.
     pub valid: bool,
     /// Invalidation generation: bumped every time this node is
     /// invalidated. A fetch that started before an invalidation must not
@@ -32,145 +70,190 @@ pub struct CacheNode {
     pub gen: u64,
 }
 
+/// Lock-free counters: read on the hot path without any exclusive lock.
 #[derive(Default)]
 pub struct CacheStats {
-    pub node_hits: u64,
-    pub node_misses: u64,
-    pub dir_fetches: u64,
-    pub invalidations: u64,
+    pub node_hits: AtomicU64,
+    pub node_misses: AtomicU64,
+    pub dir_fetches: AtomicU64,
+    pub invalidations: AtomicU64,
+    /// Authoritative local ENOENTs: the directory listing was cached and
+    /// valid and the name was absent — served with **zero** RPCs.
+    pub negative_hits: AtomicU64,
 }
 
+impl CacheStats {
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.node_hits.load(Ordering::Relaxed),
+            self.node_misses.load(Ordering::Relaxed),
+            self.dir_fetches.load(Ordering::Relaxed),
+            self.invalidations.load(Ordering::Relaxed),
+            self.negative_hits.load(Ordering::Relaxed),
+        )
+    }
+}
+
+type Shard = RwLock<HashMap<Ino, DirNode>>;
+
 /// The incomplete directory tree. Nodes are keyed by [`Ino`] (globally
-/// unique across the decentralized namespace).
+/// unique across the decentralized namespace), spread over shards.
 pub struct CacheTree {
-    nodes: HashMap<Ino, CacheNode>,
+    shards: Vec<Shard>,
     root: Ino,
+    /// Bumped (before the per-dir `gen`) on every invalidation.
+    epoch: AtomicU64,
     pub stats: CacheStats,
 }
 
 impl CacheTree {
     /// Create a tree anchored at the cluster root. The root starts
-    /// *unfetched*: its perm blob is installed by the first ReadDir's
+    /// *unfetched*: its perm blob is installed by the first listing's
     /// directory attr.
     pub fn new(root: Ino) -> CacheTree {
-        let mut nodes = HashMap::new();
-        nodes.insert(
+        let shards = (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect();
+        let t = CacheTree { shards, root, epoch: AtomicU64::new(0), stats: CacheStats::default() };
+        t.shard(root).write().unwrap().insert(
             root,
-            CacheNode {
-                entry: DirEntry {
-                    name: "/".to_string(),
-                    ino: root,
-                    kind: FileKind::Directory,
-                    // placeholder; replaced on first fetch
-                    perm: PermBlob::new(0o755, 0, 0),
-                },
+            DirNode {
+                // placeholder; replaced on first fetch
+                perm: PermBlob::new(0o755, 0, 0),
                 children: None,
                 valid: true,
                 gen: 0,
             },
         );
-        CacheTree { nodes, root, stats: CacheStats::default() }
+        t
+    }
+
+    fn shard(&self, ino: Ino) -> &Shard {
+        let i = (ino.file as usize ^ ((ino.host as usize) << 3)) & (SHARD_COUNT - 1);
+        &self.shards[i]
     }
 
     pub fn root(&self) -> Ino {
         self.root
     }
 
-    pub fn get(&mut self, ino: Ino) -> Option<&CacheNode> {
-        let hit = self.nodes.get(&ino).map(|n| n.valid).unwrap_or(false);
-        if hit {
-            self.stats.node_hits += 1;
-            self.nodes.get(&ino)
-        } else {
-            self.stats.node_misses += 1;
-            None
+    /// Global invalidation epoch — snapshot before a batched fetch,
+    /// compare after (see module docs).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Child entry by name, only if `dir`'s contents are cached and
+    /// valid. One shared read lock — the warm-path fast lane.
+    pub fn child(&self, dir: Ino, name: &str) -> ChildLookup {
+        let g = self.shard(dir).read().unwrap();
+        match g.get(&dir) {
+            Some(n) if n.valid => match &n.children {
+                None => {
+                    self.stats.node_misses.fetch_add(1, Ordering::Relaxed);
+                    ChildLookup::DirNotCached
+                }
+                Some(c) => match c.get(name) {
+                    Some(e) => {
+                        self.stats.node_hits.fetch_add(1, Ordering::Relaxed);
+                        ChildLookup::Found(e.clone())
+                    }
+                    None => {
+                        self.stats.negative_hits.fetch_add(1, Ordering::Relaxed);
+                        ChildLookup::NoSuchEntry
+                    }
+                },
+            },
+            _ => {
+                self.stats.node_misses.fetch_add(1, Ordering::Relaxed);
+                ChildLookup::DirNotCached
+            }
         }
     }
 
-    /// Peek without stats / validity filtering.
-    pub fn peek(&self, ino: Ino) -> Option<&CacheNode> {
-        self.nodes.get(&ino)
+    /// The directory node's own perm blob regardless of validity (used
+    /// only for the unreadable-root fallback, where any cached blob
+    /// beats a guess).
+    pub fn perm_of(&self, ino: Ino) -> Option<PermBlob> {
+        let g = self.shard(ino).read().unwrap();
+        g.get(&ino).map(|n| n.perm)
     }
 
-    /// Child ino by name, only if `dir`'s contents are cached and valid.
-    pub fn child(&mut self, dir: Ino, name: &str) -> ChildLookup {
-        match self.nodes.get(&dir) {
-            Some(n) if n.valid => match &n.children {
-                None => ChildLookup::DirNotCached,
-                Some(c) => match c.get(name) {
-                    Some(ino) => {
-                        self.stats.node_hits += 1;
-                        ChildLookup::Found(*ino)
-                    }
-                    None => ChildLookup::NoSuchEntry,
-                },
-            },
-            _ => ChildLookup::DirNotCached,
+    /// If `dir` is cached, valid AND its listing is present: its perm.
+    pub fn dir_perm_if_listed(&self, dir: Ino) -> Option<PermBlob> {
+        let g = self.shard(dir).read().unwrap();
+        match g.get(&dir) {
+            Some(n) if n.valid && n.children.is_some() => {
+                self.stats.node_hits.fetch_add(1, Ordering::Relaxed);
+                Some(n.perm)
+            }
+            _ => {
+                self.stats.node_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Clone out a cached directory listing (None if unlisted/invalid).
+    /// The snapshot is consistent: it is one listing as one install
+    /// published it.
+    pub fn listing(&self, dir: Ino) -> Option<Vec<DirEntry>> {
+        let g = self.shard(dir).read().unwrap();
+        match g.get(&dir) {
+            Some(n) if n.valid => n.children.as_ref().map(|c| c.values().cloned().collect()),
+            _ => None,
         }
     }
 
     /// Invalidation generation of a directory node (0 if unknown).
-    /// Snapshot this BEFORE issuing a ReadDir RPC and hand it back to
+    /// Snapshot this BEFORE issuing a fetch RPC and hand it back to
     /// [`CacheTree::install_dir`].
     pub fn gen_of(&self, dir: Ino) -> u64 {
-        self.nodes.get(&dir).map(|n| n.gen).unwrap_or(0)
+        let g = self.shard(dir).read().unwrap();
+        g.get(&dir).map(|n| n.gen).unwrap_or(0)
     }
 
     /// Install a fetched directory: its own attr blob + all children
-    /// (each child gets/updates a node carrying its perm blob).
+    /// (with their perm blobs), atomically under the dir's shard lock.
     /// `snap_gen` is the generation observed before the fetch; if an
     /// invalidation landed in between, the stale listing is DROPPED and
     /// the caller must refetch. Returns whether the install happened.
-    pub fn install_dir(&mut self, dir: Ino, dir_perm: PermBlob, entries: &[DirEntry], snap_gen: u64) -> bool {
-        if self.gen_of(dir) != snap_gen {
-            return false; // raced with an invalidation: listing untrusted
+    pub fn install_dir(
+        &self,
+        dir: Ino,
+        dir_perm: PermBlob,
+        entries: &[DirEntry],
+        snap_gen: u64,
+    ) -> bool {
+        let published = {
+            let mut g = self.shard(dir).write().unwrap();
+            let cur_gen = g.get(&dir).map(|n| n.gen).unwrap_or(0);
+            if cur_gen != snap_gen {
+                false // raced with an invalidation: listing untrusted
+            } else {
+                let children: HashMap<String, DirEntry> =
+                    entries.iter().map(|e| (e.name.clone(), e.clone())).collect();
+                g.insert(
+                    dir,
+                    DirNode { perm: dir_perm, children: Some(children), valid: true, gen: cur_gen },
+                );
+                true
+            }
+        };
+        if published {
+            self.stats.dir_fetches.fetch_add(1, Ordering::Relaxed);
         }
-        self.stats.dir_fetches += 1;
-        let mut children = HashMap::with_capacity(entries.len());
-        for e in entries {
-            children.insert(e.name.clone(), e.ino);
-            let node = self.nodes.entry(e.ino).or_insert_with(|| CacheNode {
-                entry: e.clone(),
-                children: None,
-                valid: true,
-                gen: 0,
-            });
-            node.entry = e.clone();
-            node.valid = true;
-        }
-        let dnode = self.nodes.entry(dir).or_insert_with(|| CacheNode {
-            entry: DirEntry {
-                name: String::new(),
-                ino: dir,
-                kind: FileKind::Directory,
-                perm: dir_perm,
-            },
-            children: None,
-            valid: true,
-            gen: snap_gen,
-        });
-        dnode.entry.perm = dir_perm;
-        dnode.entry.kind = FileKind::Directory;
-        dnode.children = Some(children);
-        dnode.valid = true;
-        true
+        published
     }
 
-    /// Server invalidation (§3.4): mark the directory node invalid and
-    /// drop its child listing; child nodes whose blobs came from this
-    /// directory are invalidated too (their perm copy is now suspect).
-    pub fn invalidate_dir(&mut self, dir: Ino) {
-        self.stats.invalidations += 1;
-        let children: Vec<Ino> = match self.nodes.get(&dir) {
-            Some(n) => n.children.as_ref().map(|c| c.values().copied().collect()).unwrap_or_default(),
-            None => Vec::new(),
-        };
-        for c in children {
-            if let Some(n) = self.nodes.get_mut(&c) {
-                n.valid = false;
-            }
-        }
-        match self.nodes.get_mut(&dir) {
+    /// Server invalidation (§3.4): drop the directory's embedded child
+    /// entries (every blob in them came from the now-suspect listing)
+    /// and mark the node invalid. One atomic update under one lock.
+    pub fn invalidate_dir(&self, dir: Ino) {
+        self.stats.invalidations.fetch_add(1, Ordering::Relaxed);
+        // epoch first, gen second: a reader that observes the new gen is
+        // guaranteed (via the shard lock) to observe the new epoch
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.shard(dir).write().unwrap();
+        match g.get_mut(&dir) {
             Some(n) => {
                 n.children = None;
                 n.gen += 1;
@@ -181,15 +264,10 @@ impl CacheTree {
             None => {
                 // never seen: record the invalidation anyway so an
                 // in-flight first fetch can detect it
-                self.nodes.insert(
+                g.insert(
                     dir,
-                    CacheNode {
-                        entry: DirEntry {
-                            name: String::new(),
-                            ino: dir,
-                            kind: FileKind::Directory,
-                            perm: PermBlob::new(0, 0, 0),
-                        },
+                    DirNode {
+                        perm: PermBlob::new(0, 0, 0),
                         children: None,
                         valid: false,
                         gen: 1,
@@ -200,44 +278,42 @@ impl CacheTree {
     }
 
     /// Drop one cached entry (after unlink/rename through this client).
-    pub fn evict_entry(&mut self, dir: Ino, name: &str) {
-        let child = self
-            .nodes
-            .get_mut(&dir)
-            .and_then(|n| n.children.as_mut())
-            .and_then(|c| c.remove(name));
-        if let Some(c) = child {
-            self.nodes.remove(&c);
+    /// If the entry was itself a listed directory, drop its node too.
+    pub fn evict_entry(&self, dir: Ino, name: &str) {
+        let child = {
+            let mut g = self.shard(dir).write().unwrap();
+            g.get_mut(&dir).and_then(|n| n.children.as_mut()).and_then(|c| c.remove(name))
+        };
+        if let Some(e) = child {
+            if e.kind == FileKind::Directory {
+                self.shard(e.ino).write().unwrap().remove(&e.ino);
+            }
         }
     }
 
     /// Insert a single new entry into a cached directory (after a create
     /// through this client, so the follow-up open hits the cache).
-    pub fn insert_entry(&mut self, dir: Ino, entry: DirEntry) {
-        if let Some(n) = self.nodes.get_mut(&dir) {
-            if let Some(c) = n.children.as_mut() {
-                c.insert(entry.name.clone(), entry.ino);
-            }
+    pub fn insert_entry(&self, dir: Ino, entry: DirEntry) {
+        let mut g = self.shard(dir).write().unwrap();
+        if let Some(c) = g.get_mut(&dir).and_then(|n| n.children.as_mut()) {
+            c.insert(entry.name.clone(), entry);
         }
-        self.nodes.insert(
-            entry.ino,
-            CacheNode { entry, children: None, valid: true, gen: 0 },
-        );
     }
 
+    /// Number of directory nodes held (listed dirs + root + tombstones).
     pub fn len(&self) -> usize {
-        self.nodes.len()
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
+        self.len() == 0
     }
 }
 
-#[derive(Debug, PartialEq, Eq)]
+#[derive(Debug, PartialEq)]
 pub enum ChildLookup {
-    /// Entry found in a valid cached listing.
-    Found(Ino),
+    /// Entry found in a valid cached listing (cloned out, blob included).
+    Found(DirEntry),
     /// Directory contents cached + valid, and no such entry exists —
     /// an authoritative local ENOENT, no RPC needed.
     NoSuchEntry,
@@ -248,6 +324,7 @@ pub enum ChildLookup {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::Ordering::Relaxed;
 
     fn de(name: &str, file: u64, kind: FileKind, mode: u16) -> DirEntry {
         DirEntry {
@@ -262,9 +339,16 @@ mod tests {
         Ino::new(0, 0, 1)
     }
 
+    fn found_ino(l: ChildLookup) -> Option<Ino> {
+        match l {
+            ChildLookup::Found(e) => Some(e.ino),
+            _ => None,
+        }
+    }
+
     #[test]
     fn install_and_lookup_children() {
-        let mut t = CacheTree::new(root());
+        let t = CacheTree::new(root());
         assert_eq!(t.child(root(), "a"), ChildLookup::DirNotCached);
         t.install_dir(
             root(),
@@ -272,64 +356,152 @@ mod tests {
             &[de("a", 2, FileKind::Directory, 0o750), de("f", 3, FileKind::Regular, 0o640)],
             t.gen_of(root()),
         );
-        assert_eq!(t.child(root(), "a"), ChildLookup::Found(Ino::new(0, 0, 2)));
+        assert_eq!(found_ino(t.child(root(), "a")), Some(Ino::new(0, 0, 2)));
         assert_eq!(t.child(root(), "zz"), ChildLookup::NoSuchEntry);
-        // child node carries the blob from the listing
-        let n = t.get(Ino::new(0, 0, 3)).unwrap();
-        assert_eq!(n.entry.perm.mode.0, 0o640);
+        // the entry carries the blob from the listing
+        match t.child(root(), "f") {
+            ChildLookup::Found(e) => assert_eq!(e.perm.mode.0, 0o640),
+            other => panic!("{other:?}"),
+        }
+        // the authoritative local ENOENT was counted
+        assert!(t.stats.negative_hits.load(Relaxed) >= 1);
     }
 
     #[test]
-    fn invalidation_clears_listing_and_children() {
-        let mut t = CacheTree::new(root());
+    fn invalidation_clears_listing_and_blobs() {
+        let t = CacheTree::new(root());
         t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("f", 3, FileKind::Regular, 0o640)], 0);
-        let f = Ino::new(0, 0, 3);
-        assert!(t.get(f).is_some());
+        assert!(found_ino(t.child(root(), "f")).is_some());
+        let e0 = t.epoch();
         t.invalidate_dir(root());
-        assert_eq!(t.child(root(), "f"), ChildLookup::DirNotCached);
-        assert!(t.get(f).is_none(), "child blob must be distrusted after invalidation");
-        assert_eq!(t.stats.invalidations, 1);
+        assert_eq!(t.epoch(), e0 + 1, "invalidation must bump the epoch");
+        assert_eq!(
+            t.child(root(), "f"),
+            ChildLookup::DirNotCached,
+            "embedded blobs die with the listing"
+        );
+        assert_eq!(t.stats.invalidations.load(Relaxed), 1);
         // a STALE install (generation snapshotted before the invalidation)
         // must be rejected…
         assert!(!t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("f", 3, FileKind::Regular, 0o600)], 0));
         assert_eq!(t.child(root(), "f"), ChildLookup::DirNotCached);
-        // …while a fresh refetch (current generation) restores the node
+        // …while a fresh refetch (current generation) restores the entry
         let g = t.gen_of(root());
         assert!(t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("f", 3, FileKind::Regular, 0o600)], g));
-        assert_eq!(t.get(f).unwrap().entry.perm.mode.0, 0o600);
+        match t.child(root(), "f") {
+            ChildLookup::Found(e) => assert_eq!(e.perm.mode.0, 0o600),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
     fn evict_and_insert_entry() {
-        let mut t = CacheTree::new(root());
+        let t = CacheTree::new(root());
         t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("a", 2, FileKind::Regular, 0o644)], 0);
         t.evict_entry(root(), "a");
         assert_eq!(t.child(root(), "a"), ChildLookup::NoSuchEntry);
         t.insert_entry(root(), de("b", 4, FileKind::Regular, 0o600));
-        assert_eq!(t.child(root(), "b"), ChildLookup::Found(Ino::new(0, 0, 4)));
+        assert_eq!(found_ino(t.child(root(), "b")), Some(Ino::new(0, 0, 4)));
+    }
+
+    #[test]
+    fn evicting_a_listed_subdir_drops_its_node() {
+        let t = CacheTree::new(root());
+        let a = Ino::new(0, 0, 2);
+        t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("a", 2, FileKind::Directory, 0o755)], 0);
+        t.install_dir(a, PermBlob::new(0o755, 1, 1), &[de("x", 5, FileKind::Regular, 0o644)], 0);
+        let before = t.len();
+        t.evict_entry(root(), "a");
+        assert_eq!(t.len(), before - 1, "the subdir's own node must go too");
+        assert_eq!(t.child(a, "x"), ChildLookup::DirNotCached);
     }
 
     #[test]
     fn hit_miss_accounting() {
-        let mut t = CacheTree::new(root());
+        let t = CacheTree::new(root());
         t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("a", 2, FileKind::Regular, 0o644)], 0);
         let _ = t.child(root(), "a"); // hit
-        let _ = t.get(Ino::new(0, 0, 99)); // miss
-        assert!(t.stats.node_hits >= 1);
-        assert!(t.stats.node_misses >= 1);
-        assert_eq!(t.stats.dir_fetches, 1);
+        let _ = t.child(Ino::new(0, 0, 99), "x"); // miss (dir unknown)
+        assert!(t.stats.node_hits.load(Relaxed) >= 1);
+        assert!(t.stats.node_misses.load(Relaxed) >= 1);
+        assert_eq!(t.stats.dir_fetches.load(Relaxed), 1);
     }
 
     #[test]
     fn nested_dirs_cache_independently() {
-        let mut t = CacheTree::new(root());
+        let t = CacheTree::new(root());
         let a = Ino::new(0, 0, 2);
         t.install_dir(root(), PermBlob::new(0o755, 0, 0), &[de("a", 2, FileKind::Directory, 0o755)], 0);
         t.install_dir(a, PermBlob::new(0o755, 1, 1), &[de("x", 5, FileKind::Regular, 0o644)], 0);
-        assert_eq!(t.child(a, "x"), ChildLookup::Found(Ino::new(0, 0, 5)));
-        // invalidating the child dir leaves the root listing intact
+        assert_eq!(found_ino(t.child(a, "x")), Some(Ino::new(0, 0, 5)));
+        // invalidating the child dir leaves the root listing intact…
         t.invalidate_dir(a);
-        assert_eq!(t.child(root(), "a"), ChildLookup::Found(a));
+        assert_eq!(found_ino(t.child(root(), "a")), Some(a));
         assert_eq!(t.child(a, "x"), ChildLookup::DirNotCached);
+        // …and invalidating the root leaves the (separately-generationed)
+        // child listing intact: the server sends its own invalidation for
+        // the child when its content is affected (§3.4)
+        let g = t.gen_of(a);
+        t.install_dir(a, PermBlob::new(0o755, 1, 1), &[de("x", 5, FileKind::Regular, 0o644)], g);
+        t.invalidate_dir(root());
+        assert_eq!(found_ino(t.child(a, "x")), Some(Ino::new(0, 0, 5)));
+    }
+
+    #[test]
+    fn listing_returns_consistent_snapshot() {
+        let t = CacheTree::new(root());
+        assert!(t.listing(root()).is_none(), "unlisted dir has no listing");
+        t.install_dir(
+            root(),
+            PermBlob::new(0o755, 0, 0),
+            &[de("a", 2, FileKind::Regular, 0o644), de("b", 3, FileKind::Regular, 0o600)],
+            0,
+        );
+        let mut names: Vec<String> =
+            t.listing(root()).unwrap().into_iter().map(|e| e.name).collect();
+        names.sort();
+        assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+        t.invalidate_dir(root());
+        assert!(t.listing(root()).is_none(), "invalidated dir has no listing");
+    }
+
+    #[test]
+    fn concurrent_readers_and_invalidators_dont_corrupt() {
+        use std::sync::Arc;
+        let t = Arc::new(CacheTree::new(root()));
+        let entries: Vec<DirEntry> =
+            (0..64).map(|i| de(&format!("f{i}"), 100 + i, FileKind::Regular, 0o644)).collect();
+        t.install_dir(root(), PermBlob::new(0o755, 0, 0), &entries, 0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let t = Arc::clone(&t);
+                s.spawn(move || {
+                    for i in 0..2000u64 {
+                        match t.child(root(), &format!("f{}", i % 64)) {
+                            // a Found entry must always be internally
+                            // consistent (name matches, blob present)
+                            ChildLookup::Found(e) => assert_eq!(e.name, format!("f{}", i % 64)),
+                            ChildLookup::DirNotCached => {}
+                            other => panic!("unexpected {other:?}"),
+                        }
+                    }
+                });
+            }
+            let tw = Arc::clone(&t);
+            let entries = entries.clone();
+            s.spawn(move || {
+                for _ in 0..200 {
+                    tw.invalidate_dir(root());
+                    let g = tw.gen_of(root());
+                    tw.install_dir(root(), PermBlob::new(0o755, 0, 0), &entries, g);
+                }
+            });
+        });
+        // after the dust settles the tree must still resolve everything
+        let g = t.gen_of(root());
+        t.install_dir(root(), PermBlob::new(0o755, 0, 0), &entries, g);
+        for i in 0..64u64 {
+            assert_eq!(found_ino(t.child(root(), &format!("f{i}"))), Some(Ino::new(0, 0, 100 + i)));
+        }
     }
 }

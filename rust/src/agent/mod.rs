@@ -8,15 +8,31 @@
 //! open record (Step 2) to the first read/write RPC. A denied open costs
 //! **zero** RPCs; a granted open of a cached path costs zero RPCs too.
 //!
-//! Locking discipline: the cache and fd-table mutexes are NEVER held
-//! across an RPC — invalidation pushes (which take the cache lock on the
-//! server's pushing thread) would otherwise deadlock against the §3.4
-//! ack barrier.
+//! ## Cold path: one RPC per server, not one per component
+//!
+//! On a cache miss the agent sends the **whole remaining path suffix** in
+//! a single [`Request::ResolvePath`]; the owning server walks every
+//! component it owns and returns *all* intermediate listings, so a cold
+//! `open("/a/b/c/f")` on a single-server namespace costs exactly one
+//! round trip (and primes the cache for every directory on the way).
+//! When the walk crosses a server boundary the response carries a
+//! continuation token and the agent re-issues the remaining suffix to the
+//! next server. Talking to an old server that rejects the new message
+//! downgrades the agent to the classic per-level `ReadDir` walk.
+//!
+//! ## Warm path: lock-free reads
+//!
+//! The cache is sharded with per-shard `RwLock`s and atomic statistics
+//! (see [`cache::CacheTree`]), so concurrent warm-path opens take only
+//! shared read locks — no global mutex is ever held, and invalidation
+//! pushes (which take shard write locks on the server's pushing thread)
+//! never deadlock against the §3.4 ack barrier because no lock is held
+//! across an RPC.
 
 pub mod cache;
 pub mod fdtable;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::cluster::ClusterView;
@@ -33,6 +49,15 @@ use crate::wire::{Notify, NotifyAck, OpenCtx, Request, Response};
 use self::cache::{CacheTree, ChildLookup};
 use self::fdtable::{FdTable, FileHandle};
 
+/// Bound on continuation hops per batched walk (a namespace that
+/// ping-pongs between more servers than this falls back to per-level).
+const MAX_WALK_HOPS: usize = 8;
+
+/// Bound on fetch-install retries per lookup: a retry only happens when a
+/// concurrent §3.4 invalidation raced the fetch, so hitting the bound
+/// means the directory is being modified faster than we can read it.
+const MAX_FETCH_RETRIES: usize = 32;
+
 #[derive(Default)]
 pub struct AgentStats {
     /// Local (client-side) permission checks performed.
@@ -41,7 +66,8 @@ pub struct AgentStats {
     pub local_denies: AtomicU64,
     /// Successful opens that issued no RPC at all.
     pub rpc_free_opens: AtomicU64,
-    /// Directory fetches (cold cache / post-invalidation).
+    /// Directory listings fetched (cold cache / post-invalidation) —
+    /// batched walks count every listing they return.
     pub dir_fetches: AtomicU64,
     /// X-only traversals that fell back to single-entry Lookup RPCs.
     pub fallback_lookups: AtomicU64,
@@ -49,6 +75,10 @@ pub struct AgentStats {
     pub batch_checks: AtomicU64,
     /// Invalidations received from servers.
     pub invalidations_rx: AtomicU64,
+    /// Batched `ResolvePath` RPCs issued (tentpole cold path).
+    pub batch_walks: AtomicU64,
+    /// Permanent downgrades to per-level ReadDir (old-server fallback).
+    pub resolve_downgrades: AtomicU64,
 }
 
 /// Result of a path resolution: the leaf entry plus the perm-blob chain
@@ -63,12 +93,17 @@ pub struct Resolved {
 pub struct BAgent {
     id: ClientId,
     cluster: ClusterView,
-    cache: Mutex<CacheTree>,
+    /// Sharded, read-optimized: no outer lock — see [`cache::CacheTree`].
+    cache: CacheTree,
     fds: Mutex<FdTable>,
     handle_seq: AtomicU64,
     metrics: Arc<RpcMetrics>,
     /// Optional AOT-kernel batch checker (PJRT); used by [`BAgent::open_many`].
     checker: RwLock<Option<Arc<dyn BatchPathChecker>>>,
+    /// Batched cold-path walks enabled? Cleared permanently when a server
+    /// rejects [`Request::ResolvePath`] (protocol downgrade), or by
+    /// [`BAgent::set_batched_resolve`] for ablation runs.
+    batched: AtomicBool,
     pub stats: AgentStats,
 }
 
@@ -78,11 +113,12 @@ impl BAgent {
         Arc::new(BAgent {
             id,
             cluster,
-            cache: Mutex::new(CacheTree::new(root)),
+            cache: CacheTree::new(root),
             fds: Mutex::new(FdTable::new()),
             handle_seq: AtomicU64::new(1),
             metrics,
             checker: RwLock::new(None),
+            batched: AtomicBool::new(true),
             stats: AgentStats::default(),
         })
     }
@@ -104,9 +140,31 @@ impl BAgent {
         *self.checker.write().unwrap() = Some(c);
     }
 
+    /// Toggle the batched cold-path walk (ablation: `false` restores the
+    /// one-ReadDir-per-component behaviour).
+    pub fn set_batched_resolve(&self, on: bool) {
+        self.batched.store(on, Ordering::Relaxed);
+    }
+
+    fn batched_enabled(&self) -> bool {
+        self.batched.load(Ordering::Relaxed)
+    }
+
+    fn downgrade_batched(&self) {
+        if self.batched.swap(false, Ordering::Relaxed) {
+            self.stats.resolve_downgrades.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// (node hits, node misses, directory fetches) — see [`cache::CacheStats`].
     pub fn cache_stats(&self) -> (u64, u64, u64) {
-        let c = self.cache.lock().unwrap();
-        (c.stats.node_hits, c.stats.node_misses, c.stats.dir_fetches)
+        let (hits, misses, fetches, _, _) = self.cache.stats.snapshot();
+        (hits, misses, fetches)
+    }
+
+    /// The cached directory tree (read-only view for tests/telemetry).
+    pub fn cache(&self) -> &CacheTree {
+        &self.cache
     }
 
     // -- path resolution over the cached tree --------------------------------
@@ -118,21 +176,74 @@ impl BAgent {
         Ok(path.split('/').filter(|c| !c.is_empty()).collect())
     }
 
-    /// Ensure a directory's listing is cached; returns its perm blob.
-    fn ensure_dir_cached(&self, dir: Ino, cred: &Credentials) -> FsResult<PermBlob> {
-        {
-            let mut cache = self.cache.lock().unwrap();
-            if let Some(n) = cache.get(dir) {
-                if n.children.is_some() {
-                    return Ok(n.entry.perm);
+    /// Issue ONE batched walk for the remaining suffix, following
+    /// continuation tokens across server boundaries, and install every
+    /// returned listing (generation-checked against concurrent §3.4
+    /// invalidations). Returns `Ok(())` when the responses were processed
+    /// — the caller re-reads the cache and retries if it still misses.
+    fn resolve_path_rpc(&self, base: Ino, comps: &[&str], cred: &Credentials) -> FsResult<()> {
+        let mut base = base;
+        let mut remaining: Vec<String> = comps.iter().map(|s| s.to_string()).collect();
+        for hop in 0..MAX_WALK_HOPS {
+            let epoch0 = self.cache.epoch();
+            self.stats.batch_walks.fetch_add(1, Ordering::Relaxed);
+            let resp = match self.cluster.transport(base)?.call(Request::ResolvePath {
+                base,
+                components: remaining.clone(),
+                client: self.id,
+                register: true,
+                cred: cred.clone(),
+            }) {
+                Ok(r) => r,
+                // EACCES from a *continuation* hop is not the caller's
+                // base directory being unreadable — the prefix installed
+                // by earlier hops is valid progress. Stop here; the walk
+                // re-discovers the unreadable level with it as base and
+                // only then takes the X-only fallback.
+                Err(FsError::PermissionDenied) if hop > 0 => return Ok(()),
+                Err(e) => return Err(e),
+            };
+            let (dirs, walked, next) = match resp {
+                Response::Walked { dirs, walked, next } => (dirs, walked, next),
+                other => return Err(FsError::Protocol(format!("resolvepath returned {other:?}"))),
+            };
+            self.metrics.record_walk_depth(dirs.len() as u64);
+            self.stats.dir_fetches.fetch_add(dirs.len() as u64, Ordering::Relaxed);
+            // Snapshot generations BEFORE the epoch comparison: if no
+            // invalidation landed since `epoch0`, these are the pre-RPC
+            // generations and each install re-checks its own under the
+            // shard write lock. If the epoch moved, some invalidation
+            // raced the fetch — drop the whole response and let the
+            // caller's cache re-read trigger a refetch.
+            let snaps: Vec<u64> = dirs.iter().map(|d| self.cache.gen_of(d.attr.ino)).collect();
+            if self.cache.epoch() != epoch0 {
+                return Ok(());
+            }
+            for (wd, snap) in dirs.iter().zip(snaps) {
+                let _ = self.cache.install_dir(wd.attr.ino, wd.attr.perm, &wd.entries, snap);
+            }
+            match next {
+                Some(n) if walked > 0 && (walked as usize) < remaining.len() => {
+                    remaining.drain(..walked as usize);
+                    base = n;
                 }
+                _ => return Ok(()),
             }
         }
-        // fetch the whole directory: entries + blobs, and register for
-        // invalidations (§3.4). If an invalidation lands while the fetch
-        // is in flight the listing is untrusted — drop it and refetch.
-        for _ in 0..32 {
-            let snap_gen = self.cache.lock().unwrap().gen_of(dir);
+        Ok(())
+    }
+
+    /// Ensure a directory's listing is cached via per-level ReadDir (the
+    /// pre-batching protocol — still the fallback); returns its perm blob.
+    fn ensure_dir_cached(&self, dir: Ino, cred: &Credentials) -> FsResult<PermBlob> {
+        for _ in 0..MAX_FETCH_RETRIES {
+            if let Some(p) = self.cache.dir_perm_if_listed(dir) {
+                return Ok(p);
+            }
+            // fetch the whole directory: entries + blobs, and register for
+            // invalidations (§3.4). If an invalidation lands while the fetch
+            // is in flight the listing is untrusted — drop it and refetch.
+            let snap_gen = self.cache.gen_of(dir);
             self.stats.dir_fetches.fetch_add(1, Ordering::Relaxed);
             let resp = self.cluster.transport(dir)?.call(Request::ReadDir {
                 dir,
@@ -142,8 +253,7 @@ impl BAgent {
             })?;
             match resp {
                 Response::Entries { dir: attr, entries } => {
-                    let mut cache = self.cache.lock().unwrap();
-                    if cache.install_dir(dir, attr.perm, &entries, snap_gen) {
+                    if self.cache.install_dir(dir, attr.perm, &entries, snap_gen) {
                         return Ok(attr.perm);
                     }
                     // raced: loop and refetch
@@ -154,23 +264,64 @@ impl BAgent {
         Err(FsError::Busy)
     }
 
-    /// Look one name up under `dir`, via cache or fetch. The X-only
-    /// fallback covers directories the cred may traverse but not read.
-    /// Retries a bounded number of times: a concurrent §3.4 invalidation
-    /// can land between the fetch and the lookup, which merely means
-    /// "fetch again", never ENOENT.
-    fn lookup_child(&self, dir: Ino, name: &str, cred: &Credentials) -> FsResult<DirEntry> {
-        for _attempt in 0..32 {
-            {
-                let mut cache = self.cache.lock().unwrap();
-                match cache.child(dir, name) {
-                    ChildLookup::Found(ino) => {
-                        if let Some(n) = cache.peek(ino) {
-                            return Ok(n.entry.clone());
-                        }
+    /// Prime the cache for `dir` (and, when batching, for as much of
+    /// `lookahead` as one RPC can reach); returns `dir`'s perm blob.
+    fn prime_dir(&self, dir: Ino, lookahead: &[&str], cred: &Credentials) -> FsResult<PermBlob> {
+        if let Some(p) = self.cache.dir_perm_if_listed(dir) {
+            return Ok(p);
+        }
+        if self.batched_enabled() {
+            match self.resolve_path_rpc(dir, lookahead, cred) {
+                Ok(()) => {
+                    if let Some(p) = self.cache.dir_perm_if_listed(dir) {
+                        return Ok(p);
                     }
-                    ChildLookup::NoSuchEntry => return Err(FsError::NotFound),
-                    ChildLookup::DirNotCached => {}
+                    // raced with invalidations — the per-level loop below
+                    // retries with its own bounded backoff
+                }
+                Err(FsError::Protocol(_)) => self.downgrade_batched(),
+                Err(e) => return Err(e),
+            }
+        }
+        self.ensure_dir_cached(dir, cred)
+    }
+
+    /// X-only traversal: the cred may not READ `dir`, but can still
+    /// resolve a known name through it with a single-entry Lookup RPC.
+    fn lookup_via_x_only(&self, dir: Ino, name: &str, cred: &Credentials) -> FsResult<DirEntry> {
+        self.stats.fallback_lookups.fetch_add(1, Ordering::Relaxed);
+        let resp = self.cluster.transport(dir)?.call(Request::Lookup {
+            dir,
+            name: name.to_string(),
+            cred: cred.clone(),
+        })?;
+        match resp {
+            Response::Entry(e) => Ok(e),
+            other => Err(FsError::Protocol(format!("lookup returned {other:?}"))),
+        }
+    }
+
+    /// Resolve `rest[0]` under `dir`, via cache or fetch; `rest[1..]` is
+    /// lookahead the batched walk sends along so ONE round trip primes the
+    /// rest of the path. Retries a bounded number of times: a concurrent
+    /// §3.4 invalidation can land between the fetch and the lookup, which
+    /// merely means "fetch again", never ENOENT.
+    fn lookup_child(&self, dir: Ino, rest: &[&str], cred: &Credentials) -> FsResult<DirEntry> {
+        let name = rest[0];
+        for _attempt in 0..MAX_FETCH_RETRIES {
+            match self.cache.child(dir, name) {
+                ChildLookup::Found(e) => return Ok(e),
+                ChildLookup::NoSuchEntry => return Err(FsError::NotFound),
+                ChildLookup::DirNotCached => {}
+            }
+            if self.batched_enabled() {
+                match self.resolve_path_rpc(dir, rest, cred) {
+                    Ok(()) => continue,
+                    Err(FsError::Protocol(_)) => self.downgrade_batched(),
+                    Err(FsError::PermissionDenied) => {
+                        return self.lookup_via_x_only(dir, name, cred)
+                    }
+                    Err(e) => return Err(e),
                 }
             }
             match self.lookup_child_fetch(dir, name, cred)? {
@@ -181,31 +332,23 @@ impl BAgent {
         Err(FsError::Busy)
     }
 
-    /// One fetch attempt; `Ok(None)` = invalidated between fetch and use.
-    fn lookup_child_fetch(&self, dir: Ino, name: &str, cred: &Credentials) -> FsResult<Option<DirEntry>> {
+    /// One per-level fetch attempt; `Ok(None)` = invalidated between
+    /// fetch and use.
+    fn lookup_child_fetch(
+        &self,
+        dir: Ino,
+        name: &str,
+        cred: &Credentials,
+    ) -> FsResult<Option<DirEntry>> {
         match self.ensure_dir_cached(dir, cred) {
-            Ok(_) => {
-                let mut cache = self.cache.lock().unwrap();
-                match cache.child(dir, name) {
-                    ChildLookup::Found(ino) => {
-                        Ok(Some(cache.peek(ino).map(|n| n.entry.clone()).ok_or(FsError::NotFound)?))
-                    }
-                    ChildLookup::NoSuchEntry => Err(FsError::NotFound),
-                    ChildLookup::DirNotCached => Ok(None),
-                }
-            }
+            Ok(_) => match self.cache.child(dir, name) {
+                ChildLookup::Found(e) => Ok(Some(e)),
+                ChildLookup::NoSuchEntry => Err(FsError::NotFound),
+                ChildLookup::DirNotCached => Ok(None), // invalidated again: refetch
+            },
             Err(FsError::PermissionDenied) => {
                 // can't read the directory; X-only traversal via Lookup RPC
-                self.stats.fallback_lookups.fetch_add(1, Ordering::Relaxed);
-                let resp = self.cluster.transport(dir)?.call(Request::Lookup {
-                    dir,
-                    name: name.to_string(),
-                    cred: cred.clone(),
-                })?;
-                match resp {
-                    Response::Entry(e) => Ok(Some(e)),
-                    other => Err(FsError::Protocol(format!("lookup returned {other:?}"))),
-                }
+                Ok(Some(self.lookup_via_x_only(dir, name, cred)?))
             }
             Err(e) => Err(e),
         }
@@ -215,14 +358,15 @@ impl BAgent {
     pub fn resolve(&self, path: &str, cred: &Credentials) -> FsResult<Resolved> {
         let comps = Self::split_path(path)?;
         let root = self.cluster.root();
-        let root_perm = self.ensure_dir_cached(root, cred).or_else(|e| {
-            // even an unreadable root can be traversed; use cached/default blob
-            if e == FsError::PermissionDenied {
-                Ok(self.cache.lock().unwrap().peek(root).map(|n| n.entry.perm).unwrap_or(PermBlob::new(0o755, 0, 0)))
-            } else {
-                Err(e)
+        // One batched RPC primes root + the whole owned prefix; even an
+        // unreadable root can be traversed via its cached/default blob.
+        let root_perm = match self.prime_dir(root, &comps, cred) {
+            Ok(p) => p,
+            Err(FsError::PermissionDenied) => {
+                self.cache.perm_of(root).unwrap_or(PermBlob::new(0o755, 0, 0))
             }
-        })?;
+            Err(e) => return Err(e),
+        };
         let mut chain = vec![root_perm];
         let mut cur = DirEntry {
             name: "/".into(),
@@ -231,15 +375,14 @@ impl BAgent {
             perm: root_perm,
         };
         let mut parent = root;
-        for (i, name) in comps.iter().enumerate() {
+        for i in 0..comps.len() {
             if cur.kind != FileKind::Directory {
                 return Err(FsError::NotADirectory);
             }
             parent = cur.ino;
-            let child = self.lookup_child(cur.ino, name, cred)?;
+            let child = self.lookup_child(cur.ino, &comps[i..], cred)?;
             chain.push(child.perm);
             cur = child;
-            let _ = i;
         }
         Ok(Resolved { leaf: cur, chain, parent })
     }
@@ -349,8 +492,7 @@ impl BAgent {
             other => return Err(FsError::Protocol(format!("create returned {other:?}"))),
         };
         let _ = flags;
-        let mut cache = self.cache.lock().unwrap();
-        cache.insert_entry(parent.leaf.ino, entry.clone());
+        self.cache.insert_entry(parent.leaf.ino, entry.clone());
         let mut chain = parent.chain.clone();
         chain.push(entry.perm);
         Ok(Resolved { leaf: entry, chain, parent: parent.leaf.ino })
@@ -565,16 +707,11 @@ impl BAgent {
             self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
-        self.ensure_dir_cached(r.leaf.ino, cred)?;
-        let cache = self.cache.lock().unwrap();
-        let names: Vec<(String, Ino)> = match cache.peek(r.leaf.ino).and_then(|n| n.children.as_ref()) {
-            Some(c) => c.iter().map(|(n, i)| (n.clone(), *i)).collect(),
+        self.prime_dir(r.leaf.ino, &[], cred)?;
+        let mut out = match self.cache.listing(r.leaf.ino) {
+            Some(entries) => entries,
             None => return Err(FsError::CacheInvalidated),
         };
-        let mut out: Vec<DirEntry> = names
-            .into_iter()
-            .filter_map(|(_, ino)| cache.peek(ino).map(|n| n.entry.clone()))
-            .collect();
         out.sort_by(|a, b| a.name.cmp(&b.name));
         Ok(out)
     }
@@ -594,7 +731,7 @@ impl BAgent {
         })?;
         match resp {
             Response::Created(e) => {
-                self.cache.lock().unwrap().insert_entry(parent.leaf.ino, e.clone());
+                self.cache.insert_entry(parent.leaf.ino, e.clone());
                 Ok(e)
             }
             other => Err(FsError::Protocol(format!("mkdir returned {other:?}"))),
@@ -618,7 +755,7 @@ impl BAgent {
         })?;
         match resp {
             Response::Created(e) => {
-                self.cache.lock().unwrap().insert_entry(parent.leaf.ino, e.clone());
+                self.cache.insert_entry(parent.leaf.ino, e.clone());
                 Ok(e)
             }
             other => Err(FsError::Protocol(format!("create returned {other:?}"))),
@@ -632,7 +769,7 @@ impl BAgent {
             name: name.to_string(),
             cred: cred.clone(),
         })?;
-        self.cache.lock().unwrap().evict_entry(parent.leaf.ino, name);
+        self.cache.evict_entry(parent.leaf.ino, name);
         Ok(())
     }
 
@@ -643,7 +780,7 @@ impl BAgent {
             name: name.to_string(),
             cred: cred.clone(),
         })?;
-        self.cache.lock().unwrap().evict_entry(parent.leaf.ino, name);
+        self.cache.evict_entry(parent.leaf.ino, name);
         Ok(())
     }
 
@@ -651,7 +788,7 @@ impl BAgent {
         let r = self.resolve(path, cred)?;
         // the chmod RPC goes to the server *owning the inode* (§3.2);
         // that server runs the §3.4 invalidation barrier (which will call
-        // back into this agent's NotifySink — cache lock must be free)
+        // back into this agent's NotifySink — no cache lock is held here)
         self.cluster.transport(r.leaf.ino)?.call(Request::Chmod {
             ino: r.leaf.ino,
             mode,
@@ -684,9 +821,8 @@ impl BAgent {
             dname: dname.to_string(),
             cred: cred.clone(),
         })?;
-        let mut cache = self.cache.lock().unwrap();
-        cache.evict_entry(sparent.leaf.ino, sname);
-        cache.invalidate_dir(dparent.leaf.ino);
+        self.cache.evict_entry(sparent.leaf.ino, sname);
+        self.cache.invalidate_dir(dparent.leaf.ino);
         Ok(())
     }
 
@@ -707,14 +843,13 @@ impl BAgent {
 }
 
 /// §3.4 receive side: invalidate the named directories and ack. Runs on
-/// the server's pushing thread; only takes the cache lock.
+/// the server's pushing thread; only takes per-shard cache locks.
 impl NotifySink for BAgent {
     fn notify(&self, n: Notify) -> NotifyAck {
         let Notify::Invalidate { seq, dirs } = n;
         self.stats.invalidations_rx.fetch_add(1, Ordering::Relaxed);
-        let mut cache = self.cache.lock().unwrap();
         for d in dirs {
-            cache.invalidate_dir(d);
+            self.cache.invalidate_dir(d);
         }
         NotifyAck { client: self.id, seq }
     }

@@ -235,6 +235,15 @@ impl Wire for DirEntry {
     }
 }
 
+impl Wire for String {
+    fn enc(&self, e: &mut Enc) {
+        e.str(self);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        d.str()
+    }
+}
+
 impl<T: Wire> Wire for Vec<T> {
     fn enc(&self, e: &mut Enc) {
         e.u32(self.len() as u32);
@@ -337,6 +346,15 @@ mod tests {
         assert_eq!(Option::<Ino>::from_bytes(&o.to_bytes()).unwrap(), o);
         let n: Option<Ino> = None;
         assert_eq!(Option::<Ino>::from_bytes(&n.to_bytes()).unwrap(), n);
+    }
+
+    #[test]
+    fn string_vec_roundtrip() {
+        // the path-component list ResolvePath ships
+        let comps: Vec<String> = vec!["a".into(), "".into(), "f.dat".into(), "ünïcode".into()];
+        assert_eq!(Vec::<String>::from_bytes(&comps.to_bytes()).unwrap(), comps);
+        let empty: Vec<String> = vec![];
+        assert_eq!(Vec::<String>::from_bytes(&empty.to_bytes()).unwrap(), empty);
     }
 
     #[test]

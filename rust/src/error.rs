@@ -1,44 +1,55 @@
 //! errno-style error type shared by every layer and carried on the wire.
+//! (Display/Error are hand-implemented: the offline crate universe has no
+//! thiserror.)
 
-use thiserror::Error;
+use std::fmt;
 
 /// File-system errors. Wire codes are stable (see `to_wire`/`from_wire`)
 /// so client and server can exchange them without a shared binary.
-#[derive(Error, Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FsError {
-    #[error("no such file or directory")]
     NotFound,
-    #[error("permission denied")]
     PermissionDenied,
-    #[error("not a directory")]
     NotADirectory,
-    #[error("is a directory")]
     IsADirectory,
-    #[error("file exists")]
     AlreadyExists,
-    #[error("directory not empty")]
     NotEmpty,
-    #[error("bad file descriptor")]
     BadFd,
-    #[error("invalid argument: {0}")]
     Invalid(String),
-    #[error("stale handle (server version changed)")]
     Stale,
-    #[error("cache entry invalidated, refetch required")]
     CacheInvalidated,
-    #[error("no such server: host {0}")]
     NoSuchServer(u16),
-    #[error("server busy")]
     Busy,
-    #[error("name too long")]
     NameTooLong,
-    #[error("transport failure: {0}")]
     Transport(String),
-    #[error("protocol violation: {0}")]
     Protocol(String),
-    #[error("I/O error: {0}")]
     Io(String),
 }
+
+impl fmt::Display for FsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FsError::NotFound => write!(f, "no such file or directory"),
+            FsError::PermissionDenied => write!(f, "permission denied"),
+            FsError::NotADirectory => write!(f, "not a directory"),
+            FsError::IsADirectory => write!(f, "is a directory"),
+            FsError::AlreadyExists => write!(f, "file exists"),
+            FsError::NotEmpty => write!(f, "directory not empty"),
+            FsError::BadFd => write!(f, "bad file descriptor"),
+            FsError::Invalid(m) => write!(f, "invalid argument: {m}"),
+            FsError::Stale => write!(f, "stale handle (server version changed)"),
+            FsError::CacheInvalidated => write!(f, "cache entry invalidated, refetch required"),
+            FsError::NoSuchServer(h) => write!(f, "no such server: host {h}"),
+            FsError::Busy => write!(f, "server busy"),
+            FsError::NameTooLong => write!(f, "name too long"),
+            FsError::Transport(m) => write!(f, "transport failure: {m}"),
+            FsError::Protocol(m) => write!(f, "protocol violation: {m}"),
+            FsError::Io(m) => write!(f, "I/O error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FsError {}
 
 impl FsError {
     /// Stable wire code (u16) + optional message payload.

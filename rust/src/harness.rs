@@ -401,6 +401,103 @@ pub fn ablation_dom(cfg: &BenchCfg, write_fractions: &[f64], procs: usize, ops: 
     out
 }
 
+/// Cold-walk depth sweep (tentpole ablation): time + RPC count of the
+/// FIRST open of a depth-D path on a cold agent, batched `ResolvePath`
+/// vs the classic one-ReadDir-per-component walk.
+#[derive(Debug, Clone)]
+pub struct ColdWalkRow {
+    /// Directories below the root on the path (the leaf file adds one
+    /// more component).
+    pub depth: usize,
+    pub batched_us: f64,
+    pub batched_rpcs: f64,
+    pub per_level_us: f64,
+    pub per_level_rpcs: f64,
+}
+
+/// Build one single-server namespace holding a chain `/cwD_1/…/cwD_D/
+/// leaf.dat` per requested depth, then cold-open each leaf `iters` times
+/// through a FRESH agent — once with the batched walk, once downgraded to
+/// per-level ReadDir.
+pub fn ablation_cold_walk(net: NetConfig, depths: &[usize], iters: usize) -> Vec<ColdWalkRow> {
+    use crate::transport::Service;
+    use crate::types::{Credentials, FileKind};
+    use crate::wire::{Request, Response};
+
+    let cluster = BuffetCluster::spawn_with(1, net, Backing::Mem, false, ServiceConfig::unbounded());
+    let s0 = &cluster.servers[0];
+    let root_cred = Credentials::root();
+    for &d in depths {
+        let mut dir = cluster.root();
+        for level in 1..=d {
+            match s0.handle(Request::Mkdir {
+                dir,
+                name: format!("cw{d}_{level}"),
+                mode: 0o755,
+                cred: root_cred.clone(),
+            }) {
+                Response::Created(e) => dir = e.ino,
+                other => panic!("cold-walk mkdir: {other:?}"),
+            }
+        }
+        match s0.handle(Request::Create {
+            dir,
+            name: "leaf.dat".into(),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: root_cred.clone(),
+            client: 0,
+        }) {
+            Response::Created(_) => {}
+            other => panic!("cold-walk create: {other:?}"),
+        }
+    }
+
+    let cred = Credentials::new(1000, 1000);
+    let mut rows = Vec::new();
+    for &d in depths {
+        let path: String = (1..=d).map(|l| format!("/cw{d}_{l}")).collect::<String>() + "/leaf.dat";
+        let measure = |batched: bool| -> (f64, f64) {
+            let (mut sum_us, mut sum_rpcs) = (0.0, 0.0);
+            for i in 0..iters {
+                // a fresh agent per iteration = a truly cold cache
+                let (agent, metrics) = cluster.make_agent();
+                agent.set_batched_resolve(batched);
+                let pid = 5000 + i as u32;
+                let t0 = Instant::now();
+                let fd = agent.open(pid, &path, OpenFlags::RDONLY, &cred).expect("cold open");
+                sum_us += t0.elapsed().as_secs_f64() * 1e6;
+                sum_rpcs += metrics.sync_rpcs() as f64;
+                agent.close(pid, fd).expect("close");
+            }
+            (sum_us / iters as f64, sum_rpcs / iters as f64)
+        };
+        let (batched_us, batched_rpcs) = measure(true);
+        let (per_level_us, per_level_rpcs) = measure(false);
+        rows.push(ColdWalkRow { depth: d, batched_us, batched_rpcs, per_level_us, per_level_rpcs });
+    }
+    rows
+}
+
+pub fn print_cold_walk(rows: &[ColdWalkRow]) {
+    println!("cold-walk depth sweep — first open of a depth-D path (fresh agent)");
+    println!(
+        "{:<6} {:>14} {:>12} {:>14} {:>12} {:>10}",
+        "depth", "ResolvePath_us", "rpcs", "per-level_us", "rpcs", "speedup"
+    );
+    for r in rows {
+        println!(
+            "{:<6} {:>14.1} {:>12.2} {:>14.1} {:>12.2} {:>9.2}x",
+            r.depth,
+            r.batched_us,
+            r.batched_rpcs,
+            r.per_level_us,
+            r.per_level_rpcs,
+            if r.batched_us > 0.0 { r.per_level_us / r.batched_us } else { 0.0 }
+        );
+    }
+}
+
 /// One Buffet process doing the paper's open-read-close on every file of
 /// a pre-built SUT — helper for criterion-style loops.
 pub fn steady_access(sut: &Sut, spec: &FileSetSpec, stream: &mut AccessStream, pid: u32) {
@@ -496,6 +593,25 @@ mod tests {
         // exactly one sync RPC per access for BuffetFS
         assert!(buffet.sync_rpcs_per_access < 1.5);
         assert!(normal.sync_rpcs_per_access > 1.5);
+    }
+
+    #[test]
+    fn cold_walk_batched_is_one_rpc_and_fewer_than_per_level() {
+        let rows = ablation_cold_walk(NetConfig::zero(), &[1, 3], 2);
+        for r in &rows {
+            assert!(
+                (r.batched_rpcs - 1.0).abs() < 1e-9,
+                "depth {}: batched cold open took {} RPCs, want exactly 1",
+                r.depth,
+                r.batched_rpcs
+            );
+            assert!(
+                r.per_level_rpcs >= (r.depth + 1) as f64,
+                "depth {}: per-level walk took {} RPCs, want ≥ depth+1",
+                r.depth,
+                r.per_level_rpcs
+            );
+        }
     }
 
     #[test]

@@ -15,7 +15,8 @@ use crate::util::hist::Histogram;
 /// Known op names (fixed set → lock-free counters by index).
 pub const OPS: &[&str] = &[
     "lookup", "readdir", "getattr", "open", "read", "write", "close", "create", "mkdir",
-    "unlink", "rmdir", "rename", "chmod", "chown", "truncate", "statfs", "hello", "invalidate",
+    "unlink", "rmdir", "rename", "chmod", "chown", "truncate", "statfs", "hello", "resolve",
+    "invalidate",
 ];
 
 fn op_index(op: &str) -> usize {
@@ -24,10 +25,13 @@ fn op_index(op: &str) -> usize {
 
 #[derive(Default)]
 pub struct RpcMetrics {
-    counts: [AtomicU64; 18],
+    counts: [AtomicU64; 19],
     bytes_out: AtomicU64,
     bytes_in: AtomicU64,
     lat: Mutex<BTreeMap<&'static str, Histogram>>,
+    /// Listings returned per batched `ResolvePath` RPC (§tentpole): how
+    /// deep each one-round-trip cold walk got.
+    walk_depth: Mutex<Histogram>,
 }
 
 impl RpcMetrics {
@@ -78,6 +82,16 @@ impl RpcMetrics {
         lat.iter().find(|(o, _)| **o == op).map(|(_, h)| h.clone())
     }
 
+    /// One batched walk completed, returning `dirs` directory listings.
+    pub fn record_walk_depth(&self, dirs: u64) {
+        self.walk_depth.lock().unwrap().record(dirs);
+    }
+
+    /// Distribution of listings-per-ResolvePath (empty if never batched).
+    pub fn walk_depth_histogram(&self) -> Histogram {
+        self.walk_depth.lock().unwrap().clone()
+    }
+
     pub fn reset(&self) {
         for c in &self.counts {
             c.store(0, Ordering::Relaxed);
@@ -85,6 +99,7 @@ impl RpcMetrics {
         self.bytes_out.store(0, Ordering::Relaxed);
         self.bytes_in.store(0, Ordering::Relaxed);
         self.lat.lock().unwrap().clear();
+        *self.walk_depth.lock().unwrap() = Histogram::new();
     }
 
     /// Multi-line per-op report (counts + latency) for the CLI.
@@ -110,6 +125,15 @@ impl RpcMetrics {
             bo,
             bi
         ));
+        let wd = self.walk_depth_histogram();
+        if wd.count() > 0 {
+            out.push_str(&format!(
+                "  batched walks={} mean_dirs={:.1} max_dirs={}\n",
+                wd.count(),
+                wd.mean(),
+                wd.max()
+            ));
+        }
         out
     }
 }
@@ -147,6 +171,30 @@ mod tests {
         m.reset();
         assert_eq!(m.total_rpcs(), 0);
         assert!(m.histogram("read").is_none());
+    }
+
+    #[test]
+    fn resolve_is_a_first_class_op() {
+        let m = RpcMetrics::new();
+        m.record("resolve", 80, 512, Duration::from_micros(120));
+        assert_eq!(m.count("resolve"), 1);
+        // must NOT alias into the catch-all last bucket
+        assert_eq!(m.count("invalidate"), 0);
+        assert_eq!(m.metadata_rpcs(), 1);
+    }
+
+    #[test]
+    fn walk_depth_histogram_records_and_resets() {
+        let m = RpcMetrics::new();
+        m.record_walk_depth(4);
+        m.record_walk_depth(2);
+        let h = m.walk_depth_histogram();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), 4);
+        let r = m.report();
+        assert!(r.contains("batched walks=2"));
+        m.reset();
+        assert_eq!(m.walk_depth_histogram().count(), 0);
     }
 
     #[test]

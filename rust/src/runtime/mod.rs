@@ -7,13 +7,21 @@
 //! thread; [`KernelRuntime`] is a `Send + Sync` front-end that ships jobs
 //! over a channel. One thread is plenty: a single batch_open evaluates
 //! 256 path walks (≈4096 component checks) per call.
+//!
+//! The xla-touching backend is gated behind the `pjrt` cargo feature
+//! (the offline crate universe does not ship the `xla` crate). Without
+//! it, [`KernelRuntime::load`] fails cleanly and callers fall back to
+//! the native Rust oracle in [`crate::perm`].
 
 pub mod shapes;
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::mpsc::{self, SyncSender};
 use std::sync::{Arc, Mutex};
+
+#[cfg(feature = "pjrt")]
+use std::sync::mpsc::Receiver;
 
 use crate::error::{FsError, FsResult};
 use crate::perm::{self, BatchPathChecker};
@@ -22,6 +30,7 @@ use crate::types::{AccessMask, Credentials, PermBlob};
 use shapes::{BATCH_B, DEPTH_D, DIRSCAN_N, GROUPS_G};
 
 /// Raw i32 inputs for one batch_open execution (pre-padded).
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 struct BatchOpenJob {
     modes: Vec<i32>,     // B*D
     uids: Vec<i32>,      // B*D
@@ -33,6 +42,7 @@ struct BatchOpenJob {
     want: Vec<i32>,      // B
 }
 
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 struct DirScanJob {
     modes: Vec<i32>, // N
     uids: Vec<i32>,
@@ -88,6 +98,11 @@ impl KernelRuntime {
                 manifest.lines().next().unwrap_or("")
             )));
         }
+        Self::spawn_backend(dir)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn spawn_backend(dir: PathBuf) -> FsResult<Arc<KernelRuntime>> {
         let (tx, rx) = mpsc::channel::<Job>();
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<(), String>>(1);
         std::thread::Builder::new()
@@ -99,6 +114,17 @@ impl KernelRuntime {
             .map_err(|_| FsError::Io("runtime thread died during startup".into()))?
             .map_err(FsError::Io)?;
         Ok(Arc::new(KernelRuntime { tx: Mutex::new(tx), stats: RuntimeStats::default() }))
+    }
+
+    /// Feature-off stub: the artifacts may exist, but there is no XLA to
+    /// compile them with — callers fall back to the native oracle.
+    #[cfg(not(feature = "pjrt"))]
+    fn spawn_backend(_dir: PathBuf) -> FsResult<Arc<KernelRuntime>> {
+        Err(FsError::Io(
+            "pjrt backend not compiled in: rebuild with `--features pjrt` \
+             (requires the vendored `xla` crate)"
+                .into(),
+        ))
     }
 
     fn submit(&self, job: Job) -> FsResult<()> {
@@ -243,9 +269,10 @@ impl BatchPathChecker for KernelRuntime {
 }
 
 // ---------------------------------------------------------------------------
-// the runtime thread
+// the runtime thread (pjrt feature only — the `xla` crate lives here)
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn compile(
     client: &xla::PjRtClient,
     path: &Path,
@@ -256,6 +283,7 @@ fn compile(
     client.compile(&comp).map_err(|e| format!("compile {path:?}: {e}"))
 }
 
+#[cfg(feature = "pjrt")]
 fn runtime_thread(dir: PathBuf, rx: Receiver<Job>, ready: SyncSender<Result<(), String>>) {
     let setup = (|| -> Result<_, String> {
         let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
@@ -290,16 +318,19 @@ fn runtime_thread(dir: PathBuf, rx: Receiver<Job>, ready: SyncSender<Result<(), 
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn lit2(v: &[i32], rows: usize, cols: usize) -> FsResult<xla::Literal> {
     xla::Literal::vec1(v)
         .reshape(&[rows as i64, cols as i64])
         .map_err(|e| FsError::Io(format!("literal reshape: {e}")))
 }
 
+#[cfg(feature = "pjrt")]
 fn lit1(v: &[i32]) -> xla::Literal {
     xla::Literal::vec1(v)
 }
 
+#[cfg(feature = "pjrt")]
 fn run_batch_open(
     exe: &xla::PjRtLoadedExecutable,
     j: &BatchOpenJob,
@@ -328,6 +359,7 @@ fn run_batch_open(
     Ok((allow, fail))
 }
 
+#[cfg(feature = "pjrt")]
 fn run_dirscan(exe: &xla::PjRtLoadedExecutable, j: &DirScanJob) -> FsResult<Vec<i32>> {
     let inputs = [
         lit1(&j.modes),

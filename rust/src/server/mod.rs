@@ -51,6 +51,8 @@ pub struct ServerStats {
     pub invalidation_barriers: AtomicU64,
     pub invalidations_pushed: AtomicU64,
     pub cross_server_ops: AtomicU64,
+    /// Batched `ResolvePath` walks served (tentpole cold-path RPC).
+    pub batch_walks: AtomicU64,
 }
 
 pub struct BServer {
@@ -466,6 +468,70 @@ impl BServer {
                 self.fs.set_dirent_perm(dir_file, &name, perm)?;
                 Ok(Response::Unit)
             }
+            Request::ResolvePath { base, components, client, register, cred } => {
+                // Tentpole cold path: walk as many components as this
+                // server owns in ONE round trip, shipping every traversed
+                // directory's listing back (each entry with its 10-byte
+                // perm blob). Per-level enforcement matches ReadDir: a
+                // listing is only handed out when the cred may READ that
+                // directory — the client falls back to X-only Lookup past
+                // an unreadable level, and does its own §3.1 permission
+                // walk on the returned blobs.
+                self.stats.batch_walks.fetch_add(1, Ordering::Relaxed);
+                let mut dirs: Vec<crate::wire::WalkedDir> = Vec::new();
+                let mut walked: u32 = 0;
+                let mut next: Option<Ino> = None;
+                let mut cur = self.fs.validate(base)?;
+                loop {
+                    let attr = self.fs.getattr(cur)?;
+                    if attr.kind != FileKind::Directory {
+                        if dirs.is_empty() {
+                            return Err(FsError::NotADirectory);
+                        }
+                        break;
+                    }
+                    if perm::require_access(&attr.perm, &cred, AccessMask::READ).is_err() {
+                        if dirs.is_empty() {
+                            return Err(FsError::PermissionDenied);
+                        }
+                        break;
+                    }
+                    // shared dir lock: registration + listing atomic vs
+                    // the §3.4 invalidate-then-apply sequence (same
+                    // discipline as ReadDir)
+                    let entry = {
+                        let _g = self.locks.read(cur);
+                        if register {
+                            self.registry.register(cur, client);
+                        }
+                        let (dattr, entries) = self.fs.readdir(cur)?;
+                        let entry = components
+                            .get(walked as usize)
+                            .and_then(|name| entries.iter().find(|e| e.name == *name).cloned());
+                        dirs.push(crate::wire::WalkedDir { attr: dattr, entries });
+                        entry
+                    };
+                    let entry = match entry {
+                        Some(e) => e,
+                        // components exhausted (walk complete), or the
+                        // name is absent — the listing we just pushed is
+                        // the client's authoritative local ENOENT
+                        None => break,
+                    };
+                    walked += 1;
+                    if entry.kind != FileKind::Directory {
+                        break;
+                    }
+                    if entry.ino.host != self.fs.host {
+                        // server boundary in the decentralized namespace:
+                        // hand the client a continuation token
+                        next = Some(entry.ino);
+                        break;
+                    }
+                    cur = self.fs.validate(entry.ino)?;
+                }
+                Ok(Response::Walked { dirs, walked, next })
+            }
         }
     }
 }
@@ -659,6 +725,139 @@ mod tests {
         assert_eq!(r, Response::Unit);
         let r = s.handle(Request::GetAttr { ino: e.ino });
         assert_eq!(r, Response::Err(FsError::NotFound));
+    }
+
+    #[test]
+    fn resolve_path_walks_in_one_rpc() {
+        let s = server();
+        let mkdir = |dir: Ino, name: &str| match s.handle(Request::Mkdir {
+            dir,
+            name: name.into(),
+            mode: 0o755,
+            cred: cred(),
+        }) {
+            Response::Created(e) => e,
+            other => panic!("mkdir: {other:?}"),
+        };
+        let a = mkdir(root(), "a");
+        let b = mkdir(a.ino, "b");
+        s.handle(Request::Create {
+            dir: b.ino,
+            name: "f".into(),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: cred(),
+            client: 1,
+        });
+        let r = s.handle(Request::ResolvePath {
+            base: root(),
+            components: vec!["a".into(), "b".into(), "f".into()],
+            client: 9,
+            register: true,
+            cred: cred(),
+        });
+        match r {
+            Response::Walked { dirs, walked, next } => {
+                assert_eq!(walked, 3, "all three components consumed");
+                assert_eq!(next, None);
+                assert_eq!(dirs.len(), 3, "listings for /, /a, /a/b");
+                assert_eq!(dirs[0].attr.ino, root());
+                assert_eq!(dirs[1].attr.ino, a.ino);
+                assert!(dirs[2].entries.iter().any(|e| e.name == "f"));
+            }
+            other => panic!("resolvepath: {other:?}"),
+        }
+        assert_eq!(s.stats.batch_walks.load(Ordering::Relaxed), 1);
+        // every returned directory was registered for §3.4 invalidations
+        assert_eq!(s.clients_caching(crate::store::inode::ROOT_FILE_ID), vec![9]);
+        assert_eq!(s.clients_caching(a.ino.file), vec![9]);
+        assert_eq!(s.clients_caching(b.ino.file), vec![9]);
+
+        // missing mid-path name: walk stops, the last listing is the
+        // client's authoritative ENOENT evidence
+        match s.handle(Request::ResolvePath {
+            base: root(),
+            components: vec!["a".into(), "zz".into(), "f".into()],
+            client: 9,
+            register: false,
+            cred: cred(),
+        }) {
+            Response::Walked { dirs, walked, next } => {
+                assert_eq!(walked, 1);
+                assert_eq!(dirs.len(), 2, "listings for / and /a");
+                assert_eq!(next, None);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn resolve_path_enforces_read_permission_per_level() {
+        let s = server();
+        let a = match s.handle(Request::Mkdir { dir: root(), name: "a".into(), mode: 0o711, cred: cred() }) {
+            Response::Created(e) => e,
+            other => panic!("{other:?}"),
+        };
+        let stranger = Credentials::new(5, 5);
+        // unreadable base: no listing at all → explicit denial, so the
+        // client switches straight to the X-only Lookup fallback
+        assert_eq!(
+            s.handle(Request::ResolvePath {
+                base: a.ino,
+                components: vec!["x".into()],
+                client: 9,
+                register: false,
+                cred: stranger.clone(),
+            }),
+            Response::Err(FsError::PermissionDenied)
+        );
+        // unreadable level mid-walk: the walk returns what it legally can
+        match s.handle(Request::ResolvePath {
+            base: root(),
+            components: vec!["a".into(), "x".into()],
+            client: 9,
+            register: false,
+            cred: stranger,
+        }) {
+            Response::Walked { dirs, walked, next } => {
+                assert_eq!(dirs.len(), 1, "only the root listing");
+                assert_eq!(walked, 1, "the 'a' component itself resolved");
+                assert_eq!(next, None);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn resolve_path_hands_out_continuation_at_server_boundary() {
+        let s = server();
+        // fabricate a dirent whose directory lives on host 1
+        let remote = Ino::new(1, 0, 77);
+        s.fs
+            .insert_remote_entry(
+                ROOT_FILE_ID,
+                DirEntry {
+                    name: "m".into(),
+                    ino: remote,
+                    kind: FileKind::Directory,
+                    perm: crate::types::PermBlob::new(0o755, 0, 0),
+                },
+            )
+            .unwrap();
+        match s.handle(Request::ResolvePath {
+            base: root(),
+            components: vec!["m".into(), "x".into()],
+            client: 9,
+            register: false,
+            cred: cred(),
+        }) {
+            Response::Walked { dirs, walked, next } => {
+                assert_eq!(dirs.len(), 1);
+                assert_eq!(walked, 1, "the boundary component was consumed");
+                assert_eq!(next, Some(remote), "continuation token for host 1");
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

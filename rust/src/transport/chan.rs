@@ -9,6 +9,7 @@
 //! asynchronously" (§3.3).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -18,6 +19,12 @@ use crate::metrics::RpcMetrics;
 use crate::simnet::LatencyModel;
 use crate::transport::{NotifyPush, NotifySink, Service, Transport};
 use crate::wire::{Notify, NotifyAck, Request, Response};
+
+/// Cap on queued fire-and-forget requests. Beyond this the sender pays
+/// the synchronous round trip itself — backpressure instead of unbounded
+/// memory growth when closes are produced faster than the drainer (one
+/// simulated round trip each) can retire them.
+const ASYNC_Q_CAP: usize = 4096;
 
 /// Client endpoint bound to one server's [`Service`].
 pub struct ChanTransport {
@@ -30,7 +37,10 @@ pub struct ChanTransport {
     /// tens of µs on the *sender*, which `close()` must never pay
     /// (§3.3: close returns immediately). See EXPERIMENTS.md §Perf.
     async_q: Arc<Mutex<VecDeque<Request>>>,
-    drainer_started: Mutex<bool>,
+    /// Set on drop: the drainer finishes the queue, then exits instead of
+    /// spinning for the life of the process.
+    shutdown: Arc<AtomicBool>,
+    drainer: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl ChanTransport {
@@ -40,7 +50,8 @@ impl ChanTransport {
             net,
             metrics,
             async_q: Arc::new(Mutex::new(VecDeque::new())),
-            drainer_started: Mutex::new(false),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            drainer: Mutex::new(None),
         })
     }
 
@@ -56,21 +67,28 @@ impl ChanTransport {
     }
 
     fn ensure_drainer(&self) {
-        let mut started = self.drainer_started.lock().unwrap();
-        if *started {
+        let mut drainer = self.drainer.lock().unwrap();
+        if drainer.is_some() {
             return;
         }
-        *started = true;
         let q = Arc::clone(&self.async_q);
+        let shutdown = Arc::clone(&self.shutdown);
         let service = Arc::clone(&self.service);
         let net = Arc::clone(&self.net);
         let metrics = Arc::clone(&self.metrics);
-        std::thread::Builder::new()
+        let handle = std::thread::Builder::new()
             .name("chan-async-drain".into())
             .spawn(move || loop {
                 let req = q.lock().unwrap().pop_front();
                 match req {
-                    None => std::thread::sleep(std::time::Duration::from_micros(200)),
+                    None => {
+                        // drain-then-exit: the queue is empty, so a set
+                        // shutdown flag cannot strand any request
+                        if shutdown.load(Ordering::Acquire) {
+                            return;
+                        }
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
                     Some(req) => {
                         let op = req.op();
                         let t0 = Instant::now();
@@ -84,6 +102,19 @@ impl ChanTransport {
                 }
             })
             .expect("spawn async drainer");
+        *drainer = Some(handle);
+    }
+}
+
+impl Drop for ChanTransport {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        // join so tests/benches tearing down a cluster don't leak a
+        // polling thread per transport; the drainer finishes the queue
+        // first, so queued closes still reach the server
+        if let Some(h) = self.drainer.lock().unwrap().take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -99,7 +130,19 @@ impl Transport for ChanTransport {
 
     fn call_async(&self, req: Request) -> FsResult<()> {
         self.ensure_drainer();
-        self.async_q.lock().unwrap().push_back(req);
+        {
+            let mut q = self.async_q.lock().unwrap();
+            if q.len() < ASYNC_Q_CAP {
+                q.push_back(req);
+                return Ok(());
+            }
+        }
+        // queue full: backpressure — the caller pays the round trip
+        let op = req.op();
+        let t0 = Instant::now();
+        let sent = req.wire_size();
+        let resp = self.round_trip(&req)?;
+        self.metrics.record(op, sent, resp.wire_size(), t0.elapsed());
         Ok(())
     }
 }
@@ -202,6 +245,30 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         panic!("async close never drained");
+    }
+
+    #[test]
+    fn drop_drains_queue_then_stops_drainer() {
+        let metrics = Arc::new(RpcMetrics::new());
+        let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+        let t = ChanTransport::new(echo_service(), net, metrics.clone());
+        for _ in 0..3 {
+            t.call_async(Request::Close { ino: Ino::new(0, 0, 1), client: 1, handle: 1 }).unwrap();
+        }
+        // dropping the last handle joins the drainer, which must first
+        // finish everything that was queued
+        drop(t);
+        assert_eq!(metrics.count("close"), 3, "queued closes must not be stranded on shutdown");
+    }
+
+    #[test]
+    fn drop_without_async_traffic_is_instant() {
+        let metrics = Arc::new(RpcMetrics::new());
+        let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+        let t = ChanTransport::new(echo_service(), net, metrics);
+        let t0 = Instant::now();
+        drop(t); // no drainer was ever started — nothing to join
+        assert!(t0.elapsed() < Duration::from_millis(50));
     }
 
     #[test]

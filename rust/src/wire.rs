@@ -74,6 +74,23 @@ pub enum Request {
     /// MDS round trip (how real Lustre opens a path whose dentry is not
     /// cached). The reply's `attr.ino` doubles as the dentry.
     OpenByName { dir: Ino, name: String, flags: OpenFlags, cred: Credentials, client: ClientId, handle: u64, want_inline: bool },
+    /// Batched cold-path walk: starting at `base` (a directory this
+    /// server owns), walk as many of `components` as this server can in
+    /// ONE round trip, returning every traversed directory's full listing
+    /// (entries **with** their 10-byte perm blobs) so the client installs
+    /// the whole prefix at once. The walk stops at a server boundary
+    /// (continuation in [`Response::Walked::next`]), at a missing name
+    /// (the returned listing is the client's authoritative local ENOENT),
+    /// at a non-directory, or at a directory the cred cannot read.
+    ResolvePath { base: Ino, components: Vec<String>, client: ClientId, register: bool, cred: Credentials },
+}
+
+/// One directory listing returned by a [`Request::ResolvePath`] walk:
+/// the directory's own attr (its perm blob) plus all entries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WalkedDir {
+    pub attr: Attr,
+    pub entries: Vec<DirEntry>,
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -90,6 +107,12 @@ pub enum Response {
     Statfs { files: u64, bytes: u64 },
     Unit,
     Err(FsError),
+    /// Reply to [`Request::ResolvePath`]: listings of every directory the
+    /// walk traversed (in walk order, starting with `base` itself),
+    /// `walked` = how many of the requested components were consumed, and
+    /// `next` = the directory to continue from when the walk crossed a
+    /// server boundary in the decentralized namespace.
+    Walked { dirs: Vec<WalkedDir>, walked: u32, next: Option<Ino> },
 }
 
 /// Server→client push messages (the §3.4 consistency protocol).
@@ -134,6 +157,7 @@ impl Request {
             Request::CreateOrphan { .. } => "create",
             Request::DropObject { .. } => "unlink",
             Request::OpenByName { .. } => "open",
+            Request::ResolvePath { .. } => "resolve",
         }
     }
 
@@ -146,6 +170,9 @@ impl Request {
     pub fn wire_size(&self) -> usize {
         match self {
             Request::Write { data, .. } => 64 + data.len(),
+            Request::ResolvePath { components, .. } => {
+                64 + components.iter().map(|c| 4 + c.len()).sum::<usize>()
+            }
             _ => 64,
         }
     }
@@ -157,6 +184,9 @@ impl Response {
             Response::Data { data, .. } => 32 + data.len(),
             Response::Entries { entries, .. } => 64 + entries.len() * 48,
             Response::Opened { inline, .. } => 64 + inline.as_ref().map_or(0, |d| d.len()),
+            Response::Walked { dirs, .. } => {
+                32 + dirs.iter().map(|d| 64 + d.entries.len() * 48).sum::<usize>()
+            }
             _ => 32,
         }
     }
@@ -366,6 +396,14 @@ impl Wire for Request {
                 e.u64(*handle);
                 e.bool(*want_inline);
             }
+            Request::ResolvePath { base, components, client, register, cred } => {
+                tagged!(e, 22);
+                base.enc(e);
+                components.enc(e);
+                e.u32(*client);
+                e.bool(*register);
+                cred.enc(e);
+            }
         }
     }
 
@@ -447,6 +485,13 @@ impl Wire for Request {
                 handle: d.u64()?,
                 want_inline: d.bool()?,
             },
+            22 => Request::ResolvePath {
+                base: Ino::dec(d)?,
+                components: Vec::<String>::dec(d)?,
+                client: d.u32()?,
+                register: d.bool()?,
+                cred: Credentials::dec(d)?,
+            },
             t => return Err(FsError::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -506,6 +551,12 @@ impl Wire for Response {
                 e.str(msg);
                 e.u16(err.wire_aux());
             }
+            Response::Walked { dirs, walked, next } => {
+                tagged!(e, 10);
+                dirs.enc(e);
+                e.u32(*walked);
+                next.enc(e);
+            }
         }
     }
 
@@ -534,8 +585,23 @@ impl Wire for Response {
                 let aux = d.u16()?;
                 Response::Err(FsError::from_wire(code, msg, aux))
             }
+            10 => Response::Walked {
+                dirs: Vec::<WalkedDir>::dec(d)?,
+                walked: d.u32()?,
+                next: Option::<Ino>::dec(d)?,
+            },
             t => return Err(FsError::Protocol(format!("bad response tag {t}"))),
         })
+    }
+}
+
+impl Wire for WalkedDir {
+    fn enc(&self, e: &mut Enc) {
+        self.attr.enc(e);
+        self.entries.enc(e);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(WalkedDir { attr: Attr::dec(d)?, entries: Vec::<DirEntry>::dec(d)? })
     }
 }
 
@@ -603,6 +669,14 @@ mod tests {
             Request::CreateOrphan { parent: ino, name: "o".into(), mode: 0o644, kind: FileKind::Regular, uid: 1, gid: 2 },
             Request::DropObject { ino },
             Request::OpenByName { dir: ino, name: "f".into(), flags: OpenFlags::RDONLY, cred: cred(), client: 1, handle: 2, want_inline: true },
+            Request::ResolvePath {
+                base: ino,
+                components: vec!["a".into(), "b".into(), "f.dat".into()],
+                client: 3,
+                register: true,
+                cred: cred(),
+            },
+            Request::ResolvePath { base: ino, components: vec![], client: 3, register: false, cred: cred() },
         ]
     }
 
@@ -631,11 +705,20 @@ mod tests {
             Response::Opened { attr: attr.clone(), inline: None },
             Response::Data { data: vec![0; 4096], size: 4096 },
             Response::Written { written: 100, new_size: 100 },
-            Response::Created(de),
+            Response::Created(de.clone()),
             Response::Statfs { files: 10, bytes: 40960 },
             Response::Unit,
             Response::Err(FsError::PermissionDenied),
             Response::Err(FsError::NoSuchServer(3)),
+            Response::Walked {
+                dirs: vec![
+                    WalkedDir { attr: attr.clone(), entries: vec![de.clone(), de.clone()] },
+                    WalkedDir { attr: attr.clone(), entries: vec![] },
+                ],
+                walked: 2,
+                next: Some(Ino::new(2, 0, 9)),
+            },
+            Response::Walked { dirs: vec![], walked: 0, next: None },
         ]
     }
 

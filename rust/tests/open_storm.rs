@@ -1,0 +1,170 @@
+//! Sharded-cache concurrency: many reader threads hammering `open()` on a
+//! shared BAgent — warm (must stay RPC-free and lock-free) and under a
+//! concurrent §3.4 invalidation storm (must stay correct).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::error::FsError;
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::{Credentials, OpenFlags};
+
+const N_FILES: usize = 32;
+const N_THREADS: usize = 8;
+const OPENS_PER_THREAD: usize = 200;
+
+fn fast_cluster() -> BuffetCluster {
+    BuffetCluster::spawn_with(
+        1,
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 3 },
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    )
+}
+
+fn quiesce(metrics: &buffetfs::metrics::RpcMetrics) {
+    let mut last = metrics.total_rpcs();
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(5));
+        let now = metrics.total_rpcs();
+        if now == last {
+            return;
+        }
+        last = now;
+    }
+}
+
+#[test]
+fn warm_open_storm_is_rpc_free_across_threads() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/s", 0o755).unwrap();
+    for i in 0..N_FILES {
+        admin.put(&format!("/s/f{i}"), b"data").unwrap();
+    }
+    admin.readdir("/s").unwrap(); // warm the whole listing
+    quiesce(&metrics);
+
+    let before = metrics.total_rpcs();
+    let ok = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..N_THREADS {
+            let agent = agent.clone();
+            let ok = &ok;
+            scope.spawn(move || {
+                let pid = 9000 + t as u32;
+                let cred = Credentials::root();
+                for i in 0..OPENS_PER_THREAD {
+                    let path = format!("/s/f{}", (i * 7 + t) % N_FILES);
+                    let fd = agent.open(pid, &path, OpenFlags::RDONLY, &cred).unwrap();
+                    agent.close(pid, fd).unwrap();
+                    ok.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    assert_eq!(ok.load(Ordering::Relaxed), (N_THREADS * OPENS_PER_THREAD) as u64);
+    assert_eq!(
+        metrics.total_rpcs(),
+        before,
+        "8 warm reader threads must complete the storm without a single RPC"
+    );
+    assert!(
+        agent.stats.rpc_free_opens.load(Ordering::Relaxed)
+            >= (N_THREADS * OPENS_PER_THREAD) as u64
+    );
+}
+
+#[test]
+fn open_storm_survives_concurrent_invalidation_pushes() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/v", 0o755).unwrap();
+    for i in 0..N_FILES {
+        admin.put(&format!("/v/f{i}"), b"data").unwrap();
+    }
+    admin.readdir("/v").unwrap();
+    quiesce(&metrics);
+
+    let ok = AtomicU64::new(0);
+    let busy = AtomicU64::new(0);
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        // the chmod storm: every flip runs the §3.4 invalidate-then-apply
+        // barrier against this very agent's cache
+        {
+            let admin = Buffet::process(agent.clone(), Credentials::root());
+            let stop = &stop;
+            scope.spawn(move || {
+                let mut mode = 0o640;
+                while !stop.load(Ordering::Relaxed) {
+                    match admin.chmod("/v/f0", mode) {
+                        // its own resolve can lose the refetch race too
+                        Ok(()) | Err(FsError::Busy) => {}
+                        Err(e) => panic!("chmod storm failed: {e}"),
+                    }
+                    mode = if mode == 0o640 { 0o644 } else { 0o640 };
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            });
+        }
+        for t in 0..N_THREADS {
+            let agent = agent.clone();
+            let (ok, busy) = (&ok, &busy);
+            scope.spawn(move || {
+                let pid = 9100 + t as u32;
+                let cred = Credentials::root();
+                for i in 0..OPENS_PER_THREAD {
+                    let path = format!("/v/f{}", (i * 5 + t) % N_FILES);
+                    match agent.open(pid, &path, OpenFlags::RDONLY, &cred) {
+                        Ok(fd) => {
+                            agent.close(pid, fd).unwrap();
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // a sustained invalidation race may exhaust the
+                        // bounded refetch retries — acceptable, never wrong
+                        Err(FsError::Busy) => {
+                            busy.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("open under invalidation storm failed: {e}"),
+                    }
+                }
+            });
+        }
+        // readers finish first (scope joins all spawned threads in drop
+        // order is unspecified, so stop the chmod loop explicitly once
+        // every reader thread has pushed its quota)
+        while ok.load(Ordering::Relaxed) + busy.load(Ordering::Relaxed)
+            < (N_THREADS * OPENS_PER_THREAD) as u64
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    let done = ok.load(Ordering::Relaxed);
+    assert!(
+        done >= (N_THREADS * OPENS_PER_THREAD) as u64 * 9 / 10,
+        "at least 90% of opens must succeed under the storm (ok={done}, busy={})",
+        busy.load(Ordering::Relaxed)
+    );
+    assert!(
+        agent.stats.invalidations_rx.load(Ordering::Relaxed) > 0,
+        "the storm must actually have pushed invalidations at this agent"
+    );
+    // after the dust settles the cache must converge back to RPC-free
+    quiesce(&metrics);
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    let fd = p.open("/v/f1", OpenFlags::RDONLY).unwrap();
+    p.close(fd).unwrap();
+    let before = metrics.total_rpcs();
+    let fd = p.open("/v/f1", OpenFlags::RDONLY).unwrap();
+    p.close(fd).unwrap();
+    assert_eq!(metrics.total_rpcs(), before, "cache converges to warm after the storm");
+}

@@ -1,0 +1,273 @@
+//! Tentpole integration: the batched `ResolvePath` cold walk.
+//!
+//! Acceptance: a cold open of a depth-D path on a single-server namespace
+//! issues exactly ONE RPC; crossing a server boundary costs one RPC per
+//! server; the per-level fallback still works when batching is disabled.
+
+use std::sync::atomic::Ordering;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::error::FsError;
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::transport::Service;
+use buffetfs::types::{Credentials, DirEntry, FileKind, Ino, OpenFlags, PermBlob};
+use buffetfs::wire::{Request, Response};
+
+fn fast_cluster(n: u16) -> BuffetCluster {
+    BuffetCluster::spawn_with(
+        n,
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 1 },
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    )
+}
+
+/// Build /a/b/c/d/f.dat through an admin agent, then cold-open it through
+/// a FRESH agent and count RPCs.
+#[test]
+fn cold_open_of_depth_d_path_is_one_rpc() {
+    let cluster = fast_cluster(1);
+    let admin = {
+        let (agent, _) = cluster.make_agent();
+        Buffet::process(agent, Credentials::root())
+    };
+    admin.mkdir("/a", 0o755).unwrap();
+    admin.mkdir("/a/b", 0o755).unwrap();
+    admin.mkdir("/a/b/c", 0o755).unwrap();
+    admin.mkdir("/a/b/c/d", 0o755).unwrap();
+    admin.put("/a/b/c/d/f.dat", b"payload").unwrap();
+
+    let (agent, metrics) = cluster.make_agent();
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    let before = metrics.total_rpcs();
+    let fd = p.open("/a/b/c/d/f.dat", OpenFlags::RDONLY).unwrap();
+    assert_eq!(
+        metrics.total_rpcs(),
+        before + 1,
+        "cold open of a depth-5 path must cost exactly ONE RPC"
+    );
+    assert_eq!(metrics.count("resolve"), 1, "and that RPC is the batched walk");
+    assert_eq!(metrics.count("readdir"), 0, "no per-level ReadDir on the batched path");
+    // the walk returned every directory on the way: root, a, b, c, d
+    let wd = metrics.walk_depth_histogram();
+    assert_eq!(wd.count(), 1);
+    assert_eq!(wd.max(), 5, "five listings shipped in the one response");
+    assert_eq!(agent.stats.batch_walks.load(Ordering::Relaxed), 1);
+
+    // the read carries the deferred open (unchanged §3.3 behaviour)
+    assert_eq!(p.read(fd, 7).unwrap(), b"payload");
+    assert_eq!(metrics.total_rpcs(), before + 2);
+    p.close(fd).unwrap();
+
+    // every directory of the walk is now cached: sibling and cousin opens
+    // are RPC-free
+    let before = metrics.total_rpcs();
+    for path in ["/a/b/c/d/f.dat", "/a/b/c/d/f.dat"] {
+        let fd = p.open(path, OpenFlags::RDONLY).unwrap();
+        p.close(fd).unwrap();
+    }
+    assert_eq!(metrics.total_rpcs(), before, "warm opens stay RPC-free");
+}
+
+#[test]
+fn walk_crosses_server_boundary_with_one_rpc_per_server() {
+    let cluster = fast_cluster(2);
+    let s0 = &cluster.servers[0];
+    let s1 = &cluster.servers[1];
+
+    // fabricate a decentralized layout: directory "m" lives on host 1,
+    // its dirent on host 0's root (what CreateOrphan does for files)
+    let m = s1
+        .fs
+        .create_orphan(cluster.root(), "m", 0o755, FileKind::Directory, 0, 0)
+        .unwrap();
+    s0.fs
+        .insert_remote_entry(cluster.root().file, m.clone())
+        .unwrap();
+    match s1.handle(Request::Create {
+        dir: m.ino,
+        name: "x.dat".into(),
+        mode: 0o644,
+        kind: FileKind::Regular,
+        cred: Credentials::root(),
+        client: 0,
+    }) {
+        Response::Created(_) => {}
+        other => panic!("create on host 1: {other:?}"),
+    }
+
+    let (agent, metrics) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    let before = metrics.total_rpcs();
+    let fd = p.open("/m/x.dat", OpenFlags::RDONLY).unwrap();
+    assert_eq!(
+        metrics.total_rpcs(),
+        before + 2,
+        "two servers on the path → exactly two batched-walk RPCs"
+    );
+    assert_eq!(metrics.count("resolve"), 2);
+    p.close(fd).unwrap();
+
+    // warm now on BOTH servers' directories
+    let before = metrics.total_rpcs();
+    let fd = p.open("/m/x.dat", OpenFlags::RDONLY).unwrap();
+    assert_eq!(metrics.total_rpcs(), before);
+    p.close(fd).unwrap();
+}
+
+#[test]
+fn per_level_fallback_still_resolves_when_batching_disabled() {
+    let cluster = fast_cluster(1);
+    let admin = {
+        let (agent, _) = cluster.make_agent();
+        Buffet::process(agent, Credentials::root())
+    };
+    admin.mkdir("/p", 0o755).unwrap();
+    admin.mkdir("/p/q", 0o755).unwrap();
+    admin.put("/p/q/f", b"z").unwrap();
+
+    let (agent, metrics) = cluster.make_agent();
+    agent.set_batched_resolve(false);
+    let p = Buffet::process(agent, Credentials::root());
+    let fd = p.open("/p/q/f", OpenFlags::RDONLY).unwrap();
+    assert_eq!(metrics.count("resolve"), 0, "batching disabled → no ResolvePath");
+    assert_eq!(metrics.count("readdir"), 3, "per-level walk: root, /p, /p/q");
+    assert_eq!(p.read(fd, 1).unwrap(), b"z");
+    p.close(fd).unwrap();
+}
+
+#[test]
+fn negative_entries_are_served_locally_with_stats() {
+    let cluster = fast_cluster(1);
+    let (agent, metrics) = cluster.make_agent();
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.mkdir("/neg", 0o755).unwrap();
+    p.put("/neg/real", b"x").unwrap();
+    p.readdir("/neg").unwrap(); // cache the listing
+
+    let before_rpcs = metrics.total_rpcs();
+    let (_, _, _, _, neg_before) = agent.cache().stats.snapshot();
+    for _ in 0..3 {
+        assert_eq!(p.open("/neg/ghost", OpenFlags::RDONLY).unwrap_err(), FsError::NotFound);
+    }
+    assert_eq!(metrics.total_rpcs(), before_rpcs, "cached ENOENT must cost zero RPCs");
+    let (_, _, _, _, neg_after) = agent.cache().stats.snapshot();
+    assert!(
+        neg_after >= neg_before + 3,
+        "each local ENOENT must be counted as a negative hit ({neg_before} → {neg_after})"
+    );
+}
+
+#[test]
+fn x_only_dirs_still_fall_back_to_lookup_rpcs() {
+    let cluster = fast_cluster(1);
+    let (agent, _) = cluster.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/locked", 0o711).unwrap();
+    admin.put("/locked/known", b"k").unwrap();
+    admin.chmod("/locked/known", 0o644).unwrap();
+
+    let user = Buffet::process(agent.clone(), Credentials::new(77, 77));
+    assert_eq!(user.get("/locked/known", 1).unwrap(), b"k");
+    assert!(agent.stats.fallback_lookups.load(Ordering::Relaxed) >= 1);
+}
+
+/// An old server that rejects ResolvePath downgrades the agent to the
+/// per-level protocol instead of failing the open.
+#[test]
+fn protocol_rejection_downgrades_to_per_level() {
+    use buffetfs::metrics::RpcMetrics;
+    use buffetfs::server::BServer;
+    use buffetfs::store::data::MemData;
+    use buffetfs::store::fs::LocalFs;
+    use buffetfs::transport::chan::{ChanNotify, ChanTransport};
+    use buffetfs::cluster::ClusterView;
+    use buffetfs::simnet::LatencyModel;
+    use std::sync::Arc;
+
+    /// Wraps a real BServer but answers ResolvePath the way a pre-batching
+    /// binary would: protocol error.
+    struct OldServer(Arc<BServer>);
+    impl Service for OldServer {
+        fn handle(&self, req: Request) -> Response {
+            match req {
+                Request::ResolvePath { .. } => {
+                    Response::Err(FsError::Protocol("bad request tag 22".into()))
+                }
+                other => self.0.handle(other),
+            }
+        }
+    }
+
+    let server = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    let root = server.fs.root_ino();
+    server
+        .handle(Request::Mkdir { dir: root, name: "d".into(), mode: 0o755, cred: Credentials::root() });
+    server.handle(Request::Create {
+        dir: root,
+        name: "top".into(),
+        mode: 0o644,
+        kind: FileKind::Regular,
+        cred: Credentials::root(),
+        client: 0,
+    });
+
+    let old = Arc::new(OldServer(server.clone()));
+    let metrics = Arc::new(RpcMetrics::new());
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let mut view = ClusterView::new(root);
+    view.add(0, 0, ChanTransport::new(old, net.clone(), metrics.clone()));
+    let agent = buffetfs::agent::BAgent::new(1, view, metrics.clone());
+    server.register_pusher(1, ChanNotify::new(agent.clone(), net));
+
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    let fd = p.open("/top", OpenFlags::RDONLY).unwrap();
+    p.close(fd).unwrap();
+    assert!(
+        agent.stats.resolve_downgrades.load(Ordering::Relaxed) >= 1,
+        "the protocol rejection must be recorded as a downgrade"
+    );
+    assert!(metrics.count("readdir") >= 1, "resolution completed over per-level ReadDir");
+
+    // the downgrade is sticky: no further ResolvePath attempts
+    let resolves_after_downgrade = metrics.count("resolve");
+    let fd = p.open("/top", OpenFlags::RDONLY).unwrap();
+    p.close(fd).unwrap();
+    assert_eq!(metrics.count("resolve"), resolves_after_downgrade);
+}
+
+/// The continuation token path, unit-style: exercised against the wire
+/// messages to pin the response shape other implementations must honour.
+#[test]
+fn walked_response_roundtrips_on_the_wire() {
+    use buffetfs::codec::Wire;
+    use buffetfs::wire::WalkedDir;
+    let attr = buffetfs::types::Attr {
+        ino: Ino::new(0, 0, 1),
+        kind: FileKind::Directory,
+        perm: PermBlob::new(0o755, 0, 0),
+        size: 0,
+        nlink: 2,
+        atime: 1,
+        mtime: 2,
+        ctime: 3,
+    };
+    let resp = Response::Walked {
+        dirs: vec![WalkedDir {
+            attr,
+            entries: vec![DirEntry {
+                name: "child".into(),
+                ino: Ino::new(1, 0, 9),
+                kind: FileKind::Directory,
+                perm: PermBlob::new(0o700, 5, 5),
+            }],
+        }],
+        walked: 1,
+        next: Some(Ino::new(1, 0, 9)),
+    };
+    let back = Response::from_bytes(&resp.to_bytes()).unwrap();
+    assert_eq!(back, resp);
+}

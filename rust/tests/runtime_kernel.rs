@@ -2,6 +2,10 @@
 //! via PJRT) must agree bit-for-bit with the native Rust oracle on
 //! randomized inputs — the rust-side half of the L1 correctness story
 //! (the python side is pytest vs ref.py).
+//!
+//! Gated on the `pjrt` feature: without the vendored `xla` crate there
+//! is no backend to load, and tier-1 must stay green.
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 
