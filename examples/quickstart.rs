@@ -1,12 +1,15 @@
-//! Quickstart: bring up an in-process BuffetFS cluster, do ordinary file
-//! I/O through the POSIX-style `Buffet` API, and watch the paper's
-//! mechanism in the RPC counters: a warm `open()` costs **zero** RPCs,
-//! the deferred open record rides the first `read()`, a denied open
-//! never touches the network.
+//! Quickstart: bring up an in-process BuffetFS cluster and use the
+//! handle-first client API — `Client` → `Dir`/`File` capability handles
+//! with openat-style relative operations and permission leases — while
+//! watching the paper's mechanism in the RPC counters: a warm relative
+//! `open_file()` costs **zero** RPCs (no root walk either), the deferred
+//! open record rides the first `read`, a denied open never touches the
+//! network, and a `chmod` revokes outstanding leases with exactly one
+//! re-resolve on the next use.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use buffetfs::blib::Buffet;
+use buffetfs::api::Client;
 use buffetfs::cluster::{Backing, BuffetCluster};
 use buffetfs::simnet::NetConfig;
 use buffetfs::types::{Credentials, OpenFlags};
@@ -17,57 +20,78 @@ fn main() {
     let (agent, metrics) = cluster.make_agent();
 
     // a root "process" prepares a tree; a user process does the I/O
-    let admin = Buffet::process(agent.clone(), Credentials::root());
-    admin.mkdir("/data", 0o755).unwrap();
-    admin.chown("/data", 1000, 1000).unwrap();
+    let admin = Client::new(agent.clone(), Credentials::root());
+    let root = admin.root().unwrap();
+    let data = root.mkdir("data", 0o755).unwrap();
 
-    let user = Buffet::process(agent.clone(), Credentials::new(1000, 1000));
-    user.put("/data/hello.txt", b"hello, buffet!").unwrap();
+    let user = Client::new(agent.clone(), Credentials::new(1000, 1000));
+    // the user's handles: one resolve of the prefix, durable from then on
+    let udata = user.root().unwrap().open_dir("data").unwrap();
+    println!("opened Dir handle {} ({} RPCs so far)", udata.opened_path(), metrics.total_rpcs());
+
+    // admin hands the directory to the user (legacy path API — the
+    // path-string surface is a thin shim over the same relative ops)
+    buffetfs::blib::Buffet::process(agent.clone(), Credentials::root())
+        .chown("/data", 1000, 1000)
+        .unwrap();
+
+    let f = udata.create("hello.txt", 0o644).unwrap();
+    f.write_at(0, b"hello, buffet!").unwrap();
+    f.close().unwrap();
+    let _ = udata.readdir().unwrap(); // warm the listing once
     println!("created /data/hello.txt ({} RPCs so far)", metrics.total_rpcs());
 
-    // warm the directory tree once ("requests the directory data once…")
-    user.get("/data/hello.txt", 64).unwrap();
-
-    // ---- the measured unit: open / read / close --------------------------
+    // ---- the measured unit: relative open / read / close -----------------
     let before = metrics.sync_rpcs();
-    let fd = user.open("/data/hello.txt", OpenFlags::RDONLY).unwrap();
+    let f = udata.open_file("hello.txt", OpenFlags::RDONLY).unwrap();
     println!(
-        "open()  -> fd {fd}   [{} sync RPCs — Step 1 ran locally on the cached tree]",
+        "open_file() -> fd {}   [{} sync RPCs — Step 1 ran locally under the lease]",
+        f.fd(),
         metrics.sync_rpcs() - before
     );
-    let data = user.read(fd, 64).unwrap();
+    let text = f.read_at(0, 64).unwrap();
     println!(
-        "read()  -> {:?}   [{} sync RPC — carried the deferred open record]",
-        String::from_utf8_lossy(&data),
+        "read_at()   -> {:?}   [{} sync RPC — carried the deferred open record]",
+        String::from_utf8_lossy(&text),
         metrics.sync_rpcs() - before
     );
-    // the server now has the open on its opened-file list
-    println!(
-        "server opened-file list: {} entr{}",
-        cluster.servers[0].open_files(),
-        if cluster.servers[0].open_files() == 1 { "y" } else { "ies" }
-    );
-    user.close(fd).unwrap(); // returns instantly; wrap-up RPC is async
-    println!("close() -> returned immediately (async wrap-up)");
+    let opens: usize = cluster.servers.iter().map(|s| s.open_files()).sum();
+    println!("server opened-file list: {opens} entr{}", if opens == 1 { "y" } else { "ies" });
+    f.close().unwrap(); // wrap-up RPC is asynchronous
+    println!("close()     -> returned immediately (async wrap-up)");
 
     // ---- a denied open costs nothing --------------------------------------
+    let stranger = Client::new(agent.clone(), Credentials::new(7, 7));
+    let sdata = stranger.root().unwrap().open_dir("data").unwrap();
+    let _ = sdata.readdir(); // warm the stranger's view
     let rpcs = metrics.total_rpcs();
-    let stranger = Buffet::process(agent.clone(), Credentials::new(7, 7));
-    admin.chmod("/data/hello.txt", 0o600).unwrap();
-    let err = stranger.open("/data/hello.txt", OpenFlags::RDONLY).unwrap_err();
+    let err = sdata.open_file("hello.txt", OpenFlags::WRONLY).unwrap_err();
     println!(
-        "stranger open() -> {err}  [cost {} RPCs — the check was served locally]",
-        metrics.total_rpcs() - rpcs - 2 /* the chmod + refetch */
+        "stranger open_file(WRONLY) -> {err}  [cost {} RPCs — denied locally]",
+        metrics.total_rpcs() - rpcs
+    );
+
+    // ---- revocation: chmod bumps the lease epoch --------------------------
+    let user_legacy = buffetfs::blib::Buffet::process(agent.clone(), Credentials::new(1000, 1000));
+    user_legacy.chmod("/data/hello.txt", 0o600).unwrap();
+    // one stale retry on the revoked lease, then local again
+    let f = udata.open_file("hello.txt", OpenFlags::RDONLY).unwrap();
+    f.close().unwrap();
+    println!(
+        "post-chmod open_file(): {} lease hits / {} stale retries across ops",
+        metrics.total_lease_hits(),
+        metrics.total_stale_retries()
     );
 
     // ---- stats -------------------------------------------------------------
     let (hits, misses, fetches) = agent.cache_stats();
     println!("\nagent cache: {hits} hits / {misses} misses / {fetches} dir fetches");
     println!(
-        "agent: {} local checks, {} local denies, {} RPC-free opens",
+        "agent: {} local checks, {} local denies, {} RPC-free opens, {} lease grants",
         agent.stats.local_checks.load(std::sync::atomic::Ordering::Relaxed),
         agent.stats.local_denies.load(std::sync::atomic::Ordering::Relaxed),
         agent.stats.rpc_free_opens.load(std::sync::atomic::Ordering::Relaxed),
+        agent.stats.lease_grants.load(std::sync::atomic::Ordering::Relaxed),
     );
     println!("\nRPCs by op:\n{}", metrics.report());
 }

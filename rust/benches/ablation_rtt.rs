@@ -11,7 +11,10 @@
 //!
 //! `cargo bench --bench ablation_rtt`.
 
-use buffetfs::harness::{ablation_cold_walk, ablation_rtt, print_cold_walk, BenchCfg, ColdWalkRow};
+use buffetfs::harness::{
+    ablation_cold_walk, ablation_handle_reopen, ablation_rtt, print_cold_walk,
+    print_handle_reopen, BenchCfg, ColdWalkRow, HandleReopenRow,
+};
 use buffetfs::simnet::NetConfig;
 use buffetfs::workload::FileSetSpec;
 
@@ -31,6 +34,31 @@ fn cold_walk_json(one_way_us: u64, iters: usize, rows: &[ColdWalkRow]) -> String
             r.per_level_us,
             r.per_level_rpcs,
             if r.batched_us > 0.0 { r.per_level_us / r.batched_us } else { 0.0 },
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn handle_api_json(iters: usize, rows: &[HandleReopenRow]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"handle_relative_reopen\",\n");
+    out.push_str(&format!("  \"iters_per_point\": {iters},\n"));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"siblings\": {}, \"handle_us_per_open\": {:.2}, \"handle_resolve_rpcs\": {:.2}, \
+             \"legacy_us_per_open\": {:.2}, \"legacy_resolve_rpcs\": {:.2}, \"lease_hits\": {}, \
+             \"stale_retries\": {}, \"speedup\": {:.2}}}{}\n",
+            r.siblings,
+            r.handle_us_per_open,
+            r.handle_resolve_rpcs,
+            r.legacy_us_per_open,
+            r.legacy_resolve_rpcs,
+            r.lease_hits,
+            r.stale_retries,
+            if r.handle_us_per_open > 0.0 { r.legacy_us_per_open / r.handle_us_per_open } else { 0.0 },
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -77,5 +105,24 @@ fn main() {
     match std::fs::write("BENCH_resolvepath.json", &json) {
         Ok(()) => println!("\nwrote BENCH_resolvepath.json"),
         Err(e) => eprintln!("\ncould not write BENCH_resolvepath.json: {e}"),
+    }
+
+    // ---- Part 3: handle-relative reopen sweep -------------------------
+    // Warm same-directory sibling opens: `Dir::open_file` (one capability
+    // handle, zero resolves) vs legacy full-path `open` (cached root walk
+    // per call). Zero network latency isolates the client-side CPU cost.
+    let reopen_iters = 50;
+    let siblings = [1usize, 4, 16, 64, 256];
+    println!();
+    let rows = ablation_handle_reopen(
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 9 },
+        &siblings,
+        reopen_iters,
+    );
+    print_handle_reopen(&rows);
+    let json = handle_api_json(reopen_iters, &rows);
+    match std::fs::write("BENCH_handle_api.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_handle_api.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_handle_api.json: {e}"),
     }
 }

@@ -2,7 +2,7 @@
 //! context to a user process including the PID, file descriptors, and
 //! file objects."
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::error::{FsError, FsResult};
 use crate::types::{Credentials, Fd, Ino, OpenFlags, Pid};
@@ -23,31 +23,67 @@ pub struct FileHandle {
     pub size_hint: u64,
 }
 
-#[derive(Default)]
 struct ProcCtx {
     fds: HashMap<Fd, FileHandle>,
+    /// Closed fds below `next_fd`, reused lowest-first (POSIX: `open`
+    /// returns the lowest-numbered descriptor not currently open).
+    free: BTreeSet<Fd>,
     next_fd: Fd,
 }
 
+impl ProcCtx {
+    fn new() -> ProcCtx {
+        ProcCtx { fds: HashMap::new(), free: BTreeSet::new(), next_fd: FIRST_FD }
+    }
+}
+
 /// All process contexts of one BAgent.
-#[derive(Default)]
 pub struct FdTable {
     procs: HashMap<Pid, ProcCtx>,
+    /// Per-process cap on simultaneously open fds (EMFILE beyond it).
+    cap: usize,
 }
 
 pub const FIRST_FD: Fd = 3; // 0/1/2 belong to stdio, as ever
 
+/// Default per-process open-fd cap — mirrors the usual RLIMIT_NOFILE
+/// soft limit.
+pub const DEFAULT_FD_CAP: usize = 1024;
+
+impl Default for FdTable {
+    fn default() -> FdTable {
+        FdTable::new()
+    }
+}
+
 impl FdTable {
     pub fn new() -> FdTable {
-        FdTable::default()
+        FdTable::with_cap(DEFAULT_FD_CAP)
     }
 
-    pub fn open(&mut self, pid: Pid, fh: FileHandle) -> Fd {
-        let ctx = self.procs.entry(pid).or_insert_with(|| ProcCtx { fds: HashMap::new(), next_fd: FIRST_FD });
-        let fd = ctx.next_fd;
-        ctx.next_fd += 1;
+    pub fn with_cap(cap: usize) -> FdTable {
+        FdTable { procs: HashMap::new(), cap: cap.max(1) }
+    }
+
+    pub fn open(&mut self, pid: Pid, fh: FileHandle) -> FsResult<Fd> {
+        let cap = self.cap;
+        let ctx = self.procs.entry(pid).or_insert_with(ProcCtx::new);
+        if ctx.fds.len() >= cap {
+            return Err(FsError::TooManyOpenFiles);
+        }
+        let fd = match ctx.free.iter().next().copied() {
+            Some(f) => {
+                ctx.free.remove(&f);
+                f
+            }
+            None => {
+                let f = ctx.next_fd;
+                ctx.next_fd += 1;
+                f
+            }
+        };
         ctx.fds.insert(fd, fh);
-        fd
+        Ok(fd)
     }
 
     pub fn get(&self, pid: Pid, fd: Fd) -> FsResult<&FileHandle> {
@@ -59,7 +95,10 @@ impl FdTable {
     }
 
     pub fn close(&mut self, pid: Pid, fd: Fd) -> FsResult<FileHandle> {
-        self.procs.get_mut(&pid).and_then(|c| c.fds.remove(&fd)).ok_or(FsError::BadFd)
+        let ctx = self.procs.get_mut(&pid).ok_or(FsError::BadFd)?;
+        let fh = ctx.fds.remove(&fd).ok_or(FsError::BadFd)?;
+        ctx.free.insert(fd);
+        Ok(fh)
     }
 
     /// Drop a whole process (exit): returns its open handles for wrap-up.
@@ -95,16 +134,16 @@ mod tests {
     #[test]
     fn fds_start_at_three_and_are_per_process() {
         let mut t = FdTable::new();
-        assert_eq!(t.open(1, fh(10)), 3);
-        assert_eq!(t.open(1, fh(11)), 4);
-        assert_eq!(t.open(2, fh(12)), 3, "each process gets its own fd space");
+        assert_eq!(t.open(1, fh(10)).unwrap(), 3);
+        assert_eq!(t.open(1, fh(11)).unwrap(), 4);
+        assert_eq!(t.open(2, fh(12)).unwrap(), 3, "each process gets its own fd space");
         assert_eq!(t.processes(), 2);
     }
 
     #[test]
     fn get_close_badfd() {
         let mut t = FdTable::new();
-        let fd = t.open(1, fh(10));
+        let fd = t.open(1, fh(10)).unwrap();
         assert_eq!(t.get(1, fd).unwrap().ino.file, 10);
         assert!(matches!(t.get(2, fd), Err(FsError::BadFd)));
         t.close(1, fd).unwrap();
@@ -115,7 +154,7 @@ mod tests {
     #[test]
     fn offset_advances_via_get_mut() {
         let mut t = FdTable::new();
-        let fd = t.open(1, fh(10));
+        let fd = t.open(1, fh(10)).unwrap();
         t.get_mut(1, fd).unwrap().offset += 4096;
         assert_eq!(t.get(1, fd).unwrap().offset, 4096);
     }
@@ -123,11 +162,41 @@ mod tests {
     #[test]
     fn drop_process_returns_open_handles() {
         let mut t = FdTable::new();
-        t.open(1, fh(10));
-        t.open(1, fh(11));
+        t.open(1, fh(10)).unwrap();
+        t.open(1, fh(11)).unwrap();
         let left = t.drop_process(1);
         assert_eq!(left.len(), 2);
         assert_eq!(t.processes(), 0);
         assert!(t.drop_process(1).is_empty());
+    }
+
+    #[test]
+    fn closed_fds_are_reused_lowest_first() {
+        let mut t = FdTable::new();
+        let a = t.open(1, fh(10)).unwrap(); // 3
+        let b = t.open(1, fh(11)).unwrap(); // 4
+        let c = t.open(1, fh(12)).unwrap(); // 5
+        assert_eq!((a, b, c), (3, 4, 5));
+        t.close(1, b).unwrap();
+        t.close(1, a).unwrap();
+        // POSIX: the LOWEST free slot comes back first, not the latest
+        assert_eq!(t.open(1, fh(13)).unwrap(), 3);
+        assert_eq!(t.open(1, fh(14)).unwrap(), 4);
+        // free list exhausted → the high-water mark grows again
+        assert_eq!(t.open(1, fh(15)).unwrap(), 6);
+        assert_eq!(t.open_count(1), 4);
+    }
+
+    #[test]
+    fn per_process_cap_returns_emfile() {
+        let mut t = FdTable::with_cap(2);
+        let a = t.open(1, fh(1)).unwrap();
+        t.open(1, fh(2)).unwrap();
+        assert!(matches!(t.open(1, fh(3)), Err(FsError::TooManyOpenFiles)));
+        // another process has its own budget
+        assert_eq!(t.open(2, fh(4)).unwrap(), 3);
+        // closing frees a slot (and the lowest fd is recycled)
+        t.close(1, a).unwrap();
+        assert_eq!(t.open(1, fh(5)).unwrap(), a);
     }
 }

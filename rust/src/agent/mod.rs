@@ -32,6 +32,7 @@
 pub mod cache;
 pub mod fdtable;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -44,7 +45,7 @@ use crate::types::{
     AccessMask, ClientId, Credentials, DirEntry, Fd, FileKind, Ino, OpenFlags, PermBlob, Pid,
     W_OK, X_OK,
 };
-use crate::wire::{Notify, NotifyAck, OpenCtx, Request, Response};
+use crate::wire::{LeaseStamp, Notify, NotifyAck, OpenCtx, Request, Response};
 
 use self::cache::{CacheTree, ChildLookup};
 use self::fdtable::{FdTable, FileHandle};
@@ -57,6 +58,11 @@ const MAX_WALK_HOPS: usize = 8;
 /// concurrent §3.4 invalidation raced the fetch, so hitting the bound
 /// means the directory is being modified faster than we can read it.
 const MAX_FETCH_RETRIES: usize = 32;
+
+/// Bound on stale-lease refresh+retry rounds per dirfd-relative request:
+/// one round covers the common single-revocation case; more only happen
+/// under a sustained revocation storm, which surfaces as `Busy`.
+const MAX_LEASE_RETRIES: usize = 4;
 
 #[derive(Default)]
 pub struct AgentStats {
@@ -79,6 +85,10 @@ pub struct AgentStats {
     pub batch_walks: AtomicU64,
     /// Permanent downgrades to per-level ReadDir (old-server fallback).
     pub resolve_downgrades: AtomicU64,
+    /// Directory permission leases granted/refreshed (handle API).
+    pub lease_grants: AtomicU64,
+    /// Dirfd-relative requests that hit `StaleLease` and re-resolved.
+    pub stale_lease_retries: AtomicU64,
 }
 
 /// Result of a path resolution: the leaf entry plus the perm-blob chain
@@ -104,6 +114,11 @@ pub struct BAgent {
     /// rejects [`Request::ResolvePath`] (protocol downgrade), or by
     /// [`BAgent::set_batched_resolve`] for ablation runs.
     batched: AtomicBool,
+    /// Last server lease epoch observed per directory node (handle API).
+    /// Absent = assume 0, which matches a server that never revoked; a
+    /// wrong assumption costs one `StaleLease` round trip, never
+    /// correctness.
+    leases: Mutex<HashMap<Ino, u64>>,
     pub stats: AgentStats,
 }
 
@@ -119,6 +134,7 @@ impl BAgent {
             metrics,
             checker: RwLock::new(None),
             batched: AtomicBool::new(true),
+            leases: Mutex::new(HashMap::new()),
             stats: AgentStats::default(),
         })
     }
@@ -165,6 +181,129 @@ impl BAgent {
     /// The cached directory tree (read-only view for tests/telemetry).
     pub fn cache(&self) -> &CacheTree {
         &self.cache
+    }
+
+    // -- permission leases (handle-first API) --------------------------------
+
+    /// The lease stamp this agent would put on a relative op against
+    /// `node` right now: the last epoch a [`Request::Lease`] reported,
+    /// or 0 if the directory was never explicitly leased (servers start
+    /// every epoch at 0, so the optimistic stamp is usually valid and
+    /// costs nothing).
+    pub fn assumed_stamp(&self, node: Ino) -> LeaseStamp {
+        let epoch = self.leases.lock().unwrap().get(&node).copied().unwrap_or(0);
+        LeaseStamp { node, epoch }
+    }
+
+    /// Grant/refresh a directory permission lease with ONE RPC: returns
+    /// the directory's current attr and lease epoch, caches the epoch,
+    /// and registers this client for §3.4 invalidation pushes on it.
+    pub fn lease(&self, node: Ino, cred: &Credentials) -> FsResult<(crate::types::Attr, u64)> {
+        self.stats.lease_grants.fetch_add(1, Ordering::Relaxed);
+        let resp = self.cluster.transport(node)?.call(Request::Lease {
+            node,
+            client: self.id,
+            cred: cred.clone(),
+        })?;
+        match resp {
+            Response::Leased { attr, epoch } => {
+                self.leases.lock().unwrap().insert(node, epoch);
+                Ok((attr, epoch))
+            }
+            other => Err(FsError::Protocol(format!("lease returned {other:?}"))),
+        }
+    }
+
+    /// Record a lease-epoch bump this agent itself caused (its own
+    /// rename revoked the dir): keeps the next relative op from paying a
+    /// needless `StaleLease` round trip. Only adjusts *known* entries —
+    /// an unknown epoch stays unknown and self-corrects on first use.
+    fn note_own_bump(&self, node: Ino) {
+        if let Some(e) = self.leases.lock().unwrap().get_mut(&node) {
+            *e += 1;
+        }
+    }
+
+    /// Issue a dirfd-relative request stamped with `node`'s permission
+    /// lease. On [`FsError::StaleLease`] the lease is re-granted (one
+    /// extra RPC — the "re-resolve") and the request retried; bounded,
+    /// so a sustained revocation storm surfaces as [`FsError::Busy`].
+    pub fn relative_call(
+        &self,
+        op: &'static str,
+        node: Ino,
+        cred: &Credentials,
+        build: impl Fn(LeaseStamp) -> Request,
+    ) -> FsResult<Response> {
+        for attempt in 0..MAX_LEASE_RETRIES {
+            let stamp = self.assumed_stamp(node);
+            match self.cluster.transport(node)?.call(build(stamp)) {
+                Err(FsError::StaleLease) => {
+                    self.stats.stale_lease_retries.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.record_stale_retry(op);
+                    self.lease(node, cred)?;
+                }
+                Ok(r) => {
+                    if attempt == 0 {
+                        self.metrics.record_lease_hit(op);
+                    }
+                    return Ok(r);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(FsError::Busy)
+    }
+
+    /// Dirfd-relative rename between two (same-host) directory nodes —
+    /// the two-stamp variant of [`BAgent::relative_call`]. Used by both
+    /// the legacy path shim and `api::Dir::rename_into`.
+    pub fn rename_at_nodes(
+        &self,
+        snode: Ino,
+        sname: &str,
+        dnode: Ino,
+        dname: &str,
+        cred: &Credentials,
+    ) -> FsResult<()> {
+        if snode.host != dnode.host {
+            return Err(FsError::Invalid("cross-server rename unsupported".into()));
+        }
+        for attempt in 0..MAX_LEASE_RETRIES {
+            let req = Request::RenameAt {
+                src: self.assumed_stamp(snode),
+                sname: sname.to_string(),
+                dst: self.assumed_stamp(dnode),
+                dname: dname.to_string(),
+                cred: cred.clone(),
+            };
+            match self.cluster.transport(snode)?.call(req) {
+                Err(FsError::StaleLease) => {
+                    self.stats.stale_lease_retries.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.record_stale_retry("rename");
+                    // either stamp may be the stale one: refresh both
+                    self.lease(snode, cred)?;
+                    if dnode != snode {
+                        self.lease(dnode, cred)?;
+                    }
+                }
+                Err(e) => return Err(e),
+                Ok(_) => {
+                    if attempt == 0 {
+                        self.metrics.record_lease_hit("rename");
+                    }
+                    // the server bumped both epochs applying the rename
+                    self.note_own_bump(snode);
+                    if dnode != snode {
+                        self.note_own_bump(dnode);
+                    }
+                    self.cache.evict_entry(snode, sname);
+                    self.cache.invalidate_dir(dnode);
+                    return Ok(());
+                }
+            }
+        }
+        Err(FsError::Busy)
     }
 
     // -- path resolution over the cached tree --------------------------------
@@ -424,46 +563,86 @@ impl BAgent {
             return Err(FsError::PermissionDenied);
         }
 
+        let fd = self.open_resolved(pid, &resolved.leaf, flags, cred, true)?;
+        if self.metrics.total_rpcs() == rpcs_before {
+            self.stats.rpc_free_opens.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(fd)
+    }
+
+    /// The post-resolution half of open(): O_APPEND positioning and
+    /// O_TRUNC (each one RPC when requested), then fd allocation.
+    /// `incomplete` marks a deferred open whose record rides the first
+    /// read/write; the handle API's remote `OpenAt` path passes `false`.
+    pub fn open_resolved(
+        &self,
+        pid: Pid,
+        leaf: &DirEntry,
+        flags: OpenFlags,
+        cred: &Credentials,
+        incomplete: bool,
+    ) -> FsResult<Fd> {
         let mut offset = 0;
         let mut size_hint = 0;
         if flags.append {
             // O_APPEND needs the current size (one GetAttr round trip —
             // outside the paper's measured workloads)
-            let resp = self.cluster.transport(resolved.leaf.ino)?.call(Request::GetAttr {
-                ino: resolved.leaf.ino,
-            })?;
+            let resp = self.cluster.transport(leaf.ino)?.call(Request::GetAttr { ino: leaf.ino })?;
             if let Response::AttrR(a) = resp {
                 offset = a.size;
                 size_hint = a.size;
             }
         }
         if flags.truncate {
-            self.cluster.transport(resolved.leaf.ino)?.call(Request::Truncate {
-                ino: resolved.leaf.ino,
+            self.cluster.transport(leaf.ino)?.call(Request::Truncate {
+                ino: leaf.ino,
                 size: 0,
                 cred: cred.clone(),
             })?;
             offset = 0;
             size_hint = 0;
         }
-
-        let handle = self.handle_seq.fetch_add(1, Ordering::Relaxed);
-        let fd = self.fds.lock().unwrap().open(
+        self.install_fd(
             pid,
             FileHandle {
-                ino: resolved.leaf.ino,
+                ino: leaf.ino,
                 flags,
                 offset,
-                incomplete: true,
-                handle,
+                incomplete,
+                handle: self.next_handle(),
                 cred: cred.clone(),
                 size_hint,
             },
-        );
-        if self.metrics.total_rpcs() == rpcs_before {
-            self.stats.rpc_free_opens.fetch_add(1, Ordering::Relaxed);
+        )
+    }
+
+    /// Allocate a client-chosen server-side open identity.
+    pub fn next_handle(&self) -> u64 {
+        self.handle_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Install a fully-formed file handle into the fd table (lowest
+    /// closed fd reused; `TooManyOpenFiles` past the per-pid cap).
+    pub fn install_fd(&self, pid: Pid, fh: FileHandle) -> FsResult<Fd> {
+        self.fds.lock().unwrap().open(pid, fh)
+    }
+
+    /// ftruncate(2): truncate through an open (writable) fd.
+    pub fn ftruncate(&self, pid: Pid, fd: Fd, size: u64) -> FsResult<()> {
+        let h = self.snapshot_handle(pid, fd)?;
+        if !h.flags.write && !h.flags.append && !h.flags.truncate {
+            return Err(FsError::PermissionDenied);
         }
-        Ok(fd)
+        self.cluster.transport(h.ino)?.call(Request::Truncate {
+            ino: h.ino,
+            size,
+            cred: h.cred.clone(),
+        })?;
+        let mut fds = self.fds.lock().unwrap();
+        if let Ok(hm) = fds.get_mut(pid, fd) {
+            hm.size_hint = size;
+        }
+        Ok(())
     }
 
     /// O_CREAT slow path: make the file (one Create RPC to the parent's
@@ -479,8 +658,8 @@ impl BAgent {
             self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
-        let resp = self.cluster.transport(parent.leaf.ino)?.call(Request::Create {
-            dir: parent.leaf.ino,
+        let resp = self.relative_call("create", parent.leaf.ino, cred, |lease| Request::CreateAt {
+            lease,
             name: name.to_string(),
             mode: 0o644,
             kind: FileKind::Regular,
@@ -539,19 +718,18 @@ impl BAgent {
                         self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
                         return Err(FsError::PermissionDenied);
                     }
-                    let handle = self.handle_seq.fetch_add(1, Ordering::Relaxed);
-                    let fd = self.fds.lock().unwrap().open(
+                    let fd = self.install_fd(
                         pid,
                         FileHandle {
                             ino: res.leaf.ino,
                             flags,
                             offset: 0,
                             incomplete: true,
-                            handle,
+                            handle: self.next_handle(),
                             cred: cred.clone(),
                             size_hint: 0,
                         },
-                    );
+                    )?;
                     self.stats.rpc_free_opens.fetch_add(1, Ordering::Relaxed);
                     Ok(fd)
                 }
@@ -684,6 +862,12 @@ impl BAgent {
     }
 
     // -- metadata operations ---------------------------------------------------
+    //
+    // All path-string metadata ops are thin shims over the handle API:
+    // resolve the parent prefix against the cached tree (usually free),
+    // then issue ONE dirfd-relative request stamped with the parent's
+    // permission lease. A `StaleLease` answer re-grants the lease and
+    // retries once (`relative_call`).
 
     pub fn stat(&self, path: &str, cred: &Credentials) -> FsResult<crate::types::Attr> {
         let r = self.resolve(path, cred)?;
@@ -691,9 +875,22 @@ impl BAgent {
         if perm::check_path(&r.chain[..r.chain.len() - 1], cred, AccessMask::EXEC).is_err() {
             return Err(FsError::PermissionDenied);
         }
-        match self.cluster.transport(r.leaf.ino)?.call(Request::GetAttr { ino: r.leaf.ino })? {
+        if r.parent == r.leaf.ino {
+            // "/" itself has no parent handle to go through
+            let req = Request::GetAttr { ino: r.leaf.ino };
+            return match self.cluster.transport(r.leaf.ino)?.call(req)? {
+                Response::AttrR(a) => Ok(a),
+                other => Err(FsError::Protocol(format!("getattr returned {other:?}"))),
+            };
+        }
+        let resp = self.relative_call("getattr", r.parent, cred, |lease| Request::StatAt {
+            lease,
+            name: r.leaf.name.clone(),
+            cred: cred.clone(),
+        })?;
+        match resp {
             Response::AttrR(a) => Ok(a),
-            other => Err(FsError::Protocol(format!("getattr returned {other:?}"))),
+            other => Err(FsError::Protocol(format!("statat returned {other:?}"))),
         }
     }
 
@@ -723,8 +920,8 @@ impl BAgent {
             self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
-        let resp = self.cluster.transport(parent.leaf.ino)?.call(Request::Mkdir {
-            dir: parent.leaf.ino,
+        let resp = self.relative_call("mkdir", parent.leaf.ino, cred, |lease| Request::MkdirAt {
+            lease,
             name: name.to_string(),
             mode,
             cred: cred.clone(),
@@ -745,8 +942,8 @@ impl BAgent {
             self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
-        let resp = self.cluster.transport(parent.leaf.ino)?.call(Request::Create {
-            dir: parent.leaf.ino,
+        let resp = self.relative_call("create", parent.leaf.ino, cred, |lease| Request::CreateAt {
+            lease,
             name: name.to_string(),
             mode,
             kind: FileKind::Regular,
@@ -764,8 +961,8 @@ impl BAgent {
 
     pub fn unlink(&self, path: &str, cred: &Credentials) -> FsResult<()> {
         let (parent, name) = self.resolve_parent(path, cred)?;
-        self.cluster.transport(parent.leaf.ino)?.call(Request::Unlink {
-            dir: parent.leaf.ino,
+        self.relative_call("unlink", parent.leaf.ino, cred, |lease| Request::UnlinkAt {
+            lease,
             name: name.to_string(),
             cred: cred.clone(),
         })?;
@@ -775,8 +972,8 @@ impl BAgent {
 
     pub fn rmdir(&self, path: &str, cred: &Credentials) -> FsResult<()> {
         let (parent, name) = self.resolve_parent(path, cred)?;
-        self.cluster.transport(parent.leaf.ino)?.call(Request::Rmdir {
-            dir: parent.leaf.ino,
+        self.relative_call("rmdir", parent.leaf.ino, cred, |lease| Request::RmdirAt {
+            lease,
             name: name.to_string(),
             cred: cred.clone(),
         })?;
@@ -811,19 +1008,7 @@ impl BAgent {
     pub fn rename(&self, src: &str, dst: &str, cred: &Credentials) -> FsResult<()> {
         let (sparent, sname) = self.resolve_parent(src, cred)?;
         let (dparent, dname) = self.resolve_parent(dst, cred)?;
-        if sparent.leaf.ino.host != dparent.leaf.ino.host {
-            return Err(FsError::Invalid("cross-server rename unsupported".into()));
-        }
-        self.cluster.transport(sparent.leaf.ino)?.call(Request::Rename {
-            sdir: sparent.leaf.ino,
-            sname: sname.to_string(),
-            ddir: dparent.leaf.ino,
-            dname: dname.to_string(),
-            cred: cred.clone(),
-        })?;
-        self.cache.evict_entry(sparent.leaf.ino, sname);
-        self.cache.invalidate_dir(dparent.leaf.ino);
-        Ok(())
+        self.rename_at_nodes(sparent.leaf.ino, sname, dparent.leaf.ino, dname, cred)
     }
 
     pub fn truncate(&self, path: &str, size: u64, cred: &Credentials) -> FsResult<()> {

@@ -1,0 +1,604 @@
+//! The handle-first client API: `Dir`/`File` capability handles with
+//! openat-style relative operations and permission leases.
+//!
+//! The paper's thesis is that `open()`-time permission checks can be
+//! served locally — yet a flat path-string API re-walks the whole path
+//! (even if only through the cache) on *every* call. This facade makes
+//! the resolution durable instead: a [`Dir`] is a capability onto one
+//! directory node, carrying
+//!
+//! * the node's `(hostID, version, fileID)` inode — relative operations
+//!   address the namespace by node, never by path, so an ancestor
+//!   `rename` does not perturb them (POSIX `openat` semantics);
+//! * the directory's own perm blob — the local check for a relative
+//!   open is exactly two blobs (X on the dir, `want` on the leaf),
+//!   because holding the handle *is* the proof the ancestor walk
+//!   succeeded once;
+//! * a **permission lease**: client-side, a snapshot of the cache's
+//!   global invalidation epoch (any §3.4 push makes every handle
+//!   conservatively stale); server-side, a per-directory lease epoch
+//!   stamped onto every relative RPC ([`crate::wire::LeaseStamp`]) and
+//!   bumped by `chmod`/`chown`/`rename`, so revocation is correct even
+//!   for a client whose invalidation push was lost.
+//!
+//! A stale lease costs exactly one re-resolve ([`crate::wire::Request::Lease`],
+//! one RPC) and a retry; a valid one costs nothing — warm same-directory
+//! sibling opens through [`Dir::open_file`] perform **zero** RPCs and
+//! zero root walks. Both outcomes are counted per-op in
+//! [`crate::metrics::RpcMetrics`] (`lease_hits`/`stale_retries`).
+//!
+//! ```text
+//! Client::root ── Dir"/" ── open_dir ── Dir"/a" ── open_file ── File
+//!                   │                     │ lease {node, epoch}    │ RAII:
+//!                   │ readdir/stat/mkdir/ │ stale? → 1 Lease RPC   │ close-on-
+//!                   │ unlink/rename_into  │ → retry once           │ drop
+//! ```
+//!
+//! The legacy path-string [`crate::agent::BAgent`] surface is a thin
+//! shim over the same machinery: resolve the parent prefix, then issue
+//! the dirfd-relative request with the parent's lease stamp.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::agent::cache::ChildLookup;
+use crate::agent::fdtable::FileHandle;
+use crate::agent::BAgent;
+use crate::error::{FsError, FsResult};
+use crate::perm;
+use crate::types::{
+    AccessMask, Attr, Credentials, DirEntry, Fd, FileKind, Ino, OpenFlags, PermBlob, Pid, W_OK,
+    X_OK,
+};
+use crate::wire::{Request, Response};
+
+/// Process ids handed to [`Client::new`] callers (distinct from the
+/// `blib::Buffet` range so both fronts can share one agent).
+static NEXT_API_PID: AtomicU32 = AtomicU32::new(30_000);
+
+/// Bound on listing refetch retries per relative lookup (§3.4 races).
+const MAX_LOOKUP_RETRIES: usize = 8;
+
+/// What one client process shares across all the handles it opens.
+struct Core {
+    agent: Arc<BAgent>,
+    cred: Credentials,
+    pid: Pid,
+}
+
+/// One process's entry point to the handle API: yields the root [`Dir`].
+pub struct Client {
+    core: Arc<Core>,
+}
+
+impl Client {
+    /// A fresh process (own pid) with the given credentials on a shared
+    /// per-node agent.
+    pub fn new(agent: Arc<BAgent>, cred: Credentials) -> Client {
+        Client::with_pid(agent, NEXT_API_PID.fetch_add(1, Ordering::Relaxed), cred)
+    }
+
+    pub fn with_pid(agent: Arc<BAgent>, pid: Pid, cred: Credentials) -> Client {
+        Client { core: Arc::new(Core { agent, cred, pid }) }
+    }
+
+    pub fn pid(&self) -> Pid {
+        self.core.pid
+    }
+
+    pub fn agent(&self) -> &Arc<BAgent> {
+        &self.core.agent
+    }
+
+    /// The root directory capability. Purely local: the root node is
+    /// known from the cluster map, and its perm blob comes from the
+    /// cache (or the conventional 0o755 placeholder until first fetch).
+    pub fn root(&self) -> FsResult<Dir> {
+        let agent = &self.core.agent;
+        let root = agent.cluster().root();
+        let perm = agent.cache().perm_of(root).unwrap_or(PermBlob::new(0o755, 0, 0));
+        Ok(Dir {
+            core: Arc::clone(&self.core),
+            node: root,
+            path: Vec::new(),
+            lease: Mutex::new(LeaseState { perm, cache_epoch: agent.cache().epoch() }),
+        })
+    }
+}
+
+/// Client-side half of a directory lease: the directory's own perm blob
+/// plus the global cache-invalidation epoch it was last validated at.
+#[derive(Clone, Copy)]
+struct LeaseState {
+    perm: PermBlob,
+    cache_epoch: u64,
+}
+
+/// A capability handle onto one directory: all operations are relative
+/// to its cached `(node, lease)` — no root walk, ever.
+pub struct Dir {
+    core: Arc<Core>,
+    node: Ino,
+    /// Absolute components from the root (diagnostics only — operations
+    /// go by `node`, which survives ancestor renames).
+    path: Vec<String>,
+    lease: Mutex<LeaseState>,
+}
+
+impl Dir {
+    pub fn node(&self) -> Ino {
+        self.node
+    }
+
+    /// The path this handle was opened under (it may since have been
+    /// renamed away — the handle still works).
+    pub fn opened_path(&self) -> String {
+        if self.path.is_empty() {
+            "/".to_string()
+        } else {
+            format!("/{}", self.path.join("/"))
+        }
+    }
+
+    fn agent(&self) -> &Arc<BAgent> {
+        &self.core.agent
+    }
+
+    fn cred(&self) -> &Credentials {
+        &self.core.cred
+    }
+
+    /// Validate the client half of the lease. If any §3.4 invalidation
+    /// landed since this handle last looked (the global epoch moved),
+    /// re-resolve ONCE — a single `Lease` RPC re-reads the directory's
+    /// perm + server epoch — then proceed. Per-op hit/stale counters
+    /// feed `RpcMetrics`.
+    fn ensure_fresh(&self, op: &'static str) -> FsResult<PermBlob> {
+        self.ensure_fresh_counted(op, true)
+    }
+
+    /// `count_hit: false` for ops that go on to issue a stamped relative
+    /// RPC — `BAgent::relative_call` records that op's lease hit itself,
+    /// so counting here too would double every RPC-backed op.
+    fn ensure_fresh_counted(&self, op: &'static str, count_hit: bool) -> FsResult<PermBlob> {
+        let agent = self.agent();
+        let now = agent.cache().epoch();
+        {
+            let st = self.lease.lock().unwrap();
+            if st.cache_epoch == now {
+                if count_hit {
+                    agent.metrics().record_lease_hit(op);
+                }
+                return Ok(st.perm);
+            }
+        }
+        agent.metrics().record_stale_retry(op);
+        let (attr, _epoch) = agent.lease(self.node, self.cred())?;
+        let mut st = self.lease.lock().unwrap();
+        st.perm = attr.perm;
+        st.cache_epoch = now;
+        Ok(st.perm)
+    }
+
+    /// Fetch this directory's listing with ONE stamped `ReadDirAt` and
+    /// install it into the shared cache (generation-checked, §3.4).
+    fn fill_listing(&self) -> FsResult<()> {
+        let agent = self.agent();
+        let cred = self.cred();
+        let snap_gen = agent.cache().gen_of(self.node);
+        let resp = agent.relative_call("readdir", self.node, cred, |lease| Request::ReadDirAt {
+            lease,
+            client: agent.id(),
+            register: true,
+            cred: cred.clone(),
+        })?;
+        match resp {
+            Response::Entries { dir, entries } => {
+                agent.cache().install_dir(self.node, dir.perm, &entries, snap_gen);
+                self.lease.lock().unwrap().perm = dir.perm;
+                Ok(())
+            }
+            other => Err(FsError::Protocol(format!("readdirat returned {other:?}"))),
+        }
+    }
+
+    /// Resolve `name` against the cached listing (authoritative local
+    /// ENOENT included), fetching the listing when missing. Propagates
+    /// `PermissionDenied` when the cred may not READ this directory —
+    /// callers fall back to a remote relative op (X-only traversal).
+    fn lookup_entry(&self, name: &str) -> FsResult<DirEntry> {
+        let agent = self.agent();
+        for _ in 0..MAX_LOOKUP_RETRIES {
+            match agent.cache().child(self.node, name) {
+                ChildLookup::Found(e) => return Ok(e),
+                ChildLookup::NoSuchEntry => return Err(FsError::NotFound),
+                ChildLookup::DirNotCached => self.fill_listing()?,
+            }
+        }
+        Err(FsError::Busy)
+    }
+
+    fn child_dir(&self, name: &str, entry: &DirEntry) -> Dir {
+        let mut path = self.path.clone();
+        path.push(name.to_string());
+        Dir {
+            core: Arc::clone(&self.core),
+            node: entry.ino,
+            path,
+            lease: Mutex::new(LeaseState {
+                perm: entry.perm,
+                cache_epoch: self.core.agent.cache().epoch(),
+            }),
+        }
+    }
+
+    /// Open a child directory as a new capability handle. Warm path:
+    /// fully local (cached listing + X checks on two blobs).
+    pub fn open_dir(&self, name: &str) -> FsResult<Dir> {
+        let agent = self.agent();
+        let cred = self.cred();
+        let dir_perm = self.ensure_fresh("open")?;
+        let entry = if !perm::check_access(&dir_perm, cred, AccessMask::READ) {
+            // X-only parent: its listing can never be cached for this
+            // cred — resolve the one name remotely, no doomed ReadDirAt
+            let attr = self.stat_remote(name)?;
+            DirEntry { name: name.to_string(), ino: attr.ino, kind: attr.kind, perm: attr.perm }
+        } else {
+            match self.lookup_entry(name) {
+                Ok(e) => e,
+                Err(FsError::PermissionDenied) => {
+                    // the dir perm we held was stale-permissive: fall back
+                    let attr = self.stat_remote(name)?;
+                    DirEntry {
+                        name: name.to_string(),
+                        ino: attr.ino,
+                        kind: attr.kind,
+                        perm: attr.perm,
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        if entry.kind != FileKind::Directory {
+            return Err(FsError::NotADirectory);
+        }
+        // traversal capability: X on this dir and on the child
+        agent.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if perm::check_path(&[dir_perm, entry.perm], cred, AccessMask::EXEC).is_err() {
+            agent.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+        Ok(self.child_dir(name, &entry))
+    }
+
+    /// Open a file relative to this handle. Warm path — cached listing,
+    /// valid lease — is the whole of open() served locally: **zero**
+    /// RPCs, no root walk, local check on exactly two perm blobs.
+    pub fn open_file(&self, name: &str, flags: OpenFlags) -> FsResult<File> {
+        let agent = self.agent();
+        let cred = self.cred();
+        let rpcs_before = agent.metrics().total_rpcs();
+        let want = flags.access_mask();
+        let dir_perm = self.ensure_fresh("open")?;
+        if !perm::check_access(&dir_perm, cred, AccessMask::READ) {
+            // the cred may not READ this dir, so its listing can never be
+            // cached for it: skip the doomed ReadDirAt and go straight to
+            // the dirfd-relative remote open (X-only traversal)
+            return self.open_at_remote(name, flags);
+        }
+        let entry = match self.lookup_entry(name) {
+            Ok(e) => e,
+            Err(FsError::NotFound) if flags.create => {
+                return self.create_with_flags(name, 0o644, flags);
+            }
+            Err(FsError::PermissionDenied) => {
+                // the dir perm we held was stale-permissive: fall back
+                return self.open_at_remote(name, flags);
+            }
+            Err(e) => return Err(e),
+        };
+        if entry.kind == FileKind::Directory && (flags.write || flags.truncate) {
+            return Err(FsError::IsADirectory);
+        }
+        // Step 1, served locally under the capability: X on this dir,
+        // `want` on the leaf — the handle grant already walked the
+        // ancestors.
+        agent.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if perm::check_path(&[dir_perm, entry.perm], cred, want).is_err() {
+            agent.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+        let fd = agent.open_resolved(self.core.pid, &entry, flags, cred, true)?;
+        if agent.metrics().total_rpcs() == rpcs_before {
+            agent.stats.rpc_free_opens.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(File::new(Arc::clone(&self.core), fd, entry.ino))
+    }
+
+    /// Remote relative open — used when this directory is X-only for
+    /// the cred (its listing may not be cached). The server writes the
+    /// open record eagerly, so the fd is NOT incomplete-marked.
+    fn open_at_remote(&self, name: &str, flags: OpenFlags) -> FsResult<File> {
+        let agent = self.agent();
+        let cred = self.cred();
+        let handle = agent.next_handle();
+        let resp = agent.relative_call("open", self.node, cred, |lease| Request::OpenAt {
+            lease,
+            name: name.to_string(),
+            flags,
+            cred: cred.clone(),
+            client: agent.id(),
+            handle,
+        })?;
+        let attr = match resp {
+            Response::Opened { attr, .. } => attr,
+            other => return Err(FsError::Protocol(format!("openat returned {other:?}"))),
+        };
+        // The server wrote the open record eagerly: any abort from here
+        // on must close it, or the opened-file entry leaks forever.
+        let ino = attr.ino;
+        let abort = |e: FsError| -> FsError {
+            if let Ok(t) = agent.cluster().transport(ino) {
+                let _ = t.call_async(Request::Close { ino, client: agent.id(), handle });
+            }
+            e
+        };
+        if attr.kind == FileKind::Directory && (flags.write || flags.truncate) {
+            return Err(abort(FsError::IsADirectory));
+        }
+        if flags.truncate {
+            let trunc = Request::Truncate { ino, size: 0, cred: cred.clone() };
+            let sent = agent.cluster().transport(ino).and_then(|t| t.call(trunc));
+            if let Err(e) = sent {
+                return Err(abort(e));
+            }
+        }
+        let installed = agent.install_fd(
+            self.core.pid,
+            FileHandle {
+                ino,
+                flags,
+                offset: if flags.append { attr.size } else { 0 },
+                incomplete: false,
+                handle,
+                cred: cred.clone(),
+                size_hint: if flags.truncate { 0 } else { attr.size },
+            },
+        );
+        match installed {
+            Ok(fd) => Ok(File::new(Arc::clone(&self.core), fd, ino)),
+            Err(e) => Err(abort(e)),
+        }
+    }
+
+    /// Create a regular file here and return it opened read-write.
+    pub fn create(&self, name: &str, mode: u16) -> FsResult<File> {
+        self.create_with_flags(name, mode, OpenFlags::RDWR.with_create())
+    }
+
+    fn create_with_flags(&self, name: &str, mode: u16, flags: OpenFlags) -> FsResult<File> {
+        let agent = self.agent();
+        let cred = self.cred();
+        let dir_perm = self.ensure_fresh_counted("create", false)?;
+        agent.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if !perm::check_access(&dir_perm, cred, AccessMask(W_OK | X_OK)) {
+            agent.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+        let created = agent.relative_call("create", self.node, cred, |lease| Request::CreateAt {
+            lease,
+            name: name.to_string(),
+            mode,
+            kind: FileKind::Regular,
+            cred: cred.clone(),
+            client: agent.id(),
+        });
+        let entry = match created {
+            Ok(Response::Created(e)) => e,
+            Ok(other) => return Err(FsError::Protocol(format!("createat returned {other:?}"))),
+            Err(FsError::AlreadyExists) if flags.create => {
+                // O_CREAT without O_EXCL: we lost a create race (or our
+                // cached ENOENT was stale) — open the existing file via
+                // an authoritative server-side lookup instead of failing.
+                // Unlike a fresh create (whose mode never restricts the
+                // creating open), the existing file's perms DO gate us.
+                let attr = self.stat_remote(name)?;
+                if attr.kind == FileKind::Directory && (flags.write || flags.truncate) {
+                    return Err(FsError::IsADirectory);
+                }
+                let e = DirEntry {
+                    name: name.to_string(),
+                    ino: attr.ino,
+                    kind: attr.kind,
+                    perm: attr.perm,
+                };
+                agent.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+                if perm::check_path(&[dir_perm, e.perm], cred, flags.access_mask()).is_err() {
+                    agent.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+                    return Err(FsError::PermissionDenied);
+                }
+                e
+            }
+            Err(e) => return Err(e),
+        };
+        agent.cache().insert_entry(self.node, entry.clone());
+        let fd = agent.open_resolved(self.core.pid, &entry, flags, cred, true)?;
+        Ok(File::new(Arc::clone(&self.core), fd, entry.ino))
+    }
+
+    /// Make a child directory and return its capability handle.
+    pub fn mkdir(&self, name: &str, mode: u16) -> FsResult<Dir> {
+        let agent = self.agent();
+        let cred = self.cred();
+        let dir_perm = self.ensure_fresh_counted("mkdir", false)?;
+        agent.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if !perm::check_access(&dir_perm, cred, AccessMask(W_OK | X_OK)) {
+            agent.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+        let resp = agent.relative_call("mkdir", self.node, cred, |lease| Request::MkdirAt {
+            lease,
+            name: name.to_string(),
+            mode,
+            cred: cred.clone(),
+        })?;
+        let entry = match resp {
+            Response::Created(e) => e,
+            other => return Err(FsError::Protocol(format!("mkdirat returned {other:?}"))),
+        };
+        agent.cache().insert_entry(self.node, entry.clone());
+        Ok(self.child_dir(name, &entry))
+    }
+
+    /// stat a child by name: one stamped `StatAt` round trip.
+    pub fn stat(&self, name: &str) -> FsResult<Attr> {
+        let dir_perm = self.ensure_fresh_counted("getattr", false)?;
+        if !perm::check_access(&dir_perm, self.cred(), AccessMask(X_OK)) {
+            return Err(FsError::PermissionDenied);
+        }
+        self.stat_remote(name)
+    }
+
+    fn stat_remote(&self, name: &str) -> FsResult<Attr> {
+        let agent = self.agent();
+        let cred = self.cred();
+        let resp = agent.relative_call("getattr", self.node, cred, |lease| Request::StatAt {
+            lease,
+            name: name.to_string(),
+            cred: cred.clone(),
+        })?;
+        match resp {
+            Response::AttrR(a) => Ok(a),
+            other => Err(FsError::Protocol(format!("statat returned {other:?}"))),
+        }
+    }
+
+    /// stat this directory itself.
+    pub fn stat_self(&self) -> FsResult<Attr> {
+        let resp = self.agent().cluster().transport(self.node)?.call(Request::GetAttr {
+            ino: self.node,
+        })?;
+        match resp {
+            Response::AttrR(a) => Ok(a),
+            other => Err(FsError::Protocol(format!("getattr returned {other:?}"))),
+        }
+    }
+
+    /// List this directory. Warm path: served from the cached listing
+    /// with zero RPCs.
+    pub fn readdir(&self) -> FsResult<Vec<DirEntry>> {
+        let agent = self.agent();
+        let dir_perm = self.ensure_fresh("readdir")?;
+        agent.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+        if !perm::check_access(&dir_perm, self.cred(), AccessMask::READ) {
+            agent.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::PermissionDenied);
+        }
+        for _ in 0..MAX_LOOKUP_RETRIES {
+            if let Some(mut out) = agent.cache().listing(self.node) {
+                out.sort_by(|a, b| a.name.cmp(&b.name));
+                return Ok(out);
+            }
+            self.fill_listing()?;
+        }
+        Err(FsError::Busy)
+    }
+
+    pub fn unlink(&self, name: &str) -> FsResult<()> {
+        let _ = self.ensure_fresh_counted("unlink", false)?;
+        let agent = self.agent();
+        let cred = self.cred();
+        agent.relative_call("unlink", self.node, cred, |lease| Request::UnlinkAt {
+            lease,
+            name: name.to_string(),
+            cred: cred.clone(),
+        })?;
+        agent.cache().evict_entry(self.node, name);
+        Ok(())
+    }
+
+    pub fn rmdir(&self, name: &str) -> FsResult<()> {
+        let _ = self.ensure_fresh_counted("rmdir", false)?;
+        let agent = self.agent();
+        let cred = self.cred();
+        agent.relative_call("rmdir", self.node, cred, |lease| Request::RmdirAt {
+            lease,
+            name: name.to_string(),
+            cred: cred.clone(),
+        })?;
+        agent.cache().evict_entry(self.node, name);
+        Ok(())
+    }
+
+    /// Move `sname` from this directory into `dst` as `dname` — the
+    /// two-handle relative rename. Both directories' leases are revoked
+    /// by the server as part of applying it.
+    pub fn rename_into(&self, sname: &str, dst: &Dir, dname: &str) -> FsResult<()> {
+        let _ = self.ensure_fresh_counted("rename", false)?;
+        self.agent().rename_at_nodes(self.node, sname, dst.node, dname, self.cred())
+    }
+}
+
+/// An open file: RAII — dropping it closes the fd through the agent's
+/// fd table (a never-touched fd costs zero RPCs to close, §3.3).
+pub struct File {
+    core: Arc<Core>,
+    fd: Fd,
+    ino: Ino,
+    closed: AtomicBool,
+}
+
+impl File {
+    fn new(core: Arc<Core>, fd: Fd, ino: Ino) -> File {
+        File { core, fd, ino, closed: AtomicBool::new(false) }
+    }
+
+    pub fn fd(&self) -> Fd {
+        self.fd
+    }
+
+    pub fn ino(&self) -> Ino {
+        self.ino
+    }
+
+    /// pread(2): positional read, does not move the fd offset.
+    pub fn read_at(&self, off: u64, len: u32) -> FsResult<Vec<u8>> {
+        self.core.agent.pread(self.core.pid, self.fd, off, len)
+    }
+
+    /// pwrite(2): positional write, does not move the fd offset.
+    pub fn write_at(&self, off: u64, data: &[u8]) -> FsResult<u32> {
+        self.core.agent.pwrite(self.core.pid, self.fd, off, data)
+    }
+
+    /// read(2): sequential read at the fd offset.
+    pub fn read(&self, len: u32) -> FsResult<Vec<u8>> {
+        self.core.agent.read(self.core.pid, self.fd, len)
+    }
+
+    /// write(2): sequential write at the fd offset.
+    pub fn write(&self, data: &[u8]) -> FsResult<u32> {
+        self.core.agent.write(self.core.pid, self.fd, data)
+    }
+
+    /// ftruncate(2).
+    pub fn truncate(&self, size: u64) -> FsResult<()> {
+        self.core.agent.ftruncate(self.core.pid, self.fd, size)
+    }
+
+    /// Explicit close, surfacing any error; Drop then becomes a no-op.
+    pub fn close(&self) -> FsResult<()> {
+        if self.closed.swap(true, Ordering::Relaxed) {
+            return Err(FsError::BadFd);
+        }
+        self.core.agent.close(self.core.pid, self.fd)
+    }
+}
+
+impl Drop for File {
+    fn drop(&mut self) {
+        if !self.closed.swap(true, Ordering::Relaxed) {
+            let _ = self.core.agent.close(self.core.pid, self.fd);
+        }
+    }
+}

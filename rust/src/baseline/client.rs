@@ -220,7 +220,7 @@ impl LustreClient {
                 cred: cred.clone(),
                 size_hint: attr.size,
             },
-        );
+        )?;
         if let Some(data) = inline {
             self.inline.lock().unwrap().insert((pid, fd), Arc::new(data));
         }

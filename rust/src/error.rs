@@ -24,6 +24,12 @@ pub enum FsError {
     Transport(String),
     Protocol(String),
     Io(String),
+    /// A dirfd-relative request carried a permission-lease stamp whose
+    /// epoch the server has since bumped (chmod/chown/rename revocation):
+    /// the client must re-resolve the handle and retry.
+    StaleLease,
+    /// Per-process open-fd cap reached (EMFILE).
+    TooManyOpenFiles,
 }
 
 impl fmt::Display for FsError {
@@ -45,6 +51,8 @@ impl fmt::Display for FsError {
             FsError::Transport(m) => write!(f, "transport failure: {m}"),
             FsError::Protocol(m) => write!(f, "protocol violation: {m}"),
             FsError::Io(m) => write!(f, "I/O error: {m}"),
+            FsError::StaleLease => write!(f, "stale permission lease (epoch bumped)"),
+            FsError::TooManyOpenFiles => write!(f, "too many open files"),
         }
     }
 }
@@ -71,6 +79,8 @@ impl FsError {
             FsError::Transport(m) => (14, m),
             FsError::Protocol(m) => (15, m),
             FsError::Io(m) => (16, m),
+            FsError::StaleLease => (17, ""),
+            FsError::TooManyOpenFiles => (18, ""),
         }
     }
 
@@ -92,6 +102,8 @@ impl FsError {
             14 => FsError::Transport(msg),
             15 => FsError::Protocol(msg),
             16 => FsError::Io(msg),
+            17 => FsError::StaleLease,
+            18 => FsError::TooManyOpenFiles,
             other => FsError::Protocol(format!("unknown error code {other}")),
         }
     }
@@ -141,6 +153,8 @@ mod tests {
             FsError::Transport("down".into()),
             FsError::Protocol("junk".into()),
             FsError::Io("disk".into()),
+            FsError::StaleLease,
+            FsError::TooManyOpenFiles,
         ];
         for e in all {
             let (code, msg) = e.to_wire();

@@ -498,6 +498,137 @@ pub fn print_cold_walk(rows: &[ColdWalkRow]) {
     }
 }
 
+/// Handle-API reopen sweep (handle-first api_redesign): open each of S
+/// sibling files in ONE directory over and over — `Dir::open_file`
+/// (relative, lease-checked, no root walk) vs the legacy full-path
+/// `BAgent::open` (re-resolves the whole path through the cache each
+/// time). Both are RPC-free when warm; the handle path additionally
+/// skips every per-open path-resolution step, which this sweep makes
+/// visible as µs/open at growing sibling counts.
+#[derive(Debug, Clone)]
+pub struct HandleReopenRow {
+    pub siblings: usize,
+    pub handle_us_per_open: f64,
+    /// `ResolvePath` RPCs the handle path issued over the whole run
+    /// (acceptance: 0 — the listing arrives via one stamped ReadDirAt).
+    pub handle_resolve_rpcs: f64,
+    pub legacy_us_per_open: f64,
+    pub legacy_resolve_rpcs: f64,
+    /// Lease hits recorded on the handle path (one per relative open).
+    pub lease_hits: u64,
+    pub stale_retries: u64,
+}
+
+/// Build one single-server directory `/pool` with `max(sibling_counts)`
+/// files, then for each S time `iters` rounds of opening the first S
+/// siblings through (a) a `Dir` handle and (b) the legacy path API,
+/// each on a fresh agent.
+pub fn ablation_handle_reopen(
+    net: NetConfig,
+    sibling_counts: &[usize],
+    iters: usize,
+) -> Vec<HandleReopenRow> {
+    use crate::api::Client;
+    use crate::transport::Service;
+    use crate::types::{Credentials, FileKind};
+    use crate::wire::{Request, Response};
+
+    let max_s = sibling_counts.iter().copied().max().unwrap_or(0);
+    let cluster =
+        BuffetCluster::spawn_with(1, net, Backing::Mem, false, ServiceConfig::unbounded());
+    let s0 = &cluster.servers[0];
+    let dir = match s0.handle(Request::Mkdir {
+        dir: cluster.root(),
+        name: "pool".into(),
+        mode: 0o755,
+        cred: Credentials::root(),
+    }) {
+        Response::Created(e) => e.ino,
+        other => panic!("handle-reopen mkdir: {other:?}"),
+    };
+    for i in 0..max_s {
+        match s0.handle(Request::Create {
+            dir,
+            name: format!("f{i:04}"),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: Credentials::root(),
+            client: 0,
+        }) {
+            Response::Created(_) => {}
+            other => panic!("handle-reopen create: {other:?}"),
+        }
+    }
+
+    let cred = Credentials::new(1000, 1000);
+    let mut rows = Vec::new();
+    for &s in sibling_counts {
+        // (a) handle-relative: one Dir capability, S sibling opens
+        let (agent, metrics) = cluster.make_agent();
+        let client = Client::new(agent, cred.clone());
+        let pool = client
+            .root()
+            .and_then(|r| r.open_dir("pool"))
+            .expect("open_dir(pool)");
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            for i in 0..s {
+                let f = pool.open_file(&format!("f{i:04}"), OpenFlags::RDONLY).expect("open_file");
+                drop(f); // never-touched fd: zero-RPC close
+            }
+        }
+        let handle_us = t0.elapsed().as_secs_f64() * 1e6 / (iters * s).max(1) as f64;
+        let handle_resolves = metrics.count("resolve") as f64;
+        let lease_hits = metrics.lease_hits("open");
+        let stale_retries = metrics.stale_retries("open");
+
+        // (b) legacy full-path API on a fresh agent
+        let (agent, metrics) = cluster.make_agent();
+        let t0 = Instant::now();
+        for it in 0..iters {
+            let pid = 7000 + it as u32;
+            for i in 0..s {
+                let path = format!("/pool/f{i:04}");
+                let fd = agent.open(pid, &path, OpenFlags::RDONLY, &cred).expect("legacy open");
+                agent.close(pid, fd).expect("close");
+            }
+        }
+        let legacy_us = t0.elapsed().as_secs_f64() * 1e6 / (iters * s).max(1) as f64;
+        let legacy_resolves = metrics.count("resolve") as f64;
+
+        rows.push(HandleReopenRow {
+            siblings: s,
+            handle_us_per_open: handle_us,
+            handle_resolve_rpcs: handle_resolves,
+            legacy_us_per_open: legacy_us,
+            legacy_resolve_rpcs: legacy_resolves,
+            lease_hits,
+            stale_retries,
+        });
+    }
+    rows
+}
+
+pub fn print_handle_reopen(rows: &[HandleReopenRow]) {
+    println!("handle-relative reopen sweep — S sibling opens per round, one directory");
+    println!(
+        "{:<10} {:>12} {:>14} {:>12} {:>14} {:>11} {:>8}",
+        "siblings", "handle_us", "resolve_rpcs", "legacy_us", "resolve_rpcs", "lease_hits", "stale"
+    );
+    for r in rows {
+        println!(
+            "{:<10} {:>12.2} {:>14.2} {:>12.2} {:>14.2} {:>11} {:>8}",
+            r.siblings,
+            r.handle_us_per_open,
+            r.handle_resolve_rpcs,
+            r.legacy_us_per_open,
+            r.legacy_resolve_rpcs,
+            r.lease_hits,
+            r.stale_retries
+        );
+    }
+}
+
 /// One Buffet process doing the paper's open-read-close on every file of
 /// a pre-built SUT — helper for criterion-style loops.
 pub fn steady_access(sut: &Sut, spec: &FileSetSpec, stream: &mut AccessStream, pid: u32) {
@@ -611,6 +742,26 @@ mod tests {
                 r.depth,
                 r.per_level_rpcs
             );
+        }
+    }
+
+    #[test]
+    fn handle_reopen_sweep_is_resolve_free_on_the_handle_path() {
+        let rows = ablation_handle_reopen(NetConfig::zero(), &[4, 8], 2);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(
+                r.handle_resolve_rpcs, 0.0,
+                "siblings={}: handle path must never issue ResolvePath",
+                r.siblings
+            );
+            assert!(
+                r.legacy_resolve_rpcs >= 1.0,
+                "siblings={}: legacy cold path resolves at least once",
+                r.siblings
+            );
+            assert!(r.lease_hits as usize >= r.siblings, "every relative open is a lease hit");
+            assert_eq!(r.stale_retries, 0, "nothing revoked anything");
         }
     }
 

@@ -15,6 +15,7 @@
 //! See `DESIGN.md` for the module inventory and the experiment index.
 
 pub mod agent;
+pub mod api;
 pub mod baseline;
 pub mod blib;
 pub mod cluster;

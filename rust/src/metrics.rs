@@ -16,22 +16,38 @@ use crate::util::hist::Histogram;
 pub const OPS: &[&str] = &[
     "lookup", "readdir", "getattr", "open", "read", "write", "close", "create", "mkdir",
     "unlink", "rmdir", "rename", "chmod", "chown", "truncate", "statfs", "hello", "resolve",
-    "invalidate",
+    "lease", "invalidate",
 ];
 
 fn op_index(op: &str) -> usize {
     OPS.iter().position(|&o| o == op).unwrap_or(OPS.len() - 1)
 }
 
+/// Ops the handle API tracks lease-hit / stale-retry outcomes for (the
+/// last entry is the catch-all bucket).
+pub const LEASE_OPS: &[&str] =
+    &["open", "getattr", "readdir", "create", "mkdir", "unlink", "rmdir", "rename", "other"];
+
+fn lease_op_index(op: &str) -> usize {
+    LEASE_OPS.iter().position(|&o| o == op).unwrap_or(LEASE_OPS.len() - 1)
+}
+
 #[derive(Default)]
 pub struct RpcMetrics {
-    counts: [AtomicU64; 19],
+    counts: [AtomicU64; 20],
     bytes_out: AtomicU64,
     bytes_in: AtomicU64,
     lat: Mutex<BTreeMap<&'static str, Histogram>>,
     /// Listings returned per batched `ResolvePath` RPC (§tentpole): how
     /// deep each one-round-trip cold walk got.
     walk_depth: Mutex<Histogram>,
+    /// Handle-API operations served under a still-valid permission lease
+    /// (no re-resolve needed), per op.
+    lease_hits: [AtomicU64; 9],
+    /// Handle-API operations that found their lease stale (client-side
+    /// epoch moved, or the server answered `StaleLease`) and re-resolved
+    /// before retrying, per op.
+    stale_retries: [AtomicU64; 9],
 }
 
 impl RpcMetrics {
@@ -87,6 +103,32 @@ impl RpcMetrics {
         self.walk_depth.lock().unwrap().record(dirs);
     }
 
+    /// A handle-API op ran under a valid permission lease.
+    pub fn record_lease_hit(&self, op: &str) {
+        self.lease_hits[lease_op_index(op)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A handle-API op found its lease stale and re-resolved once.
+    pub fn record_stale_retry(&self, op: &str) {
+        self.stale_retries[lease_op_index(op)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn lease_hits(&self, op: &str) -> u64 {
+        self.lease_hits[lease_op_index(op)].load(Ordering::Relaxed)
+    }
+
+    pub fn stale_retries(&self, op: &str) -> u64 {
+        self.stale_retries[lease_op_index(op)].load(Ordering::Relaxed)
+    }
+
+    pub fn total_lease_hits(&self) -> u64 {
+        self.lease_hits.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_stale_retries(&self) -> u64 {
+        self.stale_retries.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
     /// Distribution of listings-per-ResolvePath (empty if never batched).
     pub fn walk_depth_histogram(&self) -> Histogram {
         self.walk_depth.lock().unwrap().clone()
@@ -100,6 +142,9 @@ impl RpcMetrics {
         self.bytes_in.store(0, Ordering::Relaxed);
         self.lat.lock().unwrap().clear();
         *self.walk_depth.lock().unwrap() = Histogram::new();
+        for c in self.lease_hits.iter().chain(self.stale_retries.iter()) {
+            c.store(0, Ordering::Relaxed);
+        }
     }
 
     /// Multi-line per-op report (counts + latency) for the CLI.
@@ -133,6 +178,10 @@ impl RpcMetrics {
                 wd.mean(),
                 wd.max()
             ));
+        }
+        let (lh, sr) = (self.total_lease_hits(), self.total_stale_retries());
+        if lh + sr > 0 {
+            out.push_str(&format!("  lease hits={lh} stale_retries={sr}\n"));
         }
         out
     }
@@ -195,6 +244,34 @@ mod tests {
         assert!(r.contains("batched walks=2"));
         m.reset();
         assert_eq!(m.walk_depth_histogram().count(), 0);
+    }
+
+    #[test]
+    fn lease_counters_record_and_reset() {
+        let m = RpcMetrics::new();
+        m.record_lease_hit("open");
+        m.record_lease_hit("open");
+        m.record_stale_retry("open");
+        m.record_stale_retry("weird-op"); // lands in the catch-all bucket
+        assert_eq!(m.lease_hits("open"), 2);
+        assert_eq!(m.stale_retries("open"), 1);
+        assert_eq!(m.stale_retries("other"), 1);
+        assert_eq!(m.total_lease_hits(), 2);
+        assert_eq!(m.total_stale_retries(), 2);
+        let r = m.report();
+        assert!(r.contains("lease hits=2 stale_retries=2"));
+        m.reset();
+        assert_eq!(m.total_lease_hits(), 0);
+        assert_eq!(m.total_stale_retries(), 0);
+    }
+
+    #[test]
+    fn lease_is_a_first_class_op() {
+        let m = RpcMetrics::new();
+        m.record("lease", 32, 64, Duration::from_micros(10));
+        assert_eq!(m.count("lease"), 1);
+        assert_eq!(m.count("invalidate"), 0, "must not alias into the catch-all");
+        assert_eq!(m.metadata_rpcs(), 1);
     }
 
     #[test]

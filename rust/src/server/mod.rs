@@ -28,7 +28,7 @@ use crate::transport::{NotifyPush, Service, SharedTransport};
 use crate::types::{
     AccessMask, ClientId, Credentials, FileId, FileKind, HostId, Ino, W_OK, X_OK,
 };
-use crate::wire::{Notify, OpenCtx, Request, Response};
+use crate::wire::{LeaseStamp, Notify, OpenCtx, Request, Response};
 
 use self::locks::FileLocks;
 use self::openlist::{OpenList, OpenRec};
@@ -53,6 +53,10 @@ pub struct ServerStats {
     pub cross_server_ops: AtomicU64,
     /// Batched `ResolvePath` walks served (tentpole cold-path RPC).
     pub batch_walks: AtomicU64,
+    /// Directory permission leases granted/refreshed (handle API).
+    pub lease_grants: AtomicU64,
+    /// Dirfd-relative requests rejected for a stale lease epoch.
+    pub stale_leases: AtomicU64,
 }
 
 pub struct BServer {
@@ -64,6 +68,10 @@ pub struct BServer {
     peers: RwLock<HashMap<HostId, SharedTransport>>,
     /// client → push endpoint for invalidations.
     pushers: RwLock<HashMap<ClientId, Arc<dyn NotifyPush>>>,
+    /// Per-directory permission-lease epochs (handle API): bumped by
+    /// `chmod`/`chown`/`rename` so outstanding [`LeaseStamp`]s go stale
+    /// and relative ops force a re-resolve. Absent = epoch 0.
+    lease_epochs: RwLock<HashMap<FileId, u64>>,
     seq: AtomicU64,
     placement: Placement,
     pub stats: ServerStats,
@@ -82,6 +90,7 @@ impl BServer {
             locks: FileLocks::new(),
             peers: RwLock::new(HashMap::new()),
             pushers: RwLock::new(HashMap::new()),
+            lease_epochs: RwLock::new(HashMap::new()),
             seq: AtomicU64::new(1),
             placement,
             stats: ServerStats::default(),
@@ -119,6 +128,49 @@ impl BServer {
 
     pub fn clients_caching(&self, dir: FileId) -> Vec<ClientId> {
         self.registry.peek(dir)
+    }
+
+    /// Current permission-lease epoch of a directory (0 until first bump).
+    pub fn lease_epoch(&self, file: FileId) -> u64 {
+        self.lease_epochs.read().unwrap().get(&file).copied().unwrap_or(0)
+    }
+
+    /// Revoke every outstanding lease on `file`: stamps carrying the old
+    /// epoch are rejected with `StaleLease` from here on.
+    fn bump_lease(&self, file: FileId) {
+        *self.lease_epochs.write().unwrap().entry(file).or_insert(0) += 1;
+    }
+
+    /// Exclusive locks a permission change must hold across its
+    /// invalidate-then-apply sequence: the (local) parent directory, and
+    /// the target itself when it is a directory. Acquired in ascending
+    /// FileId order — the same canonical order Rename uses — so the
+    /// two-lock holders can never deadlock each other.
+    fn perm_change_locks(&self, file: FileId, is_dir: bool) -> FsResult<Vec<locks::LockGuard>> {
+        let mut ids: Vec<FileId> = Vec::with_capacity(2);
+        if let Some((p, _)) = self.fs.parent_of(file)? {
+            if p.host == self.fs.host {
+                ids.push(p.file);
+            }
+        }
+        if is_dir {
+            ids.push(file);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        Ok(ids.into_iter().map(|f| self.locks.write(f)).collect())
+    }
+
+    /// Validate a dirfd-relative request's lease stamp. A bumped epoch
+    /// means some permission-relevant change happened since the client
+    /// resolved the handle — it must re-resolve and retry.
+    fn check_lease(&self, stamp: &LeaseStamp) -> FsResult<FileId> {
+        let file = self.fs.validate(stamp.node)?;
+        if self.lease_epoch(file) != stamp.epoch {
+            self.stats.stale_leases.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::StaleLease);
+        }
+        Ok(file)
     }
 
     fn peer(&self, host: HostId) -> FsResult<SharedTransport> {
@@ -163,7 +215,12 @@ impl BServer {
         let parent = self.fs.parent_of(file)?;
         match &parent {
             None => {}
-            Some((p, _name)) if p.host == self.fs.host => self.invalidate_barrier(p.file),
+            Some((p, _name)) if p.host == self.fs.host => {
+                // the parent's cached listing (and any lease on it) now
+                // carries a perm blob about to go stale
+                self.bump_lease(p.file);
+                self.invalidate_barrier(p.file)
+            }
             Some((p, _name)) => {
                 // parent dirent lives on another server: delegate the barrier
                 self.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
@@ -397,10 +454,18 @@ impl BServer {
                 if s != d {
                     self.require_dir_access(d, &cred, AccessMask(W_OK | X_OK))?;
                 }
-                let _gs = self.locks.write(s);
-                let _gd = if s != d { Some(self.locks.write(d)) } else { None };
+                // canonical (ascending FileId) acquisition order: every
+                // multi-lock holder (rename, chmod/chown of a directory)
+                // sorts, so no ABBA deadlock is possible between them
+                let (first, second) = if s <= d { (s, d) } else { (d, s) };
+                let _g1 = self.locks.write(first);
+                let _g2 = if first != second { Some(self.locks.write(second)) } else { None };
+                // rename changes what names resolve under both dirs:
+                // revoke outstanding leases before applying (§revocation)
+                self.bump_lease(s);
                 self.invalidate_barrier(s);
                 if s != d {
+                    self.bump_lease(d);
                     self.invalidate_barrier(d);
                 }
                 let entry = self.fs.rename(s, sname.as_str(), d, dname.as_str())?;
@@ -409,16 +474,18 @@ impl BServer {
             Request::Chmod { ino, mode, cred } => {
                 let file = self.fs.validate(ino)?;
                 self.require_owner(file, &cred)?;
-                // lock the (local) parent dir across invalidate+apply
-                let _g = match self.fs.parent_of(file)? {
-                    Some((p, _)) if p.host == self.fs.host => Some(self.locks.write(p.file)),
-                    _ => None,
-                };
+                // lock the (local) parent dir across invalidate+apply —
+                // and the target itself when it is a directory, so a
+                // concurrent Lease/ReadDir of it cannot pair the OLD
+                // perm blob with the NEW lease epoch (lost revocation)
+                let is_dir = self.fs.getattr(file)?.kind == FileKind::Directory;
+                let _guards = self.perm_change_locks(file, is_dir)?;
                 // §3.4: invalidate every caching client *first*, then apply
                 let parent = self.invalidate_parent_of(file)?;
                 // if the target is itself a cached directory, its node
-                // carries perms too
-                if self.fs.getattr(file)?.kind == FileKind::Directory {
+                // carries perms too — and every lease on it is revoked
+                if is_dir {
+                    self.bump_lease(file);
                     self.invalidate_barrier(file);
                 }
                 let (perm_blob, _) = self.fs.chmod_apply(file, mode)?;
@@ -430,12 +497,11 @@ impl BServer {
                 if cred.uid != 0 {
                     return Err(FsError::PermissionDenied);
                 }
-                let _g = match self.fs.parent_of(file)? {
-                    Some((p, _)) if p.host == self.fs.host => Some(self.locks.write(p.file)),
-                    _ => None,
-                };
+                let is_dir = self.fs.getattr(file)?.kind == FileKind::Directory;
+                let _guards = self.perm_change_locks(file, is_dir)?;
                 let parent = self.invalidate_parent_of(file)?;
-                if self.fs.getattr(file)?.kind == FileKind::Directory {
+                if is_dir {
+                    self.bump_lease(file);
                     self.invalidate_barrier(file);
                 }
                 let (perm_blob, _) = self.fs.chown_apply(file, uid, gid)?;
@@ -460,6 +526,9 @@ impl BServer {
             Request::PrepareInvalidate { dir } => {
                 let dir_file = self.fs.validate(dir)?;
                 let _g = self.locks.write(dir_file);
+                // a peer is about to change a perm blob hanging off this
+                // directory: leases on it go stale with the listing
+                self.bump_lease(dir_file);
                 self.invalidate_barrier(dir_file);
                 Ok(Response::Unit)
             }
@@ -531,6 +600,99 @@ impl BServer {
                     cur = self.fs.validate(entry.ino)?;
                 }
                 Ok(Response::Walked { dirs, walked, next })
+            }
+            Request::Lease { node, client, cred } => {
+                // Grant/refresh a directory permission lease (handle
+                // API). X is the capability a dirfd confers — a cred
+                // that may not traverse the directory gets no handle.
+                let file = self.fs.validate(node)?;
+                // shared dir lock: the (attr, epoch, registration) triple
+                // must be atomic vs a concurrent invalidate-then-apply,
+                // same discipline as ReadDir
+                let _g = self.locks.read(file);
+                let attr = self.fs.getattr(file)?;
+                if attr.kind != FileKind::Directory {
+                    return Err(FsError::NotADirectory);
+                }
+                perm::require_access(&attr.perm, &cred, AccessMask::EXEC)?;
+                // register for §3.4 pushes so the client hears about the
+                // next revocation even if it never listed the directory
+                self.registry.register(file, client);
+                self.stats.lease_grants.fetch_add(1, Ordering::Relaxed);
+                Ok(Response::Leased { attr, epoch: self.lease_epoch(file) })
+            }
+            Request::OpenAt { lease, name, flags, cred, client, handle } => {
+                // Relative open fallback (X-only dirs): the open record
+                // is written eagerly here, not deferred.
+                let dir_file = self.check_lease(&lease)?;
+                self.require_dir_access(dir_file, &cred, AccessMask::EXEC)?;
+                let entry = self.fs.lookup(dir_file, &name)?;
+                if entry.ino.host != self.fs.host {
+                    // spread placement: the object lives on a peer
+                    self.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+                    return self.peer(entry.ino.host)?.call(Request::Open {
+                        ino: entry.ino,
+                        flags,
+                        cred,
+                        client,
+                        handle,
+                        want_inline: false,
+                    });
+                }
+                self.handle_inner(Request::Open {
+                    ino: entry.ino,
+                    flags,
+                    cred,
+                    client,
+                    handle,
+                    want_inline: false,
+                })
+            }
+            Request::StatAt { lease, name, cred } => {
+                let dir_file = self.check_lease(&lease)?;
+                self.require_dir_access(dir_file, &cred, AccessMask::EXEC)?;
+                let entry = self.fs.lookup(dir_file, &name)?;
+                if entry.ino.host != self.fs.host {
+                    self.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+                    return self.peer(entry.ino.host)?.call(Request::GetAttr { ino: entry.ino });
+                }
+                Ok(Response::AttrR(self.fs.getattr(entry.ino.file)?))
+            }
+            Request::ReadDirAt { lease, client, register, cred } => {
+                let node = lease.node;
+                self.check_lease(&lease)?;
+                self.handle_inner(Request::ReadDir { dir: node, client, register, cred })
+            }
+            Request::CreateAt { lease, name, mode, kind, cred, client } => {
+                let node = lease.node;
+                self.check_lease(&lease)?;
+                self.handle_inner(Request::Create { dir: node, name, mode, kind, cred, client })
+            }
+            Request::MkdirAt { lease, name, mode, cred } => {
+                let node = lease.node;
+                self.check_lease(&lease)?;
+                self.handle_inner(Request::Mkdir { dir: node, name, mode, cred })
+            }
+            Request::UnlinkAt { lease, name, cred } => {
+                let node = lease.node;
+                self.check_lease(&lease)?;
+                self.handle_inner(Request::Unlink { dir: node, name, cred })
+            }
+            Request::RmdirAt { lease, name, cred } => {
+                let node = lease.node;
+                self.check_lease(&lease)?;
+                self.handle_inner(Request::Rmdir { dir: node, name, cred })
+            }
+            Request::RenameAt { src, sname, dst, dname, cred } => {
+                self.check_lease(&src)?;
+                self.check_lease(&dst)?;
+                self.handle_inner(Request::Rename {
+                    sdir: src.node,
+                    sname,
+                    ddir: dst.node,
+                    dname,
+                    cred,
+                })
             }
         }
     }
@@ -858,6 +1020,124 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn lease_grant_validate_and_revoke() {
+        let s = server();
+        let d = match s.handle(Request::Mkdir {
+            dir: root(),
+            name: "d".into(),
+            mode: 0o755,
+            cred: cred(),
+        }) {
+            Response::Created(e) => e,
+            other => panic!("{other:?}"),
+        };
+        s.handle(Request::Create {
+            dir: d.ino,
+            name: "f".into(),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: cred(),
+            client: 1,
+        });
+        // grant: epoch starts at 0, client registered for pushes
+        let epoch0 = match s.handle(Request::Lease { node: d.ino, client: 9, cred: cred() }) {
+            Response::Leased { attr, epoch } => {
+                assert_eq!(attr.ino, d.ino);
+                epoch
+            }
+            other => panic!("lease: {other:?}"),
+        };
+        assert_eq!(epoch0, 0);
+        assert_eq!(s.clients_caching(d.ino.file), vec![9]);
+        assert_eq!(s.stats.lease_grants.load(Ordering::Relaxed), 1);
+        // a stamped relative op with the granted epoch works
+        let stamp = LeaseStamp { node: d.ino, epoch: epoch0 };
+        match s.handle(Request::StatAt { lease: stamp, name: "f".into(), cred: cred() }) {
+            Response::AttrR(a) => assert_eq!(a.perm.mode.0, 0o644),
+            other => panic!("statat: {other:?}"),
+        }
+        // chmod of the directory bumps its lease epoch: old stamps die
+        s.handle(Request::Chmod { ino: d.ino, mode: 0o700, cred: cred() });
+        assert_eq!(
+            s.handle(Request::StatAt { lease: stamp, name: "f".into(), cred: cred() }),
+            Response::Err(FsError::StaleLease)
+        );
+        assert!(s.stats.stale_leases.load(Ordering::Relaxed) >= 1);
+        // a fresh grant carries the bumped epoch and works again
+        let epoch1 = match s.handle(Request::Lease { node: d.ino, client: 9, cred: cred() }) {
+            Response::Leased { epoch, .. } => epoch,
+            other => panic!("{other:?}"),
+        };
+        assert!(epoch1 > epoch0);
+        let stamp = LeaseStamp { node: d.ino, epoch: epoch1 };
+        assert!(matches!(
+            s.handle(Request::StatAt { lease: stamp, name: "f".into(), cred: cred() }),
+            Response::AttrR(_)
+        ));
+        // leasing a regular file is refused; leasing without X is refused
+        let f = match s.handle(Request::Lookup { dir: d.ino, name: "f".into(), cred: cred() }) {
+            Response::Entry(e) => e,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(
+            s.handle(Request::Lease { node: f.ino, client: 9, cred: cred() }),
+            Response::Err(FsError::NotADirectory)
+        );
+        assert_eq!(
+            s.handle(Request::Lease { node: d.ino, client: 9, cred: Credentials::new(5, 5) }),
+            Response::Err(FsError::PermissionDenied),
+            "0o700 dir: stranger gets no lease"
+        );
+    }
+
+    #[test]
+    fn rename_at_bumps_both_lease_epochs() {
+        let s = server();
+        let mkdir = |name: &str| match s.handle(Request::Mkdir {
+            dir: root(),
+            name: name.into(),
+            mode: 0o755,
+            cred: cred(),
+        }) {
+            Response::Created(e) => e,
+            other => panic!("{other:?}"),
+        };
+        let a = mkdir("a");
+        let b = mkdir("b");
+        create(&s, "x", 0o644); // in root — move it a → b instead
+        s.handle(Request::Rename {
+            sdir: root(),
+            sname: "x".into(),
+            ddir: a.ino,
+            dname: "x".into(),
+            cred: cred(),
+        });
+        let ea = s.lease_epoch(a.ino.file);
+        let eb = s.lease_epoch(b.ino.file);
+        // relative rename with current stamps succeeds…
+        let r = s.handle(Request::RenameAt {
+            src: LeaseStamp { node: a.ino, epoch: ea },
+            sname: "x".into(),
+            dst: LeaseStamp { node: b.ino, epoch: eb },
+            dname: "y".into(),
+            cred: cred(),
+        });
+        assert!(matches!(r, Response::Created(_)), "{r:?}");
+        // …and revokes both directories' leases
+        assert_eq!(s.lease_epoch(a.ino.file), ea + 1);
+        assert_eq!(s.lease_epoch(b.ino.file), eb + 1);
+        // replaying the old stamp is now a stale lease
+        let r = s.handle(Request::RenameAt {
+            src: LeaseStamp { node: a.ino, epoch: ea },
+            sname: "y".into(),
+            dst: LeaseStamp { node: b.ino, epoch: eb },
+            dname: "z".into(),
+            cred: cred(),
+        });
+        assert_eq!(r, Response::Err(FsError::StaleLease));
     }
 
     #[test]

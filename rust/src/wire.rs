@@ -28,6 +28,18 @@ pub struct OpenCtx {
     pub cred: Credentials,
 }
 
+/// A directory permission lease, stamped onto every dirfd-relative
+/// request (the handle-first client API): the handle's node plus the
+/// server lease epoch observed when the lease was granted. The server
+/// rejects a mismatching epoch with [`crate::error::FsError::StaleLease`]
+/// so the client re-resolves the handle and retries once; revocation
+/// (`chmod`/`chown`/`rename`) bumps the epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeaseStamp {
+    pub node: Ino,
+    pub epoch: u64,
+}
+
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Request {
     /// Resolve one name in a directory (baseline path walk).
@@ -83,6 +95,31 @@ pub enum Request {
     /// (the returned listing is the client's authoritative local ENOENT),
     /// at a non-directory, or at a directory the cred cannot read.
     ResolvePath { base: Ino, components: Vec<String>, client: ClientId, register: bool, cred: Credentials },
+    /// Grant/refresh a directory permission lease (handle API): the
+    /// reply carries the directory's attr plus the server's current
+    /// lease epoch, and the client is registered for §3.4 invalidation
+    /// pushes on the directory. Requires X (traversal capability).
+    Lease { node: Ino, client: ClientId, cred: Credentials },
+    /// Dirfd-relative open — the handle API's remote fallback (e.g. an
+    /// X-only directory whose listing the cred may not READ). The open
+    /// record is written eagerly (not deferred), under `handle`.
+    OpenAt { lease: LeaseStamp, name: String, flags: OpenFlags, cred: Credentials, client: ClientId, handle: u64 },
+    /// Dirfd-relative stat: lookup `name` under the leased directory and
+    /// return its attr (forwarded to the owning peer for remote objects).
+    StatAt { lease: LeaseStamp, name: String, cred: Credentials },
+    /// Dirfd-relative ReadDir of the leased directory itself.
+    ReadDirAt { lease: LeaseStamp, client: ClientId, register: bool, cred: Credentials },
+    /// Dirfd-relative create.
+    CreateAt { lease: LeaseStamp, name: String, mode: u16, kind: FileKind, cred: Credentials, client: ClientId },
+    /// Dirfd-relative mkdir.
+    MkdirAt { lease: LeaseStamp, name: String, mode: u16, cred: Credentials },
+    /// Dirfd-relative unlink.
+    UnlinkAt { lease: LeaseStamp, name: String, cred: Credentials },
+    /// Dirfd-relative rmdir.
+    RmdirAt { lease: LeaseStamp, name: String, cred: Credentials },
+    /// Dirfd-relative rename between two leased directories (both must
+    /// live on this server). Applying it bumps BOTH lease epochs.
+    RenameAt { src: LeaseStamp, sname: String, dst: LeaseStamp, dname: String, cred: Credentials },
 }
 
 /// One directory listing returned by a [`Request::ResolvePath`] walk:
@@ -113,6 +150,9 @@ pub enum Response {
     /// `next` = the directory to continue from when the walk crossed a
     /// server boundary in the decentralized namespace.
     Walked { dirs: Vec<WalkedDir>, walked: u32, next: Option<Ino> },
+    /// Reply to [`Request::Lease`]: the directory's attr plus the
+    /// server's current lease epoch for it.
+    Leased { attr: Attr, epoch: u64 },
 }
 
 /// Server→client push messages (the §3.4 consistency protocol).
@@ -158,6 +198,15 @@ impl Request {
             Request::DropObject { .. } => "unlink",
             Request::OpenByName { .. } => "open",
             Request::ResolvePath { .. } => "resolve",
+            Request::Lease { .. } => "lease",
+            Request::OpenAt { .. } => "open",
+            Request::StatAt { .. } => "getattr",
+            Request::ReadDirAt { .. } => "readdir",
+            Request::CreateAt { .. } => "create",
+            Request::MkdirAt { .. } => "mkdir",
+            Request::UnlinkAt { .. } => "unlink",
+            Request::RmdirAt { .. } => "rmdir",
+            Request::RenameAt { .. } => "rename",
         }
     }
 
@@ -249,6 +298,16 @@ macro_rules! tagged {
     ($e:expr, $tag:expr) => {{
         $e.u8($tag);
     }};
+}
+
+impl Wire for LeaseStamp {
+    fn enc(&self, e: &mut Enc) {
+        self.node.enc(e);
+        e.u64(self.epoch);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(LeaseStamp { node: Ino::dec(d)?, epoch: d.u64()? })
+    }
 }
 
 impl Wire for Request {
@@ -404,6 +463,70 @@ impl Wire for Request {
                 e.bool(*register);
                 cred.enc(e);
             }
+            Request::Lease { node, client, cred } => {
+                tagged!(e, 23);
+                node.enc(e);
+                e.u32(*client);
+                cred.enc(e);
+            }
+            Request::OpenAt { lease, name, flags, cred, client, handle } => {
+                tagged!(e, 24);
+                lease.enc(e);
+                e.str(name);
+                flags.enc(e);
+                cred.enc(e);
+                e.u32(*client);
+                e.u64(*handle);
+            }
+            Request::StatAt { lease, name, cred } => {
+                tagged!(e, 25);
+                lease.enc(e);
+                e.str(name);
+                cred.enc(e);
+            }
+            Request::ReadDirAt { lease, client, register, cred } => {
+                tagged!(e, 26);
+                lease.enc(e);
+                e.u32(*client);
+                e.bool(*register);
+                cred.enc(e);
+            }
+            Request::CreateAt { lease, name, mode, kind, cred, client } => {
+                tagged!(e, 27);
+                lease.enc(e);
+                e.str(name);
+                e.u16(*mode);
+                kind.enc(e);
+                cred.enc(e);
+                e.u32(*client);
+            }
+            Request::MkdirAt { lease, name, mode, cred } => {
+                tagged!(e, 28);
+                lease.enc(e);
+                e.str(name);
+                e.u16(*mode);
+                cred.enc(e);
+            }
+            Request::UnlinkAt { lease, name, cred } => {
+                tagged!(e, 29);
+                lease.enc(e);
+                e.str(name);
+                cred.enc(e);
+            }
+            Request::RmdirAt { lease, name, cred } => {
+                tagged!(e, 30);
+                lease.enc(e);
+                e.str(name);
+                cred.enc(e);
+            }
+            Request::RenameAt { src, sname, dst, dname, cred } => {
+                tagged!(e, 31);
+                src.enc(e);
+                e.str(sname);
+                dst.enc(e);
+                e.str(dname);
+                cred.enc(e);
+            }
         }
     }
 
@@ -492,6 +615,45 @@ impl Wire for Request {
                 register: d.bool()?,
                 cred: Credentials::dec(d)?,
             },
+            23 => Request::Lease { node: Ino::dec(d)?, client: d.u32()?, cred: Credentials::dec(d)? },
+            24 => Request::OpenAt {
+                lease: LeaseStamp::dec(d)?,
+                name: d.str()?,
+                flags: OpenFlags::dec(d)?,
+                cred: Credentials::dec(d)?,
+                client: d.u32()?,
+                handle: d.u64()?,
+            },
+            25 => Request::StatAt { lease: LeaseStamp::dec(d)?, name: d.str()?, cred: Credentials::dec(d)? },
+            26 => Request::ReadDirAt {
+                lease: LeaseStamp::dec(d)?,
+                client: d.u32()?,
+                register: d.bool()?,
+                cred: Credentials::dec(d)?,
+            },
+            27 => Request::CreateAt {
+                lease: LeaseStamp::dec(d)?,
+                name: d.str()?,
+                mode: d.u16()?,
+                kind: FileKind::dec(d)?,
+                cred: Credentials::dec(d)?,
+                client: d.u32()?,
+            },
+            28 => Request::MkdirAt {
+                lease: LeaseStamp::dec(d)?,
+                name: d.str()?,
+                mode: d.u16()?,
+                cred: Credentials::dec(d)?,
+            },
+            29 => Request::UnlinkAt { lease: LeaseStamp::dec(d)?, name: d.str()?, cred: Credentials::dec(d)? },
+            30 => Request::RmdirAt { lease: LeaseStamp::dec(d)?, name: d.str()?, cred: Credentials::dec(d)? },
+            31 => Request::RenameAt {
+                src: LeaseStamp::dec(d)?,
+                sname: d.str()?,
+                dst: LeaseStamp::dec(d)?,
+                dname: d.str()?,
+                cred: Credentials::dec(d)?,
+            },
             t => return Err(FsError::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -557,6 +719,11 @@ impl Wire for Response {
                 e.u32(*walked);
                 next.enc(e);
             }
+            Response::Leased { attr, epoch } => {
+                tagged!(e, 11);
+                attr.enc(e);
+                e.u64(*epoch);
+            }
         }
     }
 
@@ -590,6 +757,7 @@ impl Wire for Response {
                 walked: d.u32()?,
                 next: Option::<Ino>::dec(d)?,
             },
+            11 => Response::Leased { attr: Attr::dec(d)?, epoch: d.u64()? },
             t => return Err(FsError::Protocol(format!("bad response tag {t}"))),
         })
     }
@@ -677,6 +845,57 @@ mod tests {
                 cred: cred(),
             },
             Request::ResolvePath { base: ino, components: vec![], client: 3, register: false, cred: cred() },
+            Request::Lease { node: ino, client: 3, cred: cred() },
+            Request::OpenAt {
+                lease: LeaseStamp { node: ino, epoch: 4 },
+                name: "f".into(),
+                flags: OpenFlags::RDONLY,
+                cred: cred(),
+                client: 3,
+                handle: 11,
+            },
+            Request::StatAt {
+                lease: LeaseStamp { node: ino, epoch: 0 },
+                name: "f".into(),
+                cred: cred(),
+            },
+            Request::ReadDirAt {
+                lease: LeaseStamp { node: ino, epoch: 9 },
+                client: 3,
+                register: true,
+                cred: cred(),
+            },
+            Request::CreateAt {
+                lease: LeaseStamp { node: ino, epoch: 1 },
+                name: "n".into(),
+                mode: 0o644,
+                kind: FileKind::Regular,
+                cred: cred(),
+                client: 3,
+            },
+            Request::MkdirAt {
+                lease: LeaseStamp { node: ino, epoch: 2 },
+                name: "d".into(),
+                mode: 0o755,
+                cred: cred(),
+            },
+            Request::UnlinkAt {
+                lease: LeaseStamp { node: ino, epoch: 3 },
+                name: "f".into(),
+                cred: cred(),
+            },
+            Request::RmdirAt {
+                lease: LeaseStamp { node: ino, epoch: 3 },
+                name: "d".into(),
+                cred: cred(),
+            },
+            Request::RenameAt {
+                src: LeaseStamp { node: ino, epoch: 5 },
+                sname: "x".into(),
+                dst: LeaseStamp { node: Ino::new(1, 0, 7), epoch: 6 },
+                dname: "y".into(),
+                cred: cred(),
+            },
         ]
     }
 
@@ -719,6 +938,8 @@ mod tests {
                 next: Some(Ino::new(2, 0, 9)),
             },
             Response::Walked { dirs: vec![], walked: 0, next: None },
+            Response::Leased { attr: attr.clone(), epoch: 42 },
+            Response::Err(FsError::StaleLease),
         ]
     }
 

@@ -1,0 +1,250 @@
+//! Handle-first client API acceptance: `Dir`/`File` capability handles
+//! with openat-style relative ops and permission leases.
+//!
+//! * warm same-directory sibling opens via `Dir::open_file` perform
+//!   ZERO resolve RPCs (in fact zero RPCs at all);
+//! * a post-`chmod` stale lease triggers exactly ONE re-resolve retry
+//!   (observable in the per-op metrics);
+//! * `rename` of an open `Dir`'s ancestor keeps relative ops correct
+//!   (handles address the namespace by node, not by path).
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use buffetfs::api::Client;
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::error::FsError;
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::{Credentials, OpenFlags};
+
+fn fast_cluster() -> BuffetCluster {
+    BuffetCluster::spawn_with(
+        1,
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 11 },
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    )
+}
+
+fn quiesce(metrics: &buffetfs::metrics::RpcMetrics) {
+    let mut last = metrics.total_rpcs();
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(5));
+        let now = metrics.total_rpcs();
+        if now == last {
+            return;
+        }
+        last = now;
+    }
+}
+
+#[test]
+fn warm_sibling_opens_cost_zero_resolve_rpcs() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Client::new(agent.clone(), Credentials::root());
+    let root = admin.root().unwrap();
+    let pool = root.mkdir("pool", 0o777).unwrap();
+
+    let user = Client::new(agent.clone(), Credentials::new(1000, 1000));
+    let upool = user.root().unwrap().open_dir("pool").unwrap();
+    for i in 0..16 {
+        upool.create(&format!("f{i}"), 0o644).unwrap().close().unwrap();
+    }
+    let _ = upool.readdir().unwrap(); // warm + register the listing once
+    quiesce(&metrics);
+
+    let resolves = metrics.count("resolve");
+    let total = metrics.total_rpcs();
+    let hits_before = metrics.lease_hits("open");
+    for i in 0..16 {
+        let f = upool.open_file(&format!("f{i}"), OpenFlags::RDONLY).unwrap();
+        f.close().unwrap();
+    }
+    assert_eq!(
+        metrics.count("resolve"),
+        resolves,
+        "warm sibling opens must issue ZERO resolve RPCs"
+    );
+    assert_eq!(metrics.total_rpcs(), total, "…in fact zero RPCs of any kind");
+    assert!(
+        metrics.lease_hits("open") >= hits_before + 16,
+        "every relative open served under the lease"
+    );
+    assert_eq!(metrics.stale_retries("open"), 0, "nothing was revoked");
+    assert!(agent.stats.rpc_free_opens.load(Ordering::Relaxed) >= 16);
+}
+
+#[test]
+fn chmod_on_ancestor_triggers_exactly_one_stale_retry() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Client::new(agent.clone(), Credentials::root());
+    let root = admin.root().unwrap();
+    let a = root.mkdir("a", 0o755).unwrap();
+    let b = a.mkdir("b", 0o777).unwrap();
+    b.create("f", 0o644).unwrap().close().unwrap();
+    let _ = b.readdir().unwrap(); // warm + register b's listing
+    // warm open once so the steady state is established
+    b.open_file("f", OpenFlags::RDONLY).unwrap().close().unwrap();
+    quiesce(&metrics);
+
+    // chmod of the ANCESTOR /a: pushes §3.4 invalidations at this agent,
+    // making every handle's client-side lease conservatively stale
+    let legacy = Buffet::process(agent.clone(), Credentials::root());
+    legacy.chmod("/a", 0o751).unwrap();
+    quiesce(&metrics);
+
+    let stale_before = metrics.stale_retries("open");
+    let resolves = metrics.count("resolve");
+    let leases = metrics.count("lease");
+    let f = b.open_file("f", OpenFlags::RDONLY).unwrap();
+    f.close().unwrap();
+    assert_eq!(
+        metrics.stale_retries("open"),
+        stale_before + 1,
+        "the post-chmod open must pay exactly one stale-lease retry"
+    );
+    assert_eq!(
+        metrics.count("lease"),
+        leases + 1,
+        "the re-resolve is ONE Lease RPC (not a root walk)"
+    );
+    assert_eq!(metrics.count("resolve"), resolves, "no ResolvePath issued");
+    assert!(agent.stats.stale_lease_retries.load(Ordering::Relaxed) <= 1);
+
+    // steady state restored: the next sibling open is free again
+    let total = metrics.total_rpcs();
+    b.open_file("f", OpenFlags::RDONLY).unwrap().close().unwrap();
+    assert_eq!(metrics.total_rpcs(), total, "one retry, then back to zero-RPC opens");
+}
+
+#[test]
+fn rename_of_open_dirs_ancestor_keeps_relative_ops_correct() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Client::new(agent.clone(), Credentials::root());
+    let root = admin.root().unwrap();
+    let a = root.mkdir("a", 0o755).unwrap();
+    let b = a.mkdir("b", 0o755).unwrap();
+    let f = b.create("f", 0o644).unwrap();
+    f.write_at(0, b"payload").unwrap();
+    f.close().unwrap();
+    quiesce(&metrics);
+
+    // rename the ANCESTOR /a → /a2 while the b handle stays open
+    let legacy = Buffet::process(agent.clone(), Credentials::root());
+    legacy.rename("/a", "/a2").unwrap();
+    quiesce(&metrics);
+
+    // the b handle addresses its node, not its path: relative ops work
+    let f = b.open_file("f", OpenFlags::RDONLY).unwrap();
+    assert_eq!(f.read_at(0, 16).unwrap(), b"payload");
+    f.close().unwrap();
+    b.create("g", 0o644).unwrap().close().unwrap();
+    assert_eq!(b.stat("g").unwrap().perm.mode.0, 0o644);
+
+    // and the new path resolves to the same content through the legacy API
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    assert_eq!(p.get("/a2/b/f", 16).unwrap(), b"payload");
+    assert_eq!(p.open("/a/b/f", OpenFlags::RDONLY).unwrap_err(), FsError::NotFound);
+}
+
+#[test]
+fn chmod_of_the_dir_itself_revokes_the_capability() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Client::new(agent.clone(), Credentials::root());
+    let root = admin.root().unwrap();
+    let private = root.mkdir("private", 0o755).unwrap();
+    private.create("f", 0o644).unwrap().close().unwrap();
+
+    let user = Client::new(agent.clone(), Credentials::new(700, 700));
+    let upriv = user.root().unwrap().open_dir("private").unwrap();
+    upriv.open_file("f", OpenFlags::RDONLY).unwrap().close().unwrap();
+    quiesce(&metrics);
+
+    // revoke world-X on the directory: the capability must die at the
+    // next lease validation — the server refuses the re-grant
+    let legacy = Buffet::process(agent.clone(), Credentials::root());
+    legacy.chmod("/private", 0o700).unwrap();
+    quiesce(&metrics);
+    assert_eq!(
+        upriv.open_file("f", OpenFlags::RDONLY).unwrap_err(),
+        FsError::PermissionDenied,
+        "revoked dir: the stale lease may not be refreshed"
+    );
+    // loosening restores it (the §3.4 push re-invalidates, re-grant works)
+    legacy.chmod("/private", 0o755).unwrap();
+    quiesce(&metrics);
+    let f = upriv.open_file("f", OpenFlags::RDONLY).unwrap();
+    f.close().unwrap();
+}
+
+#[test]
+fn handle_api_full_namespace_cycle() {
+    let cluster = fast_cluster();
+    let (agent, _metrics) = cluster.make_agent();
+    let admin = Client::new(agent.clone(), Credentials::root());
+    let root = admin.root().unwrap();
+    let work = root.mkdir("work", 0o755).unwrap();
+
+    // create + write + read through File handles
+    let f = work.create("data.bin", 0o644).unwrap();
+    assert_eq!(f.write_at(0, b"hello handles").unwrap(), 13);
+    assert_eq!(f.read_at(6, 7).unwrap(), b"handles");
+    f.truncate(5).unwrap();
+    f.close().unwrap();
+    assert_eq!(work.stat("data.bin").unwrap().size, 5);
+
+    // readdir sees it; rename_into moves it between handles
+    let names: Vec<String> = work.readdir().unwrap().into_iter().map(|e| e.name).collect();
+    assert_eq!(names, vec!["data.bin".to_string()]);
+    let archive = root.mkdir("archive", 0o755).unwrap();
+    work.rename_into("data.bin", &archive, "data.old").unwrap();
+    assert_eq!(work.readdir().unwrap().len(), 0);
+    let f = archive.open_file("data.old", OpenFlags::RDONLY).unwrap();
+    assert_eq!(f.read_at(0, 16).unwrap(), b"hello");
+    f.close().unwrap();
+
+    // unlink + rmdir complete the cycle
+    archive.unlink("data.old").unwrap();
+    assert_eq!(archive.stat("data.old").unwrap_err(), FsError::NotFound);
+    root.rmdir("archive").unwrap();
+    root.rmdir("work").unwrap();
+    assert_eq!(root.open_dir("work").unwrap_err(), FsError::NotFound);
+
+    // O_CREAT through open_file works relative too
+    let scratch = root.mkdir("scratch", 0o777).unwrap();
+    let user = Client::new(agent, Credentials::new(9, 9));
+    let uscratch = user.root().unwrap().open_dir("scratch").unwrap();
+    let f = uscratch.open_file("new.txt", OpenFlags::RDWR.with_create()).unwrap();
+    f.write_at(0, b"x").unwrap();
+    f.close().unwrap();
+    assert_eq!(uscratch.stat("new.txt").unwrap().size, 1);
+}
+
+#[test]
+fn x_only_dir_falls_back_to_relative_openat() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Client::new(agent.clone(), Credentials::root());
+    let root = admin.root().unwrap();
+    let vault = root.mkdir("vault", 0o711).unwrap(); // others: x only
+    let f = vault.create("known", 0o644).unwrap();
+    f.write_at(0, b"k").unwrap();
+    f.close().unwrap();
+    quiesce(&metrics);
+
+    let user = Client::new(agent.clone(), Credentials::new(55, 55));
+    let uvault = user.root().unwrap().open_dir("vault").unwrap();
+    // cannot list…
+    assert_eq!(uvault.readdir().unwrap_err(), FsError::PermissionDenied);
+    // …but can open a known name through the capability (OpenAt RPC)
+    let f = uvault.open_file("known", OpenFlags::RDONLY).unwrap();
+    assert_eq!(f.read_at(0, 4).unwrap(), b"k");
+    f.close().unwrap();
+}
