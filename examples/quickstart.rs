@@ -7,10 +7,15 @@
 //! network, and a `chmod` revokes outstanding leases with exactly one
 //! re-resolve on the next use.
 //!
+//! The finale turns on the **client data plane** (DESIGN.md §7):
+//! buffered writes flushed by one `fsync`, small-file contents riding
+//! the open reply, and page-cache reads that never touch the network.
+//!
 //! Run: `cargo run --release --example quickstart`
 
 use buffetfs::api::Client;
 use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::datapath::DatapathConfig;
 use buffetfs::simnet::NetConfig;
 use buffetfs::types::{Credentials, OpenFlags};
 
@@ -82,6 +87,45 @@ fn main() {
         metrics.total_lease_hits(),
         metrics.total_stale_retries()
     );
+
+    // ---- the client data plane: write-back, inline opens, page cache ------
+    agent.enable_datapath(DatapathConfig::default());
+    let f = udata.create("cached.bin", 0o644).unwrap();
+    let rpcs = metrics.sync_rpcs();
+    for i in 0..8u64 {
+        f.write_at(i * 256, &[i as u8; 256]).unwrap(); // buffered, no RPC
+    }
+    println!(
+        "\n8 buffered write_at() calls -> {} sync RPCs (write-back)",
+        metrics.sync_rpcs() - rpcs
+    );
+    f.fsync().unwrap(); // ONE coalesced WriteBatch flush
+    println!(
+        "fsync()     -> {} sync RPC [flushed {} writes as {} extent(s)]",
+        metrics.sync_rpcs() - rpcs,
+        metrics.wb_writes(),
+        metrics.wb_flush_segs()
+    );
+    let cached_ino = f.ino();
+    f.close().unwrap();
+    // drop our local view so the next access behaves like a cold client
+    agent.datapath().invalidate(cached_ino);
+
+    let rpcs = metrics.count("read") + metrics.count("write");
+    let f = udata.open_file("cached.bin", OpenFlags::RDONLY).unwrap();
+    let first = f.read_at(0, 2048).unwrap();
+    println!(
+        "open+read   -> {} bytes, {} data RPCs [the contents rode the open reply]",
+        first.len(),
+        metrics.count("read") + metrics.count("write") - rpcs
+    );
+    let again = f.read_at(0, 2048).unwrap();
+    assert_eq!(first, again);
+    println!(
+        "re-read     -> page-cache hit ({} pages hit so far, 0 RPCs)",
+        metrics.page_hits()
+    );
+    f.close().unwrap();
 
     // ---- stats -------------------------------------------------------------
     let (hits, misses, fetches) = agent.cache_stats();

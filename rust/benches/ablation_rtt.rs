@@ -12,8 +12,9 @@
 //! `cargo bench --bench ablation_rtt`.
 
 use buffetfs::harness::{
-    ablation_cold_walk, ablation_handle_reopen, ablation_rtt, print_cold_walk,
-    print_handle_reopen, BenchCfg, ColdWalkRow, HandleReopenRow,
+    ablation_cold_walk, ablation_datapath, ablation_handle_reopen, ablation_rtt,
+    print_cold_walk, print_datapath, print_handle_reopen, BenchCfg, ColdWalkRow,
+    DatapathRow, HandleReopenRow,
 };
 use buffetfs::simnet::NetConfig;
 use buffetfs::workload::FileSetSpec;
@@ -59,6 +60,41 @@ fn handle_api_json(iters: usize, rows: &[HandleReopenRow]) -> String {
             r.lease_hits,
             r.stale_retries,
             if r.handle_us_per_open > 0.0 { r.legacy_us_per_open / r.handle_us_per_open } else { 0.0 },
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn datapath_json(one_way_us: u64, iters: usize, rows: &[DatapathRow]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"datapath_small_file_sweep\",\n");
+    out.push_str(&format!("  \"one_way_us\": {one_way_us},\n"));
+    out.push_str(&format!("  \"iters_per_point\": {iters},\n"));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"size_bytes\": {}, \"inline\": {}, \"writeback\": {}, \
+             \"cold_read_us\": {:.1}, \"cold_read_data_rpcs\": {:.2}, \
+             \"warm_read_us\": {:.1}, \"warm_read_data_rpcs\": {:.2}, \
+             \"write_us\": {:.1}, \"write_data_rpcs\": {:.2}, \
+             \"page_hits\": {}, \"page_misses\": {}, \"readahead_pages\": {}, \
+             \"flush_rpcs\": {}, \"flush_segs\": {}}}{}\n",
+            r.size_bytes,
+            r.inline,
+            r.writeback,
+            r.cold_read_us,
+            r.cold_read_data_rpcs,
+            r.warm_read_us,
+            r.warm_read_data_rpcs,
+            r.write_us,
+            r.write_data_rpcs,
+            r.page_hits,
+            r.page_misses,
+            r.readahead_pages,
+            r.flush_rpcs,
+            r.flush_segs,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -124,5 +160,25 @@ fn main() {
     match std::fs::write("BENCH_handle_api.json", &json) {
         Ok(()) => println!("\nwrote BENCH_handle_api.json"),
         Err(e) => eprintln!("\ncould not write BENCH_handle_api.json: {e}"),
+    }
+
+    // ---- Part 4: data-plane small-file sweep --------------------------
+    // open+read / re-read / chunked-write cost across file sizes ×
+    // inline on/off × write-back on/off (DESIGN.md §7). Uploaded by the
+    // bench-artifacts CI job as BENCH_datapath.json.
+    let dp_one_way_us = 100;
+    let dp_iters = 4;
+    let dp_sizes = [1u32 << 10, 4 << 10, 16 << 10, 64 << 10, 256 << 10, 1 << 20];
+    println!();
+    let rows = ablation_datapath(
+        NetConfig { one_way_us: dp_one_way_us, per_kb_us: 0, jitter_us: 0, seed: 13 },
+        &dp_sizes,
+        dp_iters,
+    );
+    print_datapath(&rows);
+    let json = datapath_json(dp_one_way_us, dp_iters, &rows);
+    match std::fs::write("BENCH_datapath.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_datapath.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_datapath.json: {e}"),
     }
 }

@@ -37,6 +37,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::cluster::ClusterView;
+use crate::datapath::{DataTransport, Datapath, DatapathConfig, InlineOpen};
 use crate::error::{FsError, FsResult};
 use crate::metrics::RpcMetrics;
 use crate::perm::{self, BatchPathChecker};
@@ -45,7 +46,9 @@ use crate::types::{
     AccessMask, ClientId, Credentials, DirEntry, Fd, FileKind, Ino, OpenFlags, PermBlob, Pid,
     W_OK, X_OK,
 };
-use crate::wire::{LeaseStamp, Notify, NotifyAck, OpenCtx, Request, Response};
+use crate::wire::{
+    ByteRange, LeaseStamp, Notify, NotifyAck, OpenCtx, Request, Response, WriteSeg, NO_GEN,
+};
 
 use self::cache::{CacheTree, ChildLookup};
 use self::fdtable::{FdTable, FileHandle};
@@ -89,6 +92,8 @@ pub struct AgentStats {
     pub lease_grants: AtomicU64,
     /// Dirfd-relative requests that hit `StaleLease` and re-resolved.
     pub stale_lease_retries: AtomicU64,
+    /// Data-plane invalidation pushes received (§7).
+    pub data_invalidations_rx: AtomicU64,
 }
 
 /// Result of a path resolution: the leaf entry plus the perm-blob chain
@@ -119,6 +124,10 @@ pub struct BAgent {
     /// wrong assumption costs one `StaleLease` round trip, never
     /// correctness.
     leases: Mutex<HashMap<Ino, u64>>,
+    /// The client data plane (§7): page cache + read-ahead + write-back.
+    /// Disabled until [`BAgent::enable_datapath`] — the classic
+    /// one-RPC-per-read schedule stays the default.
+    datapath: Datapath,
     pub stats: AgentStats,
 }
 
@@ -131,12 +140,25 @@ impl BAgent {
             cache: CacheTree::new(root),
             fds: Mutex::new(FdTable::new()),
             handle_seq: AtomicU64::new(1),
+            datapath: Datapath::new(metrics.clone()),
             metrics,
             checker: RwLock::new(None),
             batched: AtomicBool::new(true),
             leases: Mutex::new(HashMap::new()),
             stats: AgentStats::default(),
         })
+    }
+
+    /// Turn on the client data plane (page cache, read-ahead, inline
+    /// opens, write-back) with the given knobs. `O_DIRECT` opens keep
+    /// bypassing it per-fd.
+    pub fn enable_datapath(&self, cfg: DatapathConfig) {
+        self.datapath.configure(cfg);
+    }
+
+    /// The data-plane state (stats / tests / explicit invalidation).
+    pub fn datapath(&self) -> &Datapath {
+        &self.datapath
     }
 
     pub fn id(&self) -> ClientId {
@@ -599,6 +621,9 @@ impl BAgent {
                 size: 0,
                 cred: cred.clone(),
             })?;
+            // drop the data plane's view too, or buffered write-back
+            // extents from an earlier fd would resurrect truncated bytes
+            self.datapath.truncate_local(leaf.ino, 0);
             offset = 0;
             size_hint = 0;
         }
@@ -638,6 +663,7 @@ impl BAgent {
             size,
             cred: h.cred.clone(),
         })?;
+        self.datapath.truncate_local(h.ino, size);
         let mut fds = self.fds.lock().unwrap();
         if let Ok(hm) = fds.get_mut(pid, fd) {
             hm.size_hint = size;
@@ -752,17 +778,42 @@ impl BAgent {
     }
 
     pub fn read(&self, pid: Pid, fd: Fd, len: u32) -> FsResult<Vec<u8>> {
-        let h = self.snapshot_handle(pid, fd)?;
-        if !h.flags.read {
-            return Err(FsError::PermissionDenied);
-        }
-        let data = self.read_at_inner(&h, h.offset, len)?;
+        // Reserve [offset, offset+len) under the FdTable lock BEFORE the
+        // RPC: concurrent read()s on one fd consume disjoint ranges —
+        // neither the old rewind (snapshot + n, duplicating bytes) nor a
+        // skipped range. All later adjustments are relative deltas, so
+        // they compose in any completion order.
+        let (h, off) = {
+            let mut fds = self.fds.lock().unwrap();
+            let hm = fds.get_mut(pid, fd)?;
+            if !hm.flags.read {
+                return Err(FsError::PermissionDenied);
+            }
+            let off = hm.offset;
+            hm.offset = off + len as u64;
+            (hm.clone(), off)
+        };
+        let res = self.read_at_dispatch(&h, off, len);
         let mut fds = self.fds.lock().unwrap();
+        // the fd slot may have been closed and reused for another file
+        // while the RPC was in flight — only touch OUR handle (the open
+        // identity is unique per handle instance)
         if let Ok(hm) = fds.get_mut(pid, fd) {
-            hm.offset = h.offset + data.len() as u64;
-            hm.incomplete = false;
+            if hm.handle == h.handle {
+                match &res {
+                    Ok((data, completed)) => {
+                        // give back the unread tail of the reservation
+                        // (short read at EOF or the data plane's clamp)
+                        hm.offset -= len as u64 - data.len() as u64;
+                        if *completed {
+                            hm.incomplete = false;
+                        }
+                    }
+                    Err(_) => hm.offset -= len as u64,
+                }
+            }
         }
-        Ok(data)
+        res.map(|(data, _)| data)
     }
 
     pub fn pread(&self, pid: Pid, fd: Fd, off: u64, len: u32) -> FsResult<Vec<u8>> {
@@ -770,14 +821,29 @@ impl BAgent {
         if !h.flags.read {
             return Err(FsError::PermissionDenied);
         }
-        let data = self.read_at_inner(&h, off, len)?;
-        if h.incomplete {
+        let (data, completed) = self.read_at_dispatch(&h, off, len)?;
+        if h.incomplete && completed {
             let mut fds = self.fds.lock().unwrap();
             if let Ok(hm) = fds.get_mut(pid, fd) {
-                hm.incomplete = false;
+                if hm.handle == h.handle {
+                    hm.incomplete = false;
+                }
             }
         }
         Ok(data)
+    }
+
+    /// Route a positional read through the data plane (enabled and not
+    /// O_DIRECT) or the classic one-RPC path. The `bool` reports whether
+    /// an RPC carrying the deferred-open context was issued — a fully
+    /// cache-served read leaves the open incomplete (and the server
+    /// unbothered), so close stays zero-RPC too.
+    fn read_at_dispatch(&self, h: &FileHandle, off: u64, len: u32) -> FsResult<(Vec<u8>, bool)> {
+        if self.datapath.active(h.flags) {
+            self.datapath.read(self, h, off, len)
+        } else {
+            self.read_at_inner(h, off, len).map(|d| (d, true))
+        }
     }
 
     fn read_at_inner(&self, h: &FileHandle, off: u64, len: u32) -> FsResult<Vec<u8>> {
@@ -794,19 +860,37 @@ impl BAgent {
     }
 
     pub fn write(&self, pid: Pid, fd: Fd, data: &[u8]) -> FsResult<u32> {
-        let h = self.snapshot_handle(pid, fd)?;
-        if !h.flags.write && !h.flags.append {
-            return Err(FsError::PermissionDenied);
-        }
-        let off = h.offset;
-        let (written, new_size) = self.write_at_inner(&h, off, data)?;
+        // same reservation discipline as read(): concurrent write()s on
+        // one fd land in disjoint ranges instead of clobbering each
+        // other at a shared snapshot offset
+        let (h, off) = {
+            let mut fds = self.fds.lock().unwrap();
+            let hm = fds.get_mut(pid, fd)?;
+            if !hm.flags.write && !hm.flags.append {
+                return Err(FsError::PermissionDenied);
+            }
+            let off = hm.offset;
+            hm.offset = off + data.len() as u64;
+            (hm.clone(), off)
+        };
+        let res = self.write_at_dispatch(&h, off, data);
         let mut fds = self.fds.lock().unwrap();
+        // same reuse guard as read(): never adjust a recycled fd slot
         if let Ok(hm) = fds.get_mut(pid, fd) {
-            hm.offset = off + written as u64;
-            hm.incomplete = false;
-            hm.size_hint = new_size;
+            if hm.handle == h.handle {
+                match &res {
+                    Ok((written, new_size, completed)) => {
+                        hm.offset -= data.len() as u64 - *written as u64;
+                        if *completed {
+                            hm.incomplete = false;
+                        }
+                        hm.size_hint = *new_size;
+                    }
+                    Err(_) => hm.offset -= data.len() as u64,
+                }
+            }
         }
-        Ok(written)
+        res.map(|(written, _, _)| written)
     }
 
     pub fn pwrite(&self, pid: Pid, fd: Fd, off: u64, data: &[u8]) -> FsResult<u32> {
@@ -814,14 +898,36 @@ impl BAgent {
         if !h.flags.write && !h.flags.append {
             return Err(FsError::PermissionDenied);
         }
-        let (written, _) = self.write_at_inner(&h, off, data)?;
-        if h.incomplete {
+        let (written, _, completed) = self.write_at_dispatch(&h, off, data)?;
+        if h.incomplete && completed {
             let mut fds = self.fds.lock().unwrap();
             if let Ok(hm) = fds.get_mut(pid, fd) {
-                hm.incomplete = false;
+                if hm.handle == h.handle {
+                    hm.incomplete = false;
+                }
             }
         }
         Ok(written)
+    }
+
+    /// Route a positional write: write-back buffering when the data
+    /// plane owns the fd, the classic synchronous RPC otherwise (the
+    /// write-through case still drops the file's cached pages so later
+    /// reads refetch under the bumped generation).
+    fn write_at_dispatch(&self, h: &FileHandle, off: u64, data: &[u8]) -> FsResult<(u32, u64, bool)> {
+        if self.datapath.active(h.flags) && self.datapath.writeback_enabled() {
+            self.datapath.write(self, h, off, data)
+        } else {
+            let (written, new_size) = self.write_at_inner(h, off, data)?;
+            // drop this agent's cached pages whenever the plane is on —
+            // including O_DIRECT writes: the server's barrier skips the
+            // writing client, so nobody else will tell our own page
+            // cache (serving the agent's OTHER fds) about this write
+            if self.datapath.enabled() {
+                self.datapath.invalidate(h.ino);
+            }
+            Ok((written, new_size, true))
+        }
     }
 
     fn write_at_inner(&self, h: &FileHandle, off: u64, data: &[u8]) -> FsResult<(u32, u64)> {
@@ -837,27 +943,76 @@ impl BAgent {
         }
     }
 
+    /// fsync(2): flush this fd's buffered write-back data in one batched
+    /// RPC. A no-op (zero RPCs) without the data plane — the classic
+    /// write path is already synchronous.
+    pub fn fsync(&self, pid: Pid, fd: Fd) -> FsResult<()> {
+        let h = self.snapshot_handle(pid, fd)?;
+        // only writable fds flush: a read-only fd must neither attach
+        // its (read-only) open context to a WriteBatch nor break another
+        // fd's in-progress write coalescing
+        if self.datapath.active(h.flags)
+            && (h.flags.write || h.flags.append)
+            && self.datapath.flush(self, &h)?
+            && h.incomplete
+        {
+            let mut fds = self.fds.lock().unwrap();
+            if let Ok(hm) = fds.get_mut(pid, fd) {
+                if hm.handle == h.handle {
+                    hm.incomplete = false;
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// close(): returns immediately; the server wrap-up RPC is
     /// asynchronous (§3.3). An open that never did I/O has no server-side
-    /// record, so it closes with **zero** RPCs.
+    /// record, so it closes with **zero** RPCs. Buffered write-back data
+    /// is flushed *synchronously* first — close() is the durability
+    /// point that keeps the baseline comparison honest.
     pub fn close(&self, pid: Pid, fd: Fd) -> FsResult<()> {
         let h = self.fds.lock().unwrap().close(pid, fd)?;
-        if !h.incomplete {
+        self.finish_close(h)
+    }
+
+    fn finish_close(&self, h: FileHandle) -> FsResult<()> {
+        let mut incomplete = h.incomplete;
+        let mut flush_err = None;
+        // writable fds only — closing a read-only peek of a file another
+        // fd is still buffering writes for must not flush (or fail) on
+        // that other fd's behalf
+        if self.datapath.active(h.flags)
+            && (h.flags.write || h.flags.append)
+            && self.datapath.dirty_bytes(h.ino) > 0
+        {
+            match self.datapath.flush(self, &h) {
+                Ok(true) => incomplete = false,
+                Ok(false) => {}
+                // the extents were merged back into the dirty buffer: a
+                // later fsync/close on the same ino retries them. Still
+                // send the wrap-up below (when the open has a server-side
+                // record) so the openlist entry cannot leak, and report
+                // the flush failure to the caller — POSIX close(2) may
+                // surface exactly this error.
+                Err(e) => flush_err = Some(e),
+            }
+        }
+        if !incomplete {
             let t = self.cluster.transport(h.ino)?;
             let _ = t.call_async(Request::Close { ino: h.ino, client: self.id, handle: h.handle });
         }
-        Ok(())
+        match flush_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Process exit: close every fd the process still holds.
     pub fn exit_process(&self, pid: Pid) {
         let handles = self.fds.lock().unwrap().drop_process(pid);
         for h in handles {
-            if !h.incomplete {
-                if let Ok(t) = self.cluster.transport(h.ino) {
-                    let _ = t.call_async(Request::Close { ino: h.ino, client: self.id, handle: h.handle });
-                }
-            }
+            let _ = self.finish_close(h);
         }
     }
 
@@ -1023,19 +1178,98 @@ impl BAgent {
             size,
             cred: cred.clone(),
         })?;
+        self.datapath.truncate_local(r.leaf.ino, size);
         Ok(())
     }
 }
 
-/// §3.4 receive side: invalidate the named directories and ack. Runs on
-/// the server's pushing thread; only takes per-shard cache locks.
+/// §3.4 receive side: invalidate the named directories (or a file's
+/// cached pages) and ack. Runs on the server's pushing thread; only
+/// takes per-shard cache locks.
 impl NotifySink for BAgent {
     fn notify(&self, n: Notify) -> NotifyAck {
-        let Notify::Invalidate { seq, dirs } = n;
-        self.stats.invalidations_rx.fetch_add(1, Ordering::Relaxed);
-        for d in dirs {
-            self.cache.invalidate_dir(d);
+        match n {
+            Notify::Invalidate { seq, dirs } => {
+                self.stats.invalidations_rx.fetch_add(1, Ordering::Relaxed);
+                for d in dirs {
+                    self.cache.invalidate_dir(d);
+                }
+                NotifyAck { client: self.id, seq }
+            }
+            Notify::DataInvalidate { seq, ino, gen } => {
+                self.stats.data_invalidations_rx.fetch_add(1, Ordering::Relaxed);
+                self.datapath.invalidate_pushed(ino, gen);
+                NotifyAck { client: self.id, seq }
+            }
         }
-        NotifyAck { client: self.id, seq }
+    }
+}
+
+/// The data plane's RPC seam: one method per wire exchange, attaching
+/// the deferred-open context exactly when the fd is incomplete-opened
+/// (so the first data-plane RPC doubles as Step 2 of open, §3.3).
+impl DataTransport for BAgent {
+    fn open_inline(&self, h: &FileHandle) -> FsResult<InlineOpen> {
+        let resp = self.cluster.transport(h.ino)?.call(Request::Open {
+            ino: h.ino,
+            flags: h.flags,
+            cred: h.cred.clone(),
+            client: self.id,
+            handle: h.handle,
+            want_inline: true,
+        })?;
+        match resp {
+            Response::OpenedInline { attr, data_gen, data } => {
+                Ok(InlineOpen { size: attr.size, data_gen, data })
+            }
+            // a pre-datapath server: attr only, nothing cacheable (no
+            // generation to stamp pages with)
+            Response::Opened { attr, .. } => {
+                Ok(InlineOpen { size: attr.size, data_gen: NO_GEN, data: None })
+            }
+            other => Err(FsError::Protocol(format!("inline open returned {other:?}"))),
+        }
+    }
+
+    fn read_batch(
+        &self,
+        h: &FileHandle,
+        ranges: &[(u64, u32)],
+        known_gen: u64,
+        register: bool,
+    ) -> FsResult<(Vec<Vec<u8>>, u64, u64)> {
+        let resp = self.cluster.transport(h.ino)?.call(Request::ReadBatch {
+            ino: h.ino,
+            ranges: ranges.iter().map(|&(off, len)| ByteRange { off, len }).collect(),
+            known_gen,
+            client: self.id,
+            register,
+            open_ctx: self.open_ctx_for(h),
+        })?;
+        match resp {
+            Response::DataBatch { segs, size, data_gen } => Ok((segs, size, data_gen)),
+            other => Err(FsError::Protocol(format!("readbatch returned {other:?}"))),
+        }
+    }
+
+    fn write_batch(
+        &self,
+        h: &FileHandle,
+        segs: Vec<(u64, Vec<u8>)>,
+        base_gen: u64,
+        register: bool,
+    ) -> FsResult<(u64, u64)> {
+        let resp = self.cluster.transport(h.ino)?.call(Request::WriteBatch {
+            ino: h.ino,
+            segs: segs.into_iter().map(|(off, data)| WriteSeg { off, data }).collect(),
+            base_gen,
+            client: self.id,
+            register,
+            open_ctx: self.open_ctx_for(h),
+        })?;
+        match resp {
+            Response::WrittenBatch { new_size, data_gen, .. } => Ok((new_size, data_gen)),
+            other => Err(FsError::Protocol(format!("writebatch returned {other:?}"))),
+        }
     }
 }

@@ -317,11 +317,15 @@ impl Dir {
 
     /// Remote relative open — used when this directory is X-only for
     /// the cred (its listing may not be cached). The server writes the
-    /// open record eagerly, so the fd is NOT incomplete-marked.
+    /// open record eagerly, so the fd is NOT incomplete-marked. With the
+    /// data plane on, small-file contents ride the reply and seed the
+    /// page cache, so the first read is free too.
     fn open_at_remote(&self, name: &str, flags: OpenFlags) -> FsResult<File> {
         let agent = self.agent();
         let cred = self.cred();
         let handle = agent.next_handle();
+        let want_inline =
+            agent.datapath().inline_enabled() && flags.read && !flags.direct && !flags.truncate;
         let resp = agent.relative_call("open", self.node, cred, |lease| Request::OpenAt {
             lease,
             name: name.to_string(),
@@ -329,9 +333,16 @@ impl Dir {
             cred: cred.clone(),
             client: agent.id(),
             handle,
+            want_inline,
         })?;
         let attr = match resp {
             Response::Opened { attr, .. } => attr,
+            Response::OpenedInline { attr, data_gen, data } => {
+                if let Some(bytes) = data {
+                    agent.datapath().install_inline(attr.ino, attr.size, data_gen, &bytes);
+                }
+                attr
+            }
             other => return Err(FsError::Protocol(format!("openat returned {other:?}"))),
         };
         // The server wrote the open record eagerly: any abort from here
@@ -352,6 +363,7 @@ impl Dir {
             if let Err(e) = sent {
                 return Err(abort(e));
             }
+            agent.datapath().truncate_local(ino, 0);
         }
         let installed = agent.install_fd(
             self.core.pid,
@@ -584,6 +596,12 @@ impl File {
     /// ftruncate(2).
     pub fn truncate(&self, size: u64) -> FsResult<()> {
         self.core.agent.ftruncate(self.core.pid, self.fd, size)
+    }
+
+    /// fsync(2): flush buffered write-back data in one coalesced RPC
+    /// (no-op without the data plane — classic writes are synchronous).
+    pub fn fsync(&self) -> FsResult<()> {
+        self.core.agent.fsync(self.core.pid, self.fd)
     }
 
     /// Explicit close, surfacing any error; Drop then becomes a no-op.

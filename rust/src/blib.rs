@@ -66,6 +66,10 @@ impl Buffet {
         self.agent.pwrite(self.pid, fd, off, data)
     }
 
+    pub fn fsync(&self, fd: Fd) -> FsResult<()> {
+        self.agent.fsync(self.pid, fd)
+    }
+
     pub fn close(&self, fd: Fd) -> FsResult<()> {
         self.agent.close(self.pid, fd)
     }

@@ -1,0 +1,1256 @@
+//! The client data plane (DESIGN.md §7): inline-data opens, a bounded
+//! page cache with sequential read-ahead, and write-back buffering that
+//! coalesces small writes into batched flushes.
+//!
+//! PRs 1–2 made `open()` of a warm path free; this subsystem does the
+//! same for the *data* that follows it. Three mechanisms, in the order a
+//! small file meets them:
+//!
+//! 1. **Inline open** — the first read of an unknown file issues one
+//!    `Open { want_inline }` metadata RPC; the reply carries the attr,
+//!    the file's *data generation*, and (≤ the server's inline limit)
+//!    the whole contents. Open + full read of a small file costs zero
+//!    data RPCs.
+//! 2. **Page cache + read-ahead** — 4 KiB pages, sharded, byte-budgeted,
+//!    CLOCK-evicted ([`pagecache::PageCache`]). Misses fetch whole
+//!    page-aligned windows with [`crate::wire::Request::ReadBatch`]; a
+//!    sequential access pattern widens the window to
+//!    [`DatapathConfig::readahead_window`], so a streaming scan costs
+//!    ⌈size/window⌉ RPCs instead of one per `read()`.
+//! 3. **Write-back** — `write()` lands in per-inode dirty *extents*
+//!    (exactly the application's bytes — never page-padding, so a flush
+//!    can never resurrect stale neighbours). Adjacent/overlapping
+//!    extents coalesce; `fsync`, `close`, or the high-water mark turn N
+//!    buffered writes into one [`crate::wire::Request::WriteBatch`].
+//!
+//! ## Consistency
+//!
+//! Cached pages are stamped with the inode's **data generation**, which
+//! the server bumps on every write/truncate and revokes through the
+//! existing §3.4 push channel ([`crate::wire::Notify::DataInvalidate`]).
+//! Every fetch/flush that *merges with* or *depends on* the cached view
+//! carries the stamped generation; a concurrent writer makes the server
+//! answer [`crate::error::FsError::StaleData`], and the client drops the
+//! file's pages and retries exactly once — dirty extents survive (they
+//! are this client's own bytes and are always safe to flush unguarded).
+//! `O_DIRECT`-style opens ([`crate::types::OpenFlags::with_direct`])
+//! bypass the whole plane.
+//!
+//! Locking rule (same as the directory cache): no page/meta lock is ever
+//! held across an RPC. Fetches snapshot a per-inode invalidation counter
+//! first and discard their reply if it moved mid-flight.
+
+pub mod pagecache;
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::agent::fdtable::FileHandle;
+use crate::error::{FsError, FsResult};
+use crate::metrics::RpcMetrics;
+use crate::types::{Ino, OpenFlags};
+use crate::wire::NO_GEN;
+
+use self::pagecache::PageCache;
+
+/// Meta shards (same fan-out as the directory cache).
+const META_SHARDS: usize = 16;
+
+/// Per-shard cap on [`InodeMeta`] entries: unlike the byte-budgeted
+/// page cache this state would otherwise grow with every file ever
+/// touched. Past the cap, *clean* entries (no dirty extents — dropping
+/// them can never lose data) are evicted together with their pages.
+const META_SHARD_CAP: usize = 4096;
+
+/// Bound on fetch retry rounds: one covers the common
+/// single-concurrent-writer case; more only under a sustained storm.
+const MAX_DATA_RETRIES: usize = 8;
+
+/// Bound on flush rounds, including 200 µs waits for a peer thread's
+/// in-flight flush of the same inode (~400 ms worst case).
+const MAX_FLUSH_ROUNDS: usize = 2000;
+
+#[derive(Clone, Copy, Debug)]
+pub struct DatapathConfig {
+    /// Inline-open knob: 0 disables inline opens entirely (the first
+    /// read pays a data RPC). Non-zero asks servers to inline small
+    /// files on open replies — the *transfer* is capped by the server's
+    /// own [`crate::server::SERVER_INLINE_LIMIT`] (the wire carries only
+    /// the bool), while this value bounds what the client will *cache*
+    /// from such a reply.
+    pub inline_limit: u32,
+    /// Page size (bytes).
+    pub page_bytes: usize,
+    /// Total page-cache byte budget (CLOCK-evicted beyond it).
+    pub cache_bytes: usize,
+    /// Sequential read-ahead window (bytes); 0 disables read-ahead.
+    pub readahead_window: u32,
+    /// Buffer writes client-side and flush in batches? `false` =
+    /// write-through (every write is one RPC, pages invalidated).
+    pub writeback: bool,
+    /// Per-inode dirty-byte high-water mark that forces a flush.
+    pub wb_high_water: usize,
+    /// Register for server data-invalidation pushes on fetched files.
+    /// `false` opts out of coherence pushes entirely — it also disables
+    /// inline opens (which imply registration), and fully-local hits
+    /// (including a locally-believed EOF) may then serve stale data
+    /// until the next fetch round-trips; the `StaleData` generation
+    /// stamp still protects every actual fetch/flush.
+    pub register_data: bool,
+}
+
+impl Default for DatapathConfig {
+    fn default() -> Self {
+        DatapathConfig {
+            inline_limit: 64 << 10,
+            page_bytes: 4096,
+            cache_bytes: 4 << 20,
+            readahead_window: 128 << 10,
+            writeback: true,
+            wb_high_water: 256 << 10,
+            register_data: true,
+        }
+    }
+}
+
+/// Per-inode client state: the generation/size the pages were read
+/// under, the sequential-access detector, and the write-back buffer.
+struct InodeMeta {
+    /// Data generation of the cached pages ([`NO_GEN`] = unknown).
+    gen: u64,
+    /// Server file size as of `gen` (valid iff `size_known`).
+    size: u64,
+    size_known: bool,
+    /// Some pages of this inode were installed (drives the `known_gen`
+    /// stamp; may lag CLOCK eviction, which only costs an extra check).
+    has_pages: bool,
+    /// End offset of the last `read()` — the sequential detector: a
+    /// read starting exactly here widens its miss window to the
+    /// read-ahead window.
+    last_end: u64,
+    /// Bumped on every invalidation; fetches snapshot it before the RPC
+    /// and discard replies that raced one (same discipline as the
+    /// directory cache's generation check).
+    inval: u64,
+    /// Lowest acceptable data generation: set from the generation a
+    /// `DataInvalidate` push carries, so a reply that was produced
+    /// *before* the revoking write (e.g. an `OpenAt` inline reply whose
+    /// install cannot snapshot `inval` pre-RPC) can never be installed
+    /// after it.
+    floor_gen: u64,
+    /// Dirty extents: offset → exactly-as-written bytes, disjoint and
+    /// coalesced. Never contains page padding.
+    dirty: BTreeMap<u64, Vec<u8>>,
+    dirty_bytes: usize,
+    /// Extents whose flush RPC is in flight. Still overlaid on reads
+    /// (below `dirty`, which holds anything newer) so read-your-writes
+    /// holds *during* the flush; emptied on completion, merged back into
+    /// `dirty` on failure. Non-empty = a flush owns this inode.
+    flushing: BTreeMap<u64, Vec<u8>>,
+}
+
+impl Default for InodeMeta {
+    fn default() -> Self {
+        InodeMeta {
+            gen: NO_GEN,
+            size: 0,
+            size_known: false,
+            has_pages: false,
+            last_end: 0,
+            inval: 0,
+            floor_gen: 0,
+            dirty: BTreeMap::new(),
+            dirty_bytes: 0,
+            flushing: BTreeMap::new(),
+        }
+    }
+}
+
+/// Reply shape of an inline-capable open (see
+/// [`crate::wire::Response::OpenedInline`]).
+pub struct InlineOpen {
+    pub size: u64,
+    pub data_gen: u64,
+    /// The whole file when it fit the server's inline limit.
+    pub data: Option<Vec<u8>>,
+}
+
+/// The RPC seam the data plane drives — implemented by
+/// [`crate::agent::BAgent`] over the cluster transports, and by mocks in
+/// unit tests. Implementations attach the deferred-open context exactly
+/// when `h.incomplete`, so any successful call completes Step 2.
+pub trait DataTransport {
+    fn open_inline(&self, h: &FileHandle) -> FsResult<InlineOpen>;
+    /// Fetch `ranges`; returns (one segment per range, file size, gen).
+    fn read_batch(
+        &self,
+        h: &FileHandle,
+        ranges: &[(u64, u32)],
+        known_gen: u64,
+        register: bool,
+    ) -> FsResult<(Vec<Vec<u8>>, u64, u64)>;
+    /// Flush `segs`; returns (resulting file size, post-write gen).
+    fn write_batch(
+        &self,
+        h: &FileHandle,
+        segs: Vec<(u64, Vec<u8>)>,
+        base_gen: u64,
+        register: bool,
+    ) -> FsResult<(u64, u64)>;
+}
+
+struct Inner {
+    cfg: DatapathConfig,
+    pages: Arc<PageCache>,
+}
+
+/// The per-agent data-plane state. Disabled until
+/// [`Datapath::configure`] — the pre-datapath one-RPC-per-read schedule
+/// stays the default, which keeps every figure and test comparable.
+pub struct Datapath {
+    enabled: AtomicBool,
+    inner: RwLock<Inner>,
+    metas: Vec<Mutex<HashMap<Ino, InodeMeta>>>,
+    metrics: Arc<RpcMetrics>,
+}
+
+impl Datapath {
+    pub fn new(metrics: Arc<RpcMetrics>) -> Datapath {
+        let cfg = DatapathConfig::default();
+        Datapath {
+            enabled: AtomicBool::new(false),
+            inner: RwLock::new(Inner {
+                cfg,
+                pages: Arc::new(PageCache::new(cfg.page_bytes, cfg.cache_bytes)),
+            }),
+            metas: (0..META_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            metrics,
+        }
+    }
+
+    /// Enable the data plane with `cfg` (rebuilds the page cache and
+    /// clears all per-inode state).
+    pub fn configure(&self, cfg: DatapathConfig) {
+        {
+            let mut inner = self.inner.write().unwrap();
+            inner.cfg = cfg;
+            inner.pages = Arc::new(PageCache::new(cfg.page_bytes, cfg.cache_bytes));
+        }
+        for s in &self.metas {
+            s.lock().unwrap().clear();
+        }
+        self.enabled.store(true, Ordering::Release);
+    }
+
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Release);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Acquire)
+    }
+
+    /// Does the plane serve this open? (`O_DIRECT` bypasses it.)
+    pub fn active(&self, flags: OpenFlags) -> bool {
+        self.enabled() && !flags.direct
+    }
+
+    pub fn config(&self) -> DatapathConfig {
+        self.inner.read().unwrap().cfg
+    }
+
+    pub fn writeback_enabled(&self) -> bool {
+        self.enabled() && self.config().writeback
+    }
+
+    /// May this client use inline opens? Inline replies enrol the opener
+    /// in the server's push registry (the size is cached state), so the
+    /// push opt-out disables them too — on every path, including the
+    /// handle API's remote `OpenAt`.
+    pub fn inline_enabled(&self) -> bool {
+        let cfg = self.config();
+        self.enabled() && cfg.inline_limit > 0 && cfg.register_data
+    }
+
+    /// Resident page-cache bytes (diagnostics).
+    pub fn cached_bytes(&self) -> usize {
+        self.inner.read().unwrap().pages.bytes()
+    }
+
+    /// Tracked per-inode metadata entries (diagnostics; bounded by
+    /// [`META_SHARD_CAP`] per shard via `gc_meta_shard`).
+    pub fn meta_entries(&self) -> usize {
+        self.metas.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Unflushed write-back bytes for one inode.
+    pub fn dirty_bytes(&self, ino: Ino) -> usize {
+        self.meta_shard(ino)
+            .lock()
+            .unwrap()
+            .get(&ino)
+            .map_or(0, |m| m.dirty_bytes)
+    }
+
+    fn snapshot(&self) -> (DatapathConfig, Arc<PageCache>) {
+        let g = self.inner.read().unwrap();
+        (g.cfg, Arc::clone(&g.pages))
+    }
+
+    fn meta_shard(&self, ino: Ino) -> &Mutex<HashMap<Ino, InodeMeta>> {
+        let i = (ino.file as usize ^ ((ino.host as usize) << 3)) & (META_SHARDS - 1);
+        &self.metas[i]
+    }
+
+    /// Bound a meta shard before inserting `keep`: evict clean entries
+    /// (dirty ones hold unflushed application bytes and are never
+    /// dropped) down to half the cap, taking their pages with them — a
+    /// page without a generation stamp must not survive, or a later
+    /// fresh-meta fetch would merge it with a different generation.
+    fn gc_meta_shard(pages: &PageCache, shard: &mut HashMap<Ino, InodeMeta>, keep: Ino) {
+        if shard.len() < META_SHARD_CAP {
+            return;
+        }
+        let excess = shard.len() - META_SHARD_CAP / 2;
+        let victims: Vec<Ino> = shard
+            .iter()
+            .filter(|(i, m)| **i != keep && m.dirty.is_empty() && m.flushing.is_empty())
+            .map(|(i, _)| *i)
+            .take(excess)
+            .collect();
+        for v in victims {
+            shard.remove(&v);
+            pages.drop_ino(v);
+        }
+    }
+
+    /// Drop the cached view of one file: pages go, the generation stamp
+    /// goes, dirty write-back extents stay (they are this client's own
+    /// bytes). Called on `StaleData` answers and local truncates.
+    pub fn invalidate(&self, ino: Ino) {
+        self.drop_view(ino, None);
+    }
+
+    /// A server `DataInvalidate` push: like [`Datapath::invalidate`],
+    /// but also records the pushed generation as a floor so an install
+    /// racing the push (an `OpenAt` inline reply already in flight)
+    /// cannot resurrect pre-write bytes.
+    pub fn invalidate_pushed(&self, ino: Ino, gen: u64) {
+        self.drop_view(ino, Some(gen));
+    }
+
+    fn drop_view(&self, ino: Ino, floor: Option<u64>) {
+        if !self.enabled() {
+            return;
+        }
+        let (_, pages) = self.snapshot();
+        let mut shard = self.meta_shard(ino).lock().unwrap();
+        Self::gc_meta_shard(&pages, &mut shard, ino);
+        let meta = shard.entry(ino).or_default();
+        pages.drop_ino(ino);
+        meta.gen = NO_GEN;
+        meta.size_known = false;
+        meta.has_pages = false;
+        meta.inval += 1;
+        if let Some(g) = floor {
+            meta.floor_gen = meta.floor_gen.max(g);
+        }
+    }
+
+    /// Local bookkeeping after this client's own (f)truncate RPC: trim
+    /// dirty extents and drop the whole cached view. The size is NOT
+    /// retained: the server's truncate barrier just unregistered every
+    /// pushed client (including us), so a locally-trusted size would
+    /// never hear about another client re-growing the file — the next
+    /// read revalidates with one RPC instead.
+    pub fn truncate_local(&self, ino: Ino, size: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let (_, pages) = self.snapshot();
+        let mut shard = self.meta_shard(ino).lock().unwrap();
+        let meta = shard.entry(ino).or_default();
+        pages.drop_ino(ino);
+        meta.gen = NO_GEN;
+        meta.has_pages = false;
+        meta.size_known = false;
+        meta.inval += 1;
+        let old = std::mem::take(&mut meta.dirty);
+        meta.dirty_bytes = 0;
+        for (eoff, mut ed) in old {
+            if eoff >= size {
+                continue;
+            }
+            let end = eoff + ed.len() as u64;
+            if end > size {
+                ed.truncate((size - eoff) as usize);
+            }
+            meta.dirty_bytes += ed.len();
+            meta.dirty.insert(eoff, ed);
+        }
+    }
+
+    /// Seed the cache from inline data that rode an open reply the
+    /// *caller* issued (the handle API's remote `OpenAt` fallback).
+    /// Unlike the fetch paths, the caller could not snapshot the race
+    /// counter before its RPC — the floor generation recorded by pushes
+    /// stands in: a reply produced before a revoking write is refused.
+    pub fn install_inline(&self, ino: Ino, size: u64, data_gen: u64, data: &[u8]) {
+        if !self.enabled() || data_gen == NO_GEN {
+            return;
+        }
+        let (cfg, pages) = self.snapshot();
+        if data.len() as u64 > cfg.inline_limit as u64 {
+            return; // over the client's own caching bound
+        }
+        let mut shard = self.meta_shard(ino).lock().unwrap();
+        let meta = shard.entry(ino).or_default();
+        if data_gen < meta.floor_gen {
+            return; // a push already revoked this reply's generation
+        }
+        if meta.has_pages && meta.gen != NO_GEN && data_gen != meta.gen {
+            return; // never merge across generations
+        }
+        self.metrics.record_inline_open(data.len() as u64);
+        meta.size = size;
+        meta.size_known = true;
+        meta.gen = data_gen;
+        install_pages(&cfg, &pages, ino, 0, data, size);
+        meta.has_pages = true;
+    }
+
+    // -- the read path -------------------------------------------------------
+
+    /// Serve a read at `off` for up to `len` bytes. Returns the bytes
+    /// plus whether an RPC that completes the deferred open was issued.
+    pub fn read(
+        &self,
+        t: &dyn DataTransport,
+        h: &FileHandle,
+        off: u64,
+        len: u32,
+    ) -> FsResult<(Vec<u8>, bool)> {
+        let (cfg, pages) = self.snapshot();
+        let ino = h.ino;
+        let mut completed = false;
+        if len == 0 {
+            return Ok((Vec::new(), completed));
+        }
+        // POSIX short read: one request must fit comfortably inside the
+        // page-cache budget, or the fetched window would CLOCK-evict its
+        // own head before assembly ever completes. Callers loop.
+        let len = (len as u64).min((cfg.cache_bytes / 4).max(cfg.page_bytes) as u64) as u32;
+        enum Plan {
+            /// First touch of an unknown file: one inline-capable open.
+            Inline,
+            /// Window fetch (miss pages + read-ahead extension).
+            Batch { ranges: Vec<(u64, u32)>, known: u64, miss: u64, ra: u64 },
+            /// Raced a concurrent install/eviction — re-read the cache.
+            Again,
+        }
+        // pages assembled after a fetch in this very call are not cache
+        // hits — only the pre-RPC pass counts toward the hit ratio
+        let mut fetched = false;
+        for _ in 0..MAX_DATA_RETRIES {
+            let (plan, inval0) = {
+                let mut shard = self.meta_shard(ino).lock().unwrap();
+                Self::gc_meta_shard(&pages, &mut shard, ino);
+                let meta = shard.entry(ino).or_default();
+                let inval0 = meta.inval;
+                if meta.size_known {
+                    if let Some((out, hits)) = assemble(&cfg, &pages, meta, ino, off, len) {
+                        if hits > 0 && !fetched {
+                            self.metrics.record_page_hits(hits);
+                        }
+                        note_seq(meta, off, out.len() as u64);
+                        return Ok((out, completed));
+                    }
+                }
+                // inline opens imply server-side push registration (the
+                // reply's size — and possibly contents — become cached
+                // state), so a client that opted out of pushes must not
+                // use them; it pays a plain ReadBatch instead
+                let plan = if !meta.size_known && cfg.inline_limit > 0 && cfg.register_data {
+                    Plan::Inline
+                } else {
+                    let (ranges, miss, ra) = plan_fetch(&cfg, &pages, meta, ino, off, len);
+                    if ranges.is_empty() {
+                        Plan::Again
+                    } else {
+                        let known = if meta.has_pages { meta.gen } else { NO_GEN };
+                        Plan::Batch { ranges, known, miss, ra }
+                    }
+                };
+                (plan, inval0)
+            };
+            match plan {
+                Plan::Again => continue,
+                Plan::Inline => {
+                    let r = t.open_inline(h)?;
+                    completed = true;
+                    fetched = true;
+                    let mut shard = self.meta_shard(ino).lock().unwrap();
+                    let meta = shard.entry(ino).or_default();
+                    if meta.inval != inval0 {
+                        continue; // invalidated mid-flight: drop the reply
+                    }
+                    // same monotonicity rule as the batch install below
+                    if meta.has_pages && meta.gen != NO_GEN && r.data_gen != meta.gen {
+                        continue;
+                    }
+                    meta.size = r.size;
+                    meta.size_known = true;
+                    if r.data_gen != NO_GEN {
+                        meta.gen = r.data_gen;
+                        // the server caps inline at its own limit; the
+                        // client additionally honours the configured
+                        // bound for what it will *cache*
+                        if let Some(data) =
+                            r.data.filter(|d| d.len() as u64 <= cfg.inline_limit as u64)
+                        {
+                            self.metrics.record_inline_open(data.len() as u64);
+                            install_pages(&cfg, &pages, ino, 0, &data, r.size);
+                            meta.has_pages = true;
+                        }
+                    }
+                }
+                Plan::Batch { ranges, known, miss, ra } => {
+                    fetched = true;
+                    match t.read_batch(h, &ranges, known, cfg.register_data) {
+                        Err(FsError::StaleData) => {
+                            // another writer got in between: drop every
+                            // page and retry once with no expectation —
+                            // no stale byte is ever returned
+                            self.metrics.record_stale_data_retry();
+                            self.invalidate(ino);
+                            continue;
+                        }
+                        Err(e) => return Err(e),
+                        Ok((segs, size, gen)) => {
+                            completed = true;
+                            // recorded on success only, so a StaleData
+                            // drop-and-retry doesn't double-count the
+                            // window's pages
+                            self.metrics.record_page_misses(miss);
+                            if ra > 0 {
+                                self.metrics.record_readahead(ra);
+                            }
+                            let mut shard = self.meta_shard(ino).lock().unwrap();
+                            let meta = shard.entry(ino).or_default();
+                            if meta.inval != inval0 {
+                                continue;
+                            }
+                            // generation monotonicity: a concurrent fetch
+                            // may have installed a NEWER view while we
+                            // were in flight (our known stamp was NO_GEN,
+                            // so the server had nothing to reject) —
+                            // never merge an older reply over it
+                            if meta.has_pages && meta.gen != NO_GEN && gen != meta.gen {
+                                continue;
+                            }
+                            meta.size = size;
+                            meta.size_known = true;
+                            meta.gen = gen;
+                            for ((roff, _), seg) in ranges.iter().zip(segs.iter()) {
+                                install_pages(&cfg, &pages, ino, *roff, seg, size);
+                            }
+                            meta.has_pages = true;
+                        }
+                    }
+                }
+            }
+        }
+        Err(FsError::Busy)
+    }
+
+    // -- the write path ------------------------------------------------------
+
+    /// Buffer a write. Returns (bytes accepted, effective file size,
+    /// whether a flush RPC completed the deferred open).
+    pub fn write(
+        &self,
+        t: &dyn DataTransport,
+        h: &FileHandle,
+        off: u64,
+        data: &[u8],
+    ) -> FsResult<(u32, u64, bool)> {
+        let (cfg, pages) = self.snapshot();
+        let ino = h.ino;
+        let (eff, over) = {
+            let mut shard = self.meta_shard(ino).lock().unwrap();
+            Self::gc_meta_shard(&pages, &mut shard, ino);
+            let meta = shard.entry(ino).or_default();
+            insert_extent(&mut meta.dirty, &mut meta.dirty_bytes, off, data);
+            self.metrics.record_wb_write(data.len() as u64);
+            (effective_size(meta), meta.dirty_bytes >= cfg.wb_high_water)
+        };
+        let mut completed = false;
+        if over {
+            completed = self.flush(t, h)?;
+        }
+        Ok((data.len() as u32, eff, completed))
+    }
+
+    /// Flush every dirty extent of `h.ino` in one `WriteBatch` RPC
+    /// (fsync / close / high-water). Returns whether an RPC was issued.
+    ///
+    /// The extents move to the `flushing` overlay for the duration of
+    /// the RPC — still visible to concurrent reads (read-your-writes
+    /// holds mid-flush) and recoverable on failure. Only one flush owns
+    /// an inode at a time; a second flusher waits for the first (its
+    /// bytes are covered by that in-flight batch or by remaining dirty
+    /// extents it then flushes itself).
+    pub fn flush(&self, t: &dyn DataTransport, h: &FileHandle) -> FsResult<bool> {
+        let (cfg, pages) = self.snapshot();
+        let ino = h.ino;
+        let mut completed = false;
+        for _ in 0..MAX_FLUSH_ROUNDS {
+            enum Step {
+                Go { segs: Vec<(u64, Vec<u8>)>, base: u64, inval0: u64 },
+                WaitPeer,
+            }
+            let step = {
+                let mut shard = self.meta_shard(ino).lock().unwrap();
+                let meta = match shard.get_mut(&ino) {
+                    None => return Ok(completed),
+                    Some(m) => m,
+                };
+                if !meta.flushing.is_empty() {
+                    Step::WaitPeer
+                } else if meta.dirty.is_empty() {
+                    return Ok(completed);
+                } else {
+                    meta.flushing = std::mem::take(&mut meta.dirty);
+                    meta.dirty_bytes = 0;
+                    // the transport consumes owned segments; the extents
+                    // themselves stay in `flushing` to keep serving reads
+                    // and to survive a failed RPC
+                    let segs: Vec<(u64, Vec<u8>)> =
+                        meta.flushing.iter().map(|(k, v)| (*k, v.clone())).collect();
+                    let base = if meta.has_pages { meta.gen } else { NO_GEN };
+                    Step::Go { segs, base, inval0: meta.inval }
+                }
+            };
+            let (segs, base, inval0) = match step {
+                Step::WaitPeer => {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                    continue;
+                }
+                Step::Go { segs, base, inval0 } => (segs, base, inval0),
+            };
+            let nsegs = segs.len() as u64;
+            let nbytes: u64 = segs.iter().map(|(_, v)| v.len() as u64).sum();
+            match t.write_batch(h, segs, base, cfg.register_data) {
+                Ok((new_size, gen)) => {
+                    completed = true;
+                    self.metrics.record_wb_flush(nsegs, nbytes);
+                    let mut shard = self.meta_shard(ino).lock().unwrap();
+                    let meta = shard.entry(ino).or_default();
+                    let flushed = std::mem::take(&mut meta.flushing);
+                    if meta.inval == inval0 {
+                        // make the flushed bytes visible to the page
+                        // layer (their overlay is gone now)
+                        for (eoff, edata) in &flushed {
+                            apply_to_pages(&cfg, &pages, ino, *eoff, edata);
+                        }
+                        meta.gen = gen;
+                        meta.size = new_size;
+                        meta.size_known = true;
+                        // the generation moved: any read fetch still in
+                        // flight was served pre-flush bytes — bump the
+                        // race counter so its reply is discarded instead
+                        // of installing stale pages over our own write
+                        meta.inval += 1;
+                    }
+                    return Ok(completed);
+                }
+                Err(FsError::StaleData) => {
+                    // our cached READ view went stale; the write itself
+                    // is untainted (own bytes only) — drop the view, put
+                    // the extents back, retry unguarded
+                    self.metrics.record_stale_data_retry();
+                    self.invalidate(ino);
+                    let mut shard = self.meta_shard(ino).lock().unwrap();
+                    let meta = shard.entry(ino).or_default();
+                    let back = std::mem::take(&mut meta.flushing);
+                    merge_back(meta, back);
+                    continue;
+                }
+                Err(e) => {
+                    let mut shard = self.meta_shard(ino).lock().unwrap();
+                    let meta = shard.entry(ino).or_default();
+                    let back = std::mem::take(&mut meta.flushing);
+                    merge_back(meta, back);
+                    return Err(e);
+                }
+            }
+        }
+        Err(FsError::Busy)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pure helpers (unit-tested below)
+// ---------------------------------------------------------------------------
+
+/// Effective size the application observes: server size extended by any
+/// not-yet-flushed (dirty or mid-flush) extent.
+fn effective_size(meta: &InodeMeta) -> u64 {
+    let end_of = |m: &BTreeMap<u64, Vec<u8>>| {
+        m.iter().next_back().map(|(k, v)| k + v.len() as u64).unwrap_or(0)
+    };
+    meta.size.max(end_of(&meta.dirty)).max(end_of(&meta.flushing))
+}
+
+fn note_seq(meta: &mut InodeMeta, off: u64, got: u64) {
+    meta.last_end = off + got;
+}
+
+/// Try to serve `[off, off+len)` from dirty extents + cached pages.
+/// `None` = at least one needed byte is missing (fetch required).
+fn assemble(
+    cfg: &DatapathConfig,
+    pages: &PageCache,
+    meta: &InodeMeta,
+    ino: Ino,
+    off: u64,
+    len: u32,
+) -> Option<(Vec<u8>, u64)> {
+    let eff = effective_size(meta);
+    if off >= eff {
+        return Some((Vec::new(), 0));
+    }
+    let end = (off + len as u64).min(eff);
+    let mut out = vec![0u8; (end - off) as usize];
+    let mut hits = 0u64;
+    let pb = cfg.page_bytes as u64;
+    // bytes below the server size must come from pages (or dirty);
+    // bytes in [size, eff) are zeros unless a dirty extent covers them
+    let data_end = end.min(meta.size);
+    let mut missing: Vec<(u64, u64)> = Vec::new();
+    if off < data_end {
+        let first = off / pb;
+        let last = (data_end - 1) / pb;
+        for p in first..=last {
+            let ps = p * pb;
+            let s = ps.max(off);
+            let e = (ps + pb).min(data_end);
+            let dst = &mut out[(s - off) as usize..(e - off) as usize];
+            if pages.copy_from(ino, p, (s - ps) as usize, dst) {
+                hits += 1;
+            } else {
+                missing.push((s, e));
+            }
+        }
+    }
+    for &(ms, me) in &missing {
+        if !overlays_cover(&meta.flushing, &meta.dirty, ms, me) {
+            return None;
+        }
+    }
+    // overlay order: in-flight flush extents first, then dirty (newer
+    // writes win) — both sit above page content
+    for overlay in [&meta.flushing, &meta.dirty] {
+        for (&eoff, edata) in overlay.range(..end) {
+            let eend = eoff + edata.len() as u64;
+            if eend <= off {
+                continue;
+            }
+            let s = eoff.max(off);
+            let e = eend.min(end);
+            out[(s - off) as usize..(e - off) as usize]
+                .copy_from_slice(&edata[(s - eoff) as usize..(e - eoff) as usize]);
+        }
+    }
+    Some((out, hits))
+}
+
+/// End offset of the extent covering `s` in one map, if any.
+fn cover_end(m: &BTreeMap<u64, Vec<u8>>, s: u64) -> Option<u64> {
+    m.range(..=s).next_back().and_then(|(k, v)| {
+        let end = k + v.len() as u64;
+        (end > s).then_some(end)
+    })
+}
+
+/// Are all bytes of `[s, e)` covered by the union of the two overlays?
+fn overlays_cover(a: &BTreeMap<u64, Vec<u8>>, b: &BTreeMap<u64, Vec<u8>>, mut s: u64, e: u64) -> bool {
+    while s < e {
+        match cover_end(a, s).into_iter().chain(cover_end(b, s)).max() {
+            Some(end) => s = end,
+            None => return false,
+        }
+    }
+    true
+}
+
+/// Plan the page-aligned fetch window for a miss at `off`: the uncached
+/// pages of the request, extended by read-ahead when the access is
+/// sequential. Returns (coalesced ranges, missed request pages,
+/// read-ahead pages).
+fn plan_fetch(
+    cfg: &DatapathConfig,
+    pages: &PageCache,
+    meta: &InodeMeta,
+    ino: Ino,
+    off: u64,
+    len: u32,
+) -> (Vec<(u64, u32)>, u64, u64) {
+    let pb = cfg.page_bytes as u64;
+    let size_limit = if meta.size_known { meta.size } else { u64::MAX };
+    let req_end = off.saturating_add(len as u64).min(size_limit);
+    let win_start = (off / pb) * pb;
+    let mut win_end = req_end.div_ceil(pb).saturating_mul(pb);
+    let mut ra_planned = false;
+    if cfg.readahead_window > 0 && meta.size_known && off == meta.last_end {
+        // clamp the window to a quarter of the cache budget (like the
+        // request clamp in read()): a wider prefetch would CLOCK-evict
+        // its own head before it is ever served
+        let window = (cfg.readahead_window as u64).min((cfg.cache_bytes / 4).max(cfg.page_bytes) as u64);
+        let want = win_start
+            .saturating_add(window)
+            .max(win_end)
+            .min(size_limit.div_ceil(pb).saturating_mul(pb));
+        if want > win_end {
+            win_end = want;
+            ra_planned = true;
+        }
+    }
+    let req_pages_end = req_end.div_ceil(pb); // exclusive page index
+    let mut ranges: Vec<(u64, u32)> = Vec::new();
+    let mut cur: Option<(u64, u64)> = None; // [start_page, end_page)
+    let mut miss = 0u64;
+    let mut ra = 0u64;
+    for p in win_start / pb..win_end.div_ceil(pb) {
+        if pages.contains(ino, p) {
+            if let Some((s, e)) = cur.take() {
+                push_range(&mut ranges, s, e, pb);
+            }
+            continue;
+        }
+        if p < req_pages_end {
+            miss += 1;
+        } else {
+            ra += 1;
+        }
+        cur = match cur {
+            Some((s, e)) if e == p => Some((s, p + 1)),
+            Some((s, e)) => {
+                push_range(&mut ranges, s, e, pb);
+                Some((p, p + 1))
+            }
+            None => Some((p, p + 1)),
+        };
+    }
+    if let Some((s, e)) = cur {
+        push_range(&mut ranges, s, e, pb);
+    }
+    if !ra_planned {
+        ra = 0;
+    }
+    (ranges, miss, ra)
+}
+
+fn push_range(ranges: &mut Vec<(u64, u32)>, start_page: u64, end_page: u64, pb: u64) {
+    let off = start_page * pb;
+    let bytes = (end_page - start_page).saturating_mul(pb).min(u32::MAX as u64);
+    if bytes > 0 {
+        ranges.push((off, bytes as u32));
+    }
+}
+
+/// Install fetched bytes as zero-padded pages. `at` is page-aligned;
+/// pages that would start at/after the file size are left implicit
+/// (they read as zeros via the size bound).
+fn install_pages(cfg: &DatapathConfig, pages: &PageCache, ino: Ino, at: u64, data: &[u8], size: u64) {
+    let pb = cfg.page_bytes;
+    let mut i = 0usize;
+    while i < data.len() {
+        let page_start = at + i as u64;
+        if page_start >= size {
+            break;
+        }
+        let chunk = &data[i..(i + pb).min(data.len())];
+        pages.insert(ino, page_start / pb as u64, chunk.to_vec());
+        i += pb;
+    }
+}
+
+/// Copy freshly-flushed bytes into any resident pages they overlap.
+fn apply_to_pages(cfg: &DatapathConfig, pages: &PageCache, ino: Ino, off: u64, data: &[u8]) {
+    let pb = cfg.page_bytes as u64;
+    let end = off + data.len() as u64;
+    let mut p = off / pb;
+    while p * pb < end {
+        let ps = p * pb;
+        let s = ps.max(off);
+        let e = (ps + pb).min(end);
+        pages.update(
+            ino,
+            p,
+            (s - ps) as usize,
+            &data[(s - off) as usize..(e - off) as usize],
+        );
+        p += 1;
+    }
+}
+
+/// Insert a write into the dirty-extent map, coalescing with any
+/// overlapping or adjacent extents (new bytes win on overlap).
+fn insert_extent(dirty: &mut BTreeMap<u64, Vec<u8>>, bytes: &mut usize, off: u64, data: &[u8]) {
+    if data.is_empty() {
+        return;
+    }
+    let end = off + data.len() as u64;
+    let touch: Vec<u64> = dirty
+        .range(..=end)
+        .rev()
+        .take_while(|(k, v)| *k + v.len() as u64 >= off)
+        .map(|(k, _)| *k)
+        .collect();
+    if touch.is_empty() {
+        *bytes += data.len();
+        dirty.insert(off, data.to_vec());
+        return;
+    }
+    let mut new_start = off;
+    let mut new_end = end;
+    for &k in &touch {
+        let ed = &dirty[&k];
+        new_start = new_start.min(k);
+        new_end = new_end.max(k + ed.len() as u64);
+    }
+    let mut buf = vec![0u8; (new_end - new_start) as usize];
+    let mut removed = 0usize;
+    for &k in &touch {
+        let ed = dirty.remove(&k).unwrap();
+        removed += ed.len();
+        buf[(k - new_start) as usize..][..ed.len()].copy_from_slice(&ed);
+    }
+    buf[(off - new_start) as usize..][..data.len()].copy_from_slice(data);
+    *bytes = *bytes + buf.len() - removed;
+    dirty.insert(new_start, buf);
+}
+
+/// Re-merge extents a failed flush stole, preserving writes that landed
+/// during the RPC (newer bytes win over the stolen ones).
+fn merge_back(meta: &mut InodeMeta, stolen: BTreeMap<u64, Vec<u8>>) {
+    let newer = std::mem::take(&mut meta.dirty);
+    let mut base = stolen;
+    let mut bytes: usize = base.values().map(|v| v.len()).sum();
+    for (off, data) in newer {
+        insert_extent(&mut base, &mut bytes, off, &data);
+    }
+    meta.dirty = base;
+    meta.dirty_bytes = bytes;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Credentials;
+    use std::sync::atomic::AtomicU64;
+
+    /// A one-file in-memory "server" with a data generation.
+    struct MockStore {
+        data: Mutex<Vec<u8>>,
+        gen: AtomicU64,
+        inline_limit: usize,
+        opens: AtomicU64,
+        reads: AtomicU64,
+        writes: AtomicU64,
+    }
+
+    impl MockStore {
+        fn new(content: Vec<u8>, inline_limit: usize) -> MockStore {
+            MockStore {
+                data: Mutex::new(content),
+                gen: AtomicU64::new(0),
+                inline_limit,
+                opens: AtomicU64::new(0),
+                reads: AtomicU64::new(0),
+                writes: AtomicU64::new(0),
+            }
+        }
+
+        /// A concurrent writer: mutate contents + bump the generation.
+        fn remote_write(&self, content: Vec<u8>) {
+            *self.data.lock().unwrap() = content;
+            self.gen.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    impl DataTransport for MockStore {
+        fn open_inline(&self, _h: &FileHandle) -> FsResult<InlineOpen> {
+            self.opens.fetch_add(1, Ordering::SeqCst);
+            let data = self.data.lock().unwrap();
+            Ok(InlineOpen {
+                size: data.len() as u64,
+                data_gen: self.gen.load(Ordering::SeqCst),
+                data: (data.len() <= self.inline_limit).then(|| data.clone()),
+            })
+        }
+        fn read_batch(
+            &self,
+            _h: &FileHandle,
+            ranges: &[(u64, u32)],
+            known_gen: u64,
+            _register: bool,
+        ) -> FsResult<(Vec<Vec<u8>>, u64, u64)> {
+            self.reads.fetch_add(1, Ordering::SeqCst);
+            let gen = self.gen.load(Ordering::SeqCst);
+            if known_gen != NO_GEN && known_gen != gen {
+                return Err(FsError::StaleData);
+            }
+            let data = self.data.lock().unwrap();
+            let segs = ranges
+                .iter()
+                .map(|&(off, len)| {
+                    let s = (off as usize).min(data.len());
+                    let e = (off as usize + len as usize).min(data.len());
+                    data[s..e].to_vec()
+                })
+                .collect();
+            Ok((segs, data.len() as u64, gen))
+        }
+        fn write_batch(
+            &self,
+            _h: &FileHandle,
+            segs: Vec<(u64, Vec<u8>)>,
+            base_gen: u64,
+            _register: bool,
+        ) -> FsResult<(u64, u64)> {
+            self.writes.fetch_add(1, Ordering::SeqCst);
+            let cur = self.gen.load(Ordering::SeqCst);
+            if base_gen != NO_GEN && base_gen != cur {
+                return Err(FsError::StaleData);
+            }
+            let gen = self.gen.fetch_add(1, Ordering::SeqCst) + 1;
+            let mut data = self.data.lock().unwrap();
+            for (off, bytes) in segs {
+                let need = off as usize + bytes.len();
+                if data.len() < need {
+                    data.resize(need, 0);
+                }
+                data[off as usize..need].copy_from_slice(&bytes);
+            }
+            Ok((data.len() as u64, gen))
+        }
+    }
+
+    fn handle() -> FileHandle {
+        FileHandle {
+            ino: Ino::new(0, 0, 42),
+            flags: crate::types::OpenFlags::RDWR,
+            offset: 0,
+            incomplete: true,
+            handle: 1,
+            cred: Credentials::new(1000, 1000),
+            size_hint: 0,
+        }
+    }
+
+    fn dp() -> (Datapath, Arc<RpcMetrics>) {
+        let m = Arc::new(RpcMetrics::new());
+        let d = Datapath::new(m.clone());
+        d.configure(DatapathConfig::default());
+        (d, m)
+    }
+
+    fn pattern(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i * 31 % 251) as u8).collect()
+    }
+
+    #[test]
+    fn small_file_served_by_inline_open_then_cache() {
+        let (d, m) = dp();
+        let t = MockStore::new(pattern(2048), 64 << 10);
+        let h = handle();
+        let (out, completed) = d.read(&t, &h, 0, 65536).unwrap();
+        assert_eq!(out, pattern(2048));
+        assert!(completed, "the inline open completes the deferred record");
+        assert_eq!(t.opens.load(Ordering::SeqCst), 1);
+        assert_eq!(t.reads.load(Ordering::SeqCst), 0, "zero data RPCs for a small file");
+        // EOF
+        let (out, _) = d.read(&t, &h, 2048, 100).unwrap();
+        assert!(out.is_empty());
+        // fully cached re-read: zero RPCs of any kind
+        let (out, _) = d.read(&t, &h, 100, 100).unwrap();
+        assert_eq!(out, &pattern(2048)[100..200]);
+        assert_eq!(t.opens.load(Ordering::SeqCst), 1);
+        assert_eq!(t.reads.load(Ordering::SeqCst), 0);
+        assert!(m.page_hits() > 0);
+        assert_eq!(m.inline_opens(), 1);
+    }
+
+    #[test]
+    fn sequential_scan_costs_one_rpc_per_readahead_window() {
+        let (d, m) = dp();
+        let size = 1 << 20;
+        let t = MockStore::new(pattern(size), 64 << 10); // too big to inline
+        let h = handle();
+        let mut got = Vec::new();
+        loop {
+            let (chunk, _) = d.read(&t, &h, got.len() as u64, 4096).unwrap();
+            if chunk.is_empty() {
+                break;
+            }
+            got.extend_from_slice(&chunk);
+        }
+        assert_eq!(got, pattern(size));
+        let window = DatapathConfig::default().readahead_window as usize;
+        assert!(
+            t.reads.load(Ordering::SeqCst) <= (size / window) as u64,
+            "scan took {} read RPCs, want <= {}",
+            t.reads.load(Ordering::SeqCst),
+            size / window
+        );
+        assert_eq!(t.opens.load(Ordering::SeqCst), 1, "one inline open learned the size");
+        assert!(m.readahead_pages() > 0);
+    }
+
+    #[test]
+    fn writeback_coalesces_then_flushes_once() {
+        let (d, m) = dp();
+        let t = MockStore::new(Vec::new(), 64 << 10);
+        let h = handle();
+        for i in 0..100u64 {
+            let (w, eff, _) = d.write(&t, &h, i * 100, &[i as u8; 100]).unwrap();
+            assert_eq!(w, 100);
+            assert_eq!(eff, (i + 1) * 100);
+        }
+        assert_eq!(t.writes.load(Ordering::SeqCst), 0, "all writes buffered");
+        // read-your-writes before any flush
+        let (out, _) = d.read(&t, &h, 150, 100).unwrap();
+        assert_eq!(out[..50], [1u8; 50]);
+        assert_eq!(out[50..], [2u8; 50]);
+        assert!(d.flush(&t, &h).unwrap());
+        assert_eq!(t.writes.load(Ordering::SeqCst), 1, "100 writes -> one WriteBatch");
+        assert_eq!(m.wb_flush_segs(), 1, "sequential extents coalesced into one");
+        assert_eq!(t.data.lock().unwrap().len(), 10_000);
+        assert_eq!(d.dirty_bytes(h.ino), 0);
+        // idempotent
+        assert!(!d.flush(&t, &h).unwrap());
+    }
+
+    #[test]
+    fn remote_writer_causes_exactly_one_drop_and_retry() {
+        let (d, m) = dp();
+        let size = 64 << 10;
+        let t = MockStore::new(pattern(size), 0); // no inline: pure ReadBatch path
+        d.configure(DatapathConfig {
+            inline_limit: 0,
+            readahead_window: 0, // keep part of the file uncached
+            ..DatapathConfig::default()
+        });
+        let h = handle();
+        // cache the first two pages under gen 0
+        let (out, _) = d.read(&t, &h, 0, 8192).unwrap();
+        assert_eq!(out, &pattern(size)[..8192]);
+        // a remote writer replaces the contents (gen 0 -> 1)
+        let newc: Vec<u8> = (0..size).map(|i| (i % 7) as u8 ^ 0x5a).collect();
+        t.remote_write(newc.clone());
+        // reading uncached pages sends known_gen=0 -> StaleData -> drop+retry
+        let (out, _) = d.read(&t, &h, 8192, 8192).unwrap();
+        assert_eq!(out, &newc[8192..16384], "no stale bytes after the retry");
+        assert_eq!(m.stale_data_retries(), 1, "exactly one drop-and-retry");
+        // the previously cached prefix was dropped too: re-read is fresh
+        let (out, _) = d.read(&t, &h, 0, 4096).unwrap();
+        assert_eq!(out, &newc[..4096]);
+    }
+
+    #[test]
+    fn flush_with_stale_view_retries_unguarded_and_applies() {
+        let (d, m) = dp();
+        let size = 16 << 10;
+        let t = MockStore::new(pattern(size), 0);
+        d.configure(DatapathConfig { inline_limit: 0, ..DatapathConfig::default() });
+        let h = handle();
+        // cache the file under gen 0
+        let _ = d.read(&t, &h, 0, size as u32).unwrap();
+        // a remote writer bumps the generation
+        t.remote_write(pattern(size));
+        // our own buffered write must still land (retry without base_gen)
+        d.write(&t, &h, 4, b"ours").unwrap();
+        assert!(d.flush(&t, &h).unwrap());
+        assert_eq!(&t.data.lock().unwrap()[4..8], b"ours");
+        assert_eq!(m.stale_data_retries(), 1);
+        assert_eq!(t.writes.load(Ordering::SeqCst), 2, "guarded attempt + unguarded retry");
+    }
+
+    #[test]
+    fn truncate_local_trims_dirty_and_drops_pages() {
+        let (d, _) = dp();
+        let t = MockStore::new(pattern(8192), 64 << 10);
+        let h = handle();
+        let _ = d.read(&t, &h, 0, 8192).unwrap();
+        d.write(&t, &h, 9000, &[7u8; 100]).unwrap();
+        d.truncate_local(h.ino, 100);
+        assert_eq!(d.dirty_bytes(h.ino), 0, "extent beyond the new size was dropped");
+        assert_eq!(d.cached_bytes(), 0);
+        let (out, _) = d.read(&t, &h, 0, 8192).unwrap();
+        // mock store was not truncated (truncate RPC is the agent's job);
+        // but the local size bound applies until the next fetch reply
+        assert!(out.len() >= 100);
+    }
+
+    #[test]
+    fn meta_state_is_bounded_while_dirty_entries_survive() {
+        let (d, _) = dp();
+        let t = MockStore::new(pattern(512), 64 << 10);
+        // a dirty inode must outlive any GC pressure
+        let dirty_ino = Ino::new(0, 0, 7);
+        let mut hd = handle();
+        hd.ino = dirty_ino;
+        d.write(&t, &hd, 0, b"keep").unwrap();
+        // scan far more files than one shard's cap
+        for i in 0..(2 * META_SHARD_CAP * META_SHARDS) as u64 {
+            let mut h = handle();
+            h.ino = Ino::new(0, 0, 100_000 + i);
+            let _ = d.read(&t, &h, 0, 64).unwrap();
+        }
+        assert!(
+            d.meta_entries() <= META_SHARDS * META_SHARD_CAP,
+            "meta map must stay bounded, got {} entries",
+            d.meta_entries()
+        );
+        assert_eq!(d.dirty_bytes(dirty_ino), 4, "dirty entries are never evicted");
+        assert!(d.flush(&t, &hd).unwrap(), "and still flush correctly");
+    }
+
+    #[test]
+    fn extent_coalescing_rules() {
+        let mut m = BTreeMap::new();
+        let mut b = 0usize;
+        insert_extent(&mut m, &mut b, 100, &[1; 50]); // [100,150)
+        insert_extent(&mut m, &mut b, 150, &[2; 50]); // adjacent -> [100,200)
+        assert_eq!(m.len(), 1);
+        assert_eq!(b, 100);
+        insert_extent(&mut m, &mut b, 300, &[3; 10]); // disjoint
+        assert_eq!(m.len(), 2);
+        insert_extent(&mut m, &mut b, 120, &[9; 10]); // overlap: new bytes win
+        assert_eq!(m.len(), 2);
+        assert_eq!(b, 110);
+        let buf = &m[&100];
+        assert_eq!(buf[19], 1);
+        assert_eq!(buf[20], 9);
+        assert_eq!(buf[29], 9);
+        assert_eq!(buf[30], 1, "bytes after the overlap revert to the old extent");
+        insert_extent(&mut m, &mut b, 150, &[4; 200]); // bridges both -> one
+        assert_eq!(m.len(), 1);
+        let buf = &m[&100];
+        assert_eq!(buf.len(), 250);
+        assert_eq!(buf[buf.len() - 1], 4);
+        let empty = BTreeMap::new();
+        assert!(overlays_cover(&empty, &m, 100, 350));
+        assert!(!overlays_cover(&empty, &m, 99, 101));
+        assert!(!overlays_cover(&empty, &m, 100, 351));
+        // coverage across the union of the two overlays
+        let mut other = BTreeMap::new();
+        let mut ob = 0usize;
+        insert_extent(&mut other, &mut ob, 350, &[5; 50]); // m ends at 350
+        assert!(overlays_cover(&other, &m, 100, 400));
+        assert!(!overlays_cover(&other, &m, 100, 401));
+    }
+}

@@ -1,0 +1,256 @@
+//! The client page cache: fixed-size pages, sharded like
+//! [`crate::agent::cache::CacheTree`], bounded by a byte budget with
+//! CLOCK (second-chance) eviction.
+//!
+//! Pages hold *clean* data only — fetched from the server and stamped
+//! (in the owning [`super::Datapath`] inode metadata) with the data
+//! generation they were read under. Dirty bytes live in the write-back
+//! extent buffer, so evicting a page is always free: no flush, no loss.
+//!
+//! Each shard keeps its own FIFO ring with per-page reference bits; a
+//! `get` marks the page referenced, an insert over budget sweeps the
+//! ring giving referenced pages one second chance. The budget is split
+//! evenly across shards, which bounds the total without any cross-shard
+//! coordination.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::types::Ino;
+
+/// Power of two, matching the directory cache's sharding.
+const SHARD_COUNT: usize = 16;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct PageKey {
+    ino: Ino,
+    page: u64,
+}
+
+struct Page {
+    buf: Vec<u8>,
+    referenced: bool,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<PageKey, Page>,
+    /// CLOCK ring: keys in insertion order; stale entries (already
+    /// evicted via `drop_ino`) are skipped lazily.
+    ring: VecDeque<PageKey>,
+    bytes: usize,
+}
+
+pub struct PageCache {
+    shards: Vec<Mutex<Shard>>,
+    page_bytes: usize,
+    shard_budget: usize,
+}
+
+impl PageCache {
+    pub fn new(page_bytes: usize, cache_bytes: usize) -> PageCache {
+        let pb = page_bytes.max(512);
+        PageCache {
+            shards: (0..SHARD_COUNT).map(|_| Mutex::new(Shard::default())).collect(),
+            page_bytes: pb,
+            // every shard can hold at least one page, so tiny budgets
+            // degrade to a tiny cache instead of a broken one
+            shard_budget: (cache_bytes / SHARD_COUNT).max(pb),
+        }
+    }
+
+    fn shard(&self, ino: Ino, page: u64) -> &Mutex<Shard> {
+        let i = (ino.file as usize ^ page as usize ^ ((ino.host as usize) << 3))
+            & (SHARD_COUNT - 1);
+        &self.shards[i]
+    }
+
+    /// Clone out a page (zero-padded to `page_bytes`), marking it
+    /// recently used for the CLOCK sweep.
+    pub fn get(&self, ino: Ino, page: u64) -> Option<Vec<u8>> {
+        let mut g = self.shard(ino, page).lock().unwrap();
+        g.map.get_mut(&PageKey { ino, page }).map(|p| {
+            p.referenced = true;
+            p.buf.clone()
+        })
+    }
+
+    /// Copy `dst.len()` bytes starting at `src_off` of a resident page
+    /// straight into `dst` (the hot read path: one copy under the shard
+    /// lock, no intermediate allocation). Returns false on a miss.
+    pub fn copy_from(&self, ino: Ino, page: u64, src_off: usize, dst: &mut [u8]) -> bool {
+        let end = src_off + dst.len();
+        if end > self.page_bytes {
+            return false;
+        }
+        let mut g = self.shard(ino, page).lock().unwrap();
+        match g.map.get_mut(&PageKey { ino, page }) {
+            Some(p) => {
+                p.referenced = true;
+                dst.copy_from_slice(&p.buf[src_off..end]);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Is the page resident? (Does not touch the reference bit — used by
+    /// the fetch planner, which must not promote pages it will not read.)
+    pub fn contains(&self, ino: Ino, page: u64) -> bool {
+        self.shard(ino, page).lock().unwrap().map.contains_key(&PageKey { ino, page })
+    }
+
+    /// Install a page (padded/truncated to `page_bytes`), evicting via
+    /// CLOCK until the shard fits its budget share.
+    pub fn insert(&self, ino: Ino, page: u64, mut buf: Vec<u8>) {
+        buf.resize(self.page_bytes, 0);
+        let key = PageKey { ino, page };
+        let mut g = self.shard(ino, page).lock().unwrap();
+        if let Some(p) = g.map.get_mut(&key) {
+            p.buf = buf;
+            p.referenced = true;
+            return;
+        }
+        while g.bytes + self.page_bytes > self.shard_budget {
+            let k = match g.ring.pop_front() {
+                Some(k) => k,
+                None => break,
+            };
+            let evict = match g.map.get_mut(&k) {
+                None => continue, // stale ring entry
+                Some(p) if p.referenced => {
+                    p.referenced = false;
+                    false
+                }
+                Some(_) => true,
+            };
+            if evict {
+                g.map.remove(&k);
+                g.bytes -= self.page_bytes;
+            } else {
+                g.ring.push_back(k);
+            }
+        }
+        g.map.insert(key, Page { buf, referenced: false });
+        g.ring.push_back(key);
+        g.bytes += self.page_bytes;
+    }
+
+    /// Overwrite part of a resident page (write-back flush commit / own
+    /// writes made visible to the read path). A non-resident page is left
+    /// non-resident — the overlay in the dirty extents already served
+    /// reads, and a later miss refetches fresh bytes.
+    pub fn update(&self, ino: Ino, page: u64, off_in_page: usize, data: &[u8]) {
+        if off_in_page >= self.page_bytes || data.is_empty() {
+            return;
+        }
+        let mut g = self.shard(ino, page).lock().unwrap();
+        if let Some(p) = g.map.get_mut(&PageKey { ino, page }) {
+            let end = (off_in_page + data.len()).min(self.page_bytes);
+            p.buf[off_in_page..end].copy_from_slice(&data[..end - off_in_page]);
+        }
+    }
+
+    /// Drop every page of one file (data-generation invalidation).
+    pub fn drop_ino(&self, ino: Ino) {
+        for s in &self.shards {
+            let mut g = s.lock().unwrap();
+            let before = g.map.len();
+            g.map.retain(|k, _| k.ino != ino);
+            let evicted = before - g.map.len();
+            g.bytes -= evicted * self.page_bytes;
+            // purge the ring too: an invalidation-heavy workload that
+            // never exceeds the byte budget would otherwise grow stale
+            // ring entries without bound (the sweep only runs on
+            // over-budget inserts)
+            if evicted > 0 {
+                g.ring.retain(|k| k.ino != ino);
+            }
+        }
+    }
+
+    /// Total resident bytes (diagnostics).
+    pub fn bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
+    /// Total resident pages (diagnostics).
+    pub fn pages(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ino(file: u64) -> Ino {
+        Ino::new(0, 0, file)
+    }
+
+    #[test]
+    fn insert_get_update_roundtrip() {
+        let c = PageCache::new(4096, 1 << 20);
+        assert!(c.get(ino(1), 0).is_none());
+        c.insert(ino(1), 0, vec![7; 100]); // short buf is zero-padded
+        let buf = c.get(ino(1), 0).unwrap();
+        assert_eq!(buf.len(), 4096);
+        assert_eq!(&buf[..100], &[7u8; 100][..]);
+        assert_eq!(buf[100], 0);
+        c.update(ino(1), 0, 98, &[9, 9, 9, 9]);
+        let buf = c.get(ino(1), 0).unwrap();
+        assert_eq!(&buf[98..102], &[9, 9, 9, 9]);
+        // updating a non-resident page is a no-op
+        c.update(ino(1), 5, 0, &[1]);
+        assert!(c.get(ino(1), 5).is_none());
+        // the copy-into fast path agrees with get()
+        let mut sub = [0u8; 4];
+        assert!(c.copy_from(ino(1), 0, 98, &mut sub));
+        assert_eq!(sub, [9, 9, 9, 9]);
+        assert!(!c.copy_from(ino(1), 5, 0, &mut sub), "miss");
+        assert!(!c.copy_from(ino(1), 0, 4093, &mut sub), "out-of-page range refused");
+    }
+
+    #[test]
+    fn budget_bounds_resident_bytes() {
+        // per-shard budget = max(4096, 64K/16) = one page per shard
+        let c = PageCache::new(4096, 64 << 10);
+        for p in 0..256u64 {
+            c.insert(ino(1), p, vec![p as u8; 4096]);
+        }
+        assert!(c.bytes() <= 64 << 10, "resident {} bytes over budget", c.bytes());
+        assert!(c.pages() >= 1, "the cache must still hold something");
+    }
+
+    #[test]
+    fn clock_gives_referenced_pages_a_second_chance() {
+        // one shard would be ideal but sharding is by key hash; use many
+        // pages of one file and re-reference one hot page continuously
+        let c = PageCache::new(4096, 128 << 10); // 2 pages per shard
+        c.insert(ino(1), 0, vec![1; 4096]);
+        for p in 1..512u64 {
+            let _ = c.get(ino(1), 0); // keep it referenced
+            c.insert(ino(1), p, vec![2; 4096]);
+        }
+        assert!(
+            c.get(ino(1), 0).is_some(),
+            "continuously referenced page must survive a streaming sweep"
+        );
+    }
+
+    #[test]
+    fn drop_ino_removes_only_that_file() {
+        let c = PageCache::new(4096, 1 << 20);
+        for p in 0..8 {
+            c.insert(ino(1), p, vec![1; 4096]);
+            c.insert(ino(2), p, vec![2; 4096]);
+        }
+        c.drop_ino(ino(1));
+        for p in 0..8 {
+            assert!(c.get(ino(1), p).is_none());
+            assert!(c.get(ino(2), p).is_some());
+        }
+        assert_eq!(c.bytes(), 8 * 4096);
+    }
+
+}

@@ -30,6 +30,10 @@ pub enum FsError {
     StaleLease,
     /// Per-process open-fd cap reached (EMFILE).
     TooManyOpenFiles,
+    /// A data-plane request carried a data generation the server has
+    /// since bumped (another writer got in between): the client must
+    /// drop its cached pages and retry once.
+    StaleData,
 }
 
 impl fmt::Display for FsError {
@@ -53,6 +57,7 @@ impl fmt::Display for FsError {
             FsError::Io(m) => write!(f, "I/O error: {m}"),
             FsError::StaleLease => write!(f, "stale permission lease (epoch bumped)"),
             FsError::TooManyOpenFiles => write!(f, "too many open files"),
+            FsError::StaleData => write!(f, "stale data generation (concurrent writer)"),
         }
     }
 }
@@ -81,6 +86,7 @@ impl FsError {
             FsError::Io(m) => (16, m),
             FsError::StaleLease => (17, ""),
             FsError::TooManyOpenFiles => (18, ""),
+            FsError::StaleData => (19, ""),
         }
     }
 
@@ -104,6 +110,7 @@ impl FsError {
             16 => FsError::Io(msg),
             17 => FsError::StaleLease,
             18 => FsError::TooManyOpenFiles,
+            19 => FsError::StaleData,
             other => FsError::Protocol(format!("unknown error code {other}")),
         }
     }
@@ -155,6 +162,7 @@ mod tests {
             FsError::Io("disk".into()),
             FsError::StaleLease,
             FsError::TooManyOpenFiles,
+            FsError::StaleData,
         ];
         for e in all {
             let (code, msg) = e.to_wire();

@@ -629,6 +629,158 @@ pub fn print_handle_reopen(rows: &[HandleReopenRow]) {
     }
 }
 
+/// Data-plane small-file sweep (§7 ablation): open + full read (cold
+/// pages), re-read (warm pages), and a chunked rewrite + close, across
+/// file sizes × inline on/off × write-back on/off. Feeds
+/// `BENCH_datapath.json`.
+#[derive(Debug, Clone)]
+pub struct DatapathRow {
+    pub size_bytes: u32,
+    pub inline: bool,
+    pub writeback: bool,
+    /// open + read-everything + close on a fresh agent (µs / access).
+    pub cold_read_us: f64,
+    /// data (read/write) RPCs that access cost.
+    pub cold_read_data_rpcs: f64,
+    /// the same access again, page cache warm.
+    pub warm_read_us: f64,
+    pub warm_read_data_rpcs: f64,
+    /// open + 16 chunked writes + close (µs / run).
+    pub write_us: f64,
+    pub write_data_rpcs: f64,
+    /// aggregate data-plane counters over the row's iterations
+    pub page_hits: u64,
+    pub page_misses: u64,
+    pub readahead_pages: u64,
+    pub flush_rpcs: u64,
+    pub flush_segs: u64,
+}
+
+/// Build one single-server namespace with a file per size, then measure
+/// every (inline, writeback) combination on fresh agents.
+pub fn ablation_datapath(net: NetConfig, sizes: &[u32], iters: usize) -> Vec<DatapathRow> {
+    use crate::blib::Buffet;
+    use crate::datapath::DatapathConfig;
+    use crate::types::Credentials;
+
+    let cluster =
+        crate::cluster::BuffetCluster::spawn_with(1, net, Backing::Mem, false, ServiceConfig::unbounded());
+    // unmetered setup over a zero-latency link
+    let (setup, _) = cluster.make_agent_with(NetConfig::zero());
+    let admin = Buffet::process(setup, Credentials::root());
+    // world-writable: the measured uid-1000 processes create their
+    // rewrite targets in here
+    admin.mkdir("/dp", 0o777).expect("mkdir /dp");
+    for &size in sizes {
+        let content: Vec<u8> = (0..size).map(|i| (i % 251) as u8).collect();
+        admin.put(&format!("/dp/r{size}"), &content).expect("fileset");
+    }
+
+    let cred = Credentials::new(1000, 1000);
+    let mut rows = Vec::new();
+    for &(inline, writeback) in &[(true, true), (true, false), (false, true), (false, false)] {
+        for &size in sizes {
+            let cfg = DatapathConfig {
+                inline_limit: if inline { 64 << 10 } else { 0 },
+                writeback,
+                ..DatapathConfig::default()
+            };
+            let path = format!("/dp/r{size}");
+            let (mut cold_us, mut cold_rpcs) = (0.0f64, 0.0f64);
+            let (mut warm_us, mut warm_rpcs) = (0.0f64, 0.0f64);
+            let (mut write_us, mut write_rpcs) = (0.0f64, 0.0f64);
+            let (mut hits, mut misses, mut ra, mut flushes, mut segs) = (0, 0, 0, 0, 0);
+            for it in 0..iters {
+                let (agent, metrics) = cluster.make_agent();
+                agent.enable_datapath(cfg);
+                let p = Buffet::process(agent, cred.clone());
+                // warm the namespace (unmeasured): resolve + listing
+                let _ = p.stat(&path).expect("stat");
+                let read_all = || -> (f64, f64) {
+                    let before = metrics.count("read") + metrics.count("write");
+                    let t0 = Instant::now();
+                    let fd = p.open(&path, OpenFlags::RDONLY).expect("open");
+                    let mut got = 0usize;
+                    loop {
+                        let chunk = p.read(fd, 65536).expect("read");
+                        if chunk.is_empty() {
+                            break;
+                        }
+                        got += chunk.len();
+                    }
+                    p.close(fd).expect("close");
+                    assert_eq!(got as u32, size, "scan must return the whole file");
+                    let dt = t0.elapsed().as_secs_f64() * 1e6;
+                    (dt, (metrics.count("read") + metrics.count("write") - before) as f64)
+                };
+                let (us, rpcs) = read_all();
+                cold_us += us;
+                cold_rpcs += rpcs;
+                let (us, rpcs) = read_all();
+                warm_us += us;
+                warm_rpcs += rpcs;
+                // rewrite: 16 chunks then close (close is the flush point)
+                let wpath = format!("/dp/w{size}_{inline}_{writeback}_{it}");
+                let before = metrics.count("read") + metrics.count("write");
+                let chunk = vec![0x6Bu8; (size as usize / 16).max(1)];
+                let t0 = Instant::now();
+                let fd = p.open(&wpath, OpenFlags::RDWR.with_create()).expect("create");
+                for _ in 0..16 {
+                    p.write(fd, &chunk).expect("write");
+                }
+                p.close(fd).expect("close");
+                write_us += t0.elapsed().as_secs_f64() * 1e6;
+                write_rpcs += (metrics.count("read") + metrics.count("write") - before) as f64;
+                hits += metrics.page_hits();
+                misses += metrics.page_misses();
+                ra += metrics.readahead_pages();
+                flushes += metrics.wb_flush_rpcs();
+                segs += metrics.wb_flush_segs();
+            }
+            let n = iters.max(1) as f64;
+            rows.push(DatapathRow {
+                size_bytes: size,
+                inline,
+                writeback,
+                cold_read_us: cold_us / n,
+                cold_read_data_rpcs: cold_rpcs / n,
+                warm_read_us: warm_us / n,
+                warm_read_data_rpcs: warm_rpcs / n,
+                write_us: write_us / n,
+                write_data_rpcs: write_rpcs / n,
+                page_hits: hits,
+                page_misses: misses,
+                readahead_pages: ra,
+                flush_rpcs: flushes,
+                flush_segs: segs,
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_datapath(rows: &[DatapathRow]) {
+    println!("data-plane small-file sweep — open+read / re-read / 16-chunk write (per access)");
+    println!(
+        "{:<9} {:>7} {:>9} {:>11} {:>9} {:>11} {:>9} {:>11} {:>9}",
+        "size", "inline", "writeback", "cold_us", "dataRPC", "warm_us", "dataRPC", "write_us", "dataRPC"
+    );
+    for r in rows {
+        println!(
+            "{:<9} {:>7} {:>9} {:>11.1} {:>9.2} {:>11.1} {:>9.2} {:>11.1} {:>9.2}",
+            r.size_bytes,
+            r.inline,
+            r.writeback,
+            r.cold_read_us,
+            r.cold_read_data_rpcs,
+            r.warm_read_us,
+            r.warm_read_data_rpcs,
+            r.write_us,
+            r.write_data_rpcs
+        );
+    }
+}
+
 /// One Buffet process doing the paper's open-read-close on every file of
 /// a pre-built SUT — helper for criterion-style loops.
 pub fn steady_access(sut: &Sut, spec: &FileSetSpec, stream: &mut AccessStream, pid: u32) {
@@ -763,6 +915,23 @@ mod tests {
             assert!(r.lease_hits as usize >= r.siblings, "every relative open is a lease hit");
             assert_eq!(r.stale_retries, 0, "nothing revoked anything");
         }
+    }
+
+    #[test]
+    fn datapath_sweep_inline_is_rpc_free_and_writeback_coalesces() {
+        let rows = ablation_datapath(NetConfig::zero(), &[2048], 2);
+        assert_eq!(rows.len(), 4, "four (inline, writeback) combinations");
+        let find = |inline: bool, wb: bool| {
+            rows.iter().find(|r| r.inline == inline && r.writeback == wb).unwrap()
+        };
+        let best = find(true, true);
+        assert_eq!(best.cold_read_data_rpcs, 0.0, "inline open: zero data RPCs");
+        assert_eq!(best.warm_read_data_rpcs, 0.0, "page cache: zero data RPCs warm");
+        assert!(best.write_data_rpcs <= 2.0, "write-back coalesces the 16 writes");
+        assert!(best.flush_segs >= 1);
+        let worst = find(false, false);
+        assert!(worst.cold_read_data_rpcs >= 1.0, "no inline: the read pays a data RPC");
+        assert!(worst.write_data_rpcs >= 16.0, "write-through: one RPC per write");
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod baseline;
 pub mod blib;
 pub mod cluster;
 pub mod codec;
+pub mod datapath;
 pub mod error;
 pub mod harness;
 pub mod metrics;

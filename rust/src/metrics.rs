@@ -48,6 +48,31 @@ pub struct RpcMetrics {
     /// epoch moved, or the server answered `StaleLease`) and re-resolved
     /// before retrying, per op.
     stale_retries: [AtomicU64; 9],
+    // -- client data plane (rust/src/datapath, §7) ---------------------------
+    /// Pages served from the client page cache (no RPC).
+    page_hits: AtomicU64,
+    /// Pages that had to be fetched from the server.
+    page_misses: AtomicU64,
+    /// Pages fetched beyond the requested range by sequential read-ahead.
+    readahead_pages: AtomicU64,
+    /// `ReadBatch` RPCs whose window was extended by read-ahead.
+    readahead_rpcs: AtomicU64,
+    /// Opens whose reply carried the whole file inline (zero data RPCs).
+    inline_opens: AtomicU64,
+    /// Bytes shipped inline on open replies.
+    inline_bytes: AtomicU64,
+    /// Application `write()`s absorbed by the write-back buffer.
+    wb_writes: AtomicU64,
+    /// Bytes absorbed by the write-back buffer.
+    wb_bytes_buffered: AtomicU64,
+    /// `WriteBatch` flush RPCs issued (coalescing ratio = wb_writes / this).
+    wb_flush_rpcs: AtomicU64,
+    /// Dirty extents shipped across all flushes.
+    wb_flush_segs: AtomicU64,
+    /// Bytes shipped across all flushes.
+    wb_flush_bytes: AtomicU64,
+    /// `StaleData` answers that forced a drop-pages-and-retry round.
+    stale_data_retries: AtomicU64,
 }
 
 impl RpcMetrics {
@@ -134,6 +159,73 @@ impl RpcMetrics {
         self.walk_depth.lock().unwrap().clone()
     }
 
+    // -- data-plane recording (consumed by BENCH_datapath.json) --------------
+
+    pub fn record_page_hits(&self, pages: u64) {
+        self.page_hits.fetch_add(pages, Ordering::Relaxed);
+    }
+    pub fn record_page_misses(&self, pages: u64) {
+        self.page_misses.fetch_add(pages, Ordering::Relaxed);
+    }
+    /// One read-ahead-extended fetch, prefetching `pages` beyond the ask.
+    pub fn record_readahead(&self, pages: u64) {
+        self.readahead_rpcs.fetch_add(1, Ordering::Relaxed);
+        self.readahead_pages.fetch_add(pages, Ordering::Relaxed);
+    }
+    pub fn record_inline_open(&self, bytes: u64) {
+        self.inline_opens.fetch_add(1, Ordering::Relaxed);
+        self.inline_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+    pub fn record_wb_write(&self, bytes: u64) {
+        self.wb_writes.fetch_add(1, Ordering::Relaxed);
+        self.wb_bytes_buffered.fetch_add(bytes, Ordering::Relaxed);
+    }
+    pub fn record_wb_flush(&self, segs: u64, bytes: u64) {
+        self.wb_flush_rpcs.fetch_add(1, Ordering::Relaxed);
+        self.wb_flush_segs.fetch_add(segs, Ordering::Relaxed);
+        self.wb_flush_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+    pub fn record_stale_data_retry(&self) {
+        self.stale_data_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn page_hits(&self) -> u64 {
+        self.page_hits.load(Ordering::Relaxed)
+    }
+    pub fn page_misses(&self) -> u64 {
+        self.page_misses.load(Ordering::Relaxed)
+    }
+    pub fn readahead_pages(&self) -> u64 {
+        self.readahead_pages.load(Ordering::Relaxed)
+    }
+    pub fn readahead_rpcs(&self) -> u64 {
+        self.readahead_rpcs.load(Ordering::Relaxed)
+    }
+    pub fn inline_opens(&self) -> u64 {
+        self.inline_opens.load(Ordering::Relaxed)
+    }
+    pub fn inline_bytes(&self) -> u64 {
+        self.inline_bytes.load(Ordering::Relaxed)
+    }
+    pub fn wb_writes(&self) -> u64 {
+        self.wb_writes.load(Ordering::Relaxed)
+    }
+    pub fn wb_bytes_buffered(&self) -> u64 {
+        self.wb_bytes_buffered.load(Ordering::Relaxed)
+    }
+    pub fn wb_flush_rpcs(&self) -> u64 {
+        self.wb_flush_rpcs.load(Ordering::Relaxed)
+    }
+    pub fn wb_flush_segs(&self) -> u64 {
+        self.wb_flush_segs.load(Ordering::Relaxed)
+    }
+    pub fn wb_flush_bytes(&self) -> u64 {
+        self.wb_flush_bytes.load(Ordering::Relaxed)
+    }
+    pub fn stale_data_retries(&self) -> u64 {
+        self.stale_data_retries.load(Ordering::Relaxed)
+    }
+
     pub fn reset(&self) {
         for c in &self.counts {
             c.store(0, Ordering::Relaxed);
@@ -143,6 +235,22 @@ impl RpcMetrics {
         self.lat.lock().unwrap().clear();
         *self.walk_depth.lock().unwrap() = Histogram::new();
         for c in self.lease_hits.iter().chain(self.stale_retries.iter()) {
+            c.store(0, Ordering::Relaxed);
+        }
+        for c in [
+            &self.page_hits,
+            &self.page_misses,
+            &self.readahead_pages,
+            &self.readahead_rpcs,
+            &self.inline_opens,
+            &self.inline_bytes,
+            &self.wb_writes,
+            &self.wb_bytes_buffered,
+            &self.wb_flush_rpcs,
+            &self.wb_flush_segs,
+            &self.wb_flush_bytes,
+            &self.stale_data_retries,
+        ] {
             c.store(0, Ordering::Relaxed);
         }
     }
@@ -182,6 +290,20 @@ impl RpcMetrics {
         let (lh, sr) = (self.total_lease_hits(), self.total_stale_retries());
         if lh + sr > 0 {
             out.push_str(&format!("  lease hits={lh} stale_retries={sr}\n"));
+        }
+        if self.page_hits() + self.page_misses() + self.inline_opens() + self.wb_writes() > 0 {
+            out.push_str(&format!(
+                "  datapath: pages hit={} miss={} readahead={} inline_opens={} \
+                 wb_writes={} flushes={} flush_segs={} stale_data={}\n",
+                self.page_hits(),
+                self.page_misses(),
+                self.readahead_pages(),
+                self.inline_opens(),
+                self.wb_writes(),
+                self.wb_flush_rpcs(),
+                self.wb_flush_segs(),
+                self.stale_data_retries(),
+            ));
         }
         out
     }
@@ -272,6 +394,35 @@ mod tests {
         assert_eq!(m.count("lease"), 1);
         assert_eq!(m.count("invalidate"), 0, "must not alias into the catch-all");
         assert_eq!(m.metadata_rpcs(), 1);
+    }
+
+    #[test]
+    fn datapath_counters_record_report_and_reset() {
+        let m = RpcMetrics::new();
+        m.record_page_hits(10);
+        m.record_page_misses(2);
+        m.record_readahead(31);
+        m.record_inline_open(2048);
+        m.record_wb_write(100);
+        m.record_wb_write(100);
+        m.record_wb_flush(1, 200);
+        m.record_stale_data_retry();
+        assert_eq!(m.page_hits(), 10);
+        assert_eq!(m.page_misses(), 2);
+        assert_eq!(m.readahead_pages(), 31);
+        assert_eq!(m.readahead_rpcs(), 1);
+        assert_eq!(m.inline_opens(), 1);
+        assert_eq!(m.inline_bytes(), 2048);
+        assert_eq!(m.wb_writes(), 2);
+        assert_eq!(m.wb_bytes_buffered(), 200);
+        assert_eq!(m.wb_flush_rpcs(), 1);
+        assert_eq!(m.wb_flush_segs(), 1);
+        assert_eq!(m.wb_flush_bytes(), 200);
+        assert_eq!(m.stale_data_retries(), 1);
+        let r = m.report();
+        assert!(r.contains("datapath:"), "report must surface data-plane counters: {r}");
+        m.reset();
+        assert_eq!(m.page_hits() + m.wb_writes() + m.inline_opens() + m.stale_data_retries(), 0);
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::transport::{NotifyPush, Service, SharedTransport};
 use crate::types::{
     AccessMask, ClientId, Credentials, FileId, FileKind, HostId, Ino, W_OK, X_OK,
 };
-use crate::wire::{LeaseStamp, Notify, OpenCtx, Request, Response};
+use crate::wire::{LeaseStamp, Notify, OpenCtx, Request, Response, NO_GEN};
 
 use self::locks::FileLocks;
 use self::openlist::{OpenList, OpenRec};
@@ -57,7 +57,25 @@ pub struct ServerStats {
     pub lease_grants: AtomicU64,
     /// Dirfd-relative requests rejected for a stale lease epoch.
     pub stale_leases: AtomicU64,
+    /// Opens answered with the whole file inline (data plane, §7).
+    pub inline_opens: AtomicU64,
+    /// `ReadBatch` requests served.
+    pub batch_reads: AtomicU64,
+    /// `WriteBatch` flushes applied.
+    pub batch_writes: AtomicU64,
+    /// Data-plane requests rejected for a stale data generation.
+    pub stale_data: AtomicU64,
+    /// `DataInvalidate` pushes sent to caching clients.
+    pub data_invalidations_pushed: AtomicU64,
 }
+
+/// Servers inline file contents on open replies up to this size — the
+/// same default as [`crate::datapath::DatapathConfig::inline_limit`];
+/// the client opts in per open with `want_inline`.
+pub const SERVER_INLINE_LIMIT: u64 = 64 << 10;
+
+/// Shards of the per-file data-generation map (power of two).
+const DATA_GEN_SHARDS: usize = 16;
 
 pub struct BServer {
     pub fs: LocalFs,
@@ -72,6 +90,17 @@ pub struct BServer {
     /// `chmod`/`chown`/`rename` so outstanding [`LeaseStamp`]s go stale
     /// and relative ops force a re-resolve. Absent = epoch 0.
     lease_epochs: RwLock<HashMap<FileId, u64>>,
+    /// Per-file data generations (data plane, §7): bumped by every
+    /// write/truncate so cached pages stamped with an older generation
+    /// are rejected (`StaleData`) or revoked (`DataInvalidate` push).
+    /// Absent = generation 0. Sharded: every classic `Write` bumps too,
+    /// so this sits on the data hot path and must not serialize
+    /// unrelated files behind one lock.
+    data_gens: Vec<RwLock<HashMap<FileId, u64>>>,
+    /// Clients caching file *data* (registered by inline opens and
+    /// `ReadBatch { register }`), pushed a [`Notify::DataInvalidate`]
+    /// before a foreign write is applied.
+    data_registry: CacheRegistry,
     seq: AtomicU64,
     placement: Placement,
     pub stats: ServerStats,
@@ -91,6 +120,8 @@ impl BServer {
             peers: RwLock::new(HashMap::new()),
             pushers: RwLock::new(HashMap::new()),
             lease_epochs: RwLock::new(HashMap::new()),
+            data_gens: (0..DATA_GEN_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            data_registry: CacheRegistry::new(),
             seq: AtomicU64::new(1),
             placement,
             stats: ServerStats::default(),
@@ -115,6 +146,7 @@ impl BServer {
     pub fn drop_client(&self, client: ClientId) {
         self.pushers.write().unwrap().remove(&client);
         self.registry.drop_client(client);
+        self.data_registry.drop_client(client);
         self.openlist.drop_client(client);
     }
 
@@ -133,6 +165,63 @@ impl BServer {
     /// Current permission-lease epoch of a directory (0 until first bump).
     pub fn lease_epoch(&self, file: FileId) -> u64 {
         self.lease_epochs.read().unwrap().get(&file).copied().unwrap_or(0)
+    }
+
+    fn data_gen_shard(&self, file: FileId) -> &RwLock<HashMap<FileId, u64>> {
+        &self.data_gens[file as usize & (DATA_GEN_SHARDS - 1)]
+    }
+
+    /// Current data generation of a file (0 until the first write).
+    pub fn data_gen(&self, file: FileId) -> u64 {
+        self.data_gen_shard(file).read().unwrap().get(&file).copied().unwrap_or(0)
+    }
+
+    /// Clients currently registered for data-invalidation pushes.
+    pub fn clients_caching_data(&self, file: FileId) -> Vec<ClientId> {
+        self.data_registry.peek(file)
+    }
+
+    fn bump_data_gen(&self, file: FileId) -> u64 {
+        let mut g = self.data_gen_shard(file).write().unwrap();
+        let e = g.entry(file).or_insert(0);
+        *e += 1;
+        *e
+    }
+
+    fn forget_data_gen(&self, file: FileId) {
+        self.data_gen_shard(file).write().unwrap().remove(&file);
+    }
+
+    /// Data-plane flavour of the §3.4 barrier: push `DataInvalidate` to
+    /// every client caching this file's pages and wait for the acks —
+    /// called under the file's exclusive lock, *before* the write is
+    /// applied, so a client that refetches after dropping serializes
+    /// behind the mutation. The writing client itself keeps both its
+    /// pages (it applies its own bytes locally) and its registration.
+    fn data_invalidate_barrier(&self, file: FileId, skip: Option<ClientId>) {
+        let clients = self.data_registry.take(file);
+        if clients.is_empty() {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ino = self.fs.ino(file);
+        let gen = self.data_gen(file);
+        let pushers = self.pushers.read().unwrap();
+        std::thread::scope(|scope| {
+            for c in &clients {
+                if Some(*c) == skip {
+                    self.data_registry.register(file, *c);
+                    continue;
+                }
+                if let Some(p) = pushers.get(c) {
+                    let p = Arc::clone(p);
+                    self.stats.data_invalidations_pushed.fetch_add(1, Ordering::Relaxed);
+                    scope.spawn(move || {
+                        let _ = p.push(Notify::DataInvalidate { seq, ino, gen });
+                    });
+                }
+            }
+        });
     }
 
     /// Revoke every outstanding lease on `file`: stamps carrying the old
@@ -321,14 +410,39 @@ impl BServer {
                 self.handle_inner(Request::Open { ino: entry.ino, flags, cred, client, handle, want_inline })
             }
             Request::Open { ino, flags, cred, client, handle, want_inline } => {
-                // Explicit open: only the Lustre baselines use this against
-                // an MDS; a BServer still honours it (e.g. fallback paths).
+                // Explicit open: the Lustre baselines use this against an
+                // MDS; the data plane uses it (with `want_inline`) as the
+                // first-touch fetch that also completes the open record.
                 let file = self.fs.validate(ino)?;
                 let attr = self.fs.getattr(file)?;
                 perm::require_access(&attr.perm, &cred, flags.access_mask())?;
                 self.complete_open(file, &OpenCtx { client, handle, flags, cred }, false);
                 self.stats.explicit_opens.fetch_add(1, Ordering::Relaxed);
-                let _ = want_inline; // BServers never inline (DoM is MDS-only)
+                // inline only for opens that were GRANTED read access —
+                // a write-only open must never receive bytes its cred
+                // was not checked against (same gate as the DoM MDS)
+                if want_inline && flags.read && attr.kind == FileKind::Regular {
+                    // piggyback the contents (≤ inline limit) + the data
+                    // generation on the reply; shared file lock keeps the
+                    // (attr, gen, data, registration) quadruple atomic vs
+                    // a concurrent write's invalidate-then-apply
+                    let _g = self.locks.read(file);
+                    let attr = self.fs.getattr(file)?;
+                    // every inline opener is registered for pushes even
+                    // when the file is too big to ship: the reply's size
+                    // is cached state too, and a client trusting a stale
+                    // size would serve phantom EOFs with zero RPCs
+                    self.data_registry.register(file, client);
+                    let data_gen = self.data_gen(file);
+                    let data = if attr.size <= SERVER_INLINE_LIMIT {
+                        self.stats.inline_opens.fetch_add(1, Ordering::Relaxed);
+                        let (d, _) = self.fs.read(file, 0, attr.size as u32)?;
+                        Some(d)
+                    } else {
+                        None
+                    };
+                    return Ok(Response::OpenedInline { attr, data_gen, data });
+                }
                 Ok(Response::Opened { attr, inline: None })
             }
             Request::Read { ino, off, len, open_ctx } => {
@@ -346,8 +460,66 @@ impl BServer {
                     self.complete_open(file, ctx, true);
                 }
                 let _g = self.locks.write(file);
+                // data plane: revoke cached pages before applying (§3.4
+                // discipline); the writer itself — when identifiable —
+                // keeps its view and applies its own bytes locally
+                self.bump_data_gen(file);
+                self.data_invalidate_barrier(file, open_ctx.as_ref().map(|c| c.client));
                 let (written, new_size) = self.fs.write(file, off, &data)?;
                 Ok(Response::Written { written, new_size })
+            }
+            Request::ReadBatch { ino, ranges, known_gen, client, register, open_ctx } => {
+                let file = self.fs.validate(ino)?;
+                if let Some(ctx) = &open_ctx {
+                    self.complete_open(file, ctx, true);
+                }
+                self.stats.batch_reads.fetch_add(1, Ordering::Relaxed);
+                let _g = self.locks.read(file);
+                let data_gen = self.data_gen(file);
+                if known_gen != NO_GEN && known_gen != data_gen {
+                    // the client's cached pages predate a foreign write:
+                    // merging this reply with them would mix generations
+                    self.stats.stale_data.fetch_add(1, Ordering::Relaxed);
+                    return Err(FsError::StaleData);
+                }
+                if register {
+                    self.data_registry.register(file, client);
+                }
+                let size = self.fs.getattr(file)?.size;
+                let mut segs = Vec::with_capacity(ranges.len());
+                for r in &ranges {
+                    let (d, _) = self.fs.read(file, r.off, r.len)?;
+                    segs.push(d);
+                }
+                Ok(Response::DataBatch { segs, size, data_gen })
+            }
+            Request::WriteBatch { ino, segs, base_gen, client, register, open_ctx } => {
+                let file = self.fs.validate(ino)?;
+                if let Some(ctx) = &open_ctx {
+                    self.complete_open(file, ctx, true);
+                }
+                self.stats.batch_writes.fetch_add(1, Ordering::Relaxed);
+                let _g = self.locks.write(file);
+                let cur = self.data_gen(file);
+                if base_gen != NO_GEN && base_gen != cur {
+                    // reject BEFORE applying: the client drops its read
+                    // view and retries the (self-contained) flush unguarded
+                    self.stats.stale_data.fetch_add(1, Ordering::Relaxed);
+                    return Err(FsError::StaleData);
+                }
+                let data_gen = self.bump_data_gen(file);
+                self.data_invalidate_barrier(file, Some(client));
+                if register {
+                    self.data_registry.register(file, client);
+                }
+                let mut written: u64 = 0;
+                let mut new_size = self.fs.getattr(file)?.size;
+                for s in &segs {
+                    let (w, ns) = self.fs.write(file, s.off, &s.data)?;
+                    written += w as u64;
+                    new_size = ns;
+                }
+                Ok(Response::WrittenBatch { written, new_size, data_gen })
             }
             Request::Close { ino, client, handle } => {
                 let file = self.fs.validate(ino)?;
@@ -426,6 +598,11 @@ impl BServer {
                     let _ = self.peer(entry.ino.host)?.call(Request::DropObject { ino: entry.ino });
                 } else {
                     self.locks.forget(entry.ino.file);
+                    self.forget_data_gen(entry.ino.file);
+                    // stale registrations must not outlive the file: a
+                    // reused FileId would otherwise push (and block on)
+                    // clients that never cached the new file
+                    let _ = self.data_registry.take(entry.ino.file);
                 }
                 Ok(Response::Unit)
             }
@@ -433,6 +610,8 @@ impl BServer {
                 let file = self.fs.validate(ino)?;
                 self.fs.drop_local_object(file)?;
                 self.locks.forget(file);
+                self.forget_data_gen(file);
+                let _ = self.data_registry.take(file);
                 Ok(Response::Unit)
             }
             Request::Rmdir { dir, name, cred } => {
@@ -513,6 +692,11 @@ impl BServer {
                 let attr = self.fs.getattr(file)?;
                 perm::require_access(&attr.perm, &cred, AccessMask::WRITE)?;
                 let _g = self.locks.write(file);
+                // truncate changes data: revoke every cached page (the
+                // request carries no client identity, so nobody is spared
+                // — the truncating client re-learns the size locally)
+                self.bump_data_gen(file);
+                self.data_invalidate_barrier(file, None);
                 self.fs.truncate(file, size)?;
                 Ok(Response::Unit)
             }
@@ -621,9 +805,10 @@ impl BServer {
                 self.stats.lease_grants.fetch_add(1, Ordering::Relaxed);
                 Ok(Response::Leased { attr, epoch: self.lease_epoch(file) })
             }
-            Request::OpenAt { lease, name, flags, cred, client, handle } => {
+            Request::OpenAt { lease, name, flags, cred, client, handle, want_inline } => {
                 // Relative open fallback (X-only dirs): the open record
-                // is written eagerly here, not deferred.
+                // is written eagerly here, not deferred. `want_inline`
+                // ships small-file contents on the same reply (§7).
                 let dir_file = self.check_lease(&lease)?;
                 self.require_dir_access(dir_file, &cred, AccessMask::EXEC)?;
                 let entry = self.fs.lookup(dir_file, &name)?;
@@ -636,7 +821,7 @@ impl BServer {
                         cred,
                         client,
                         handle,
-                        want_inline: false,
+                        want_inline,
                     });
                 }
                 self.handle_inner(Request::Open {
@@ -645,7 +830,7 @@ impl BServer {
                     cred,
                     client,
                     handle,
-                    want_inline: false,
+                    want_inline,
                 })
             }
             Request::StatAt { lease, name, cred } => {
@@ -801,9 +986,13 @@ mod tests {
         struct Recorder(std::sync::Mutex<Vec<(u64, Vec<Ino>)>>);
         impl NotifyPush for Recorder {
             fn push(&self, n: Notify) -> FsResult<NotifyAck> {
-                let Notify::Invalidate { seq, dirs } = n;
-                self.0.lock().unwrap().push((seq, dirs));
-                Ok(NotifyAck { client: 9, seq })
+                match n {
+                    Notify::Invalidate { seq, dirs } => {
+                        self.0.lock().unwrap().push((seq, dirs));
+                        Ok(NotifyAck { client: 9, seq })
+                    }
+                    Notify::DataInvalidate { seq, .. } => Ok(NotifyAck { client: 9, seq }),
+                }
             }
         }
         let s = server();
@@ -1138,6 +1327,228 @@ mod tests {
             cred: cred(),
         });
         assert_eq!(r, Response::Err(FsError::StaleLease));
+    }
+
+    #[test]
+    fn inline_open_ships_small_files_with_generation() {
+        let s = server();
+        let e = create(&s, "small", 0o644);
+        s.handle(Request::Write { ino: e.ino, off: 0, data: vec![3; 2048], open_ctx: None });
+        let gen_after_write = s.data_gen(e.ino.file);
+        assert_eq!(gen_after_write, 1, "every write bumps the data generation");
+        let r = s.handle(Request::Open {
+            ino: e.ino,
+            flags: OpenFlags::RDONLY,
+            cred: cred(),
+            client: 7,
+            handle: 1,
+            want_inline: true,
+        });
+        match r {
+            Response::OpenedInline { attr, data_gen, data } => {
+                assert_eq!(attr.size, 2048);
+                assert_eq!(data_gen, 1);
+                assert_eq!(data.unwrap(), vec![3; 2048]);
+            }
+            other => panic!("inline open: {other:?}"),
+        }
+        assert_eq!(s.clients_caching_data(e.ino.file), vec![7]);
+        assert_eq!(s.stats.inline_opens.load(Ordering::Relaxed), 1);
+        // a big file answers with attr + generation but no data
+        let big = create(&s, "big", 0o644);
+        s.handle(Request::Write {
+            ino: big.ino,
+            off: SERVER_INLINE_LIMIT,
+            data: vec![1; 1],
+            open_ctx: None,
+        });
+        match s.handle(Request::Open {
+            ino: big.ino,
+            flags: OpenFlags::RDONLY,
+            cred: cred(),
+            client: 7,
+            handle: 2,
+            want_inline: true,
+        }) {
+            Response::OpenedInline { data, attr, .. } => {
+                assert!(data.is_none());
+                assert_eq!(attr.size, SERVER_INLINE_LIMIT + 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        // want_inline=false keeps the classic reply shape
+        assert!(matches!(
+            s.handle(Request::Open {
+                ino: e.ino,
+                flags: OpenFlags::RDONLY,
+                cred: cred(),
+                client: 7,
+                handle: 3,
+                want_inline: false,
+            }),
+            Response::Opened { inline: None, .. }
+        ));
+        // a write-only open is never handed bytes it was not read-checked
+        // against, even when it asks
+        assert!(matches!(
+            s.handle(Request::Open {
+                ino: e.ino,
+                flags: OpenFlags::WRONLY,
+                cred: cred(),
+                client: 7,
+                handle: 4,
+                want_inline: true,
+            }),
+            Response::Opened { inline: None, .. }
+        ));
+    }
+
+    #[test]
+    fn read_batch_serves_ranges_and_rejects_stale_generations() {
+        let s = server();
+        let e = create(&s, "f", 0o644);
+        s.handle(Request::Write { ino: e.ino, off: 0, data: (0..=255).collect(), open_ctx: None });
+        let gen = s.data_gen(e.ino.file);
+        let r = s.handle(Request::ReadBatch {
+            ino: e.ino,
+            ranges: vec![
+                crate::wire::ByteRange { off: 0, len: 4 },
+                crate::wire::ByteRange { off: 250, len: 100 },
+            ],
+            known_gen: gen,
+            client: 7,
+            register: true,
+            open_ctx: None,
+        });
+        match r {
+            Response::DataBatch { segs, size, data_gen } => {
+                assert_eq!(segs.len(), 2);
+                assert_eq!(segs[0], vec![0, 1, 2, 3]);
+                assert_eq!(segs[1], vec![250, 251, 252, 253, 254, 255], "short read at EOF");
+                assert_eq!(size, 256);
+                assert_eq!(data_gen, gen);
+            }
+            other => panic!("readbatch: {other:?}"),
+        }
+        assert_eq!(s.clients_caching_data(e.ino.file), vec![7]);
+        // a foreign write bumps the generation: the old stamp dies
+        s.handle(Request::Write { ino: e.ino, off: 0, data: vec![9; 8], open_ctx: None });
+        let r = s.handle(Request::ReadBatch {
+            ino: e.ino,
+            ranges: vec![crate::wire::ByteRange { off: 0, len: 4 }],
+            known_gen: gen,
+            client: 7,
+            register: false,
+            open_ctx: None,
+        });
+        assert_eq!(r, Response::Err(FsError::StaleData));
+        assert!(s.stats.stale_data.load(Ordering::Relaxed) >= 1);
+        // NO_GEN always serves
+        assert!(matches!(
+            s.handle(Request::ReadBatch {
+                ino: e.ino,
+                ranges: vec![crate::wire::ByteRange { off: 0, len: 4 }],
+                known_gen: NO_GEN,
+                client: 7,
+                register: false,
+                open_ctx: None,
+            }),
+            Response::DataBatch { .. }
+        ));
+    }
+
+    #[test]
+    fn write_batch_applies_segments_and_guards_base_generation() {
+        let s = server();
+        let e = create(&s, "f", 0o644);
+        let r = s.handle(Request::WriteBatch {
+            ino: e.ino,
+            segs: vec![
+                crate::wire::WriteSeg { off: 0, data: vec![1; 100] },
+                crate::wire::WriteSeg { off: 1000, data: vec![2; 50] },
+            ],
+            base_gen: NO_GEN,
+            client: 7,
+            register: true,
+            open_ctx: None,
+        });
+        match r {
+            Response::WrittenBatch { written, new_size, data_gen } => {
+                assert_eq!(written, 150);
+                assert_eq!(new_size, 1050);
+                assert_eq!(data_gen, 1);
+            }
+            other => panic!("writebatch: {other:?}"),
+        }
+        // hole between the segments reads zero
+        match s.handle(Request::Read { ino: e.ino, off: 99, len: 3, open_ctx: None }) {
+            Response::Data { data, .. } => assert_eq!(data, vec![1, 0, 0]),
+            other => panic!("{other:?}"),
+        }
+        // stale base generation is rejected WITHOUT applying
+        let r = s.handle(Request::WriteBatch {
+            ino: e.ino,
+            segs: vec![crate::wire::WriteSeg { off: 0, data: vec![9; 4] }],
+            base_gen: 0,
+            client: 7,
+            register: false,
+            open_ctx: None,
+        });
+        assert_eq!(r, Response::Err(FsError::StaleData));
+        match s.handle(Request::Read { ino: e.ino, off: 0, len: 4, open_ctx: None }) {
+            Response::Data { data, .. } => assert_eq!(data, vec![1; 4], "rejected flush not applied"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn foreign_write_pushes_data_invalidation_skipping_the_writer() {
+        struct Recorder(ClientId, std::sync::Mutex<Vec<(Ino, u64)>>);
+        impl NotifyPush for Recorder {
+            fn push(&self, n: Notify) -> FsResult<NotifyAck> {
+                match n {
+                    Notify::DataInvalidate { seq, ino, gen } => {
+                        self.1.lock().unwrap().push((ino, gen));
+                        Ok(NotifyAck { client: self.0, seq })
+                    }
+                    Notify::Invalidate { seq, .. } => Ok(NotifyAck { client: self.0, seq }),
+                }
+            }
+        }
+        let s = server();
+        let e = create(&s, "f", 0o644);
+        s.handle(Request::Write { ino: e.ino, off: 0, data: vec![1; 4096], open_ctx: None });
+        let reader = Arc::new(Recorder(8, std::sync::Mutex::new(Vec::new())));
+        let writer = Arc::new(Recorder(9, std::sync::Mutex::new(Vec::new())));
+        s.register_pusher(8, reader.clone());
+        s.register_pusher(9, writer.clone());
+        // both clients cache the file's data
+        for c in [8u32, 9u32] {
+            s.handle(Request::ReadBatch {
+                ino: e.ino,
+                ranges: vec![crate::wire::ByteRange { off: 0, len: 4096 }],
+                known_gen: NO_GEN,
+                client: c,
+                register: true,
+                open_ctx: None,
+            });
+        }
+        // client 9 flushes a write batch: 8 gets the push, 9 does not
+        s.handle(Request::WriteBatch {
+            ino: e.ino,
+            segs: vec![crate::wire::WriteSeg { off: 0, data: vec![7; 10] }],
+            base_gen: NO_GEN,
+            client: 9,
+            register: true,
+            open_ctx: None,
+        });
+        let pushed = reader.1.lock().unwrap();
+        assert_eq!(pushed.len(), 1);
+        assert_eq!(pushed[0].0, e.ino);
+        assert!(pushed[0].1 >= 2, "push carries the bumped generation");
+        assert!(writer.1.lock().unwrap().is_empty(), "the writer keeps its own view");
+        // the writer stayed registered; the reader must re-register
+        assert_eq!(s.clients_caching_data(e.ino.file), vec![9]);
     }
 
     #[test]

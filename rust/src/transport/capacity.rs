@@ -53,6 +53,14 @@ impl ServiceConfig {
             Request::Write { data, .. } => {
                 self.data_us + self.data_us_per_4k * (data.len() as u64).div_ceil(4096)
             }
+            Request::ReadBatch { ranges, .. } => {
+                let total: u64 = ranges.iter().map(|r| r.len as u64).sum();
+                self.data_us + self.data_us_per_4k * total.div_ceil(4096)
+            }
+            Request::WriteBatch { segs, .. } => {
+                let total: u64 = segs.iter().map(|s| s.data.len() as u64).sum();
+                self.data_us + self.data_us_per_4k * total.div_ceil(4096)
+            }
             _ => self.meta_us,
         };
         Duration::from_micros(us)

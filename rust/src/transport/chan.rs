@@ -276,9 +276,13 @@ mod tests {
         struct Sink(AtomicU64);
         impl NotifySink for Sink {
             fn notify(&self, n: Notify) -> NotifyAck {
-                let Notify::Invalidate { seq, dirs } = n;
-                self.0.fetch_add(dirs.len() as u64, Ordering::Relaxed);
-                NotifyAck { client: 9, seq }
+                match n {
+                    Notify::Invalidate { seq, dirs } => {
+                        self.0.fetch_add(dirs.len() as u64, Ordering::Relaxed);
+                        NotifyAck { client: 9, seq }
+                    }
+                    Notify::DataInvalidate { seq, .. } => NotifyAck { client: 9, seq },
+                }
             }
         }
         let sink = Arc::new(Sink(AtomicU64::new(0)));

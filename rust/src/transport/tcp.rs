@@ -9,7 +9,7 @@ use std::io::{Read, Write as IoWrite};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::codec::Wire;
 use crate::error::{FsError, FsResult};
@@ -18,6 +18,10 @@ use crate::transport::{Service, Transport};
 use crate::wire::{Request, Response};
 
 const MAX_FRAME: usize = 128 << 20;
+
+/// Default client-side response timeout: a dead peer must surface as a
+/// transport error, not hang the calling thread forever.
+pub const DEFAULT_CALL_TIMEOUT: Duration = Duration::from_secs(30);
 
 pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> FsResult<()> {
     if payload.len() > MAX_FRAME {
@@ -41,8 +45,53 @@ pub fn read_frame(stream: &mut TcpStream) -> FsResult<Vec<u8>> {
     Ok(buf)
 }
 
+/// Server-side frame read with an idle poll: `Ok(None)` when the short
+/// poll timeout elapsed with NO byte consumed (idle connection — the
+/// caller re-checks its stop flag), `Err` when the peer died or stalled
+/// *mid-frame*. A mid-frame timeout desynchronizes the stream (the next
+/// read would parse payload bytes as a length header), so — mirroring
+/// the client-side poisoning — the connection must be dropped, never
+/// resumed.
+fn read_frame_idle(stream: &mut TcpStream, idle: std::time::Duration) -> FsResult<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    match stream.read(&mut len[..1]) {
+        Ok(0) => return Err(FsError::Transport("peer closed".into())),
+        Ok(_) => {}
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+            ) =>
+        {
+            return Ok(None);
+        }
+        Err(e) => return Err(io_err(e)),
+    }
+    // a frame has started: finish it under the generous call timeout
+    stream.set_read_timeout(Some(DEFAULT_CALL_TIMEOUT)).ok();
+    let result = (|| {
+        stream.read_exact(&mut len[1..]).map_err(io_err)?;
+        let n = u32::from_le_bytes(len) as usize;
+        if n > MAX_FRAME {
+            return Err(FsError::Protocol(format!("frame too large: {n}")));
+        }
+        let mut buf = vec![0u8; n];
+        stream.read_exact(&mut buf).map_err(io_err)?;
+        Ok(buf)
+    })();
+    stream.set_read_timeout(Some(idle)).ok();
+    result.map(Some)
+}
+
 fn io_err(e: std::io::Error) -> FsError {
-    FsError::Transport(e.to_string())
+    // normalise both timeout spellings (TimedOut on most platforms,
+    // WouldBlock on some) so callers — including the server's idle-poll
+    // loop — can match on one phrase
+    if matches!(e.kind(), std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock) {
+        FsError::Transport(format!("timed out: {e}"))
+    } else {
+        FsError::Transport(e.to_string())
+    }
 }
 
 /// Serve `service` on `addr` until `stop` flips. One thread per
@@ -110,21 +159,19 @@ impl Drop for TcpServer {
 }
 
 fn serve_conn(mut stream: TcpStream, service: Arc<dyn Service>, stop: Arc<AtomicBool>) {
-    stream
-        .set_read_timeout(Some(std::time::Duration::from_millis(100)))
-        .ok();
+    let idle = std::time::Duration::from_millis(100);
+    stream.set_read_timeout(Some(idle)).ok();
+    // a client that stops draining must not pin this connection thread
+    // forever: a timed-out response write drops the connection below
+    stream.set_write_timeout(Some(DEFAULT_CALL_TIMEOUT)).ok();
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
         }
-        let frame = match read_frame(&mut stream) {
-            Ok(f) => f,
-            Err(FsError::Transport(msg))
-                if msg.contains("timed out") || msg.contains("would block") || msg.contains("Resource temporarily") =>
-            {
-                continue;
-            }
-            Err(_) => return, // peer went away
+        let frame = match read_frame_idle(&mut stream, idle) {
+            Ok(None) => continue,          // idle poll: re-check stop
+            Ok(Some(f)) => f,
+            Err(_) => return, // peer went away or stalled mid-frame
         };
         let resp = match Request::from_bytes(&frame) {
             Ok(req) => service.handle(req),
@@ -138,27 +185,92 @@ fn serve_conn(mut stream: TcpStream, service: Arc<dyn Service>, stop: Arc<Atomic
 
 /// Client endpoint over one TCP connection (serialized by a mutex — one
 /// in-flight RPC per connection, like a Lustre request slot).
+///
+/// `TCP_NODELAY` is set on both ends (here and in the server's accept
+/// loop): the data plane's small frames must not eat Nagle delays. A
+/// configurable read timeout bounds how long a call waits on a dead
+/// peer; a timeout leaves the stream desynchronized (the late response
+/// may still arrive and would answer the *next* request), so the
+/// transport poisons itself — every later call fails fast and the
+/// caller must reconnect.
 pub struct TcpTransport {
     stream: Mutex<TcpStream>,
     metrics: Arc<RpcMetrics>,
+    read_timeout: Option<Duration>,
+    poisoned: AtomicBool,
 }
 
 impl TcpTransport {
+    /// Connect with the [`DEFAULT_CALL_TIMEOUT`] response timeout.
     pub fn connect<A: ToSocketAddrs>(addr: A, metrics: Arc<RpcMetrics>) -> FsResult<Arc<TcpTransport>> {
+        Self::connect_with_timeout(addr, Some(DEFAULT_CALL_TIMEOUT), metrics)
+    }
+
+    /// Connect with an explicit response timeout (`None` = wait forever,
+    /// the pre-timeout behaviour).
+    pub fn connect_with_timeout<A: ToSocketAddrs>(
+        addr: A,
+        read_timeout: Option<Duration>,
+        metrics: Arc<RpcMetrics>,
+    ) -> FsResult<Arc<TcpTransport>> {
         let stream = TcpStream::connect(addr).map_err(io_err)?;
         stream.set_nodelay(true).ok();
-        Ok(Arc::new(TcpTransport { stream: Mutex::new(stream), metrics }))
+        stream.set_read_timeout(read_timeout).map_err(io_err)?;
+        // a peer that stops draining its socket must not hang the writer
+        // (and everyone queued behind the stream mutex) forever either
+        stream.set_write_timeout(read_timeout).map_err(io_err)?;
+        Ok(Arc::new(TcpTransport {
+            stream: Mutex::new(stream),
+            metrics,
+            read_timeout,
+            poisoned: AtomicBool::new(false),
+        }))
+    }
+
+    pub fn read_timeout(&self) -> Option<Duration> {
+        self.read_timeout
+    }
+
+    /// True after a response timeout: the stream is desynchronized and
+    /// this transport must be replaced.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
     }
 }
 
 impl Transport for TcpTransport {
     fn call(&self, req: Request) -> FsResult<Response> {
+        if self.poisoned.load(Ordering::Acquire) {
+            return Err(FsError::Transport(
+                "connection poisoned by an earlier response timeout; reconnect".into(),
+            ));
+        }
         let op = req.op();
         let t0 = Instant::now();
         let payload = req.to_bytes();
         let mut stream = self.stream.lock().unwrap();
-        write_frame(&mut stream, &payload)?;
-        let frame = read_frame(&mut stream)?;
+        if let Err(e) = write_frame(&mut stream, &payload) {
+            if matches!(&e, FsError::Transport(msg) if msg.contains("timed out")) {
+                // a partial frame may be on the wire: desynchronized
+                self.poisoned.store(true, Ordering::Release);
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+            }
+            return Err(e);
+        }
+        let frame = match read_frame(&mut stream) {
+            Err(FsError::Transport(msg)) if msg.contains("timed out") => {
+                // the late response may still arrive and would answer the
+                // NEXT request on this stream — poison it so no later
+                // call can receive a mismatched frame
+                self.poisoned.store(true, Ordering::Release);
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                return Err(FsError::Transport(format!(
+                    "no response to {op} within {:?}: {msg}",
+                    self.read_timeout
+                )));
+            }
+            other => other?,
+        };
         drop(stream);
         let resp = Response::from_bytes(&frame)?;
         self.metrics.record(op, payload.len(), frame.len(), t0.elapsed());

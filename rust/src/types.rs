@@ -215,15 +215,38 @@ pub struct OpenFlags {
     pub create: bool,
     pub truncate: bool,
     pub append: bool,
+    /// O_DIRECT-style: bypass the client data plane (page cache,
+    /// read-ahead, write-back) — every read/write is one synchronous RPC,
+    /// exactly the pre-datapath schedule. Keeps baseline comparisons
+    /// honest and gives applications an explicit coherence escape hatch.
+    pub direct: bool,
 }
 
 impl OpenFlags {
-    pub const RDONLY: OpenFlags =
-        OpenFlags { read: true, write: false, create: false, truncate: false, append: false };
-    pub const WRONLY: OpenFlags =
-        OpenFlags { read: false, write: true, create: false, truncate: false, append: false };
-    pub const RDWR: OpenFlags =
-        OpenFlags { read: true, write: true, create: false, truncate: false, append: false };
+    pub const RDONLY: OpenFlags = OpenFlags {
+        read: true,
+        write: false,
+        create: false,
+        truncate: false,
+        append: false,
+        direct: false,
+    };
+    pub const WRONLY: OpenFlags = OpenFlags {
+        read: false,
+        write: true,
+        create: false,
+        truncate: false,
+        append: false,
+        direct: false,
+    };
+    pub const RDWR: OpenFlags = OpenFlags {
+        read: true,
+        write: true,
+        create: false,
+        truncate: false,
+        append: false,
+        direct: false,
+    };
 
     pub fn with_create(mut self) -> Self {
         self.create = true;
@@ -235,6 +258,10 @@ impl OpenFlags {
     }
     pub fn with_append(mut self) -> Self {
         self.append = true;
+        self
+    }
+    pub fn with_direct(mut self) -> Self {
+        self.direct = true;
         self
     }
 
@@ -256,6 +283,7 @@ impl OpenFlags {
             | (self.create as u8) << 2
             | (self.truncate as u8) << 3
             | (self.append as u8) << 4
+            | (self.direct as u8) << 5
     }
     pub fn from_wire(v: u8) -> Self {
         OpenFlags {
@@ -264,6 +292,7 @@ impl OpenFlags {
             create: v & 4 != 0,
             truncate: v & 8 != 0,
             append: v & 16 != 0,
+            direct: v & 32 != 0,
         }
     }
 }
@@ -336,13 +365,16 @@ mod tests {
 
     #[test]
     fn open_flags_roundtrip_and_mask() {
-        for raw in 0..32u8 {
+        for raw in 0..64u8 {
             let f = OpenFlags::from_wire(raw);
             assert_eq!(OpenFlags::from_wire(f.to_wire()), f);
         }
         assert_eq!(OpenFlags::RDONLY.access_mask(), AccessMask::READ);
         assert_eq!(OpenFlags::RDWR.access_mask(), AccessMask::RW);
         assert_eq!(OpenFlags::WRONLY.with_append().access_mask(), AccessMask::WRITE);
+        // O_DIRECT is a transport hint, not an access bit
+        assert_eq!(OpenFlags::RDONLY.with_direct().access_mask(), AccessMask::READ);
+        assert!(OpenFlags::from_wire(OpenFlags::RDWR.with_direct().to_wire()).direct);
     }
 
     #[test]

@@ -17,6 +17,11 @@ use crate::types::{
     Attr, ClientId, Credentials, DirEntry, FileKind, HostId, Ino, OpenFlags,
 };
 
+/// Sentinel data generation meaning "no expectation": a [`Request::ReadBatch`]
+/// / [`Request::WriteBatch`] carrying it skips the server-side staleness
+/// check, and a client holding no cached pages sends it.
+pub const NO_GEN: u64 = u64::MAX;
+
 /// Deferred-open context: piggy-backs "Step 2 of open()" onto the first
 /// read/write of an incomplete-opened file (paper Fig. 2(b), b-2).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -26,6 +31,22 @@ pub struct OpenCtx {
     pub handle: u64,
     pub flags: OpenFlags,
     pub cred: Credentials,
+}
+
+/// One contiguous byte range of a [`Request::ReadBatch`] (page-aligned on
+/// the client, but the server imposes no alignment).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ByteRange {
+    pub off: u64,
+    pub len: u32,
+}
+
+/// One contiguous dirty extent of a [`Request::WriteBatch`] — exactly the
+/// bytes the application wrote, never read-modify-written page padding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WriteSeg {
+    pub off: u64,
+    pub data: Vec<u8>,
 }
 
 /// A directory permission lease, stamped onto every dirfd-relative
@@ -103,7 +124,9 @@ pub enum Request {
     /// Dirfd-relative open — the handle API's remote fallback (e.g. an
     /// X-only directory whose listing the cred may not READ). The open
     /// record is written eagerly (not deferred), under `handle`.
-    OpenAt { lease: LeaseStamp, name: String, flags: OpenFlags, cred: Credentials, client: ClientId, handle: u64 },
+    /// `want_inline` asks for the file's contents (up to the server's
+    /// inline limit) piggy-backed on the reply (data plane, §7).
+    OpenAt { lease: LeaseStamp, name: String, flags: OpenFlags, cred: Credentials, client: ClientId, handle: u64, want_inline: bool },
     /// Dirfd-relative stat: lookup `name` under the leased directory and
     /// return its attr (forwarded to the owning peer for remote objects).
     StatAt { lease: LeaseStamp, name: String, cred: Credentials },
@@ -120,6 +143,36 @@ pub enum Request {
     /// Dirfd-relative rename between two leased directories (both must
     /// live on this server). Applying it bumps BOTH lease epochs.
     RenameAt { src: LeaseStamp, sname: String, dst: LeaseStamp, dname: String, cred: Credentials },
+    /// Data plane: fetch several byte ranges of one file in ONE round
+    /// trip (cache miss + read-ahead window). `known_gen` is the data
+    /// generation of the pages the client already holds ([`NO_GEN`] when
+    /// it holds none): a mismatch means some other writer got in between,
+    /// and the server answers [`crate::error::FsError::StaleData`] so the
+    /// client drops its pages and retries once. `register` enrols the
+    /// client for data-invalidation pushes on this file.
+    ReadBatch {
+        ino: Ino,
+        ranges: Vec<ByteRange>,
+        known_gen: u64,
+        client: ClientId,
+        register: bool,
+        open_ctx: Option<OpenCtx>,
+    },
+    /// Data plane: flush a batch of coalesced dirty extents in ONE round
+    /// trip (write-back buffering turns N small `write()`s into one of
+    /// these). `base_gen` ([`NO_GEN`] = no expectation) guards the
+    /// client's cached read view: if the server's generation moved, it
+    /// answers `StaleData` *without applying*, the client drops its page
+    /// cache and retries the flush unguarded (the segments are exclusively
+    /// application-written bytes, so the retry is always safe).
+    WriteBatch {
+        ino: Ino,
+        segs: Vec<WriteSeg>,
+        base_gen: u64,
+        client: ClientId,
+        register: bool,
+        open_ctx: Option<OpenCtx>,
+    },
 }
 
 /// One directory listing returned by a [`Request::ResolvePath`] walk:
@@ -153,6 +206,20 @@ pub enum Response {
     /// Reply to [`Request::Lease`]: the directory's attr plus the
     /// server's current lease epoch for it.
     Leased { attr: Attr, epoch: u64 },
+    /// Reply to [`Request::ReadBatch`]: one data segment per requested
+    /// range (short at EOF), the file's current size, and the data
+    /// generation the segments were read under (stamped onto the
+    /// client's pages).
+    DataBatch { segs: Vec<Vec<u8>>, size: u64, data_gen: u64 },
+    /// Reply to [`Request::WriteBatch`]: total bytes applied, resulting
+    /// file size, and the post-write data generation.
+    WrittenBatch { written: u64, new_size: u64, data_gen: u64 },
+    /// Reply to an open with `want_inline` from a data-plane client: the
+    /// attr, the file's data generation, and — when the file fits the
+    /// server's inline limit — its entire contents, so open + full read
+    /// of a small file costs zero data RPCs. (The classic [`Response::Opened`]
+    /// stays untouched for the Lustre-DoM baseline.)
+    OpenedInline { attr: Attr, data_gen: u64, data: Option<Vec<u8>> },
 }
 
 /// Server→client push messages (the §3.4 consistency protocol).
@@ -162,6 +229,11 @@ pub enum Notify {
     /// child entry hanging off them). Client must ack before the server
     /// applies the permission change.
     Invalidate { seq: u64, dirs: Vec<Ino> },
+    /// Data plane: another writer bumped `ino`'s data generation to
+    /// `gen` — drop every cached page of it (dirty write-back extents
+    /// survive; they are the client's own bytes). Pushed over the same
+    /// §3.4 channel, before the write is applied.
+    DataInvalidate { seq: u64, ino: Ino, gen: u64 },
 }
 
 /// Client→server ack for a [`Notify::Invalidate`].
@@ -207,12 +279,20 @@ impl Request {
             Request::UnlinkAt { .. } => "unlink",
             Request::RmdirAt { .. } => "rmdir",
             Request::RenameAt { .. } => "rename",
+            Request::ReadBatch { .. } => "read",
+            Request::WriteBatch { .. } => "write",
         }
     }
 
     /// Metadata op (vs data op)? Used by the §2.1 motivation analyzer.
     pub fn is_metadata(&self) -> bool {
-        !matches!(self, Request::Read { .. } | Request::Write { .. })
+        !matches!(
+            self,
+            Request::Read { .. }
+                | Request::Write { .. }
+                | Request::ReadBatch { .. }
+                | Request::WriteBatch { .. }
+        )
     }
 
     /// Approximate payload size for the bandwidth model.
@@ -221,6 +301,10 @@ impl Request {
             Request::Write { data, .. } => 64 + data.len(),
             Request::ResolvePath { components, .. } => {
                 64 + components.iter().map(|c| 4 + c.len()).sum::<usize>()
+            }
+            Request::ReadBatch { ranges, .. } => 64 + ranges.len() * 12,
+            Request::WriteBatch { segs, .. } => {
+                64 + segs.iter().map(|s| 12 + s.data.len()).sum::<usize>()
             }
             _ => 64,
         }
@@ -236,6 +320,10 @@ impl Response {
             Response::Walked { dirs, .. } => {
                 32 + dirs.iter().map(|d| 64 + d.entries.len() * 48).sum::<usize>()
             }
+            Response::DataBatch { segs, .. } => {
+                32 + segs.iter().map(|s| 4 + s.len()).sum::<usize>()
+            }
+            Response::OpenedInline { data, .. } => 64 + data.as_ref().map_or(0, |d| d.len()),
             _ => 32,
         }
     }
@@ -307,6 +395,26 @@ impl Wire for LeaseStamp {
     }
     fn dec(d: &mut Dec) -> FsResult<Self> {
         Ok(LeaseStamp { node: Ino::dec(d)?, epoch: d.u64()? })
+    }
+}
+
+impl Wire for ByteRange {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.off);
+        e.u32(self.len);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(ByteRange { off: d.u64()?, len: d.u32()? })
+    }
+}
+
+impl Wire for WriteSeg {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.off);
+        e.bytes(&self.data);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(WriteSeg { off: d.u64()?, data: d.bytes()? })
     }
 }
 
@@ -469,7 +577,7 @@ impl Wire for Request {
                 e.u32(*client);
                 cred.enc(e);
             }
-            Request::OpenAt { lease, name, flags, cred, client, handle } => {
+            Request::OpenAt { lease, name, flags, cred, client, handle, want_inline } => {
                 tagged!(e, 24);
                 lease.enc(e);
                 e.str(name);
@@ -477,6 +585,7 @@ impl Wire for Request {
                 cred.enc(e);
                 e.u32(*client);
                 e.u64(*handle);
+                e.bool(*want_inline);
             }
             Request::StatAt { lease, name, cred } => {
                 tagged!(e, 25);
@@ -526,6 +635,24 @@ impl Wire for Request {
                 dst.enc(e);
                 e.str(dname);
                 cred.enc(e);
+            }
+            Request::ReadBatch { ino, ranges, known_gen, client, register, open_ctx } => {
+                tagged!(e, 32);
+                ino.enc(e);
+                ranges.enc(e);
+                e.u64(*known_gen);
+                e.u32(*client);
+                e.bool(*register);
+                open_ctx.enc(e);
+            }
+            Request::WriteBatch { ino, segs, base_gen, client, register, open_ctx } => {
+                tagged!(e, 33);
+                ino.enc(e);
+                segs.enc(e);
+                e.u64(*base_gen);
+                e.u32(*client);
+                e.bool(*register);
+                open_ctx.enc(e);
             }
         }
     }
@@ -623,6 +750,7 @@ impl Wire for Request {
                 cred: Credentials::dec(d)?,
                 client: d.u32()?,
                 handle: d.u64()?,
+                want_inline: d.bool()?,
             },
             25 => Request::StatAt { lease: LeaseStamp::dec(d)?, name: d.str()?, cred: Credentials::dec(d)? },
             26 => Request::ReadDirAt {
@@ -653,6 +781,22 @@ impl Wire for Request {
                 dst: LeaseStamp::dec(d)?,
                 dname: d.str()?,
                 cred: Credentials::dec(d)?,
+            },
+            32 => Request::ReadBatch {
+                ino: Ino::dec(d)?,
+                ranges: Vec::<ByteRange>::dec(d)?,
+                known_gen: d.u64()?,
+                client: d.u32()?,
+                register: d.bool()?,
+                open_ctx: Option::<OpenCtx>::dec(d)?,
+            },
+            33 => Request::WriteBatch {
+                ino: Ino::dec(d)?,
+                segs: Vec::<WriteSeg>::dec(d)?,
+                base_gen: d.u64()?,
+                client: d.u32()?,
+                register: d.bool()?,
+                open_ctx: Option::<OpenCtx>::dec(d)?,
             },
             t => return Err(FsError::Protocol(format!("bad request tag {t}"))),
         })
@@ -724,6 +868,33 @@ impl Wire for Response {
                 attr.enc(e);
                 e.u64(*epoch);
             }
+            Response::DataBatch { segs, size, data_gen } => {
+                tagged!(e, 12);
+                e.u32(segs.len() as u32);
+                for s in segs {
+                    e.bytes(s);
+                }
+                e.u64(*size);
+                e.u64(*data_gen);
+            }
+            Response::WrittenBatch { written, new_size, data_gen } => {
+                tagged!(e, 13);
+                e.u64(*written);
+                e.u64(*new_size);
+                e.u64(*data_gen);
+            }
+            Response::OpenedInline { attr, data_gen, data } => {
+                tagged!(e, 14);
+                attr.enc(e);
+                e.u64(*data_gen);
+                match data {
+                    None => e.u8(0),
+                    Some(d) => {
+                        e.u8(1);
+                        e.bytes(d);
+                    }
+                }
+            }
         }
     }
 
@@ -758,6 +929,32 @@ impl Wire for Response {
                 next: Option::<Ino>::dec(d)?,
             },
             11 => Response::Leased { attr: Attr::dec(d)?, epoch: d.u64()? },
+            12 => {
+                let n = d.u32()? as usize;
+                if n > 65536 {
+                    return Err(FsError::Protocol(format!("oversized batch: {n}")));
+                }
+                let mut segs = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    segs.push(d.bytes()?);
+                }
+                Response::DataBatch { segs, size: d.u64()?, data_gen: d.u64()? }
+            }
+            13 => Response::WrittenBatch {
+                written: d.u64()?,
+                new_size: d.u64()?,
+                data_gen: d.u64()?,
+            },
+            14 => {
+                let attr = Attr::dec(d)?;
+                let data_gen = d.u64()?;
+                let data = match d.u8()? {
+                    0 => None,
+                    1 => Some(d.bytes()?),
+                    t => return Err(FsError::Protocol(format!("bad inline tag {t}"))),
+                };
+                Response::OpenedInline { attr, data_gen, data }
+            }
             t => return Err(FsError::Protocol(format!("bad response tag {t}"))),
         })
     }
@@ -781,11 +978,18 @@ impl Wire for Notify {
                 e.u64(*seq);
                 dirs.enc(e);
             }
+            Notify::DataInvalidate { seq, ino, gen } => {
+                e.u8(1);
+                e.u64(*seq);
+                ino.enc(e);
+                e.u64(*gen);
+            }
         }
     }
     fn dec(d: &mut Dec) -> FsResult<Self> {
         Ok(match d.u8()? {
             0 => Notify::Invalidate { seq: d.u64()?, dirs: Vec::<Ino>::dec(d)? },
+            1 => Notify::DataInvalidate { seq: d.u64()?, ino: Ino::dec(d)?, gen: d.u64()? },
             t => return Err(FsError::Protocol(format!("bad notify tag {t}"))),
         })
     }
@@ -853,6 +1057,7 @@ mod tests {
                 cred: cred(),
                 client: 3,
                 handle: 11,
+                want_inline: true,
             },
             Request::StatAt {
                 lease: LeaseStamp { node: ino, epoch: 0 },
@@ -895,6 +1100,33 @@ mod tests {
                 dst: LeaseStamp { node: Ino::new(1, 0, 7), epoch: 6 },
                 dname: "y".into(),
                 cred: cred(),
+            },
+            Request::ReadBatch {
+                ino,
+                ranges: vec![ByteRange { off: 0, len: 4096 }, ByteRange { off: 8192, len: 8192 }],
+                known_gen: 3,
+                client: 3,
+                register: true,
+                open_ctx: Some(ctx.clone()),
+            },
+            Request::ReadBatch {
+                ino,
+                ranges: vec![],
+                known_gen: NO_GEN,
+                client: 3,
+                register: false,
+                open_ctx: None,
+            },
+            Request::WriteBatch {
+                ino,
+                segs: vec![
+                    WriteSeg { off: 100, data: vec![1; 300] },
+                    WriteSeg { off: 9000, data: vec![2; 10] },
+                ],
+                base_gen: NO_GEN,
+                client: 3,
+                register: true,
+                open_ctx: Some(ctx.clone()),
             },
         ]
     }
@@ -940,6 +1172,16 @@ mod tests {
             Response::Walked { dirs: vec![], walked: 0, next: None },
             Response::Leased { attr: attr.clone(), epoch: 42 },
             Response::Err(FsError::StaleLease),
+            Response::DataBatch {
+                segs: vec![vec![1; 4096], vec![], vec![9; 10]],
+                size: 8202,
+                data_gen: 7,
+            },
+            Response::DataBatch { segs: vec![], size: 0, data_gen: 0 },
+            Response::WrittenBatch { written: 310, new_size: 9010, data_gen: 8 },
+            Response::OpenedInline { attr: attr.clone(), data_gen: 3, data: Some(vec![5; 100]) },
+            Response::OpenedInline { attr: attr.clone(), data_gen: 0, data: None },
+            Response::Err(FsError::StaleData),
         ]
     }
 
@@ -963,8 +1205,36 @@ mod tests {
     fn notify_roundtrip() {
         let n = Notify::Invalidate { seq: 9, dirs: vec![Ino::new(1, 0, 2), Ino::new(2, 1, 3)] };
         assert_eq!(Notify::from_bytes(&n.to_bytes()).unwrap(), n);
+        let n = Notify::DataInvalidate { seq: 10, ino: Ino::new(1, 0, 2), gen: 5 };
+        assert_eq!(Notify::from_bytes(&n.to_bytes()).unwrap(), n);
         let a = NotifyAck { client: 4, seq: 9 };
         assert_eq!(NotifyAck::from_bytes(&a.to_bytes()).unwrap(), a);
+    }
+
+    #[test]
+    fn data_ops_classify_as_data_rpcs() {
+        let ino = Ino::new(0, 0, 1);
+        let rb = Request::ReadBatch {
+            ino,
+            ranges: vec![ByteRange { off: 0, len: 4096 }],
+            known_gen: NO_GEN,
+            client: 1,
+            register: true,
+            open_ctx: None,
+        };
+        let wb = Request::WriteBatch {
+            ino,
+            segs: vec![WriteSeg { off: 0, data: vec![0; 64] }],
+            base_gen: NO_GEN,
+            client: 1,
+            register: true,
+            open_ctx: None,
+        };
+        assert_eq!(rb.op(), "read");
+        assert_eq!(wb.op(), "write");
+        assert!(!rb.is_metadata());
+        assert!(!wb.is_metadata());
+        assert!(wb.wire_size() >= 64 + 64, "batch payload counts toward bandwidth");
     }
 
     #[test]

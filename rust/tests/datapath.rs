@@ -1,0 +1,318 @@
+//! The client data plane end-to-end (DESIGN.md §7), acceptance criteria:
+//!
+//! * open + full read of a ≤ inline-limit file costs **0 data RPCs**;
+//! * a sequential 1 MiB scan costs ≤ ⌈size / read-ahead-window⌉ read RPCs;
+//! * 100 small `write()`s followed by `close()` flush in ≤ 2 RPCs;
+//! * a remote writer bumping the data generation causes exactly one
+//!   drop-and-retry with no stale bytes returned;
+//! * `RpcMetrics` reports the page-cache / read-ahead / flush-coalescing
+//!   counters `BENCH_datapath.json` consumes.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::datapath::DatapathConfig;
+use buffetfs::metrics::RpcMetrics;
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::transport::Service;
+use buffetfs::types::{Credentials, OpenFlags};
+use buffetfs::wire::Request;
+
+fn fast_cluster() -> BuffetCluster {
+    BuffetCluster::spawn_with(
+        1,
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 11 },
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    )
+}
+
+fn pattern(n: usize) -> Vec<u8> {
+    (0..n).map(|i| (i * 37 % 253) as u8).collect()
+}
+
+/// Data RPCs = read + write ops (ReadBatch/WriteBatch count as such).
+fn data_rpcs(m: &Arc<RpcMetrics>) -> u64 {
+    m.count("read") + m.count("write")
+}
+
+/// Wait for asynchronous close wrap-ups to drain before snapshotting
+/// RPC totals.
+fn quiesce(metrics: &RpcMetrics) {
+    let mut last = metrics.total_rpcs();
+    for _ in 0..100 {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let now = metrics.total_rpcs();
+        if now == last {
+            return;
+        }
+        last = now;
+    }
+}
+
+#[test]
+fn inline_open_full_read_costs_zero_data_rpcs() {
+    let cluster = fast_cluster();
+    let (setup, _) = cluster.make_agent();
+    let admin = Buffet::process(setup, Credentials::root());
+    admin.mkdir("/d", 0o755).unwrap();
+    let content = pattern(2048);
+    admin.put("/d/small.txt", &content).unwrap();
+
+    let (agent, metrics) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig::default());
+    let p = Buffet::process(agent.clone(), Credentials::new(1000, 1000));
+    let before = data_rpcs(&metrics);
+    let fd = p.open("/d/small.txt", OpenFlags::RDONLY).unwrap();
+    let got = p.read(fd, 1 << 16).unwrap();
+    assert_eq!(got, content);
+    assert!(p.read(fd, 4096).unwrap().is_empty(), "EOF");
+    p.close(fd).unwrap();
+    assert_eq!(
+        data_rpcs(&metrics) - before,
+        0,
+        "open + full read of a small file must issue zero data RPCs"
+    );
+    assert_eq!(metrics.inline_opens(), 1, "the contents rode the one open RPC");
+
+    // a second open+read of the same file is served entirely locally:
+    // zero RPCs of ANY kind (warm dir cache + warm page cache)
+    quiesce(&metrics);
+    let total_before = metrics.total_rpcs();
+    let fd = p.open("/d/small.txt", OpenFlags::RDONLY).unwrap();
+    assert_eq!(p.read(fd, 1 << 16).unwrap(), content);
+    p.close(fd).unwrap();
+    assert_eq!(metrics.total_rpcs(), total_before, "fully cached access is RPC-free");
+    assert!(metrics.page_hits() > 0);
+}
+
+#[test]
+fn sequential_scan_pays_one_rpc_per_readahead_window() {
+    let cluster = fast_cluster();
+    let (setup, _) = cluster.make_agent();
+    let admin = Buffet::process(setup, Credentials::root());
+    admin.mkdir("/d", 0o755).unwrap();
+    let size = 1 << 20;
+    let content = pattern(size);
+    admin.put("/d/big.bin", &content).unwrap();
+
+    let (agent, metrics) = cluster.make_agent();
+    let cfg = DatapathConfig::default();
+    agent.enable_datapath(cfg);
+    let p = Buffet::process(agent, Credentials::new(1000, 1000));
+    let fd = p.open("/d/big.bin", OpenFlags::RDONLY).unwrap();
+    let mut got = Vec::with_capacity(size);
+    loop {
+        let chunk = p.read(fd, 4096).unwrap();
+        if chunk.is_empty() {
+            break;
+        }
+        got.extend_from_slice(&chunk);
+    }
+    p.close(fd).unwrap();
+    assert_eq!(got, content);
+    let budget = (size as u64).div_ceil(cfg.readahead_window as u64);
+    assert!(
+        metrics.count("read") <= budget,
+        "1 MiB scan took {} read RPCs, budget is ceil(size/window) = {}",
+        metrics.count("read"),
+        budget
+    );
+    assert_eq!(metrics.count("write"), 0);
+    assert!(metrics.readahead_pages() > 0, "read-ahead must have prefetched");
+    assert!(metrics.page_hits() > 0, "most 4 KiB reads are page-cache hits");
+}
+
+#[test]
+fn hundred_writes_then_close_flush_in_at_most_two_rpcs() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig::default());
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.mkdir("/w", 0o755).unwrap();
+    let fd = p.open("/w/out.log", OpenFlags::RDWR.with_create()).unwrap();
+    let before = data_rpcs(&metrics);
+    for i in 0..100u64 {
+        assert_eq!(p.write(fd, &[i as u8; 100]).unwrap(), 100);
+    }
+    // read-your-writes straight from the buffer
+    let back = p.pread(fd, 150, 100).unwrap();
+    assert_eq!(&back[..50], &[1u8; 50][..]);
+    assert_eq!(&back[50..], &[2u8; 50][..]);
+    assert_eq!(data_rpcs(&metrics) - before, 0, "writes are buffered client-side");
+    p.close(fd).unwrap();
+    let flushed = data_rpcs(&metrics) - before;
+    assert!(flushed <= 2, "100 writes + close flushed in {flushed} data RPCs, want <= 2");
+    assert_eq!(metrics.wb_writes(), 100);
+    assert!(metrics.wb_flush_rpcs() >= 1);
+    assert_eq!(metrics.wb_flush_segs(), 1, "sequential writes coalesced into one extent");
+
+    // durability: a vanilla (no-datapath) client sees every byte
+    let (plain, _) = cluster.make_agent();
+    let q = Buffet::process(plain, Credentials::root());
+    let fd = q.open("/w/out.log", OpenFlags::RDONLY).unwrap();
+    let got = q.read(fd, 20_000).unwrap();
+    assert_eq!(got.len(), 10_000);
+    for i in 0..100usize {
+        assert!(got[i * 100..(i + 1) * 100].iter().all(|&b| b == i as u8), "chunk {i}");
+    }
+    q.close(fd).unwrap();
+}
+
+#[test]
+fn explicit_fsync_flushes_once_and_close_flushes_the_rest() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig::default());
+    let p = Buffet::process(agent, Credentials::root());
+    let fd = p.open("/sync.dat", OpenFlags::RDWR.with_create()).unwrap();
+    p.write(fd, &[1; 512]).unwrap();
+    p.write(fd, &[2; 512]).unwrap();
+    p.fsync(fd).unwrap();
+    assert_eq!(metrics.count("write"), 1, "fsync coalesced two writes into one flush");
+    p.fsync(fd).unwrap();
+    assert_eq!(metrics.count("write"), 1, "fsync with nothing dirty is free");
+    p.write(fd, &[3; 512]).unwrap();
+    p.close(fd).unwrap();
+    assert_eq!(metrics.count("write"), 2, "close flushed the remainder");
+}
+
+#[test]
+fn remote_writer_causes_exactly_one_drop_and_retry_no_stale_bytes() {
+    let cluster = fast_cluster();
+    let (setup, _) = cluster.make_agent();
+    let admin = Buffet::process(setup, Credentials::root());
+    admin.mkdir("/d", 0o755).unwrap();
+    let size = 64 << 10;
+    admin.put("/d/shared", &pattern(size)).unwrap();
+    let ino = admin.stat("/d/shared").unwrap().ino;
+
+    // reader: no inline, no read-ahead, and — crucially for this test —
+    // no push registration, so staleness is caught by the generation
+    // stamp on the next fetch, not by an invalidation push
+    let (agent, metrics) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig {
+        inline_limit: 0,
+        readahead_window: 0,
+        register_data: false,
+        ..DatapathConfig::default()
+    });
+    let p = Buffet::process(agent.clone(), Credentials::new(1000, 1000));
+    let fd = p.open("/d/shared", OpenFlags::RDONLY).unwrap();
+    // cache the first two pages under the current generation
+    assert_eq!(p.pread(fd, 0, 8192).unwrap(), &pattern(size)[..8192]);
+
+    // a remote writer replaces the whole file behind our back
+    let newc: Vec<u8> = (0..size).map(|i| (i % 11) as u8 ^ 0xa5).collect();
+    cluster.servers[0].handle(Request::Write {
+        ino,
+        off: 0,
+        data: newc.clone(),
+        open_ctx: None,
+    });
+
+    // reading uncached pages sends the stale stamp -> StaleData ->
+    // drop every page -> one retry -> fresh bytes
+    assert_eq!(p.pread(fd, 8192, 8192).unwrap(), &newc[8192..16384]);
+    assert_eq!(metrics.stale_data_retries(), 1, "exactly one drop-and-retry");
+    // the previously cached prefix was dropped with everything else:
+    // no stale byte survives
+    assert_eq!(p.pread(fd, 0, 8192).unwrap(), &newc[..8192]);
+    assert_eq!(metrics.stale_data_retries(), 1, "no second retry needed");
+    p.close(fd).unwrap();
+}
+
+#[test]
+fn push_invalidation_keeps_two_caching_clients_coherent() {
+    let cluster = fast_cluster();
+    let (setup, _) = cluster.make_agent();
+    let admin = Buffet::process(setup, Credentials::root());
+    admin.mkdir("/d", 0o777).unwrap();
+    admin.put("/d/shared", &pattern(4096)).unwrap();
+    admin.chmod("/d/shared", 0o666).unwrap();
+
+    let (a1, m1) = cluster.make_agent();
+    a1.enable_datapath(DatapathConfig::default());
+    let reader = Buffet::process(a1.clone(), Credentials::new(1000, 1000));
+    let rfd = reader.open("/d/shared", OpenFlags::RDONLY).unwrap();
+    assert_eq!(reader.read(rfd, 8192).unwrap(), pattern(4096));
+
+    let (a2, _) = cluster.make_agent();
+    a2.enable_datapath(DatapathConfig::default());
+    let writer = Buffet::process(a2, Credentials::new(1000, 1000));
+    let wfd = writer.open("/d/shared", OpenFlags::WRONLY).unwrap();
+    writer.pwrite(wfd, 0, &[0xEE; 64]).unwrap();
+    writer.fsync(wfd).unwrap(); // WriteBatch -> server pushes DataInvalidate to a1
+
+    assert!(
+        a1.stats.data_invalidations_rx.load(Ordering::Relaxed) >= 1,
+        "the reader must have received a data-invalidation push"
+    );
+    let fresh = reader.pread(rfd, 0, 64).unwrap();
+    assert_eq!(fresh, vec![0xEE; 64], "post-push read returns the new bytes");
+    assert_eq!(
+        m1.stale_data_retries(),
+        0,
+        "the push (not a StaleData bounce) kept the reader coherent"
+    );
+    reader.close(rfd).unwrap();
+    writer.close(wfd).unwrap();
+}
+
+#[test]
+fn o_direct_bypasses_the_data_plane() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig::default());
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.put("/direct.dat", &pattern(8192)).unwrap();
+    let fd = p.open("/direct.dat", OpenFlags::RDONLY.with_direct()).unwrap();
+    let before = metrics.count("read");
+    assert_eq!(p.pread(fd, 0, 4096).unwrap(), &pattern(8192)[..4096]);
+    assert_eq!(p.pread(fd, 0, 4096).unwrap(), &pattern(8192)[..4096]);
+    p.close(fd).unwrap();
+    assert_eq!(
+        metrics.count("read") - before,
+        2,
+        "O_DIRECT reads are one synchronous RPC each, never cached"
+    );
+}
+
+#[test]
+fn ftruncate_drops_cache_and_bounds_reads() {
+    let cluster = fast_cluster();
+    let (agent, _) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig::default());
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.put("/t.dat", &pattern(8192)).unwrap();
+    let fd = p.open("/t.dat", OpenFlags::RDWR).unwrap();
+    assert_eq!(p.read(fd, 8192).unwrap(), pattern(8192));
+    agent.ftruncate(p.pid(), fd, 100).unwrap();
+    let got = p.pread(fd, 0, 8192).unwrap();
+    assert_eq!(got, &pattern(8192)[..100], "reads are bounded by the truncated size");
+    assert!(p.pread(fd, 100, 10).unwrap().is_empty());
+    p.close(fd).unwrap();
+}
+
+#[test]
+fn write_through_mode_stays_coherent_without_buffering() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig { writeback: false, ..DatapathConfig::default() });
+    let p = Buffet::process(agent, Credentials::root());
+    let fd = p.open("/wt.dat", OpenFlags::RDWR.with_create()).unwrap();
+    for i in 0..10u8 {
+        p.write(fd, &[i; 100]).unwrap();
+    }
+    assert_eq!(metrics.count("write"), 10, "write-through pays one RPC per write");
+    // reads observe every write (the pages were invalidated, refetched)
+    let got = p.pread(fd, 0, 1000).unwrap();
+    for i in 0..10usize {
+        assert!(got[i * 100..(i + 1) * 100].iter().all(|&b| b == i as u8));
+    }
+    p.close(fd).unwrap();
+}

@@ -1,0 +1,158 @@
+//! Shared conformance suite for the object-store backends: every case
+//! runs against both `MemData` and the on-disk `DiskData`, asserting
+//! byte-identical semantics for the patterns the client page cache
+//! relies on — holes, truncate-then-extend zero fill, short reads at
+//! EOF, and page-boundary read-modify-write.
+
+use buffetfs::store::data::{DiskData, MemData};
+use buffetfs::store::ObjectStore;
+
+const PAGE: u64 = 4096;
+
+fn with_backends(name: &str, case: impl Fn(&str, &dyn ObjectStore)) {
+    let mem = MemData::new();
+    case("MemData", &mem);
+    let dir = std::env::temp_dir().join(format!(
+        "buffetfs-conformance-{}-{name}",
+        std::process::id()
+    ));
+    let disk = DiskData::new(&dir).unwrap();
+    case("DiskData", &disk);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn holes_read_as_zeros_across_page_boundaries() {
+    with_backends("holes", |be, s| {
+        // write only in pages 0 and 2, leaving page 1 a hole
+        s.write(1, 0, b"head").unwrap();
+        let tail_off = 2 * PAGE + 10;
+        s.write(1, tail_off, b"tail").unwrap();
+        // the hole page reads as zeros
+        let hole = s.read(1, PAGE, PAGE as u32).unwrap();
+        assert_eq!(hole, vec![0u8; PAGE as usize], "{be}: hole page must be zeros");
+        // a read straddling data → hole → data
+        let all = s.read(1, 0, (3 * PAGE) as u32).unwrap();
+        assert_eq!(&all[..4], b"head", "{be}");
+        assert!(all[4..tail_off as usize].iter().all(|&b| b == 0), "{be}: gap is zeros");
+        assert_eq!(&all[tail_off as usize..tail_off as usize + 4], b"tail", "{be}");
+        assert_eq!(all.len(), tail_off as usize + 4, "{be}: short read at EOF");
+    });
+}
+
+#[test]
+fn truncate_then_extend_zero_fills() {
+    with_backends("trunc-extend", |be, s| {
+        s.write(7, 0, &[0xAB; 2 * PAGE as usize]).unwrap();
+        s.truncate(7, 100).unwrap();
+        assert_eq!(s.read(7, 0, 4096).unwrap().len(), 100, "{be}: shrunk");
+        // extend past a page boundary: everything beyond 100 is zeros,
+        // including bytes that held 0xAB before the shrink
+        s.truncate(7, PAGE + 200).unwrap();
+        let back = s.read(7, 0, (2 * PAGE) as u32).unwrap();
+        assert_eq!(back.len(), PAGE as usize + 200, "{be}");
+        assert!(back[..100].iter().all(|&b| b == 0xAB), "{be}: surviving prefix");
+        assert!(
+            back[100..].iter().all(|&b| b == 0),
+            "{be}: truncate-then-extend must not resurrect old bytes"
+        );
+        // extending write after a shrink behaves the same
+        s.truncate(7, 0).unwrap();
+        s.write(7, 50, b"x").unwrap();
+        let back = s.read(7, 0, 100).unwrap();
+        assert_eq!(back.len(), 51, "{be}");
+        assert!(back[..50].iter().all(|&b| b == 0), "{be}");
+        assert_eq!(back[50], b'x', "{be}");
+    });
+}
+
+#[test]
+fn short_reads_at_eof_and_beyond() {
+    with_backends("eof", |be, s| {
+        let size = PAGE as usize + 123; // EOF mid-page
+        s.write(3, 0, &vec![0x5A; size]).unwrap();
+        // read exactly to EOF
+        assert_eq!(s.read(3, 0, size as u32).unwrap().len(), size, "{be}");
+        // ask for more than exists: short read, no padding
+        assert_eq!(s.read(3, PAGE, PAGE as u32).unwrap().len(), 123, "{be}");
+        // read starting exactly at EOF and far beyond: empty, not error
+        assert_eq!(s.read(3, size as u64, 10).unwrap(), Vec::<u8>::new(), "{be}");
+        assert_eq!(s.read(3, 99 * PAGE, 10).unwrap(), Vec::<u8>::new(), "{be}");
+        // zero-length read anywhere is empty
+        assert_eq!(s.read(3, 5, 0).unwrap(), Vec::<u8>::new(), "{be}");
+        // a missing object reads empty
+        assert_eq!(s.read(999, 0, 10).unwrap(), Vec::<u8>::new(), "{be}");
+    });
+}
+
+#[test]
+fn page_boundary_read_modify_write() {
+    with_backends("rmw", |be, s| {
+        // base: two full pages of a marker
+        s.write(5, 0, &[0x11; 2 * PAGE as usize]).unwrap();
+        // overwrite a range straddling the page boundary
+        s.write(5, PAGE - 6, &[0x22; 12]).unwrap();
+        let back = s.read(5, 0, (2 * PAGE) as u32).unwrap();
+        assert!(back[..PAGE as usize - 6].iter().all(|&b| b == 0x11), "{be}");
+        assert!(
+            back[PAGE as usize - 6..PAGE as usize + 6].iter().all(|&b| b == 0x22),
+            "{be}: straddling overwrite"
+        );
+        assert!(back[PAGE as usize + 6..].iter().all(|&b| b == 0x11), "{be}");
+        // sub-page overwrite deep inside one page
+        s.write(5, 100, &[0x33; 8]).unwrap();
+        let back = s.read(5, 96, 16).unwrap();
+        assert_eq!(&back[..4], &[0x11; 4], "{be}");
+        assert_eq!(&back[4..12], &[0x33; 8], "{be}");
+        assert_eq!(&back[12..], &[0x11; 4], "{be}");
+        // an extending write whose start is inside the last page
+        s.write(5, 2 * PAGE - 4, &[0x44; 8]).unwrap();
+        let back = s.read(5, 2 * PAGE - 4, 100).unwrap();
+        assert_eq!(back, vec![0x44; 8], "{be}: extension is visible and short-read");
+    });
+}
+
+#[test]
+fn interleaved_extents_match_oracle() {
+    // a randomized mirror check: apply the same writes to the backend
+    // and to a Vec<u8> oracle, compare page-aligned and unaligned reads
+    with_backends("oracle", |be, s| {
+        let mut oracle: Vec<u8> = Vec::new();
+        let mut seed: u64 = 0x9E3779B97F4A7C15;
+        let mut rng = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            seed
+        };
+        for _ in 0..200 {
+            let off = rng() % (16 * PAGE);
+            let len = (rng() % 600 + 1) as usize;
+            let byte = (rng() % 256) as u8;
+            let data = vec![byte; len];
+            s.write(9, off, &data).unwrap();
+            let need = off as usize + len;
+            if oracle.len() < need {
+                oracle.resize(need, 0);
+            }
+            oracle[off as usize..need].copy_from_slice(&data);
+        }
+        for probe in 0..32 {
+            let off = probe * PAGE / 2;
+            let got = s.read(9, off, PAGE as u32).unwrap();
+            let want_end = (off as usize + PAGE as usize).min(oracle.len());
+            let want = if (off as usize) < oracle.len() {
+                &oracle[off as usize..want_end]
+            } else {
+                &[][..]
+            };
+            assert_eq!(got, want, "{be}: probe at {off}");
+        }
+        // delete is idempotent and a recreated object starts empty
+        s.delete(9).unwrap();
+        s.delete(9).unwrap();
+        assert_eq!(s.read(9, 0, 10).unwrap(), Vec::<u8>::new(), "{be}");
+        s.write(9, 0, b"new").unwrap();
+        assert_eq!(s.read(9, 0, 10).unwrap(), b"new", "{be}");
+    });
+}

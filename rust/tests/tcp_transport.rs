@@ -81,6 +81,52 @@ fn errors_cross_the_wire_intact() {
 }
 
 #[test]
+fn dead_peer_times_out_instead_of_hanging_forever() {
+    use std::time::{Duration, Instant};
+    // a "server" that accepts the connection and then never answers
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let hold = std::thread::spawn(move || {
+        let conn = listener.accept();
+        std::thread::sleep(Duration::from_millis(800));
+        drop(conn);
+    });
+    let metrics = Arc::new(RpcMetrics::new());
+    let t = TcpTransport::connect_with_timeout(
+        addr,
+        Some(Duration::from_millis(150)),
+        metrics,
+    )
+    .unwrap();
+    assert_eq!(t.read_timeout(), Some(Duration::from_millis(150)));
+    let t0 = Instant::now();
+    let err = t.call(Request::GetAttr { ino: Ino::new(0, 0, 1) }).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_millis(700),
+        "the call must fail within the configured timeout, not hang"
+    );
+    match err {
+        buffetfs::error::FsError::Transport(msg) => {
+            assert!(msg.contains("timed out"), "unexpected error text: {msg}")
+        }
+        other => panic!("expected a transport timeout, got {other:?}"),
+    }
+    // the stream is desynchronized: the transport poisons itself so a
+    // later call can never receive the stale (mismatched) response
+    assert!(t.is_poisoned());
+    let t1 = Instant::now();
+    let err = t.call(Request::GetAttr { ino: Ino::new(0, 0, 1) }).unwrap_err();
+    assert!(t1.elapsed() < Duration::from_millis(50), "poisoned calls fail fast");
+    match err {
+        buffetfs::error::FsError::Transport(msg) => {
+            assert!(msg.contains("poisoned"), "unexpected error text: {msg}")
+        }
+        other => panic!("expected a poisoned-transport error, got {other:?}"),
+    }
+    hold.join().unwrap();
+}
+
+#[test]
 fn multiple_concurrent_tcp_clients() {
     let (server, addr) = spawn_server();
     let root = Ino::new(0, 0, 1);
