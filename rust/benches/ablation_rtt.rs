@@ -12,9 +12,9 @@
 //! `cargo bench --bench ablation_rtt`.
 
 use buffetfs::harness::{
-    ablation_cold_walk, ablation_datapath, ablation_handle_reopen, ablation_rtt,
-    print_cold_walk, print_datapath, print_handle_reopen, BenchCfg, ColdWalkRow,
-    DatapathRow, HandleReopenRow,
+    ablation_cold_walk, ablation_datapath, ablation_handle_reopen, ablation_pipeline,
+    ablation_rtt, print_cold_walk, print_datapath, print_handle_reopen, print_pipeline,
+    BenchCfg, ColdWalkRow, DatapathRow, HandleReopenRow, PipelineRow,
 };
 use buffetfs::simnet::NetConfig;
 use buffetfs::workload::FileSetSpec;
@@ -102,6 +102,35 @@ fn datapath_json(one_way_us: u64, iters: usize, rows: &[DatapathRow]) -> String 
     out
 }
 
+fn pipeline_json(one_way_us: u64, iters: usize, rows: &[PipelineRow]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"pipelined_storm\",\n");
+    out.push_str(&format!("  \"one_way_us\": {one_way_us},\n"));
+    out.push_str(&format!("  \"iters_per_point\": {iters},\n"));
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"depth\": {}, \"lockstep_us\": {:.1}, \"pipelined_us\": {:.1}, \
+             \"speedup\": {:.2}, \"ooo_completions\": {}, \"submits\": {}, \
+             \"inflight_depth_mean\": {:.2}, \"open_p50_us\": {:.1}, \"open_p90_us\": {:.1}, \
+             \"open_p99_us\": {:.1}}}{}\n",
+            r.depth,
+            r.lockstep_us,
+            r.pipelined_us,
+            if r.pipelined_us > 0.0 { r.lockstep_us / r.pipelined_us } else { 0.0 },
+            r.ooo_completions,
+            r.submits,
+            r.depth_mean,
+            r.p50_us,
+            r.p90_us,
+            r.p99_us,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
 fn main() {
     let mut cfg = BenchCfg::default();
     cfg.spec = FileSetSpec { n_files: 1000, n_dirs: 10, file_size: 4096, uid: 1000, gid: 1000 };
@@ -180,5 +209,26 @@ fn main() {
     match std::fs::write("BENCH_datapath.json", &json) {
         Ok(()) => println!("\nwrote BENCH_datapath.json"),
         Err(e) => eprintln!("\ncould not write BENCH_datapath.json: {e}"),
+    }
+
+    // ---- Part 5: pipelined storm sweep --------------------------------
+    // N-way small-file storm over ONE simnet connection: lockstep
+    // (call × N → N round trips) vs the §9 pipelined engine (submit × N
+    // + wait_all → ≈ 1 round trip at full depth). Acceptance: ≥ 4× at
+    // depth 8. Uploaded by CI as BENCH_pipeline.json.
+    let pl_one_way_us = 200;
+    let pl_iters = 20;
+    let pl_depths = [1usize, 2, 4, 8, 16];
+    println!();
+    let rows = ablation_pipeline(
+        NetConfig { one_way_us: pl_one_way_us, per_kb_us: 0, jitter_us: 0, seed: 17 },
+        &pl_depths,
+        pl_iters,
+    );
+    print_pipeline(&rows);
+    let json = pipeline_json(pl_one_way_us, pl_iters, &rows);
+    match std::fs::write("BENCH_pipeline.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_pipeline.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_pipeline.json: {e}"),
     }
 }

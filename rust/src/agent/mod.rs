@@ -41,7 +41,7 @@ use crate::datapath::{DataTransport, Datapath, DatapathConfig, InlineOpen};
 use crate::error::{FsError, FsResult};
 use crate::metrics::RpcMetrics;
 use crate::perm::{self, BatchPathChecker};
-use crate::transport::NotifySink;
+use crate::transport::{wait_all, NotifySink, Pending, SharedTransport};
 use crate::types::{
     AccessMask, ClientId, Credentials, DirEntry, Fd, FileKind, Ino, OpenFlags, PermBlob, Pid,
     W_OK, X_OK,
@@ -1238,18 +1238,104 @@ impl DataTransport for BAgent {
         known_gen: u64,
         register: bool,
     ) -> FsResult<(Vec<Vec<u8>>, u64, u64)> {
-        let resp = self.cluster.transport(h.ino)?.call(Request::ReadBatch {
-            ino: h.ino,
-            ranges: ranges.iter().map(|&(off, len)| ByteRange { off, len }).collect(),
-            known_gen,
-            client: self.id,
-            register,
-            open_ctx: self.open_ctx_for(h),
-        })?;
-        match resp {
-            Response::DataBatch { segs, size, data_gen } => Ok((segs, size, data_gen)),
-            other => Err(FsError::Protocol(format!("readbatch returned {other:?}"))),
+        let t = self.cluster.transport(h.ino)?;
+        let ways = self.datapath.config().pipeline_ways;
+        // classic schedule: the whole window in one ReadBatch — one
+        // consistent snapshot under the server's read lock
+        let classic = |t: &SharedTransport| -> FsResult<(Vec<Vec<u8>>, u64, u64)> {
+            let resp = t.call(Request::ReadBatch {
+                ino: h.ino,
+                ranges: ranges.iter().map(|&(off, len)| ByteRange { off, len }).collect(),
+                known_gen,
+                client: self.id,
+                register,
+                open_ctx: self.open_ctx_for(h),
+            })?;
+            match resp {
+                Response::DataBatch { segs, size, data_gen } => Ok((segs, size, data_gen)),
+                other => Err(FsError::Protocol(format!("readbatch returned {other:?}"))),
+            }
+        };
+        let groups = if t.is_pipelined() { plan_read_fanout(ranges, ways) } else { None };
+        let Some(groups) = groups else {
+            return classic(&t);
+        };
+        // pipelined read-ahead (§9): the window crosses the wire as
+        // overlapping sub-window RPCs, all in flight on one connection.
+        // Every sub-fetch carries the same `known_gen` stamp. A server
+        // StaleData reject propagates as usual (the caller drops pages
+        // and retries); sub-replies that merely disagree on the
+        // generation (a writer landed between unguarded sub-fetches —
+        // a mix the single-RPC schedule can never produce) instead fall
+        // back to ONE classic RPC for a consistent snapshot, so the
+        // fan-out never surfaces a failure the classic path wouldn't.
+        let mut pending: Vec<Pending> = Vec::with_capacity(groups.len());
+        for g in &groups {
+            match t.submit(Request::ReadBatch {
+                ino: h.ino,
+                ranges: g.iter().map(|&(_, off, len)| ByteRange { off, len }).collect(),
+                known_gen,
+                client: self.id,
+                register,
+                open_ctx: self.open_ctx_for(h),
+            }) {
+                Ok(p) => pending.push(p),
+                Err(e) => {
+                    // claim what is already in flight, then report
+                    let _ = wait_all(t.as_ref(), pending);
+                    return Err(e);
+                }
+            }
         }
+        let mut out: Vec<Vec<u8>> = ranges.iter().map(|_| Vec::new()).collect();
+        let mut size_gen: Option<(u64, u64)> = None;
+        let mut rejected = false;
+        let mut mismatch = false;
+        let mut err: Option<FsError> = None;
+        for (g, r) in groups.iter().zip(wait_all(t.as_ref(), pending)) {
+            match r {
+                Err(FsError::StaleData) => rejected = true,
+                Err(e) => {
+                    if err.is_none() {
+                        err = Some(e);
+                    }
+                }
+                Ok(Response::DataBatch { segs, size, data_gen }) => {
+                    match size_gen {
+                        None => size_gen = Some((size, data_gen)),
+                        Some((_, g0)) if g0 != data_gen => mismatch = true,
+                        Some(_) => {}
+                    }
+                    // sub-ranges were split off in ascending order, so
+                    // appending group by group reassembles each original
+                    // range exactly (short only at EOF, like the server)
+                    for (&(orig, _, _), seg) in g.iter().zip(segs.iter()) {
+                        out[orig].extend_from_slice(seg);
+                    }
+                }
+                Ok(other) => {
+                    if err.is_none() {
+                        err = Some(FsError::Protocol(format!("readbatch returned {other:?}")));
+                    }
+                }
+            }
+        }
+        if rejected {
+            // the server's generation guard fired: same signal, same
+            // caller-side drop-and-retry as the single-RPC schedule
+            return Err(FsError::StaleData);
+        }
+        if let Some(e) = err {
+            return Err(e);
+        }
+        if mismatch {
+            // a writer slipped between unguarded sub-fetches: re-read
+            // once as a single consistent snapshot
+            return classic(&t);
+        }
+        let (size, gen) =
+            size_gen.ok_or_else(|| FsError::Protocol("empty pipelined fetch".into()))?;
+        Ok((out, size, gen))
     }
 
     fn write_batch(
@@ -1259,7 +1345,70 @@ impl DataTransport for BAgent {
         base_gen: u64,
         register: bool,
     ) -> FsResult<(u64, u64)> {
-        let resp = self.cluster.transport(h.ino)?.call(Request::WriteBatch {
+        let t = self.cluster.transport(h.ino)?;
+        let ways = self.datapath.config().pipeline_ways;
+        // Pipelined flush (§9): split a multi-extent flush into
+        // concurrent WriteBatch RPCs — but only when the flush carries
+        // no generation guard (`NO_GEN`, the pure write-back case): a
+        // guarded flush must stay one atomic reject-or-apply RPC, since
+        // each applied batch bumps the generation and would fail its
+        // concurrent siblings' guards. Extents are disjoint and
+        // idempotent, so concurrent application in any order (or a
+        // partial failure followed by the caller's merge-back-and-retry)
+        // yields the same bytes.
+        if ways > 1 && t.is_pipelined() && base_gen == NO_GEN && segs.len() > 1 {
+            let per = segs.len().div_ceil(ways);
+            let mut pending: Vec<Pending> = Vec::new();
+            let mut iter = segs.into_iter().peekable();
+            while iter.peek().is_some() {
+                let chunk: Vec<WriteSeg> = iter
+                    .by_ref()
+                    .take(per)
+                    .map(|(off, data)| WriteSeg { off, data })
+                    .collect();
+                match t.submit(Request::WriteBatch {
+                    ino: h.ino,
+                    segs: chunk,
+                    base_gen: NO_GEN,
+                    client: self.id,
+                    register,
+                    open_ctx: self.open_ctx_for(h),
+                }) {
+                    Ok(p) => pending.push(p),
+                    Err(e) => {
+                        let _ = wait_all(t.as_ref(), pending);
+                        return Err(e);
+                    }
+                }
+            }
+            let mut best: Option<(u64, u64)> = None;
+            let mut err: Option<FsError> = None;
+            for r in wait_all(t.as_ref(), pending) {
+                match r {
+                    Err(e) => {
+                        if err.is_none() {
+                            err = Some(e);
+                        }
+                    }
+                    Ok(Response::WrittenBatch { new_size, data_gen, .. }) => {
+                        let (s, g) = best.unwrap_or((0, 0));
+                        best = Some((s.max(new_size), g.max(data_gen)));
+                    }
+                    Ok(other) => {
+                        if err.is_none() {
+                            err = Some(FsError::Protocol(format!(
+                                "writebatch returned {other:?}"
+                            )));
+                        }
+                    }
+                }
+            }
+            if let Some(e) = err {
+                return Err(e);
+            }
+            return best.ok_or_else(|| FsError::Protocol("empty pipelined flush".into()));
+        }
+        let resp = t.call(Request::WriteBatch {
             ino: h.ino,
             segs: segs.into_iter().map(|(off, data)| WriteSeg { off, data }).collect(),
             base_gen,
@@ -1271,5 +1420,79 @@ impl DataTransport for BAgent {
             Response::WrittenBatch { new_size, data_gen, .. } => Ok((new_size, data_gen)),
             other => Err(FsError::Protocol(format!("writebatch returned {other:?}"))),
         }
+    }
+}
+
+/// Minimum bytes per pipelined sub-fetch: splitting finer pays more
+/// per-RPC overhead than the latency overlap wins back.
+const PIPELINE_SPLIT_MIN: u64 = 16 << 10;
+
+/// Split a fetch window into per-RPC groups of `(orig_range, off, len)`
+/// sub-ranges for an N-way pipelined `ReadBatch`. `None` = not worth
+/// fanning out (single small range, or fan-out disabled).
+fn plan_read_fanout(
+    ranges: &[(u64, u32)],
+    ways: usize,
+) -> Option<Vec<Vec<(usize, u64, u32)>>> {
+    if ways <= 1 || ranges.is_empty() {
+        return None;
+    }
+    let total: u64 = ranges.iter().map(|&(_, len)| len as u64).sum();
+    let chunk = total.div_ceil(ways as u64).max(PIPELINE_SPLIT_MIN).min(u32::MAX as u64) as u32;
+    let mut subs: Vec<(usize, u64, u32)> = Vec::new();
+    for (i, &(off, len)) in ranges.iter().enumerate() {
+        let mut done: u32 = 0;
+        while done < len {
+            let n = (len - done).min(chunk);
+            subs.push((i, off + done as u64, n));
+            done += n;
+        }
+    }
+    if subs.len() <= 1 {
+        return None;
+    }
+    // contiguous grouping keeps every original range's sub-ranges in
+    // ascending order across the groups, so replies concatenate back
+    let per = subs.len().div_ceil(ways);
+    Some(subs.chunks(per).map(|c| c.to_vec()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::plan_read_fanout;
+
+    #[test]
+    fn fanout_splits_a_large_window_preserving_order() {
+        // one 128 KiB read-ahead window, 4 ways → 4 sub-fetches of 32 KiB
+        let groups = plan_read_fanout(&[(0, 128 << 10)], 4).unwrap();
+        assert_eq!(groups.len(), 4);
+        let subs: Vec<_> = groups.iter().flatten().copied().collect();
+        assert_eq!(subs.len(), 4);
+        let mut expect_off = 0u64;
+        for (orig, off, len) in subs {
+            assert_eq!(orig, 0);
+            assert_eq!(off, expect_off, "sub-ranges must stay in ascending order");
+            expect_off += len as u64;
+        }
+        assert_eq!(expect_off, 128 << 10, "the split covers the whole window");
+    }
+
+    #[test]
+    fn fanout_keeps_multi_range_attribution() {
+        let ranges = [(0u64, 64u32 << 10), (1 << 20, 64 << 10)];
+        let groups = plan_read_fanout(&ranges, 4).unwrap();
+        let subs: Vec<_> = groups.iter().flatten().copied().collect();
+        // every byte is attributed to its originating range, in order
+        for orig in 0..ranges.len() {
+            let total: u64 = subs.iter().filter(|s| s.0 == orig).map(|s| s.2 as u64).sum();
+            assert_eq!(total, ranges[orig].1 as u64);
+        }
+    }
+
+    #[test]
+    fn fanout_declines_small_or_single_fetches() {
+        assert!(plan_read_fanout(&[(0, 4096)], 4).is_none(), "one small page: no split");
+        assert!(plan_read_fanout(&[(0, 1 << 20)], 1).is_none(), "ways=1 disables fan-out");
+        assert!(plan_read_fanout(&[], 4).is_none());
     }
 }

@@ -98,6 +98,17 @@ pub struct DatapathConfig {
     /// until the next fetch round-trips; the `StaleData` generation
     /// stamp still protects every actual fetch/flush.
     pub register_data: bool,
+    /// Pipelined data-plane fan-out (DESIGN.md §9): split large
+    /// `ReadBatch` windows — and multi-extent unguarded `WriteBatch`
+    /// flushes — into up to this many concurrent RPCs over one
+    /// connection via `Transport::submit`/`wait_all`, so read-ahead
+    /// windows overlap in flight and close/fsync flushes pipeline.
+    /// `1` (the default) keeps the classic one-RPC-per-window schedule
+    /// and identical RPC counts; semantics are unchanged either way —
+    /// the data-generation stamps guard any reordering, and against a
+    /// lockstep (legacy/downgraded) transport the fan-out degrades to
+    /// sequential calls.
+    pub pipeline_ways: usize,
 }
 
 impl Default for DatapathConfig {
@@ -110,6 +121,7 @@ impl Default for DatapathConfig {
             writeback: true,
             wb_high_water: 256 << 10,
             register_data: true,
+            pipeline_ways: 1,
         }
     }
 }

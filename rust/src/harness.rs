@@ -781,6 +781,148 @@ pub fn print_datapath(rows: &[DatapathRow]) {
     }
 }
 
+/// Pipelined-engine storm sweep (DESIGN.md §9): N small-file opens over
+/// ONE simnet connection, lockstep (`call` × N → N round trips) vs
+/// pipelined (`submit` × N + `wait_all` → ≈ max(server work, 1 RTT)).
+#[derive(Debug, Clone)]
+pub struct PipelineRow {
+    /// In-flight depth = storm width (ops per wave).
+    pub depth: usize,
+    /// Wall-clock per wave, lockstep schedule (µs).
+    pub lockstep_us: f64,
+    /// Wall-clock per wave, pipelined schedule (µs).
+    pub pipelined_us: f64,
+    /// Out-of-order completions observed by the in-flight table.
+    pub ooo_completions: u64,
+    /// Total submits through the engine.
+    pub submits: u64,
+    /// Mean in-flight depth at submit time.
+    pub depth_mean: f64,
+    /// Pipelined per-open latency percentiles (µs).
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+}
+
+/// Build one in-process server holding `max(depths)` 1 KiB files, then
+/// storm-open `depth` distinct files per wave over a single connection,
+/// `iters` waves per schedule. The acceptance bar: at depth 8 the
+/// pipelined wave ≈ one round trip, ≥ 4× the lockstep wave.
+pub fn ablation_pipeline(net: NetConfig, depths: &[usize], iters: usize) -> Vec<PipelineRow> {
+    use crate::server::BServer;
+    use crate::simnet::LatencyModel;
+    use crate::store::data::MemData;
+    use crate::store::fs::LocalFs;
+    use crate::transport::chan::ChanTransport;
+    use crate::transport::{wait_all, Service, Transport};
+    use crate::types::{Credentials, FileKind, Ino};
+    use crate::wire::{Request, Response};
+
+    let server = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    let root = Ino::new(0, 0, crate::store::inode::ROOT_FILE_ID);
+    let cred = Credentials::root();
+    let n_files = depths.iter().copied().max().unwrap_or(1);
+    let mut inos = Vec::with_capacity(n_files);
+    for i in 0..n_files {
+        let e = match server.handle(Request::Create {
+            dir: root,
+            name: format!("storm{i}.dat"),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: cred.clone(),
+            client: 0,
+        }) {
+            Response::Created(e) => e,
+            other => panic!("pipeline setup create: {other:?}"),
+        };
+        server.handle(Request::Write { ino: e.ino, off: 0, data: vec![7u8; 1024], open_ctx: None });
+        inos.push(e.ino);
+    }
+
+    let open_req = |ino: Ino, handle: u64| Request::Open {
+        ino,
+        flags: OpenFlags::RDONLY,
+        cred: cred.clone(),
+        client: 1,
+        handle,
+        want_inline: true,
+    };
+
+    let mut rows = Vec::new();
+    let mut handle_seq = 1u64;
+    for &d in depths {
+        let lat = Arc::new(LatencyModel::new(net));
+        // one connection per schedule, each with its own metrics so the
+        // exported percentiles/counters are purely pipelined
+        let lock_metrics = Arc::new(crate::metrics::RpcMetrics::new());
+        let t_lock = ChanTransport::new(server.clone(), lat.clone(), lock_metrics);
+        let pipe_metrics = Arc::new(crate::metrics::RpcMetrics::new());
+        let t_pipe = ChanTransport::new(server.clone(), lat, pipe_metrics.clone());
+        t_pipe.set_pipeline_depth(d);
+
+        let mut lockstep_us = 0.0;
+        let mut pipelined_us = 0.0;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            for ino in inos.iter().take(d) {
+                handle_seq += 1;
+                t_lock.call(open_req(*ino, handle_seq)).expect("lockstep open");
+            }
+            lockstep_us += t0.elapsed().as_secs_f64() * 1e6;
+
+            let t0 = Instant::now();
+            let pending: Vec<_> = inos
+                .iter()
+                .take(d)
+                .map(|ino| {
+                    handle_seq += 1;
+                    t_pipe.submit(open_req(*ino, handle_seq)).expect("submit")
+                })
+                .collect();
+            for r in wait_all(t_pipe.as_ref(), pending) {
+                r.expect("pipelined open");
+            }
+            pipelined_us += t0.elapsed().as_secs_f64() * 1e6;
+        }
+        let (p50_us, p90_us, p99_us) =
+            pipe_metrics.percentiles_us("open").unwrap_or((0.0, 0.0, 0.0));
+        rows.push(PipelineRow {
+            depth: d,
+            lockstep_us: lockstep_us / iters as f64,
+            pipelined_us: pipelined_us / iters as f64,
+            ooo_completions: pipe_metrics.ooo_completions(),
+            submits: pipe_metrics.pipelined_submits(),
+            depth_mean: pipe_metrics.inflight_depth_histogram().mean(),
+            p50_us,
+            p90_us,
+            p99_us,
+        });
+    }
+    rows
+}
+
+pub fn print_pipeline(rows: &[PipelineRow]) {
+    println!("pipelined storm sweep — N small-file opens over ONE connection (per wave)");
+    println!(
+        "{:<6} {:>13} {:>13} {:>9} {:>6} {:>10} {:>9} {:>9} {:>9}",
+        "depth", "lockstep_us", "pipelined_us", "speedup", "ooo", "depth_avg", "p50_us", "p90_us", "p99_us"
+    );
+    for r in rows {
+        println!(
+            "{:<6} {:>13.1} {:>13.1} {:>8.2}x {:>6} {:>10.1} {:>9.1} {:>9.1} {:>9.1}",
+            r.depth,
+            r.lockstep_us,
+            r.pipelined_us,
+            if r.pipelined_us > 0.0 { r.lockstep_us / r.pipelined_us } else { 0.0 },
+            r.ooo_completions,
+            r.depth_mean,
+            r.p50_us,
+            r.p90_us,
+            r.p99_us,
+        );
+    }
+}
+
 /// One Buffet process doing the paper's open-read-close on every file of
 /// a pre-built SUT — helper for criterion-style loops.
 pub fn steady_access(sut: &Sut, spec: &FileSetSpec, stream: &mut AccessStream, pid: u32) {

@@ -198,7 +198,10 @@ fn client(args: &Args) {
     let path = args.get_or("path", "/hello.txt").to_string();
     let op = args.get_or("op", "put").to_string();
     let metrics = Arc::new(RpcMetrics::new());
-    let t = TcpTransport::connect(&addr, metrics.clone()).expect("connect");
+    // pipelined handshake; a pre-engine server sticky-downgrades us to
+    // the classic lockstep framing, so either peer works
+    let t = TcpTransport::connect_pipelined(&addr, metrics.clone()).expect("connect");
+    println!("connection mode: {}", if t.is_pipelined_mode() { "pipelined" } else { "lockstep" });
     let cred = Credentials::root();
     let root = Ino::new(args.get_u64("host", 0) as u16, 0, 1);
     let name = path.trim_start_matches('/').to_string();

@@ -73,6 +73,15 @@ pub struct RpcMetrics {
     wb_flush_bytes: AtomicU64,
     /// `StaleData` answers that forced a drop-pages-and-retry round.
     stale_data_retries: AtomicU64,
+    // -- pipelined RPC engine (transport/mux, §9) ----------------------------
+    /// Requests put in flight through `Transport::submit` (vs lockstep
+    /// `call`s, which never enter the in-flight table).
+    pipelined_submits: AtomicU64,
+    /// Responses that completed while an earlier-submitted request was
+    /// still in flight — proof the engine ran out of order.
+    ooo_completions: AtomicU64,
+    /// In-flight depth observed at each submit (connection queue depth).
+    inflight_depth: Mutex<Histogram>,
 }
 
 impl RpcMetrics {
@@ -189,6 +198,44 @@ impl RpcMetrics {
         self.stale_data_retries.fetch_add(1, Ordering::Relaxed);
     }
 
+    // -- pipelined-engine recording (consumed by BENCH_pipeline.json) --------
+
+    /// One `submit` entered the in-flight table at the given depth
+    /// (the submit itself included).
+    pub fn record_pipeline_submit(&self, depth: u64) {
+        self.pipelined_submits.fetch_add(1, Ordering::Relaxed);
+        self.inflight_depth.lock().unwrap().record(depth);
+    }
+
+    /// A response completed past a still-pending earlier submission.
+    pub fn record_ooo_completion(&self) {
+        self.ooo_completions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn pipelined_submits(&self) -> u64 {
+        self.pipelined_submits.load(Ordering::Relaxed)
+    }
+
+    pub fn ooo_completions(&self) -> u64 {
+        self.ooo_completions.load(Ordering::Relaxed)
+    }
+
+    /// Distribution of in-flight depth at submit time.
+    pub fn inflight_depth_histogram(&self) -> Histogram {
+        self.inflight_depth.lock().unwrap().clone()
+    }
+
+    /// (p50, p90, p99) latency of one op in microseconds, if recorded.
+    pub fn percentiles_us(&self, op: &str) -> Option<(f64, f64, f64)> {
+        self.histogram(op).filter(|h| h.count() > 0).map(|h| {
+            (
+                h.percentile(50.0) as f64 / 1e3,
+                h.percentile(90.0) as f64 / 1e3,
+                h.percentile(99.0) as f64 / 1e3,
+            )
+        })
+    }
+
     pub fn page_hits(&self) -> u64 {
         self.page_hits.load(Ordering::Relaxed)
     }
@@ -250,9 +297,12 @@ impl RpcMetrics {
             &self.wb_flush_segs,
             &self.wb_flush_bytes,
             &self.stale_data_retries,
+            &self.pipelined_submits,
+            &self.ooo_completions,
         ] {
             c.store(0, Ordering::Relaxed);
         }
+        *self.inflight_depth.lock().unwrap() = Histogram::new();
     }
 
     /// Multi-line per-op report (counts + latency) for the CLI.
@@ -303,6 +353,16 @@ impl RpcMetrics {
                 self.wb_flush_rpcs(),
                 self.wb_flush_segs(),
                 self.stale_data_retries(),
+            ));
+        }
+        if self.pipelined_submits() > 0 {
+            let d = self.inflight_depth_histogram();
+            out.push_str(&format!(
+                "  pipeline: submits={} ooo_completions={} depth mean={:.1} max={}\n",
+                self.pipelined_submits(),
+                self.ooo_completions(),
+                d.mean(),
+                d.max(),
             ));
         }
         out
@@ -423,6 +483,36 @@ mod tests {
         assert!(r.contains("datapath:"), "report must surface data-plane counters: {r}");
         m.reset();
         assert_eq!(m.page_hits() + m.wb_writes() + m.inline_opens() + m.stale_data_retries(), 0);
+    }
+
+    #[test]
+    fn pipeline_counters_record_report_and_reset() {
+        let m = RpcMetrics::new();
+        m.record_pipeline_submit(1);
+        m.record_pipeline_submit(4);
+        m.record_ooo_completion();
+        assert_eq!(m.pipelined_submits(), 2);
+        assert_eq!(m.ooo_completions(), 1);
+        let d = m.inflight_depth_histogram();
+        assert_eq!(d.count(), 2);
+        assert_eq!(d.max(), 4);
+        let r = m.report();
+        assert!(r.contains("pipeline: submits=2"), "report must surface the engine: {r}");
+        m.reset();
+        assert_eq!(m.pipelined_submits() + m.ooo_completions(), 0);
+        assert_eq!(m.inflight_depth_histogram().count(), 0);
+    }
+
+    #[test]
+    fn percentiles_exported_per_op() {
+        let m = RpcMetrics::new();
+        assert!(m.percentiles_us("open").is_none());
+        for us in [100u64, 200, 300, 400, 500] {
+            m.record("open", 64, 32, Duration::from_micros(us));
+        }
+        let (p50, p90, p99) = m.percentiles_us("open").unwrap();
+        assert!(p50 >= 100.0 && p50 <= 400.0, "p50={p50}");
+        assert!(p90 >= p50 && p99 >= p90, "p50={p50} p90={p90} p99={p99}");
     }
 
     #[test]

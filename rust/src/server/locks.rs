@@ -9,11 +9,20 @@
 //! Implemented as a small owning reader–writer lock (Mutex + Condvar)
 //! because std's `RwLock` guards borrow and cannot be returned from a
 //! per-file lock table; writers are preferred to avoid starvation.
+//!
+//! The lock *table* is sharded by FileId: with the pipelined RPC engine
+//! a per-connection worker pool drives many lock acquisitions
+//! concurrently, and a single table mutex would re-serialize the very
+//! requests the engine just unserialized. Per-file exclusion is
+//! untouched — only the id → lock map lookup spreads across shards.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::types::FileId;
+
+/// Lock-table shards (power of two).
+const LOCK_SHARDS: usize = 16;
 
 #[derive(Default)]
 struct LockState {
@@ -59,18 +68,27 @@ impl FileLock {
     }
 }
 
-#[derive(Default)]
 pub struct FileLocks {
-    locks: Mutex<HashMap<FileId, Arc<FileLock>>>,
+    shards: Vec<Mutex<HashMap<FileId, Arc<FileLock>>>>,
+}
+
+impl Default for FileLocks {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl FileLocks {
     pub fn new() -> FileLocks {
-        FileLocks::default()
+        FileLocks { shards: (0..LOCK_SHARDS).map(|_| Mutex::new(HashMap::new())).collect() }
+    }
+
+    fn shard(&self, file: FileId) -> &Mutex<HashMap<FileId, Arc<FileLock>>> {
+        &self.shards[file as usize & (LOCK_SHARDS - 1)]
     }
 
     fn entry(&self, file: FileId) -> Arc<FileLock> {
-        let mut locks = self.locks.lock().unwrap();
+        let mut locks = self.shard(file).lock().unwrap();
         Arc::clone(locks.entry(file).or_default())
     }
 
@@ -90,7 +108,7 @@ impl FileLocks {
 
     /// GC the entry for a deleted file if nobody holds it.
     pub fn forget(&self, file: FileId) {
-        let mut locks = self.locks.lock().unwrap();
+        let mut locks = self.shard(file).lock().unwrap();
         if let Some(l) = locks.get(&file) {
             if Arc::strong_count(l) == 1 {
                 locks.remove(&file);
@@ -99,7 +117,7 @@ impl FileLocks {
     }
 
     pub fn tracked(&self) -> usize {
-        self.locks.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 }
 
@@ -193,6 +211,19 @@ mod tests {
         locks.forget(6);
         assert_eq!(locks.tracked(), 1);
         drop(g);
+    }
+
+    #[test]
+    fn sharded_table_tracks_and_forgets_across_shards() {
+        let locks = FileLocks::new();
+        for f in 0..64u64 {
+            drop(locks.write(f)); // touches every shard
+        }
+        assert_eq!(locks.tracked(), 64);
+        for f in 0..64u64 {
+            locks.forget(f);
+        }
+        assert_eq!(locks.tracked(), 0);
     }
 
     #[test]

@@ -9,12 +9,19 @@
 //!   push invalidations to every caching client, wait for all acks, only
 //!   then apply;
 //! * keep file locks *inside the server* (§4) — shared for reads,
-//!   exclusive for writes;
+//!   exclusive for writes, per-inode sharded so independent files never
+//!   serialize behind one table mutex;
 //! * coordinate cross-server metadata (a child inode on this server whose
 //!   dirent lives on another) via peer RPCs.
+//!
+//! Request handling itself lives in [`ops`]: per-op handler modules
+//! dispatched through a flat handler table (DESIGN.md §9). This file
+//! keeps the shared server state and the cross-cutting §3.4 machinery
+//! the handlers compose.
 
 pub mod locks;
 pub mod openlist;
+pub mod ops;
 pub mod registry;
 
 use std::collections::HashMap;
@@ -25,10 +32,8 @@ use crate::error::{FsError, FsResult};
 use crate::perm;
 use crate::store::fs::LocalFs;
 use crate::transport::{NotifyPush, Service, SharedTransport};
-use crate::types::{
-    AccessMask, ClientId, Credentials, FileId, FileKind, HostId, Ino, W_OK, X_OK,
-};
-use crate::wire::{LeaseStamp, Notify, OpenCtx, Request, Response, NO_GEN};
+use crate::types::{AccessMask, ClientId, Credentials, FileId, FileKind, HostId, Ino};
+use crate::wire::{LeaseStamp, Notify, OpenCtx, Request, Response};
 
 use self::locks::FileLocks;
 use self::openlist::{OpenList, OpenRec};
@@ -369,518 +374,6 @@ impl BServer {
             Err(FsError::PermissionDenied)
         }
     }
-
-    // -- request handlers -----------------------------------------------------
-
-    fn handle_inner(&self, req: Request) -> FsResult<Response> {
-        match req {
-            Request::Hello { client } => {
-                let _ = client;
-                Ok(Response::Unit)
-            }
-            Request::Lookup { dir, name, cred } => {
-                let dir = self.fs.validate(dir)?;
-                self.require_dir_access(dir, &cred, AccessMask::EXEC)?;
-                Ok(Response::Entry(self.fs.lookup(dir, &name)?))
-            }
-            Request::ReadDir { dir, client, register, cred } => {
-                let dir = self.fs.validate(dir)?;
-                self.require_dir_access(dir, &cred, AccessMask::READ)?;
-                // shared dir lock: the registration and the listing must
-                // be atomic w.r.t. a concurrent mutation's
-                // invalidate-then-apply sequence, or a client could
-                // install a listing that predates a change it was never
-                // told about
-                let _g = self.locks.read(dir);
-                if register {
-                    self.registry.register(dir, client);
-                }
-                let (attr, entries) = self.fs.readdir(dir)?;
-                Ok(Response::Entries { dir: attr, entries })
-            }
-            Request::GetAttr { ino } => {
-                let file = self.fs.validate(ino)?;
-                Ok(Response::AttrR(self.fs.getattr(file)?))
-            }
-            Request::OpenByName { dir, name, flags, cred, client, handle, want_inline } => {
-                // intent form (baseline compatibility): resolve + open
-                let dir_file = self.fs.validate(dir)?;
-                self.require_dir_access(dir_file, &cred, AccessMask(X_OK))?;
-                let entry = self.fs.lookup(dir_file, &name)?;
-                self.handle_inner(Request::Open { ino: entry.ino, flags, cred, client, handle, want_inline })
-            }
-            Request::Open { ino, flags, cred, client, handle, want_inline } => {
-                // Explicit open: the Lustre baselines use this against an
-                // MDS; the data plane uses it (with `want_inline`) as the
-                // first-touch fetch that also completes the open record.
-                let file = self.fs.validate(ino)?;
-                let attr = self.fs.getattr(file)?;
-                perm::require_access(&attr.perm, &cred, flags.access_mask())?;
-                self.complete_open(file, &OpenCtx { client, handle, flags, cred }, false);
-                self.stats.explicit_opens.fetch_add(1, Ordering::Relaxed);
-                // inline only for opens that were GRANTED read access —
-                // a write-only open must never receive bytes its cred
-                // was not checked against (same gate as the DoM MDS)
-                if want_inline && flags.read && attr.kind == FileKind::Regular {
-                    // piggyback the contents (≤ inline limit) + the data
-                    // generation on the reply; shared file lock keeps the
-                    // (attr, gen, data, registration) quadruple atomic vs
-                    // a concurrent write's invalidate-then-apply
-                    let _g = self.locks.read(file);
-                    let attr = self.fs.getattr(file)?;
-                    // every inline opener is registered for pushes even
-                    // when the file is too big to ship: the reply's size
-                    // is cached state too, and a client trusting a stale
-                    // size would serve phantom EOFs with zero RPCs
-                    self.data_registry.register(file, client);
-                    let data_gen = self.data_gen(file);
-                    let data = if attr.size <= SERVER_INLINE_LIMIT {
-                        self.stats.inline_opens.fetch_add(1, Ordering::Relaxed);
-                        let (d, _) = self.fs.read(file, 0, attr.size as u32)?;
-                        Some(d)
-                    } else {
-                        None
-                    };
-                    return Ok(Response::OpenedInline { attr, data_gen, data });
-                }
-                Ok(Response::Opened { attr, inline: None })
-            }
-            Request::Read { ino, off, len, open_ctx } => {
-                let file = self.fs.validate(ino)?;
-                if let Some(ctx) = &open_ctx {
-                    self.complete_open(file, ctx, true);
-                }
-                let _g = self.locks.read(file);
-                let (data, size) = self.fs.read(file, off, len)?;
-                Ok(Response::Data { data, size })
-            }
-            Request::Write { ino, off, data, open_ctx } => {
-                let file = self.fs.validate(ino)?;
-                if let Some(ctx) = &open_ctx {
-                    self.complete_open(file, ctx, true);
-                }
-                let _g = self.locks.write(file);
-                // data plane: revoke cached pages before applying (§3.4
-                // discipline); the writer itself — when identifiable —
-                // keeps its view and applies its own bytes locally
-                self.bump_data_gen(file);
-                self.data_invalidate_barrier(file, open_ctx.as_ref().map(|c| c.client));
-                let (written, new_size) = self.fs.write(file, off, &data)?;
-                Ok(Response::Written { written, new_size })
-            }
-            Request::ReadBatch { ino, ranges, known_gen, client, register, open_ctx } => {
-                let file = self.fs.validate(ino)?;
-                if let Some(ctx) = &open_ctx {
-                    self.complete_open(file, ctx, true);
-                }
-                self.stats.batch_reads.fetch_add(1, Ordering::Relaxed);
-                let _g = self.locks.read(file);
-                let data_gen = self.data_gen(file);
-                if known_gen != NO_GEN && known_gen != data_gen {
-                    // the client's cached pages predate a foreign write:
-                    // merging this reply with them would mix generations
-                    self.stats.stale_data.fetch_add(1, Ordering::Relaxed);
-                    return Err(FsError::StaleData);
-                }
-                if register {
-                    self.data_registry.register(file, client);
-                }
-                let size = self.fs.getattr(file)?.size;
-                let mut segs = Vec::with_capacity(ranges.len());
-                for r in &ranges {
-                    let (d, _) = self.fs.read(file, r.off, r.len)?;
-                    segs.push(d);
-                }
-                Ok(Response::DataBatch { segs, size, data_gen })
-            }
-            Request::WriteBatch { ino, segs, base_gen, client, register, open_ctx } => {
-                let file = self.fs.validate(ino)?;
-                if let Some(ctx) = &open_ctx {
-                    self.complete_open(file, ctx, true);
-                }
-                self.stats.batch_writes.fetch_add(1, Ordering::Relaxed);
-                let _g = self.locks.write(file);
-                let cur = self.data_gen(file);
-                if base_gen != NO_GEN && base_gen != cur {
-                    // reject BEFORE applying: the client drops its read
-                    // view and retries the (self-contained) flush unguarded
-                    self.stats.stale_data.fetch_add(1, Ordering::Relaxed);
-                    return Err(FsError::StaleData);
-                }
-                let data_gen = self.bump_data_gen(file);
-                self.data_invalidate_barrier(file, Some(client));
-                if register {
-                    self.data_registry.register(file, client);
-                }
-                let mut written: u64 = 0;
-                let mut new_size = self.fs.getattr(file)?.size;
-                for s in &segs {
-                    let (w, ns) = self.fs.write(file, s.off, &s.data)?;
-                    written += w as u64;
-                    new_size = ns;
-                }
-                Ok(Response::WrittenBatch { written, new_size, data_gen })
-            }
-            Request::Close { ino, client, handle } => {
-                let file = self.fs.validate(ino)?;
-                self.openlist.close(file, client, handle);
-                Ok(Response::Unit)
-            }
-            Request::Create { dir, name, mode, kind, cred, client } => {
-                let dir_file = self.fs.validate(dir)?;
-                self.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
-                // exclusive dir lock across invalidate+insert (§3.4:
-                // invalidate first, THEN apply — atomically vs readers)
-                let _g = self.locks.write(dir_file);
-                // a new entry changes the directory other clients cache
-                self.invalidate_barrier(dir_file);
-                let entry = match (self.placement, kind) {
-                    (Placement::SpreadByNameHash { hosts }, FileKind::Regular) => {
-                        let target = (name_hash(&name) % hosts as u64) as HostId;
-                        if target == self.fs.host {
-                            self.fs.create(dir_file, &name, mode, kind, cred.uid, cred.gid)?
-                        } else {
-                            // allocate the object on the target server, then
-                            // hang its dirent (with the authoritative perm
-                            // blob) off our directory
-                            self.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
-
-                            let resp = self.peer(target)?.call(Request::CreateOrphan {
-                                parent: self.fs.ino(dir_file),
-                                name: name.clone(),
-                                mode,
-                                kind,
-                                uid: cred.uid,
-                                gid: cred.gid,
-                            })?;
-                            let _ = client;
-                            match resp {
-                                Response::Created(e) => {
-                                    self.fs.insert_remote_entry(dir_file, e.clone())?;
-                                    e
-                                }
-                                other => {
-                                    return Err(FsError::Protocol(format!(
-                                        "peer create returned {other:?}"
-                                    )))
-                                }
-                            }
-                        }
-                    }
-                    _ => self.fs.create(dir_file, &name, mode, kind, cred.uid, cred.gid)?,
-                };
-                Ok(Response::Created(entry))
-            }
-            Request::CreateOrphan { parent, name, mode, kind, uid, gid } => {
-                // server↔server: allocate a local object whose dirent lives
-                // on the calling (directory-owning) server
-                let entry = self.fs.create_orphan(parent, &name, mode, kind, uid, gid)?;
-                Ok(Response::Created(entry))
-            }
-            Request::Mkdir { dir, name, mode, cred } => {
-                let dir_file = self.fs.validate(dir)?;
-                self.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
-                let _g = self.locks.write(dir_file);
-                self.invalidate_barrier(dir_file);
-                let entry =
-                    self.fs.create(dir_file, &name, mode, FileKind::Directory, cred.uid, cred.gid)?;
-                Ok(Response::Created(entry))
-            }
-            Request::Unlink { dir, name, cred } => {
-                let dir_file = self.fs.validate(dir)?;
-                self.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
-                let _g = self.locks.write(dir_file);
-                self.invalidate_barrier(dir_file);
-                let entry = self.fs.unlink(dir_file, &name)?;
-                if entry.ino.host != self.fs.host {
-                    // remote data object: ask its server to drop it
-                    self.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
-                    let _ = self.peer(entry.ino.host)?.call(Request::DropObject { ino: entry.ino });
-                } else {
-                    self.locks.forget(entry.ino.file);
-                    self.forget_data_gen(entry.ino.file);
-                    // stale registrations must not outlive the file: a
-                    // reused FileId would otherwise push (and block on)
-                    // clients that never cached the new file
-                    let _ = self.data_registry.take(entry.ino.file);
-                }
-                Ok(Response::Unit)
-            }
-            Request::DropObject { ino } => {
-                let file = self.fs.validate(ino)?;
-                self.fs.drop_local_object(file)?;
-                self.locks.forget(file);
-                self.forget_data_gen(file);
-                let _ = self.data_registry.take(file);
-                Ok(Response::Unit)
-            }
-            Request::Rmdir { dir, name, cred } => {
-                let dir_file = self.fs.validate(dir)?;
-                self.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
-                let _g = self.locks.write(dir_file);
-                self.invalidate_barrier(dir_file);
-                let entry = self.fs.rmdir(dir_file, &name)?;
-                // the removed dir itself may be cached by clients
-                if entry.ino.host == self.fs.host {
-                    self.invalidate_barrier(entry.ino.file);
-                }
-                Ok(Response::Unit)
-            }
-            Request::Rename { sdir, sname, ddir, dname, cred } => {
-                let s = self.fs.validate(sdir)?;
-                let d = self.fs.validate(ddir)?;
-                self.require_dir_access(s, &cred, AccessMask(W_OK | X_OK))?;
-                if s != d {
-                    self.require_dir_access(d, &cred, AccessMask(W_OK | X_OK))?;
-                }
-                // canonical (ascending FileId) acquisition order: every
-                // multi-lock holder (rename, chmod/chown of a directory)
-                // sorts, so no ABBA deadlock is possible between them
-                let (first, second) = if s <= d { (s, d) } else { (d, s) };
-                let _g1 = self.locks.write(first);
-                let _g2 = if first != second { Some(self.locks.write(second)) } else { None };
-                // rename changes what names resolve under both dirs:
-                // revoke outstanding leases before applying (§revocation)
-                self.bump_lease(s);
-                self.invalidate_barrier(s);
-                if s != d {
-                    self.bump_lease(d);
-                    self.invalidate_barrier(d);
-                }
-                let entry = self.fs.rename(s, sname.as_str(), d, dname.as_str())?;
-                Ok(Response::Created(entry))
-            }
-            Request::Chmod { ino, mode, cred } => {
-                let file = self.fs.validate(ino)?;
-                self.require_owner(file, &cred)?;
-                // lock the (local) parent dir across invalidate+apply —
-                // and the target itself when it is a directory, so a
-                // concurrent Lease/ReadDir of it cannot pair the OLD
-                // perm blob with the NEW lease epoch (lost revocation)
-                let is_dir = self.fs.getattr(file)?.kind == FileKind::Directory;
-                let _guards = self.perm_change_locks(file, is_dir)?;
-                // §3.4: invalidate every caching client *first*, then apply
-                let parent = self.invalidate_parent_of(file)?;
-                // if the target is itself a cached directory, its node
-                // carries perms too — and every lease on it is revoked
-                if is_dir {
-                    self.bump_lease(file);
-                    self.invalidate_barrier(file);
-                }
-                let (perm_blob, _) = self.fs.chmod_apply(file, mode)?;
-                self.sync_remote_dirent(&parent, perm_blob)?;
-                Ok(Response::Unit)
-            }
-            Request::Chown { ino, uid, gid, cred } => {
-                let file = self.fs.validate(ino)?;
-                if cred.uid != 0 {
-                    return Err(FsError::PermissionDenied);
-                }
-                let is_dir = self.fs.getattr(file)?.kind == FileKind::Directory;
-                let _guards = self.perm_change_locks(file, is_dir)?;
-                let parent = self.invalidate_parent_of(file)?;
-                if is_dir {
-                    self.bump_lease(file);
-                    self.invalidate_barrier(file);
-                }
-                let (perm_blob, _) = self.fs.chown_apply(file, uid, gid)?;
-                self.sync_remote_dirent(&parent, perm_blob)?;
-                Ok(Response::Unit)
-            }
-            Request::Truncate { ino, size, cred } => {
-                let file = self.fs.validate(ino)?;
-                let attr = self.fs.getattr(file)?;
-                perm::require_access(&attr.perm, &cred, AccessMask::WRITE)?;
-                let _g = self.locks.write(file);
-                // truncate changes data: revoke every cached page (the
-                // request carries no client identity, so nobody is spared
-                // — the truncating client re-learns the size locally)
-                self.bump_data_gen(file);
-                self.data_invalidate_barrier(file, None);
-                self.fs.truncate(file, size)?;
-                Ok(Response::Unit)
-            }
-            Request::Statfs { host } => {
-                if host != self.fs.host {
-                    return Err(FsError::NoSuchServer(host));
-                }
-                let (files, bytes) = self.fs.statfs();
-                Ok(Response::Statfs { files, bytes })
-            }
-            Request::PrepareInvalidate { dir } => {
-                let dir_file = self.fs.validate(dir)?;
-                let _g = self.locks.write(dir_file);
-                // a peer is about to change a perm blob hanging off this
-                // directory: leases on it go stale with the listing
-                self.bump_lease(dir_file);
-                self.invalidate_barrier(dir_file);
-                Ok(Response::Unit)
-            }
-            Request::UpdateDirentPerm { dir, name, perm } => {
-                let dir_file = self.fs.validate(dir)?;
-                self.fs.set_dirent_perm(dir_file, &name, perm)?;
-                Ok(Response::Unit)
-            }
-            Request::ResolvePath { base, components, client, register, cred } => {
-                // Tentpole cold path: walk as many components as this
-                // server owns in ONE round trip, shipping every traversed
-                // directory's listing back (each entry with its 10-byte
-                // perm blob). Per-level enforcement matches ReadDir: a
-                // listing is only handed out when the cred may READ that
-                // directory — the client falls back to X-only Lookup past
-                // an unreadable level, and does its own §3.1 permission
-                // walk on the returned blobs.
-                self.stats.batch_walks.fetch_add(1, Ordering::Relaxed);
-                let mut dirs: Vec<crate::wire::WalkedDir> = Vec::new();
-                let mut walked: u32 = 0;
-                let mut next: Option<Ino> = None;
-                let mut cur = self.fs.validate(base)?;
-                loop {
-                    let attr = self.fs.getattr(cur)?;
-                    if attr.kind != FileKind::Directory {
-                        if dirs.is_empty() {
-                            return Err(FsError::NotADirectory);
-                        }
-                        break;
-                    }
-                    if perm::require_access(&attr.perm, &cred, AccessMask::READ).is_err() {
-                        if dirs.is_empty() {
-                            return Err(FsError::PermissionDenied);
-                        }
-                        break;
-                    }
-                    // shared dir lock: registration + listing atomic vs
-                    // the §3.4 invalidate-then-apply sequence (same
-                    // discipline as ReadDir)
-                    let entry = {
-                        let _g = self.locks.read(cur);
-                        if register {
-                            self.registry.register(cur, client);
-                        }
-                        let (dattr, entries) = self.fs.readdir(cur)?;
-                        let entry = components
-                            .get(walked as usize)
-                            .and_then(|name| entries.iter().find(|e| e.name == *name).cloned());
-                        dirs.push(crate::wire::WalkedDir { attr: dattr, entries });
-                        entry
-                    };
-                    let entry = match entry {
-                        Some(e) => e,
-                        // components exhausted (walk complete), or the
-                        // name is absent — the listing we just pushed is
-                        // the client's authoritative local ENOENT
-                        None => break,
-                    };
-                    walked += 1;
-                    if entry.kind != FileKind::Directory {
-                        break;
-                    }
-                    if entry.ino.host != self.fs.host {
-                        // server boundary in the decentralized namespace:
-                        // hand the client a continuation token
-                        next = Some(entry.ino);
-                        break;
-                    }
-                    cur = self.fs.validate(entry.ino)?;
-                }
-                Ok(Response::Walked { dirs, walked, next })
-            }
-            Request::Lease { node, client, cred } => {
-                // Grant/refresh a directory permission lease (handle
-                // API). X is the capability a dirfd confers — a cred
-                // that may not traverse the directory gets no handle.
-                let file = self.fs.validate(node)?;
-                // shared dir lock: the (attr, epoch, registration) triple
-                // must be atomic vs a concurrent invalidate-then-apply,
-                // same discipline as ReadDir
-                let _g = self.locks.read(file);
-                let attr = self.fs.getattr(file)?;
-                if attr.kind != FileKind::Directory {
-                    return Err(FsError::NotADirectory);
-                }
-                perm::require_access(&attr.perm, &cred, AccessMask::EXEC)?;
-                // register for §3.4 pushes so the client hears about the
-                // next revocation even if it never listed the directory
-                self.registry.register(file, client);
-                self.stats.lease_grants.fetch_add(1, Ordering::Relaxed);
-                Ok(Response::Leased { attr, epoch: self.lease_epoch(file) })
-            }
-            Request::OpenAt { lease, name, flags, cred, client, handle, want_inline } => {
-                // Relative open fallback (X-only dirs): the open record
-                // is written eagerly here, not deferred. `want_inline`
-                // ships small-file contents on the same reply (§7).
-                let dir_file = self.check_lease(&lease)?;
-                self.require_dir_access(dir_file, &cred, AccessMask::EXEC)?;
-                let entry = self.fs.lookup(dir_file, &name)?;
-                if entry.ino.host != self.fs.host {
-                    // spread placement: the object lives on a peer
-                    self.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
-                    return self.peer(entry.ino.host)?.call(Request::Open {
-                        ino: entry.ino,
-                        flags,
-                        cred,
-                        client,
-                        handle,
-                        want_inline,
-                    });
-                }
-                self.handle_inner(Request::Open {
-                    ino: entry.ino,
-                    flags,
-                    cred,
-                    client,
-                    handle,
-                    want_inline,
-                })
-            }
-            Request::StatAt { lease, name, cred } => {
-                let dir_file = self.check_lease(&lease)?;
-                self.require_dir_access(dir_file, &cred, AccessMask::EXEC)?;
-                let entry = self.fs.lookup(dir_file, &name)?;
-                if entry.ino.host != self.fs.host {
-                    self.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
-                    return self.peer(entry.ino.host)?.call(Request::GetAttr { ino: entry.ino });
-                }
-                Ok(Response::AttrR(self.fs.getattr(entry.ino.file)?))
-            }
-            Request::ReadDirAt { lease, client, register, cred } => {
-                let node = lease.node;
-                self.check_lease(&lease)?;
-                self.handle_inner(Request::ReadDir { dir: node, client, register, cred })
-            }
-            Request::CreateAt { lease, name, mode, kind, cred, client } => {
-                let node = lease.node;
-                self.check_lease(&lease)?;
-                self.handle_inner(Request::Create { dir: node, name, mode, kind, cred, client })
-            }
-            Request::MkdirAt { lease, name, mode, cred } => {
-                let node = lease.node;
-                self.check_lease(&lease)?;
-                self.handle_inner(Request::Mkdir { dir: node, name, mode, cred })
-            }
-            Request::UnlinkAt { lease, name, cred } => {
-                let node = lease.node;
-                self.check_lease(&lease)?;
-                self.handle_inner(Request::Unlink { dir: node, name, cred })
-            }
-            Request::RmdirAt { lease, name, cred } => {
-                let node = lease.node;
-                self.check_lease(&lease)?;
-                self.handle_inner(Request::Rmdir { dir: node, name, cred })
-            }
-            Request::RenameAt { src, sname, dst, dname, cred } => {
-                self.check_lease(&src)?;
-                self.check_lease(&dst)?;
-                self.handle_inner(Request::Rename {
-                    sdir: src.node,
-                    sname,
-                    ddir: dst.node,
-                    dname,
-                    cred,
-                })
-            }
-        }
-    }
 }
 
 pub(crate) fn name_hash(name: &str) -> u64 {
@@ -895,7 +388,7 @@ pub(crate) fn name_hash(name: &str) -> u64 {
 
 impl Service for BServer {
     fn handle(&self, req: Request) -> Response {
-        match self.handle_inner(req) {
+        match ops::dispatch(self, req) {
             Ok(resp) => resp,
             Err(e) => Response::Err(e),
         }
@@ -908,7 +401,7 @@ mod tests {
     use crate::store::data::MemData;
     use crate::store::inode::ROOT_FILE_ID;
     use crate::types::{DirEntry, OpenFlags};
-    use crate::wire::NotifyAck;
+    use crate::wire::{NotifyAck, NO_GEN};
 
     fn server() -> Arc<BServer> {
         BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())))

@@ -1,0 +1,179 @@
+//! Data-path handlers: opens (explicit, by-name, deferred completion),
+//! reads/writes, the batched data plane, truncate, and the asynchronous
+//! close wrap-up.
+//!
+//! Locking here is per-inode through the sharded [`crate::server::locks`]
+//! table — independent files never serialize behind each other, which is
+//! what lets a pipelined connection's worker pool run a slow `ReadBatch`
+//! and a 1-byte `Stat` truly concurrently.
+
+use std::sync::atomic::Ordering;
+
+use crate::error::{FsError, FsResult};
+use crate::server::{BServer, SERVER_INLINE_LIMIT};
+use crate::types::{AccessMask, FileKind, X_OK};
+use crate::wire::{OpenCtx, Request, Response, NO_GEN};
+use crate::perm as permissions;
+
+use super::misrouted;
+
+pub fn open(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Open { ino, flags, cred, client, handle, want_inline } = req else {
+        return Err(misrouted("open"));
+    };
+    // Explicit open: the Lustre baselines use this against an MDS; the
+    // data plane uses it (with `want_inline`) as the first-touch fetch
+    // that also completes the open record.
+    let file = s.fs.validate(ino)?;
+    let attr = s.fs.getattr(file)?;
+    permissions::require_access(&attr.perm, &cred, flags.access_mask())?;
+    s.complete_open(file, &OpenCtx { client, handle, flags, cred }, false);
+    s.stats.explicit_opens.fetch_add(1, Ordering::Relaxed);
+    // inline only for opens that were GRANTED read access — a write-only
+    // open must never receive bytes its cred was not checked against
+    // (same gate as the DoM MDS)
+    if want_inline && flags.read && attr.kind == FileKind::Regular {
+        // piggyback the contents (≤ inline limit) + the data generation
+        // on the reply; shared file lock keeps the (attr, gen, data,
+        // registration) quadruple atomic vs a concurrent write's
+        // invalidate-then-apply
+        let _g = s.locks.read(file);
+        let attr = s.fs.getattr(file)?;
+        // every inline opener is registered for pushes even when the
+        // file is too big to ship: the reply's size is cached state too,
+        // and a client trusting a stale size would serve phantom EOFs
+        // with zero RPCs
+        s.data_registry.register(file, client);
+        let data_gen = s.data_gen(file);
+        let data = if attr.size <= SERVER_INLINE_LIMIT {
+            s.stats.inline_opens.fetch_add(1, Ordering::Relaxed);
+            let (d, _) = s.fs.read(file, 0, attr.size as u32)?;
+            Some(d)
+        } else {
+            None
+        };
+        return Ok(Response::OpenedInline { attr, data_gen, data });
+    }
+    Ok(Response::Opened { attr, inline: None })
+}
+
+pub fn open_by_name(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::OpenByName { dir, name, flags, cred, client, handle, want_inline } = req else {
+        return Err(misrouted("openbyname"));
+    };
+    // intent form (baseline compatibility): resolve + open
+    let dir_file = s.fs.validate(dir)?;
+    s.require_dir_access(dir_file, &cred, AccessMask(X_OK))?;
+    let entry = s.fs.lookup(dir_file, &name)?;
+    open(s, Request::Open { ino: entry.ino, flags, cred, client, handle, want_inline })
+}
+
+pub fn read(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Read { ino, off, len, open_ctx } = req else { return Err(misrouted("read")) };
+    let file = s.fs.validate(ino)?;
+    if let Some(ctx) = &open_ctx {
+        s.complete_open(file, ctx, true);
+    }
+    let _g = s.locks.read(file);
+    let (data, size) = s.fs.read(file, off, len)?;
+    Ok(Response::Data { data, size })
+}
+
+pub fn write(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Write { ino, off, data, open_ctx } = req else { return Err(misrouted("write")) };
+    let file = s.fs.validate(ino)?;
+    if let Some(ctx) = &open_ctx {
+        s.complete_open(file, ctx, true);
+    }
+    let _g = s.locks.write(file);
+    // data plane: revoke cached pages before applying (§3.4 discipline);
+    // the writer itself — when identifiable — keeps its view and applies
+    // its own bytes locally
+    s.bump_data_gen(file);
+    s.data_invalidate_barrier(file, open_ctx.as_ref().map(|c| c.client));
+    let (written, new_size) = s.fs.write(file, off, &data)?;
+    Ok(Response::Written { written, new_size })
+}
+
+pub fn read_batch(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::ReadBatch { ino, ranges, known_gen, client, register, open_ctx } = req else {
+        return Err(misrouted("readbatch"));
+    };
+    let file = s.fs.validate(ino)?;
+    if let Some(ctx) = &open_ctx {
+        s.complete_open(file, ctx, true);
+    }
+    s.stats.batch_reads.fetch_add(1, Ordering::Relaxed);
+    let _g = s.locks.read(file);
+    let data_gen = s.data_gen(file);
+    if known_gen != NO_GEN && known_gen != data_gen {
+        // the client's cached pages predate a foreign write: merging
+        // this reply with them would mix generations
+        s.stats.stale_data.fetch_add(1, Ordering::Relaxed);
+        return Err(FsError::StaleData);
+    }
+    if register {
+        s.data_registry.register(file, client);
+    }
+    let size = s.fs.getattr(file)?.size;
+    let mut segs = Vec::with_capacity(ranges.len());
+    for r in &ranges {
+        let (d, _) = s.fs.read(file, r.off, r.len)?;
+        segs.push(d);
+    }
+    Ok(Response::DataBatch { segs, size, data_gen })
+}
+
+pub fn write_batch(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::WriteBatch { ino, segs, base_gen, client, register, open_ctx } = req else {
+        return Err(misrouted("writebatch"));
+    };
+    let file = s.fs.validate(ino)?;
+    if let Some(ctx) = &open_ctx {
+        s.complete_open(file, ctx, true);
+    }
+    s.stats.batch_writes.fetch_add(1, Ordering::Relaxed);
+    let _g = s.locks.write(file);
+    let cur = s.data_gen(file);
+    if base_gen != NO_GEN && base_gen != cur {
+        // reject BEFORE applying: the client drops its read view and
+        // retries the (self-contained) flush unguarded
+        s.stats.stale_data.fetch_add(1, Ordering::Relaxed);
+        return Err(FsError::StaleData);
+    }
+    let data_gen = s.bump_data_gen(file);
+    s.data_invalidate_barrier(file, Some(client));
+    if register {
+        s.data_registry.register(file, client);
+    }
+    let mut written: u64 = 0;
+    let mut new_size = s.fs.getattr(file)?.size;
+    for seg in &segs {
+        let (w, ns) = s.fs.write(file, seg.off, &seg.data)?;
+        written += w as u64;
+        new_size = ns;
+    }
+    Ok(Response::WrittenBatch { written, new_size, data_gen })
+}
+
+pub fn truncate(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Truncate { ino, size, cred } = req else { return Err(misrouted("truncate")) };
+    let file = s.fs.validate(ino)?;
+    let attr = s.fs.getattr(file)?;
+    permissions::require_access(&attr.perm, &cred, AccessMask::WRITE)?;
+    let _g = s.locks.write(file);
+    // truncate changes data: revoke every cached page (the request
+    // carries no client identity, so nobody is spared — the truncating
+    // client re-learns the size locally)
+    s.bump_data_gen(file);
+    s.data_invalidate_barrier(file, None);
+    s.fs.truncate(file, size)?;
+    Ok(Response::Unit)
+}
+
+pub fn close(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Close { ino, client, handle } = req else { return Err(misrouted("close")) };
+    let file = s.fs.validate(ino)?;
+    s.openlist.close(file, client, handle);
+    Ok(Response::Unit)
+}

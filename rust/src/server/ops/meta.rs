@@ -1,0 +1,55 @@
+//! Read-only metadata handlers: `Hello`, `Lookup`, `ReadDir`,
+//! `GetAttr`, `Statfs`.
+
+use crate::error::{FsError, FsResult};
+use crate::server::BServer;
+use crate::types::AccessMask;
+use crate::wire::{Request, Response};
+
+use super::misrouted;
+
+pub fn hello(_s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Hello { client } = req else { return Err(misrouted("hello")) };
+    let _ = client;
+    Ok(Response::Unit)
+}
+
+pub fn lookup(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Lookup { dir, name, cred } = req else { return Err(misrouted("lookup")) };
+    let dir = s.fs.validate(dir)?;
+    s.require_dir_access(dir, &cred, AccessMask::EXEC)?;
+    Ok(Response::Entry(s.fs.lookup(dir, &name)?))
+}
+
+pub fn read_dir(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::ReadDir { dir, client, register, cred } = req else {
+        return Err(misrouted("readdir"));
+    };
+    let dir = s.fs.validate(dir)?;
+    s.require_dir_access(dir, &cred, AccessMask::READ)?;
+    // shared dir lock: the registration and the listing must be atomic
+    // w.r.t. a concurrent mutation's invalidate-then-apply sequence, or
+    // a client could install a listing that predates a change it was
+    // never told about
+    let _g = s.locks.read(dir);
+    if register {
+        s.registry.register(dir, client);
+    }
+    let (attr, entries) = s.fs.readdir(dir)?;
+    Ok(Response::Entries { dir: attr, entries })
+}
+
+pub fn get_attr(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::GetAttr { ino } = req else { return Err(misrouted("getattr")) };
+    let file = s.fs.validate(ino)?;
+    Ok(Response::AttrR(s.fs.getattr(file)?))
+}
+
+pub fn statfs(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Statfs { host } = req else { return Err(misrouted("statfs")) };
+    if host != s.fs.host {
+        return Err(FsError::NoSuchServer(host));
+    }
+    let (files, bytes) = s.fs.statfs();
+    Ok(Response::Statfs { files, bytes })
+}

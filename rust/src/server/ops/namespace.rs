@@ -1,0 +1,154 @@
+//! Structural namespace mutations: `Create`, `Mkdir`, `Unlink`,
+//! `Rmdir`, `Rename`, plus the server↔server placement ops
+//! `CreateOrphan`/`DropObject`. Every mutation runs the §3.4
+//! invalidate-then-apply barrier under the directory's exclusive lock.
+
+use std::sync::atomic::Ordering;
+
+use crate::error::{FsError, FsResult};
+use crate::server::{name_hash, BServer, Placement};
+use crate::types::{AccessMask, FileKind, HostId, W_OK, X_OK};
+use crate::wire::{Request, Response};
+
+use super::misrouted;
+
+pub fn create(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Create { dir, name, mode, kind, cred, client } = req else {
+        return Err(misrouted("create"));
+    };
+    let dir_file = s.fs.validate(dir)?;
+    s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+    // exclusive dir lock across invalidate+insert (§3.4: invalidate
+    // first, THEN apply — atomically vs readers)
+    let _g = s.locks.write(dir_file);
+    // a new entry changes the directory other clients cache
+    s.invalidate_barrier(dir_file);
+    let entry = match (s.placement, kind) {
+        (Placement::SpreadByNameHash { hosts }, FileKind::Regular) => {
+            let target = (name_hash(&name) % hosts as u64) as HostId;
+            if target == s.fs.host {
+                s.fs.create(dir_file, &name, mode, kind, cred.uid, cred.gid)?
+            } else {
+                // allocate the object on the target server, then hang its
+                // dirent (with the authoritative perm blob) off our
+                // directory
+                s.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+
+                let resp = s.peer(target)?.call(Request::CreateOrphan {
+                    parent: s.fs.ino(dir_file),
+                    name: name.clone(),
+                    mode,
+                    kind,
+                    uid: cred.uid,
+                    gid: cred.gid,
+                })?;
+                let _ = client;
+                match resp {
+                    Response::Created(e) => {
+                        s.fs.insert_remote_entry(dir_file, e.clone())?;
+                        e
+                    }
+                    other => {
+                        return Err(FsError::Protocol(format!("peer create returned {other:?}")))
+                    }
+                }
+            }
+        }
+        _ => s.fs.create(dir_file, &name, mode, kind, cred.uid, cred.gid)?,
+    };
+    Ok(Response::Created(entry))
+}
+
+pub fn create_orphan(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::CreateOrphan { parent, name, mode, kind, uid, gid } = req else {
+        return Err(misrouted("createorphan"));
+    };
+    // server↔server: allocate a local object whose dirent lives on the
+    // calling (directory-owning) server
+    let entry = s.fs.create_orphan(parent, &name, mode, kind, uid, gid)?;
+    Ok(Response::Created(entry))
+}
+
+pub fn mkdir(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Mkdir { dir, name, mode, cred } = req else { return Err(misrouted("mkdir")) };
+    let dir_file = s.fs.validate(dir)?;
+    s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+    let _g = s.locks.write(dir_file);
+    s.invalidate_barrier(dir_file);
+    let entry = s.fs.create(dir_file, &name, mode, FileKind::Directory, cred.uid, cred.gid)?;
+    Ok(Response::Created(entry))
+}
+
+pub fn unlink(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Unlink { dir, name, cred } = req else { return Err(misrouted("unlink")) };
+    let dir_file = s.fs.validate(dir)?;
+    s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+    let _g = s.locks.write(dir_file);
+    s.invalidate_barrier(dir_file);
+    let entry = s.fs.unlink(dir_file, &name)?;
+    if entry.ino.host != s.fs.host {
+        // remote data object: ask its server to drop it
+        s.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+        let _ = s.peer(entry.ino.host)?.call(Request::DropObject { ino: entry.ino });
+    } else {
+        s.locks.forget(entry.ino.file);
+        s.forget_data_gen(entry.ino.file);
+        // stale registrations must not outlive the file: a reused FileId
+        // would otherwise push (and block on) clients that never cached
+        // the new file
+        let _ = s.data_registry.take(entry.ino.file);
+    }
+    Ok(Response::Unit)
+}
+
+pub fn drop_object(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::DropObject { ino } = req else { return Err(misrouted("dropobject")) };
+    let file = s.fs.validate(ino)?;
+    s.fs.drop_local_object(file)?;
+    s.locks.forget(file);
+    s.forget_data_gen(file);
+    let _ = s.data_registry.take(file);
+    Ok(Response::Unit)
+}
+
+pub fn rmdir(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Rmdir { dir, name, cred } = req else { return Err(misrouted("rmdir")) };
+    let dir_file = s.fs.validate(dir)?;
+    s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+    let _g = s.locks.write(dir_file);
+    s.invalidate_barrier(dir_file);
+    let entry = s.fs.rmdir(dir_file, &name)?;
+    // the removed dir itself may be cached by clients
+    if entry.ino.host == s.fs.host {
+        s.invalidate_barrier(entry.ino.file);
+    }
+    Ok(Response::Unit)
+}
+
+pub fn rename(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Rename { sdir, sname, ddir, dname, cred } = req else {
+        return Err(misrouted("rename"));
+    };
+    let src = s.fs.validate(sdir)?;
+    let dst = s.fs.validate(ddir)?;
+    s.require_dir_access(src, &cred, AccessMask(W_OK | X_OK))?;
+    if src != dst {
+        s.require_dir_access(dst, &cred, AccessMask(W_OK | X_OK))?;
+    }
+    // canonical (ascending FileId) acquisition order: every multi-lock
+    // holder (rename, chmod/chown of a directory) sorts, so no ABBA
+    // deadlock is possible between them
+    let (first, second) = if src <= dst { (src, dst) } else { (dst, src) };
+    let _g1 = s.locks.write(first);
+    let _g2 = if first != second { Some(s.locks.write(second)) } else { None };
+    // rename changes what names resolve under both dirs: revoke
+    // outstanding leases before applying (§revocation)
+    s.bump_lease(src);
+    s.invalidate_barrier(src);
+    if src != dst {
+        s.bump_lease(dst);
+        s.invalidate_barrier(dst);
+    }
+    let entry = s.fs.rename(src, sname.as_str(), dst, dname.as_str())?;
+    Ok(Response::Created(entry))
+}

@@ -1,0 +1,71 @@
+//! Permission-change handlers — the heart of the §3.4
+//! invalidate-then-apply protocol: `Chmod`, `Chown`, and the
+//! server↔server halves `PrepareInvalidate` / `UpdateDirentPerm`.
+
+use crate::error::{FsError, FsResult};
+use crate::server::BServer;
+use crate::types::FileKind;
+use crate::wire::{Request, Response};
+
+use super::misrouted;
+
+pub fn chmod(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Chmod { ino, mode, cred } = req else { return Err(misrouted("chmod")) };
+    let file = s.fs.validate(ino)?;
+    s.require_owner(file, &cred)?;
+    // lock the (local) parent dir across invalidate+apply — and the
+    // target itself when it is a directory, so a concurrent
+    // Lease/ReadDir of it cannot pair the OLD perm blob with the NEW
+    // lease epoch (lost revocation)
+    let is_dir = s.fs.getattr(file)?.kind == FileKind::Directory;
+    let _guards = s.perm_change_locks(file, is_dir)?;
+    // §3.4: invalidate every caching client *first*, then apply
+    let parent = s.invalidate_parent_of(file)?;
+    // if the target is itself a cached directory, its node carries perms
+    // too — and every lease on it is revoked
+    if is_dir {
+        s.bump_lease(file);
+        s.invalidate_barrier(file);
+    }
+    let (perm_blob, _) = s.fs.chmod_apply(file, mode)?;
+    s.sync_remote_dirent(&parent, perm_blob)?;
+    Ok(Response::Unit)
+}
+
+pub fn chown(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Chown { ino, uid, gid, cred } = req else { return Err(misrouted("chown")) };
+    let file = s.fs.validate(ino)?;
+    if cred.uid != 0 {
+        return Err(FsError::PermissionDenied);
+    }
+    let is_dir = s.fs.getattr(file)?.kind == FileKind::Directory;
+    let _guards = s.perm_change_locks(file, is_dir)?;
+    let parent = s.invalidate_parent_of(file)?;
+    if is_dir {
+        s.bump_lease(file);
+        s.invalidate_barrier(file);
+    }
+    let (perm_blob, _) = s.fs.chown_apply(file, uid, gid)?;
+    s.sync_remote_dirent(&parent, perm_blob)?;
+    Ok(Response::Unit)
+}
+
+pub fn prepare_invalidate(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::PrepareInvalidate { dir } = req else { return Err(misrouted("invalidate")) };
+    let dir_file = s.fs.validate(dir)?;
+    let _g = s.locks.write(dir_file);
+    // a peer is about to change a perm blob hanging off this directory:
+    // leases on it go stale with the listing
+    s.bump_lease(dir_file);
+    s.invalidate_barrier(dir_file);
+    Ok(Response::Unit)
+}
+
+pub fn update_dirent_perm(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::UpdateDirentPerm { dir, name, perm } = req else {
+        return Err(misrouted("updatedirentperm"));
+    };
+    let dir_file = s.fs.validate(dir)?;
+    s.fs.set_dirent_perm(dir_file, &name, perm)?;
+    Ok(Response::Unit)
+}

@@ -1,0 +1,196 @@
+//! Batched walks and the handle API: `ResolvePath` (one-RPC cold
+//! walks), `Lease` (directory permission leases), and every
+//! lease-stamped dirfd-relative op. Stale stamps are rejected with
+//! [`FsError::StaleLease`] before any base handler runs.
+
+use std::sync::atomic::Ordering;
+
+use crate::error::{FsError, FsResult};
+use crate::perm as permissions;
+use crate::server::ops;
+use crate::server::BServer;
+use crate::types::{AccessMask, FileKind, Ino};
+use crate::wire::{Request, Response, WalkedDir};
+
+use super::misrouted;
+
+pub fn resolve_path(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::ResolvePath { base, components, client, register, cred } = req else {
+        return Err(misrouted("resolve"));
+    };
+    // Batched cold path: walk as many components as this server owns in
+    // ONE round trip, shipping every traversed directory's listing back
+    // (each entry with its 10-byte perm blob). Per-level enforcement
+    // matches ReadDir: a listing is only handed out when the cred may
+    // READ that directory — the client falls back to X-only Lookup past
+    // an unreadable level, and does its own §3.1 permission walk on the
+    // returned blobs.
+    s.stats.batch_walks.fetch_add(1, Ordering::Relaxed);
+    let mut dirs: Vec<WalkedDir> = Vec::new();
+    let mut walked: u32 = 0;
+    let mut next: Option<Ino> = None;
+    let mut cur = s.fs.validate(base)?;
+    loop {
+        let attr = s.fs.getattr(cur)?;
+        if attr.kind != FileKind::Directory {
+            if dirs.is_empty() {
+                return Err(FsError::NotADirectory);
+            }
+            break;
+        }
+        if permissions::require_access(&attr.perm, &cred, AccessMask::READ).is_err() {
+            if dirs.is_empty() {
+                return Err(FsError::PermissionDenied);
+            }
+            break;
+        }
+        // shared dir lock: registration + listing atomic vs the §3.4
+        // invalidate-then-apply sequence (same discipline as ReadDir)
+        let entry = {
+            let _g = s.locks.read(cur);
+            if register {
+                s.registry.register(cur, client);
+            }
+            let (dattr, entries) = s.fs.readdir(cur)?;
+            let entry = components
+                .get(walked as usize)
+                .and_then(|name| entries.iter().find(|e| e.name == *name).cloned());
+            dirs.push(WalkedDir { attr: dattr, entries });
+            entry
+        };
+        let entry = match entry {
+            Some(e) => e,
+            // components exhausted (walk complete), or the name is
+            // absent — the listing we just pushed is the client's
+            // authoritative local ENOENT
+            None => break,
+        };
+        walked += 1;
+        if entry.kind != FileKind::Directory {
+            break;
+        }
+        if entry.ino.host != s.fs.host {
+            // server boundary in the decentralized namespace: hand the
+            // client a continuation token
+            next = Some(entry.ino);
+            break;
+        }
+        cur = s.fs.validate(entry.ino)?;
+    }
+    Ok(Response::Walked { dirs, walked, next })
+}
+
+pub fn lease(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Lease { node, client, cred } = req else { return Err(misrouted("lease")) };
+    // Grant/refresh a directory permission lease (handle API). X is the
+    // capability a dirfd confers — a cred that may not traverse the
+    // directory gets no handle.
+    let file = s.fs.validate(node)?;
+    // shared dir lock: the (attr, epoch, registration) triple must be
+    // atomic vs a concurrent invalidate-then-apply, same discipline as
+    // ReadDir
+    let _g = s.locks.read(file);
+    let attr = s.fs.getattr(file)?;
+    if attr.kind != FileKind::Directory {
+        return Err(FsError::NotADirectory);
+    }
+    permissions::require_access(&attr.perm, &cred, AccessMask::EXEC)?;
+    // register for §3.4 pushes so the client hears about the next
+    // revocation even if it never listed the directory
+    s.registry.register(file, client);
+    s.stats.lease_grants.fetch_add(1, Ordering::Relaxed);
+    Ok(Response::Leased { attr, epoch: s.lease_epoch(file) })
+}
+
+pub fn open_at(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::OpenAt { lease, name, flags, cred, client, handle, want_inline } = req else {
+        return Err(misrouted("openat"));
+    };
+    // Relative open fallback (X-only dirs): the open record is written
+    // eagerly here, not deferred. `want_inline` ships small-file
+    // contents on the same reply (§7).
+    let dir_file = s.check_lease(&lease)?;
+    s.require_dir_access(dir_file, &cred, AccessMask::EXEC)?;
+    let entry = s.fs.lookup(dir_file, &name)?;
+    if entry.ino.host != s.fs.host {
+        // spread placement: the object lives on a peer
+        s.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+        return s.peer(entry.ino.host)?.call(Request::Open {
+            ino: entry.ino,
+            flags,
+            cred,
+            client,
+            handle,
+            want_inline,
+        });
+    }
+    ops::file::open(
+        s,
+        Request::Open { ino: entry.ino, flags, cred, client, handle, want_inline },
+    )
+}
+
+pub fn stat_at(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::StatAt { lease, name, cred } = req else { return Err(misrouted("statat")) };
+    let dir_file = s.check_lease(&lease)?;
+    s.require_dir_access(dir_file, &cred, AccessMask::EXEC)?;
+    let entry = s.fs.lookup(dir_file, &name)?;
+    if entry.ino.host != s.fs.host {
+        s.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+        return s.peer(entry.ino.host)?.call(Request::GetAttr { ino: entry.ino });
+    }
+    Ok(Response::AttrR(s.fs.getattr(entry.ino.file)?))
+}
+
+pub fn read_dir_at(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::ReadDirAt { lease, client, register, cred } = req else {
+        return Err(misrouted("readdirat"));
+    };
+    let node = lease.node;
+    s.check_lease(&lease)?;
+    ops::meta::read_dir(s, Request::ReadDir { dir: node, client, register, cred })
+}
+
+pub fn create_at(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::CreateAt { lease, name, mode, kind, cred, client } = req else {
+        return Err(misrouted("createat"));
+    };
+    let node = lease.node;
+    s.check_lease(&lease)?;
+    ops::namespace::create(s, Request::Create { dir: node, name, mode, kind, cred, client })
+}
+
+pub fn mkdir_at(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::MkdirAt { lease, name, mode, cred } = req else {
+        return Err(misrouted("mkdirat"));
+    };
+    let node = lease.node;
+    s.check_lease(&lease)?;
+    ops::namespace::mkdir(s, Request::Mkdir { dir: node, name, mode, cred })
+}
+
+pub fn unlink_at(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::UnlinkAt { lease, name, cred } = req else { return Err(misrouted("unlinkat")) };
+    let node = lease.node;
+    s.check_lease(&lease)?;
+    ops::namespace::unlink(s, Request::Unlink { dir: node, name, cred })
+}
+
+pub fn rmdir_at(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::RmdirAt { lease, name, cred } = req else { return Err(misrouted("rmdirat")) };
+    let node = lease.node;
+    s.check_lease(&lease)?;
+    ops::namespace::rmdir(s, Request::Rmdir { dir: node, name, cred })
+}
+
+pub fn rename_at(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::RenameAt { src, sname, dst, dname, cred } = req else {
+        return Err(misrouted("renameat"));
+    };
+    s.check_lease(&src)?;
+    s.check_lease(&dst)?;
+    ops::namespace::rename(
+        s,
+        Request::Rename { sdir: src.node, sname, ddir: dst.node, dname, cred },
+    )
+}

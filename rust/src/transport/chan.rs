@@ -9,7 +9,7 @@
 //! asynchronously" (§3.3).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -17,7 +17,8 @@ use crate::codec::Wire;
 use crate::error::FsResult;
 use crate::metrics::RpcMetrics;
 use crate::simnet::LatencyModel;
-use crate::transport::{NotifyPush, NotifySink, Service, Transport};
+use crate::transport::mux::{self, InflightTable, WorkQueue};
+use crate::transport::{NotifyPush, NotifySink, Pending, Service, Transport};
 use crate::wire::{Notify, NotifyAck, Request, Response};
 
 /// Cap on queued fire-and-forget requests. Beyond this the sender pays
@@ -25,6 +26,13 @@ use crate::wire::{Notify, NotifyAck, Request, Response};
 /// memory growth when closes are produced faster than the drainer (one
 /// simulated round trip each) can retire them.
 const ASYNC_Q_CAP: usize = 4096;
+
+/// Default pipelined depth for the in-process transport. Each in-flight
+/// slot is backed by one lazily-spawned worker thread (the worker pool
+/// models the server's per-connection workers *and* the frames in
+/// flight on the wire), so this stays modest; benches raise it with
+/// [`ChanTransport::set_pipeline_depth`].
+const CHAN_PIPELINE_DEPTH: usize = 8;
 
 /// Client endpoint bound to one server's [`Service`].
 pub struct ChanTransport {
@@ -41,6 +49,17 @@ pub struct ChanTransport {
     /// spinning for the life of the process.
     shutdown: Arc<AtomicBool>,
     drainer: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Pipelined engine (DESIGN.md §9): in-flight table + frame queue
+    /// drained by a lazily-spawned per-connection worker pool. Each
+    /// worker carries one frame through the full encode → transmit →
+    /// handle → return-leg cycle, so N workers model N requests
+    /// genuinely in flight over this connection.
+    table: Arc<InflightTable>,
+    /// Submitted pipelined frames awaiting a connection worker.
+    pipe: Arc<WorkQueue<(u64, Vec<u8>)>>,
+    pipe_workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Worker-pool size target; settable until the first `submit`.
+    depth: AtomicUsize,
 }
 
 impl ChanTransport {
@@ -48,11 +67,65 @@ impl ChanTransport {
         Arc::new(ChanTransport {
             service,
             net,
-            metrics,
+            metrics: Arc::clone(&metrics),
             async_q: Arc::new(Mutex::new(VecDeque::new())),
             shutdown: Arc::new(AtomicBool::new(false)),
             drainer: Mutex::new(None),
+            table: Arc::new(InflightTable::new(CHAN_PIPELINE_DEPTH, metrics)),
+            pipe: Arc::new(WorkQueue::new()),
+            pipe_workers: Mutex::new(Vec::new()),
+            depth: AtomicUsize::new(CHAN_PIPELINE_DEPTH),
         })
+    }
+
+    /// Set the pipelined in-flight depth (= worker-pool size). Only
+    /// effective before the first [`Transport::submit`] spawns the pool.
+    pub fn set_pipeline_depth(&self, depth: usize) {
+        let d = depth.max(1);
+        self.depth.store(d, Ordering::Relaxed);
+        self.table.set_cap(d);
+    }
+
+    /// Current in-flight pipelined requests (diagnostics).
+    pub fn inflight(&self) -> usize {
+        self.table.inflight()
+    }
+
+    fn ensure_pipe_workers(&self) {
+        let mut workers = self.pipe_workers.lock().unwrap();
+        if !workers.is_empty() {
+            return;
+        }
+        for i in 0..self.depth.load(Ordering::Relaxed) {
+            let pipe = Arc::clone(&self.pipe);
+            let table = Arc::clone(&self.table);
+            let service = Arc::clone(&self.service);
+            let net = Arc::clone(&self.net);
+            let shutdown = Arc::clone(&self.shutdown);
+            let handle = std::thread::Builder::new()
+                .name(format!("chan-mux-{i}"))
+                .spawn(move || loop {
+                    // drain-then-exit, like the async drainer
+                    let Some((id, frame)) = pipe.pop_or_wait(&shutdown) else { return };
+                    // request leg: the framed bytes cross the wire
+                    net.transmit(frame.len());
+                    let resp = match mux::decode_frame(&frame)
+                        .and_then(|(_, _, payload)| Request::from_bytes(payload))
+                    {
+                        Ok(req) => service.handle(req),
+                        Err(e) => Response::Err(e),
+                    };
+                    // return leg, framed with the same request id
+                    let resp_frame = mux::encode_frame(id, mux::FLAG_NONE, &resp.to_bytes());
+                    net.transmit(resp_frame.len());
+                    let received = resp_frame.len();
+                    let result = mux::decode_frame(&resp_frame)
+                        .and_then(|(_, _, payload)| Response::from_bytes(payload));
+                    table.complete(id, result, received);
+                })
+                .expect("spawn chan mux worker");
+            workers.push(handle);
+        }
     }
 
     fn round_trip(&self, req: &Request) -> FsResult<Response> {
@@ -115,10 +188,19 @@ impl Drop for ChanTransport {
         if let Some(h) = self.drainer.lock().unwrap().take() {
             let _ = h.join();
         }
+        // mux workers drain their frame queue the same way, so every
+        // submitted request completes before the transport is gone
+        self.pipe.wake_all();
+        for h in self.pipe_workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
 impl Transport for ChanTransport {
+    /// One synchronous round trip. The in-process wire has no shared
+    /// stream to serialize on, so an inline call is exactly submit+wait
+    /// with zero queueing — it stays on the caller's thread for speed.
     fn call(&self, req: Request) -> FsResult<Response> {
         let op = req.op();
         let t0 = Instant::now();
@@ -126,6 +208,27 @@ impl Transport for ChanTransport {
         let resp = self.round_trip(&req)?;
         self.metrics.record(op, sent, resp.wire_size(), t0.elapsed());
         resp.into_result()
+    }
+
+    fn submit(&self, req: Request) -> FsResult<Pending> {
+        self.ensure_pipe_workers();
+        let payload = req.to_bytes();
+        // blocks at the depth cap: bounded in-flight backpressure
+        let id = self.table.begin(req.op(), payload.len())?;
+        let frame = mux::encode_frame(id, mux::FLAG_NONE, &payload);
+        self.pipe.push((id, frame));
+        Ok(Pending::Mux(id))
+    }
+
+    fn wait(&self, pending: Pending) -> FsResult<Response> {
+        match pending {
+            Pending::Deferred(req) => self.call(req),
+            Pending::Mux(id) => self.table.wait(id, None)?.into_result(),
+        }
+    }
+
+    fn is_pipelined(&self) -> bool {
+        true
     }
 
     fn call_async(&self, req: Request) -> FsResult<()> {
@@ -269,6 +372,63 @@ mod tests {
         let t0 = Instant::now();
         drop(t); // no drainer was ever started — nothing to join
         assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn submit_wait_all_completes_every_request() {
+        let metrics = Arc::new(RpcMetrics::new());
+        let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+        let t = ChanTransport::new(echo_service(), net, metrics.clone());
+        assert!(t.is_pipelined());
+        let pending: Vec<_> = (0..20)
+            .map(|i| t.submit(Request::GetAttr { ino: Ino::new(0, 0, i) }).unwrap())
+            .collect();
+        for r in crate::transport::wait_all(t.as_ref(), pending) {
+            assert_eq!(r.unwrap(), Response::Unit);
+        }
+        assert_eq!(metrics.count("getattr"), 20);
+        assert_eq!(metrics.pipelined_submits(), 20);
+        assert_eq!(t.inflight(), 0);
+    }
+
+    #[test]
+    fn pipelined_submits_overlap_the_simulated_latency() {
+        let metrics = Arc::new(RpcMetrics::new());
+        let cfg = NetConfig { one_way_us: 2000, per_kb_us: 0, jitter_us: 0, seed: 1 };
+        let t = ChanTransport::new(echo_service(), Arc::new(LatencyModel::new(cfg)), metrics);
+        t.set_pipeline_depth(8);
+        // lockstep: 8 sequential calls = 8 round trips
+        let t0 = Instant::now();
+        for i in 0..8 {
+            t.call(Request::GetAttr { ino: Ino::new(0, 0, i) }).unwrap();
+        }
+        let lockstep = t0.elapsed();
+        // pipelined: 8 concurrent submits ≈ 1 round trip
+        let t0 = Instant::now();
+        let pending: Vec<_> = (0..8)
+            .map(|i| t.submit(Request::GetAttr { ino: Ino::new(0, 0, i) }).unwrap())
+            .collect();
+        for r in crate::transport::wait_all(t.as_ref(), pending) {
+            r.unwrap();
+        }
+        let pipelined = t0.elapsed();
+        assert!(
+            pipelined * 4 <= lockstep,
+            "depth-8 pipeline must be ≥ 4× faster: lockstep={lockstep:?} pipelined={pipelined:?}"
+        );
+    }
+
+    #[test]
+    fn drop_with_submitted_requests_completes_them_first() {
+        let metrics = Arc::new(RpcMetrics::new());
+        let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+        let t = ChanTransport::new(echo_service(), net, metrics.clone());
+        for i in 0..5 {
+            let p = t.submit(Request::GetAttr { ino: Ino::new(0, 0, i) }).unwrap();
+            t.wait(p).unwrap();
+        }
+        drop(t); // workers drain-then-exit without hanging
+        assert_eq!(metrics.count("getattr"), 5);
     }
 
     #[test]

@@ -6,19 +6,44 @@
 //!   figures run on (one OS thread per simulated client process).
 //! * [`tcp`] — length-prefixed frames over real TCP for multi-process
 //!   deployment (`buffetfs serve` / `buffetfs client`).
+//! * [`mux`] — the pipelined multiplexed engine both transports share:
+//!   request-id frame headers, the client in-flight table, and the
+//!   server-side bounded admission gate (DESIGN.md §9).
 
 pub mod capacity;
 pub mod chan;
+pub mod mux;
 pub mod tcp;
 
 use std::sync::Arc;
 
-use crate::error::FsResult;
+use crate::error::{FsError, FsResult};
 use crate::wire::{Notify, NotifyAck, Request, Response};
+
+/// A submitted-but-not-yet-claimed RPC (see [`Transport::submit`]).
+pub enum Pending {
+    /// Lockstep fallback: the request was *not* sent yet; [`Transport::wait`]
+    /// executes it as a plain synchronous call. This is what legacy /
+    /// downgraded peers get — the schedule degrades to today's N × RTT
+    /// without any semantic change.
+    Deferred(Request),
+    /// True pipelined submission, identified by its wire request id; the
+    /// response is routed to the waiter by the demux reader.
+    Mux(u64),
+}
 
 /// A synchronous RPC endpoint to one server. One [`Transport::call`] is
 /// one round trip: the calling thread blocks exactly as the paper's
 /// synchronous RPCs do.
+///
+/// Pipelined transports additionally decouple submission from
+/// completion: [`Transport::submit`] puts a request in flight and
+/// returns immediately (bounded by the connection's in-flight depth),
+/// [`Transport::wait`] claims its response, and [`wait_all`] drives N
+/// concurrent RPCs over one connection — wall-clock ≈ max(server work,
+/// 1 RTT) instead of N × RTT. The defaults implement the lockstep
+/// schedule so every transport (and every downgraded legacy connection)
+/// keeps identical semantics.
 pub trait Transport: Send + Sync {
     fn call(&self, req: Request) -> FsResult<Response>;
 
@@ -27,6 +52,35 @@ pub trait Transport: Send + Sync {
     fn call_async(&self, req: Request) -> FsResult<()> {
         self.call(req).map(|_| ())
     }
+
+    /// Submit a request for pipelined completion. The default defers
+    /// execution to [`Transport::wait`] (lockstep schedule).
+    fn submit(&self, req: Request) -> FsResult<Pending> {
+        Ok(Pending::Deferred(req))
+    }
+
+    /// Claim the response of a [`Transport::submit`].
+    fn wait(&self, pending: Pending) -> FsResult<Response> {
+        match pending {
+            Pending::Deferred(req) => self.call(req),
+            Pending::Mux(id) => Err(FsError::Protocol(format!(
+                "transport has no multiplexer for request id {id}"
+            ))),
+        }
+    }
+
+    /// Does `submit` overlap round trips? `false` = lockstep fallback
+    /// (callers may skip fan-out entirely to keep RPC counts identical).
+    fn is_pipelined(&self) -> bool {
+        false
+    }
+}
+
+/// Claim every submitted response, in submission order. Individual
+/// failures don't abort the rest — each slot gets its own result, so a
+/// caller can retry precisely.
+pub fn wait_all(t: &dyn Transport, pending: Vec<Pending>) -> Vec<FsResult<Response>> {
+    pending.into_iter().map(|p| t.wait(p)).collect()
 }
 
 /// Server side of the RPC boundary: handles one decoded request.

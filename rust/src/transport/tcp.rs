@@ -3,18 +3,38 @@
 //! Used by `buffetfs serve` / `buffetfs client` for actual multi-process
 //! deployment. The figures use the in-process [`super::chan`] transport
 //! (controlled latency); this module proves the protocol runs over a real
-//! socket too and is covered by `rust/tests/tcp_transport.rs`.
+//! socket too and is covered by `rust/tests/tcp_transport.rs` and
+//! `rust/tests/pipeline.rs`.
+//!
+//! Two framings share the socket (DESIGN.md §9):
+//!
+//! * **Lockstep** (legacy): frame payload = bare wire message, one
+//!   in-flight RPC per connection, responses strictly in order.
+//! * **Pipelined**: frame payload = `[magic, ver, flags, request_id]` +
+//!   wire message ([`mux`]). Responses complete out of order, routed to
+//!   waiters by request id; a demux reader thread drains the socket.
+//!
+//! The mode is negotiated by the first frame: a pipelined client opens
+//! with a mux-framed `Hello`. A pipelined server echoes a mux-framed
+//! reply and the connection is pipelined for its lifetime; a legacy
+//! server fails to decode the magic byte as a request tag and answers a
+//! legacy error frame, which the client takes as its cue to **sticky
+//! downgrade** to lockstep framing (same pattern as the `ResolvePath`
+//! downgrade). A legacy client's first frame has no magic byte, so a new
+//! server serves that connection in lockstep mode — both directions
+//! interoperate with zero configuration.
 
 use std::io::{Read, Write as IoWrite};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::codec::Wire;
 use crate::error::{FsError, FsResult};
 use crate::metrics::RpcMetrics;
-use crate::transport::{Service, Transport};
+use crate::transport::mux::{self, Admission, InflightTable, WorkQueue};
+use crate::transport::{Pending, Service, Transport};
 use crate::wire::{Request, Response};
 
 const MAX_FRAME: usize = 128 << 20;
@@ -22,6 +42,15 @@ const MAX_FRAME: usize = 128 << 20;
 /// Default client-side response timeout: a dead peer must surface as a
 /// transport error, not hang the calling thread forever.
 pub const DEFAULT_CALL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Per-connection worker pool size for pipelined connections: how many
+/// requests of one connection execute concurrently in the server.
+pub const PIPE_CONN_WORKERS: usize = 8;
+
+/// Per-connection admission hard cap (queued + executing). Past it the
+/// server sheds with [`FsError::Busy`] instead of queueing — a storm
+/// cannot spawn unbounded work (satellite: bounded in-flight admission).
+pub const PIPE_ADMIT_CAP: usize = 256;
 
 pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> FsResult<()> {
     if payload.len() > MAX_FRAME {
@@ -45,12 +74,12 @@ pub fn read_frame(stream: &mut TcpStream) -> FsResult<Vec<u8>> {
     Ok(buf)
 }
 
-/// Server-side frame read with an idle poll: `Ok(None)` when the short
-/// poll timeout elapsed with NO byte consumed (idle connection — the
-/// caller re-checks its stop flag), `Err` when the peer died or stalled
-/// *mid-frame*. A mid-frame timeout desynchronizes the stream (the next
-/// read would parse payload bytes as a length header), so — mirroring
-/// the client-side poisoning — the connection must be dropped, never
+/// Frame read with an idle poll: `Ok(None)` when the short poll timeout
+/// elapsed with NO byte consumed (idle connection — the caller re-checks
+/// its stop flag), `Err` when the peer died or stalled *mid-frame*. A
+/// mid-frame timeout desynchronizes the stream (the next read would
+/// parse payload bytes as a length header), so — mirroring the
+/// client-side poisoning — the connection must be dropped, never
 /// resumed.
 fn read_frame_idle(stream: &mut TcpStream, idle: std::time::Duration) -> FsResult<Option<Vec<u8>>> {
     let mut len = [0u8; 4];
@@ -94,10 +123,28 @@ fn io_err(e: std::io::Error) -> FsError {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Counters for the server's connection handling (tests / diagnostics).
+#[derive(Default)]
+pub struct TcpServerStats {
+    /// Connections negotiated into pipelined framing.
+    pub pipelined_conns: AtomicU64,
+    /// Connections served in legacy lockstep framing.
+    pub legacy_conns: AtomicU64,
+    /// Requests shed with `Busy` past the per-connection admission cap.
+    pub shed_busy: AtomicU64,
+}
+
 /// Serve `service` on `addr` until `stop` flips. One thread per
-/// connection (thread-per-client matches the one-BAgent-per-client model).
+/// connection (thread-per-client matches the one-BAgent-per-client
+/// model); pipelined connections additionally run a bounded worker pool
+/// so independent requests of one client execute concurrently.
 pub struct TcpServer {
     pub local_addr: std::net::SocketAddr,
+    pub stats: Arc<TcpServerStats>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
@@ -109,6 +156,8 @@ impl TcpServer {
         listener.set_nonblocking(true).map_err(io_err)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let stats = Arc::new(TcpServerStats::default());
+        let stats2 = Arc::clone(&stats);
         let accept_thread = std::thread::Builder::new()
             .name("tcp-accept".into())
             .spawn(move || {
@@ -120,10 +169,11 @@ impl TcpServer {
                             stream.set_nodelay(true).ok();
                             let svc = Arc::clone(&service);
                             let stop3 = Arc::clone(&stop2);
+                            let st = Arc::clone(&stats2);
                             conns.push(
                                 std::thread::Builder::new()
                                     .name("tcp-conn".into())
-                                    .spawn(move || serve_conn(stream, svc, stop3))
+                                    .spawn(move || serve_conn(stream, svc, stop3, st))
                                     .expect("spawn conn thread"),
                             );
                         }
@@ -138,7 +188,7 @@ impl TcpServer {
                 }
             })
             .expect("spawn accept thread");
-        Ok(TcpServer { local_addr, stop, accept_thread: Some(accept_thread) })
+        Ok(TcpServer { local_addr, stats, stop, accept_thread: Some(accept_thread) })
     }
 
     pub fn shutdown(mut self) {
@@ -158,21 +208,48 @@ impl Drop for TcpServer {
     }
 }
 
-fn serve_conn(mut stream: TcpStream, service: Arc<dyn Service>, stop: Arc<AtomicBool>) {
+fn serve_conn(
+    mut stream: TcpStream,
+    service: Arc<dyn Service>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<TcpServerStats>,
+) {
     let idle = std::time::Duration::from_millis(100);
     stream.set_read_timeout(Some(idle)).ok();
     // a client that stops draining must not pin this connection thread
     // forever: a timed-out response write drops the connection below
     stream.set_write_timeout(Some(DEFAULT_CALL_TIMEOUT)).ok();
-    loop {
+    // the first frame fixes the connection's framing for its lifetime
+    let first = loop {
         if stop.load(Ordering::Relaxed) {
             return;
         }
-        let frame = match read_frame_idle(&mut stream, idle) {
-            Ok(None) => continue,          // idle poll: re-check stop
-            Ok(Some(f)) => f,
-            Err(_) => return, // peer went away or stalled mid-frame
-        };
+        match read_frame_idle(&mut stream, idle) {
+            Ok(None) => continue,
+            Ok(Some(f)) => break f,
+            Err(_) => return,
+        }
+    };
+    if mux::is_mux_frame(&first) {
+        stats.pipelined_conns.fetch_add(1, Ordering::Relaxed);
+        serve_conn_pipelined(stream, first, service, stop, stats, idle);
+    } else {
+        stats.legacy_conns.fetch_add(1, Ordering::Relaxed);
+        serve_conn_lockstep(stream, first, service, stop, stats, idle);
+    }
+}
+
+/// Legacy lockstep loop: decode, handle inline, reply in order.
+fn serve_conn_lockstep(
+    mut stream: TcpStream,
+    first: Vec<u8>,
+    service: Arc<dyn Service>,
+    stop: Arc<AtomicBool>,
+    _stats: Arc<TcpServerStats>,
+    idle: std::time::Duration,
+) {
+    let mut frame = first;
+    loop {
         let resp = match Request::from_bytes(&frame) {
             Ok(req) => service.handle(req),
             Err(e) => Response::Err(e),
@@ -180,75 +257,325 @@ fn serve_conn(mut stream: TcpStream, service: Arc<dyn Service>, stop: Arc<Atomic
         if write_frame(&mut stream, &resp.to_bytes()).is_err() {
             return;
         }
+        frame = loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match read_frame_idle(&mut stream, idle) {
+                Ok(None) => continue,          // idle poll: re-check stop
+                Ok(Some(f)) => break f,
+                Err(_) => return, // peer went away or stalled mid-frame
+            }
+        };
     }
 }
 
-/// Client endpoint over one TCP connection (serialized by a mutex — one
-/// in-flight RPC per connection, like a Lustre request slot).
+/// Pipelined loop: the reader admits frames into a bounded queue; a
+/// fixed worker pool executes them concurrently and writes mux-framed
+/// responses (out of order) under a shared write lock.
+fn serve_conn_pipelined(
+    mut stream: TcpStream,
+    first: Vec<u8>,
+    service: Arc<dyn Service>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<TcpServerStats>,
+    idle: std::time::Duration,
+) {
+    let Ok(writer_stream) = stream.try_clone() else { return };
+    let writer = Arc::new(Mutex::new(writer_stream));
+    let admission = Arc::new(Admission::new(PIPE_ADMIT_CAP));
+    // work items of this connection, bounded by the admission gate
+    let queue: Arc<WorkQueue<(u64, Request)>> = Arc::new(WorkQueue::new());
+    let conn_stop = Arc::new(AtomicBool::new(false));
+
+    let mut workers = Vec::with_capacity(PIPE_CONN_WORKERS);
+    for i in 0..PIPE_CONN_WORKERS {
+        let queue = Arc::clone(&queue);
+        let writer = Arc::clone(&writer);
+        let service = Arc::clone(&service);
+        let admission = Arc::clone(&admission);
+        let conn_stop = Arc::clone(&conn_stop);
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("tcp-conn-worker-{i}"))
+                .spawn(move || loop {
+                    let Some((id, req)) = queue.pop_or_wait(&conn_stop) else { return };
+                    let resp = service.handle(req);
+                    let frame = mux::encode_frame(id, mux::FLAG_NONE, &resp.to_bytes());
+                    let _ = write_frame(&mut writer.lock().unwrap(), &frame);
+                    admission.done();
+                })
+                .expect("spawn conn worker"),
+        );
+    }
+
+    let dispatch = |frame: Vec<u8>| -> bool {
+        let (id, _flags, payload) = match mux::decode_frame(&frame) {
+            Ok(parts) => parts,
+            Err(_) => return false, // a mid-connection framing switch is fatal
+        };
+        match Request::from_bytes(payload) {
+            Err(e) => {
+                let f = mux::encode_frame(id, mux::FLAG_NONE, &Response::Err(e).to_bytes());
+                write_frame(&mut writer.lock().unwrap(), &f).is_ok()
+            }
+            Ok(req) => {
+                if admission.try_admit() {
+                    queue.push((id, req));
+                    true
+                } else {
+                    // past the hard cap: shed instead of queueing
+                    stats.shed_busy.fetch_add(1, Ordering::Relaxed);
+                    let f = mux::encode_frame(
+                        id,
+                        mux::FLAG_NONE,
+                        &Response::Err(FsError::Busy).to_bytes(),
+                    );
+                    write_frame(&mut writer.lock().unwrap(), &f).is_ok()
+                }
+            }
+        }
+    };
+
+    // the handshake Hello rides the normal path: its mux-framed reply is
+    // what tells the client this server speaks the pipelined protocol
+    let mut alive = dispatch(first);
+    while alive && !stop.load(Ordering::Relaxed) {
+        match read_frame_idle(&mut stream, idle) {
+            Ok(None) => continue,
+            Ok(Some(f)) => alive = dispatch(f),
+            Err(_) => break,
+        }
+    }
+    // drain-then-exit: queued requests still answer (the client may be
+    // gone; writes then fail harmlessly), then the pool winds down
+    conn_stop.store(true, Ordering::Release);
+    queue.wake_all();
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Lockstep state: the whole connection serialized by a mutex — one
+/// in-flight RPC, like a Lustre request slot.
+struct Lockstep {
+    stream: Mutex<TcpStream>,
+}
+
+/// Pipelined state: callers write mux frames under `writer`; one demux
+/// reader thread routes responses to [`InflightTable`] slots by id.
+struct Pipe {
+    writer: Mutex<TcpStream>,
+    table: Arc<InflightTable>,
+    stop: Arc<AtomicBool>,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+enum Mode {
+    Lockstep(Lockstep),
+    Pipelined(Pipe),
+}
+
+/// Client endpoint over one TCP connection.
 ///
 /// `TCP_NODELAY` is set on both ends (here and in the server's accept
-/// loop): the data plane's small frames must not eat Nagle delays. A
-/// configurable read timeout bounds how long a call waits on a dead
-/// peer; a timeout leaves the stream desynchronized (the late response
-/// may still arrive and would answer the *next* request), so the
-/// transport poisons itself — every later call fails fast and the
-/// caller must reconnect.
+/// loop): the data plane's small frames must not eat Nagle delays.
+///
+/// **Lockstep mode** ([`TcpTransport::connect`]): a configurable read
+/// timeout bounds how long a call waits on a dead peer; a timeout leaves
+/// the stream desynchronized (the late response may still arrive and
+/// would answer the *next* request), so the transport poisons itself —
+/// every later call fails fast and the caller must reconnect.
+///
+/// **Pipelined mode** ([`TcpTransport::connect_pipelined`]): the same
+/// timeout applies *per request id* — the slot is abandoned and its late
+/// response discarded, but demux routing keeps the stream consistent, so
+/// the connection itself stays usable. Only a stream-level failure
+/// (reader error, timed-out/partial frame *write*) poisons the whole
+/// transport, failing every in-flight waiter.
 pub struct TcpTransport {
-    stream: Mutex<TcpStream>,
+    mode: Mode,
     metrics: Arc<RpcMetrics>,
     read_timeout: Option<Duration>,
-    poisoned: AtomicBool,
+    /// Shared with the demux reader thread (which must not hold an `Arc`
+    /// of the whole transport — `Drop` joins it).
+    poisoned: Arc<AtomicBool>,
 }
 
 impl TcpTransport {
-    /// Connect with the [`DEFAULT_CALL_TIMEOUT`] response timeout.
+    /// Connect in lockstep mode with the [`DEFAULT_CALL_TIMEOUT`].
     pub fn connect<A: ToSocketAddrs>(addr: A, metrics: Arc<RpcMetrics>) -> FsResult<Arc<TcpTransport>> {
         Self::connect_with_timeout(addr, Some(DEFAULT_CALL_TIMEOUT), metrics)
     }
 
-    /// Connect with an explicit response timeout (`None` = wait forever,
-    /// the pre-timeout behaviour).
+    /// Connect in lockstep mode with an explicit response timeout
+    /// (`None` = wait forever, the pre-timeout behaviour).
     pub fn connect_with_timeout<A: ToSocketAddrs>(
         addr: A,
         read_timeout: Option<Duration>,
         metrics: Arc<RpcMetrics>,
     ) -> FsResult<Arc<TcpTransport>> {
+        let stream = Self::open_stream(addr, read_timeout)?;
+        Ok(Arc::new(TcpTransport {
+            mode: Mode::Lockstep(Lockstep { stream: Mutex::new(stream) }),
+            metrics,
+            read_timeout,
+            poisoned: Arc::new(AtomicBool::new(false)),
+        }))
+    }
+
+    /// Connect and attempt the pipelined `Hello` handshake with default
+    /// timeout and depth; a legacy peer sticky-downgrades to lockstep.
+    pub fn connect_pipelined<A: ToSocketAddrs>(
+        addr: A,
+        metrics: Arc<RpcMetrics>,
+    ) -> FsResult<Arc<TcpTransport>> {
+        Self::connect_pipelined_with(
+            addr,
+            Some(DEFAULT_CALL_TIMEOUT),
+            mux::DEFAULT_PIPELINE_DEPTH,
+            metrics,
+        )
+    }
+
+    /// Connect and attempt the pipelined handshake with an explicit
+    /// response timeout and in-flight depth cap.
+    pub fn connect_pipelined_with<A: ToSocketAddrs>(
+        addr: A,
+        read_timeout: Option<Duration>,
+        depth: usize,
+        metrics: Arc<RpcMetrics>,
+    ) -> FsResult<Arc<TcpTransport>> {
+        let mut stream = Self::open_stream(addr, read_timeout)?;
+        // version handshake: one mux-framed Hello. A pipelined server
+        // answers with a mux frame; a legacy server decodes 0xB5 as a
+        // request tag, fails, and answers a legacy error frame — the
+        // sticky-downgrade cue. Either way exactly one request/response
+        // pair crossed the stream, so both modes start in sync.
+        let hello = Request::Hello { client: 0 }.to_bytes();
+        write_frame(&mut stream, &mux::encode_frame(0, mux::FLAG_NONE, &hello))?;
+        let reply = read_frame(&mut stream)?;
+        if !mux::is_mux_frame(&reply) {
+            // legacy peer: fall back to today's lockstep framing
+            return Ok(Arc::new(TcpTransport {
+                mode: Mode::Lockstep(Lockstep { stream: Mutex::new(stream) }),
+                metrics,
+                read_timeout,
+                poisoned: Arc::new(AtomicBool::new(false)),
+            }));
+        }
+        let table = Arc::new(InflightTable::new(depth, Arc::clone(&metrics)));
+        let stop = Arc::new(AtomicBool::new(false));
+        let poisoned = Arc::new(AtomicBool::new(false));
+        let mut reader_stream = stream.try_clone().map_err(io_err)?;
+        // captured by the reader: NOT the transport itself (Drop joins
+        // the reader, which must therefore never hold it alive)
+        let rd_table = Arc::clone(&table);
+        let rd_stop = Arc::clone(&stop);
+        let rd_poisoned = Arc::clone(&poisoned);
+        let reader = std::thread::Builder::new()
+            .name("tcp-demux".into())
+            .spawn(move || {
+                let idle = Duration::from_millis(100);
+                reader_stream.set_read_timeout(Some(idle)).ok();
+                // stream-level failure: nothing can be routed any more
+                let die = |err: FsError| {
+                    rd_poisoned.store(true, Ordering::Release);
+                    rd_table.fail_all(err);
+                };
+                loop {
+                    if rd_stop.load(Ordering::Acquire) {
+                        return;
+                    }
+                    match read_frame_idle(&mut reader_stream, idle) {
+                        Ok(None) => continue,
+                        Ok(Some(frame)) => match mux::decode_frame(&frame) {
+                            Ok((id, _flags, payload)) => {
+                                let received = payload.len();
+                                rd_table.complete(id, Response::from_bytes(payload), received);
+                            }
+                            Err(e) => {
+                                die(e);
+                                let _ = reader_stream.shutdown(std::net::Shutdown::Both);
+                                return;
+                            }
+                        },
+                        Err(e) => {
+                            if !rd_stop.load(Ordering::Acquire) {
+                                die(FsError::Transport(format!(
+                                    "demux reader lost the connection: {e}"
+                                )));
+                                let _ = reader_stream.shutdown(std::net::Shutdown::Both);
+                            }
+                            return;
+                        }
+                    }
+                }
+            })
+            .expect("spawn demux reader");
+        Ok(Arc::new(TcpTransport {
+            mode: Mode::Pipelined(Pipe {
+                writer: Mutex::new(stream),
+                table,
+                stop,
+                reader: Mutex::new(Some(reader)),
+            }),
+            metrics,
+            read_timeout,
+            poisoned,
+        }))
+    }
+
+    fn open_stream<A: ToSocketAddrs>(
+        addr: A,
+        read_timeout: Option<Duration>,
+    ) -> FsResult<TcpStream> {
         let stream = TcpStream::connect(addr).map_err(io_err)?;
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(read_timeout).map_err(io_err)?;
         // a peer that stops draining its socket must not hang the writer
         // (and everyone queued behind the stream mutex) forever either
         stream.set_write_timeout(read_timeout).map_err(io_err)?;
-        Ok(Arc::new(TcpTransport {
-            stream: Mutex::new(stream),
-            metrics,
-            read_timeout,
-            poisoned: AtomicBool::new(false),
-        }))
+        Ok(stream)
     }
 
     pub fn read_timeout(&self) -> Option<Duration> {
         self.read_timeout
     }
 
-    /// True after a response timeout: the stream is desynchronized and
-    /// this transport must be replaced.
+    /// True after a stream-level failure: the connection is
+    /// unrecoverable and this transport must be replaced.
     pub fn is_poisoned(&self) -> bool {
         self.poisoned.load(Ordering::Acquire)
     }
-}
 
-impl Transport for TcpTransport {
-    fn call(&self, req: Request) -> FsResult<Response> {
-        if self.poisoned.load(Ordering::Acquire) {
-            return Err(FsError::Transport(
-                "connection poisoned by an earlier response timeout; reconnect".into(),
-            ));
+    /// Did the handshake land in pipelined mode? `false` after a sticky
+    /// downgrade against a legacy peer (or for plain `connect`).
+    pub fn is_pipelined_mode(&self) -> bool {
+        matches!(self.mode, Mode::Pipelined(_))
+    }
+
+    /// Stream-level failure in pipelined mode: fail every waiter, refuse
+    /// later submissions, tear the socket down.
+    fn poison_pipe(&self, err: FsError) {
+        self.poisoned.store(true, Ordering::Release);
+        if let Mode::Pipelined(pipe) = &self.mode {
+            pipe.table.fail_all(err);
+            if let Ok(w) = pipe.writer.lock() {
+                let _ = w.shutdown(std::net::Shutdown::Both);
+            }
         }
+    }
+
+    fn call_lockstep(&self, ls: &Lockstep, req: Request) -> FsResult<Response> {
         let op = req.op();
         let t0 = Instant::now();
         let payload = req.to_bytes();
-        let mut stream = self.stream.lock().unwrap();
+        let mut stream = ls.stream.lock().unwrap();
         if let Err(e) = write_frame(&mut stream, &payload) {
             if matches!(&e, FsError::Transport(msg) if msg.contains("timed out")) {
                 // a partial frame may be on the wire: desynchronized
@@ -275,5 +602,112 @@ impl Transport for TcpTransport {
         let resp = Response::from_bytes(&frame)?;
         self.metrics.record(op, payload.len(), frame.len(), t0.elapsed());
         resp.into_result()
+    }
+
+    /// Put one mux frame on the wire for an already-allocated id. A
+    /// timed-out or partial write desynchronizes the *outbound* stream,
+    /// which no amount of demuxing can repair — whole-connection poison.
+    fn send_frame(&self, pipe: &Pipe, id: u64, payload: &[u8]) -> FsResult<()> {
+        let frame = mux::encode_frame(id, mux::FLAG_NONE, payload);
+        let mut w = pipe.writer.lock().unwrap();
+        if let Err(e) = write_frame(&mut w, &frame) {
+            drop(w);
+            self.poison_pipe(e.clone());
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn submit_pipelined(&self, pipe: &Pipe, req: Request) -> FsResult<u64> {
+        if self.poisoned.load(Ordering::Acquire) {
+            return Err(FsError::Transport(
+                "connection poisoned by an earlier stream failure; reconnect".into(),
+            ));
+        }
+        let payload = req.to_bytes();
+        let id = pipe.table.begin(req.op(), payload.len())?;
+        self.send_frame(pipe, id, &payload)?;
+        Ok(id)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn call(&self, req: Request) -> FsResult<Response> {
+        if self.poisoned.load(Ordering::Acquire) {
+            return Err(FsError::Transport(
+                "connection poisoned by an earlier response timeout; reconnect".into(),
+            ));
+        }
+        match &self.mode {
+            Mode::Lockstep(ls) => self.call_lockstep(ls, req),
+            // submit + wait: the pipelined call composes with concurrent
+            // submitters instead of serializing behind a stream mutex
+            Mode::Pipelined(pipe) => {
+                let op = req.op();
+                let id = self.submit_pipelined(pipe, req)?;
+                match pipe.table.wait(id, self.read_timeout) {
+                    Err(FsError::Transport(msg)) if msg.contains("timed out") => {
+                        Err(FsError::Transport(format!(
+                            "no response to {op} within {:?}: {msg}",
+                            self.read_timeout
+                        )))
+                    }
+                    other => other?.into_result(),
+                }
+            }
+        }
+    }
+
+    fn call_async(&self, req: Request) -> FsResult<()> {
+        match &self.mode {
+            Mode::Lockstep(_) => self.call(req).map(|_| ()),
+            Mode::Pipelined(pipe) => {
+                if self.poisoned.load(Ordering::Acquire) {
+                    return Err(FsError::Transport("connection poisoned".into()));
+                }
+                let payload = req.to_bytes();
+                // fire-and-forget: completion frees the slot, nobody waits
+                let id = pipe.table.begin_forget(req.op(), payload.len())?;
+                self.send_frame(pipe, id, &payload)
+            }
+        }
+    }
+
+    fn submit(&self, req: Request) -> FsResult<Pending> {
+        match &self.mode {
+            // downgraded/legacy connections keep the lockstep schedule
+            Mode::Lockstep(_) => Ok(Pending::Deferred(req)),
+            Mode::Pipelined(pipe) => Ok(Pending::Mux(self.submit_pipelined(pipe, req)?)),
+        }
+    }
+
+    fn wait(&self, pending: Pending) -> FsResult<Response> {
+        match (pending, &self.mode) {
+            (Pending::Deferred(req), _) => self.call(req),
+            (Pending::Mux(id), Mode::Pipelined(pipe)) => {
+                pipe.table.wait(id, self.read_timeout)?.into_result()
+            }
+            (Pending::Mux(id), Mode::Lockstep(_)) => Err(FsError::Protocol(format!(
+                "mux pending {id} on a lockstep connection"
+            ))),
+        }
+    }
+
+    fn is_pipelined(&self) -> bool {
+        self.is_pipelined_mode()
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        if let Mode::Pipelined(pipe) = &self.mode {
+            pipe.stop.store(true, Ordering::Release);
+            if let Ok(w) = pipe.writer.lock() {
+                let _ = w.shutdown(std::net::Shutdown::Both);
+            }
+            if let Some(r) = pipe.reader.lock().unwrap().take() {
+                let _ = r.join();
+            }
+        }
     }
 }

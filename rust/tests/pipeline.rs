@@ -1,0 +1,492 @@
+//! The pipelined multiplexed RPC engine end-to-end (DESIGN.md §9):
+//!
+//! * out-of-order completion over one connection — a slow `ReadBatch`
+//!   must not head-of-line-block a tiny `GetAttr` (chan and TCP);
+//! * the acceptance storm: depth-8 pipelined small-file opens over ONE
+//!   simnet connection are ≥ 4× faster than lockstep;
+//! * downgrade interop: a pipelined client against a legacy lockstep
+//!   server (and a legacy client against a new server) both work
+//!   unchanged;
+//! * a multi-threaded pipelined storm over one shared TCP connection
+//!   routes every response to the right waiter;
+//! * bounded admission: past the per-connection hard cap the server
+//!   sheds with `Busy` instead of queueing unboundedly, and recovers;
+//! * the datapath fan-out (`pipeline_ways`) preserves bytes exactly.
+
+use std::io::{Read, Write as IoWrite};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::codec::Wire;
+use buffetfs::datapath::DatapathConfig;
+use buffetfs::error::FsError;
+use buffetfs::metrics::RpcMetrics;
+use buffetfs::server::BServer;
+use buffetfs::simnet::{LatencyModel, NetConfig};
+use buffetfs::store::data::MemData;
+use buffetfs::store::fs::LocalFs;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::transport::chan::ChanTransport;
+use buffetfs::transport::tcp::{TcpServer, TcpTransport};
+use buffetfs::transport::{wait_all, Service, Transport};
+use buffetfs::types::{Credentials, FileKind, Ino, OpenFlags};
+use buffetfs::wire::{ByteRange, Request, Response, NO_GEN};
+
+fn server() -> Arc<BServer> {
+    BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())))
+}
+
+fn root() -> Ino {
+    Ino::new(0, 0, 1)
+}
+
+fn cred() -> Credentials {
+    Credentials::root()
+}
+
+fn create_file(s: &Arc<BServer>, name: &str, content: &[u8]) -> Ino {
+    let e = match s.handle(Request::Create {
+        dir: root(),
+        name: name.into(),
+        mode: 0o644,
+        kind: FileKind::Regular,
+        cred: cred(),
+        client: 0,
+    }) {
+        Response::Created(e) => e,
+        other => panic!("create: {other:?}"),
+    };
+    if !content.is_empty() {
+        s.handle(Request::Write { ino: e.ino, off: 0, data: content.to_vec(), open_ctx: None });
+    }
+    e.ino
+}
+
+/// A service that handles `ReadBatch` slowly and everything else via the
+/// real server — the head-of-line-blocking probe.
+struct SlowReads {
+    inner: Arc<BServer>,
+    delay: Duration,
+}
+
+impl Service for SlowReads {
+    fn handle(&self, req: Request) -> Response {
+        if matches!(req, Request::ReadBatch { .. }) {
+            std::thread::sleep(self.delay);
+        }
+        self.inner.handle(req)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-order completion + fairness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slow_readbatch_does_not_block_stat_over_chan() {
+    let s = server();
+    let ino = create_file(&s, "big.dat", &[1u8; 4096]);
+    let svc = Arc::new(SlowReads { inner: s, delay: Duration::from_millis(300) });
+    let metrics = Arc::new(RpcMetrics::new());
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let t = ChanTransport::new(svc, net, metrics.clone());
+
+    let slow = t
+        .submit(Request::ReadBatch {
+            ino,
+            ranges: vec![ByteRange { off: 0, len: 4096 }],
+            known_gen: NO_GEN,
+            client: 1,
+            register: false,
+            open_ctx: None,
+        })
+        .unwrap();
+    let fast = t.submit(Request::GetAttr { ino }).unwrap();
+    let t0 = Instant::now();
+    let r = t.wait(fast).unwrap();
+    assert!(matches!(r, Response::AttrR(_)));
+    assert!(
+        t0.elapsed() < Duration::from_millis(200),
+        "a 1-attr stat waited {:?} behind a slow ReadBatch",
+        t0.elapsed()
+    );
+    assert!(matches!(t.wait(slow).unwrap(), Response::DataBatch { .. }));
+    assert!(metrics.ooo_completions() >= 1, "the stat overtook: must count as out-of-order");
+}
+
+#[test]
+fn slow_readbatch_does_not_block_stat_over_tcp() {
+    let s = server();
+    let ino = create_file(&s, "big.dat", &[2u8; 4096]);
+    let svc = Arc::new(SlowReads { inner: s, delay: Duration::from_millis(300) });
+    let tcp = TcpServer::spawn("127.0.0.1:0", svc).unwrap();
+    let metrics = Arc::new(RpcMetrics::new());
+    let t = TcpTransport::connect_pipelined(tcp.local_addr, metrics.clone()).unwrap();
+    assert!(t.is_pipelined_mode(), "new server must accept the handshake");
+
+    let slow = t
+        .submit(Request::ReadBatch {
+            ino,
+            ranges: vec![ByteRange { off: 0, len: 4096 }],
+            known_gen: NO_GEN,
+            client: 1,
+            register: false,
+            open_ctx: None,
+        })
+        .unwrap();
+    let fast = t.submit(Request::GetAttr { ino }).unwrap();
+    let t0 = Instant::now();
+    assert!(matches!(t.wait(fast).unwrap(), Response::AttrR(_)));
+    assert!(
+        t0.elapsed() < Duration::from_millis(200),
+        "stat head-of-line-blocked over TCP: {:?}",
+        t0.elapsed()
+    );
+    assert!(matches!(t.wait(slow).unwrap(), Response::DataBatch { .. }));
+    assert!(metrics.ooo_completions() >= 1);
+    assert_eq!(tcp.stats.pipelined_conns.load(Ordering::Relaxed), 1);
+    tcp.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance storm (chan, one connection)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn depth8_pipelined_storm_is_4x_faster_than_lockstep() {
+    let s = server();
+    let inos: Vec<Ino> =
+        (0..8).map(|i| create_file(&s, &format!("f{i}"), &[i as u8; 1024])).collect();
+    let metrics = Arc::new(RpcMetrics::new());
+    let cfg = NetConfig { one_way_us: 2000, per_kb_us: 0, jitter_us: 0, seed: 3 };
+    let t = ChanTransport::new(s, Arc::new(LatencyModel::new(cfg)), metrics);
+    t.set_pipeline_depth(8);
+    let open = |ino: Ino, handle: u64| Request::Open {
+        ino,
+        flags: OpenFlags::RDONLY,
+        cred: cred(),
+        client: 1,
+        handle,
+        want_inline: true,
+    };
+
+    let t0 = Instant::now();
+    for (i, ino) in inos.iter().enumerate() {
+        t.call(open(*ino, 100 + i as u64)).unwrap();
+    }
+    let lockstep = t0.elapsed();
+
+    let t0 = Instant::now();
+    let pending: Vec<_> = inos
+        .iter()
+        .enumerate()
+        .map(|(i, ino)| t.submit(open(*ino, 200 + i as u64)).unwrap())
+        .collect();
+    for r in wait_all(t.as_ref(), pending) {
+        assert!(matches!(r.unwrap(), Response::OpenedInline { .. }));
+    }
+    let pipelined = t0.elapsed();
+    assert!(
+        pipelined * 4 <= lockstep,
+        "acceptance: ≥ 4× at depth 8 — lockstep={lockstep:?} pipelined={pipelined:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Downgrade interop
+// ---------------------------------------------------------------------------
+
+/// A true legacy lockstep server: bare length-prefixed wire frames, no
+/// mux header understanding, strictly one request at a time — what every
+/// pre-engine peer speaks.
+fn spawn_legacy_server(s: Arc<BServer>) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = std::thread::spawn(move || {
+        let Ok((mut conn, _)) = listener.accept() else { return };
+        loop {
+            let mut len = [0u8; 4];
+            if conn.read_exact(&mut len).is_err() {
+                return;
+            }
+            let mut buf = vec![0u8; u32::from_le_bytes(len) as usize];
+            if conn.read_exact(&mut buf).is_err() {
+                return;
+            }
+            let resp = match Request::from_bytes(&buf) {
+                Ok(req) => s.handle(req),
+                Err(e) => Response::Err(e),
+            };
+            let payload = resp.to_bytes();
+            if conn.write_all(&(payload.len() as u32).to_le_bytes()).is_err()
+                || conn.write_all(&payload).is_err()
+            {
+                return;
+            }
+        }
+    });
+    (addr, h)
+}
+
+#[test]
+fn pipelined_client_sticky_downgrades_against_legacy_server() {
+    let s = server();
+    let ino = create_file(&s, "old.dat", b"legacy bytes");
+    let (addr, srv) = spawn_legacy_server(s);
+    let metrics = Arc::new(RpcMetrics::new());
+    let t = TcpTransport::connect_pipelined(addr, metrics.clone()).unwrap();
+    assert!(!t.is_pipelined_mode(), "legacy peer must trigger the sticky downgrade");
+    // everything still works over the lockstep schedule
+    match t.call(Request::Read { ino, off: 0, len: 64, open_ctx: None }).unwrap() {
+        Response::Data { data, .. } => assert_eq!(data, b"legacy bytes"),
+        other => panic!("{other:?}"),
+    }
+    // submit/wait degrade to deferred calls — same results, zero submits
+    let p = t.submit(Request::GetAttr { ino }).unwrap();
+    assert!(matches!(t.wait(p).unwrap(), Response::AttrR(_)));
+    assert_eq!(metrics.pipelined_submits(), 0, "downgraded connection never muxes");
+    drop(t);
+    let _ = srv; // server thread exits when the connection drops
+}
+
+#[test]
+fn legacy_client_works_against_new_server() {
+    let s = server();
+    let ino = create_file(&s, "new.dat", b"hello");
+    let tcp = TcpServer::spawn("127.0.0.1:0", s).unwrap();
+    let metrics = Arc::new(RpcMetrics::new());
+    // plain connect: no handshake, bare legacy frames
+    let t = TcpTransport::connect(tcp.local_addr, metrics).unwrap();
+    assert!(!t.is_pipelined_mode());
+    match t.call(Request::Read { ino, off: 0, len: 64, open_ctx: None }).unwrap() {
+        Response::Data { data, .. } => assert_eq!(data, b"hello"),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(tcp.stats.legacy_conns.load(Ordering::Relaxed), 1);
+    assert_eq!(tcp.stats.pipelined_conns.load(Ordering::Relaxed), 0);
+    tcp.shutdown();
+}
+
+#[test]
+fn pipelined_full_cycle_over_tcp() {
+    let s = server();
+    let tcp = TcpServer::spawn("127.0.0.1:0", s).unwrap();
+    let metrics = Arc::new(RpcMetrics::new());
+    let t = TcpTransport::connect_pipelined(tcp.local_addr, metrics.clone()).unwrap();
+    assert!(t.is_pipelined_mode());
+    let ino = match t
+        .call(Request::Create {
+            dir: root(),
+            name: "cycle.dat".into(),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: cred(),
+            client: 1,
+        })
+        .unwrap()
+    {
+        Response::Created(e) => e.ino,
+        other => panic!("{other:?}"),
+    };
+    t.call(Request::Write { ino, off: 0, data: b"over the mux".to_vec(), open_ctx: None })
+        .unwrap();
+    match t.call(Request::Read { ino, off: 5, len: 32, open_ctx: None }).unwrap() {
+        Response::Data { data, .. } => assert_eq!(data, b"he mux"),
+        other => panic!("{other:?}"),
+    }
+    // the asynchronous close wrap-up rides the engine as fire-and-forget
+    t.call_async(Request::Close { ino, client: 1, handle: 9 }).unwrap();
+    // it completes without anyone waiting (metrics record it)
+    for _ in 0..100 {
+        if metrics.count("close") == 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(metrics.count("close"), 1, "fire-and-forget close must complete");
+    tcp.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-threaded storm over one shared connection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn multithreaded_storm_routes_every_response_to_its_waiter() {
+    let s = server();
+    // 8 threads × 8 files, each file holds its owner's distinct pattern
+    let inos: Vec<Vec<Ino>> = (0..8u8)
+        .map(|w| {
+            (0..8u8)
+                .map(|i| create_file(&s, &format!("w{w}f{i}"), &[w * 16 + i; 512]))
+                .collect()
+        })
+        .collect();
+    let tcp = TcpServer::spawn("127.0.0.1:0", s).unwrap();
+    let metrics = Arc::new(RpcMetrics::new());
+    let t = TcpTransport::connect_pipelined_with(
+        tcp.local_addr,
+        Some(Duration::from_secs(30)),
+        64,
+        metrics.clone(),
+    )
+    .unwrap();
+    assert!(t.is_pipelined_mode());
+    std::thread::scope(|scope| {
+        for (w, files) in inos.iter().enumerate() {
+            let t = &t;
+            scope.spawn(move || {
+                for round in 0..5 {
+                    let pending: Vec<_> = files
+                        .iter()
+                        .map(|ino| {
+                            t.submit(Request::ReadBatch {
+                                ino: *ino,
+                                ranges: vec![ByteRange { off: 0, len: 512 }],
+                                known_gen: NO_GEN,
+                                client: w as u32,
+                                register: false,
+                                open_ctx: None,
+                            })
+                            .unwrap()
+                        })
+                        .collect();
+                    for (i, r) in wait_all(t.as_ref(), pending).into_iter().enumerate() {
+                        match r.unwrap() {
+                            Response::DataBatch { segs, .. } => {
+                                let want = vec![w as u8 * 16 + i as u8; 512];
+                                assert_eq!(
+                                    segs[0], want,
+                                    "thread {w} round {round} got bytes routed to the wrong waiter"
+                                );
+                            }
+                            other => panic!("{other:?}"),
+                        }
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(metrics.count("read"), 8 * 8 * 5);
+    assert!(metrics.pipelined_submits() >= 8 * 8 * 5);
+    tcp.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Bounded admission (Busy shed) — satellite regression test
+// ---------------------------------------------------------------------------
+
+#[test]
+fn admission_sheds_busy_past_hard_cap_and_recovers() {
+    use buffetfs::transport::tcp::PIPE_ADMIT_CAP;
+    let s = server();
+    let ino = create_file(&s, "slow.dat", &[1u8; 64]);
+    struct SlowAll {
+        inner: Arc<BServer>,
+    }
+    impl Service for SlowAll {
+        fn handle(&self, req: Request) -> Response {
+            if matches!(req, Request::GetAttr { .. }) {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            self.inner.handle(req)
+        }
+    }
+    let tcp = TcpServer::spawn("127.0.0.1:0", Arc::new(SlowAll { inner: s })).unwrap();
+    let metrics = Arc::new(RpcMetrics::new());
+    // client-side depth far above the server's hard cap, so the storm
+    // really lands on the server
+    let storm = PIPE_ADMIT_CAP + 150;
+    let t = TcpTransport::connect_pipelined_with(
+        tcp.local_addr,
+        Some(Duration::from_secs(60)),
+        storm + 16,
+        metrics,
+    )
+    .unwrap();
+    assert!(t.is_pipelined_mode());
+    let pending: Vec<_> =
+        (0..storm).map(|_| t.submit(Request::GetAttr { ino }).unwrap()).collect();
+    let (mut ok, mut busy) = (0usize, 0usize);
+    for r in wait_all(t.as_ref(), pending) {
+        match r {
+            Ok(Response::AttrR(_)) => ok += 1,
+            Err(FsError::Busy) => busy += 1,
+            other => panic!("unexpected storm result: {other:?}"),
+        }
+    }
+    assert!(busy > 0, "a {storm}-deep storm must shed past the {PIPE_ADMIT_CAP} cap");
+    assert!(ok >= PIPE_ADMIT_CAP - 8, "admitted requests must all be served, got {ok}");
+    assert_eq!(tcp.stats.shed_busy.load(Ordering::Relaxed), busy as u64);
+    // the connection survived the storm: normal traffic flows again
+    assert!(matches!(t.call(Request::GetAttr { ino }).unwrap(), Response::AttrR(_)));
+    tcp.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Datapath fan-out (pipeline_ways)
+// ---------------------------------------------------------------------------
+
+fn pattern(n: usize) -> Vec<u8> {
+    (0..n).map(|i| (i * 37 % 253) as u8).collect()
+}
+
+#[test]
+fn datapath_fanout_scan_and_flush_preserve_bytes() {
+    let cluster = BuffetCluster::spawn_with(
+        1,
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 23 },
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    );
+    let (setup, _) = cluster.make_agent();
+    let admin = Buffet::process(setup, Credentials::root());
+    admin.mkdir("/p", 0o777).unwrap();
+    let size = 1 << 20;
+    let content = pattern(size);
+    admin.put("/p/big.bin", &content).unwrap();
+
+    let (agent, metrics) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig {
+        inline_limit: 0, // force the ReadBatch path
+        pipeline_ways: 4,
+        ..DatapathConfig::default()
+    });
+    let p = Buffet::process(agent.clone(), Credentials::new(1000, 1000));
+
+    // overlapping-window scan: bytes must be exact
+    let fd = p.open("/p/big.bin", OpenFlags::RDONLY).unwrap();
+    let mut got = Vec::with_capacity(size);
+    loop {
+        let chunk = p.read(fd, 8192).unwrap();
+        if chunk.is_empty() {
+            break;
+        }
+        got.extend_from_slice(&chunk);
+    }
+    p.close(fd).unwrap();
+    assert_eq!(got, content, "4-way fan-out scan must reassemble exactly");
+    assert!(metrics.pipelined_submits() > 0, "the scan must actually use submit/wait_all");
+
+    // pipelined flush: disjoint extents, one close, exact bytes
+    let fd = p.open("/p/out.bin", OpenFlags::RDWR.with_create()).unwrap();
+    for i in 0..64u64 {
+        // stride leaves holes → many disjoint extents → multi-way flush
+        p.pwrite(fd, i * 1000, &[i as u8; 100]).unwrap();
+    }
+    let before = metrics.pipelined_submits();
+    p.close(fd).unwrap();
+    assert!(metrics.pipelined_submits() > before, "the flush must pipeline its batches");
+    let fd = p.open("/p/out.bin", OpenFlags::RDONLY).unwrap();
+    for i in [0u64, 13, 63] {
+        let seg = p.pread(fd, i * 1000, 100).unwrap();
+        assert_eq!(seg, vec![i as u8; 100], "extent {i} corrupted by the pipelined flush");
+    }
+    let hole = p.pread(fd, 100, 100).unwrap();
+    assert_eq!(hole, vec![0u8; 100], "holes between extents must stay zero");
+    p.close(fd).unwrap();
+}
