@@ -67,6 +67,41 @@ const MAX_FETCH_RETRIES: usize = 32;
 /// under a sustained revocation storm, which surfaces as `Busy`.
 const MAX_LEASE_RETRIES: usize = 4;
 
+/// Bound on transport-failure retries per request: a freshly promoted
+/// standby (or a redialed TCP connection) normally answers on the first
+/// retry; more attempts only delay surfacing a genuinely dead cluster.
+const MAX_FAILOVER_RETRIES: usize = 3;
+
+/// Base backoff before a failover retry; doubled per attempt, with a
+/// same-sized random jitter so a thundering herd of blocked threads
+/// does not re-arrive at the promoted standby in lockstep.
+const FAILOVER_BACKOFF_US: u64 = 200;
+
+/// Requests the failover path may blindly re-issue after a transport
+/// failure: side-effect-free reads, plus `Lease` (re-granting merely
+/// reports the standby's current epoch) and the deferred-open contexts
+/// reads carry (the server's open record is keyed by client+handle, so
+/// re-installing it is idempotent). Mutations are excluded — a request
+/// that died mid-flight may or may not have committed on the now
+/// unreachable primary, and blind re-execution could apply it twice;
+/// those surface the transport error for the caller to decide.
+fn retry_safe(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::Lookup { .. }
+            | Request::ReadDir { .. }
+            | Request::GetAttr { .. }
+            | Request::Read { .. }
+            | Request::Statfs { .. }
+            | Request::Hello { .. }
+            | Request::ResolvePath { .. }
+            | Request::Lease { .. }
+            | Request::StatAt { .. }
+            | Request::ReadDirAt { .. }
+            | Request::ReadBatch { .. }
+    )
+}
+
 #[derive(Default)]
 pub struct AgentStats {
     /// Local (client-side) permission checks performed.
@@ -205,6 +240,43 @@ impl BAgent {
         &self.cache
     }
 
+    // -- failover-aware transport path ---------------------------------------
+
+    /// Route `req` to the server owning `ino`, failing over on transport
+    /// death. On [`FsError::Transport`] the agent promotes the host's
+    /// registered warm standby in the [`ClusterView`] (the standby applied
+    /// the identical journal stream, so every client-held `Ino` and lease
+    /// epoch survives — DESIGN.md §10); [`retry_safe`] requests are then
+    /// re-issued with capped, jittered exponential backoff, while
+    /// non-idempotent requests surface the error (the caller cannot know
+    /// whether the dead primary applied them).
+    fn call_ino(&self, ino: Ino, req: Request) -> FsResult<Response> {
+        let retryable = retry_safe(&req);
+        let mut rng = crate::util::rng::XorShift::new(
+            (self.id as u64) << 48 ^ ino.file ^ self.handle_seq.load(Ordering::Relaxed),
+        );
+        for attempt in 0..=MAX_FAILOVER_RETRIES {
+            let e = match self.cluster.transport(ino)?.call(req.clone()) {
+                Err(FsError::Transport(m)) => FsError::Transport(m),
+                other => return other,
+            };
+            if attempt == 0 {
+                // first failure on this call: swap in the standby. A
+                // concurrent thread may have promoted already — then the
+                // view's transport is fresh and the retry below uses it.
+                if self.cluster.promote(ino.host).is_some() {
+                    self.metrics.record_failover();
+                }
+            }
+            if !retryable || attempt == MAX_FAILOVER_RETRIES {
+                return Err(e);
+            }
+            let base = FAILOVER_BACKOFF_US << attempt;
+            std::thread::sleep(std::time::Duration::from_micros(base + rng.below(base)));
+        }
+        unreachable!("loop returns on its last iteration")
+    }
+
     // -- permission leases (handle-first API) --------------------------------
 
     /// The lease stamp this agent would put on a relative op against
@@ -222,7 +294,7 @@ impl BAgent {
     /// and registers this client for §3.4 invalidation pushes on it.
     pub fn lease(&self, node: Ino, cred: &Credentials) -> FsResult<(crate::types::Attr, u64)> {
         self.stats.lease_grants.fetch_add(1, Ordering::Relaxed);
-        let resp = self.cluster.transport(node)?.call(Request::Lease {
+        let resp = self.call_ino(node, Request::Lease {
             node,
             client: self.id,
             cred: cred.clone(),
@@ -259,7 +331,7 @@ impl BAgent {
     ) -> FsResult<Response> {
         for attempt in 0..MAX_LEASE_RETRIES {
             let stamp = self.assumed_stamp(node);
-            match self.cluster.transport(node)?.call(build(stamp)) {
+            match self.call_ino(node, build(stamp)) {
                 Err(FsError::StaleLease) => {
                     self.stats.stale_lease_retries.fetch_add(1, Ordering::Relaxed);
                     self.metrics.record_stale_retry(op);
@@ -299,7 +371,7 @@ impl BAgent {
                 dname: dname.to_string(),
                 cred: cred.clone(),
             };
-            match self.cluster.transport(snode)?.call(req) {
+            match self.call_ino(snode, req) {
                 Err(FsError::StaleLease) => {
                     self.stats.stale_lease_retries.fetch_add(1, Ordering::Relaxed);
                     self.metrics.record_stale_retry("rename");
@@ -348,7 +420,7 @@ impl BAgent {
         for hop in 0..MAX_WALK_HOPS {
             let epoch0 = self.cache.epoch();
             self.stats.batch_walks.fetch_add(1, Ordering::Relaxed);
-            let resp = match self.cluster.transport(base)?.call(Request::ResolvePath {
+            let resp = match self.call_ino(base, Request::ResolvePath {
                 base,
                 components: remaining.clone(),
                 client: self.id,
@@ -406,7 +478,7 @@ impl BAgent {
             // is in flight the listing is untrusted — drop it and refetch.
             let snap_gen = self.cache.gen_of(dir);
             self.stats.dir_fetches.fetch_add(1, Ordering::Relaxed);
-            let resp = self.cluster.transport(dir)?.call(Request::ReadDir {
+            let resp = self.call_ino(dir, Request::ReadDir {
                 dir,
                 client: self.id,
                 register: true,
@@ -451,7 +523,7 @@ impl BAgent {
     /// resolve a known name through it with a single-entry Lookup RPC.
     fn lookup_via_x_only(&self, dir: Ino, name: &str, cred: &Credentials) -> FsResult<DirEntry> {
         self.stats.fallback_lookups.fetch_add(1, Ordering::Relaxed);
-        let resp = self.cluster.transport(dir)?.call(Request::Lookup {
+        let resp = self.call_ino(dir, Request::Lookup {
             dir,
             name: name.to_string(),
             cred: cred.clone(),
@@ -609,14 +681,14 @@ impl BAgent {
         if flags.append {
             // O_APPEND needs the current size (one GetAttr round trip —
             // outside the paper's measured workloads)
-            let resp = self.cluster.transport(leaf.ino)?.call(Request::GetAttr { ino: leaf.ino })?;
+            let resp = self.call_ino(leaf.ino, Request::GetAttr { ino: leaf.ino })?;
             if let Response::AttrR(a) = resp {
                 offset = a.size;
                 size_hint = a.size;
             }
         }
         if flags.truncate {
-            self.cluster.transport(leaf.ino)?.call(Request::Truncate {
+            self.call_ino(leaf.ino, Request::Truncate {
                 ino: leaf.ino,
                 size: 0,
                 cred: cred.clone(),
@@ -658,7 +730,7 @@ impl BAgent {
         if !h.flags.write && !h.flags.append && !h.flags.truncate {
             return Err(FsError::PermissionDenied);
         }
-        self.cluster.transport(h.ino)?.call(Request::Truncate {
+        self.call_ino(h.ino, Request::Truncate {
             ino: h.ino,
             size,
             cred: h.cred.clone(),
@@ -847,7 +919,7 @@ impl BAgent {
     }
 
     fn read_at_inner(&self, h: &FileHandle, off: u64, len: u32) -> FsResult<Vec<u8>> {
-        let resp = self.cluster.transport(h.ino)?.call(Request::Read {
+        let resp = self.call_ino(h.ino, Request::Read {
             ino: h.ino,
             off,
             len,
@@ -931,7 +1003,7 @@ impl BAgent {
     }
 
     fn write_at_inner(&self, h: &FileHandle, off: u64, data: &[u8]) -> FsResult<(u32, u64)> {
-        let resp = self.cluster.transport(h.ino)?.call(Request::Write {
+        let resp = self.call_ino(h.ino, Request::Write {
             ino: h.ino,
             off,
             data: data.to_vec(),
@@ -1033,7 +1105,7 @@ impl BAgent {
         if r.parent == r.leaf.ino {
             // "/" itself has no parent handle to go through
             let req = Request::GetAttr { ino: r.leaf.ino };
-            return match self.cluster.transport(r.leaf.ino)?.call(req)? {
+            return match self.call_ino(r.leaf.ino, req)? {
                 Response::AttrR(a) => Ok(a),
                 other => Err(FsError::Protocol(format!("getattr returned {other:?}"))),
             };
@@ -1141,7 +1213,7 @@ impl BAgent {
         // the chmod RPC goes to the server *owning the inode* (§3.2);
         // that server runs the §3.4 invalidation barrier (which will call
         // back into this agent's NotifySink — no cache lock is held here)
-        self.cluster.transport(r.leaf.ino)?.call(Request::Chmod {
+        self.call_ino(r.leaf.ino, Request::Chmod {
             ino: r.leaf.ino,
             mode,
             cred: cred.clone(),
@@ -1151,7 +1223,7 @@ impl BAgent {
 
     pub fn chown(&self, path: &str, uid: u32, gid: u32, cred: &Credentials) -> FsResult<()> {
         let r = self.resolve(path, cred)?;
-        self.cluster.transport(r.leaf.ino)?.call(Request::Chown {
+        self.call_ino(r.leaf.ino, Request::Chown {
             ino: r.leaf.ino,
             uid,
             gid,
@@ -1173,7 +1245,7 @@ impl BAgent {
             self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
-        self.cluster.transport(r.leaf.ino)?.call(Request::Truncate {
+        self.call_ino(r.leaf.ino, Request::Truncate {
             ino: r.leaf.ino,
             size,
             cred: cred.clone(),
@@ -1210,7 +1282,7 @@ impl NotifySink for BAgent {
 /// (so the first data-plane RPC doubles as Step 2 of open, §3.3).
 impl DataTransport for BAgent {
     fn open_inline(&self, h: &FileHandle) -> FsResult<InlineOpen> {
-        let resp = self.cluster.transport(h.ino)?.call(Request::Open {
+        let resp = self.call_ino(h.ino, Request::Open {
             ino: h.ino,
             flags: h.flags,
             cred: h.cred.clone(),
@@ -1238,6 +1310,10 @@ impl DataTransport for BAgent {
         known_gen: u64,
         register: bool,
     ) -> FsResult<(Vec<Vec<u8>>, u64, u64)> {
+        // The pipelined fan-out binds all sub-fetches to ONE connection,
+        // so it does not fail over mid-flight; a transport error surfaces
+        // to the datapath, whose drop-and-refetch retry re-enters through
+        // a fresh (possibly just-promoted) transport lookup.
         let t = self.cluster.transport(h.ino)?;
         let ways = self.datapath.config().pipeline_ways;
         // classic schedule: the whole window in one ReadBatch — one
@@ -1345,6 +1421,9 @@ impl DataTransport for BAgent {
         base_gen: u64,
         register: bool,
     ) -> FsResult<(u64, u64)> {
+        // Flushes are mutations: like the classic write path they never
+        // blind-retry across a failover (see `retry_safe`), so the flush
+        // binds to the current transport and surfaces any error.
         let t = self.cluster.transport(h.ino)?;
         let ways = self.datapath.config().pipeline_ways;
         // Pipelined flush (§9): split a multi-extent flush into

@@ -8,7 +8,7 @@
 //! is a socket address parsed from [`HostMapFile`].
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use crate::agent::BAgent;
 use crate::error::{FsError, FsResult};
@@ -23,18 +23,49 @@ use crate::transport::SharedTransport;
 use crate::types::{ClientId, HostId, Ino, Version};
 
 /// The client-side host map: `(hostID, version) → transport`.
+/// Interior-mutable so failover can swap a dead primary's transport for
+/// its promoted standby while agents keep shared references to the view.
 pub struct ClusterView {
     root: Ino,
-    transports: HashMap<HostId, (Version, SharedTransport)>,
+    transports: RwLock<HashMap<HostId, (Version, SharedTransport)>>,
+    /// Warm standbys, keyed by the host they can take over for. A
+    /// standby serves the *same* host id and version as its primary (it
+    /// applied the identical journal stream), so every client-held Ino
+    /// and lease survives promotion.
+    standbys: RwLock<HashMap<HostId, (Version, SharedTransport)>>,
 }
 
 impl ClusterView {
     pub fn new(root: Ino) -> ClusterView {
-        ClusterView { root, transports: HashMap::new() }
+        ClusterView {
+            root,
+            transports: RwLock::new(HashMap::new()),
+            standbys: RwLock::new(HashMap::new()),
+        }
     }
 
-    pub fn add(&mut self, host: HostId, version: Version, t: SharedTransport) {
-        self.transports.insert(host, (version, t));
+    pub fn add(&self, host: HostId, version: Version, t: SharedTransport) {
+        self.transports.write().unwrap().insert(host, (version, t));
+    }
+
+    /// Register a warm standby for `host` (the backup replica chained
+    /// off that primary's journal stream).
+    pub fn register_standby(&self, host: HostId, version: Version, t: SharedTransport) {
+        self.standbys.write().unwrap().insert(host, (version, t));
+    }
+
+    pub fn has_standby(&self, host: HostId) -> bool {
+        self.standbys.read().unwrap().contains_key(&host)
+    }
+
+    /// Fail over `host` to its registered standby: the standby's
+    /// transport replaces the primary's in the map. Returns the new
+    /// transport, or None when no standby is registered — the caller
+    /// then has no better option than surfacing the transport error.
+    pub fn promote(&self, host: HostId) -> Option<SharedTransport> {
+        let (version, t) = self.standbys.write().unwrap().remove(&host)?;
+        self.transports.write().unwrap().insert(host, (version, Arc::clone(&t)));
+        Some(t)
     }
 
     pub fn root(&self) -> Ino {
@@ -42,14 +73,14 @@ impl ClusterView {
     }
 
     pub fn hosts(&self) -> usize {
-        self.transports.len()
+        self.transports.read().unwrap().len()
     }
 
     /// Locate the server for an inode — purely from the inode number,
     /// "without requesting their location and metadata from other
     /// clients" (§1).
     pub fn transport(&self, ino: Ino) -> FsResult<SharedTransport> {
-        match self.transports.get(&ino.host) {
+        match self.transports.read().unwrap().get(&ino.host) {
             None => Err(FsError::NoSuchServer(ino.host)),
             Some((v, _)) if *v != ino.version => Err(FsError::Stale),
             Some((_, t)) => Ok(Arc::clone(t)),
@@ -144,7 +175,7 @@ impl BuffetCluster {
             .next_client
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let metrics = Arc::new(RpcMetrics::new());
-        let mut view = ClusterView::new(self.root());
+        let view = ClusterView::new(self.root());
         let mut links = Vec::new();
         for (s, sc) in self.servers.iter().zip(&self.capped) {
             let net = Arc::new(LatencyModel::new(

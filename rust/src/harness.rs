@@ -923,6 +923,182 @@ pub fn print_pipeline(rows: &[PipelineRow]) {
     }
 }
 
+/// Crash-recovery sweep (DESIGN.md §10): cold-start replay time as the
+/// journal grows, and the client-visible blip when the primary dies and
+/// the warm standby is promoted mid-run. Feeds `BENCH_recovery.json`.
+#[derive(Debug, Clone)]
+pub struct RecoveryRow {
+    /// Mutating ops acknowledged (and journaled) before the crash.
+    pub journal_ops: usize,
+    /// Live segment size at the crash point (bytes).
+    pub journal_bytes: u64,
+    /// Journal open + full replay into a fresh incarnation (µs).
+    pub replay_us: f64,
+    /// Records the replay applied.
+    pub replayed: u64,
+    /// Latency of the op that crosses the failover — transport error,
+    /// promotion, backoff, retry against the standby (µs, over `iters`
+    /// kill/promote rounds).
+    pub blip_p50_us: f64,
+    pub blip_p99_us: f64,
+    /// Same op against the healthy primary, for contrast (µs).
+    pub steady_p50_us: f64,
+}
+
+/// For each journal length N: populate a journaled server with N small
+/// `put`s, crash it, and time a cold recovery; then, on a fresh
+/// primary/standby pair, kill the primary under a stat loop `iters`
+/// times and record the latency of the stat that rides the promotion.
+pub fn ablation_recovery(net: NetConfig, journal_lens: &[usize], iters: usize) -> Vec<RecoveryRow> {
+    use crate::blib::Buffet;
+    use crate::cluster::ClusterView;
+    use crate::error::FsError;
+    use crate::server::journal::JournalConfig;
+    use crate::server::BServer;
+    use crate::simnet::LatencyModel;
+    use crate::store::data::MemData;
+    use crate::transport::chan::ChanTransport;
+    use crate::transport::Service;
+    use crate::types::Credentials;
+    use crate::util::hist::Histogram;
+    use crate::wire::{Request, Response};
+    use std::sync::atomic::AtomicBool;
+
+    /// Dead-man switch: flip `dead` and every request answers like a
+    /// severed connection.
+    struct DeadMan {
+        inner: Arc<BServer>,
+        dead: AtomicBool,
+    }
+    impl Service for DeadMan {
+        fn handle(&self, req: Request) -> Response {
+            if self.dead.load(Ordering::Acquire) {
+                return Response::Err(FsError::Transport("primary crashed".into()));
+            }
+            self.inner.handle(req)
+        }
+    }
+
+    // fsync off: the sweep isolates replay/promotion cost, not disk
+    // flush latency; checkpointing off so the segment grows with N
+    let cfg = JournalConfig { sync_data: false, checkpoint_every: u64::MAX };
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let scratch = |tag: &str| {
+        std::env::temp_dir().join(format!(
+            "buffetfs-bench-recovery-{tag}-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ))
+    };
+    let client_for = |s: Arc<dyn Service>, root: crate::types::Ino| {
+        let metrics = Arc::new(crate::metrics::RpcMetrics::new());
+        let lat = Arc::new(LatencyModel::new(net));
+        let view = ClusterView::new(root);
+        view.add(0, 0, ChanTransport::new(s, lat, metrics.clone()));
+        (crate::agent::BAgent::new(1, view, metrics.clone()), metrics)
+    };
+
+    let mut rows = Vec::new();
+    for &n in journal_lens {
+        // -- replay time vs journal length --------------------------------
+        let dir = scratch("replay");
+        {
+            let s = BServer::recover(0, 0, Box::new(MemData::new()), &dir, cfg).expect("recover");
+            let root = s.fs.root_ino();
+            let (agent, _) = client_for(s, root);
+            let p = Buffet::process(agent, Credentials::root());
+            for i in 0..n {
+                p.put(&format!("/f{i:06}"), b"recovery sweep payload").expect("put");
+            }
+        }
+        let journal_bytes = std::fs::metadata(dir.join("wal.0.log")).map(|m| m.len()).unwrap_or(0);
+        let t0 = Instant::now();
+        let s2 = BServer::recover(0, 0, Box::new(MemData::new()), &dir, cfg).expect("replay");
+        let replay_us = t0.elapsed().as_secs_f64() * 1e6;
+        let replayed = s2
+            .fs
+            .journal()
+            .map(|j| j.stats().replayed.load(Ordering::Relaxed))
+            .unwrap_or(0);
+        drop(s2);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // -- failover blip: kill the primary under a stat loop ------------
+        let mut blips = Histogram::new();
+        let mut steady = Histogram::new();
+        for _ in 0..iters {
+            let pdir = scratch("prim");
+            let bdir = scratch("back");
+            let primary =
+                BServer::recover(0, 0, Box::new(MemData::new()), &pdir, cfg).expect("primary");
+            let backup =
+                BServer::recover(0, 0, Box::new(MemData::new()), &bdir, cfg).expect("backup");
+            let lat = Arc::new(LatencyModel::new(net));
+            primary.set_backup(ChanTransport::new(
+                backup.clone(),
+                lat.clone(),
+                Arc::new(crate::metrics::RpcMetrics::new()),
+            ));
+            let deadman =
+                Arc::new(DeadMan { inner: primary.clone(), dead: AtomicBool::new(false) });
+            let root = primary.fs.root_ino();
+            let (agent, metrics) = client_for(deadman.clone(), root);
+            agent
+                .cluster()
+                .register_standby(0, 0, ChanTransport::new(backup, lat, metrics.clone()));
+            let p = Buffet::process(agent, Credentials::root());
+            p.put("/probe", b"x").expect("probe");
+            // healthy baseline reads (stat would be answered from the
+            // dirent cache; the classic read path always pays one Read
+            // RPC), then pull the plug: the next read rides the
+            // promotion and its latency is the blip
+            for _ in 0..8 {
+                let t0 = Instant::now();
+                p.get("/probe", 4).expect("steady read");
+                steady.record(t0.elapsed().as_micros() as u64);
+            }
+            deadman.dead.store(true, Ordering::Release);
+            let t0 = Instant::now();
+            p.get("/probe", 4).expect("failover read");
+            blips.record(t0.elapsed().as_micros() as u64);
+            assert!(metrics.failovers() >= 1, "the blip read must ride a promotion");
+            let _ = std::fs::remove_dir_all(&pdir);
+            let _ = std::fs::remove_dir_all(&bdir);
+        }
+
+        rows.push(RecoveryRow {
+            journal_ops: n,
+            journal_bytes,
+            replay_us,
+            replayed,
+            blip_p50_us: blips.percentile(50.0) as f64,
+            blip_p99_us: blips.percentile(99.0) as f64,
+            steady_p50_us: steady.percentile(50.0) as f64,
+        });
+    }
+    rows
+}
+
+pub fn print_recovery(rows: &[RecoveryRow]) {
+    println!("crash-recovery sweep — cold replay vs journal length, failover blip (µs)");
+    println!(
+        "{:<10} {:>12} {:>12} {:>10} {:>12} {:>12} {:>11}",
+        "ops", "bytes", "replay_us", "replayed", "blip_p50", "blip_p99", "steady_p50"
+    );
+    for r in rows {
+        println!(
+            "{:<10} {:>12} {:>12.1} {:>10} {:>12.1} {:>12.1} {:>11.1}",
+            r.journal_ops,
+            r.journal_bytes,
+            r.replay_us,
+            r.replayed,
+            r.blip_p50_us,
+            r.blip_p99_us,
+            r.steady_p50_us
+        );
+    }
+}
+
 /// One Buffet process doing the paper's open-read-close on every file of
 /// a pre-built SUT — helper for criterion-style loops.
 pub fn steady_access(sut: &Sut, spec: &FileSetSpec, stream: &mut AccessStream, pid: u32) {
@@ -1074,6 +1250,21 @@ mod tests {
         let worst = find(false, false);
         assert!(worst.cold_read_data_rpcs >= 1.0, "no inline: the read pays a data RPC");
         assert!(worst.write_data_rpcs >= 16.0, "write-through: one RPC per write");
+    }
+
+    #[test]
+    fn recovery_sweep_replays_everything_and_blips_once() {
+        let rows = ablation_recovery(NetConfig::zero(), &[24], 2);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.journal_bytes > 0, "the puts must have journaled something");
+        assert!(r.replayed as usize >= 24, "at least one record per put, got {}", r.replayed);
+        assert!(r.replay_us > 0.0);
+        assert!(
+            r.blip_p50_us >= 100.0,
+            "the failover blip includes the promotion backoff, got {:.1}µs",
+            r.blip_p50_us
+        );
     }
 
     #[test]

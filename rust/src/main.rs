@@ -189,7 +189,7 @@ fn serve(args: &Args) {
 fn client(args: &Args) {
     use buffetfs::codec::Wire as _;
     use buffetfs::metrics::RpcMetrics;
-    use buffetfs::transport::tcp::TcpTransport;
+    use buffetfs::transport::tcp::{ReconnectConfig, ReconnectTransport};
     use buffetfs::transport::Transport as _;
     use buffetfs::types::{Credentials, FileKind, Ino};
     use buffetfs::wire::{Request, Response};
@@ -198,10 +198,15 @@ fn client(args: &Args) {
     let path = args.get_or("path", "/hello.txt").to_string();
     let op = args.get_or("op", "put").to_string();
     let metrics = Arc::new(RpcMetrics::new());
-    // pipelined handshake; a pre-engine server sticky-downgrades us to
-    // the classic lockstep framing, so either peer works
-    let t = TcpTransport::connect_pipelined(&addr, metrics.clone()).expect("connect");
-    println!("connection mode: {}", if t.is_pipelined_mode() { "pipelined" } else { "lockstep" });
+    // pipelined handshake behind the reconnecting wrapper: a pre-engine
+    // server sticky-downgrades us to the classic lockstep framing, and a
+    // poisoned/died connection is redialed instead of dead-ending
+    let cfg = ReconnectConfig { pipelined: true, ..ReconnectConfig::default() };
+    let t = ReconnectTransport::connect(&addr, cfg, metrics.clone()).expect("connect");
+    println!(
+        "connection mode: {}",
+        if t.current().is_pipelined_mode() { "pipelined" } else { "lockstep" }
+    );
     let cred = Credentials::root();
     let root = Ino::new(args.get_u64("host", 0) as u16, 0, 1);
     let name = path.trim_start_matches('/').to_string();

@@ -82,6 +82,12 @@ pub struct RpcMetrics {
     ooo_completions: AtomicU64,
     /// In-flight depth observed at each submit (connection queue depth).
     inflight_depth: Mutex<Histogram>,
+    // -- crash recovery / failover (server/journal, DESIGN.md §10) -----------
+    /// Successful transport redials after a poisoned TCP connection.
+    reconnects: AtomicU64,
+    /// Primary→standby promotions this client drove after a transport
+    /// failure (each one swaps the host's transport in the ClusterView).
+    failovers: AtomicU64,
 }
 
 impl RpcMetrics {
@@ -225,6 +231,26 @@ impl RpcMetrics {
         self.inflight_depth.lock().unwrap().clone()
     }
 
+    // -- recovery/failover recording (consumed by BENCH_recovery.json) -------
+
+    /// A poisoned TCP connection was successfully redialed.
+    pub fn record_reconnect(&self) {
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A dead primary was failed over to its registered standby.
+    pub fn record_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
     /// (p50, p90, p99) latency of one op in microseconds, if recorded.
     pub fn percentiles_us(&self, op: &str) -> Option<(f64, f64, f64)> {
         self.histogram(op).filter(|h| h.count() > 0).map(|h| {
@@ -299,6 +325,8 @@ impl RpcMetrics {
             &self.stale_data_retries,
             &self.pipelined_submits,
             &self.ooo_completions,
+            &self.reconnects,
+            &self.failovers,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -363,6 +391,13 @@ impl RpcMetrics {
                 self.ooo_completions(),
                 d.mean(),
                 d.max(),
+            ));
+        }
+        if self.reconnects() + self.failovers() > 0 {
+            out.push_str(&format!(
+                "  recovery: reconnects={} failovers={}\n",
+                self.reconnects(),
+                self.failovers(),
             ));
         }
         out
@@ -501,6 +536,21 @@ mod tests {
         m.reset();
         assert_eq!(m.pipelined_submits() + m.ooo_completions(), 0);
         assert_eq!(m.inflight_depth_histogram().count(), 0);
+    }
+
+    #[test]
+    fn recovery_counters_record_report_and_reset() {
+        let m = RpcMetrics::new();
+        m.record_reconnect();
+        m.record_failover();
+        m.record_failover();
+        assert_eq!(m.reconnects(), 1);
+        assert_eq!(m.failovers(), 2);
+        let r = m.report();
+        assert!(r.contains("recovery: reconnects=1 failovers=2"), "report must surface recovery: {r}");
+        m.reset();
+        assert_eq!(m.reconnects() + m.failovers(), 0);
+        assert!(!m.report().contains("recovery:"), "zeroed counters stay out of the report");
     }
 
     #[test]

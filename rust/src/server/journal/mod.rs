@@ -1,0 +1,854 @@
+//! Write-ahead op journal, crash recovery, and primary/backup shipping.
+//!
+//! The paper's §3.2 capability state (namespace, per-directory lease
+//! epochs, per-file data generations) used to die with the server
+//! process: one crash silently invalidated every permission check the
+//! clients had cached. This module makes the state durable with a
+//! classic write-ahead log and threads one invariant through the reply
+//! path: **no acknowledged op is ever lost**.
+//!
+//! * Every mutating op appends one or more [`JournalRec`]s to the
+//!   current segment *after* the in-memory mutation succeeds, and the
+//!   dispatch layer calls [`Journal::commit`] (fsync + backup ship)
+//!   *before* the reply frame is sent.
+//! * Commits are group-batched: `append` only buffers; the first
+//!   `commit` after a burst fsyncs once for every record appended since
+//!   the previous fsync (concurrent pipelined workers ride the same
+//!   sync, so batch size grows with load).
+//! * A segment is `wal.<gen>.log`; `CURRENT` (written tmp+rename) names
+//!   the live generation. A checkpoint writes a compacted snapshot as
+//!   the next generation and drops the old one.
+//! * Recovery decodes `CURRENT`'s segment, truncates a torn tail
+//!   (partial length prefix, short payload, or checksum mismatch), and
+//!   replays idempotently — replaying the same segment twice is a
+//!   no-op by construction.
+//! * With a backup registered, `commit` also ships the raw frame bytes
+//!   (`Request::JournalShip`) and only acks once the backup has applied
+//!   *and fsynced* them: the commit point moves past the backup. A
+//!   failed ship demotes the backup (local-only durability) so the
+//!   stream never develops a silent gap.
+//!
+//! Frame format, little-endian: `[len: u32][crc: u32][payload]` where
+//! `crc` is FNV-1a/32 over the payload and `payload` is one
+//! `Wire`-encoded [`JournalRec`].
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as IoWrite;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::codec::{Dec, Enc, Wire};
+use crate::error::{FsError, FsResult};
+use crate::store::fs::LocalFs;
+use crate::types::{DirEntry, FileId, FileKind, Ino, PermBlob};
+use crate::transport::SharedTransport;
+use crate::util::hist::Histogram;
+use crate::wire::{Request, Response};
+
+use super::BServer;
+
+/// One logical mutation, state-level (explicit `FileId`s, so replay
+/// never re-allocates and every client-held `Ino` survives recovery).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JournalRec {
+    /// Local create (file or dir) under a local directory.
+    Create { dir: FileId, file: FileId, name: String, kind: FileKind, mode: u16, uid: u32, gid: u32 },
+    /// Dirent whose object lives on another server.
+    RemoteEntry { dir: FileId, entry: DirEntry },
+    /// Local object whose dirent lives on another server.
+    Orphan { parent: Ino, file: FileId, name: String, kind: FileKind, mode: u16, uid: u32, gid: u32 },
+    Unlink { dir: FileId, name: String },
+    DropObject { file: FileId },
+    Rmdir { dir: FileId, name: String },
+    Rename { sdir: FileId, sname: String, ddir: FileId, dname: String },
+    Chmod { file: FileId, mode: u16 },
+    Chown { file: FileId, uid: u32, gid: u32 },
+    SetDirentPerm { dir: FileId, name: String, perm: PermBlob },
+    Write { file: FileId, off: u64, data: Vec<u8> },
+    Truncate { file: FileId, size: u64 },
+    Xattr { file: FileId, key: String, value: Vec<u8> },
+    /// §3.4 lease-epoch bump (chmod/chown/rename revocation).
+    LeaseEpoch { file: FileId, epoch: u64 },
+    /// Data-generation bump (concurrent-writer fencing).
+    DataGen { file: FileId, gen: u64 },
+}
+
+impl Wire for JournalRec {
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            JournalRec::Create { dir, file, name, kind, mode, uid, gid } => {
+                e.u8(0);
+                e.u64(*dir);
+                e.u64(*file);
+                e.str(name);
+                kind.enc(e);
+                e.u16(*mode);
+                e.u32(*uid);
+                e.u32(*gid);
+            }
+            JournalRec::RemoteEntry { dir, entry } => {
+                e.u8(1);
+                e.u64(*dir);
+                entry.enc(e);
+            }
+            JournalRec::Orphan { parent, file, name, kind, mode, uid, gid } => {
+                e.u8(2);
+                parent.enc(e);
+                e.u64(*file);
+                e.str(name);
+                kind.enc(e);
+                e.u16(*mode);
+                e.u32(*uid);
+                e.u32(*gid);
+            }
+            JournalRec::Unlink { dir, name } => {
+                e.u8(3);
+                e.u64(*dir);
+                e.str(name);
+            }
+            JournalRec::DropObject { file } => {
+                e.u8(4);
+                e.u64(*file);
+            }
+            JournalRec::Rmdir { dir, name } => {
+                e.u8(5);
+                e.u64(*dir);
+                e.str(name);
+            }
+            JournalRec::Rename { sdir, sname, ddir, dname } => {
+                e.u8(6);
+                e.u64(*sdir);
+                e.str(sname);
+                e.u64(*ddir);
+                e.str(dname);
+            }
+            JournalRec::Chmod { file, mode } => {
+                e.u8(7);
+                e.u64(*file);
+                e.u16(*mode);
+            }
+            JournalRec::Chown { file, uid, gid } => {
+                e.u8(8);
+                e.u64(*file);
+                e.u32(*uid);
+                e.u32(*gid);
+            }
+            JournalRec::SetDirentPerm { dir, name, perm } => {
+                e.u8(9);
+                e.u64(*dir);
+                e.str(name);
+                perm.enc(e);
+            }
+            JournalRec::Write { file, off, data } => {
+                e.u8(10);
+                e.u64(*file);
+                e.u64(*off);
+                e.bytes(data);
+            }
+            JournalRec::Truncate { file, size } => {
+                e.u8(11);
+                e.u64(*file);
+                e.u64(*size);
+            }
+            JournalRec::Xattr { file, key, value } => {
+                e.u8(12);
+                e.u64(*file);
+                e.str(key);
+                e.bytes(value);
+            }
+            JournalRec::LeaseEpoch { file, epoch } => {
+                e.u8(13);
+                e.u64(*file);
+                e.u64(*epoch);
+            }
+            JournalRec::DataGen { file, gen } => {
+                e.u8(14);
+                e.u64(*file);
+                e.u64(*gen);
+            }
+        }
+    }
+
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(match d.u8()? {
+            0 => JournalRec::Create {
+                dir: d.u64()?,
+                file: d.u64()?,
+                name: d.str()?,
+                kind: FileKind::dec(d)?,
+                mode: d.u16()?,
+                uid: d.u32()?,
+                gid: d.u32()?,
+            },
+            1 => JournalRec::RemoteEntry { dir: d.u64()?, entry: DirEntry::dec(d)? },
+            2 => JournalRec::Orphan {
+                parent: Ino::dec(d)?,
+                file: d.u64()?,
+                name: d.str()?,
+                kind: FileKind::dec(d)?,
+                mode: d.u16()?,
+                uid: d.u32()?,
+                gid: d.u32()?,
+            },
+            3 => JournalRec::Unlink { dir: d.u64()?, name: d.str()? },
+            4 => JournalRec::DropObject { file: d.u64()? },
+            5 => JournalRec::Rmdir { dir: d.u64()?, name: d.str()? },
+            6 => JournalRec::Rename {
+                sdir: d.u64()?,
+                sname: d.str()?,
+                ddir: d.u64()?,
+                dname: d.str()?,
+            },
+            7 => JournalRec::Chmod { file: d.u64()?, mode: d.u16()? },
+            8 => JournalRec::Chown { file: d.u64()?, uid: d.u32()?, gid: d.u32()? },
+            9 => JournalRec::SetDirentPerm { dir: d.u64()?, name: d.str()?, perm: PermBlob::dec(d)? },
+            10 => JournalRec::Write { file: d.u64()?, off: d.u64()?, data: d.bytes()? },
+            11 => JournalRec::Truncate { file: d.u64()?, size: d.u64()? },
+            12 => JournalRec::Xattr { file: d.u64()?, key: d.str()?, value: d.bytes()? },
+            13 => JournalRec::LeaseEpoch { file: d.u64()?, epoch: d.u64()? },
+            14 => JournalRec::DataGen { file: d.u64()?, gen: d.u64()? },
+            t => return Err(FsError::Protocol(format!("bad journal record tag {t}"))),
+        })
+    }
+}
+
+impl JournalRec {
+    /// Re-apply this record against a [`LocalFs`] via the explicit-id
+    /// replay paths. Idempotent: the errors a double-apply produces
+    /// (NotFound after an unlink already ran, AlreadyExists after a
+    /// rename already landed, ...) are swallowed, so replaying a
+    /// segment twice — or a record that races into a checkpoint — is
+    /// harmless. Lease/data-gen records are server-level and handled by
+    /// [`BServer::apply_journal_rec`], not here.
+    pub fn replay(&self, fs: &LocalFs) {
+        let _ = match self {
+            JournalRec::Create { dir, file, name, kind, mode, uid, gid } => {
+                fs.replay_create(*dir, *file, name, *kind, *mode, *uid, *gid)
+            }
+            JournalRec::RemoteEntry { dir, entry } => fs.replay_remote_entry(*dir, entry.clone()),
+            JournalRec::Orphan { parent, file, name, kind, mode, uid, gid } => {
+                fs.replay_orphan(*parent, *file, name, *kind, *mode, *uid, *gid)
+            }
+            JournalRec::Unlink { dir, name } => fs.unlink(*dir, name).map(|_| ()),
+            JournalRec::DropObject { file } => fs.drop_local_object(*file),
+            JournalRec::Rmdir { dir, name } => fs.rmdir(*dir, name).map(|_| ()),
+            JournalRec::Rename { sdir, sname, ddir, dname } => {
+                fs.rename(*sdir, sname, *ddir, dname).map(|_| ())
+            }
+            JournalRec::Chmod { file, mode } => fs.chmod_apply(*file, *mode).map(|_| ()),
+            JournalRec::Chown { file, uid, gid } => fs.chown_apply(*file, *uid, *gid).map(|_| ()),
+            JournalRec::SetDirentPerm { dir, name, perm } => fs.set_dirent_perm(*dir, name, *perm),
+            JournalRec::Write { file, off, data } => fs.write(*file, *off, data).map(|_| ()),
+            JournalRec::Truncate { file, size } => fs.truncate(*file, *size),
+            JournalRec::Xattr { file, key, value } => fs.set_xattr(*file, key, value.clone()),
+            JournalRec::LeaseEpoch { .. } | JournalRec::DataGen { .. } => Ok(()),
+        };
+    }
+}
+
+// -- frame codec -------------------------------------------------------------
+
+/// FNV-1a, 32-bit — same family the server uses for name hashing.
+fn crc32(data: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in data {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// `[len][crc][payload]`, little-endian u32s.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Decode a run of frames. Returns the records decoded plus the byte
+/// length of the clean prefix: the first torn frame (short header,
+/// short payload, bad checksum, or undecodable record) stops the scan,
+/// and recovery truncates the segment to the clean length.
+pub fn decode_frames(buf: &[u8]) -> (Vec<JournalRec>, usize) {
+    let mut recs = Vec::new();
+    let mut pos = 0usize;
+    while buf.len() - pos >= 8 {
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        if buf.len() - pos - 8 < len {
+            break; // torn payload
+        }
+        let payload = &buf[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            break; // bit-rot or a torn write that landed mid-frame
+        }
+        match JournalRec::from_bytes(payload) {
+            Ok(r) => recs.push(r),
+            Err(_) => break,
+        }
+        pos += 8 + len;
+    }
+    (recs, pos)
+}
+
+/// Count whole frames in a pre-framed byte run (used by `append_raw`).
+fn count_frames(buf: &[u8]) -> u64 {
+    let mut n = 0u64;
+    let mut pos = 0usize;
+    while buf.len() - pos >= 8 {
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        if buf.len() - pos - 8 < len {
+            break;
+        }
+        n += 1;
+        pos += 8 + len;
+    }
+    n
+}
+
+// -- the journal -------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+pub struct JournalConfig {
+    /// fsync on commit (off only for benchmarks that isolate CPU cost).
+    pub sync_data: bool,
+    /// Checkpoint (compact to a fresh segment) after this many appends.
+    pub checkpoint_every: u64,
+}
+
+impl Default for JournalConfig {
+    fn default() -> Self {
+        JournalConfig { sync_data: true, checkpoint_every: 4096 }
+    }
+}
+
+struct Wal {
+    file: File,
+    gen: u64,
+    /// Records in the current segment (drives the checkpoint policy).
+    appended: u64,
+    /// Records written since the last fsync (the group-commit batch).
+    unsynced: u64,
+    /// Frame bytes not yet shipped to the backup.
+    pending_ship: Vec<u8>,
+    /// Sticky I/O failure: the in-memory state may be ahead of the log,
+    /// so every subsequent commit must fail (op never acked).
+    broken: Option<String>,
+}
+
+/// Journal counters, exported through the BENCH JSON path.
+#[derive(Default)]
+pub struct JournalStats {
+    pub appends: AtomicU64,
+    pub fsyncs: AtomicU64,
+    pub replayed: AtomicU64,
+    pub checkpoints: AtomicU64,
+    pub checkpoint_us: AtomicU64,
+    pub truncated_bytes: AtomicU64,
+    pub shipped_bytes: AtomicU64,
+    pub acked_bytes: AtomicU64,
+    pub ship_failures: AtomicU64,
+    /// Group-commit batch sizes (records covered per fsync).
+    pub batch: Mutex<Histogram>,
+}
+
+impl JournalStats {
+    pub fn json(&self) -> String {
+        let batch = self.batch.lock().unwrap();
+        format!(
+            "{{\"appends\":{},\"fsyncs\":{},\"replayed\":{},\"checkpoints\":{},\
+             \"checkpoint_us\":{},\"truncated_bytes\":{},\"shipped_bytes\":{},\
+             \"acked_bytes\":{},\"ship_failures\":{},\"batch_mean\":{:.2},\"batch_max\":{}}}",
+            self.appends.load(Ordering::Relaxed),
+            self.fsyncs.load(Ordering::Relaxed),
+            self.replayed.load(Ordering::Relaxed),
+            self.checkpoints.load(Ordering::Relaxed),
+            self.checkpoint_us.load(Ordering::Relaxed),
+            self.truncated_bytes.load(Ordering::Relaxed),
+            self.shipped_bytes.load(Ordering::Relaxed),
+            self.acked_bytes.load(Ordering::Relaxed),
+            self.ship_failures.load(Ordering::Relaxed),
+            if batch.count() > 0 { batch.mean() } else { 0.0 },
+            if batch.count() > 0 { batch.max() } else { 0 },
+        )
+    }
+}
+
+/// The write-ahead journal for one server incarnation.
+pub struct Journal {
+    dir: PathBuf,
+    cfg: JournalConfig,
+    wal: Mutex<Wal>,
+    /// Serializes extract-and-ship so frames reach the backup in append
+    /// order even when several workers commit concurrently.
+    ship: Mutex<()>,
+    backup: RwLock<Option<SharedTransport>>,
+    stats: JournalStats,
+}
+
+fn segment_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("wal.{gen}.log"))
+}
+
+impl Journal {
+    /// Open (or create) the journal in `dir` and return the records the
+    /// surviving segment holds, torn tail already truncated away. The
+    /// caller replays the records, then attaches the journal.
+    pub fn open(dir: &Path, cfg: JournalConfig) -> FsResult<(Journal, Vec<JournalRec>)> {
+        std::fs::create_dir_all(dir)?;
+        let current = dir.join("CURRENT");
+        let gen: u64 = match std::fs::read_to_string(&current) {
+            Ok(s) => s
+                .trim()
+                .parse()
+                .map_err(|_| FsError::Io(format!("corrupt CURRENT: {s:?}")))?,
+            Err(_) => {
+                write_current(dir, 0)?;
+                0
+            }
+        };
+        let path = segment_path(dir, gen);
+        let (recs, clean, torn) = match std::fs::read(&path) {
+            Ok(bytes) => {
+                let (recs, clean) = decode_frames(&bytes);
+                (recs, clean as u64, bytes.len() as u64 - clean as u64)
+            }
+            Err(_) => (Vec::new(), 0, 0),
+        };
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        if torn > 0 {
+            file.set_len(clean)?;
+        }
+        let j = Journal {
+            dir: dir.to_path_buf(),
+            cfg,
+            wal: Mutex::new(Wal {
+                file,
+                gen,
+                appended: recs.len() as u64,
+                unsynced: 0,
+                pending_ship: Vec::new(),
+                broken: None,
+            }),
+            ship: Mutex::new(()),
+            backup: RwLock::new(None),
+            stats: JournalStats::default(),
+        };
+        j.stats.replayed.store(recs.len() as u64, Ordering::Relaxed);
+        j.stats.truncated_bytes.store(torn, Ordering::Relaxed);
+        Ok((j, recs))
+    }
+
+    pub fn stats(&self) -> &JournalStats {
+        &self.stats
+    }
+
+    pub fn config(&self) -> JournalConfig {
+        self.cfg
+    }
+
+    /// Records appended to the current segment (checkpoint policy input).
+    pub fn segment_len(&self) -> u64 {
+        self.wal.lock().unwrap().appended
+    }
+
+    /// Register the backup replica the commit point must pass through.
+    pub fn set_backup(&self, t: SharedTransport) {
+        *self.backup.write().unwrap() = Some(t);
+    }
+
+    pub fn has_backup(&self) -> bool {
+        self.backup.read().unwrap().is_some()
+    }
+
+    /// Append one record. Buffers only — durability comes from the
+    /// `commit` that runs before the op's reply is sent.
+    pub fn append(&self, rec: &JournalRec) {
+        let payload = rec.to_bytes();
+        let framed = frame(&payload);
+        let mut w = self.wal.lock().unwrap();
+        if w.broken.is_some() {
+            return;
+        }
+        if let Err(e) = w.file.write_all(&framed) {
+            w.broken = Some(e.to_string());
+            return;
+        }
+        w.appended += 1;
+        w.unsynced += 1;
+        w.pending_ship.extend_from_slice(&framed);
+        self.stats.appends.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Append pre-framed bytes verbatim (the backup's path: its journal
+    /// must hold byte-identical frames so a promoted backup can itself
+    /// recover or chain a new backup).
+    pub fn append_raw(&self, frames: &[u8]) {
+        let n = count_frames(frames);
+        let mut w = self.wal.lock().unwrap();
+        if w.broken.is_some() {
+            return;
+        }
+        if let Err(e) = w.file.write_all(frames) {
+            w.broken = Some(e.to_string());
+            return;
+        }
+        w.appended += n;
+        w.unsynced += n;
+        self.stats.appends.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// The commit point: fsync everything appended since the last sync,
+    /// then ship the un-shipped frames to the backup and wait for its
+    /// ack. Only after `commit` returns Ok may the op's reply be sent.
+    /// A no-op when nothing is outstanding (read-only ops pay nothing).
+    pub fn commit(&self) -> FsResult<()> {
+        let _order = self.ship.lock().unwrap();
+        let pending = {
+            let mut w = self.wal.lock().unwrap();
+            if let Some(e) = &w.broken {
+                return Err(FsError::Io(format!("journal broken: {e}")));
+            }
+            if w.unsynced > 0 {
+                if self.cfg.sync_data {
+                    w.file.sync_data().map_err(|e| {
+                        w.broken = Some(e.to_string());
+                        FsError::Io(format!("journal fsync: {e}"))
+                    })?;
+                }
+                self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
+                let batch = w.unsynced;
+                self.stats.batch.lock().unwrap().record(batch);
+                w.unsynced = 0;
+            }
+            std::mem::take(&mut w.pending_ship)
+        };
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let backup = self.backup.read().unwrap().clone();
+        let Some(t) = backup else { return Ok(()) };
+        let n = pending.len() as u64;
+        self.stats.shipped_bytes.fetch_add(n, Ordering::Relaxed);
+        match t.call(Request::JournalShip { frames: pending }) {
+            Ok(Response::Unit) => {
+                self.stats.acked_bytes.fetch_add(n, Ordering::Relaxed);
+                Ok(())
+            }
+            Ok(Response::Err(e)) => {
+                self.demote_backup();
+                Err(e)
+            }
+            Ok(_) => {
+                self.demote_backup();
+                Err(FsError::Protocol("bad JournalShip ack".into()))
+            }
+            Err(e) => {
+                self.demote_backup();
+                Err(e)
+            }
+        }
+    }
+
+    /// A ship failure demotes the backup rather than leaving a silent
+    /// gap in its stream: later acked ops would otherwise be "durable"
+    /// on a replica missing an earlier record.
+    fn demote_backup(&self) {
+        self.stats.ship_failures.fetch_add(1, Ordering::Relaxed);
+        *self.backup.write().unwrap() = None;
+    }
+
+    /// Compact: write `snapshot` as the next generation's segment, point
+    /// `CURRENT` at it, drop the old segment. Holds both locks so no
+    /// append or ship interleaves with the swap; a record that landed
+    /// just before the swap is both in the snapshot and (possibly)
+    /// re-shipped — idempotent replay makes the double-apply harmless.
+    pub fn checkpoint(&self, snapshot: &[JournalRec]) -> FsResult<()> {
+        let started = Instant::now();
+        let _order = self.ship.lock().unwrap();
+        let mut w = self.wal.lock().unwrap();
+        if let Some(e) = &w.broken {
+            return Err(FsError::Io(format!("journal broken: {e}")));
+        }
+        let new_gen = w.gen + 1;
+        let path = segment_path(&self.dir, new_gen);
+        let mut buf = Vec::new();
+        for rec in snapshot {
+            buf.extend_from_slice(&frame(&rec.to_bytes()));
+        }
+        std::fs::write(&path, &buf)?;
+        let file = OpenOptions::new().append(true).open(&path)?;
+        if self.cfg.sync_data {
+            file.sync_data()?;
+        }
+        write_current(&self.dir, new_gen)?;
+        let old = segment_path(&self.dir, w.gen);
+        let _ = std::fs::remove_file(old);
+        w.file = file;
+        w.gen = new_gen;
+        w.appended = snapshot.len() as u64;
+        w.unsynced = 0;
+        self.stats.checkpoints.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .checkpoint_us
+            .fetch_add(started.elapsed().as_micros() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// Point `CURRENT` at `gen` crash-atomically (tmp + rename).
+fn write_current(dir: &Path, gen: u64) -> FsResult<()> {
+    let tmp = dir.join("CURRENT.tmp");
+    let mut f = File::create(&tmp)?;
+    f.write_all(gen.to_string().as_bytes())?;
+    f.sync_data()?;
+    std::fs::rename(&tmp, dir.join("CURRENT"))?;
+    Ok(())
+}
+
+// -- the JournalShip handler (backup side) -----------------------------------
+
+/// Apply a shipped frame run: decode, replay against local state via
+/// the explicit-id paths (no re-journaling through the public mutation
+/// API, no fresh id allocation), append the raw bytes to our own
+/// journal, and fsync before acking — the primary's commit point is
+/// only as strong as this ack.
+pub fn ship(s: &BServer, req: Request) -> FsResult<Response> {
+    let frames = match req {
+        Request::JournalShip { frames } => frames,
+        _ => return Err(super::ops::misrouted("journal_ship")),
+    };
+    let (recs, clean) = decode_frames(&frames);
+    if clean != frames.len() {
+        return Err(FsError::Protocol(format!(
+            "corrupt journal ship: {} of {} bytes decodable",
+            clean,
+            frames.len()
+        )));
+    }
+    for rec in &recs {
+        s.apply_journal_rec(rec);
+    }
+    if let Some(j) = s.fs.journal() {
+        j.append_raw(&frames);
+        j.commit()?;
+    }
+    Ok(Response::Unit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    fn tdir(tag: &str) -> PathBuf {
+        static N: AtomicU32 = AtomicU32::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "buffet-journal-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_recs() -> Vec<JournalRec> {
+        vec![
+            JournalRec::Create {
+                dir: 1,
+                file: 2,
+                name: "f".into(),
+                kind: FileKind::Regular,
+                mode: 0o644,
+                uid: 1,
+                gid: 2,
+            },
+            JournalRec::RemoteEntry {
+                dir: 1,
+                entry: DirEntry {
+                    name: "r".into(),
+                    ino: Ino::new(3, 0, 9),
+                    kind: FileKind::Regular,
+                    perm: PermBlob::new(0o600, 5, 5),
+                },
+            },
+            JournalRec::Orphan {
+                parent: Ino::new(0, 0, 1),
+                file: 7,
+                name: "o".into(),
+                kind: FileKind::Directory,
+                mode: 0o755,
+                uid: 0,
+                gid: 0,
+            },
+            JournalRec::Unlink { dir: 1, name: "f".into() },
+            JournalRec::DropObject { file: 2 },
+            JournalRec::Rmdir { dir: 1, name: "d".into() },
+            JournalRec::Rename { sdir: 1, sname: "a".into(), ddir: 4, dname: "b".into() },
+            JournalRec::Chmod { file: 2, mode: 0o600 },
+            JournalRec::Chown { file: 2, uid: 10, gid: 20 },
+            JournalRec::SetDirentPerm { dir: 1, name: "f".into(), perm: PermBlob::new(0o640, 1, 1) },
+            JournalRec::Write { file: 2, off: 4096, data: vec![1, 2, 3] },
+            JournalRec::Truncate { file: 2, size: 100 },
+            JournalRec::Xattr { file: 2, key: "buffet.ino".into(), value: vec![9] },
+            JournalRec::LeaseEpoch { file: 1, epoch: 3 },
+            JournalRec::DataGen { file: 2, gen: 8 },
+        ]
+    }
+
+    #[test]
+    fn record_roundtrip_every_variant() {
+        for rec in sample_recs() {
+            let back = JournalRec::from_bytes(&rec.to_bytes()).unwrap();
+            assert_eq!(back, rec);
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_and_count() {
+        let mut buf = Vec::new();
+        let recs = sample_recs();
+        for r in &recs {
+            buf.extend_from_slice(&frame(&r.to_bytes()));
+        }
+        let (back, clean) = decode_frames(&buf);
+        assert_eq!(back, recs);
+        assert_eq!(clean, buf.len());
+        assert_eq!(count_frames(&buf), recs.len() as u64);
+    }
+
+    #[test]
+    fn torn_tail_stops_cleanly_at_every_cut() {
+        let mut buf = Vec::new();
+        for r in sample_recs() {
+            buf.extend_from_slice(&frame(&r.to_bytes()));
+        }
+        let (full, _) = decode_frames(&buf);
+        for cut in 0..buf.len() {
+            let (recs, clean) = decode_frames(&buf[..cut]);
+            assert!(clean <= cut);
+            assert!(recs.len() <= full.len());
+            // the clean prefix must itself decode to exactly those recs
+            let (again, c2) = decode_frames(&buf[..clean]);
+            assert_eq!(again, recs);
+            assert_eq!(c2, clean);
+        }
+    }
+
+    #[test]
+    fn corrupt_byte_detected_by_checksum() {
+        let rec = &sample_recs()[0];
+        let mut buf = frame(&rec.to_bytes());
+        let last = buf.len() - 1;
+        buf[last] ^= 0xff;
+        let (recs, clean) = decode_frames(&buf);
+        assert!(recs.is_empty());
+        assert_eq!(clean, 0);
+    }
+
+    #[test]
+    fn open_append_commit_reopen_replays() {
+        let dir = tdir("basic");
+        let (j, recs) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert!(recs.is_empty());
+        for r in sample_recs() {
+            j.append(&r);
+        }
+        j.commit().unwrap();
+        assert_eq!(j.stats().fsyncs.load(Ordering::Relaxed), 1);
+        drop(j);
+        let (j2, recs2) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert_eq!(recs2, sample_recs());
+        assert_eq!(j2.stats().replayed.load(Ordering::Relaxed), recs2.len() as u64);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_on_disk_truncated_at_open() {
+        let dir = tdir("torn");
+        let (j, _) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        for r in sample_recs() {
+            j.append(&r);
+        }
+        j.commit().unwrap();
+        drop(j);
+        // simulate a crash mid-append: chop the last 3 bytes
+        let seg = segment_path(&dir, 0);
+        let bytes = std::fs::read(&seg).unwrap();
+        std::fs::write(&seg, &bytes[..bytes.len() - 3]).unwrap();
+        let (j2, recs) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        let all = sample_recs();
+        assert_eq!(recs, all[..all.len() - 1]);
+        assert!(j2.stats().truncated_bytes.load(Ordering::Relaxed) > 0);
+        // the tail is gone from disk too: a re-open sees the same prefix
+        drop(j2);
+        let (_, recs3) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert_eq!(recs3, recs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_swaps_generation_and_drops_old_segment() {
+        let dir = tdir("ckpt");
+        let (j, _) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        for r in sample_recs() {
+            j.append(&r);
+        }
+        j.commit().unwrap();
+        let snap = vec![sample_recs()[0].clone()];
+        j.checkpoint(&snap).unwrap();
+        assert_eq!(j.segment_len(), 1);
+        assert!(!segment_path(&dir, 0).exists());
+        assert!(segment_path(&dir, 1).exists());
+        // appends after the checkpoint land in the new segment
+        j.append(&sample_recs()[7]);
+        j.commit().unwrap();
+        drop(j);
+        let (_, recs) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert_eq!(recs, vec![sample_recs()[0].clone(), sample_recs()[7].clone()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn commit_without_appends_is_free() {
+        let dir = tdir("noop");
+        let (j, _) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        j.commit().unwrap();
+        j.commit().unwrap();
+        assert_eq!(j.stats().fsyncs.load(Ordering::Relaxed), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn group_commit_batches_concurrent_appends() {
+        let dir = tdir("group");
+        let (j, _) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        for r in sample_recs() {
+            j.append(&r);
+        }
+        // one commit covers the whole burst
+        j.commit().unwrap();
+        j.commit().unwrap();
+        assert_eq!(j.stats().fsyncs.load(Ordering::Relaxed), 1);
+        let batch = j.stats().batch.lock().unwrap().max();
+        assert_eq!(batch, sample_recs().len() as u64);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_json_is_well_formed() {
+        let dir = tdir("json");
+        let (j, _) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        j.append(&sample_recs()[0]);
+        j.commit().unwrap();
+        let s = j.stats().json();
+        assert!(s.starts_with('{') && s.ends_with('}'));
+        assert!(s.contains("\"appends\":1"));
+        assert!(s.contains("\"fsyncs\":1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -19,6 +19,7 @@
 //! keeps the shared server state and the cross-cutting §3.4 machinery
 //! the handlers compose.
 
+pub mod journal;
 pub mod locks;
 pub mod openlist;
 pub mod ops;
@@ -31,9 +32,12 @@ use std::sync::{Arc, RwLock};
 use crate::error::{FsError, FsResult};
 use crate::perm;
 use crate::store::fs::LocalFs;
+use crate::store::ObjectStore;
 use crate::transport::{NotifyPush, Service, SharedTransport};
-use crate::types::{AccessMask, ClientId, Credentials, FileId, FileKind, HostId, Ino};
+use crate::types::{AccessMask, ClientId, Credentials, FileId, FileKind, HostId, Ino, Version};
 use crate::wire::{LeaseStamp, Notify, OpenCtx, Request, Response};
+
+use journal::{Journal, JournalConfig, JournalRec};
 
 use self::locks::FileLocks;
 use self::openlist::{OpenList, OpenRec};
@@ -133,6 +137,85 @@ impl BServer {
         })
     }
 
+    /// Bring up a crash-safe server: open (or create) the write-ahead
+    /// journal in `dir`, replay whatever the surviving segment holds —
+    /// namespace, file bytes, lease-epoch table, data-gen map — and only
+    /// then attach the journal so new mutations are logged. File locks
+    /// are ephemeral by design (held by in-flight ops of dead clients),
+    /// so recovery correctly starts with a free lock table.
+    pub fn recover(
+        host: HostId,
+        version: Version,
+        data: Box<dyn ObjectStore>,
+        dir: &std::path::Path,
+        cfg: JournalConfig,
+    ) -> FsResult<Arc<BServer>> {
+        Self::recover_with_placement(host, version, data, dir, cfg, Placement::Local)
+    }
+
+    pub fn recover_with_placement(
+        host: HostId,
+        version: Version,
+        data: Box<dyn ObjectStore>,
+        dir: &std::path::Path,
+        cfg: JournalConfig,
+        placement: Placement,
+    ) -> FsResult<Arc<BServer>> {
+        let (j, recs) = Journal::open(dir, cfg)?;
+        let s = Self::with_placement(LocalFs::new(host, version, data), placement);
+        for rec in &recs {
+            s.apply_journal_rec(rec);
+        }
+        s.fs.attach_journal(Arc::new(j));
+        Ok(s)
+    }
+
+    /// Apply one journal record to this server's state (recovery replay
+    /// and the backup's `JournalShip` path). Lease/data-gen records are
+    /// merged with `max` so a double-apply never regresses an epoch.
+    pub fn apply_journal_rec(&self, rec: &JournalRec) {
+        match rec {
+            JournalRec::LeaseEpoch { file, epoch } => {
+                let mut m = self.lease_epochs.write().unwrap();
+                let e = m.entry(*file).or_insert(0);
+                *e = (*e).max(*epoch);
+            }
+            JournalRec::DataGen { file, gen } => {
+                let mut g = self.data_gen_shard(*file).write().unwrap();
+                let e = g.entry(*file).or_insert(0);
+                *e = (*e).max(*gen);
+            }
+            other => other.replay(&self.fs),
+        }
+    }
+
+    /// Register the backup replica: every commit from here on ships the
+    /// journal stream and only acks once the backup applied + fsynced.
+    pub fn set_backup(&self, t: SharedTransport) {
+        if let Some(j) = self.fs.journal() {
+            j.set_backup(t);
+        }
+    }
+
+    /// Checkpoint when the live segment has outgrown the configured
+    /// bound: compact the whole state (fs records + lease/data-gen
+    /// tables) into the next segment generation.
+    pub(crate) fn maybe_checkpoint(&self, j: &Journal) -> FsResult<()> {
+        if j.segment_len() < j.config().checkpoint_every {
+            return Ok(());
+        }
+        let mut recs = self.fs.snapshot_records();
+        for (file, epoch) in self.lease_epochs.read().unwrap().iter() {
+            recs.push(JournalRec::LeaseEpoch { file: *file, epoch: *epoch });
+        }
+        for shard in &self.data_gens {
+            for (file, gen) in shard.read().unwrap().iter() {
+                recs.push(JournalRec::DataGen { file: *file, gen: *gen });
+            }
+        }
+        j.checkpoint(&recs)
+    }
+
     pub fn host(&self) -> HostId {
         self.fs.host
     }
@@ -187,10 +270,16 @@ impl BServer {
     }
 
     fn bump_data_gen(&self, file: FileId) -> u64 {
-        let mut g = self.data_gen_shard(file).write().unwrap();
-        let e = g.entry(file).or_insert(0);
-        *e += 1;
-        *e
+        let gen = {
+            let mut g = self.data_gen_shard(file).write().unwrap();
+            let e = g.entry(file).or_insert(0);
+            *e += 1;
+            *e
+        };
+        if let Some(j) = self.fs.journal() {
+            j.append(&JournalRec::DataGen { file, gen });
+        }
+        gen
     }
 
     fn forget_data_gen(&self, file: FileId) {
@@ -232,7 +321,15 @@ impl BServer {
     /// Revoke every outstanding lease on `file`: stamps carrying the old
     /// epoch are rejected with `StaleLease` from here on.
     fn bump_lease(&self, file: FileId) {
-        *self.lease_epochs.write().unwrap().entry(file).or_insert(0) += 1;
+        let epoch = {
+            let mut m = self.lease_epochs.write().unwrap();
+            let e = m.entry(file).or_insert(0);
+            *e += 1;
+            *e
+        };
+        if let Some(j) = self.fs.journal() {
+            j.append(&JournalRec::LeaseEpoch { file, epoch });
+        }
     }
 
     /// Exclusive locks a permission change must hold across its

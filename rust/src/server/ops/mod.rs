@@ -74,11 +74,45 @@ fn index(req: &Request) -> usize {
         Request::RenameAt { .. } => 31,
         Request::ReadBatch { .. } => 32,
         Request::WriteBatch { .. } => 33,
+        Request::JournalShip { .. } => 34,
     }
 }
 
+/// Can this request mutate durable state? Mutating ops must hit the
+/// journal's commit point (fsync + backup ship) before their reply is
+/// sent — the "no acknowledged op is ever lost" invariant. Opens are
+/// included because O_TRUNC/deferred-create paths mutate; `commit` is
+/// a no-op when the handler appended nothing.
+fn is_mutating(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::Write { .. }
+            | Request::Create { .. }
+            | Request::Mkdir { .. }
+            | Request::Unlink { .. }
+            | Request::Rmdir { .. }
+            | Request::Rename { .. }
+            | Request::Chmod { .. }
+            | Request::Chown { .. }
+            | Request::Truncate { .. }
+            | Request::UpdateDirentPerm { .. }
+            | Request::CreateOrphan { .. }
+            | Request::DropObject { .. }
+            | Request::Open { .. }
+            | Request::OpenByName { .. }
+            | Request::OpenAt { .. }
+            | Request::Lease { .. }
+            | Request::CreateAt { .. }
+            | Request::MkdirAt { .. }
+            | Request::UnlinkAt { .. }
+            | Request::RmdirAt { .. }
+            | Request::RenameAt { .. }
+            | Request::WriteBatch { .. }
+    )
+}
+
 /// The handler table, ordered by wire tag (same order as [`index`]).
-static HANDLERS: [Handler; 34] = [
+static HANDLERS: [Handler; 35] = [
     meta::lookup,              // 0
     meta::read_dir,            // 1
     meta::get_attr,            // 2
@@ -113,11 +147,23 @@ static HANDLERS: [Handler; 34] = [
     relative::rename_at,       // 31
     file::read_batch,          // 32
     file::write_batch,         // 33
+    super::journal::ship,      // 34
 ];
 
-/// Route one request to its handler.
+/// Route one request to its handler. For mutating requests that
+/// succeeded, drive the journal commit point (group fsync + backup
+/// ship) before returning — the reply frame is the acknowledgement, so
+/// it must not leave until the op is durable.
 pub fn dispatch(s: &BServer, req: Request) -> FsResult<Response> {
-    HANDLERS[index(&req)](s, req)
+    let mutating = is_mutating(&req);
+    let resp = HANDLERS[index(&req)](s, req);
+    if mutating && resp.is_ok() {
+        if let Some(j) = s.fs.journal() {
+            j.commit()?;
+            s.maybe_checkpoint(&j)?;
+        }
+    }
+    resp
 }
 
 /// The error every handler returns when the table routed it the wrong
@@ -179,6 +225,7 @@ mod tests {
             Request::RenameAt { src: stamp, sname: "a".into(), dst: stamp, dname: "b".into(), cred: cred() },
             Request::ReadBatch { ino, ranges: vec![], known_gen: crate::wire::NO_GEN, client: 1, register: false, open_ctx: None },
             Request::WriteBatch { ino, segs: vec![], base_gen: crate::wire::NO_GEN, client: 1, register: false, open_ctx: None },
+            Request::JournalShip { frames: vec![] },
         ];
         assert_eq!(all.len(), HANDLERS.len(), "one sample per table entry");
         for (i, req) in all.into_iter().enumerate() {

@@ -8,8 +8,10 @@
 //! comparison apples-to-apples.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::error::{FsError, FsResult};
+use crate::server::journal::{Journal, JournalRec};
 use crate::store::dir::DirTable;
 use crate::store::inode::{InodeRec, InodeTable, ROOT_FILE_ID};
 use crate::store::ObjectStore;
@@ -25,6 +27,12 @@ pub struct LocalFs {
     /// Monotonically increasing change counter (cheap cache-coherence
     /// epoch; bumped on any namespace mutation).
     epoch: AtomicU64,
+    /// Write-ahead journal sink. When attached, every mutating method
+    /// appends a state-level record right after its table mutation; the
+    /// dispatch layer fsyncs (commit) before the reply is sent. The
+    /// `replay_*` paths below bypass this on purpose — recovery and
+    /// backup apply must never re-journal.
+    journal: RwLock<Option<Arc<Journal>>>,
 }
 
 impl LocalFs {
@@ -39,6 +47,7 @@ impl LocalFs {
             dirs: DirTable::new(),
             data,
             epoch: AtomicU64::new(1),
+            journal: RwLock::new(None),
         };
         fs.inodes.insert(
             ROOT_FILE_ID,
@@ -62,6 +71,24 @@ impl LocalFs {
 
     fn bump(&self) {
         self.epoch.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // -- durability hooks ----------------------------------------------------
+
+    /// Attach the write-ahead journal (after recovery replay ran, so
+    /// replayed records are not journaled twice).
+    pub fn attach_journal(&self, j: Arc<Journal>) {
+        *self.journal.write().unwrap() = Some(j);
+    }
+
+    pub fn journal(&self) -> Option<Arc<Journal>> {
+        self.journal.read().unwrap().clone()
+    }
+
+    fn log(&self, rec: JournalRec) {
+        if let Some(j) = &*self.journal.read().unwrap() {
+            j.append(&rec);
+        }
     }
 
     /// Validate that `ino` belongs to this engine (host + version). A
@@ -131,6 +158,15 @@ impl LocalFs {
         }
         self.touch_dir(dir);
         self.bump();
+        self.log(JournalRec::Create {
+            dir,
+            file: id,
+            name: name.to_string(),
+            kind,
+            mode,
+            uid,
+            gid,
+        });
         Ok(entry)
     }
 
@@ -142,9 +178,10 @@ impl LocalFs {
         if entry.ino.host == self.host {
             return Err(FsError::Invalid("insert_remote_entry with local ino".into()));
         }
-        self.dirs.insert(dir, entry)?;
+        self.dirs.insert(dir, entry.clone())?;
         self.touch_dir(dir);
         self.bump();
+        self.log(JournalRec::RemoteEntry { dir, entry });
         Ok(())
     }
 
@@ -166,6 +203,15 @@ impl LocalFs {
             self.dirs.create_dir(id);
         }
         self.bump();
+        self.log(JournalRec::Orphan {
+            parent,
+            file: id,
+            name: name.to_string(),
+            kind,
+            mode,
+            uid,
+            gid,
+        });
         Ok(DirEntry { name: name.to_string(), ino: self.ino(id), kind, perm })
     }
 
@@ -176,6 +222,10 @@ impl LocalFs {
             return Err(FsError::IsADirectory);
         }
         self.dirs.remove(dir, name)?;
+        // journal order matters: Unlink first, so replaying it (which
+        // also drops a local object) makes the DropObject below a
+        // harmless NotFound
+        self.log(JournalRec::Unlink { dir, name: name.to_string() });
         if entry.ino.host == self.host {
             self.drop_local_object(entry.ino.file)?;
         }
@@ -191,6 +241,7 @@ impl LocalFs {
             self.data.delete(file)?;
         }
         self.bump();
+        self.log(JournalRec::DropObject { file });
         Ok(())
     }
 
@@ -213,6 +264,7 @@ impl LocalFs {
         }
         self.touch_dir(dir);
         self.bump();
+        self.log(JournalRec::Rmdir { dir, name: name.to_string() });
         Ok(entry)
     }
 
@@ -234,6 +286,12 @@ impl LocalFs {
             self.touch_dir(ddir);
         }
         self.bump();
+        self.log(JournalRec::Rename {
+            sdir,
+            sname: sname.to_string(),
+            ddir,
+            dname: dname.to_string(),
+        });
         Ok(entry)
     }
 
@@ -251,6 +309,7 @@ impl LocalFs {
         })?;
         self.sync_parent_dirent(&perm, &parent)?;
         self.bump();
+        self.log(JournalRec::Chmod { file, mode });
         Ok((perm, parent))
     }
 
@@ -262,6 +321,7 @@ impl LocalFs {
         })?;
         self.sync_parent_dirent(&perm, &parent)?;
         self.bump();
+        self.log(JournalRec::Chown { file, uid, gid });
         Ok((perm, parent))
     }
 
@@ -280,6 +340,7 @@ impl LocalFs {
     pub fn set_dirent_perm(&self, dir: FileId, name: &str, perm: PermBlob) -> FsResult<()> {
         self.dirs.set_perm(dir, name, perm)?;
         self.bump();
+        self.log(JournalRec::SetDirentPerm { dir, name: name.to_string(), perm });
         Ok(())
     }
 
@@ -307,6 +368,7 @@ impl LocalFs {
                 r.mtime = unix_now();
             })
             .ok();
+        self.log(JournalRec::Write { file, off, data: data.to_vec() });
         Ok((data.len() as u32, new_size))
     }
 
@@ -322,6 +384,7 @@ impl LocalFs {
                 r.mtime = unix_now();
             })
             .ok();
+        self.log(JournalRec::Truncate { file, size });
         Ok(())
     }
 
@@ -340,16 +403,181 @@ impl LocalFs {
 
     /// Force a file's size metadata (Lustre keeps size on the OSS and
     /// fetches it by "glimpse"; workload setup shortcuts that here).
+    /// Bench-setup-only, deliberately not journaled.
     pub fn force_size(&self, file: FileId, size: u64) {
         self.inodes.update(file, |r| r.size = size).ok();
     }
 
     /// Direct xattr access (front-end metadata, §3.2).
     pub fn set_xattr(&self, file: FileId, key: &str, value: Vec<u8>) -> FsResult<()> {
-        self.inodes.set_xattr(file, key, value)
+        self.inodes.set_xattr(file, key, value.clone())?;
+        self.log(JournalRec::Xattr { file, key: key.to_string(), value });
+        Ok(())
     }
     pub fn get_xattr(&self, file: FileId, key: &str) -> FsResult<Option<Vec<u8>>> {
         self.inodes.get_xattr(file, key)
+    }
+
+    // -- journal replay (explicit-id, non-journaling) ------------------------
+    //
+    // These are what recovery and backup apply go through: same table
+    // mutations as the public API, but with the FileId fixed by the
+    // record (so every client-held Ino stays valid) and with overwrite
+    // semantics (remove-then-insert) so a double-apply — a record that
+    // raced into a checkpoint, or a re-replayed segment — converges
+    // instead of erroring.
+
+    /// Replay a local create with an explicit id.
+    pub fn replay_create(
+        &self,
+        dir: FileId,
+        file: FileId,
+        name: &str,
+        kind: FileKind,
+        mode: u16,
+        uid: u32,
+        gid: u32,
+    ) -> FsResult<()> {
+        self.require_dir(dir)?;
+        self.inodes.reserve_through(file);
+        let perm = PermBlob::new(mode, uid, gid);
+        let entry = DirEntry { name: name.to_string(), ino: self.ino(file), kind, perm };
+        let _ = self.dirs.remove(dir, name);
+        self.dirs.insert(dir, entry)?;
+        if !self.inodes.exists(file) {
+            self.inodes
+                .insert(file, InodeRec::new(kind, perm, Some(self.ino(dir)), name));
+        }
+        if kind == FileKind::Directory {
+            self.dirs.create_dir(file);
+        }
+        self.bump();
+        Ok(())
+    }
+
+    /// Replay an orphan create (object local, dirent remote).
+    pub fn replay_orphan(
+        &self,
+        parent: Ino,
+        file: FileId,
+        name: &str,
+        kind: FileKind,
+        mode: u16,
+        uid: u32,
+        gid: u32,
+    ) -> FsResult<()> {
+        self.inodes.reserve_through(file);
+        if !self.inodes.exists(file) {
+            self.inodes.insert(
+                file,
+                InodeRec::new(kind, PermBlob::new(mode, uid, gid), Some(parent), name),
+            );
+        }
+        if kind == FileKind::Directory {
+            self.dirs.create_dir(file);
+        }
+        self.bump();
+        Ok(())
+    }
+
+    /// Replay a remote-object dirent insert.
+    pub fn replay_remote_entry(&self, dir: FileId, entry: DirEntry) -> FsResult<()> {
+        self.require_dir(dir)?;
+        let _ = self.dirs.remove(dir, &entry.name);
+        self.dirs.insert(dir, entry)?;
+        self.bump();
+        Ok(())
+    }
+
+    // -- checkpoint snapshot -------------------------------------------------
+
+    /// Emit the fs-level records that reconstruct the current state: a
+    /// BFS over local directories (Create/RemoteEntry), then unreachable
+    /// local objects as Orphans, then file contents and xattrs. The
+    /// server layer appends its LeaseEpoch/DataGen records after these.
+    /// Timestamps are not preserved across a checkpoint — acceptable
+    /// metadata loss, documented in DESIGN.md §10.
+    pub fn snapshot_records(&self) -> Vec<JournalRec> {
+        let mut recs = Vec::new();
+        let mut seen: std::collections::HashSet<FileId> = std::collections::HashSet::new();
+
+        fn drain(
+            fs: &LocalFs,
+            stack: &mut Vec<FileId>,
+            seen: &mut std::collections::HashSet<FileId>,
+            recs: &mut Vec<JournalRec>,
+        ) {
+            while let Some(dir) = stack.pop() {
+                let entries = match fs.dirs.list(dir) {
+                    Ok(es) => es,
+                    Err(_) => continue,
+                };
+                for e in entries {
+                    if e.ino.host == fs.host {
+                        recs.push(JournalRec::Create {
+                            dir,
+                            file: e.ino.file,
+                            name: e.name.clone(),
+                            kind: e.kind,
+                            mode: e.perm.mode.0,
+                            uid: e.perm.uid,
+                            gid: e.perm.gid,
+                        });
+                        if seen.insert(e.ino.file) && e.kind == FileKind::Directory {
+                            stack.push(e.ino.file);
+                        }
+                    } else {
+                        recs.push(JournalRec::RemoteEntry { dir, entry: e });
+                    }
+                }
+            }
+        }
+
+        seen.insert(ROOT_FILE_ID);
+        let mut stack = vec![ROOT_FILE_ID];
+        drain(self, &mut stack, &mut seen, &mut recs);
+
+        // local objects whose dirent lives elsewhere (orphans), then the
+        // subtrees hanging under orphan directories
+        let mut ids = self.inodes.ids();
+        ids.sort_unstable();
+        for id in &ids {
+            if seen.contains(id) {
+                continue;
+            }
+            if let Ok(rec) = self.inodes.get(*id) {
+                recs.push(JournalRec::Orphan {
+                    parent: rec.parent.unwrap_or_else(|| self.root_ino()),
+                    file: *id,
+                    name: rec.name_in_parent.clone(),
+                    kind: rec.kind,
+                    mode: rec.perm.mode.0,
+                    uid: rec.perm.uid,
+                    gid: rec.perm.gid,
+                });
+                seen.insert(*id);
+                if rec.kind == FileKind::Directory {
+                    stack.push(*id);
+                }
+            }
+        }
+        drain(self, &mut stack, &mut seen, &mut recs);
+        // contents + xattrs for every live local object
+        for id in &ids {
+            let rec = match self.inodes.get(*id) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            if rec.kind == FileKind::Regular && rec.size > 0 {
+                if let Ok(data) = self.data.read(*id, 0, rec.size.min(u32::MAX as u64) as u32) {
+                    recs.push(JournalRec::Write { file: *id, off: 0, data });
+                }
+            }
+            for (k, v) in &rec.xattrs {
+                recs.push(JournalRec::Xattr { file: *id, key: k.clone(), value: v.clone() });
+            }
+        }
+        recs
     }
 }
 

@@ -84,6 +84,17 @@ impl InodeTable {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
+    /// Advance the allocator past `id` (journal replay inserts records
+    /// with explicit ids; later live allocations must not collide).
+    pub fn reserve_through(&self, id: FileId) {
+        self.next_id.fetch_max(id + 1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of every live id (checkpoint traversal).
+    pub fn ids(&self) -> Vec<FileId> {
+        self.inodes.read().unwrap().keys().copied().collect()
+    }
+
     pub fn insert(&self, id: FileId, rec: InodeRec) {
         self.inodes.write().unwrap().insert(id, rec);
     }
@@ -183,6 +194,28 @@ mod tests {
         assert_eq!(a.nlink, 1);
         let d = InodeRec::new(FileKind::Directory, PermBlob::new(0o755, 0, 0), None, "d");
         assert_eq!(d.attr(ino).nlink, 2);
+    }
+
+    #[test]
+    fn reserve_through_advances_allocator_monotonically() {
+        let t = InodeTable::new();
+        t.reserve_through(100);
+        assert_eq!(t.alloc_id(), 101);
+        // a lower reservation never moves the allocator backwards
+        t.reserve_through(50);
+        assert_eq!(t.alloc_id(), 102);
+    }
+
+    #[test]
+    fn ids_lists_live_inodes() {
+        let t = InodeTable::new();
+        let a = t.alloc_id();
+        let b = t.alloc_id();
+        t.insert(a, rec());
+        t.insert(b, rec());
+        let mut ids = t.ids();
+        ids.sort();
+        assert_eq!(ids, vec![a, b]);
     }
 
     #[test]

@@ -711,3 +711,192 @@ impl Drop for TcpTransport {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Reconnecting client wrapper
+// ---------------------------------------------------------------------------
+
+/// Redial policy for a [`ReconnectTransport`].
+#[derive(Clone, Copy, Debug)]
+pub struct ReconnectConfig {
+    /// Attempt the pipelined handshake on every (re)dial.
+    pub pipelined: bool,
+    /// Response timeout handed to each dialed connection.
+    pub read_timeout: Option<Duration>,
+    /// Redial attempts per recovery round before the failure surfaces.
+    pub max_redials: u32,
+    /// Backoff before the first redial attempt; doubled per attempt
+    /// (plus an equal-sized random jitter) up to `backoff_cap`.
+    pub backoff: Duration,
+    pub backoff_cap: Duration,
+}
+
+impl Default for ReconnectConfig {
+    fn default() -> ReconnectConfig {
+        ReconnectConfig {
+            pipelined: false,
+            read_timeout: Some(DEFAULT_CALL_TIMEOUT),
+            max_redials: 4,
+            backoff: Duration::from_millis(20),
+            backoff_cap: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Address-retaining wrapper that un-dead-ends a broken [`TcpTransport`].
+///
+/// A poisoned connection fails every later call *by design* (the stream
+/// is desynchronized and must be dropped); before this wrapper the only
+/// recovery was tearing the whole client down. The wrapper keeps the
+/// peer address, notices the poison marker — or any transport-level
+/// call failure, e.g. a cleanly closed peer, which never poisons a
+/// lockstep stream — and redials with bounded, jittered exponential
+/// backoff. Callers keep their `SharedTransport` handle across the
+/// swap. It deliberately does NOT re-issue the failed request: retry
+/// policy is idempotence-aware and belongs to the caller (the agent's
+/// failover path), not the byte pipe.
+pub struct ReconnectTransport {
+    addr: String,
+    cfg: ReconnectConfig,
+    metrics: Arc<RpcMetrics>,
+    inner: std::sync::RwLock<Arc<TcpTransport>>,
+    /// Serializes redials so a stampede of failed callers dials once.
+    redial: Mutex<()>,
+    /// Set by any transport-level call failure; cleared by a successful
+    /// redial. Covers dead-but-unpoisoned streams (peer closed). A
+    /// transient per-request timeout on a still-healthy pipelined
+    /// connection also lands here — costing one needless redial, which
+    /// beats dead-ending.
+    dead: AtomicBool,
+    /// Jitter state (cheap xorshift*; racy updates only add entropy).
+    jitter: AtomicU64,
+}
+
+impl ReconnectTransport {
+    /// Dial `addr` once eagerly (so configuration errors surface at
+    /// startup) and wrap the connection for automatic redial.
+    pub fn connect(
+        addr: &str,
+        cfg: ReconnectConfig,
+        metrics: Arc<RpcMetrics>,
+    ) -> FsResult<Arc<ReconnectTransport>> {
+        let first = Self::dial(addr, &cfg, &metrics)?;
+        Ok(Arc::new(ReconnectTransport {
+            addr: addr.to_string(),
+            cfg,
+            metrics,
+            inner: std::sync::RwLock::new(first),
+            redial: Mutex::new(()),
+            dead: AtomicBool::new(false),
+            jitter: AtomicU64::new(0x2545_F491_4F6C_DD1D),
+        }))
+    }
+
+    fn dial(
+        addr: &str,
+        cfg: &ReconnectConfig,
+        metrics: &Arc<RpcMetrics>,
+    ) -> FsResult<Arc<TcpTransport>> {
+        if cfg.pipelined {
+            TcpTransport::connect_pipelined_with(
+                addr,
+                cfg.read_timeout,
+                mux::DEFAULT_PIPELINE_DEPTH,
+                Arc::clone(metrics),
+            )
+        } else {
+            TcpTransport::connect_with_timeout(addr, cfg.read_timeout, Arc::clone(metrics))
+        }
+    }
+
+    /// The connection currently behind the wrapper (tests/diagnostics).
+    pub fn current(&self) -> Arc<TcpTransport> {
+        Arc::clone(&self.inner.read().unwrap())
+    }
+
+    pub fn peer_addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn next_jitter_us(&self, bound_us: u64) -> u64 {
+        let mut x = self.jitter.load(Ordering::Relaxed);
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.jitter.store(x, Ordering::Relaxed);
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D) % bound_us.max(1)
+    }
+
+    /// A live connection: the current one unless it is poisoned or a
+    /// call on it failed at the transport level — then redial, bounded.
+    fn live(&self) -> FsResult<Arc<TcpTransport>> {
+        let t = self.current();
+        if !t.is_poisoned() && !self.dead.load(Ordering::Acquire) {
+            return Ok(t);
+        }
+        let _g = self.redial.lock().unwrap();
+        // another caller may have finished the redial while we queued
+        let t = self.current();
+        if !t.is_poisoned() && !self.dead.load(Ordering::Acquire) {
+            return Ok(t);
+        }
+        let mut last = FsError::Transport(format!("{} unreachable", self.addr));
+        for attempt in 0..self.cfg.max_redials {
+            let base = self
+                .cfg
+                .backoff
+                .saturating_mul(1u32 << attempt.min(16))
+                .min(self.cfg.backoff_cap);
+            let jitter =
+                Duration::from_micros(self.next_jitter_us(base.as_micros().max(1) as u64));
+            std::thread::sleep(base + jitter);
+            match Self::dial(&self.addr, &self.cfg, &self.metrics) {
+                Ok(fresh) => {
+                    *self.inner.write().unwrap() = Arc::clone(&fresh);
+                    self.dead.store(false, Ordering::Release);
+                    self.metrics.record_reconnect();
+                    return Ok(fresh);
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    fn note<T>(&self, r: FsResult<T>) -> FsResult<T> {
+        if matches!(&r, Err(FsError::Transport(_))) {
+            self.dead.store(true, Ordering::Release);
+        }
+        r
+    }
+}
+
+impl Transport for ReconnectTransport {
+    fn call(&self, req: Request) -> FsResult<Response> {
+        let t = self.live()?;
+        self.note(t.call(req))
+    }
+
+    fn call_async(&self, req: Request) -> FsResult<()> {
+        let t = self.live()?;
+        self.note(t.call_async(req))
+    }
+
+    fn submit(&self, req: Request) -> FsResult<Pending> {
+        let t = self.live()?;
+        self.note(t.submit(req))
+    }
+
+    fn wait(&self, pending: Pending) -> FsResult<Response> {
+        // NOT `live()`: a pending belongs to the connection that issued
+        // it. If that connection died, its in-flight table already
+        // failed every waiter; if a redial swapped connections between
+        // submit and wait, the fresh table cleanly rejects the unknown
+        // id — an error either way, never a hang or a mismatched reply.
+        self.note(self.current().wait(pending))
+    }
+
+    fn is_pipelined(&self) -> bool {
+        self.current().is_pipelined()
+    }
+}

@@ -173,6 +173,12 @@ pub enum Request {
         register: bool,
         open_ctx: Option<OpenCtx>,
     },
+    /// Primary→backup replication: a run of raw write-ahead journal
+    /// frames (`[len][crc][payload]`, see `server::journal`). The backup
+    /// applies them via the replay paths, appends them byte-identical to
+    /// its own journal, fsyncs, and answers [`Response::Unit`] — that
+    /// ack is the primary's past-the-backup commit point.
+    JournalShip { frames: Vec<u8> },
 }
 
 /// One directory listing returned by a [`Request::ResolvePath`] walk:
@@ -281,6 +287,7 @@ impl Request {
             Request::RenameAt { .. } => "rename",
             Request::ReadBatch { .. } => "read",
             Request::WriteBatch { .. } => "write",
+            Request::JournalShip { .. } => "invalidate",
         }
     }
 
@@ -306,6 +313,7 @@ impl Request {
             Request::WriteBatch { segs, .. } => {
                 64 + segs.iter().map(|s| 12 + s.data.len()).sum::<usize>()
             }
+            Request::JournalShip { frames } => 64 + frames.len(),
             _ => 64,
         }
     }
@@ -654,6 +662,10 @@ impl Wire for Request {
                 e.bool(*register);
                 open_ctx.enc(e);
             }
+            Request::JournalShip { frames } => {
+                tagged!(e, 34);
+                e.bytes(frames);
+            }
         }
     }
 
@@ -798,6 +810,7 @@ impl Wire for Request {
                 register: d.bool()?,
                 open_ctx: Option::<OpenCtx>::dec(d)?,
             },
+            34 => Request::JournalShip { frames: d.bytes()? },
             t => return Err(FsError::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -1128,6 +1141,7 @@ mod tests {
                 register: true,
                 open_ctx: Some(ctx.clone()),
             },
+            Request::JournalShip { frames: vec![0xde, 0xad, 0xbe, 0xef] },
         ]
     }
 

@@ -1,19 +1,28 @@
 //! Failure injection: the §3.2 version mechanism (server reboot →
-//! ESTALE), client teardown, and protocol edge cases.
+//! ESTALE), client teardown, protocol edge cases, and the crash-safety
+//! suite (kill-the-primary-mid-storm, torn journal tails, double
+//! replay — DESIGN.md §10).
 
-use std::sync::Arc;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
+use buffetfs::agent::BAgent;
 use buffetfs::blib::Buffet;
 use buffetfs::cluster::{Backing, BuffetCluster, ClusterView};
 use buffetfs::error::FsError;
 use buffetfs::metrics::RpcMetrics;
+use buffetfs::server::journal::JournalConfig;
 use buffetfs::server::BServer;
 use buffetfs::simnet::{LatencyModel, NetConfig};
 use buffetfs::store::data::MemData;
 use buffetfs::store::fs::LocalFs;
 use buffetfs::transport::capacity::ServiceConfig;
 use buffetfs::transport::chan::ChanTransport;
+use buffetfs::transport::Service;
 use buffetfs::types::{Credentials, Ino, OpenFlags};
+use buffetfs::util::rng::XorShift;
+use buffetfs::wire::{Request, Response};
 
 #[test]
 fn server_restart_bumps_version_and_old_inos_go_stale() {
@@ -23,7 +32,7 @@ fn server_restart_bumps_version_and_old_inos_go_stale() {
     let net = Arc::new(LatencyModel::new(NetConfig::zero()));
     let t_v0 = ChanTransport::new(s_v0.clone(), net.clone(), metrics.clone());
 
-    let mut view = ClusterView::new(s_v0.fs.root_ino());
+    let view = ClusterView::new(s_v0.fs.root_ino());
     view.add(0, 0, t_v0);
     let agent = buffetfs::agent::BAgent::new(1, view, metrics.clone());
     let p = Buffet::with_pid(agent, 1, Credentials::root());
@@ -42,7 +51,7 @@ fn server_restart_bumps_version_and_old_inos_go_stale() {
     assert_eq!(err, FsError::Stale);
 
     // and a v0-configured ClusterView refuses v1 inos symmetrically
-    let mut view_v0 = ClusterView::new(Ino::new(0, 0, 1));
+    let view_v0 = ClusterView::new(Ino::new(0, 0, 1));
     let t_v1 = ChanTransport::new(s_v1.clone(), net, metrics);
     view_v0.add(0, 0, t_v1);
     let ino_v1 = Ino::new(0, 1, 5);
@@ -137,4 +146,242 @@ fn deep_paths_resolve_and_check_correctly() {
     let user_cluster = p.agent().clone();
     let user = Buffet::process(user_cluster, Credentials::new(5, 5));
     assert_eq!(user.open(&path, OpenFlags::RDONLY).unwrap_err(), FsError::PermissionDenied);
+}
+
+// ---------------------------------------------------------------------------
+// Crash safety: kill the primary mid-storm (DESIGN.md §10). The invariant
+// under test is the journal's contract: no acknowledged op is ever lost —
+// whether the state comes back via recovery replay or a promoted backup.
+// ---------------------------------------------------------------------------
+
+/// Unique scratch directory per test invocation; the journal inside it
+/// is the only thing that survives a simulated crash.
+fn tdir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU32 = AtomicU32::new(0);
+    std::env::temp_dir().join(format!(
+        "buffetfs-crash-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn journal_cfg() -> JournalConfig {
+    // No fsync in tests (tmpfs + same-process recovery makes it pure
+    // overhead); the commit/replay logic under test is identical.
+    JournalConfig { sync_data: false, ..JournalConfig::default() }
+}
+
+/// A process-scoped client wired straight to `s` over a zero-latency chan.
+fn client_for(s: &Arc<BServer>, metrics: Arc<RpcMetrics>) -> Buffet {
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let view = ClusterView::new(s.fs.root_ino());
+    view.add(0, 0, ChanTransport::new(s.clone(), net, metrics.clone()));
+    Buffet::process(BAgent::new(7, view, metrics), Credentials::root())
+}
+
+/// Hard-drop wrapper: after `countdown` admitted requests the "machine"
+/// dies — every later request (and the one that spent the last credit)
+/// answers a transport error, exactly what a severed connection
+/// surfaces. Requests admitted before the drop complete fully: a real
+/// crash also lets racing replies escape, and the invariant is about
+/// *acknowledged* ops, not in-flight ones.
+struct KillSwitch {
+    inner: Arc<BServer>,
+    countdown: AtomicU64,
+    dead: AtomicBool,
+}
+
+impl KillSwitch {
+    fn arm(inner: Arc<BServer>, after: u64) -> Arc<KillSwitch> {
+        Arc::new(KillSwitch { inner, countdown: AtomicU64::new(after), dead: AtomicBool::new(false) })
+    }
+}
+
+impl Service for KillSwitch {
+    fn handle(&self, req: Request) -> Response {
+        if self.dead.load(Ordering::Acquire) {
+            return Response::Err(FsError::Transport("primary crashed".into()));
+        }
+        let prev = self.countdown.fetch_sub(1, Ordering::AcqRel);
+        if prev <= 1 {
+            self.dead.store(true, Ordering::Release);
+            return Response::Err(FsError::Transport("primary crashed".into()));
+        }
+        self.inner.handle(req)
+    }
+}
+
+/// 8 writer threads hammering `put` through one shared agent. Returns
+/// every (path, payload) whose put was *acknowledged* plus the error
+/// count. `stop_on_error` models workers that give up once the primary
+/// is gone (no standby); with it off, the storm keeps going and its
+/// tail lands on whatever the failover path promoted.
+fn mutation_storm(agent: &Arc<BAgent>, stop_on_error: bool) -> (Vec<(String, Vec<u8>)>, u64) {
+    let acked = Mutex::new(Vec::new());
+    let errors = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for w in 0..8u32 {
+            let agent = agent.clone();
+            let acked = &acked;
+            let errors = &errors;
+            scope.spawn(move || {
+                let p = Buffet::with_pid(agent, 100 + w, Credentials::root());
+                let mut mine = Vec::new();
+                for i in 0..48u32 {
+                    let path = format!("/w{w}-f{i}");
+                    let body = format!("payload {w}/{i}").into_bytes();
+                    match p.put(&path, &body) {
+                        Ok(()) => mine.push((path, body)),
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                            if stop_on_error {
+                                break;
+                            }
+                        }
+                    }
+                }
+                acked.lock().unwrap().extend(mine);
+            });
+        }
+    });
+    (acked.into_inner().unwrap(), errors.load(Ordering::Relaxed))
+}
+
+#[test]
+fn kill_primary_mid_storm_recovery_replay_loses_no_acked_op() {
+    let dir = tdir("replay");
+    let (acked, errors);
+    {
+        let s = BServer::recover(0, 0, Box::new(MemData::new()), &dir, journal_cfg()).unwrap();
+        let mut rng = XorShift::new(0xC0FFEE);
+        let kill = KillSwitch::arm(s.clone(), 150 + rng.below(150));
+        let metrics = Arc::new(RpcMetrics::new());
+        let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+        let view = ClusterView::new(s.fs.root_ino());
+        view.add(0, 0, ChanTransport::new(kill, net, metrics.clone()));
+        let agent = BAgent::new(1, view, metrics);
+        let storm = mutation_storm(&agent, true);
+        acked = storm.0;
+        errors = storm.1;
+        // the primary dies here, in-memory state and all: only the
+        // journal directory outlives this scope
+    }
+    assert!(errors > 0, "the kill switch must fire mid-storm");
+    assert!(!acked.is_empty(), "some ops must be acked before the crash");
+
+    // a fresh incarnation recovers from the journal alone — the object
+    // store starts empty, everything must come back through replay
+    let s2 = BServer::recover(0, 0, Box::new(MemData::new()), &dir, journal_cfg()).unwrap();
+    let p = client_for(&s2, Arc::new(RpcMetrics::new()));
+    for (path, body) in &acked {
+        let got = p
+            .get(path, 1 << 16)
+            .unwrap_or_else(|e| panic!("acked {path} lost in replay: {e:?}"));
+        assert_eq!(&got, body, "{path} came back with different bytes after replay");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_primary_mid_storm_backup_promotion_loses_no_acked_op() {
+    let pdir = tdir("prim");
+    let bdir = tdir("back");
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let primary = BServer::recover(0, 0, Box::new(MemData::new()), &pdir, journal_cfg()).unwrap();
+    // warm standby serving the SAME host id and version: every ino and
+    // lease a client holds stays valid across promotion
+    let backup = BServer::recover(0, 0, Box::new(MemData::new()), &bdir, journal_cfg()).unwrap();
+    primary.set_backup(ChanTransport::new(backup.clone(), net.clone(), Arc::new(RpcMetrics::new())));
+
+    let mut rng = XorShift::new(0xFA11);
+    let kill = KillSwitch::arm(primary.clone(), 150 + rng.below(150));
+    let metrics = Arc::new(RpcMetrics::new());
+    let view = ClusterView::new(primary.fs.root_ino());
+    view.add(0, 0, ChanTransport::new(kill, net.clone(), metrics.clone()));
+    view.register_standby(0, 0, ChanTransport::new(backup.clone(), net, metrics.clone()));
+    let agent = BAgent::new(1, view, metrics.clone());
+
+    // workers do NOT stop on the first error: the first transport
+    // failure drives the promotion and the storm's tail lands on the
+    // backup
+    let (acked, errors) = mutation_storm(&agent, false);
+    assert!(errors > 0, "the kill switch must fire mid-storm");
+    assert!(metrics.failovers() >= 1, "the dead primary must have been failed over");
+
+    // every acked op — acked by the primary (shipped past the backup
+    // before the reply) or acked by the promoted backup — is present
+    let p = Buffet::with_pid(agent.clone(), 999, Credentials::root());
+    for (path, body) in &acked {
+        let got = p
+            .get(path, 1 << 16)
+            .unwrap_or_else(|e| panic!("acked {path} lost across failover: {e:?}"));
+        assert_eq!(&got, body, "{path} came back with different bytes after failover");
+    }
+    // and the promoted backup keeps taking new mutations
+    p.put("/after-failover", b"served by the standby").unwrap();
+    assert_eq!(p.get("/after-failover", 64).unwrap(), b"served by the standby");
+    let _ = std::fs::remove_dir_all(&pdir);
+    let _ = std::fs::remove_dir_all(&bdir);
+}
+
+#[test]
+fn torn_journal_tail_is_truncated_and_clean_prefix_survives() {
+    let dir = tdir("torn");
+    {
+        let s = BServer::recover(0, 0, Box::new(MemData::new()), &dir, journal_cfg()).unwrap();
+        let p = client_for(&s, Arc::new(RpcMetrics::new()));
+        p.put("/a", b"alpha").unwrap();
+        p.put("/b", b"beta").unwrap();
+    }
+    // a crash mid-append leaves a torn frame: a header promising more
+    // payload than the segment holds, then garbage
+    let seg = dir.join("wal.0.log");
+    let clean = std::fs::metadata(&seg).unwrap().len();
+    let mut bytes = std::fs::read(&seg).unwrap();
+    bytes.extend_from_slice(&[0x00, 0x04, 0x00, 0x00, 0xde, 0xad, 0xbe, 0xef, 0x55]);
+    std::fs::write(&seg, &bytes).unwrap();
+
+    let s2 = BServer::recover(0, 0, Box::new(MemData::new()), &dir, journal_cfg()).unwrap();
+    // the torn tail is physically gone: later appends extend the clean
+    // prefix instead of burying garbage mid-segment
+    assert_eq!(std::fs::metadata(&seg).unwrap().len(), clean, "torn tail must be truncated");
+    let p = client_for(&s2, Arc::new(RpcMetrics::new()));
+    assert_eq!(p.get("/a", 16).unwrap(), b"alpha");
+    assert_eq!(p.get("/b", 16).unwrap(), b"beta");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn replaying_the_same_journal_twice_is_idempotent() {
+    let dir = tdir("double");
+    {
+        let s = BServer::recover(0, 0, Box::new(MemData::new()), &dir, journal_cfg()).unwrap();
+        let p = client_for(&s, Arc::new(RpcMetrics::new()));
+        p.mkdir("/d", 0o755).unwrap();
+        p.put("/d/f", b"one").unwrap();
+        p.put("/g", b"two").unwrap();
+        p.chmod("/g", 0o600).unwrap();
+        p.rename("/g", "/d/h").unwrap();
+        p.put("/gone", b"x").unwrap();
+        p.unlink("/gone").unwrap();
+    }
+    let observe = |s: &Arc<BServer>| {
+        let p = client_for(s, Arc::new(RpcMetrics::new()));
+        let f = p.stat("/d/f").unwrap();
+        let h = p.stat("/d/h").unwrap();
+        assert_eq!(p.get("/d/f", 16).unwrap(), b"one");
+        assert_eq!(p.get("/d/h", 16).unwrap(), b"two");
+        assert_eq!(p.stat("/gone").unwrap_err(), FsError::NotFound);
+        (f.ino, f.size, h.ino, h.size)
+    };
+    // recovery does not consume the journal: replaying the very same
+    // segment into a second fresh incarnation converges on the same
+    // state, same inos and all
+    let s1 = BServer::recover(0, 0, Box::new(MemData::new()), &dir, journal_cfg()).unwrap();
+    let first = observe(&s1);
+    drop(s1);
+    let s2 = BServer::recover(0, 0, Box::new(MemData::new()), &dir, journal_cfg()).unwrap();
+    let second = observe(&s2);
+    assert_eq!(first, second, "double replay diverged");
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -218,7 +218,7 @@ fn protocol_rejection_downgrades_to_per_level() {
     let old = Arc::new(OldServer(server.clone()));
     let metrics = Arc::new(RpcMetrics::new());
     let net = Arc::new(LatencyModel::new(NetConfig::zero()));
-    let mut view = ClusterView::new(root);
+    let view = ClusterView::new(root);
     view.add(0, 0, ChanTransport::new(old, net.clone(), metrics.clone()));
     let agent = buffetfs::agent::BAgent::new(1, view, metrics.clone());
     server.register_pusher(1, ChanNotify::new(agent.clone(), net));

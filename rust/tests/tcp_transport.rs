@@ -8,7 +8,7 @@ use buffetfs::metrics::RpcMetrics;
 use buffetfs::server::BServer;
 use buffetfs::store::data::MemData;
 use buffetfs::store::fs::LocalFs;
-use buffetfs::transport::tcp::{TcpServer, TcpTransport};
+use buffetfs::transport::tcp::{ReconnectConfig, ReconnectTransport, TcpServer, TcpTransport};
 use buffetfs::transport::Transport;
 use buffetfs::types::{Credentials, FileKind, Ino};
 use buffetfs::wire::{OpenCtx, Request, Response};
@@ -124,6 +124,52 @@ fn dead_peer_times_out_instead_of_hanging_forever() {
         other => panic!("expected a poisoned-transport error, got {other:?}"),
     }
     hold.join().unwrap();
+}
+
+#[test]
+fn reconnect_transport_redials_after_peer_death() {
+    use std::time::Duration;
+    let (server, saddr) = spawn_server();
+    // flaky front door: kills its FIRST accepted connection outright
+    // (the simulated crash), then proxies later ones to the real server
+    // byte-for-byte — so the redial lands on a live peer at the SAME
+    // address without racing a listener rebind.
+    let front = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let faddr = front.local_addr().unwrap();
+    let proxy = std::thread::spawn(move || {
+        drop(front.accept());
+        let (client_side, _) = front.accept().unwrap();
+        let server_side = std::net::TcpStream::connect(saddr).unwrap();
+        let mut up_rx = client_side.try_clone().unwrap();
+        let mut up_tx = server_side.try_clone().unwrap();
+        let up = std::thread::spawn(move || {
+            let _ = std::io::copy(&mut up_rx, &mut up_tx);
+        });
+        let (mut down_rx, mut down_tx) = (server_side, client_side);
+        let _ = std::io::copy(&mut down_rx, &mut down_tx);
+        let _ = up.join();
+    });
+    let metrics = Arc::new(RpcMetrics::new());
+    let cfg = ReconnectConfig {
+        backoff: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(50),
+        ..ReconnectConfig::default()
+    };
+    let t = ReconnectTransport::connect(&faddr.to_string(), cfg, metrics.clone()).unwrap();
+    // the first call hits the killed connection and surfaces a transport
+    // error — the wrapper never blind-retries the request itself
+    // (idempotence is the caller's judgement, not the byte pipe's)
+    let err = t.call(Request::GetAttr { ino: Ino::new(0, 0, 1) }).unwrap_err();
+    assert!(matches!(err, buffetfs::error::FsError::Transport(_)), "{err:?}");
+    // the NEXT call redials through the wrapper and succeeds
+    match t.call(Request::GetAttr { ino: Ino::new(0, 0, 1) }) {
+        Ok(Response::AttrR(a)) => assert_eq!(a.ino, Ino::new(0, 0, 1)),
+        other => panic!("expected attr after redial, got {other:?}"),
+    }
+    assert_eq!(metrics.reconnects(), 1, "exactly one successful redial recorded");
+    drop(t);
+    let _ = proxy.join();
+    server.shutdown();
 }
 
 #[test]
