@@ -69,6 +69,7 @@ fn exercised_counters(net: NetConfig) -> String {
     let cfg = JournalConfig::default();
     let primary = BServer::recover(0, 0, Box::new(MemData::new()), &pdir, cfg).expect("primary");
     let backup = BServer::recover(0, 0, Box::new(MemData::new()), &bdir, cfg).expect("backup");
+    backup.enable_backup_role();
     let lat = Arc::new(LatencyModel::new(net));
     primary.set_backup(ChanTransport::new(backup, lat.clone(), Arc::new(RpcMetrics::new())));
 

@@ -1033,6 +1033,7 @@ pub fn ablation_recovery(net: NetConfig, journal_lens: &[usize], iters: usize) -
                 BServer::recover(0, 0, Box::new(MemData::new()), &pdir, cfg).expect("primary");
             let backup =
                 BServer::recover(0, 0, Box::new(MemData::new()), &bdir, cfg).expect("backup");
+            backup.enable_backup_role();
             let lat = Arc::new(LatencyModel::new(net));
             primary.set_backup(ChanTransport::new(
                 backup.clone(),

@@ -16,7 +16,7 @@ use crate::util::hist::Histogram;
 pub const OPS: &[&str] = &[
     "lookup", "readdir", "getattr", "open", "read", "write", "close", "create", "mkdir",
     "unlink", "rmdir", "rename", "chmod", "chown", "truncate", "statfs", "hello", "resolve",
-    "lease", "invalidate",
+    "lease", "replicate", "invalidate",
 ];
 
 fn op_index(op: &str) -> usize {
@@ -34,7 +34,7 @@ fn lease_op_index(op: &str) -> usize {
 
 #[derive(Default)]
 pub struct RpcMetrics {
-    counts: [AtomicU64; 20],
+    counts: [AtomicU64; 21],
     bytes_out: AtomicU64,
     bytes_in: AtomicU64,
     lat: Mutex<BTreeMap<&'static str, Histogram>>,
@@ -489,6 +489,14 @@ mod tests {
         assert_eq!(m.count("lease"), 1);
         assert_eq!(m.count("invalidate"), 0, "must not alias into the catch-all");
         assert_eq!(m.metadata_rpcs(), 1);
+    }
+
+    #[test]
+    fn replicate_is_a_first_class_op() {
+        let m = RpcMetrics::new();
+        m.record("replicate", 128, 16, Duration::from_micros(10));
+        assert_eq!(m.count("replicate"), 1);
+        assert_eq!(m.count("invalidate"), 0, "must not alias into the catch-all");
     }
 
     #[test]

@@ -16,8 +16,10 @@
 //!   the previous fsync (concurrent pipelined workers ride the same
 //!   sync, so batch size grows with load).
 //! * A segment is `wal.<gen>.log`; `CURRENT` (written tmp+rename) names
-//!   the live generation. A checkpoint writes a compacted snapshot as
-//!   the next generation and drops the old one.
+//!   the live generation. A checkpoint quiesces appends (the `gate`
+//!   RwLock), snapshots the whole state, writes the compacted snapshot
+//!   as the next generation and drops the old one — the quiesce is what
+//!   keeps a racing op's record from dying with the dropped segment.
 //! * Recovery decodes `CURRENT`'s segment, truncates a torn tail
 //!   (partial length prefix, short payload, or checksum mismatch), and
 //!   replays idempotently — replaying the same segment twice is a
@@ -26,7 +28,9 @@
 //!   (`Request::JournalShip`) and only acks once the backup has applied
 //!   *and fsynced* them: the commit point moves past the backup. A
 //!   failed ship demotes the backup (local-only durability) so the
-//!   stream never develops a silent gap.
+//!   stream never develops a silent gap. Only a server explicitly
+//!   enabled as a replication target (`BServer::enable_backup_role`)
+//!   accepts shipped frames — the op carries no credentials.
 //!
 //! Frame format, little-endian: `[len: u32][crc: u32][payload]` where
 //! `crc` is FNV-1a/32 over the payload and `payload` is one
@@ -215,12 +219,16 @@ impl Wire for JournalRec {
 }
 
 impl JournalRec {
-    /// Re-apply this record against a [`LocalFs`] via the explicit-id
-    /// replay paths. Idempotent: the errors a double-apply produces
-    /// (NotFound after an unlink already ran, AlreadyExists after a
-    /// rename already landed, ...) are swallowed, so replaying a
-    /// segment twice — or a record that races into a checkpoint — is
-    /// harmless. Lease/data-gen records are server-level and handled by
+    /// Re-apply this record against a [`LocalFs`] via the explicit-id,
+    /// **non-logging** replay paths — on a backup the journal is
+    /// attached while shipped records are applied, and the byte-exact
+    /// copy lands via `append_raw`; routing replay through the public
+    /// mutation API would journal every record a second time, re-encoded.
+    /// Idempotent: the errors a double-apply produces (NotFound after an
+    /// unlink already ran, AlreadyExists after a rename already landed,
+    /// ...) are swallowed, so replaying a segment twice — or a record
+    /// that races into a checkpoint — is harmless. Lease/data-gen
+    /// records are server-level and handled by
     /// [`BServer::apply_journal_rec`], not here.
     pub fn replay(&self, fs: &LocalFs) {
         let _ = match self {
@@ -231,18 +239,20 @@ impl JournalRec {
             JournalRec::Orphan { parent, file, name, kind, mode, uid, gid } => {
                 fs.replay_orphan(*parent, *file, name, *kind, *mode, *uid, *gid)
             }
-            JournalRec::Unlink { dir, name } => fs.unlink(*dir, name).map(|_| ()),
-            JournalRec::DropObject { file } => fs.drop_local_object(*file),
-            JournalRec::Rmdir { dir, name } => fs.rmdir(*dir, name).map(|_| ()),
+            JournalRec::Unlink { dir, name } => fs.replay_unlink(*dir, name),
+            JournalRec::DropObject { file } => fs.replay_drop_object(*file),
+            JournalRec::Rmdir { dir, name } => fs.replay_rmdir(*dir, name),
             JournalRec::Rename { sdir, sname, ddir, dname } => {
-                fs.rename(*sdir, sname, *ddir, dname).map(|_| ())
+                fs.replay_rename(*sdir, sname, *ddir, dname)
             }
-            JournalRec::Chmod { file, mode } => fs.chmod_apply(*file, *mode).map(|_| ()),
-            JournalRec::Chown { file, uid, gid } => fs.chown_apply(*file, *uid, *gid).map(|_| ()),
-            JournalRec::SetDirentPerm { dir, name, perm } => fs.set_dirent_perm(*dir, name, *perm),
-            JournalRec::Write { file, off, data } => fs.write(*file, *off, data).map(|_| ()),
-            JournalRec::Truncate { file, size } => fs.truncate(*file, *size),
-            JournalRec::Xattr { file, key, value } => fs.set_xattr(*file, key, value.clone()),
+            JournalRec::Chmod { file, mode } => fs.replay_chmod(*file, *mode),
+            JournalRec::Chown { file, uid, gid } => fs.replay_chown(*file, *uid, *gid),
+            JournalRec::SetDirentPerm { dir, name, perm } => {
+                fs.replay_set_dirent_perm(*dir, name, *perm)
+            }
+            JournalRec::Write { file, off, data } => fs.replay_write(*file, *off, data),
+            JournalRec::Truncate { file, size } => fs.replay_truncate(*file, *size),
+            JournalRec::Xattr { file, key, value } => fs.replay_xattr(*file, key, value.clone()),
             JournalRec::LeaseEpoch { .. } | JournalRec::DataGen { .. } => Ok(()),
         };
     }
@@ -382,6 +392,12 @@ impl JournalStats {
 pub struct Journal {
     dir: PathBuf,
     cfg: JournalConfig,
+    /// Checkpoint quiesce gate: appends hold it shared, a checkpoint
+    /// holds it exclusively across snapshot+swap. Without it, an op
+    /// whose state change lands *after* the snapshot traversal could
+    /// still append its record to the doomed segment — the swap would
+    /// delete the only copy of an op the client gets acked.
+    gate: RwLock<()>,
     wal: Mutex<Wal>,
     /// Serializes extract-and-ship so frames reach the backup in append
     /// order even when several workers commit concurrently.
@@ -401,23 +417,31 @@ impl Journal {
     pub fn open(dir: &Path, cfg: JournalConfig) -> FsResult<(Journal, Vec<JournalRec>)> {
         std::fs::create_dir_all(dir)?;
         let current = dir.join("CURRENT");
+        // Only a *missing* CURRENT means a fresh journal. Any other read
+        // error (permissions, transient I/O) must propagate: after a
+        // checkpoint advanced the generation, treating it as fresh would
+        // rewrite CURRENT to 0 and silently recover an empty state.
         let gen: u64 = match std::fs::read_to_string(&current) {
             Ok(s) => s
                 .trim()
                 .parse()
                 .map_err(|_| FsError::Io(format!("corrupt CURRENT: {s:?}")))?,
-            Err(_) => {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
                 write_current(dir, 0)?;
                 0
             }
+            Err(e) => return Err(FsError::Io(format!("read CURRENT: {e}"))),
         };
         let path = segment_path(dir, gen);
+        // Same discipline for the segment itself: absent is a legal fresh
+        // state (CURRENT written, no append yet), anything else is not.
         let (recs, clean, torn) = match std::fs::read(&path) {
             Ok(bytes) => {
                 let (recs, clean) = decode_frames(&bytes);
                 (recs, clean as u64, bytes.len() as u64 - clean as u64)
             }
-            Err(_) => (Vec::new(), 0, 0),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => (Vec::new(), 0, 0),
+            Err(e) => return Err(FsError::Io(format!("read {}: {e}", path.display()))),
         };
         let file = OpenOptions::new().create(true).append(true).open(&path)?;
         if torn > 0 {
@@ -426,6 +450,7 @@ impl Journal {
         let j = Journal {
             dir: dir.to_path_buf(),
             cfg,
+            gate: RwLock::new(()),
             wal: Mutex::new(Wal {
                 file,
                 gen,
@@ -465,11 +490,22 @@ impl Journal {
         self.backup.read().unwrap().is_some()
     }
 
+    /// Block every append while the returned guard lives (checkpoint
+    /// snapshot+swap). An op that mutated state but has not appended
+    /// yet parks here and resumes into the *new* segment, where the
+    /// double-apply (record + snapshot) is harmless by idempotence; an
+    /// op that already appended did so before the snapshot ran, so its
+    /// state is in the snapshot.
+    pub(crate) fn quiesce(&self) -> std::sync::RwLockWriteGuard<'_, ()> {
+        self.gate.write().unwrap()
+    }
+
     /// Append one record. Buffers only — durability comes from the
     /// `commit` that runs before the op's reply is sent.
     pub fn append(&self, rec: &JournalRec) {
         let payload = rec.to_bytes();
         let framed = frame(&payload);
+        let _shared = self.gate.read().unwrap();
         let mut w = self.wal.lock().unwrap();
         if w.broken.is_some() {
             return;
@@ -489,6 +525,7 @@ impl Journal {
     /// recover or chain a new backup).
     pub fn append_raw(&self, frames: &[u8]) {
         let n = count_frames(frames);
+        let _shared = self.gate.read().unwrap();
         let mut w = self.wal.lock().unwrap();
         if w.broken.is_some() {
             return;
@@ -563,11 +600,19 @@ impl Journal {
     }
 
     /// Compact: write `snapshot` as the next generation's segment, point
-    /// `CURRENT` at it, drop the old segment. Holds both locks so no
-    /// append or ship interleaves with the swap; a record that landed
-    /// just before the swap is both in the snapshot and (possibly)
-    /// re-shipped — idempotent replay makes the double-apply harmless.
-    pub fn checkpoint(&self, snapshot: &[JournalRec]) -> FsResult<()> {
+    /// `CURRENT` at it, drop the old segment. The caller must hold the
+    /// [`Journal::quiesce`] guard *across taking the snapshot and this
+    /// call* — that is what guarantees no record lands in the doomed
+    /// segment after the snapshot traversal ran. Ship and wal locks are
+    /// taken here so no commit interleaves with the swap; a record that
+    /// landed just before the quiesce is both in the snapshot and
+    /// (possibly) still pending ship — idempotent replay makes the
+    /// double-apply harmless.
+    pub fn checkpoint(
+        &self,
+        _quiesced: &std::sync::RwLockWriteGuard<'_, ()>,
+        snapshot: &[JournalRec],
+    ) -> FsResult<()> {
         let started = Instant::now();
         let _order = self.ship.lock().unwrap();
         let mut w = self.wal.lock().unwrap();
@@ -613,15 +658,25 @@ fn write_current(dir: &Path, gen: u64) -> FsResult<()> {
 // -- the JournalShip handler (backup side) -----------------------------------
 
 /// Apply a shipped frame run: decode, replay against local state via
-/// the explicit-id paths (no re-journaling through the public mutation
-/// API, no fresh id allocation), append the raw bytes to our own
-/// journal, and fsync before acking — the primary's commit point is
-/// only as strong as this ack.
+/// the non-logging replay paths (no re-journaling through the public
+/// mutation API, no fresh id allocation), append the raw bytes to our
+/// own journal, and fsync before acking — the primary's commit point
+/// is only as strong as this ack. After the ack the backup compacts
+/// its own segment under the same checkpoint policy as a primary, so
+/// a long-lived standby's replay cost stays bounded.
+///
+/// Only a server explicitly enabled as a replication target accepts
+/// this op: `JournalShip` carries no credentials and bypasses every
+/// permission check and §3.4 barrier, so an ordinary client must never
+/// be able to reach this handler ([`BServer::enable_backup_role`]).
 pub fn ship(s: &BServer, req: Request) -> FsResult<Response> {
     let frames = match req {
         Request::JournalShip { frames } => frames,
         _ => return Err(super::ops::misrouted("journal_ship")),
     };
+    if !s.is_backup_role() {
+        return Err(FsError::PermissionDenied);
+    }
     let (recs, clean) = decode_frames(&frames);
     if clean != frames.len() {
         return Err(FsError::Protocol(format!(
@@ -636,6 +691,7 @@ pub fn ship(s: &BServer, req: Request) -> FsResult<Response> {
     if let Some(j) = s.fs.journal() {
         j.append_raw(&frames);
         j.commit()?;
+        s.maybe_checkpoint(&j)?;
     }
     Ok(Response::Unit)
 }
@@ -800,7 +856,9 @@ mod tests {
         }
         j.commit().unwrap();
         let snap = vec![sample_recs()[0].clone()];
-        j.checkpoint(&snap).unwrap();
+        let quiesced = j.quiesce();
+        j.checkpoint(&quiesced, &snap).unwrap();
+        drop(quiesced);
         assert_eq!(j.segment_len(), 1);
         assert!(!segment_path(&dir, 0).exists());
         assert!(segment_path(&dir, 1).exists());

@@ -26,7 +26,7 @@ pub mod ops;
 pub mod registry;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::error::{FsError, FsResult};
@@ -112,6 +112,11 @@ pub struct BServer {
     data_registry: CacheRegistry,
     seq: AtomicU64,
     placement: Placement,
+    /// True when this server is an authorized replication target:
+    /// `JournalShip` carries no credentials and bypasses every
+    /// permission check, so the handler refuses frames unless the
+    /// operator explicitly enabled the role (cluster bootstrap).
+    backup_role: AtomicBool,
     pub stats: ServerStats,
 }
 
@@ -133,6 +138,7 @@ impl BServer {
             data_registry: CacheRegistry::new(),
             seq: AtomicU64::new(1),
             placement,
+            backup_role: AtomicBool::new(false),
             stats: ServerStats::default(),
         })
     }
@@ -197,10 +203,30 @@ impl BServer {
         }
     }
 
+    /// Mark this server as an authorized `JournalShip` target. Must be
+    /// called on the standby before its primary's `set_backup` — the
+    /// ship handler refuses frames otherwise.
+    pub fn enable_backup_role(&self) {
+        self.backup_role.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_backup_role(&self) -> bool {
+        self.backup_role.load(Ordering::Relaxed)
+    }
+
     /// Checkpoint when the live segment has outgrown the configured
     /// bound: compact the whole state (fs records + lease/data-gen
-    /// tables) into the next segment generation.
+    /// tables) into the next segment generation. Appends are quiesced
+    /// across snapshot + swap — an op whose state change lands after
+    /// the snapshot traversal must not slip its record into the old
+    /// segment, or the swap deletes the only copy of an acked op.
     pub(crate) fn maybe_checkpoint(&self, j: &Journal) -> FsResult<()> {
+        if j.segment_len() < j.config().checkpoint_every {
+            return Ok(());
+        }
+        let quiesced = j.quiesce();
+        // re-check under the gate: a concurrent worker may have just
+        // compacted, and checkpointing twice back-to-back is pure waste
         if j.segment_len() < j.config().checkpoint_every {
             return Ok(());
         }
@@ -213,7 +239,7 @@ impl BServer {
                 recs.push(JournalRec::DataGen { file: *file, gen: *gen });
             }
         }
-        j.checkpoint(&recs)
+        j.checkpoint(&quiesced, &recs)
     }
 
     pub fn host(&self) -> HostId {

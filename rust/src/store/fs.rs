@@ -216,6 +216,15 @@ impl LocalFs {
     }
 
     pub fn unlink(&self, dir: FileId, name: &str) -> FsResult<DirEntry> {
+        self.unlink_inner(dir, name, true)
+    }
+
+    /// Non-logging unlink (recovery replay / backup apply).
+    pub fn replay_unlink(&self, dir: FileId, name: &str) -> FsResult<()> {
+        self.unlink_inner(dir, name, false).map(|_| ())
+    }
+
+    fn unlink_inner(&self, dir: FileId, name: &str, log: bool) -> FsResult<DirEntry> {
         self.require_dir(dir)?;
         let entry = self.dirs.lookup(dir, name)?;
         if entry.kind == FileKind::Directory {
@@ -225,9 +234,11 @@ impl LocalFs {
         // journal order matters: Unlink first, so replaying it (which
         // also drops a local object) makes the DropObject below a
         // harmless NotFound
-        self.log(JournalRec::Unlink { dir, name: name.to_string() });
+        if log {
+            self.log(JournalRec::Unlink { dir, name: name.to_string() });
+        }
         if entry.ino.host == self.host {
-            self.drop_local_object(entry.ino.file)?;
+            self.drop_object_inner(entry.ino.file, log)?;
         }
         self.touch_dir(dir);
         self.bump();
@@ -236,16 +247,36 @@ impl LocalFs {
 
     /// Remove a local object's inode + data (after its dirent is gone).
     pub fn drop_local_object(&self, file: FileId) -> FsResult<()> {
+        self.drop_object_inner(file, true)
+    }
+
+    /// Non-logging object drop (recovery replay / backup apply).
+    pub fn replay_drop_object(&self, file: FileId) -> FsResult<()> {
+        self.drop_object_inner(file, false)
+    }
+
+    fn drop_object_inner(&self, file: FileId, log: bool) -> FsResult<()> {
         let rec = self.inodes.remove(file)?;
         if rec.kind == FileKind::Regular {
             self.data.delete(file)?;
         }
         self.bump();
-        self.log(JournalRec::DropObject { file });
+        if log {
+            self.log(JournalRec::DropObject { file });
+        }
         Ok(())
     }
 
     pub fn rmdir(&self, dir: FileId, name: &str) -> FsResult<DirEntry> {
+        self.rmdir_inner(dir, name, true)
+    }
+
+    /// Non-logging rmdir (recovery replay / backup apply).
+    pub fn replay_rmdir(&self, dir: FileId, name: &str) -> FsResult<()> {
+        self.rmdir_inner(dir, name, false).map(|_| ())
+    }
+
+    fn rmdir_inner(&self, dir: FileId, name: &str, log: bool) -> FsResult<DirEntry> {
         self.require_dir(dir)?;
         let entry = self.dirs.lookup(dir, name)?;
         if entry.kind != FileKind::Directory {
@@ -264,11 +295,29 @@ impl LocalFs {
         }
         self.touch_dir(dir);
         self.bump();
-        self.log(JournalRec::Rmdir { dir, name: name.to_string() });
+        if log {
+            self.log(JournalRec::Rmdir { dir, name: name.to_string() });
+        }
         Ok(entry)
     }
 
     pub fn rename(&self, sdir: FileId, sname: &str, ddir: FileId, dname: &str) -> FsResult<DirEntry> {
+        self.rename_inner(sdir, sname, ddir, dname, true)
+    }
+
+    /// Non-logging rename (recovery replay / backup apply).
+    pub fn replay_rename(&self, sdir: FileId, sname: &str, ddir: FileId, dname: &str) -> FsResult<()> {
+        self.rename_inner(sdir, sname, ddir, dname, false).map(|_| ())
+    }
+
+    fn rename_inner(
+        &self,
+        sdir: FileId,
+        sname: &str,
+        ddir: FileId,
+        dname: &str,
+        log: bool,
+    ) -> FsResult<DirEntry> {
         self.require_dir(sdir)?;
         self.require_dir(ddir)?;
         let entry = self.dirs.rename(sdir, sname, ddir, dname)?;
@@ -286,12 +335,14 @@ impl LocalFs {
             self.touch_dir(ddir);
         }
         self.bump();
-        self.log(JournalRec::Rename {
-            sdir,
-            sname: sname.to_string(),
-            ddir,
-            dname: dname.to_string(),
-        });
+        if log {
+            self.log(JournalRec::Rename {
+                sdir,
+                sname: sname.to_string(),
+                ddir,
+                dname: dname.to_string(),
+            });
+        }
         Ok(entry)
     }
 
@@ -302,6 +353,17 @@ impl LocalFs {
     /// parent so the caller can sync it cross-server. The §3.4
     /// invalidation protocol runs in the server layer *before* this.
     pub fn chmod_apply(&self, file: FileId, mode: u16) -> FsResult<(PermBlob, Option<(Ino, String)>)> {
+        let r = self.chmod_inner(file, mode)?;
+        self.log(JournalRec::Chmod { file, mode });
+        Ok(r)
+    }
+
+    /// Non-logging chmod (recovery replay / backup apply).
+    pub fn replay_chmod(&self, file: FileId, mode: u16) -> FsResult<()> {
+        self.chmod_inner(file, mode).map(|_| ())
+    }
+
+    fn chmod_inner(&self, file: FileId, mode: u16) -> FsResult<(PermBlob, Option<(Ino, String)>)> {
         let (perm, parent) = self.inodes.update(file, |rec| {
             rec.perm = PermBlob::new(mode, rec.perm.uid, rec.perm.gid);
             rec.ctime = unix_now();
@@ -309,11 +371,21 @@ impl LocalFs {
         })?;
         self.sync_parent_dirent(&perm, &parent)?;
         self.bump();
-        self.log(JournalRec::Chmod { file, mode });
         Ok((perm, parent))
     }
 
     pub fn chown_apply(&self, file: FileId, uid: u32, gid: u32) -> FsResult<(PermBlob, Option<(Ino, String)>)> {
+        let r = self.chown_inner(file, uid, gid)?;
+        self.log(JournalRec::Chown { file, uid, gid });
+        Ok(r)
+    }
+
+    /// Non-logging chown (recovery replay / backup apply).
+    pub fn replay_chown(&self, file: FileId, uid: u32, gid: u32) -> FsResult<()> {
+        self.chown_inner(file, uid, gid).map(|_| ())
+    }
+
+    fn chown_inner(&self, file: FileId, uid: u32, gid: u32) -> FsResult<(PermBlob, Option<(Ino, String)>)> {
         let (perm, parent) = self.inodes.update(file, |rec| {
             rec.perm = PermBlob::new(rec.perm.mode.0, uid, gid);
             rec.ctime = unix_now();
@@ -321,7 +393,6 @@ impl LocalFs {
         })?;
         self.sync_parent_dirent(&perm, &parent)?;
         self.bump();
-        self.log(JournalRec::Chown { file, uid, gid });
         Ok((perm, parent))
     }
 
@@ -338,9 +409,15 @@ impl LocalFs {
     /// invoked via `Request::UpdateDirentPerm` when the child's inode
     /// lives on another server).
     pub fn set_dirent_perm(&self, dir: FileId, name: &str, perm: PermBlob) -> FsResult<()> {
+        self.replay_set_dirent_perm(dir, name, perm)?;
+        self.log(JournalRec::SetDirentPerm { dir, name: name.to_string(), perm });
+        Ok(())
+    }
+
+    /// Non-logging dirent-perm sync (recovery replay / backup apply).
+    pub fn replay_set_dirent_perm(&self, dir: FileId, name: &str, perm: PermBlob) -> FsResult<()> {
         self.dirs.set_perm(dir, name, perm)?;
         self.bump();
-        self.log(JournalRec::SetDirentPerm { dir, name: name.to_string(), perm });
         Ok(())
     }
 
@@ -357,6 +434,17 @@ impl LocalFs {
     }
 
     pub fn write(&self, file: FileId, off: u64, data: &[u8]) -> FsResult<(u32, u64)> {
+        let r = self.write_inner(file, off, data)?;
+        self.log(JournalRec::Write { file, off, data: data.to_vec() });
+        Ok(r)
+    }
+
+    /// Non-logging write (recovery replay / backup apply).
+    pub fn replay_write(&self, file: FileId, off: u64, data: &[u8]) -> FsResult<()> {
+        self.write_inner(file, off, data).map(|_| ())
+    }
+
+    fn write_inner(&self, file: FileId, off: u64, data: &[u8]) -> FsResult<(u32, u64)> {
         let rec = self.inodes.get(file)?;
         if rec.kind != FileKind::Regular {
             return Err(FsError::IsADirectory);
@@ -368,11 +456,17 @@ impl LocalFs {
                 r.mtime = unix_now();
             })
             .ok();
-        self.log(JournalRec::Write { file, off, data: data.to_vec() });
         Ok((data.len() as u32, new_size))
     }
 
     pub fn truncate(&self, file: FileId, size: u64) -> FsResult<()> {
+        self.replay_truncate(file, size)?;
+        self.log(JournalRec::Truncate { file, size });
+        Ok(())
+    }
+
+    /// Non-logging truncate (recovery replay / backup apply).
+    pub fn replay_truncate(&self, file: FileId, size: u64) -> FsResult<()> {
         let rec = self.inodes.get(file)?;
         if rec.kind != FileKind::Regular {
             return Err(FsError::IsADirectory);
@@ -384,7 +478,6 @@ impl LocalFs {
                 r.mtime = unix_now();
             })
             .ok();
-        self.log(JournalRec::Truncate { file, size });
         Ok(())
     }
 
@@ -414,6 +507,11 @@ impl LocalFs {
         self.log(JournalRec::Xattr { file, key: key.to_string(), value });
         Ok(())
     }
+
+    /// Non-logging xattr set (recovery replay / backup apply).
+    pub fn replay_xattr(&self, file: FileId, key: &str, value: Vec<u8>) -> FsResult<()> {
+        self.inodes.set_xattr(file, key, value)
+    }
     pub fn get_xattr(&self, file: FileId, key: &str) -> FsResult<Option<Vec<u8>>> {
         self.inodes.get_xattr(file, key)
     }
@@ -425,7 +523,11 @@ impl LocalFs {
     // record (so every client-held Ino stays valid) and with overwrite
     // semantics (remove-then-insert) so a double-apply — a record that
     // raced into a checkpoint, or a re-replayed segment — converges
-    // instead of erroring.
+    // instead of erroring. The destructive/perm/data ops have their
+    // non-logging `replay_*` twins next to the public methods above;
+    // none of the replay paths ever calls `log`, so a backup applying
+    // shipped frames journals each record exactly once (byte-identical,
+    // via `Journal::append_raw`).
 
     /// Replay a local create with an explicit id.
     pub fn replay_create(

@@ -287,7 +287,7 @@ impl Request {
             Request::RenameAt { .. } => "rename",
             Request::ReadBatch { .. } => "read",
             Request::WriteBatch { .. } => "write",
-            Request::JournalShip { .. } => "invalidate",
+            Request::JournalShip { .. } => "replicate",
         }
     }
 

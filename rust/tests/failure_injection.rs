@@ -291,6 +291,7 @@ fn kill_primary_mid_storm_backup_promotion_loses_no_acked_op() {
     // warm standby serving the SAME host id and version: every ino and
     // lease a client holds stays valid across promotion
     let backup = BServer::recover(0, 0, Box::new(MemData::new()), &bdir, journal_cfg()).unwrap();
+    backup.enable_backup_role();
     primary.set_backup(ChanTransport::new(backup.clone(), net.clone(), Arc::new(RpcMetrics::new())));
 
     let mut rng = XorShift::new(0xFA11);
@@ -322,6 +323,143 @@ fn kill_primary_mid_storm_backup_promotion_loses_no_acked_op() {
     assert_eq!(p.get("/after-failover", 64).unwrap(), b"served by the standby");
     let _ = std::fs::remove_dir_all(&pdir);
     let _ = std::fs::remove_dir_all(&bdir);
+}
+
+#[test]
+fn checkpoint_compaction_under_storm_loses_no_acked_op() {
+    // Regression: a checkpoint used to snapshot without quiescing
+    // appends, so an op whose state landed after the snapshot traversal
+    // could still slip its record into the doomed segment — the swap
+    // deleted the only copy of an acked op. A tiny checkpoint_every
+    // forces many compactions while 8 writers hammer the journal.
+    let dir = tdir("ckpt");
+    let acked;
+    {
+        let cfg = JournalConfig { checkpoint_every: 48, ..journal_cfg() };
+        let s = BServer::recover(0, 0, Box::new(MemData::new()), &dir, cfg).unwrap();
+        let metrics = Arc::new(RpcMetrics::new());
+        let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+        let view = ClusterView::new(s.fs.root_ino());
+        view.add(0, 0, ChanTransport::new(s.clone(), net, metrics.clone()));
+        let agent = BAgent::new(1, view, metrics);
+        let (a, errors) = mutation_storm(&agent, true);
+        assert_eq!(errors, 0, "no kill switch armed: the storm must run clean");
+        acked = a;
+        let ckpts = s
+            .fs
+            .journal()
+            .unwrap()
+            .stats()
+            .checkpoints
+            .load(Ordering::Relaxed);
+        assert!(ckpts >= 2, "the storm must drive repeated compactions, got {ckpts}");
+    }
+    // recovery sees only the post-compaction segment (+ its tail): every
+    // acked op must still come back
+    let s2 = BServer::recover(0, 0, Box::new(MemData::new()), &dir, journal_cfg()).unwrap();
+    let p = client_for(&s2, Arc::new(RpcMetrics::new()));
+    for (path, body) in &acked {
+        let got = p
+            .get(path, 1 << 16)
+            .unwrap_or_else(|e| panic!("acked {path} lost across checkpoints: {e:?}"));
+        assert_eq!(&got, body, "{path} came back with different bytes after compaction");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shipped_frames_are_journaled_once_byte_identical() {
+    // Regression: the backup's replay used to route through the public
+    // mutation API, journaling every shipped record a second time
+    // (re-encoded) next to the `append_raw` copy — and unlink replay
+    // emitted an extra DropObject. The backup's journal must be a
+    // byte-identical copy of the primary's stream, nothing more.
+    let pdir = tdir("ship-p");
+    let bdir = tdir("ship-b");
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let primary = BServer::recover(0, 0, Box::new(MemData::new()), &pdir, journal_cfg()).unwrap();
+    let backup = BServer::recover(0, 0, Box::new(MemData::new()), &bdir, journal_cfg()).unwrap();
+    backup.enable_backup_role();
+    primary.set_backup(ChanTransport::new(backup.clone(), net, Arc::new(RpcMetrics::new())));
+
+    let p = client_for(&primary, Arc::new(RpcMetrics::new()));
+    for i in 0..16u32 {
+        p.put(&format!("/f{i}"), format!("body {i}").as_bytes()).unwrap();
+    }
+    // the record kinds whose replay used to double-journal
+    p.chmod("/f0", 0o600).unwrap();
+    p.rename("/f1", "/g1").unwrap();
+    p.unlink("/f2").unwrap();
+
+    let pj = std::fs::read(pdir.join("wal.0.log")).unwrap();
+    let bj = std::fs::read(bdir.join("wal.0.log")).unwrap();
+    assert_eq!(pj, bj, "backup journal must be byte-identical to the shipped stream");
+    let _ = std::fs::remove_dir_all(&pdir);
+    let _ = std::fs::remove_dir_all(&bdir);
+}
+
+#[test]
+fn backup_compacts_its_own_journal_on_the_ship_path() {
+    // Regression: the ship handler never ran the checkpoint policy, so a
+    // long-lived standby's journal grew without bound. The backup runs a
+    // tight checkpoint_every while the primary's stays at the default —
+    // compaction observed on the backup can only have come from the ship
+    // path.
+    let pdir = tdir("bc-p");
+    let bdir = tdir("bc-b");
+    let acked;
+    {
+        let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+        let primary =
+            BServer::recover(0, 0, Box::new(MemData::new()), &pdir, journal_cfg()).unwrap();
+        let bcfg = JournalConfig { checkpoint_every: 32, ..journal_cfg() };
+        let backup = BServer::recover(0, 0, Box::new(MemData::new()), &bdir, bcfg).unwrap();
+        backup.enable_backup_role();
+        primary
+            .set_backup(ChanTransport::new(backup.clone(), net, Arc::new(RpcMetrics::new())));
+
+        let p = client_for(&primary, Arc::new(RpcMetrics::new()));
+        acked = (0..48u32)
+            .map(|i| {
+                let (path, body) = (format!("/bc{i}"), format!("standby copy {i}").into_bytes());
+                p.put(&path, &body).unwrap();
+                (path, body)
+            })
+            .collect::<Vec<_>>();
+
+        let pstats = primary.fs.journal().unwrap().stats().checkpoints.load(Ordering::Relaxed);
+        let bstats = backup.fs.journal().unwrap().stats().checkpoints.load(Ordering::Relaxed);
+        assert_eq!(pstats, 0, "the primary's default policy must not have fired");
+        assert!(bstats >= 1, "the backup must compact its own journal, got {bstats}");
+    }
+    // the compacted standby journal alone still recovers everything
+    let s2 = BServer::recover(0, 0, Box::new(MemData::new()), &bdir, journal_cfg()).unwrap();
+    let p = client_for(&s2, Arc::new(RpcMetrics::new()));
+    for (path, body) in &acked {
+        let got = p
+            .get(path, 1 << 16)
+            .unwrap_or_else(|e| panic!("acked {path} lost in the compacted standby: {e:?}"));
+        assert_eq!(&got, body, "{path} diverged through backup compaction");
+    }
+    let _ = std::fs::remove_dir_all(&pdir);
+    let _ = std::fs::remove_dir_all(&bdir);
+}
+
+#[test]
+fn journal_ship_refused_without_backup_role() {
+    // Regression: JournalShip carries no credentials and bypasses every
+    // permission check — any client could mutate server state by shipping
+    // crafted frames. Only an explicitly enabled standby may accept it.
+    let s = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    match s.handle(Request::JournalShip { frames: Vec::new() }) {
+        Response::Err(FsError::PermissionDenied) => {}
+        other => panic!("expected PermissionDenied, got {other:?}"),
+    }
+    s.enable_backup_role();
+    match s.handle(Request::JournalShip { frames: Vec::new() }) {
+        Response::Unit => {}
+        other => panic!("expected Unit after enabling the role, got {other:?}"),
+    }
 }
 
 #[test]
