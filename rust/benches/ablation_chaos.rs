@@ -1,0 +1,157 @@
+//! Chaos ablation (DESIGN.md §11): what exactly-once stamping and
+//! self-healing replication cost and deliver under a lossy fabric.
+//!
+//! Part 1 — storm under chaos: a primary/warm-standby pair behind a
+//! seeded [`FaultyTransport`] (5% request drops, 5% reply drops, 5%
+//! duplicates, random delays). Mid-storm the primary is partitioned
+//! away; every mutation rides the stamped failover path. We record
+//! per-op latency (the failover blip shows up in the tail) and the
+//! dedup ledger counters — every hit is a double-apply that did not
+//! happen.
+//!
+//! Part 2 — mid-life catch-up: a fresh standby joins after the storm
+//! and pulls the whole journal through `JournalFetch`; we time it and
+//! report the volume moved.
+//!
+//! Results print as a table and land in `BENCH_chaos.json`.
+//!
+//! `cargo bench --bench ablation_chaos` (CHAOS_SEED sweeps the fault
+//! schedule).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::ClusterView;
+use buffetfs::metrics::RpcMetrics;
+use buffetfs::server::journal::JournalConfig;
+use buffetfs::server::BServer;
+use buffetfs::simnet::{LatencyModel, NetConfig};
+use buffetfs::store::data::MemData;
+use buffetfs::transport::chan::ChanTransport;
+use buffetfs::transport::faulty::{FaultConfig, FaultyTransport};
+use buffetfs::types::Credentials;
+
+const OPS: usize = 400;
+const PARTITION_AT: usize = OPS / 2;
+
+fn pct(sorted_us: &[u64], p: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted_us.len() as f64 - 1.0) * p / 100.0).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+fn main() {
+    let seed: u64 =
+        std::env::var("CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xB0FFE7);
+    let tag = std::process::id();
+    let pdir = std::env::temp_dir().join(format!("buffetfs-bench-chaos-p-{tag}"));
+    let bdir = std::env::temp_dir().join(format!("buffetfs-bench-chaos-b-{tag}"));
+    let sdir = std::env::temp_dir().join(format!("buffetfs-bench-chaos-s-{tag}"));
+    for d in [&pdir, &bdir, &sdir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    let cfg = JournalConfig { sync_data: false, ..JournalConfig::default() };
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+
+    // -- part 1: storm under chaos with a mid-storm partition -----------------
+    let primary = BServer::recover(0, 0, Box::new(MemData::new()), &pdir, cfg).expect("primary");
+    let backup = BServer::recover(0, 0, Box::new(MemData::new()), &bdir, cfg).expect("backup");
+    backup.enable_backup_role();
+    primary
+        .set_backup(ChanTransport::new(backup.clone(), net.clone(), Arc::new(RpcMetrics::new())));
+
+    let metrics = Arc::new(RpcMetrics::new());
+    let view = ClusterView::new(primary.fs.root_ino());
+    let faulty_primary = FaultyTransport::new(
+        ChanTransport::new(primary.clone(), net.clone(), metrics.clone()),
+        FaultConfig::chaos(seed),
+    );
+    view.add(0, 0, faulty_primary.clone());
+    view.register_standby(
+        0,
+        0,
+        FaultyTransport::new(
+            ChanTransport::new(backup.clone(), net.clone(), metrics.clone()),
+            FaultConfig::chaos(seed.wrapping_add(1)),
+        ),
+    );
+    let agent = buffetfs::agent::BAgent::new(1, view, metrics.clone());
+    let p = Buffet::process(agent, Credentials::root());
+
+    let t0 = Instant::now();
+    let mut lat_us: Vec<u64> = Vec::with_capacity(OPS);
+    let mut errors = 0u64;
+    for i in 0..OPS {
+        if i == PARTITION_AT {
+            // the crash: the primary link goes dark and stays dark
+            faulty_primary.set_partitioned(true);
+        }
+        let body = format!("chaos body {i}");
+        let op0 = Instant::now();
+        match p.put(&format!("/c{i}"), body.as_bytes()) {
+            Ok(()) => lat_us.push(op0.elapsed().as_micros() as u64),
+            Err(_) => errors += 1,
+        }
+    }
+    let storm_ms = t0.elapsed().as_millis();
+    lat_us.sort_unstable();
+    let (p50, p99, max) =
+        (pct(&lat_us, 50.0), pct(&lat_us, 99.0), lat_us.last().copied().unwrap_or(0));
+    let hits = primary.ledger.hits.load(Ordering::Relaxed)
+        + backup.ledger.hits.load(Ordering::Relaxed);
+    let misses = primary.ledger.misses.load(Ordering::Relaxed)
+        + backup.ledger.misses.load(Ordering::Relaxed);
+    let entries = backup.ledger.entries();
+
+    // -- part 2: a fresh standby joins mid-life and catches up ----------------
+    backup.enable_replication_source();
+    let spare = BServer::recover(0, 0, Box::new(MemData::new()), &sdir, cfg).expect("spare");
+    spare.enable_backup_role();
+    let bt: buffetfs::transport::SharedTransport =
+        ChanTransport::new(backup.clone(), net, Arc::new(RpcMetrics::new()));
+    let c0 = Instant::now();
+    let (_gen, _off, catchup_bytes, catchup_records) =
+        spare.catch_up_from(&bt).expect("catch-up");
+    let catchup_ms = c0.elapsed().as_millis();
+
+    println!("chaos storm: {OPS} puts, partition at #{PARTITION_AT}, seed {seed:#x}");
+    println!(
+        "  acked {} / errored {errors}; latency p50 {p50}us p99 {p99}us max {max}us \
+         ({storm_ms}ms total)",
+        lat_us.len()
+    );
+    println!(
+        "  faults injected: {} req drops, {} reply drops, {} dups, {} delays",
+        faulty_primary.stats.dropped_reqs.load(Ordering::Relaxed),
+        faulty_primary.stats.dropped_replies.load(Ordering::Relaxed),
+        faulty_primary.stats.duplicated.load(Ordering::Relaxed),
+        faulty_primary.stats.delayed.load(Ordering::Relaxed),
+    );
+    println!("  dedup ledger: {hits} hits (averted double-applies), {misses} misses, {entries} live entries");
+    println!("  failovers {} busy_retries {}", metrics.failovers(), metrics.busy_retries());
+    println!("  mid-life catch-up: {catchup_bytes} bytes / {catchup_records} records in {catchup_ms}ms");
+
+    let json = format!(
+        "{{\n  \"bench\": \"chaos\",\n  \"seed\": {seed},\n  \"ops\": {OPS},\n  \
+         \"acked\": {},\n  \"errors\": {errors},\n  \"blip_p50_us\": {p50},\n  \
+         \"blip_p99_us\": {p99},\n  \"blip_max_us\": {max},\n  \"storm_ms\": {storm_ms},\n  \
+         \"dedup_hits\": {hits},\n  \"dedup_misses\": {misses},\n  \
+         \"ledger_entries\": {entries},\n  \"failovers\": {},\n  \"busy_retries\": {},\n  \
+         \"catchup_bytes\": {catchup_bytes},\n  \"catchup_records\": {catchup_records},\n  \
+         \"catchup_ms\": {catchup_ms}\n}}\n",
+        lat_us.len(),
+        metrics.failovers(),
+        metrics.busy_retries(),
+    );
+    match std::fs::write("BENCH_chaos.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_chaos.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_chaos.json: {e}"),
+    }
+    for d in [&pdir, &bdir, &sdir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}

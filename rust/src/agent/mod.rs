@@ -77,14 +77,26 @@ const MAX_FAILOVER_RETRIES: usize = 3;
 /// does not re-arrive at the promoted standby in lockstep.
 const FAILOVER_BACKOFF_US: u64 = 200;
 
+/// Bound on `Busy` re-sends per request. A shed request was never
+/// executed (the admission cap rejected it before the handler ran), so
+/// re-sending is always safe — even for unstamped mutations.
+const MAX_BUSY_RETRIES: u32 = 8;
+
+/// Base backoff before a `Busy` re-send; doubled per attempt (capped)
+/// with a same-sized random jitter, so the storm that tripped the
+/// server's admission cap spreads out instead of re-arriving at once.
+const BUSY_BACKOFF_US: u64 = 100;
+
 /// Requests the failover path may blindly re-issue after a transport
-/// failure: side-effect-free reads, plus `Lease` (re-granting merely
-/// reports the standby's current epoch) and the deferred-open contexts
-/// reads carry (the server's open record is keyed by client+handle, so
-/// re-installing it is idempotent). Mutations are excluded — a request
-/// that died mid-flight may or may not have committed on the now
-/// unreachable primary, and blind re-execution could apply it twice;
-/// those surface the transport error for the caller to decide.
+/// failure *without* an exactly-once stamp: side-effect-free reads,
+/// plus `Lease` (re-granting merely reports the standby's current
+/// epoch) and the deferred-open contexts reads carry (the server's
+/// open record is keyed by client+handle, so re-installing it is
+/// idempotent). Everything else — the mutations — is retried too, but
+/// wrapped in a [`Request::Stamped`] envelope so the server's dedup
+/// ledger turns a might-have-committed re-send into the original
+/// reply (DESIGN.md §11); only when stamping was downgraded by an old
+/// server do mutations surface the transport error for the caller.
 fn retry_safe(req: &Request) -> bool {
     matches!(
         req,
@@ -129,6 +141,10 @@ pub struct AgentStats {
     pub stale_lease_retries: AtomicU64,
     /// Data-plane invalidation pushes received (§7).
     pub data_invalidations_rx: AtomicU64,
+    /// Mutations sent under the exactly-once `Stamped` envelope.
+    pub stamped_ops: AtomicU64,
+    /// Permanent downgrades to unstamped mutations (old-server fallback).
+    pub stamp_downgrades: AtomicU64,
 }
 
 /// Result of a path resolution: the leaf entry plus the perm-blob chain
@@ -154,6 +170,18 @@ pub struct BAgent {
     /// rejects [`Request::ResolvePath`] (protocol downgrade), or by
     /// [`BAgent::set_batched_resolve`] for ablation runs.
     batched: AtomicBool,
+    /// Exactly-once mutation envelopes enabled? Cleared permanently when
+    /// a server rejects [`Request::Stamped`] (protocol downgrade), or by
+    /// [`BAgent::set_stamping`] for ablation runs.
+    stamping: AtomicBool,
+    /// Client-unique mutation op-id allocator (starts at 1; 0 means
+    /// "nothing acknowledged yet" on the wire).
+    op_seq: AtomicU64,
+    /// Stamped ops currently in flight. The smallest outstanding id
+    /// minus one is the acknowledged low-water mark piggybacked on
+    /// every stamped request — the server prunes its dedup ledger
+    /// below it.
+    outstanding: Mutex<std::collections::BTreeSet<u64>>,
     /// Last server lease epoch observed per directory node (handle API).
     /// Absent = assume 0, which matches a server that never revoked; a
     /// wrong assumption costs one `StaleLease` round trip, never
@@ -179,6 +207,9 @@ impl BAgent {
             metrics,
             checker: RwLock::new(None),
             batched: AtomicBool::new(true),
+            stamping: AtomicBool::new(true),
+            op_seq: AtomicU64::new(0),
+            outstanding: Mutex::new(std::collections::BTreeSet::new()),
             leases: Mutex::new(HashMap::new()),
             stats: AgentStats::default(),
         })
@@ -242,22 +273,107 @@ impl BAgent {
 
     // -- failover-aware transport path ---------------------------------------
 
+    /// Toggle the exactly-once stamping of mutations (ablation: `false`
+    /// restores the surface-the-error-on-failover behaviour).
+    pub fn set_stamping(&self, on: bool) {
+        self.stamping.store(on, Ordering::Relaxed);
+    }
+
+    fn stamping_enabled(&self) -> bool {
+        self.stamping.load(Ordering::Relaxed)
+    }
+
+    fn downgrade_stamping(&self) {
+        if self.stamping.swap(false, Ordering::Relaxed) {
+            self.stats.stamp_downgrades.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Allocate the next stamped op id and register it in flight.
+    fn begin_op(&self) -> u64 {
+        let id = self.op_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        self.outstanding.lock().unwrap().insert(id);
+        id
+    }
+
+    /// The acknowledged low-water mark to piggyback while `op_id` is in
+    /// flight: every id below the smallest outstanding one has completed
+    /// client-side (its caller got an answer, so it will never be
+    /// retried) and the server may forget its cached reply.
+    fn acked_upto(&self) -> u64 {
+        let out = self.outstanding.lock().unwrap();
+        out.first().map_or_else(|| self.op_seq.load(Ordering::Relaxed), |min| min - 1)
+    }
+
+    /// Retire a stamped op id — the caller has its answer (Ok *or* Err:
+    /// once we surface an error the application never re-sends this id).
+    fn end_op(&self, op_id: u64) {
+        self.outstanding.lock().unwrap().remove(&op_id);
+    }
+
     /// Route `req` to the server owning `ino`, failing over on transport
     /// death. On [`FsError::Transport`] the agent promotes the host's
     /// registered warm standby in the [`ClusterView`] (the standby applied
     /// the identical journal stream, so every client-held `Ino` and lease
-    /// epoch survives — DESIGN.md §10); [`retry_safe`] requests are then
-    /// re-issued with capped, jittered exponential backoff, while
-    /// non-idempotent requests surface the error (the caller cannot know
-    /// whether the dead primary applied them).
+    /// epoch survives — DESIGN.md §10) and re-issues the request with
+    /// capped, jittered exponential backoff. [`retry_safe`] requests are
+    /// re-sent as-is; mutations are wrapped in a [`Request::Stamped`]
+    /// envelope whose once-allocated op id lets the server's dedup ledger
+    /// answer a might-have-committed re-send with the original reply
+    /// (DESIGN.md §11). Against an old server the envelope downgrades
+    /// stickily and mutations fall back to surfacing the error.
+    /// [`FsError::Busy`] (admission-shed, never executed) is always
+    /// re-sent, on its own bounded backoff schedule.
     fn call_ino(&self, ino: Ino, req: Request) -> FsResult<Response> {
-        let retryable = retry_safe(&req);
+        if retry_safe(&req) {
+            return self.call_ino_raw(ino, req, true);
+        }
+        if !self.stamping_enabled() {
+            return self.call_ino_raw(ino, req, false);
+        }
+        // Allocate the identity ONCE, outside the retry loop: every
+        // re-send (including across a failover) carries the same
+        // (client, op_id), which is exactly what makes dedup work.
+        let op_id = self.begin_op();
+        self.stats.stamped_ops.fetch_add(1, Ordering::Relaxed);
+        let stamped = Request::Stamped {
+            client: self.id,
+            op_id,
+            ack_upto: self.acked_upto(),
+            inner: Box::new(req.clone()),
+        };
+        let result = match self.call_ino_raw(ino, stamped, true) {
+            Err(FsError::Protocol(m)) if m.contains("bad request tag") => {
+                // Old server: it cannot decode the envelope at all, so
+                // the inner op was never attempted. Downgrade stickily
+                // and re-issue the plain (now non-retryable) mutation.
+                self.downgrade_stamping();
+                self.call_ino_raw(ino, req, false)
+            }
+            other => other,
+        };
+        self.end_op(op_id);
+        result
+    }
+
+    fn call_ino_raw(&self, ino: Ino, req: Request, retryable: bool) -> FsResult<Response> {
         let mut rng = crate::util::rng::XorShift::new(
             (self.id as u64) << 48 ^ ino.file ^ self.handle_seq.load(Ordering::Relaxed),
         );
-        for attempt in 0..=MAX_FAILOVER_RETRIES {
+        let mut busy = 0u32;
+        let mut attempt = 0;
+        loop {
             let e = match self.cluster.transport(ino)?.call(req.clone()) {
                 Err(FsError::Transport(m)) => FsError::Transport(m),
+                Err(FsError::Busy) if busy < MAX_BUSY_RETRIES => {
+                    // Shed at admission, never executed — safe to re-send
+                    // even unstamped. Does not consume failover attempts.
+                    busy += 1;
+                    self.metrics.record_busy_retry();
+                    let base = BUSY_BACKOFF_US << busy.min(6);
+                    std::thread::sleep(std::time::Duration::from_micros(base + rng.below(base)));
+                    continue;
+                }
                 other => return other,
             };
             if attempt == 0 {
@@ -273,8 +389,8 @@ impl BAgent {
             }
             let base = FAILOVER_BACKOFF_US << attempt;
             std::thread::sleep(std::time::Duration::from_micros(base + rng.below(base)));
+            attempt += 1;
         }
-        unreachable!("loop returns on its last iteration")
     }
 
     // -- permission leases (handle-first API) --------------------------------
@@ -1421,9 +1537,11 @@ impl DataTransport for BAgent {
         base_gen: u64,
         register: bool,
     ) -> FsResult<(u64, u64)> {
-        // Flushes are mutations: like the classic write path they never
-        // blind-retry across a failover (see `retry_safe`), so the flush
-        // binds to the current transport and surfaces any error.
+        // Flushes are mutations: the classic path below goes through
+        // `call_ino`, which stamps the flush for exactly-once retry
+        // across a failover. Only the pipelined fan-out binds to one
+        // transport and surfaces errors directly — its in-flight
+        // sub-batches are tied to a single connection's inflight table.
         let t = self.cluster.transport(h.ino)?;
         let ways = self.datapath.config().pipeline_ways;
         // Pipelined flush (§9): split a multi-extent flush into
@@ -1487,7 +1605,7 @@ impl DataTransport for BAgent {
             }
             return best.ok_or_else(|| FsError::Protocol("empty pipelined flush".into()));
         }
-        let resp = t.call(Request::WriteBatch {
+        let resp = self.call_ino(h.ino, Request::WriteBatch {
             ino: h.ino,
             segs: segs.into_iter().map(|(off, data)| WriteSeg { off, data }).collect(),
             base_gen,

@@ -22,6 +22,26 @@ use crate::transport::chan::{ChanNotify, ChanTransport};
 use crate::transport::SharedTransport;
 use crate::types::{ClientId, HostId, Ino, Version};
 
+/// Re-seeds replication after a failover consumed the standby. The view
+/// calls it synchronously inside [`ClusterView::promote`], right after
+/// the promoted transport is installed; returning a transport registers
+/// it as the host's fresh standby (self-healing replication,
+/// DESIGN.md §11). Implementations typically spin up a spare
+/// [`crate::server::BServer`], point [`BServer::catch_up_from`] at the
+/// new primary and finish with [`BServer::attach_backup_at`].
+pub trait Recruiter: Send + Sync {
+    fn reseed(&self, host: HostId, version: Version) -> Option<SharedTransport>;
+}
+
+impl<F> Recruiter for F
+where
+    F: Fn(HostId, Version) -> Option<SharedTransport> + Send + Sync,
+{
+    fn reseed(&self, host: HostId, version: Version) -> Option<SharedTransport> {
+        self(host, version)
+    }
+}
+
 /// The client-side host map: `(hostID, version) → transport`.
 /// Interior-mutable so failover can swap a dead primary's transport for
 /// its promoted standby while agents keep shared references to the view.
@@ -33,6 +53,9 @@ pub struct ClusterView {
     /// applied the identical journal stream), so every client-held Ino
     /// and lease survives promotion.
     standbys: RwLock<HashMap<HostId, (Version, SharedTransport)>>,
+    /// Optional re-seeder invoked after a promotion leaves the host
+    /// without a standby.
+    recruiter: RwLock<Option<Arc<dyn Recruiter>>>,
 }
 
 impl ClusterView {
@@ -41,7 +64,13 @@ impl ClusterView {
             root,
             transports: RwLock::new(HashMap::new()),
             standbys: RwLock::new(HashMap::new()),
+            recruiter: RwLock::new(None),
         }
+    }
+
+    /// Install the post-promotion re-seeder (see [`Recruiter`]).
+    pub fn set_recruiter(&self, r: Arc<dyn Recruiter>) {
+        *self.recruiter.write().unwrap() = Some(r);
     }
 
     pub fn add(&self, host: HostId, version: Version, t: SharedTransport) {
@@ -62,9 +91,22 @@ impl ClusterView {
     /// transport replaces the primary's in the map. Returns the new
     /// transport, or None when no standby is registered — the caller
     /// then has no better option than surfacing the transport error.
+    ///
+    /// When a [`Recruiter`] is installed it runs here, synchronously,
+    /// after the promotion is visible: the first thread to drive the
+    /// failover also restores the replication chain, so by the time its
+    /// retried op completes the host is protected again. A recruiter
+    /// that returns None (no spare available) leaves the host
+    /// standby-less, exactly as before.
     pub fn promote(&self, host: HostId) -> Option<SharedTransport> {
         let (version, t) = self.standbys.write().unwrap().remove(&host)?;
         self.transports.write().unwrap().insert(host, (version, Arc::clone(&t)));
+        let recruiter = self.recruiter.read().unwrap().clone();
+        if let Some(r) = recruiter {
+            if let Some(nt) = r.reseed(host, version) {
+                self.standbys.write().unwrap().insert(host, (version, nt));
+            }
+        }
         Some(t)
     }
 

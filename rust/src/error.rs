@@ -34,6 +34,10 @@ pub enum FsError {
     /// since bumped (another writer got in between): the client must
     /// drop its cached pages and retry once.
     StaleData,
+    /// The server's write-ahead journal is sticky-broken (wedged): the
+    /// mutation was refused because it could not be made durable. Reads
+    /// keep serving; the message carries the first append/fsync failure.
+    JournalFailed(String),
 }
 
 impl fmt::Display for FsError {
@@ -58,6 +62,7 @@ impl fmt::Display for FsError {
             FsError::StaleLease => write!(f, "stale permission lease (epoch bumped)"),
             FsError::TooManyOpenFiles => write!(f, "too many open files"),
             FsError::StaleData => write!(f, "stale data generation (concurrent writer)"),
+            FsError::JournalFailed(m) => write!(f, "journal failed (mutations refused): {m}"),
         }
     }
 }
@@ -87,6 +92,7 @@ impl FsError {
             FsError::StaleLease => (17, ""),
             FsError::TooManyOpenFiles => (18, ""),
             FsError::StaleData => (19, ""),
+            FsError::JournalFailed(m) => (20, m),
         }
     }
 
@@ -111,6 +117,7 @@ impl FsError {
             17 => FsError::StaleLease,
             18 => FsError::TooManyOpenFiles,
             19 => FsError::StaleData,
+            20 => FsError::JournalFailed(msg),
             other => FsError::Protocol(format!("unknown error code {other}")),
         }
     }
@@ -163,6 +170,7 @@ mod tests {
             FsError::StaleLease,
             FsError::TooManyOpenFiles,
             FsError::StaleData,
+            FsError::JournalFailed("wal torn".into()),
         ];
         for e in all {
             let (code, msg) = e.to_wire();

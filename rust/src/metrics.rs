@@ -88,6 +88,10 @@ pub struct RpcMetrics {
     /// Primary→standby promotions this client drove after a transport
     /// failure (each one swaps the host's transport in the ClusterView).
     failovers: AtomicU64,
+    /// Requests re-sent after the server shed them at admission
+    /// (`FsError::Busy`); shed requests never executed, so every retry
+    /// is safe and these measure overload pressure, not risk.
+    busy_retries: AtomicU64,
 }
 
 impl RpcMetrics {
@@ -251,6 +255,15 @@ impl RpcMetrics {
         self.failovers.load(Ordering::Relaxed)
     }
 
+    /// An admission-shed (`Busy`) request was re-sent after backoff.
+    pub fn record_busy_retry(&self) {
+        self.busy_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn busy_retries(&self) -> u64 {
+        self.busy_retries.load(Ordering::Relaxed)
+    }
+
     /// (p50, p90, p99) latency of one op in microseconds, if recorded.
     pub fn percentiles_us(&self, op: &str) -> Option<(f64, f64, f64)> {
         self.histogram(op).filter(|h| h.count() > 0).map(|h| {
@@ -327,6 +340,7 @@ impl RpcMetrics {
             &self.ooo_completions,
             &self.reconnects,
             &self.failovers,
+            &self.busy_retries,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -393,11 +407,12 @@ impl RpcMetrics {
                 d.max(),
             ));
         }
-        if self.reconnects() + self.failovers() > 0 {
+        if self.reconnects() + self.failovers() + self.busy_retries() > 0 {
             out.push_str(&format!(
-                "  recovery: reconnects={} failovers={}\n",
+                "  recovery: reconnects={} failovers={} busy_retries={}\n",
                 self.reconnects(),
                 self.failovers(),
+                self.busy_retries(),
             ));
         }
         out
@@ -552,12 +567,19 @@ mod tests {
         m.record_reconnect();
         m.record_failover();
         m.record_failover();
+        m.record_busy_retry();
+        m.record_busy_retry();
+        m.record_busy_retry();
         assert_eq!(m.reconnects(), 1);
         assert_eq!(m.failovers(), 2);
+        assert_eq!(m.busy_retries(), 3);
         let r = m.report();
-        assert!(r.contains("recovery: reconnects=1 failovers=2"), "report must surface recovery: {r}");
+        assert!(
+            r.contains("recovery: reconnects=1 failovers=2 busy_retries=3"),
+            "report must surface recovery: {r}"
+        );
         m.reset();
-        assert_eq!(m.reconnects() + m.failovers(), 0);
+        assert_eq!(m.reconnects() + m.failovers() + m.busy_retries(), 0);
         assert!(!m.report().contains("recovery:"), "zeroed counters stay out of the report");
     }
 

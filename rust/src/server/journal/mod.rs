@@ -39,7 +39,7 @@
 use std::fs::{File, OpenOptions};
 use std::io::Write as IoWrite;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
@@ -77,6 +77,15 @@ pub enum JournalRec {
     LeaseEpoch { file: FileId, epoch: u64 },
     /// Data-generation bump (concurrent-writer fencing).
     DataGen { file: FileId, gen: u64 },
+    /// Exactly-once dedup ledger entry: the encoded reply the server
+    /// sent for `(client, op_id)`. Journaled with the op's own records
+    /// so a recovered (or promoted) server still recognizes the retry
+    /// and answers the original reply instead of re-applying.
+    OpResult { client: u32, op_id: u64, reply: Vec<u8> },
+    /// A client's acknowledged low-water mark: every op id ≤ `upto`
+    /// completed client-side and will never be retried, so the ledger
+    /// entries below it are pruned (this is what bounds the ledger).
+    OpLowWater { client: u32, upto: u64 },
 }
 
 impl Wire for JournalRec {
@@ -172,6 +181,17 @@ impl Wire for JournalRec {
                 e.u64(*file);
                 e.u64(*gen);
             }
+            JournalRec::OpResult { client, op_id, reply } => {
+                e.u8(15);
+                e.u32(*client);
+                e.u64(*op_id);
+                e.bytes(reply);
+            }
+            JournalRec::OpLowWater { client, upto } => {
+                e.u8(16);
+                e.u32(*client);
+                e.u64(*upto);
+            }
         }
     }
 
@@ -213,6 +233,8 @@ impl Wire for JournalRec {
             12 => JournalRec::Xattr { file: d.u64()?, key: d.str()?, value: d.bytes()? },
             13 => JournalRec::LeaseEpoch { file: d.u64()?, epoch: d.u64()? },
             14 => JournalRec::DataGen { file: d.u64()?, gen: d.u64()? },
+            15 => JournalRec::OpResult { client: d.u32()?, op_id: d.u64()?, reply: d.bytes()? },
+            16 => JournalRec::OpLowWater { client: d.u32()?, upto: d.u64()? },
             t => return Err(FsError::Protocol(format!("bad journal record tag {t}"))),
         })
     }
@@ -253,7 +275,10 @@ impl JournalRec {
             JournalRec::Write { file, off, data } => fs.replay_write(*file, *off, data),
             JournalRec::Truncate { file, size } => fs.replay_truncate(*file, *size),
             JournalRec::Xattr { file, key, value } => fs.replay_xattr(*file, key, value.clone()),
-            JournalRec::LeaseEpoch { .. } | JournalRec::DataGen { .. } => Ok(()),
+            JournalRec::LeaseEpoch { .. }
+            | JournalRec::DataGen { .. }
+            | JournalRec::OpResult { .. }
+            | JournalRec::OpLowWater { .. } => Ok(()),
         };
     }
 }
@@ -362,6 +387,13 @@ pub struct JournalStats {
     pub shipped_bytes: AtomicU64,
     pub acked_bytes: AtomicU64,
     pub ship_failures: AtomicU64,
+    /// Raw journal bytes served to catching-up standbys (`JournalFetch`).
+    pub catchup_bytes: AtomicU64,
+    /// Journal records served to catching-up standbys.
+    pub catchup_records: AtomicU64,
+    /// Sticky-broken (see `Wal::broken`): every mutation is being
+    /// refused with [`FsError::JournalFailed`] while reads keep serving.
+    pub wedged: AtomicBool,
     /// Group-commit batch sizes (records covered per fsync).
     pub batch: Mutex<Histogram>,
 }
@@ -372,7 +404,8 @@ impl JournalStats {
         format!(
             "{{\"appends\":{},\"fsyncs\":{},\"replayed\":{},\"checkpoints\":{},\
              \"checkpoint_us\":{},\"truncated_bytes\":{},\"shipped_bytes\":{},\
-             \"acked_bytes\":{},\"ship_failures\":{},\"batch_mean\":{:.2},\"batch_max\":{}}}",
+             \"acked_bytes\":{},\"ship_failures\":{},\"catchup_bytes\":{},\
+             \"catchup_records\":{},\"wedged\":{},\"batch_mean\":{:.2},\"batch_max\":{}}}",
             self.appends.load(Ordering::Relaxed),
             self.fsyncs.load(Ordering::Relaxed),
             self.replayed.load(Ordering::Relaxed),
@@ -382,6 +415,9 @@ impl JournalStats {
             self.shipped_bytes.load(Ordering::Relaxed),
             self.acked_bytes.load(Ordering::Relaxed),
             self.ship_failures.load(Ordering::Relaxed),
+            self.catchup_bytes.load(Ordering::Relaxed),
+            self.catchup_records.load(Ordering::Relaxed),
+            self.wedged.load(Ordering::Relaxed),
             if batch.count() > 0 { batch.mean() } else { 0.0 },
             if batch.count() > 0 { batch.max() } else { 0 },
         )
@@ -490,6 +526,19 @@ impl Journal {
         self.backup.read().unwrap().is_some()
     }
 
+    /// Sticky-failure reason, if the journal is wedged (see `Wal::broken`).
+    pub fn wedged(&self) -> Option<String> {
+        self.wal.lock().unwrap().broken.clone()
+    }
+
+    /// Wedge the journal deliberately (fault injection: tests exercise
+    /// the mutations-refused / reads-keep-serving split without needing
+    /// a real disk failure).
+    pub fn force_wedge(&self, reason: &str) {
+        self.wal.lock().unwrap().broken = Some(reason.to_string());
+        self.stats.wedged.store(true, Ordering::Relaxed);
+    }
+
     /// Block every append while the returned guard lives (checkpoint
     /// snapshot+swap). An op that mutated state but has not appended
     /// yet parks here and resumes into the *new* segment, where the
@@ -512,6 +561,7 @@ impl Journal {
         }
         if let Err(e) = w.file.write_all(&framed) {
             w.broken = Some(e.to_string());
+            self.stats.wedged.store(true, Ordering::Relaxed);
             return;
         }
         w.appended += 1;
@@ -532,6 +582,7 @@ impl Journal {
         }
         if let Err(e) = w.file.write_all(frames) {
             w.broken = Some(e.to_string());
+            self.stats.wedged.store(true, Ordering::Relaxed);
             return;
         }
         w.appended += n;
@@ -548,13 +599,14 @@ impl Journal {
         let pending = {
             let mut w = self.wal.lock().unwrap();
             if let Some(e) = &w.broken {
-                return Err(FsError::Io(format!("journal broken: {e}")));
+                return Err(FsError::JournalFailed(e.clone()));
             }
             if w.unsynced > 0 {
                 if self.cfg.sync_data {
                     w.file.sync_data().map_err(|e| {
                         w.broken = Some(e.to_string());
-                        FsError::Io(format!("journal fsync: {e}"))
+                        self.stats.wedged.store(true, Ordering::Relaxed);
+                        FsError::JournalFailed(format!("fsync: {e}"))
                     })?;
                 }
                 self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
@@ -617,7 +669,7 @@ impl Journal {
         let _order = self.ship.lock().unwrap();
         let mut w = self.wal.lock().unwrap();
         if let Some(e) = &w.broken {
-            return Err(FsError::Io(format!("journal broken: {e}")));
+            return Err(FsError::JournalFailed(e.clone()));
         }
         let new_gen = w.gen + 1;
         let path = segment_path(&self.dir, new_gen);
@@ -643,7 +695,114 @@ impl Journal {
             .fetch_add(started.elapsed().as_micros() as u64, Ordering::Relaxed);
         Ok(())
     }
+
+    /// Serve one chunk of a standby's catch-up cursor: whole frames of
+    /// segment `gen` starting at byte `offset`, at most `max` bytes but
+    /// always at least one frame (progress guarantee). A generation
+    /// mismatch — the standby's cursor predates a checkpoint — resets
+    /// the cursor to the current segment's start; that is safe because
+    /// every post-checkpoint segment opens with a full snapshot of
+    /// server state. Returns `(gen, next_offset, frames, more)`.
+    pub fn fetch_chunk(&self, gen: u64, offset: u64, max: u32) -> FsResult<(u64, u64, Vec<u8>, bool)> {
+        let _order = self.ship.lock().unwrap();
+        self.fetch_chunk_locked(gen, offset, max)
+    }
+
+    /// `fetch_chunk` body; the caller holds the ship lock (which also
+    /// excludes a concurrent checkpoint's segment swap).
+    fn fetch_chunk_locked(&self, gen: u64, offset: u64, max: u32) -> FsResult<(u64, u64, Vec<u8>, bool)> {
+        let (cur_gen, broken) = {
+            let w = self.wal.lock().unwrap();
+            (w.gen, w.broken.clone())
+        };
+        if let Some(e) = broken {
+            return Err(FsError::JournalFailed(e));
+        }
+        let offset = if gen == cur_gen { offset } else { 0 };
+        let path = segment_path(&self.dir, cur_gen);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(FsError::Io(format!("read {}: {e}", path.display()))),
+        };
+        let end = bytes.len() as u64;
+        let start = offset.min(end) as usize;
+        let slice = &bytes[start..];
+        // largest whole-frame prefix within `max` — but never zero
+        // frames while one is available, or a frame larger than `max`
+        // would wedge the cursor forever
+        let mut pos = 0usize;
+        while slice.len() - pos >= 8 {
+            let len = u32::from_le_bytes(slice[pos..pos + 4].try_into().unwrap()) as usize;
+            if slice.len() - pos - 8 < len {
+                break; // unsynced torn tail: stop at the clean prefix
+            }
+            if pos > 0 && pos + 8 + len > max as usize {
+                break;
+            }
+            pos += 8 + len;
+            if pos >= max as usize {
+                break;
+            }
+        }
+        let chunk = slice[..pos].to_vec();
+        let next = start as u64 + pos as u64;
+        let more = pos > 0 && next < end;
+        self.stats.catchup_bytes.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+        self.stats.catchup_records.fetch_add(count_frames(&chunk), Ordering::Relaxed);
+        Ok((cur_gen, next, chunk, more))
+    }
+
+    /// Install `t` as the live backup after a standby caught up to
+    /// `(gen, offset)` via [`Journal::fetch_chunk`]. Holding the ship
+    /// lock across the whole handoff is the point: no commit can ship
+    /// (or slip past) while the residual frames — everything appended
+    /// after the standby's last fetch — are pushed, so the standby's
+    /// stream has no gap the moment it becomes the backup. The pending
+    /// ship buffer is cleared first: its frames are already in the file
+    /// and covered by the residual read, and re-shipping them on the
+    /// next commit would double-append them at the backup. Returns the
+    /// residual bytes shipped.
+    pub fn attach_backup_at(&self, t: SharedTransport, gen: u64, offset: u64) -> FsResult<u64> {
+        let _order = self.ship.lock().unwrap();
+        {
+            let mut w = self.wal.lock().unwrap();
+            if let Some(e) = &w.broken {
+                return Err(FsError::JournalFailed(e.clone()));
+            }
+            w.pending_ship.clear();
+        }
+        let (mut gen, mut offset) = (gen, offset);
+        let mut shipped = 0u64;
+        loop {
+            let (g, next, chunk, more) = self.fetch_chunk_locked(gen, offset, CATCHUP_CHUNK)?;
+            gen = g;
+            offset = next;
+            if !chunk.is_empty() {
+                let n = chunk.len() as u64;
+                shipped += n;
+                self.stats.shipped_bytes.fetch_add(n, Ordering::Relaxed);
+                match t.call(Request::JournalShip { frames: chunk }) {
+                    Ok(Response::Unit) => {
+                        self.stats.acked_bytes.fetch_add(n, Ordering::Relaxed);
+                    }
+                    Ok(Response::Err(e)) => return Err(e),
+                    Ok(_) => return Err(FsError::Protocol("bad JournalShip ack".into())),
+                    Err(e) => return Err(e),
+                }
+            }
+            if !more {
+                break;
+            }
+        }
+        *self.backup.write().unwrap() = Some(t);
+        Ok(shipped)
+    }
 }
+
+/// Catch-up chunk size: big enough to amortize the RPC, small enough
+/// that a chunk never trips the codec's payload cap.
+pub const CATCHUP_CHUNK: u32 = 1 << 20;
 
 /// Point `CURRENT` at `gen` crash-atomically (tmp + rename).
 fn write_current(dir: &Path, gen: u64) -> FsResult<()> {
@@ -694,6 +853,27 @@ pub fn ship(s: &BServer, req: Request) -> FsResult<Response> {
         s.maybe_checkpoint(&j)?;
     }
     Ok(Response::Unit)
+}
+
+/// The `JournalFetch` handler (primary side): serve a catching-up
+/// standby one chunk of the live journal. Like `JournalShip`, the op
+/// carries no credentials and exposes raw namespace state, so only a
+/// server explicitly enabled as a replication source
+/// ([`BServer::enable_replication_source`]) answers it.
+pub fn fetch(s: &BServer, req: Request) -> FsResult<Response> {
+    let (gen, offset, max_bytes) = match req {
+        Request::JournalFetch { gen, offset, max_bytes } => (gen, offset, max_bytes),
+        _ => return Err(super::ops::misrouted("journal_fetch")),
+    };
+    if !s.is_replication_source() {
+        return Err(FsError::PermissionDenied);
+    }
+    let j = s
+        .fs
+        .journal()
+        .ok_or_else(|| FsError::Invalid("server has no journal to fetch from".into()))?;
+    let (gen, offset, frames, more) = j.fetch_chunk(gen, offset, max_bytes.min(CATCHUP_CHUNK))?;
+    Ok(Response::JournalChunk { gen, offset, frames, more })
 }
 
 #[cfg(test)]
@@ -753,6 +933,8 @@ mod tests {
             JournalRec::Xattr { file: 2, key: "buffet.ino".into(), value: vec![9] },
             JournalRec::LeaseEpoch { file: 1, epoch: 3 },
             JournalRec::DataGen { file: 2, gen: 8 },
+            JournalRec::OpResult { client: 7, op_id: 42, reply: vec![8] },
+            JournalRec::OpLowWater { client: 7, upto: 41 },
         ]
     }
 
@@ -907,6 +1089,61 @@ mod tests {
         assert!(s.starts_with('{') && s.ends_with('}'));
         assert!(s.contains("\"appends\":1"));
         assert!(s.contains("\"fsyncs\":1"));
+        assert!(s.contains("\"wedged\":false"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wedged_journal_refuses_commits_distinctly_and_reports() {
+        let dir = tdir("wedge");
+        let (j, _) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        j.append(&sample_recs()[0]);
+        j.commit().unwrap();
+        j.force_wedge("disk on fire");
+        assert_eq!(j.wedged().as_deref(), Some("disk on fire"));
+        // appends become silent no-ops, commits fail with the distinct error
+        j.append(&sample_recs()[1]);
+        match j.commit() {
+            Err(FsError::JournalFailed(m)) => assert!(m.contains("disk on fire")),
+            other => panic!("wedged commit returned {other:?}"),
+        }
+        assert!(j.stats().json().contains("\"wedged\":true"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fetch_chunk_walks_whole_segment_frame_aligned() {
+        let dir = tdir("fetch");
+        let (j, _) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        let recs = sample_recs();
+        for r in &recs {
+            j.append(r);
+        }
+        j.commit().unwrap();
+        // pull with a tiny max: every chunk must be whole frames, the
+        // cursor must make progress, and the concatenation must equal
+        // the segment byte-for-byte
+        let (mut gen, mut off) = (0u64, 0u64);
+        let mut all = Vec::new();
+        loop {
+            let (g, next, chunk, more) = j.fetch_chunk(gen, off, 16).unwrap();
+            assert!(next > off || chunk.is_empty(), "cursor must advance");
+            let (_, clean) = decode_frames(&chunk);
+            assert_eq!(clean, chunk.len(), "chunks are whole frames");
+            all.extend_from_slice(&chunk);
+            gen = g;
+            off = next;
+            if !more {
+                break;
+            }
+        }
+        let (back, _) = decode_frames(&all);
+        assert_eq!(back, recs);
+        assert_eq!(all, std::fs::read(segment_path(&dir, 0)).unwrap());
+        // a stale generation resets the cursor to the current segment
+        let (g, next, chunk, _) = j.fetch_chunk(99, 12345, 1 << 20).unwrap();
+        assert_eq!(g, 0);
+        assert_eq!(next, chunk.len() as u64);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,190 @@
+//! The exactly-once dedup ledger (DESIGN.md §11).
+//!
+//! Failover makes mutations retryable only if a retry can never apply
+//! twice: the dead primary may have executed the op and lost the reply,
+//! and the standby — which had the op's journal frames shipped before
+//! the ack — would happily execute a blind re-send again. The ledger
+//! closes that hole: every stamped mutation's **encoded reply** is
+//! remembered under its `(client, op_id)` key, so a retry is answered
+//! from memory instead of re-dispatched.
+//!
+//! Bounds: the client piggybacks its acknowledged low-water mark
+//! (`ack_upto`) on every stamped request — op ids ≤ it have completed
+//! client-side and can never be retried, so their entries are pruned.
+//! A hard per-client cap backstops a client that stops acking (each
+//! agent has far fewer ops genuinely in flight than the cap, so an
+//! eviction can only hit an op nobody will retry).
+//!
+//! The ledger is journaled (`JournalRec::OpResult` / `OpLowWater`) and
+//! shipped with the op's own records, which is what makes it survive
+//! both recovery-replay and promotion.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::types::ClientId;
+
+/// Backstop on remembered replies per client. An agent's in-flight
+/// window (threads × failover retries) is orders of magnitude smaller;
+/// see module docs for why eviction beyond it is safe.
+const MAX_REPLIES_PER_CLIENT: usize = 1024;
+
+#[derive(Default)]
+struct ClientLedger {
+    /// Ids ≤ this are acknowledged: pruned, and a late retry of one is
+    /// a protocol violation (the client said it would never retry it).
+    low_water: u64,
+    /// op_id → encoded `Response` bytes, only for ops that succeeded
+    /// (error replies are deterministic to re-execute: the op did not
+    /// change state, so a retry either fails identically or — after a
+    /// failover replayed the journal — legitimately succeeds).
+    replies: BTreeMap<u64, Vec<u8>>,
+}
+
+/// Per-server dedup state; interior mutability so handlers share it.
+#[derive(Default)]
+pub struct DedupLedger {
+    clients: RwLock<HashMap<ClientId, ClientLedger>>,
+    /// Retries answered from the ledger (each one is a double-apply
+    /// that did not happen).
+    pub hits: AtomicU64,
+    /// Stamped mutations executed for the first time.
+    pub misses: AtomicU64,
+}
+
+impl DedupLedger {
+    /// The cached reply for `(client, op_id)`, if this op already ran.
+    /// `Err(())` means the id is below the client's acknowledged
+    /// low-water mark — a retry of it is a protocol violation. The unit
+    /// error is deliberate: the caller owns the wording of the protocol
+    /// error it surfaces.
+    #[allow(clippy::result_unit_err)]
+    pub fn lookup(&self, client: ClientId, op_id: u64) -> Result<Option<Vec<u8>>, ()> {
+        let clients = self.clients.read().unwrap();
+        let Some(c) = clients.get(&client) else { return Ok(None) };
+        if op_id <= c.low_water {
+            return Err(());
+        }
+        Ok(c.replies.get(&op_id).cloned())
+    }
+
+    /// Remember the encoded reply for a freshly-executed op.
+    pub fn record(&self, client: ClientId, op_id: u64, reply: Vec<u8>) {
+        let mut clients = self.clients.write().unwrap();
+        let c = clients.entry(client).or_default();
+        if op_id <= c.low_water {
+            return; // replay of an already-pruned op (recovery path)
+        }
+        c.replies.insert(op_id, reply);
+        while c.replies.len() > MAX_REPLIES_PER_CLIENT {
+            c.replies.pop_first();
+        }
+    }
+
+    /// Advance a client's acknowledged low-water mark, dropping every
+    /// reply at or below it. Returns true when the mark moved (the
+    /// caller journals the advance only then).
+    pub fn prune(&self, client: ClientId, upto: u64) -> bool {
+        if upto == 0 {
+            return false;
+        }
+        let mut clients = self.clients.write().unwrap();
+        let c = clients.entry(client).or_default();
+        if upto <= c.low_water {
+            return false;
+        }
+        c.low_water = upto;
+        // everything ≤ upto is acknowledged; split_off keeps > upto
+        c.replies = c.replies.split_off(&(upto + 1));
+        true
+    }
+
+    /// Ledger entries still held (all clients).
+    pub fn entries(&self) -> usize {
+        self.clients.read().unwrap().values().map(|c| c.replies.len()).sum()
+    }
+
+    /// Snapshot for a checkpoint: the low-water marks plus every
+    /// retained reply, as journal records.
+    pub fn snapshot_records(&self) -> Vec<crate::server::journal::JournalRec> {
+        use crate::server::journal::JournalRec;
+        let clients = self.clients.read().unwrap();
+        let mut out = Vec::new();
+        for (&client, c) in clients.iter() {
+            if c.low_water > 0 {
+                out.push(JournalRec::OpLowWater { client, upto: c.low_water });
+            }
+            for (&op_id, reply) in &c.replies {
+                out.push(JournalRec::OpResult { client, op_id, reply: reply.clone() });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_lookup_prune_cycle() {
+        let l = DedupLedger::default();
+        assert_eq!(l.lookup(1, 5), Ok(None));
+        l.record(1, 5, vec![0xaa]);
+        assert_eq!(l.lookup(1, 5), Ok(Some(vec![0xaa])));
+        assert_eq!(l.entries(), 1);
+        assert!(l.prune(1, 5));
+        assert!(!l.prune(1, 5), "idempotent prune must not re-journal");
+        assert_eq!(l.entries(), 0);
+        // a retry below the low-water mark is a protocol violation
+        assert_eq!(l.lookup(1, 5), Err(()));
+        assert_eq!(l.lookup(1, 6), Ok(None));
+    }
+
+    #[test]
+    fn prune_keeps_unacknowledged_tail() {
+        let l = DedupLedger::default();
+        for id in 1..=10 {
+            l.record(2, id, vec![id as u8]);
+        }
+        assert!(l.prune(2, 7));
+        assert_eq!(l.entries(), 3);
+        assert_eq!(l.lookup(2, 8), Ok(Some(vec![8])));
+        assert_eq!(l.lookup(2, 3), Err(()));
+    }
+
+    #[test]
+    fn per_client_cap_evicts_oldest() {
+        let l = DedupLedger::default();
+        for id in 1..=(MAX_REPLIES_PER_CLIENT as u64 + 8) {
+            l.record(3, id, vec![]);
+        }
+        assert_eq!(l.entries(), MAX_REPLIES_PER_CLIENT);
+        assert_eq!(l.lookup(3, 1), Ok(None), "oldest evicted");
+        assert!(l.lookup(3, MAX_REPLIES_PER_CLIENT as u64 + 8).unwrap().is_some());
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_records() {
+        let l = DedupLedger::default();
+        l.record(4, 9, vec![1, 2]);
+        l.prune(4, 8);
+        let recs = l.snapshot_records();
+        assert_eq!(recs.len(), 2);
+        let l2 = DedupLedger::default();
+        for r in recs {
+            match r {
+                crate::server::journal::JournalRec::OpResult { client, op_id, reply } => {
+                    l2.record(client, op_id, reply)
+                }
+                crate::server::journal::JournalRec::OpLowWater { client, upto } => {
+                    l2.prune(client, upto);
+                }
+                other => panic!("unexpected record {other:?}"),
+            }
+        }
+        assert_eq!(l2.lookup(4, 9), Ok(Some(vec![1, 2])));
+        assert_eq!(l2.lookup(4, 8), Err(()));
+    }
+}

@@ -20,6 +20,7 @@
 //! the handlers compose.
 
 pub mod journal;
+pub mod ledger;
 pub mod locks;
 pub mod openlist;
 pub mod ops;
@@ -117,6 +118,12 @@ pub struct BServer {
     /// permission check, so the handler refuses frames unless the
     /// operator explicitly enabled the role (cluster bootstrap).
     backup_role: AtomicBool,
+    /// True when this server serves its journal to catching-up standbys
+    /// (`JournalFetch`): same trust model as `backup_role` — the raw
+    /// journal exposes the whole namespace, so the role is opt-in.
+    replication_source: AtomicBool,
+    /// Exactly-once dedup ledger for stamped mutations (DESIGN.md §11).
+    pub ledger: ledger::DedupLedger,
     pub stats: ServerStats,
 }
 
@@ -139,6 +146,8 @@ impl BServer {
             seq: AtomicU64::new(1),
             placement,
             backup_role: AtomicBool::new(false),
+            replication_source: AtomicBool::new(false),
+            ledger: ledger::DedupLedger::default(),
             stats: ServerStats::default(),
         })
     }
@@ -191,6 +200,12 @@ impl BServer {
                 let e = g.entry(*file).or_insert(0);
                 *e = (*e).max(*gen);
             }
+            JournalRec::OpResult { client, op_id, reply } => {
+                self.ledger.record(*client, *op_id, reply.clone());
+            }
+            JournalRec::OpLowWater { client, upto } => {
+                self.ledger.prune(*client, *upto);
+            }
             other => other.replay(&self.fs),
         }
     }
@@ -212,6 +227,86 @@ impl BServer {
 
     pub fn is_backup_role(&self) -> bool {
         self.backup_role.load(Ordering::Relaxed)
+    }
+
+    /// Allow catching-up standbys to pull this server's journal via
+    /// `JournalFetch` (cluster bootstrap; same trust model as
+    /// [`BServer::enable_backup_role`]).
+    pub fn enable_replication_source(&self) {
+        self.replication_source.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_replication_source(&self) -> bool {
+        self.replication_source.load(Ordering::Relaxed)
+    }
+
+    /// Standby side of the self-healing protocol: pull the primary's
+    /// whole journal through `primary` (chunked `JournalFetch`), apply
+    /// every record, and append the raw frames byte-identical to our own
+    /// journal — exactly what the `JournalShip` path does, so a standby
+    /// seeded this way is indistinguishable from one that was attached
+    /// at birth. Returns `(gen, offset, bytes, records)`: the cursor to
+    /// hand to [`BServer::attach_backup_at`] on the primary plus the
+    /// volume pulled. Requires our backup role to be enabled (we are
+    /// about to accept shipped frames).
+    pub fn catch_up_from(&self, primary: &SharedTransport) -> FsResult<(u64, u64, u64, u64)> {
+        if !self.is_backup_role() {
+            return Err(FsError::PermissionDenied);
+        }
+        let (mut gen, mut offset) = (0u64, 0u64);
+        let (mut bytes, mut records) = (0u64, 0u64);
+        loop {
+            let resp = primary.call(Request::JournalFetch {
+                gen,
+                offset,
+                max_bytes: journal::CATCHUP_CHUNK,
+            })?;
+            let (g, next, frames, more) = match resp {
+                Response::JournalChunk { gen, offset, frames, more } => {
+                    (gen, offset, frames, more)
+                }
+                other => {
+                    return Err(FsError::Protocol(format!("journal fetch returned {other:?}")))
+                }
+            };
+            gen = g;
+            offset = next;
+            if !frames.is_empty() {
+                let (recs, clean) = journal::decode_frames(&frames);
+                if clean != frames.len() {
+                    return Err(FsError::Protocol(format!(
+                        "corrupt catch-up chunk: {} of {} bytes decodable",
+                        clean,
+                        frames.len()
+                    )));
+                }
+                for rec in &recs {
+                    self.apply_journal_rec(rec);
+                }
+                bytes += frames.len() as u64;
+                records += recs.len() as u64;
+                if let Some(j) = self.fs.journal() {
+                    j.append_raw(&frames);
+                    j.commit()?;
+                    self.maybe_checkpoint(&j)?;
+                }
+            }
+            if !more {
+                return Ok((gen, offset, bytes, records));
+            }
+        }
+    }
+
+    /// Primary side of the self-healing protocol: after a standby caught
+    /// up to `(gen, offset)`, ship it the residual frames and install it
+    /// as the live backup atomically w.r.t. commits (see
+    /// [`Journal::attach_backup_at`]). Returns residual bytes shipped.
+    pub fn attach_backup_at(&self, t: SharedTransport, gen: u64, offset: u64) -> FsResult<u64> {
+        let j = self
+            .fs
+            .journal()
+            .ok_or_else(|| FsError::Invalid("server has no journal to replicate".into()))?;
+        j.attach_backup_at(t, gen, offset)
     }
 
     /// Checkpoint when the live segment has outgrown the configured
@@ -239,6 +334,7 @@ impl BServer {
                 recs.push(JournalRec::DataGen { file: *file, gen: *gen });
             }
         }
+        recs.extend(self.ledger.snapshot_records());
         j.checkpoint(&quiesced, &recs)
     }
 

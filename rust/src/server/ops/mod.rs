@@ -29,9 +29,13 @@ pub mod namespace;
 pub mod perm;
 pub mod relative;
 
-use crate::error::FsResult;
+use std::sync::atomic::Ordering;
+
+use crate::codec::Wire;
+use crate::error::{FsError, FsResult};
 use crate::wire::{Request, Response};
 
+use super::journal::JournalRec;
 use super::BServer;
 
 /// One request handler. Handlers destructure exactly one variant.
@@ -75,6 +79,8 @@ fn index(req: &Request) -> usize {
         Request::ReadBatch { .. } => 32,
         Request::WriteBatch { .. } => 33,
         Request::JournalShip { .. } => 34,
+        Request::Stamped { .. } => 35,
+        Request::JournalFetch { .. } => 36,
     }
 }
 
@@ -84,6 +90,9 @@ fn index(req: &Request) -> usize {
 /// included because O_TRUNC/deferred-create paths mutate; `commit` is
 /// a no-op when the handler appended nothing.
 fn is_mutating(req: &Request) -> bool {
+    if let Request::Stamped { inner, .. } = req {
+        return is_mutating(inner);
+    }
     matches!(
         req,
         Request::Write { .. }
@@ -112,7 +121,7 @@ fn is_mutating(req: &Request) -> bool {
 }
 
 /// The handler table, ordered by wire tag (same order as [`index`]).
-static HANDLERS: [Handler; 35] = [
+static HANDLERS: [Handler; 37] = [
     meta::lookup,              // 0
     meta::read_dir,            // 1
     meta::get_attr,            // 2
@@ -148,7 +157,70 @@ static HANDLERS: [Handler; 35] = [
     file::read_batch,          // 32
     file::write_batch,         // 33
     super::journal::ship,      // 34
+    stamped,                   // 35
+    super::journal::fetch,     // 36
 ];
+
+/// The exactly-once envelope handler (DESIGN.md §11). Unwraps a
+/// [`Request::Stamped`], advances the client's acknowledged low-water
+/// mark, and consults the dedup ledger before running the inner op:
+/// a retry of an op this server (or the primary whose journal it
+/// replayed) already executed is answered with the **cached original
+/// reply** — never re-applied. Only successful replies are cached;
+/// error replies left no state change, so re-executing the op is safe
+/// and lets a retry succeed after a failover replayed the journal.
+fn stamped(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Stamped { client, op_id, ack_upto, inner } = req else {
+        return Err(misrouted("stamped"));
+    };
+    let inner = *inner;
+    // no nesting games: the envelope wraps exactly one client op
+    if matches!(
+        inner,
+        Request::Stamped { .. } | Request::JournalShip { .. } | Request::JournalFetch { .. }
+    ) {
+        return Err(FsError::Protocol("stamped envelope cannot nest replication ops".into()));
+    }
+    // journal the low-water advance only when it moved (once per ack,
+    // not once per request)
+    if s.ledger.prune(client, ack_upto) {
+        if let Some(j) = s.fs.journal() {
+            j.append(&JournalRec::OpLowWater { client, upto: ack_upto });
+        }
+    }
+    if !is_mutating(&inner) {
+        // read-only ops wrapped by an over-eager client: no dedup needed
+        return HANDLERS[index(&inner)](s, inner);
+    }
+    // a wedged journal cannot make the op (or its ledger entry) durable:
+    // refuse the mutation distinctly, even on the dedup-hit path — the
+    // cached reply's op may itself still be in the unsynced tail
+    if let Some(j) = s.fs.journal() {
+        if let Some(reason) = j.wedged() {
+            return Err(FsError::JournalFailed(reason));
+        }
+    }
+    match s.ledger.lookup(client, op_id) {
+        Err(()) => {
+            return Err(FsError::Protocol(format!(
+                "op {op_id} of client {client} retried below its acknowledged low-water mark"
+            )))
+        }
+        Ok(Some(reply)) => {
+            s.ledger.hits.fetch_add(1, Ordering::Relaxed);
+            return Response::from_bytes(&reply);
+        }
+        Ok(None) => {}
+    }
+    s.ledger.misses.fetch_add(1, Ordering::Relaxed);
+    let resp = HANDLERS[index(&inner)](s, inner)?;
+    let reply = resp.to_bytes();
+    s.ledger.record(client, op_id, reply.clone());
+    if let Some(j) = s.fs.journal() {
+        j.append(&JournalRec::OpResult { client, op_id, reply });
+    }
+    Ok(resp)
+}
 
 /// Route one request to its handler. For mutating requests that
 /// succeeded, drive the journal commit point (group fsync + backup
@@ -226,6 +298,13 @@ mod tests {
             Request::ReadBatch { ino, ranges: vec![], known_gen: crate::wire::NO_GEN, client: 1, register: false, open_ctx: None },
             Request::WriteBatch { ino, segs: vec![], base_gen: crate::wire::NO_GEN, client: 1, register: false, open_ctx: None },
             Request::JournalShip { frames: vec![] },
+            Request::Stamped {
+                client: 1,
+                op_id: 1,
+                ack_upto: 0,
+                inner: Box::new(Request::Chmod { ino, mode: 0o700, cred: cred() }),
+            },
+            Request::JournalFetch { gen: 0, offset: 0, max_bytes: 1 << 16 },
         ];
         assert_eq!(all.len(), HANDLERS.len(), "one sample per table entry");
         for (i, req) in all.into_iter().enumerate() {

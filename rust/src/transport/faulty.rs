@@ -1,0 +1,231 @@
+//! Deterministic seeded fault injection for any [`Transport`].
+//!
+//! The chaos suite (tests/failure_injection.rs, DESIGN.md §11) wraps
+//! client transports in a [`FaultyTransport`] that — driven by one
+//! seeded [`XorShift`] stream, so every run with the same seed makes
+//! the identical decisions — injects the failures a real fabric
+//! produces:
+//!
+//! * **request drop** — the RPC never reaches the server; the caller
+//!   sees a transport error (the benign retry case).
+//! * **reply drop** — the RPC *executes* but its reply is lost; the
+//!   caller sees a transport error (the evil case exactly-once
+//!   stamping exists for: a blind re-send would apply twice).
+//! * **duplicate** — the RPC is delivered twice back-to-back (a
+//!   retransmit racing its original); the first delivery's reply is
+//!   discarded.
+//! * **delay** — a random pre-send stall, which re-orders requests
+//!   across concurrent threads.
+//! * **partition** — a toggle that fails every call until lifted
+//!   (crashed or unreachable server).
+//!
+//! Only [`Transport::call`] is overridden: the default `submit`/`wait`
+//! route through `call`, so pipelined callers degrade to lockstep under
+//! chaos and every fault path is exercised through one choke point.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{FsError, FsResult};
+use crate::transport::{SharedTransport, Transport};
+use crate::util::rng::XorShift;
+use crate::wire::{Request, Response};
+
+/// Per-fault probabilities (each rolled independently per call).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultConfig {
+    /// P(request dropped before the server sees it).
+    pub drop_req: f64,
+    /// P(request executed, reply lost).
+    pub drop_reply: f64,
+    /// P(request delivered twice).
+    pub duplicate: f64,
+    /// P(random stall before sending).
+    pub delay: f64,
+    /// Stall upper bound in microseconds (uniform in `1..=delay_us`).
+    pub delay_us: u64,
+    /// Seed for the decision stream.
+    pub seed: u64,
+}
+
+impl FaultConfig {
+    /// The standard chaos mix: 5% of each failure, a quarter of calls
+    /// delayed up to 500µs (enough to reorder across threads).
+    pub fn chaos(seed: u64) -> FaultConfig {
+        FaultConfig {
+            drop_req: 0.05,
+            drop_reply: 0.05,
+            duplicate: 0.05,
+            delay: 0.25,
+            delay_us: 500,
+            seed,
+        }
+    }
+}
+
+/// What the wrapper actually injected (asserted by the chaos suite to
+/// prove the run exercised every fault class).
+#[derive(Default)]
+pub struct FaultStats {
+    pub dropped_reqs: AtomicU64,
+    pub dropped_replies: AtomicU64,
+    pub duplicated: AtomicU64,
+    pub delayed: AtomicU64,
+}
+
+/// Seeded fault-injecting wrapper around another transport.
+pub struct FaultyTransport {
+    inner: SharedTransport,
+    cfg: FaultConfig,
+    rng: Mutex<XorShift>,
+    partitioned: AtomicBool,
+    pub stats: FaultStats,
+}
+
+impl FaultyTransport {
+    pub fn new(inner: SharedTransport, cfg: FaultConfig) -> Arc<FaultyTransport> {
+        Arc::new(FaultyTransport {
+            inner,
+            cfg,
+            rng: Mutex::new(XorShift::new(cfg.seed | 1)),
+            partitioned: AtomicBool::new(false),
+            stats: FaultStats::default(),
+        })
+    }
+
+    /// Sever (or restore) the link: while partitioned every call fails
+    /// without reaching the server.
+    pub fn set_partitioned(&self, cut: bool) {
+        self.partitioned.store(cut, Ordering::Relaxed);
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn call(&self, req: Request) -> FsResult<Response> {
+        if self.partitioned.load(Ordering::Relaxed) {
+            return Err(FsError::Transport("injected partition".into()));
+        }
+        // Draw every decision for this call in one locked block so the
+        // per-seed decision sequence is a pure function of call order.
+        let (drop_req, duplicate, delay_us, drop_reply) = {
+            let mut rng = self.rng.lock().unwrap();
+            (
+                rng.f64() < self.cfg.drop_req,
+                rng.f64() < self.cfg.duplicate,
+                if rng.f64() < self.cfg.delay {
+                    1 + rng.below(self.cfg.delay_us.max(1))
+                } else {
+                    0
+                },
+                rng.f64() < self.cfg.drop_reply,
+            )
+        };
+        if delay_us > 0 {
+            self.stats.delayed.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_micros(delay_us));
+        }
+        if drop_req {
+            self.stats.dropped_reqs.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::Transport("injected request drop".into()));
+        }
+        if duplicate {
+            // A retransmit racing its original: the server sees the
+            // request twice; the first delivery's reply is discarded.
+            self.stats.duplicated.fetch_add(1, Ordering::Relaxed);
+            let _ = self.inner.call(req.clone());
+        }
+        if drop_reply {
+            // The evil case: the op executes, the ack dies on the way
+            // back. Without exactly-once stamping a retry applies twice.
+            let _ = self.inner.call(req);
+            self.stats.dropped_replies.fetch_add(1, Ordering::Relaxed);
+            return Err(FsError::Transport("injected reply drop".into()));
+        }
+        self.inner.call(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::Service;
+
+    /// Echo service: answers every request with `Response::Unit` and
+    /// counts deliveries.
+    struct Counting(AtomicU64);
+    impl Service for Counting {
+        fn handle(&self, _req: Request) -> Response {
+            self.0.fetch_add(1, Ordering::Relaxed);
+            Response::Unit
+        }
+    }
+
+    struct Direct(Arc<Counting>);
+    impl Transport for Direct {
+        fn call(&self, req: Request) -> FsResult<Response> {
+            Ok(self.0.handle(req))
+        }
+    }
+
+    fn statfs() -> Request {
+        Request::Statfs { host: 0 }
+    }
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let mk = |seed| {
+            let svc = Arc::new(Counting(AtomicU64::new(0)));
+            let t = FaultyTransport::new(Arc::new(Direct(svc.clone())), FaultConfig::chaos(seed));
+            let outcomes: Vec<bool> = (0..200).map(|_| t.call(statfs()).is_ok()).collect();
+            (outcomes, svc.0.load(Ordering::Relaxed))
+        };
+        let (a, na) = mk(42);
+        let (b, nb) = mk(42);
+        let (c, _) = mk(43);
+        assert_eq!(a, b, "same seed must replay the same fault schedule");
+        assert_eq!(na, nb);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn chaos_mix_injects_every_fault_class() {
+        let svc = Arc::new(Counting(AtomicU64::new(0)));
+        let t = FaultyTransport::new(Arc::new(Direct(svc.clone())), FaultConfig::chaos(7));
+        let mut failures = 0u64;
+        for _ in 0..2000 {
+            if t.call(statfs()).is_err() {
+                failures += 1;
+            }
+        }
+        assert!(t.stats.dropped_reqs.load(Ordering::Relaxed) > 0);
+        assert!(t.stats.dropped_replies.load(Ordering::Relaxed) > 0);
+        assert!(t.stats.duplicated.load(Ordering::Relaxed) > 0);
+        assert!(t.stats.delayed.load(Ordering::Relaxed) > 0);
+        assert_eq!(
+            failures,
+            t.stats.dropped_reqs.load(Ordering::Relaxed)
+                + t.stats.dropped_replies.load(Ordering::Relaxed),
+            "every failure must be an injected one"
+        );
+        // reply drops and duplicates still executed server-side
+        let delivered = svc.0.load(Ordering::Relaxed);
+        assert!(
+            delivered >= 2000 - t.stats.dropped_reqs.load(Ordering::Relaxed),
+            "only request drops may reduce deliveries: {delivered}"
+        );
+    }
+
+    #[test]
+    fn partition_fails_everything_until_lifted() {
+        let svc = Arc::new(Counting(AtomicU64::new(0)));
+        let t = FaultyTransport::new(Arc::new(Direct(svc.clone())), FaultConfig::default());
+        assert!(t.call(statfs()).is_ok());
+        t.set_partitioned(true);
+        assert!(t.call(statfs()).is_err());
+        assert!(t.call(statfs()).is_err());
+        t.set_partitioned(false);
+        assert!(t.call(statfs()).is_ok());
+        assert_eq!(svc.0.load(Ordering::Relaxed), 2, "partitioned calls never reach the server");
+    }
+}

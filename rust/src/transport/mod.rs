@@ -9,9 +9,13 @@
 //! * [`mux`] — the pipelined multiplexed engine both transports share:
 //!   request-id frame headers, the client in-flight table, and the
 //!   server-side bounded admission gate (DESIGN.md §9).
+//! * [`faulty`] — deterministic seeded fault injection wrapped around any
+//!   transport: drops, duplicates, delays and partitions for the chaos
+//!   suite (DESIGN.md §11).
 
 pub mod capacity;
 pub mod chan;
+pub mod faulty;
 pub mod mux;
 pub mod tcp;
 

@@ -179,6 +179,25 @@ pub enum Request {
     /// its own journal, fsyncs, and answers [`Response::Unit`] — that
     /// ack is the primary's past-the-backup commit point.
     JournalShip { frames: Vec<u8> },
+    /// Exactly-once envelope around a mutating request: `(client, op_id)`
+    /// names the operation uniquely for this client, so a server that
+    /// already executed it (the reply was lost, or a failover re-sent it
+    /// to the standby that had the journal shipped) answers the cached
+    /// original reply from its dedup ledger instead of applying twice.
+    /// `ack_upto` is the client's acknowledged low-water mark: every op
+    /// id ≤ it completed at the client and will never be retried, so the
+    /// server may prune those ledger entries. Negotiated by the sticky
+    /// downgrade machinery: an old server rejects the unknown tag with a
+    /// protocol error and the agent permanently falls back to plain
+    /// (non-retryable) mutations, exactly like `ResolvePath`.
+    Stamped { client: ClientId, op_id: u64, ack_upto: u64, inner: Box<Request> },
+    /// Standby catch-up: read a chunk of the primary's write-ahead
+    /// journal starting at `(gen, offset)`. The primary answers
+    /// [`Response::JournalChunk`] with whole frames (≤ `max_bytes`, but
+    /// always at least one frame); a generation mismatch resets the
+    /// cursor to the current segment's start — safe because every
+    /// segment opens with a full checkpoint snapshot of server state.
+    JournalFetch { gen: u64, offset: u64, max_bytes: u32 },
 }
 
 /// One directory listing returned by a [`Request::ResolvePath`] walk:
@@ -226,6 +245,10 @@ pub enum Response {
     /// of a small file costs zero data RPCs. (The classic [`Response::Opened`]
     /// stays untouched for the Lustre-DoM baseline.)
     OpenedInline { attr: Attr, data_gen: u64, data: Option<Vec<u8>> },
+    /// Reply to [`Request::JournalFetch`]: raw journal frames from the
+    /// primary's segment `gen`, ending at byte `offset` (the standby's
+    /// next cursor). `more` = the segment has further frames to pull.
+    JournalChunk { gen: u64, offset: u64, frames: Vec<u8>, more: bool },
 }
 
 /// Server→client push messages (the §3.4 consistency protocol).
@@ -288,18 +311,23 @@ impl Request {
             Request::ReadBatch { .. } => "read",
             Request::WriteBatch { .. } => "write",
             Request::JournalShip { .. } => "replicate",
+            Request::Stamped { inner, .. } => inner.op(),
+            Request::JournalFetch { .. } => "replicate",
         }
     }
 
     /// Metadata op (vs data op)? Used by the §2.1 motivation analyzer.
     pub fn is_metadata(&self) -> bool {
-        !matches!(
-            self,
-            Request::Read { .. }
-                | Request::Write { .. }
-                | Request::ReadBatch { .. }
-                | Request::WriteBatch { .. }
-        )
+        match self {
+            Request::Stamped { inner, .. } => inner.is_metadata(),
+            _ => !matches!(
+                self,
+                Request::Read { .. }
+                    | Request::Write { .. }
+                    | Request::ReadBatch { .. }
+                    | Request::WriteBatch { .. }
+            ),
+        }
     }
 
     /// Approximate payload size for the bandwidth model.
@@ -314,6 +342,7 @@ impl Request {
                 64 + segs.iter().map(|s| 12 + s.data.len()).sum::<usize>()
             }
             Request::JournalShip { frames } => 64 + frames.len(),
+            Request::Stamped { inner, .. } => 24 + inner.wire_size(),
             _ => 64,
         }
     }
@@ -332,6 +361,7 @@ impl Response {
                 32 + segs.iter().map(|s| 4 + s.len()).sum::<usize>()
             }
             Response::OpenedInline { data, .. } => 64 + data.as_ref().map_or(0, |d| d.len()),
+            Response::JournalChunk { frames, .. } => 32 + frames.len(),
             _ => 32,
         }
     }
@@ -666,6 +696,19 @@ impl Wire for Request {
                 tagged!(e, 34);
                 e.bytes(frames);
             }
+            Request::Stamped { client, op_id, ack_upto, inner } => {
+                tagged!(e, 35);
+                e.u32(*client);
+                e.u64(*op_id);
+                e.u64(*ack_upto);
+                inner.enc(e);
+            }
+            Request::JournalFetch { gen, offset, max_bytes } => {
+                tagged!(e, 36);
+                e.u64(*gen);
+                e.u64(*offset);
+                e.u32(*max_bytes);
+            }
         }
     }
 
@@ -811,6 +854,17 @@ impl Wire for Request {
                 open_ctx: Option::<OpenCtx>::dec(d)?,
             },
             34 => Request::JournalShip { frames: d.bytes()? },
+            35 => Request::Stamped {
+                client: d.u32()?,
+                op_id: d.u64()?,
+                ack_upto: d.u64()?,
+                inner: Box::new(Request::dec(d)?),
+            },
+            36 => Request::JournalFetch {
+                gen: d.u64()?,
+                offset: d.u64()?,
+                max_bytes: d.u32()?,
+            },
             t => return Err(FsError::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -908,6 +962,13 @@ impl Wire for Response {
                     }
                 }
             }
+            Response::JournalChunk { gen, offset, frames, more } => {
+                tagged!(e, 15);
+                e.u64(*gen);
+                e.u64(*offset);
+                e.bytes(frames);
+                e.bool(*more);
+            }
         }
     }
 
@@ -968,6 +1029,12 @@ impl Wire for Response {
                 };
                 Response::OpenedInline { attr, data_gen, data }
             }
+            15 => Response::JournalChunk {
+                gen: d.u64()?,
+                offset: d.u64()?,
+                frames: d.bytes()?,
+                more: d.bool()?,
+            },
             t => return Err(FsError::Protocol(format!("bad response tag {t}"))),
         })
     }
@@ -1142,6 +1209,13 @@ mod tests {
                 open_ctx: Some(ctx.clone()),
             },
             Request::JournalShip { frames: vec![0xde, 0xad, 0xbe, 0xef] },
+            Request::Stamped {
+                client: 7,
+                op_id: 42,
+                ack_upto: 40,
+                inner: Box::new(Request::Chmod { ino, mode: 0o600, cred: cred() }),
+            },
+            Request::JournalFetch { gen: 3, offset: 4096, max_bytes: 1 << 20 },
         ]
     }
 
@@ -1196,6 +1270,14 @@ mod tests {
             Response::OpenedInline { attr: attr.clone(), data_gen: 3, data: Some(vec![5; 100]) },
             Response::OpenedInline { attr: attr.clone(), data_gen: 0, data: None },
             Response::Err(FsError::StaleData),
+            Response::JournalChunk {
+                gen: 2,
+                offset: 8192,
+                frames: vec![0xaa, 0xbb, 0xcc],
+                more: true,
+            },
+            Response::JournalChunk { gen: 0, offset: 0, frames: vec![], more: false },
+            Response::Err(FsError::JournalFailed("disk gone".into())),
         ]
     }
 

@@ -19,8 +19,9 @@ use buffetfs::store::data::MemData;
 use buffetfs::store::fs::LocalFs;
 use buffetfs::transport::capacity::ServiceConfig;
 use buffetfs::transport::chan::ChanTransport;
-use buffetfs::transport::Service;
-use buffetfs::types::{Credentials, Ino, OpenFlags};
+use buffetfs::transport::faulty::{FaultConfig, FaultyTransport};
+use buffetfs::transport::{Service, SharedTransport};
+use buffetfs::types::{Credentials, HostId, Ino, OpenFlags, Version};
 use buffetfs::util::rng::XorShift;
 use buffetfs::wire::{Request, Response};
 
@@ -487,6 +488,397 @@ fn torn_journal_tail_is_truncated_and_clean_prefix_survives() {
     assert_eq!(p.get("/a", 16).unwrap(), b"alpha");
     assert_eq!(p.get("/b", 16).unwrap(), b"beta");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Chaos suite (DESIGN.md §11): seeded drop/duplicate/delay/reorder faults,
+// with and without a primary kill. The invariant is exactly-once: every
+// acknowledged mutation is applied, and none is applied twice. Every path
+// in the workload is unique to one (worker, iteration), so a spurious
+// AlreadyExists or NotFound can ONLY come from a double-applied op.
+// ---------------------------------------------------------------------------
+
+/// Chaos runs replay a fixed seed by default; CI sweeps `CHAOS_SEED`.
+fn chaos_seed() -> u64 {
+    std::env::var("CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xB0FFE7)
+}
+
+/// What the oracle knows about one acknowledged op's outcome. Ops whose
+/// final RPC surfaced a (possibly injected) transport error are
+/// indeterminate — recorded only as loosely as the truth allows.
+enum Fate {
+    /// Acked create/rename target: must exist.
+    At(String),
+    /// Acked unlink / rename source: must be gone.
+    Gone(String),
+    /// Rename whose ack was lost: the file is at exactly one of the two
+    /// names — found at both (or neither) is a double-apply (or a loss).
+    AtOneOf(String, String),
+    /// Acked `put`: must exist with exactly these bytes.
+    Bytes(String, Vec<u8>),
+}
+
+/// One chaos worker: create → rename → (every 3rd) unlink on paths
+/// unique to this worker, with the occasional `put` to push a stamped
+/// `WriteBatch` flush through the same machinery. Panics on the spot
+/// when a double-apply surfaces; counts indeterminate ops in `errors`.
+fn chaos_worker(p: &Buffet, w: u32, ops: u32, fates: &Mutex<Vec<Fate>>, errors: &AtomicU64) {
+    let mut mine = Vec::new();
+    for i in 0..ops {
+        if i % 4 == 3 {
+            let path = format!("/p{w}x{i}");
+            let body = format!("chaos body {w}/{i}").into_bytes();
+            match p.put(&path, &body) {
+                Ok(()) => mine.push(Fate::Bytes(path, body)),
+                Err(_) => {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            continue;
+        }
+        let a = format!("/c{w}x{i}");
+        let b = format!("/c{w}x{i}r");
+        match p.create(&a, 0o644) {
+            Ok(_) => {}
+            Err(FsError::AlreadyExists) => {
+                panic!("exactly-once violated: create {a} applied twice")
+            }
+            Err(_) => {
+                errors.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        }
+        match p.rename(&a, &b) {
+            Ok(()) => {}
+            Err(FsError::NotFound) => {
+                panic!("exactly-once violated: rename {a} applied twice")
+            }
+            Err(_) => {
+                errors.fetch_add(1, Ordering::Relaxed);
+                mine.push(Fate::AtOneOf(a, b));
+                continue;
+            }
+        }
+        mine.push(Fate::Gone(a));
+        if i % 3 == 0 {
+            match p.unlink(&b) {
+                Ok(()) => mine.push(Fate::Gone(b)),
+                Err(FsError::NotFound) => {
+                    panic!("exactly-once violated: unlink {b} applied twice")
+                }
+                Err(_) => {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        } else {
+            mine.push(Fate::At(b));
+        }
+    }
+    fates.lock().unwrap().extend(mine);
+}
+
+/// Verify every recorded fate against the surviving server through a
+/// clean (fault-free) client.
+fn sweep(p: &Buffet, fates: &[Fate]) {
+    for f in fates {
+        match f {
+            Fate::At(path) => {
+                p.stat(path).unwrap_or_else(|e| panic!("acked {path} lost: {e:?}"));
+            }
+            Fate::Gone(path) => match p.stat(path) {
+                Err(FsError::NotFound) => {}
+                other => panic!("acked removal of {path} undone: {other:?}"),
+            },
+            Fate::AtOneOf(a, b) => {
+                let (at_a, at_b) = (p.stat(a).is_ok(), p.stat(b).is_ok());
+                assert!(
+                    at_a != at_b,
+                    "exactly-once violated: {a}={at_a} {b}={at_b} (must be at exactly one)"
+                );
+            }
+            Fate::Bytes(path, body) => {
+                let got =
+                    p.get(path, 1 << 16).unwrap_or_else(|e| panic!("acked {path} lost: {e:?}"));
+                assert_eq!(&got, body, "{path} bytes diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn stamped_retry_is_answered_from_the_ledger() {
+    // The deterministic core of the chaos suite: the very same stamped
+    // rename delivered twice (a retransmit, or a retry after a lost
+    // reply) answers identically both times and applies once.
+    let s = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    let p = client_for(&s, Arc::new(RpcMetrics::new()));
+    p.put("/a", b"x").unwrap();
+    let root = s.fs.root_ino();
+    let stamped = Request::Stamped {
+        client: 9,
+        op_id: 1,
+        ack_upto: 0,
+        inner: Box::new(Request::Rename {
+            sdir: root,
+            sname: "a".into(),
+            ddir: root,
+            dname: "b".into(),
+            cred: Credentials::root(),
+        }),
+    };
+    let first = s.handle(stamped.clone());
+    assert!(!matches!(first, Response::Err(_)), "first delivery must apply: {first:?}");
+    let second = s.handle(stamped);
+    assert_eq!(first, second, "retry must replay the cached reply verbatim");
+    assert_eq!(s.ledger.hits.load(Ordering::Relaxed), 1);
+    assert_eq!(s.ledger.misses.load(Ordering::Relaxed), 1);
+    assert!(p.stat("/b").is_ok());
+    assert_eq!(p.stat("/a").unwrap_err(), FsError::NotFound);
+
+    // once the client acks past the op, its entry is pruned and a
+    // too-late retry is called out as the protocol violation it is
+    let late = s.handle(Request::Stamped {
+        client: 9,
+        op_id: 1,
+        ack_upto: 1,
+        inner: Box::new(Request::Rename {
+            sdir: root,
+            sname: "b".into(),
+            ddir: root,
+            dname: "c".into(),
+            cred: Credentials::root(),
+        }),
+    });
+    match late {
+        Response::Err(FsError::Protocol(_)) => {}
+        other => panic!("below-low-water retry must be refused, got {other:?}"),
+    }
+}
+
+#[test]
+fn chaos_storm_applies_every_mutation_exactly_once() {
+    let dir = tdir("chaos-solo");
+    let seed = chaos_seed();
+    let fates;
+    let errors = AtomicU64::new(0);
+    let s = BServer::recover(0, 0, Box::new(MemData::new()), &dir, journal_cfg()).unwrap();
+    let metrics = Arc::new(RpcMetrics::new());
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let view = ClusterView::new(s.fs.root_ino());
+    let faulty = FaultyTransport::new(
+        ChanTransport::new(s.clone(), net, metrics.clone()),
+        FaultConfig::chaos(seed),
+    );
+    view.add(0, 0, faulty.clone());
+    let agent = BAgent::new(1, view, metrics);
+    {
+        let fates_mx = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for w in 0..8u32 {
+                let agent = agent.clone();
+                let (fates_mx, errors) = (&fates_mx, &errors);
+                scope.spawn(move || {
+                    let p = Buffet::with_pid(agent, 200 + w, Credentials::root());
+                    chaos_worker(&p, w, 24, fates_mx, errors);
+                });
+            }
+        });
+        fates = fates_mx.into_inner().unwrap();
+    }
+    assert!(fates.len() > 100, "most ops must be acked, got {}", fates.len());
+    // the run must actually have injected the evil cases…
+    assert!(faulty.stats.dropped_replies.load(Ordering::Relaxed) > 0, "no reply drops injected");
+    assert!(faulty.stats.duplicated.load(Ordering::Relaxed) > 0, "no duplicates injected");
+    // …and the ledger must have absorbed them
+    assert!(
+        s.ledger.hits.load(Ordering::Relaxed) > 0,
+        "chaos never exercised the dedup ledger (seed {seed})"
+    );
+    let p = client_for(&s, Arc::new(RpcMetrics::new()));
+    sweep(&p, &fates);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn chaos_storm_with_primary_kill_loses_and_duplicates_nothing() {
+    let pdir = tdir("chaos-prim");
+    let bdir = tdir("chaos-back");
+    let seed = chaos_seed();
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let primary = BServer::recover(0, 0, Box::new(MemData::new()), &pdir, journal_cfg()).unwrap();
+    let backup = BServer::recover(0, 0, Box::new(MemData::new()), &bdir, journal_cfg()).unwrap();
+    backup.enable_backup_role();
+    primary.set_backup(ChanTransport::new(backup.clone(), net.clone(), Arc::new(RpcMetrics::new())));
+
+    let mut rng = XorShift::new(seed ^ 0x5EED);
+    let kill = KillSwitch::arm(primary.clone(), 200 + rng.below(200));
+    let metrics = Arc::new(RpcMetrics::new());
+    let view = ClusterView::new(primary.fs.root_ino());
+    view.add(
+        0,
+        0,
+        FaultyTransport::new(
+            ChanTransport::new(kill, net.clone(), metrics.clone()),
+            FaultConfig::chaos(seed),
+        ),
+    );
+    // the standby link is faulty too — failover lands on a lossy fabric
+    view.register_standby(
+        0,
+        0,
+        FaultyTransport::new(
+            ChanTransport::new(backup.clone(), net, metrics.clone()),
+            FaultConfig::chaos(seed.wrapping_add(1)),
+        ),
+    );
+    let agent = BAgent::new(1, view, metrics.clone());
+
+    let fates_mx = Mutex::new(Vec::new());
+    let errors = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for w in 0..8u32 {
+            let agent = agent.clone();
+            let (fates_mx, errors) = (&fates_mx, &errors);
+            scope.spawn(move || {
+                let p = Buffet::with_pid(agent, 300 + w, Credentials::root());
+                chaos_worker(&p, w, 24, fates_mx, errors);
+            });
+        }
+    });
+    let fates = fates_mx.into_inner().unwrap();
+    assert!(metrics.failovers() >= 1, "the storm must have driven a promotion");
+    assert!(fates.len() > 100, "most ops must be acked across the failover, got {}", fates.len());
+
+    // every acked op — acked by the dead primary (shipped before the
+    // reply) or by the promoted backup — is present exactly once
+    let p = client_for(&backup, Arc::new(RpcMetrics::new()));
+    sweep(&p, &fates);
+    let _ = std::fs::remove_dir_all(&pdir);
+    let _ = std::fs::remove_dir_all(&bdir);
+}
+
+#[test]
+fn midlife_standby_catches_up_then_ships_live() {
+    let pdir = tdir("catchup-p");
+    let sdir = tdir("catchup-s");
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let primary = BServer::recover(0, 0, Box::new(MemData::new()), &pdir, journal_cfg()).unwrap();
+    let p = client_for(&primary, Arc::new(RpcMetrics::new()));
+    let pre: Vec<(String, Vec<u8>)> = (0..32u32)
+        .map(|i| {
+            let (path, body) = (format!("/pre{i}"), format!("early {i}").into_bytes());
+            p.put(&path, &body).unwrap();
+            (path, body)
+        })
+        .collect();
+
+    // a standby joins mid-life: pulls the whole history it missed…
+    let standby = BServer::recover(0, 0, Box::new(MemData::new()), &sdir, journal_cfg()).unwrap();
+    standby.enable_backup_role();
+    primary.enable_replication_source();
+    let pt: SharedTransport =
+        ChanTransport::new(primary.clone(), net.clone(), Arc::new(RpcMetrics::new()));
+    let (gen, offset, bytes, records) = standby.catch_up_from(&pt).unwrap();
+    assert!(bytes > 0 && records > 0, "catch-up must pull the missed history");
+
+    // …and is attached at its cursor: residual + live ship from here on
+    let st: SharedTransport =
+        ChanTransport::new(standby.clone(), net, Arc::new(RpcMetrics::new()));
+    primary.attach_backup_at(st, gen, offset).unwrap();
+    let post: Vec<(String, Vec<u8>)> = (0..8u32)
+        .map(|i| {
+            let (path, body) = (format!("/post{i}"), format!("live {i}").into_bytes());
+            p.put(&path, &body).unwrap();
+            (path, body)
+        })
+        .collect();
+
+    // the standby serves everything — pre-join history and live tail
+    let ps = client_for(&standby, Arc::new(RpcMetrics::new()));
+    for (path, body) in pre.iter().chain(&post) {
+        let got = ps
+            .get(path, 1 << 16)
+            .unwrap_or_else(|e| panic!("standby missing {path}: {e:?}"));
+        assert_eq!(&got, body, "{path} diverged on the caught-up standby");
+    }
+    // and its journal is a byte-identical copy of the primary's stream
+    let pj = std::fs::read(pdir.join("wal.0.log")).unwrap();
+    let sj = std::fs::read(sdir.join("wal.0.log")).unwrap();
+    assert_eq!(pj, sj, "caught-up standby journal must match the shipped stream");
+    let j = primary.fs.journal().unwrap();
+    assert!(j.stats().catchup_bytes.load(Ordering::Relaxed) > 0);
+    assert!(j.stats().catchup_records.load(Ordering::Relaxed) > 0);
+    let _ = std::fs::remove_dir_all(&pdir);
+    let _ = std::fs::remove_dir_all(&sdir);
+}
+
+#[test]
+fn promotion_recruits_and_reseeds_a_fresh_standby() {
+    let pdir = tdir("reseed-p");
+    let bdir = tdir("reseed-b");
+    let sdir = tdir("reseed-s");
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let primary = BServer::recover(0, 0, Box::new(MemData::new()), &pdir, journal_cfg()).unwrap();
+    let backup = BServer::recover(0, 0, Box::new(MemData::new()), &bdir, journal_cfg()).unwrap();
+    backup.enable_backup_role();
+    primary.set_backup(ChanTransport::new(backup.clone(), net.clone(), Arc::new(RpcMetrics::new())));
+    let spare = BServer::recover(0, 0, Box::new(MemData::new()), &sdir, journal_cfg()).unwrap();
+
+    let metrics = Arc::new(RpcMetrics::new());
+    let kill = KillSwitch::arm(primary.clone(), 40);
+    let view = ClusterView::new(primary.fs.root_ino());
+    view.add(0, 0, ChanTransport::new(kill, net.clone(), metrics.clone()));
+    view.register_standby(
+        0,
+        0,
+        ChanTransport::new(backup.clone(), net.clone(), metrics.clone()),
+    );
+    // Self-healing: when a promotion consumes the standby, recruit the
+    // spare — catch it up from the new primary's journal and attach it
+    // as the live backup, all before the failed-over op completes.
+    let backup_t: SharedTransport =
+        ChanTransport::new(backup.clone(), net.clone(), Arc::new(RpcMetrics::new()));
+    let spare_t: SharedTransport =
+        ChanTransport::new(spare.clone(), net.clone(), Arc::new(RpcMetrics::new()));
+    let (rb, rs) = (backup.clone(), spare.clone());
+    view.set_recruiter(Arc::new(move |host: HostId, _version: Version| {
+        if host != 0 {
+            return None;
+        }
+        rb.enable_replication_source();
+        rs.enable_backup_role();
+        let (gen, offset, _, _) = rs.catch_up_from(&backup_t).ok()?;
+        rb.attach_backup_at(spare_t.clone(), gen, offset).ok()?;
+        Some(spare_t.clone())
+    }));
+    let agent = BAgent::new(1, view, metrics.clone());
+    let p = Buffet::process(agent.clone(), Credentials::root());
+
+    // the kill fires mid-run; with exactly-once stamping EVERY put must
+    // still succeed — no op surfaces the crash to the application
+    let all: Vec<(String, Vec<u8>)> = (0..80u32)
+        .map(|i| {
+            let (path, body) = (format!("/r{i}"), format!("reseed {i}").into_bytes());
+            p.put(&path, &body).unwrap_or_else(|e| panic!("put {path} across failover: {e:?}"));
+            (path, body)
+        })
+        .collect();
+    assert!(metrics.failovers() >= 1, "the kill must have driven a promotion");
+    assert!(agent.cluster().has_standby(0), "promotion must have recruited a fresh standby");
+
+    // the promoted backup has everything; so does the reseeded spare
+    // (caught up + live-shipped), which is what makes the heal real
+    for (server, tag) in [(&backup, "promoted backup"), (&spare, "reseeded spare")] {
+        let c = client_for(server, Arc::new(RpcMetrics::new()));
+        for (path, body) in &all {
+            let got =
+                c.get(path, 1 << 16).unwrap_or_else(|e| panic!("{tag} missing {path}: {e:?}"));
+            assert_eq!(&got, body, "{path} diverged on the {tag}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&pdir);
+    let _ = std::fs::remove_dir_all(&bdir);
+    let _ = std::fs::remove_dir_all(&sdir);
 }
 
 #[test]

@@ -173,6 +173,101 @@ fn reconnect_transport_redials_after_peer_death() {
 }
 
 #[test]
+fn pipelined_reconnect_fails_inflight_cleanly_and_rehandshakes() {
+    use std::io::{Read, Write};
+    use std::time::Duration;
+    // Forward exactly `n` length-prefixed frames from src to dst.
+    fn forward_frames(
+        src: &mut std::net::TcpStream,
+        dst: &mut std::net::TcpStream,
+        n: usize,
+    ) -> std::io::Result<()> {
+        for _ in 0..n {
+            let mut len = [0u8; 4];
+            src.read_exact(&mut len)?;
+            let mut buf = vec![0u8; u32::from_le_bytes(len) as usize];
+            src.read_exact(&mut buf)?;
+            dst.write_all(&len)?;
+            dst.write_all(&buf)?;
+            dst.flush()?;
+        }
+        Ok(())
+    }
+
+    let (server, saddr) = spawn_server();
+    // Frame-counting front door: connection 1 relays the pipelined Hello
+    // reply plus ONE response, then cuts mid-burst — a crash with
+    // requests in flight. Connection 2 (the redial) proxies fully.
+    let front = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let faddr = front.local_addr().unwrap();
+    let proxy = std::thread::spawn(move || {
+        {
+            let (client_side, _) = front.accept().unwrap();
+            let server_side = std::net::TcpStream::connect(saddr).unwrap();
+            let mut up_rx = client_side.try_clone().unwrap();
+            let mut up_tx = server_side.try_clone().unwrap();
+            let up = std::thread::spawn(move || {
+                let _ = std::io::copy(&mut up_rx, &mut up_tx);
+            });
+            let (mut down_rx, mut down_tx) = (server_side, client_side);
+            let _ = forward_frames(&mut down_rx, &mut down_tx, 2);
+            let _ = down_tx.shutdown(std::net::Shutdown::Both);
+            let _ = down_rx.shutdown(std::net::Shutdown::Both);
+            let _ = up.join();
+        }
+        // the redialed connection gets a faithful byte pipe
+        let (client_side, _) = front.accept().unwrap();
+        let server_side = std::net::TcpStream::connect(saddr).unwrap();
+        let mut up_rx = client_side.try_clone().unwrap();
+        let mut up_tx = server_side.try_clone().unwrap();
+        let up = std::thread::spawn(move || {
+            let _ = std::io::copy(&mut up_rx, &mut up_tx);
+        });
+        let (mut down_rx, mut down_tx) = (server_side, client_side);
+        let _ = std::io::copy(&mut down_rx, &mut down_tx);
+        let _ = up.join();
+    });
+
+    let metrics = Arc::new(RpcMetrics::new());
+    let cfg = ReconnectConfig {
+        pipelined: true,
+        backoff: Duration::from_millis(5),
+        backoff_cap: Duration::from_millis(50),
+        ..ReconnectConfig::default()
+    };
+    let t = ReconnectTransport::connect(&faddr.to_string(), cfg, metrics.clone()).unwrap();
+    assert!(t.current().is_pipelined_mode(), "handshake must negotiate pipelined framing");
+
+    // three requests in flight on one connection when the peer dies:
+    // exactly one response frame got through before the cut
+    let root = Ino::new(0, 0, 1);
+    let pendings: Vec<_> = (0..3).map(|_| t.submit(Request::GetAttr { ino: root })).collect();
+    let results: Vec<_> = pendings.into_iter().map(|p| p.and_then(|p| t.wait(p))).collect();
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    assert_eq!(ok, 1, "exactly the forwarded response completes: {results:?}");
+    for r in &results {
+        if let Err(e) = r {
+            assert!(
+                matches!(e, buffetfs::error::FsError::Transport(_)),
+                "in-flight requests must fail cleanly with a transport error, got {e:?}"
+            );
+        }
+    }
+
+    // the next call redials through the wrapper, re-handshakes Hello on
+    // the fresh connection, and lands back in pipelined mode
+    match t.call(Request::GetAttr { ino: root }) {
+        Ok(Response::AttrR(a)) => assert_eq!(a.ino, root),
+        other => panic!("expected attr after redial, got {other:?}"),
+    }
+    assert_eq!(metrics.reconnects(), 1, "exactly one successful redial recorded");
+    assert!(t.current().is_pipelined_mode(), "redial must re-negotiate pipelined framing");
+    drop(t);
+    let _ = proxy.join();
+    server.shutdown();
+}
+
+#[test]
 fn multiple_concurrent_tcp_clients() {
     let (server, addr) = spawn_server();
     let root = Ino::new(0, 0, 1);
