@@ -1,0 +1,204 @@
+//! Elastic-namespace ablation (DESIGN.md §12): what load-driven
+//! rebalancing buys under a shifting hot spot.
+//!
+//! A two-server pool behind the bounded-capacity service model (finite
+//! slots + per-op service time — the thing that makes an overloaded
+//! metadata server *queue*). The whole namespace is born on host 0;
+//! host 1 starts empty. Four client threads hammer opens with zipfian
+//! directory popularity, and halfway through the run the popularity
+//! ranking rotates — the hot spot jumps to a different set of
+//! directories.
+//!
+//! Two identical runs: rebalancing OFF (host 1 stays idle, every op
+//! queues on host 0) and rebalancing ON (a balancer thread drains
+//! per-directory op-rate counters and live-migrates the hottest
+//! subtrees). The paper-style readout is p99 open latency, overall and
+//! post-shift; ON should beat OFF on both, and the post-shift window
+//! shows the balancer chasing the new hot spot.
+//!
+//! Results print as a table and land in `BENCH_shard.json`.
+//!
+//! `cargo bench --bench ablation_shard` (SHARD_SEED sweeps the
+//! workload schedule).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::placement::{Balancer, BalancerConfig};
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::Credentials;
+use buffetfs::util::rng::XorShift;
+
+const DIRS: u64 = 24;
+const FILES_PER_DIR: u64 = 4;
+const THREADS: u32 = 4;
+const OPS_PER_THREAD: u32 = 600;
+const ZIPF_S: f64 = 1.1;
+
+fn pct(sorted_us: &[u64], p: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted_us.len() as f64 - 1.0) * p / 100.0).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+struct RunResult {
+    p50_us: u64,
+    p99_us: u64,
+    post_shift_p99_us: u64,
+    errors: u64,
+    redirects: u64,
+    migrations: u64,
+    wall_ms: u128,
+}
+
+/// One full workload run. `rebalance` arms the balancer thread; both
+/// runs share the seed, so the op schedules are identical.
+fn run(seed: u64, rebalance: bool) -> RunResult {
+    // a saturated-MDS capacity model: 4 threads against 2 slots queue
+    // hard on a single host, and split cleanly across two
+    let svc = ServiceConfig { slots: 2, meta_us: 120, data_us: 150, data_us_per_4k: 10 };
+    let cluster =
+        Arc::new(BuffetCluster::spawn_with(2, NetConfig::zero(), Backing::Mem, false, svc));
+
+    // the namespace is born whole on host 0 (co-located placement)
+    let (setup_agent, _) = cluster.make_agent();
+    let setup = Buffet::process(setup_agent, Credentials::root());
+    for d in 0..DIRS {
+        setup.mkdir(&format!("/d{d}"), 0o755).unwrap();
+        for f in 0..FILES_PER_DIR {
+            setup.put(&format!("/d{d}/f{f}"), format!("shard body {d}/{f}").as_bytes()).unwrap();
+        }
+    }
+
+    let done_workers = AtomicU64::new(0);
+    let migrations = AtomicU64::new(0);
+    let redirects = AtomicU64::new(0);
+    let errors = AtomicU64::new(0);
+    // (phase, latency) samples: phase 1 = after the hot-spot shift
+    let samples: Mutex<Vec<(u8, u64)>> = Mutex::new(Vec::new());
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        if rebalance {
+            let cluster = cluster.clone();
+            let done_workers = &done_workers;
+            let migrations = &migrations;
+            scope.spawn(move || {
+                let balancer = Balancer::new(BalancerConfig {
+                    imbalance: 1.25,
+                    min_total_ops: 100,
+                    grace: 32,
+                });
+                while done_workers.load(Ordering::Relaxed) < THREADS as u64 {
+                    std::thread::sleep(Duration::from_millis(25));
+                    if let Ok(Some(_plan)) = cluster.rebalance_step(&balancer) {
+                        migrations.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+        for t in 0..THREADS {
+            let cluster = cluster.clone();
+            let (samples, errors, redirects, done_workers) =
+                (&samples, &errors, &redirects, &done_workers);
+            scope.spawn(move || {
+                let (agent, _) = cluster.make_agent();
+                let p = Buffet::with_pid(agent.clone(), 100 + t, Credentials::root());
+                let mut rng = XorShift::new(seed ^ ((t as u64 + 1) << 32));
+                let mut mine = Vec::with_capacity(OPS_PER_THREAD as usize);
+                for i in 0..OPS_PER_THREAD {
+                    let shifted = i >= OPS_PER_THREAD / 2;
+                    let rank = rng.zipf(DIRS, ZIPF_S);
+                    // the hot-spot shift: the popularity ranking rotates
+                    // halfway through, relocating the skew to dirs the
+                    // balancer has not placed yet
+                    let d = if shifted { (rank + DIRS / 2) % DIRS } else { rank };
+                    let f = rng.below(FILES_PER_DIR);
+                    let op0 = Instant::now();
+                    match p.get(&format!("/d{d}/f{f}"), 256) {
+                        Ok(_) => mine.push((shifted as u8, op0.elapsed().as_micros() as u64)),
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                redirects.fetch_add(agent.stats.redirects.load(Ordering::Relaxed), Ordering::Relaxed);
+                samples.lock().unwrap().extend(mine);
+                done_workers.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+    });
+    let wall_ms = t0.elapsed().as_millis();
+
+    let samples = samples.into_inner().unwrap();
+    let mut all: Vec<u64> = samples.iter().map(|&(_, us)| us).collect();
+    let mut post: Vec<u64> = samples.iter().filter(|&&(ph, _)| ph == 1).map(|&(_, us)| us).collect();
+    all.sort_unstable();
+    post.sort_unstable();
+
+    RunResult {
+        p50_us: pct(&all, 50.0),
+        p99_us: pct(&all, 99.0),
+        post_shift_p99_us: pct(&post, 99.0),
+        errors: errors.load(Ordering::Relaxed),
+        redirects: redirects.load(Ordering::Relaxed),
+        migrations: migrations.load(Ordering::Relaxed),
+        wall_ms,
+    }
+}
+
+fn main() {
+    let seed: u64 =
+        std::env::var("SHARD_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5AAD);
+    println!(
+        "shard ablation: {DIRS} dirs x {FILES_PER_DIR} files, {THREADS} threads x \
+         {OPS_PER_THREAD} opens, zipf s={ZIPF_S}, hot-spot shift at 50%, seed {seed:#x}"
+    );
+
+    let off = run(seed, false);
+    let on = run(seed, true);
+
+    for (name, r) in [("rebalance OFF", &off), ("rebalance ON ", &on)] {
+        println!(
+            "  {name}: p50 {}us p99 {}us post-shift-p99 {}us | {} migrations, {} redirects, \
+             {} errors ({}ms)",
+            r.p50_us, r.p99_us, r.post_shift_p99_us, r.migrations, r.redirects, r.errors, r.wall_ms
+        );
+    }
+    let gain = off.p99_us as f64 / on.p99_us.max(1) as f64;
+    let post_gain = off.post_shift_p99_us as f64 / on.post_shift_p99_us.max(1) as f64;
+    println!("  p99 speedup: overall {gain:.2}x, post-shift {post_gain:.2}x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"shard\",\n  \"seed\": {seed},\n  \"dirs\": {DIRS},\n  \
+         \"files_per_dir\": {FILES_PER_DIR},\n  \"threads\": {THREADS},\n  \
+         \"ops_per_thread\": {OPS_PER_THREAD},\n  \"zipf_s\": {ZIPF_S},\n  \
+         \"off\": {{ \"p50_us\": {}, \"p99_us\": {}, \"post_shift_p99_us\": {}, \
+         \"errors\": {}, \"wall_ms\": {} }},\n  \
+         \"on\": {{ \"p50_us\": {}, \"p99_us\": {}, \"post_shift_p99_us\": {}, \
+         \"errors\": {}, \"migrations\": {}, \"redirects\": {}, \"wall_ms\": {} }},\n  \
+         \"p99_speedup\": {gain:.3},\n  \"post_shift_p99_speedup\": {post_gain:.3}\n}}\n",
+        off.p50_us,
+        off.p99_us,
+        off.post_shift_p99_us,
+        off.errors,
+        off.wall_ms,
+        on.p50_us,
+        on.p99_us,
+        on.post_shift_p99_us,
+        on.errors,
+        on.migrations,
+        on.redirects,
+        on.wall_ms,
+    );
+    match std::fs::write("BENCH_shard.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_shard.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_shard.json: {e}"),
+    }
+}

@@ -36,6 +36,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::cluster::placement::PlacementCache;
 use crate::cluster::ClusterView;
 use crate::datapath::{DataTransport, Datapath, DatapathConfig, InlineOpen};
 use crate::error::{FsError, FsResult};
@@ -111,6 +112,7 @@ fn retry_safe(req: &Request) -> bool {
             | Request::StatAt { .. }
             | Request::ReadDirAt { .. }
             | Request::ReadBatch { .. }
+            | Request::PlacementFetch { .. }
     )
 }
 
@@ -145,6 +147,9 @@ pub struct AgentStats {
     pub stamped_ops: AtomicU64,
     /// Permanent downgrades to unstamped mutations (old-server fallback).
     pub stamp_downgrades: AtomicU64,
+    /// `WrongServer` redirects followed (placement cache refreshed, op
+    /// re-sent once to the new owner — elastic namespace, §12).
+    pub redirects: AtomicU64,
 }
 
 /// Result of a path resolution: the leaf entry plus the perm-blob chain
@@ -191,6 +196,10 @@ pub struct BAgent {
     /// Disabled until [`BAgent::enable_datapath`] — the classic
     /// one-RPC-per-read schedule stays the default.
     datapath: Datapath,
+    /// Cached placement overrides (elastic namespace, DESIGN.md §12).
+    /// Learned from `WrongServer` redirects and `PlacementFetch` replies;
+    /// consulted before the birth-host route on every call.
+    placement: PlacementCache,
     pub stats: AgentStats,
 }
 
@@ -211,6 +220,7 @@ impl BAgent {
             op_seq: AtomicU64::new(0),
             outstanding: Mutex::new(std::collections::BTreeSet::new()),
             leases: Mutex::new(HashMap::new()),
+            placement: PlacementCache::new(),
             stats: AgentStats::default(),
         })
     }
@@ -237,6 +247,42 @@ impl BAgent {
 
     pub fn metrics(&self) -> &Arc<RpcMetrics> {
         &self.metrics
+    }
+
+    /// The client's placement cache (elastic namespace, DESIGN.md §12).
+    pub fn placement(&self) -> &PlacementCache {
+        &self.placement
+    }
+
+    /// Where a request for `ino` goes right now: the cached placement
+    /// override if one exists, else the birth host baked into the ino.
+    /// An override naming a host that has since left the pool (shrink)
+    /// falls back to the birth route — if ownership moved yet again, the
+    /// next `WrongServer` redirect re-teaches the cache.
+    pub(crate) fn route(&self, ino: Ino) -> FsResult<SharedTransport> {
+        if let Some(host) = self.placement.route(ino) {
+            if let Ok(t) = self.cluster.host_transport(host) {
+                return Ok(t);
+            }
+        }
+        self.cluster.transport(ino)
+    }
+
+    /// Pull the authoritative placement map and absorb it. Returns the
+    /// map version the cache holds afterwards. A cache that is already
+    /// current gets an empty confirmation delta and keeps its table.
+    pub fn fetch_placement(&self) -> FsResult<u64> {
+        let since = self.placement.version();
+        let root = self.cluster.root();
+        match self.call_ino(root, Request::PlacementFetch { since })? {
+            Response::PlacementMap { version, entries } => {
+                if version != since {
+                    self.placement.absorb(version, &entries);
+                }
+                Ok(self.placement.version())
+            }
+            other => Err(FsError::Protocol(format!("placement fetch returned {other:?}"))),
+        }
     }
 
     /// Plug in the PJRT batch checker (see `runtime::BatchChecker`).
@@ -324,7 +370,7 @@ impl BAgent {
     /// stickily and mutations fall back to surfacing the error.
     /// [`FsError::Busy`] (admission-shed, never executed) is always
     /// re-sent, on its own bounded backoff schedule.
-    fn call_ino(&self, ino: Ino, req: Request) -> FsResult<Response> {
+    pub(crate) fn call_ino(&self, ino: Ino, req: Request) -> FsResult<Response> {
         if retry_safe(&req) {
             return self.call_ino_raw(ino, req, true);
         }
@@ -362,9 +408,25 @@ impl BAgent {
         );
         let mut busy = 0u32;
         let mut attempt = 0;
+        let mut redirected = false;
         loop {
-            let e = match self.cluster.transport(ino)?.call(req.clone()) {
+            let e = match self.route(ino)?.call(req.clone()) {
                 Err(FsError::Transport(m)) => FsError::Transport(m),
+                Err(FsError::WrongServer { owner, map_version }) if !redirected => {
+                    // Stale placement: the gate rejected the request
+                    // before any handler ran (like Busy, it never
+                    // executed), so one blind re-send to the new owner
+                    // is safe even unstamped — and bounded to exactly
+                    // one hop per op: the authoritative map named
+                    // `owner`, so a second redirect means a concurrent
+                    // re-migration and surfaces as an error instead of
+                    // a chase.
+                    redirected = true;
+                    self.placement.learn(ino, owner, map_version);
+                    self.stats.redirects.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.record("redirect", 0, 0, std::time::Duration::ZERO);
+                    continue;
+                }
                 Err(FsError::Busy) if busy < MAX_BUSY_RETRIES => {
                     // Shed at admission, never executed — safe to re-send
                     // even unstamped. Does not consume failover attempts.
@@ -1187,7 +1249,7 @@ impl BAgent {
             }
         }
         if !incomplete {
-            let t = self.cluster.transport(h.ino)?;
+            let t = self.route(h.ino)?;
             let _ = t.call_async(Request::Close { ino: h.ino, client: self.id, handle: h.handle });
         }
         match flush_err {
@@ -1430,7 +1492,7 @@ impl DataTransport for BAgent {
         // so it does not fail over mid-flight; a transport error surfaces
         // to the datapath, whose drop-and-refetch retry re-enters through
         // a fresh (possibly just-promoted) transport lookup.
-        let t = self.cluster.transport(h.ino)?;
+        let t = self.route(h.ino)?;
         let ways = self.datapath.config().pipeline_ways;
         // classic schedule: the whole window in one ReadBatch — one
         // consistent snapshot under the server's read lock
@@ -1542,7 +1604,7 @@ impl DataTransport for BAgent {
         // across a failover. Only the pipelined fan-out binds to one
         // transport and surfaces errors directly — its in-flight
         // sub-batches are tied to a single connection's inflight table.
-        let t = self.cluster.transport(h.ino)?;
+        let t = self.route(h.ino)?;
         let ways = self.datapath.config().pipeline_ways;
         // Pipelined flush (§9): split a multi-extent flush into
         // concurrent WriteBatch RPCs — but only when the flush carries

@@ -349,7 +349,7 @@ impl Dir {
         // on must close it, or the opened-file entry leaks forever.
         let ino = attr.ino;
         let abort = |e: FsError| -> FsError {
-            if let Ok(t) = agent.cluster().transport(ino) {
+            if let Ok(t) = agent.route(ino) {
                 let _ = t.call_async(Request::Close { ino, client: agent.id(), handle });
             }
             e
@@ -359,7 +359,9 @@ impl Dir {
         }
         if flags.truncate {
             let trunc = Request::Truncate { ino, size: 0, cred: cred.clone() };
-            let sent = agent.cluster().transport(ino).and_then(|t| t.call(trunc));
+            // through call_ino: stamped exactly-once, and a post-migration
+            // `WrongServer` redirect is followed instead of surfaced
+            let sent = agent.call_ino(ino, trunc);
             if let Err(e) = sent {
                 return Err(abort(e));
             }
@@ -487,9 +489,7 @@ impl Dir {
 
     /// stat this directory itself.
     pub fn stat_self(&self) -> FsResult<Attr> {
-        let resp = self.agent().cluster().transport(self.node)?.call(Request::GetAttr {
-            ino: self.node,
-        })?;
+        let resp = self.agent().call_ino(self.node, Request::GetAttr { ino: self.node })?;
         match resp {
             Response::AttrR(a) => Ok(a),
             other => Err(FsError::Protocol(format!("getattr returned {other:?}"))),

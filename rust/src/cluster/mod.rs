@@ -7,13 +7,18 @@
 //! transport the "address" is a [`SharedTransport`] handle, with TCP it
 //! is a socket address parsed from [`HostMapFile`].
 
+pub mod placement;
+
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, RwLock, Weak};
 
 use crate::agent::BAgent;
 use crate::error::{FsError, FsResult};
 use crate::metrics::RpcMetrics;
 use crate::server::{BServer, Placement};
+use crate::wire::{Request, Response};
+
+use self::placement::{Balancer, MigrationPlan, PlacementMap, ServerLoad};
 use crate::simnet::{LatencyModel, NetConfig};
 use crate::store::data::{DiskData, MemData};
 use crate::store::fs::LocalFs;
@@ -118,6 +123,24 @@ impl ClusterView {
         self.transports.read().unwrap().len()
     }
 
+    /// Locate a server by bare host id, whatever inode version it
+    /// serves — the placement-override route: a migrated subtree's
+    /// objects keep their birth inos, so the version check belongs to
+    /// the server's own `validate`, not the transport lookup.
+    pub fn host_transport(&self, host: HostId) -> FsResult<SharedTransport> {
+        match self.transports.read().unwrap().get(&host) {
+            None => Err(FsError::NoSuchServer(host)),
+            Some((_, t)) => Ok(Arc::clone(t)),
+        }
+    }
+
+    /// Forget a host (pool shrink). Safe only after the placement map
+    /// assigns it nothing — see `BuffetCluster::shrink`.
+    pub fn remove(&self, host: HostId) {
+        self.transports.write().unwrap().remove(&host);
+        self.standbys.write().unwrap().remove(&host);
+    }
+
     /// Locate the server for an inode — purely from the inode number,
     /// "without requesting their location and metadata from other
     /// clients" (§1).
@@ -155,6 +178,20 @@ pub struct BuffetCluster {
     pub net_cfg: NetConfig,
     pub svc_cfg: ServiceConfig,
     next_client: std::sync::atomic::AtomicU32,
+    /// The cluster-wide directory placement map, shared by every server
+    /// (DESIGN.md §12).
+    pub shard_map: Arc<PlacementMap>,
+    /// Storage backend recipe, kept so `grow` can mint stores for
+    /// late-added servers.
+    backing: Backing,
+    /// Servers added by `grow` after bootstrap (host ids continue where
+    /// the seed pool stopped), with their capacity frontends.
+    extras: RwLock<Vec<(Arc<BServer>, Arc<CapService>)>>,
+    /// Live agents' cluster views, so `grow`/`shrink` can retune every
+    /// client's host map in place.
+    views: RwLock<Vec<(ClientId, Weak<BAgent>)>>,
+    /// Shared metrics sink for server↔server peer links.
+    peer_metrics: Arc<RpcMetrics>,
 }
 
 impl BuffetCluster {
@@ -178,8 +215,17 @@ impl BuffetCluster {
         } else {
             Placement::Local
         };
+        let shard_map = Arc::new(PlacementMap::new());
         let servers: Vec<Arc<BServer>> = (0..n_servers)
-            .map(|h| BServer::with_placement(LocalFs::new(h, 0, backing.make(h)), placement))
+            .map(|h| {
+                let s = BServer::with_shard_map(
+                    LocalFs::new(h, 0, backing.make(h)),
+                    placement,
+                    shard_map.clone(),
+                );
+                s.enable_elastic();
+                s
+            })
             .collect();
         let capped: Vec<Arc<CapService>> =
             servers.iter().map(|s| CapService::wrap(s.clone(), svc_cfg)).collect();
@@ -196,7 +242,126 @@ impl BuffetCluster {
                 }
             }
         }
-        BuffetCluster { servers, capped, net_cfg, svc_cfg, next_client: std::sync::atomic::AtomicU32::new(1) }
+        BuffetCluster {
+            servers,
+            capped,
+            net_cfg,
+            svc_cfg,
+            next_client: std::sync::atomic::AtomicU32::new(1),
+            shard_map,
+            backing,
+            extras: RwLock::new(Vec::new()),
+            views: RwLock::new(Vec::new()),
+            peer_metrics,
+        }
+    }
+
+    /// Every live server (seed pool + grown extras) with its frontend.
+    fn all_servers(&self) -> Vec<(Arc<BServer>, Arc<CapService>)> {
+        let mut all: Vec<_> = self
+            .servers
+            .iter()
+            .cloned()
+            .zip(self.capped.iter().cloned())
+            .collect();
+        all.extend(self.extras.read().unwrap().iter().cloned());
+        all
+    }
+
+    /// Find a server by host id across the seed pool and grown extras.
+    pub fn server(&self, host: HostId) -> Option<Arc<BServer>> {
+        self.all_servers().into_iter().map(|(s, _)| s).find(|s| s.host() == host)
+    }
+
+    /// Grow the pool by one empty server and return its host id. The
+    /// newcomer shares the placement map, is peer-wired both ways with
+    /// every existing server, and is added to every live agent's host
+    /// map — it owns nothing until the first migration lands on it.
+    /// Always `Placement::Local`: widening a name-hash spread would
+    /// silently re-home future files, which is the balancer's job now.
+    pub fn grow(&self) -> HostId {
+        let existing = self.all_servers();
+        let host = existing.len() as HostId;
+        let s = BServer::with_shard_map(
+            LocalFs::new(host, 0, self.backing.make(host)),
+            Placement::Local,
+            self.shard_map.clone(),
+        );
+        s.enable_elastic();
+        let cap = CapService::wrap(s.clone(), self.svc_cfg);
+        for (other, oc) in &existing {
+            let out = Arc::new(LatencyModel::new(self.net_cfg.with_seed(
+                self.net_cfg.seed ^ ((s.host() as u64) << 16 | other.host() as u64),
+            )));
+            s.add_peer(other.host(), ChanTransport::new(oc.clone(), out, self.peer_metrics.clone()));
+            let back = Arc::new(LatencyModel::new(self.net_cfg.with_seed(
+                self.net_cfg.seed ^ ((other.host() as u64) << 16 | s.host() as u64),
+            )));
+            other.add_peer(s.host(), ChanTransport::new(cap.clone(), back, self.peer_metrics.clone()));
+        }
+        // retune every live client: add the newcomer to its host map and
+        // register its invalidation sink, exactly like bootstrap wiring
+        let mut views = self.views.write().unwrap();
+        views.retain(|(id, w)| {
+            let Some(agent) = w.upgrade() else { return false };
+            let net = Arc::new(LatencyModel::new(
+                self.net_cfg.with_seed(self.net_cfg.seed ^ ((*id as u64) << 20 | host as u64)),
+            ));
+            agent.cluster().add(
+                host,
+                0,
+                ChanTransport::new(cap.clone(), net.clone(), agent.metrics().clone()),
+            );
+            s.register_pusher(*id, ChanNotify::new(agent.clone(), net));
+            true
+        });
+        self.extras.write().unwrap().push((s, cap));
+        host
+    }
+
+    /// Retire a grown server. Refused while the placement map still
+    /// assigns it subtrees (migrate them off first) and for seed-pool
+    /// servers (their id partitions minted inos clients may hold).
+    pub fn shrink(&self, host: HostId) -> FsResult<()> {
+        let owned = self.shard_map.owned_by(host);
+        if owned > 0 {
+            return Err(FsError::Busy);
+        }
+        let mut extras = self.extras.write().unwrap();
+        let Some(pos) = extras.iter().position(|(s, _)| s.host() == host) else {
+            return Err(FsError::Invalid(format!("host {host} is not a grown extra")));
+        };
+        extras.remove(pos);
+        let mut views = self.views.write().unwrap();
+        views.retain(|(_, w)| {
+            let Some(agent) = w.upgrade() else { return false };
+            agent.cluster().remove(host);
+            true
+        });
+        Ok(())
+    }
+
+    /// One balancer interval: drain every server's per-directory load
+    /// counters, ask the policy for a plan, and drive the migration on
+    /// the source server. Returns the executed plan, if any.
+    pub fn rebalance_step(&self, balancer: &Balancer) -> FsResult<Option<MigrationPlan>> {
+        let all = self.all_servers();
+        let loads: Vec<ServerLoad> = all
+            .iter()
+            .map(|(s, _)| ServerLoad { host: s.host(), dirs: s.take_dir_loads() })
+            .collect();
+        let Some(plan) = balancer.plan(&loads) else { return Ok(None) };
+        let src = self
+            .server(plan.from)
+            .ok_or(FsError::NoSuchServer(plan.from))?;
+        match crate::transport::Service::handle(
+            &*src,
+            Request::MigrateSubtree { dir: plan.dir, target: plan.to, grace: balancer.cfg.grace },
+        ) {
+            Response::Migrated { .. } => Ok(Some(plan)),
+            Response::Err(e) => Err(e),
+            other => Err(FsError::Protocol(format!("migrate returned {other:?}"))),
+        }
     }
 
     pub fn root(&self) -> Ino {
@@ -219,7 +384,7 @@ impl BuffetCluster {
         let metrics = Arc::new(RpcMetrics::new());
         let view = ClusterView::new(self.root());
         let mut links = Vec::new();
-        for (s, sc) in self.servers.iter().zip(&self.capped) {
+        for (s, sc) in self.all_servers() {
             let net = Arc::new(LatencyModel::new(
                 net_cfg.with_seed(net_cfg.seed ^ ((id as u64) << 20 | s.host() as u64)),
             ));
@@ -230,6 +395,8 @@ impl BuffetCluster {
         for (s, net) in links {
             s.register_pusher(id, ChanNotify::new(agent.clone(), net));
         }
+        // track the view so grow/shrink can retune this client later
+        self.views.write().unwrap().push((id, Arc::downgrade(&agent)));
         (agent, metrics)
     }
 }

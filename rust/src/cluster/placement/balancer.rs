@@ -1,0 +1,163 @@
+//! Load-driven rebalancing policy.
+//!
+//! Every server counts ops per directory (folded into the owning
+//! directory by `BServer::take_dir_loads`); the balancer looks at one
+//! interval's counters across the pool and proposes at most one
+//! migration per step. The policy is deliberately conservative: it
+//! only moves a directory when doing so strictly lowers the maximum
+//! per-server load, so a single directory that *is* the whole hot spot
+//! never ping-pongs between servers.
+
+use crate::store::inode::ROOT_FILE_ID;
+use crate::types::{HostId, Ino};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BalancerConfig {
+    /// Trigger threshold: rebalance when `max > mean × imbalance`.
+    pub imbalance: f64,
+    /// Ignore intervals with fewer total ops than this (idle clusters
+    /// produce noise, not load).
+    pub min_total_ops: u64,
+    /// Straggler grace window handed to each migration: how many
+    /// in-flight ops the old owner forwards before switching to hard
+    /// `WrongServer` redirects.
+    pub grace: u32,
+}
+
+impl Default for BalancerConfig {
+    fn default() -> Self {
+        BalancerConfig { imbalance: 1.5, min_total_ops: 64, grace: 64 }
+    }
+}
+
+/// One server's interval load: op counts folded per owned directory.
+#[derive(Clone, Debug)]
+pub struct ServerLoad {
+    pub host: HostId,
+    pub dirs: Vec<(Ino, u64)>,
+}
+
+impl ServerLoad {
+    pub fn total(&self) -> u64 {
+        self.dirs.iter().map(|(_, n)| n).sum()
+    }
+}
+
+/// The balancer's verdict: move `dir` from `from` to `to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MigrationPlan {
+    pub dir: Ino,
+    pub from: HostId,
+    pub to: HostId,
+}
+
+pub struct Balancer {
+    pub cfg: BalancerConfig,
+}
+
+impl Default for Balancer {
+    fn default() -> Self {
+        Balancer { cfg: BalancerConfig::default() }
+    }
+}
+
+impl Balancer {
+    pub fn new(cfg: BalancerConfig) -> Balancer {
+        Balancer { cfg }
+    }
+
+    /// Propose at most one migration for this interval, or None when
+    /// the pool is balanced (or too idle to judge).
+    pub fn plan(&self, loads: &[ServerLoad]) -> Option<MigrationPlan> {
+        if loads.len() < 2 {
+            return None;
+        }
+        let total: u64 = loads.iter().map(|l| l.total()).sum();
+        if total < self.cfg.min_total_ops {
+            return None;
+        }
+        let mean = total as f64 / loads.len() as f64;
+        let src = loads.iter().max_by_key(|l| l.total())?;
+        let dst = loads.iter().min_by_key(|l| l.total())?;
+        if src.host == dst.host {
+            return None;
+        }
+        let (src_total, dst_total) = (src.total(), dst.total());
+        if (src_total as f64) <= mean * self.cfg.imbalance {
+            return None;
+        }
+        // hottest eligible directory whose departure strictly improves
+        // the maximum: after the move the destination must still carry
+        // less than the source does today
+        let dir = src
+            .dirs
+            .iter()
+            .filter(|(d, _)| d.file != ROOT_FILE_ID)
+            .filter(|(_, n)| dst_total + n < src_total)
+            .max_by_key(|(_, n)| *n)
+            .map(|(d, _)| *d)?;
+        Some(MigrationPlan { dir, from: src.host, to: dst.host })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ino(host: u16, file: u64) -> Ino {
+        Ino::new(host, 0, file)
+    }
+
+    fn load(host: u16, dirs: &[(u64, u64)]) -> ServerLoad {
+        ServerLoad { host, dirs: dirs.iter().map(|&(f, n)| (ino(host, f), n)).collect() }
+    }
+
+    #[test]
+    fn balanced_pool_stays_put() {
+        let b = Balancer::default();
+        let loads = [load(0, &[(5, 100)]), load(1, &[(6, 110)]), load(2, &[(7, 90)])];
+        assert_eq!(b.plan(&loads), None);
+    }
+
+    #[test]
+    fn idle_pool_is_noise_not_load() {
+        let b = Balancer::default();
+        let loads = [load(0, &[(5, 10)]), load(1, &[])];
+        assert_eq!(b.plan(&loads), None, "below min_total_ops");
+    }
+
+    #[test]
+    fn hot_spot_moves_to_the_least_loaded_server() {
+        let b = Balancer::default();
+        let loads = [
+            load(0, &[(5, 500), (6, 80)]),
+            load(1, &[(7, 40)]),
+            load(2, &[(8, 100)]),
+        ];
+        let plan = b.plan(&loads).unwrap();
+        assert_eq!(plan, MigrationPlan { dir: ino(0, 5), from: 0, to: 1 });
+    }
+
+    #[test]
+    fn whole_load_directory_never_ping_pongs() {
+        let b = Balancer::default();
+        // one directory IS the hot spot: moving it would just relocate
+        // the imbalance, so the balancer must decline
+        let loads = [load(0, &[(5, 1000)]), load(1, &[])];
+        assert_eq!(b.plan(&loads), None);
+        // …but with a second warm directory on the source, the hottest
+        // movable one that still improves the max goes
+        let loads = [load(0, &[(5, 600), (6, 500)]), load(1, &[(7, 10)])];
+        let plan = b.plan(&loads).unwrap();
+        assert_eq!(plan.dir, ino(0, 5));
+        assert_eq!((plan.from, plan.to), (0, 1));
+    }
+
+    #[test]
+    fn root_directory_is_never_migrated() {
+        let b = Balancer::default();
+        let loads = [load(0, &[(ROOT_FILE_ID, 1000), (5, 200)]), load(1, &[(7, 10)])];
+        let plan = b.plan(&loads).unwrap();
+        assert_eq!(plan.dir, ino(0, 5), "root is pinned; the hottest *eligible* dir moves");
+    }
+}

@@ -1,0 +1,217 @@
+//! The versioned, directory-granular placement map.
+//!
+//! Ownership is birth-host by default (`ino.host` routes, §3.2); the
+//! map stores only the overrides created by migrations. Every change
+//! bumps a monotone version, and both the `WrongServer` redirect and
+//! the `PlacementFetch` bulk reply carry it, so a client can always
+//! tell fresher knowledge from staler without a coordinator.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::types::{HostId, Ino};
+use crate::wire::PlacementEntry;
+
+/// The authoritative map (one per cluster, shared by every server via
+/// `Arc`). Keyed by the migrated subtree root's *birth* ino — the one
+/// identifier every dirent and client handle already names.
+pub struct PlacementMap {
+    version: AtomicU64,
+    overrides: RwLock<HashMap<Ino, HostId>>,
+}
+
+impl Default for PlacementMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlacementMap {
+    pub fn new() -> PlacementMap {
+        PlacementMap { version: AtomicU64::new(0), overrides: RwLock::new(HashMap::new()) }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::SeqCst)
+    }
+
+    /// Current owner override for `dir`, if any (None = birth host).
+    pub fn owner(&self, dir: Ino) -> Option<HostId> {
+        self.overrides.read().unwrap().get(&dir).copied()
+    }
+
+    /// Record that `dir` now lives on `owner` and return the new map
+    /// version. Assigning a subtree back to its birth host erases the
+    /// override — the map never grows entries that restate the default.
+    pub fn set(&self, dir: Ino, owner: HostId) -> u64 {
+        let mut o = self.overrides.write().unwrap();
+        if dir.host == owner {
+            o.remove(&dir);
+        } else {
+            o.insert(dir, owner);
+        }
+        // bumped under the write lock so entries()+version() pairs taken
+        // by PlacementFetch are coherent
+        self.version.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Full override table (the `PlacementFetch` reply body).
+    pub fn entries(&self) -> Vec<PlacementEntry> {
+        self.overrides
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(&dir, &owner)| PlacementEntry { dir, owner })
+            .collect()
+    }
+
+    /// How many subtrees the map currently assigns to `host` — a server
+    /// may only be retired when this reaches zero (and it minted no ids
+    /// of its own, which holds for pool-grown extras by construction).
+    pub fn owned_by(&self, host: HostId) -> usize {
+        self.overrides.read().unwrap().values().filter(|&&h| h == host).count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.overrides.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The client's cached copy. Learned two ways: piecewise from
+/// `WrongServer { owner, map_version }` redirects (one entry, exactly
+/// the ino the client just used), and in bulk from a `PlacementFetch`
+/// reply. Per-entry versions keep a late-arriving stale redirect from
+/// clobbering fresher knowledge.
+pub struct PlacementCache {
+    version: AtomicU64,
+    overrides: RwLock<HashMap<Ino, (HostId, u64)>>,
+}
+
+impl Default for PlacementCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlacementCache {
+    pub fn new() -> PlacementCache {
+        PlacementCache { version: AtomicU64::new(0), overrides: RwLock::new(HashMap::new()) }
+    }
+
+    /// Highest map version this cache has seen evidence of.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::SeqCst)
+    }
+
+    /// Learn one override from a redirect. Ignored when a fresher entry
+    /// for the same ino is already cached.
+    pub fn learn(&self, ino: Ino, owner: HostId, map_version: u64) {
+        let mut o = self.overrides.write().unwrap();
+        match o.get(&ino) {
+            Some(&(_, v)) if v > map_version => {}
+            _ => {
+                o.insert(ino, (owner, map_version));
+            }
+        }
+        self.version.fetch_max(map_version, Ordering::SeqCst);
+    }
+
+    /// Absorb a bulk `PlacementMap` reply. A reply older than what the
+    /// cache already knows is dropped whole; a fresher one replaces the
+    /// table (the server ships the complete override set).
+    pub fn absorb(&self, version: u64, entries: &[PlacementEntry]) {
+        if version < self.version() {
+            return;
+        }
+        let mut o = self.overrides.write().unwrap();
+        o.clear();
+        for e in entries {
+            o.insert(e.dir, (e.owner, version));
+        }
+        self.version.fetch_max(version, Ordering::SeqCst);
+    }
+
+    /// Where to send a request for `ino`: the cached override, else the
+    /// birth host (None — caller falls back to `ino.host` routing).
+    pub fn route(&self, ino: Ino) -> Option<HostId> {
+        self.overrides.read().unwrap().get(&ino).map(|&(h, _)| h)
+    }
+
+    pub fn len(&self) -> usize {
+        self.overrides.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ino(host: u16, file: u64) -> Ino {
+        Ino::new(host, 0, file)
+    }
+
+    #[test]
+    fn map_versions_are_monotone_and_overrides_resolve() {
+        let m = PlacementMap::new();
+        assert_eq!(m.version(), 0);
+        assert_eq!(m.owner(ino(0, 5)), None);
+        let v1 = m.set(ino(0, 5), 2);
+        assert_eq!(v1, 1);
+        assert_eq!(m.owner(ino(0, 5)), Some(2));
+        let v2 = m.set(ino(0, 9), 1);
+        assert!(v2 > v1);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.owned_by(2), 1);
+        assert_eq!(m.owned_by(1), 1);
+        assert_eq!(m.owned_by(7), 0);
+    }
+
+    #[test]
+    fn returning_home_erases_the_override() {
+        let m = PlacementMap::new();
+        m.set(ino(0, 5), 2);
+        let v = m.set(ino(0, 5), 0); // back to the birth host
+        assert!(v > 1, "the flip back still bumps the version");
+        assert_eq!(m.owner(ino(0, 5)), None);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn cache_learns_redirects_but_keeps_fresher_entries() {
+        let c = PlacementCache::new();
+        assert_eq!(c.route(ino(0, 5)), None);
+        c.learn(ino(0, 5), 2, 7);
+        assert_eq!(c.route(ino(0, 5)), Some(2));
+        assert_eq!(c.version(), 7);
+        // a stale redirect (late retry from an old owner) is ignored
+        c.learn(ino(0, 5), 1, 3);
+        assert_eq!(c.route(ino(0, 5)), Some(2));
+        // a fresher one wins
+        c.learn(ino(0, 5), 3, 9);
+        assert_eq!(c.route(ino(0, 5)), Some(3));
+    }
+
+    #[test]
+    fn cache_absorbs_bulk_replies_in_version_order() {
+        let c = PlacementCache::new();
+        c.absorb(4, &[PlacementEntry { dir: ino(0, 5), owner: 2 }]);
+        assert_eq!(c.route(ino(0, 5)), Some(2));
+        // an older full map must not roll the cache back
+        c.absorb(2, &[PlacementEntry { dir: ino(0, 5), owner: 1 }]);
+        assert_eq!(c.route(ino(0, 5)), Some(2));
+        // a fresher full map replaces the table (including removals)
+        c.absorb(6, &[PlacementEntry { dir: ino(0, 9), owner: 1 }]);
+        assert_eq!(c.route(ino(0, 5)), None);
+        assert_eq!(c.route(ino(0, 9)), Some(1));
+        assert_eq!(c.version(), 6);
+    }
+}

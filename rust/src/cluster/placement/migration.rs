@@ -1,0 +1,184 @@
+//! Live subtree migration: the epoch-fenced handoff protocol.
+//!
+//! State machine (source side, driven by the `MigrateSubtree` handler):
+//!
+//! ```text
+//!   SETTLED ──freeze──▶ FREEZING ──import acked──▶ FLIPPED ──▶ GONE
+//!      ▲                   │                          │
+//!      └──── rollback ◀────┴── (transfer failed) ─────┘
+//! ```
+//!
+//! * **FREEZING** — every subtree object gets a `Moved::Freezing` gate
+//!   entry, so new ops bounce with `Busy` (the client's bounded
+//!   busy-retry loop absorbs the blip). Taking and dropping each
+//!   object's exclusive lock then barriers behind ops that passed the
+//!   gate before the freeze: when the locks have been cycled, every
+//!   in-flight mutation has finished and journaled. Finally the
+//!   subtree's directory lease epochs are bumped — the §3.4 revocation
+//!   — so outstanding dirfd handles re-resolve (once) at the new owner.
+//! * **transfer** — a replayable record snapshot (Adopt rows + the
+//!   namespace BFS + file bytes + lease epochs + data generations + the
+//!   exactly-once dedup ledger) is framed exactly like a journal
+//!   segment and shipped in one `SubtreeImport`. The target applies it
+//!   through the same `apply_journal_rec` path recovery uses, appends
+//!   the raw frames to its own journal and fsyncs **before acking** —
+//!   the import ack is a durability point, like a backup's ship ack.
+//! * **FLIPPED** — the shared placement map now names the target; one
+//!   `MovedOut` record per object is journaled and committed on the
+//!   source. This commit is the protocol's crash fence: a source that
+//!   dies *before* it recovers with the subtree intact (the target's
+//!   copy is unreferenced and the map flip dies with the process); a
+//!   source that dies *after* replays `MovedOut`, evicts, and redirects.
+//! * **GONE** — local state is evicted; the gate entries switch to
+//!   `Moved::Gone` with a bounded grace budget: the first `grace`
+//!   straggler ops are forwarded whole (Stamped envelope included, so
+//!   the target's ledger still dedups exactly-once retries), everything
+//!   after is answered `WrongServer { owner, map_version }` and the
+//!   client re-routes itself.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::error::{FsError, FsResult};
+use crate::server::journal::{frame, JournalRec};
+use crate::server::{BServer, Moved};
+use crate::store::inode::ROOT_FILE_ID;
+use crate::transport::SharedTransport;
+use crate::types::{FileId, FileKind, HostId, Ino};
+use crate::wire::{Request, Response};
+
+/// Run the source side of one subtree migration. Returns
+/// `(objects moved, map version after the flip)`.
+pub fn migrate(s: &BServer, dir: Ino, target: HostId, grace: u32) -> FsResult<(u64, u64)> {
+    let dir_file = s.fs.validate(dir)?;
+    if dir_file == ROOT_FILE_ID {
+        return Err(FsError::Invalid("cannot migrate the root directory".into()));
+    }
+    if s.fs.getattr(dir_file)?.kind != FileKind::Directory {
+        return Err(FsError::NotADirectory);
+    }
+    if target == s.fs.host {
+        return Err(FsError::Invalid("migration target already owns the subtree".into()));
+    }
+    let peer = s.peer(target)?;
+    // one migration at a time per source: overlapping freezes of
+    // intersecting subtrees would corrupt each other's rollback
+    let _serial = s.migrations.lock().unwrap();
+
+    // -- FREEZING ------------------------------------------------------------
+    // Gate, drain, re-list until the listing is stable. An op that
+    // passed the gate before the freeze may still be adding children;
+    // cycling every object's exclusive lock barriers behind those
+    // in-flight mutations (they have finished and journaled once the
+    // lock has been held), and the re-list picks up what they created.
+    // After the first pass no op can newly enter the subtree — every
+    // namespace mutation keys on the now-gated directory — so the
+    // listing stabilizes on the second pass.
+    let mut files: Vec<FileId> = Vec::new();
+    loop {
+        let now = s.fs.subtree_files(dir_file)?;
+        {
+            let mut moved = s.moved_out.write().unwrap();
+            for &f in &now {
+                moved.entry(f).or_insert(Moved::Freezing);
+            }
+        }
+        for &f in &now {
+            drop(s.locks.write(f));
+        }
+        let stable = now.len() == files.len();
+        files = now;
+        if stable {
+            break;
+        }
+    }
+    let mut flipped = false;
+    let res = transfer(s, &peer, dir, dir_file, target, grace, &files, &mut flipped);
+    if res.is_err() {
+        // rollback: the subtree stays here and ops resume. A failed
+        // transfer may have left an unreferenced copy on the target;
+        // it is garbage, never routed to (the map was rolled back).
+        if flipped {
+            s.shard_map.set(dir, s.fs.host);
+        }
+        let mut moved = s.moved_out.write().unwrap();
+        for &f in &files {
+            if matches!(moved.get(&f), Some(Moved::Freezing)) {
+                moved.remove(&f);
+            }
+        }
+    }
+    res
+}
+
+#[allow(clippy::too_many_arguments)]
+fn transfer(
+    s: &BServer,
+    peer: &SharedTransport,
+    dir: Ino,
+    dir_file: FileId,
+    target: HostId,
+    grace: u32,
+    files: &[FileId],
+    flipped: &mut bool,
+) -> FsResult<(u64, u64)> {
+    // (the caller already froze the gate and drained in-flight ops)
+    // epoch fence: revoke every outstanding lease on the subtree's
+    // directories — stamps minted here die, and the re-resolve happens
+    // at the new owner (which imports the bumped epochs below)
+    for &f in files {
+        if s.fs.getattr(f)?.kind == FileKind::Directory {
+            s.bump_lease(f);
+        }
+    }
+
+    // -- snapshot ------------------------------------------------------------
+    let mut recs = s.fs.subtree_records(dir_file)?;
+    for &f in files {
+        let epoch = s.lease_epoch(f);
+        if epoch > 0 {
+            recs.push(JournalRec::LeaseEpoch { file: f, epoch });
+        }
+        let gen = s.data_gen(f);
+        if gen > 0 {
+            recs.push(JournalRec::DataGen { file: f, gen });
+        }
+    }
+    // the whole dedup ledger travels too: a stamped op the source already
+    // executed must answer its cached reply at the target, never re-apply
+    recs.extend(s.ledger.snapshot_records());
+    let mut frames = Vec::new();
+    for rec in &recs {
+        frames.extend_from_slice(&frame(&rec.to_bytes()));
+    }
+
+    // -- transfer (the ack is the target's durability point) -----------------
+    match peer.call(Request::SubtreeImport { frames })? {
+        Response::Unit => {}
+        Response::Err(e) => return Err(e),
+        other => return Err(FsError::Protocol(format!("subtree import returned {other:?}"))),
+    }
+
+    // -- FLIPPED: journal the commit fence -----------------------------------
+    let map_version = s.shard_map.set(dir, target);
+    *flipped = true;
+    if let Some(j) = s.fs.journal() {
+        for &f in files {
+            j.append(&JournalRec::MovedOut { file: f, owner: target, map_version });
+        }
+        j.commit()?;
+    }
+
+    // -- GONE: evict and arm the redirect + grace forwarding ------------------
+    let evicted = s.fs.evict_subtree(dir_file)?;
+    {
+        let mut moved = s.moved_out.write().unwrap();
+        for &f in files {
+            moved.insert(
+                f,
+                Moved::Gone { owner: target, map_version, grace: AtomicU32::new(grace) },
+            );
+        }
+    }
+    s.stats.migrated_dirs.fetch_add(1, Ordering::Relaxed);
+    Ok((evicted, map_version))
+}

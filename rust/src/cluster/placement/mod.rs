@@ -1,0 +1,43 @@
+//! Elastic namespace: dynamic sharding, live directory migration, and
+//! load-driven rebalancing (DESIGN.md §12).
+//!
+//! The decentralized namespace of §3.2 routes purely by `ino.host` — a
+//! directory lives forever on the server whose allocator minted it.
+//! That is the right *default* (no location service, no extra RPC), but
+//! it cannot follow load: a subtree that turns hot is pinned to its
+//! birth server. This module makes ownership dynamic while keeping the
+//! paper's serve-yourself property intact:
+//!
+//! * [`map`] — a **versioned, directory-granular placement map**. The
+//!   default owner of every ino is still its birth host; the map holds
+//!   only the *exceptions* (subtrees migrated away), each stamped with a
+//!   monotonically increasing map version. Clients cache it and route
+//!   by override-then-birth-host; servers answer requests for migrated
+//!   objects with [`crate::error::FsError::WrongServer`] so a stale
+//!   client learns the new owner from the error itself and retries
+//!   exactly once — the redirect analogue of the `StaleLease` retry.
+//! * [`migration`] — **live subtree handoff** with an epoch-fenced
+//!   freeze: the source revokes the subtree's permission leases (the
+//!   existing §3.4 lease-epoch bump), drains in-flight mutations behind
+//!   the per-file locks, streams a replayable record snapshot (namespace
+//!   + bytes + epochs + the exactly-once dedup ledger) to the target,
+//!   journals one `MovedOut` per object as the crash-safe commit point,
+//!   then flips the map and forwards stragglers during a bounded grace
+//!   window.
+//! * [`balancer`] — a **load-driven rebalance policy** fed by the
+//!   per-directory op-rate counters every server keeps: when one server
+//!   carries more than `imbalance ×` the mean load, the hottest
+//!   eligible directory moves to the least-loaded server — but only
+//!   when the move strictly improves the maximum, so a single
+//!   whole-load directory never ping-pongs.
+//!
+//! Server pool growth rides the same machinery: a fresh server starts
+//! empty (its id partition has minted no inos), and the first migration
+//! onto it gives it work — see `BuffetCluster::grow`/`shrink`.
+
+pub mod balancer;
+pub mod map;
+pub mod migration;
+
+pub use balancer::{Balancer, BalancerConfig, MigrationPlan, ServerLoad};
+pub use map::{PlacementCache, PlacementMap};

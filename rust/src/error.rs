@@ -38,6 +38,11 @@ pub enum FsError {
     /// mutation was refused because it could not be made durable. Reads
     /// keep serving; the message carries the first append/fsync failure.
     JournalFailed(String),
+    /// The request landed on a server that migrated the target subtree
+    /// away (placement map moved ownership). The client learns the new
+    /// owner and map version from the reply and retries exactly once
+    /// against the new owner — the redirect analogue of StaleLease.
+    WrongServer { owner: u16, map_version: u64 },
 }
 
 impl fmt::Display for FsError {
@@ -63,6 +68,9 @@ impl fmt::Display for FsError {
             FsError::TooManyOpenFiles => write!(f, "too many open files"),
             FsError::StaleData => write!(f, "stale data generation (concurrent writer)"),
             FsError::JournalFailed(m) => write!(f, "journal failed (mutations refused): {m}"),
+            FsError::WrongServer { owner, map_version } => {
+                write!(f, "wrong server (subtree migrated): owner {owner}, map v{map_version}")
+            }
         }
     }
 }
@@ -70,29 +78,32 @@ impl fmt::Display for FsError {
 impl std::error::Error for FsError {}
 
 impl FsError {
-    /// Stable wire code (u16) + optional message payload.
-    pub fn to_wire(&self) -> (u16, &str) {
+    /// Stable wire code (u16) + optional message payload. The message is
+    /// owned because two variants serialize non-string payloads into it
+    /// (WrongServer's map version rides here).
+    pub fn to_wire(&self) -> (u16, String) {
         match self {
-            FsError::NotFound => (1, ""),
-            FsError::PermissionDenied => (2, ""),
-            FsError::NotADirectory => (3, ""),
-            FsError::IsADirectory => (4, ""),
-            FsError::AlreadyExists => (5, ""),
-            FsError::NotEmpty => (6, ""),
-            FsError::BadFd => (7, ""),
-            FsError::Invalid(m) => (8, m),
-            FsError::Stale => (9, ""),
-            FsError::CacheInvalidated => (10, ""),
-            FsError::NoSuchServer(_) => (11, ""),
-            FsError::Busy => (12, ""),
-            FsError::NameTooLong => (13, ""),
-            FsError::Transport(m) => (14, m),
-            FsError::Protocol(m) => (15, m),
-            FsError::Io(m) => (16, m),
-            FsError::StaleLease => (17, ""),
-            FsError::TooManyOpenFiles => (18, ""),
-            FsError::StaleData => (19, ""),
-            FsError::JournalFailed(m) => (20, m),
+            FsError::NotFound => (1, String::new()),
+            FsError::PermissionDenied => (2, String::new()),
+            FsError::NotADirectory => (3, String::new()),
+            FsError::IsADirectory => (4, String::new()),
+            FsError::AlreadyExists => (5, String::new()),
+            FsError::NotEmpty => (6, String::new()),
+            FsError::BadFd => (7, String::new()),
+            FsError::Invalid(m) => (8, m.clone()),
+            FsError::Stale => (9, String::new()),
+            FsError::CacheInvalidated => (10, String::new()),
+            FsError::NoSuchServer(_) => (11, String::new()),
+            FsError::Busy => (12, String::new()),
+            FsError::NameTooLong => (13, String::new()),
+            FsError::Transport(m) => (14, m.clone()),
+            FsError::Protocol(m) => (15, m.clone()),
+            FsError::Io(m) => (16, m.clone()),
+            FsError::StaleLease => (17, String::new()),
+            FsError::TooManyOpenFiles => (18, String::new()),
+            FsError::StaleData => (19, String::new()),
+            FsError::JournalFailed(m) => (20, m.clone()),
+            FsError::WrongServer { map_version, .. } => (21, map_version.to_string()),
         }
     }
 
@@ -118,14 +129,17 @@ impl FsError {
             18 => FsError::TooManyOpenFiles,
             19 => FsError::StaleData,
             20 => FsError::JournalFailed(msg),
+            21 => FsError::WrongServer { owner: aux, map_version: msg.parse().unwrap_or(0) },
             other => FsError::Protocol(format!("unknown error code {other}")),
         }
     }
 
-    /// The `aux` u16 carried next to the code (host id for NoSuchServer).
+    /// The `aux` u16 carried next to the code (host id for NoSuchServer,
+    /// new-owner host for WrongServer).
     pub fn wire_aux(&self) -> u16 {
         match self {
             FsError::NoSuchServer(h) => *h,
+            FsError::WrongServer { owner, .. } => *owner,
             _ => 0,
         }
     }
@@ -171,10 +185,11 @@ mod tests {
             FsError::TooManyOpenFiles,
             FsError::StaleData,
             FsError::JournalFailed("wal torn".into()),
+            FsError::WrongServer { owner: 3, map_version: 42 },
         ];
         for e in all {
             let (code, msg) = e.to_wire();
-            let back = FsError::from_wire(code, msg.to_string(), e.wire_aux());
+            let back = FsError::from_wire(code, msg, e.wire_aux());
             assert_eq!(back, e);
         }
     }

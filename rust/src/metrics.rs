@@ -16,7 +16,7 @@ use crate::util::hist::Histogram;
 pub const OPS: &[&str] = &[
     "lookup", "readdir", "getattr", "open", "read", "write", "close", "create", "mkdir",
     "unlink", "rmdir", "rename", "chmod", "chown", "truncate", "statfs", "hello", "resolve",
-    "lease", "replicate", "invalidate",
+    "lease", "replicate", "migrate", "placement", "redirect", "invalidate",
 ];
 
 fn op_index(op: &str) -> usize {
@@ -34,7 +34,7 @@ fn lease_op_index(op: &str) -> usize {
 
 #[derive(Default)]
 pub struct RpcMetrics {
-    counts: [AtomicU64; 21],
+    counts: [AtomicU64; 24],
     bytes_out: AtomicU64,
     bytes_in: AtomicU64,
     lat: Mutex<BTreeMap<&'static str, Histogram>>,
@@ -511,6 +511,31 @@ mod tests {
         let m = RpcMetrics::new();
         m.record("replicate", 128, 16, Duration::from_micros(10));
         assert_eq!(m.count("replicate"), 1);
+        assert_eq!(m.count("invalidate"), 0, "must not alias into the catch-all");
+    }
+
+    #[test]
+    fn migrate_is_a_first_class_op() {
+        let m = RpcMetrics::new();
+        m.record("migrate", 256, 16, Duration::from_micros(10));
+        assert_eq!(m.count("migrate"), 1);
+        assert_eq!(m.count("invalidate"), 0, "must not alias into the catch-all");
+    }
+
+    #[test]
+    fn placement_is_a_first_class_op() {
+        let m = RpcMetrics::new();
+        m.record("placement", 16, 128, Duration::from_micros(10));
+        assert_eq!(m.count("placement"), 1);
+        assert_eq!(m.count("invalidate"), 0, "must not alias into the catch-all");
+        assert_eq!(m.metadata_rpcs(), 1);
+    }
+
+    #[test]
+    fn redirect_is_a_first_class_op() {
+        let m = RpcMetrics::new();
+        m.record("redirect", 0, 0, Duration::ZERO);
+        assert_eq!(m.count("redirect"), 1);
         assert_eq!(m.count("invalidate"), 0, "must not alias into the catch-all");
     }
 

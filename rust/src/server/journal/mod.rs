@@ -46,7 +46,7 @@ use std::time::Instant;
 use crate::codec::{Dec, Enc, Wire};
 use crate::error::{FsError, FsResult};
 use crate::store::fs::LocalFs;
-use crate::types::{DirEntry, FileId, FileKind, Ino, PermBlob};
+use crate::types::{DirEntry, FileId, FileKind, HostId, Ino, PermBlob, Version};
 use crate::transport::SharedTransport;
 use crate::util::hist::Histogram;
 use crate::wire::{Request, Response};
@@ -86,6 +86,17 @@ pub enum JournalRec {
     /// completed client-side and will never be retried, so the ledger
     /// entries below it are pruned (this is what bounds the ledger).
     OpLowWater { client: u32, upto: u64 },
+    /// Subtree migration commit point (source side): `file` now lives on
+    /// `owner` under placement-map version `map_version`. Replay evicts
+    /// the local copy and re-arms the redirect — a source that crashes
+    /// after journaling these recs recovers straight into "redirect to
+    /// the new owner", never into a split-brain double copy.
+    MovedOut { file: FileId, owner: HostId, map_version: u64 },
+    /// Migration target side: `file` was imported with its *birth* ino
+    /// `(host, version, file)` minted by another allocator. Replay
+    /// re-registers the adoption so every client-held Ino keeps
+    /// validating after the target recovers.
+    Adopt { host: HostId, version: Version, file: FileId },
 }
 
 impl Wire for JournalRec {
@@ -192,6 +203,18 @@ impl Wire for JournalRec {
                 e.u32(*client);
                 e.u64(*upto);
             }
+            JournalRec::MovedOut { file, owner, map_version } => {
+                e.u8(17);
+                e.u64(*file);
+                e.u16(*owner);
+                e.u64(*map_version);
+            }
+            JournalRec::Adopt { host, version, file } => {
+                e.u8(18);
+                e.u16(*host);
+                e.u16(*version);
+                e.u64(*file);
+            }
         }
     }
 
@@ -235,6 +258,8 @@ impl Wire for JournalRec {
             14 => JournalRec::DataGen { file: d.u64()?, gen: d.u64()? },
             15 => JournalRec::OpResult { client: d.u32()?, op_id: d.u64()?, reply: d.bytes()? },
             16 => JournalRec::OpLowWater { client: d.u32()?, upto: d.u64()? },
+            17 => JournalRec::MovedOut { file: d.u64()?, owner: d.u16()?, map_version: d.u64()? },
+            18 => JournalRec::Adopt { host: d.u16()?, version: d.u16()?, file: d.u64()? },
             t => return Err(FsError::Protocol(format!("bad journal record tag {t}"))),
         })
     }
@@ -278,7 +303,9 @@ impl JournalRec {
             JournalRec::LeaseEpoch { .. }
             | JournalRec::DataGen { .. }
             | JournalRec::OpResult { .. }
-            | JournalRec::OpLowWater { .. } => Ok(()),
+            | JournalRec::OpLowWater { .. }
+            | JournalRec::MovedOut { .. }
+            | JournalRec::Adopt { .. } => Ok(()),
         };
     }
 }
@@ -935,6 +962,8 @@ mod tests {
             JournalRec::DataGen { file: 2, gen: 8 },
             JournalRec::OpResult { client: 7, op_id: 42, reply: vec![8] },
             JournalRec::OpLowWater { client: 7, upto: 41 },
+            JournalRec::MovedOut { file: 2, owner: 3, map_version: 5 },
+            JournalRec::Adopt { host: 0, version: 0, file: 2 },
         ]
     }
 

@@ -27,9 +27,10 @@ pub mod ops;
 pub mod registry;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
+use crate::cluster::placement::PlacementMap;
 use crate::error::{FsError, FsResult};
 use crate::perm;
 use crate::store::fs::LocalFs;
@@ -77,6 +78,23 @@ pub struct ServerStats {
     pub stale_data: AtomicU64,
     /// `DataInvalidate` pushes sent to caching clients.
     pub data_invalidations_pushed: AtomicU64,
+    /// `WrongServer` redirects answered for migrated-away objects.
+    pub redirects_served: AtomicU64,
+    /// Straggler ops forwarded whole to the new owner (grace window).
+    pub forwards: AtomicU64,
+    /// Subtree migrations completed with this server as the source.
+    pub migrated_dirs: AtomicU64,
+}
+
+/// Gate state of an object this server no longer owns (DESIGN.md §12).
+pub enum Moved {
+    /// Mid-migration freeze: new ops bounce with `Busy` and retry into
+    /// either the unfrozen subtree (rollback) or a redirect (handoff).
+    Freezing,
+    /// Handoff committed: `owner` has the object. The first `grace` ops
+    /// are forwarded whole; after the budget drains, clients get
+    /// `WrongServer { owner, map_version }` and re-route themselves.
+    Gone { owner: HostId, map_version: u64, grace: AtomicU32 },
 }
 
 /// Servers inline file contents on open replies up to this size — the
@@ -91,7 +109,7 @@ pub struct BServer {
     pub fs: LocalFs,
     openlist: OpenList,
     registry: CacheRegistry,
-    locks: FileLocks,
+    pub(crate) locks: FileLocks,
     /// host → transport to the peer server (server↔server ops).
     peers: RwLock<HashMap<HostId, SharedTransport>>,
     /// client → push endpoint for invalidations.
@@ -124,6 +142,24 @@ pub struct BServer {
     replication_source: AtomicBool,
     /// Exactly-once dedup ledger for stamped mutations (DESIGN.md §11).
     pub ledger: ledger::DedupLedger,
+    /// Objects migrated away (or mid-freeze): FileId → gate state. Keyed
+    /// by bare FileId — ids are globally unique across hosts (partitioned
+    /// allocator), and the shared `ROOT_FILE_ID` never migrates.
+    pub(crate) moved_out: RwLock<HashMap<FileId, Moved>>,
+    /// The cluster's shared placement map (DESIGN.md §12). Servers that
+    /// never migrate keep a private empty map — redirects then simply
+    /// never fire.
+    pub shard_map: Arc<PlacementMap>,
+    /// Per-directory op counters for the load balancer, drained by
+    /// [`BServer::take_dir_loads`] each rebalance interval.
+    pub(crate) dir_load: RwLock<HashMap<FileId, u64>>,
+    /// Serializes outgoing migrations: overlapping freezes of
+    /// intersecting subtrees would corrupt each other's rollback.
+    pub(crate) migrations: Mutex<()>,
+    /// True when this server accepts `MigrateSubtree`/`SubtreeImport`.
+    /// Same trust model as `backup_role`: an import carries no
+    /// credentials and writes the whole subtree, so the role is opt-in.
+    elastic: AtomicBool,
     pub stats: ServerStats,
 }
 
@@ -133,6 +169,17 @@ impl BServer {
     }
 
     pub fn with_placement(fs: LocalFs, placement: Placement) -> Arc<BServer> {
+        Self::with_shard_map(fs, placement, Arc::new(PlacementMap::new()))
+    }
+
+    /// Like [`BServer::with_placement`], but sharing the cluster-wide
+    /// placement map so migrations performed by any server are visible
+    /// to every server's redirect logic.
+    pub fn with_shard_map(
+        fs: LocalFs,
+        placement: Placement,
+        shard_map: Arc<PlacementMap>,
+    ) -> Arc<BServer> {
         Arc::new(BServer {
             fs,
             openlist: OpenList::new(),
@@ -148,6 +195,11 @@ impl BServer {
             backup_role: AtomicBool::new(false),
             replication_source: AtomicBool::new(false),
             ledger: ledger::DedupLedger::default(),
+            moved_out: RwLock::new(HashMap::new()),
+            shard_map,
+            dir_load: RwLock::new(HashMap::new()),
+            migrations: Mutex::new(()),
+            elastic: AtomicBool::new(false),
             stats: ServerStats::default(),
         })
     }
@@ -206,6 +258,23 @@ impl BServer {
             JournalRec::OpLowWater { client, upto } => {
                 self.ledger.prune(*client, *upto);
             }
+            JournalRec::Adopt { host, version, file } => {
+                // importing a subtree clears any stale moved-out gate from
+                // an earlier outbound migration of the same objects (a
+                // subtree migrating back home), then records the birth ino
+                // so every client-held handle keeps validating
+                self.moved_out.write().unwrap().remove(file);
+                self.fs.adopt(Ino::new(*host, *version, *file));
+            }
+            JournalRec::MovedOut { file, owner, map_version } => {
+                // the migration commit fence: recover straight into
+                // "redirect to the new owner" with no grace budget left
+                self.moved_out.write().unwrap().insert(
+                    *file,
+                    Moved::Gone { owner: *owner, map_version: *map_version, grace: AtomicU32::new(0) },
+                );
+                self.fs.evict_file(*file);
+            }
             other => other.replay(&self.fs),
         }
     }
@@ -238,6 +307,45 @@ impl BServer {
 
     pub fn is_replication_source(&self) -> bool {
         self.replication_source.load(Ordering::Relaxed)
+    }
+
+    /// Opt this server into the elastic-namespace protocol: accept
+    /// `MigrateSubtree` (as a source) and `SubtreeImport` (as a target).
+    pub fn enable_elastic(&self) {
+        self.elastic.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_elastic(&self) -> bool {
+        self.elastic.load(Ordering::Relaxed)
+    }
+
+    /// Count one op against a directory for the load balancer. Called
+    /// with the op's primary FileId — files are folded into their owning
+    /// directory at drain time, so the counter here is cheap.
+    pub(crate) fn note_dir_load(&self, file: FileId) {
+        *self.dir_load.write().unwrap().entry(file).or_insert(0) += 1;
+    }
+
+    /// Drain this interval's per-directory load counters, folding each
+    /// non-directory object's count into its parent directory. Returns
+    /// `(dir ino, ops)` pairs for directories this server still owns.
+    pub fn take_dir_loads(&self) -> Vec<(Ino, u64)> {
+        let raw = std::mem::take(&mut *self.dir_load.write().unwrap());
+        let mut dirs: HashMap<FileId, u64> = HashMap::new();
+        for (file, n) in raw {
+            let target = match self.fs.getattr(file) {
+                Ok(attr) if attr.kind == FileKind::Directory => Some(file),
+                Ok(_) => match self.fs.parent_of(file) {
+                    Ok(Some((p, _))) if self.fs.owns(p) => Some(p.file),
+                    _ => None,
+                },
+                Err(_) => None, // unlinked or migrated away since counted
+            };
+            if let Some(d) = target {
+                *dirs.entry(d).or_insert(0) += n;
+            }
+        }
+        dirs.into_iter().map(|(f, n)| (self.fs.ino(f), n)).collect()
     }
 
     /// Standby side of the self-healing protocol: pull the primary's
@@ -335,6 +443,15 @@ impl BServer {
             }
         }
         recs.extend(self.ledger.snapshot_records());
+        for (file, m) in self.moved_out.read().unwrap().iter() {
+            if let Moved::Gone { owner, map_version, .. } = m {
+                recs.push(JournalRec::MovedOut {
+                    file: *file,
+                    owner: *owner,
+                    map_version: *map_version,
+                });
+            }
+        }
         j.checkpoint(&quiesced, &recs)
     }
 
@@ -442,7 +559,7 @@ impl BServer {
 
     /// Revoke every outstanding lease on `file`: stamps carrying the old
     /// epoch are rejected with `StaleLease` from here on.
-    fn bump_lease(&self, file: FileId) {
+    pub(crate) fn bump_lease(&self, file: FileId) {
         let epoch = {
             let mut m = self.lease_epochs.write().unwrap();
             let e = m.entry(file).or_insert(0);
@@ -486,7 +603,7 @@ impl BServer {
         Ok(file)
     }
 
-    fn peer(&self, host: HostId) -> FsResult<SharedTransport> {
+    pub(crate) fn peer(&self, host: HostId) -> FsResult<SharedTransport> {
         self.peers
             .read()
             .unwrap()

@@ -18,6 +18,9 @@
 //!   `Chown`, `PrepareInvalidate`, `UpdateDirentPerm`.
 //! * [`relative`] — batched walks and the handle API: `ResolvePath`,
 //!   `Lease`, and every lease-stamped `*At` op.
+//! * [`shard`] — the elastic namespace (DESIGN.md §12): the moved-out
+//!   gate every request passes first, `PlacementFetch`, and the
+//!   `MigrateSubtree`/`SubtreeImport` migration RPCs.
 //!
 //! Every handler takes the whole [`Request`] and destructures its own
 //! variant; a table/handler mismatch surfaces as a loud protocol error,
@@ -28,6 +31,7 @@ pub mod meta;
 pub mod namespace;
 pub mod perm;
 pub mod relative;
+pub mod shard;
 
 use std::sync::atomic::Ordering;
 
@@ -81,6 +85,9 @@ fn index(req: &Request) -> usize {
         Request::JournalShip { .. } => 34,
         Request::Stamped { .. } => 35,
         Request::JournalFetch { .. } => 36,
+        Request::PlacementFetch { .. } => 37,
+        Request::MigrateSubtree { .. } => 38,
+        Request::SubtreeImport { .. } => 39,
     }
 }
 
@@ -117,11 +124,13 @@ fn is_mutating(req: &Request) -> bool {
             | Request::RmdirAt { .. }
             | Request::RenameAt { .. }
             | Request::WriteBatch { .. }
+            | Request::MigrateSubtree { .. }
+            | Request::SubtreeImport { .. }
     )
 }
 
 /// The handler table, ordered by wire tag (same order as [`index`]).
-static HANDLERS: [Handler; 37] = [
+static HANDLERS: [Handler; 40] = [
     meta::lookup,              // 0
     meta::read_dir,            // 1
     meta::get_attr,            // 2
@@ -159,6 +168,9 @@ static HANDLERS: [Handler; 37] = [
     super::journal::ship,      // 34
     stamped,                   // 35
     super::journal::fetch,     // 36
+    shard::placement_fetch,    // 37
+    shard::migrate_subtree,    // 38
+    shard::subtree_import,     // 39
 ];
 
 /// The exactly-once envelope handler (DESIGN.md §11). Unwraps a
@@ -177,7 +189,11 @@ fn stamped(s: &BServer, req: Request) -> FsResult<Response> {
     // no nesting games: the envelope wraps exactly one client op
     if matches!(
         inner,
-        Request::Stamped { .. } | Request::JournalShip { .. } | Request::JournalFetch { .. }
+        Request::Stamped { .. }
+            | Request::JournalShip { .. }
+            | Request::JournalFetch { .. }
+            | Request::MigrateSubtree { .. }
+            | Request::SubtreeImport { .. }
     ) {
         return Err(FsError::Protocol("stamped envelope cannot nest replication ops".into()));
     }
@@ -227,6 +243,18 @@ fn stamped(s: &BServer, req: Request) -> FsResult<Response> {
 /// ship) before returning — the reply frame is the acknowledgement, so
 /// it must not leave until the op is durable.
 pub fn dispatch(s: &BServer, req: Request) -> FsResult<Response> {
+    // elastic-namespace gate first: an op aimed at a migrated-away
+    // object is forwarded (grace window) or redirected (`WrongServer`)
+    // before any handler sees it — and only locally-owned targets are
+    // counted against the balancer's per-directory load
+    if let Some(resp) = shard::route_moved(s, &req)? {
+        return Ok(resp);
+    }
+    if let Some(ino) = shard::shard_target(&req) {
+        if s.fs.owns(ino) {
+            s.note_dir_load(ino.file);
+        }
+    }
     let mutating = is_mutating(&req);
     let resp = HANDLERS[index(&req)](s, req);
     if mutating && resp.is_ok() {
@@ -305,6 +333,9 @@ mod tests {
                 inner: Box::new(Request::Chmod { ino, mode: 0o700, cred: cred() }),
             },
             Request::JournalFetch { gen: 0, offset: 0, max_bytes: 1 << 16 },
+            Request::PlacementFetch { since: 0 },
+            Request::MigrateSubtree { dir: ino, target: 1, grace: 0 },
+            Request::SubtreeImport { frames: vec![] },
         ];
         assert_eq!(all.len(), HANDLERS.len(), "one sample per table entry");
         for (i, req) in all.into_iter().enumerate() {

@@ -86,7 +86,7 @@ pub fn unlink(s: &BServer, req: Request) -> FsResult<Response> {
     let _g = s.locks.write(dir_file);
     s.invalidate_barrier(dir_file);
     let entry = s.fs.unlink(dir_file, &name)?;
-    if entry.ino.host != s.fs.host {
+    if !s.fs.owns(entry.ino) {
         // remote data object: ask its server to drop it
         s.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
         let _ = s.peer(entry.ino.host)?.call(Request::DropObject { ino: entry.ino });
@@ -119,7 +119,7 @@ pub fn rmdir(s: &BServer, req: Request) -> FsResult<Response> {
     s.invalidate_barrier(dir_file);
     let entry = s.fs.rmdir(dir_file, &name)?;
     // the removed dir itself may be cached by clients
-    if entry.ino.host == s.fs.host {
+    if s.fs.owns(entry.ino) {
         s.invalidate_barrier(entry.ino.file);
     }
     Ok(Response::Unit)

@@ -75,6 +75,13 @@ pub fn resolve_path(s: &BServer, req: Request) -> FsResult<Response> {
             next = Some(entry.ino);
             break;
         }
+        if s.moved_out.read().unwrap().contains_key(&entry.ino.file) {
+            // migrated-away subtree: same shape as a server boundary —
+            // the client resolves the owner through its placement cache
+            // (or one WrongServer redirect) and continues there
+            next = Some(entry.ino);
+            break;
+        }
         cur = s.fs.validate(entry.ino)?;
     }
     Ok(Response::Walked { dirs, walked, next })

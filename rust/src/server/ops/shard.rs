@@ -1,0 +1,156 @@
+//! Elastic-namespace handlers (DESIGN.md §12): the moved-out gate that
+//! every request passes through, the placement-map fetch, and the two
+//! migration RPCs (`MigrateSubtree` drives a source, `SubtreeImport`
+//! lands the payload on a target).
+
+use std::sync::atomic::Ordering;
+
+use crate::cluster::placement::migration;
+use crate::error::{FsError, FsResult};
+use crate::server::{journal, BServer, Moved};
+use crate::types::Ino;
+use crate::wire::{Request, Response};
+
+/// The ino whose owner decides where a request must execute — the one
+/// the moved-out gate and the load accounting key on. `None` for ops
+/// with no single placement subject (bootstrap, replication, admin).
+pub(crate) fn shard_target(req: &Request) -> Option<Ino> {
+    match req {
+        Request::Lookup { dir, .. }
+        | Request::ReadDir { dir, .. }
+        | Request::Create { dir, .. }
+        | Request::Mkdir { dir, .. }
+        | Request::Unlink { dir, .. }
+        | Request::Rmdir { dir, .. }
+        | Request::OpenByName { dir, .. }
+        | Request::PrepareInvalidate { dir }
+        | Request::UpdateDirentPerm { dir, .. } => Some(*dir),
+        Request::GetAttr { ino }
+        | Request::Open { ino, .. }
+        | Request::Read { ino, .. }
+        | Request::Write { ino, .. }
+        | Request::Close { ino, .. }
+        | Request::Chmod { ino, .. }
+        | Request::Chown { ino, .. }
+        | Request::Truncate { ino, .. }
+        | Request::DropObject { ino }
+        | Request::ReadBatch { ino, .. }
+        | Request::WriteBatch { ino, .. } => Some(*ino),
+        // rename gates on the source dir here; `route_moved` checks the
+        // destination separately so a half-migrated pair never applies
+        Request::Rename { sdir, .. } => Some(*sdir),
+        Request::ResolvePath { base, .. } => Some(*base),
+        Request::Lease { node, .. } => Some(*node),
+        Request::OpenAt { lease, .. }
+        | Request::StatAt { lease, .. }
+        | Request::ReadDirAt { lease, .. }
+        | Request::CreateAt { lease, .. }
+        | Request::MkdirAt { lease, .. }
+        | Request::UnlinkAt { lease, .. }
+        | Request::RmdirAt { lease, .. } => Some(lease.node),
+        Request::RenameAt { src, .. } => Some(src.node),
+        Request::Stamped { inner, .. } => shard_target(inner),
+        Request::Hello { .. }
+        | Request::Statfs { .. }
+        | Request::CreateOrphan { .. }
+        | Request::JournalShip { .. }
+        | Request::JournalFetch { .. }
+        | Request::PlacementFetch { .. }
+        | Request::MigrateSubtree { .. }
+        | Request::SubtreeImport { .. } => None,
+    }
+}
+
+/// Secondary placement subjects a request touches beyond its primary
+/// target: the destination directory of a rename. Both halves must be
+/// here — applying a rename whose destination just migrated away would
+/// plant a dirent in an evicted directory.
+fn shard_secondary(req: &Request) -> Option<Ino> {
+    match req {
+        Request::Rename { ddir, .. } => Some(*ddir),
+        Request::RenameAt { dst, .. } => Some(dst.node),
+        Request::Stamped { inner, .. } => shard_secondary(inner),
+        _ => None,
+    }
+}
+
+/// The moved-out gate, run before dispatch. `Ok(None)` = the object is
+/// (still) local, execute normally. `Ok(Some(resp))` = a straggler op
+/// was forwarded whole to the new owner during the grace window.
+/// `Err(Busy)` = mid-freeze, retry here. `Err(WrongServer)` = redirect.
+pub(crate) fn route_moved(s: &BServer, req: &Request) -> FsResult<Option<Response>> {
+    for ino in [shard_target(req), shard_secondary(req)].into_iter().flatten() {
+        let moved = s.moved_out.read().unwrap();
+        match moved.get(&ino.file) {
+            None => continue,
+            Some(Moved::Freezing) => return Err(FsError::Busy),
+            Some(Moved::Gone { owner, map_version, grace }) => {
+                let forward = grace
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |g| g.checked_sub(1))
+                    .is_ok();
+                let (owner, map_version) = (*owner, *map_version);
+                drop(moved);
+                if forward {
+                    // straggler grace: relay the whole request — Stamped
+                    // envelope included, so the target's dedup ledger
+                    // still sees the original (client, op_id)
+                    s.stats.forwards.fetch_add(1, Ordering::Relaxed);
+                    return s.peer(owner)?.call(req.clone()).map(Some);
+                }
+                s.stats.redirects_served.fetch_add(1, Ordering::Relaxed);
+                return Err(FsError::WrongServer { owner, map_version });
+            }
+        }
+    }
+    Ok(None)
+}
+
+pub(super) fn placement_fetch(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::PlacementFetch { since } = req else {
+        return Err(super::misrouted("placement_fetch"));
+    };
+    let version = s.shard_map.version();
+    // the client's copy is current: confirm with an empty delta
+    let entries = if since == version { Vec::new() } else { s.shard_map.entries() };
+    Ok(Response::PlacementMap { version, entries })
+}
+
+pub(super) fn migrate_subtree(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::MigrateSubtree { dir, target, grace } = req else {
+        return Err(super::misrouted("migrate_subtree"));
+    };
+    if !s.is_elastic() {
+        return Err(FsError::PermissionDenied);
+    }
+    let (files, map_version) = migration::migrate(s, dir, target, grace)?;
+    Ok(Response::Migrated { files, map_version })
+}
+
+pub(super) fn subtree_import(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::SubtreeImport { frames } = req else {
+        return Err(super::misrouted("subtree_import"));
+    };
+    if !s.is_elastic() {
+        return Err(FsError::PermissionDenied);
+    }
+    let (recs, clean) = journal::decode_frames(&frames);
+    if clean != frames.len() {
+        return Err(FsError::Protocol(format!(
+            "corrupt subtree import: {} of {} bytes decodable",
+            clean,
+            frames.len()
+        )));
+    }
+    for rec in &recs {
+        s.apply_journal_rec(rec);
+    }
+    // journal the raw frames byte-identical and fsync BEFORE acking:
+    // the source evicts its copy on our ack, so the ack must mean
+    // "this subtree survives my crash" — same contract as JournalShip
+    if let Some(j) = s.fs.journal() {
+        j.append_raw(&frames);
+        j.commit()?;
+        s.maybe_checkpoint(&j)?;
+    }
+    Ok(Response::Unit)
+}

@@ -92,6 +92,13 @@ impl DirTable {
         Ok(self.len(dir)? == 0)
     }
 
+    /// Remove a directory body and everything in it, unconditionally —
+    /// subtree eviction after a migration handed the contents to another
+    /// server (the ordinary `remove_dir` insists on emptiness).
+    pub fn drop_dir(&self, dir: FileId) {
+        self.dirs.write().unwrap().remove(&dir);
+    }
+
     /// Update the 10-byte perm blob of one entry (chmod/chown sync).
     pub fn set_perm(&self, dir: FileId, name: &str, perm: PermBlob) -> FsResult<()> {
         let mut dirs = self.dirs.write().unwrap();

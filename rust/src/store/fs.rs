@@ -7,13 +7,14 @@
 //! server-side). Both are built on this engine, which keeps the
 //! comparison apples-to-apples.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::error::{FsError, FsResult};
 use crate::server::journal::{Journal, JournalRec};
 use crate::store::dir::DirTable;
-use crate::store::inode::{InodeRec, InodeTable, ROOT_FILE_ID};
+use crate::store::inode::{id_home, InodeRec, InodeTable, ROOT_FILE_ID};
 use crate::store::ObjectStore;
 use crate::types::{Attr, DirEntry, FileId, FileKind, HostId, Ino, PermBlob, Version};
 use crate::util::unix_now;
@@ -27,6 +28,11 @@ pub struct LocalFs {
     /// Monotonically increasing change counter (cheap cache-coherence
     /// epoch; bumped on any namespace mutation).
     epoch: AtomicU64,
+    /// Foreign-born objects this server owns after a subtree migration:
+    /// FileId → the `(host, version)` baked into the ino its birth
+    /// server minted. Clients keep routing by that birth ino (via the
+    /// placement map), so the adopted object must keep answering to it.
+    adopted: RwLock<HashMap<FileId, (HostId, Version)>>,
     /// Write-ahead journal sink. When attached, every mutating method
     /// appends a state-level record right after its table mutation; the
     /// dispatch layer fsyncs (commit) before the reply is sent. The
@@ -43,10 +49,11 @@ impl LocalFs {
         let fs = LocalFs {
             host,
             version,
-            inodes: InodeTable::new(),
+            inodes: InodeTable::for_host(host),
             dirs: DirTable::new(),
             data,
             epoch: AtomicU64::new(1),
+            adopted: RwLock::new(HashMap::new()),
             journal: RwLock::new(None),
         };
         fs.inodes.insert(
@@ -57,8 +64,48 @@ impl LocalFs {
         fs
     }
 
+    /// The wire identity of a local object: its birth ino. An adopted
+    /// object keeps the `(host, version)` its birth server minted — every
+    /// dirent, attr and client-held handle stays valid across migration.
     pub fn ino(&self, file: FileId) -> Ino {
+        if let Some(&(h, v)) = self.adopted.read().unwrap().get(&file) {
+            return Ino::new(h, v, file);
+        }
         Ino::new(self.host, self.version, file)
+    }
+
+    /// Does this engine hold `ino`'s object — born here (host+version
+    /// match) or adopted from its birth server by a migration?
+    pub fn owns(&self, ino: Ino) -> bool {
+        if ino.host == self.host {
+            ino.version == self.version
+        } else {
+            self.adopted.read().unwrap().get(&ino.file) == Some(&(ino.host, ino.version))
+        }
+    }
+
+    /// Register `ino` as adopted (non-logging; the migration import
+    /// journals the `Adopt` record itself). Adopting a local ino clears
+    /// any stale entry — an object that migrated away and later returned
+    /// home.
+    pub fn adopt(&self, ino: Ino) {
+        let mut a = self.adopted.write().unwrap();
+        if ino.host == self.host {
+            a.remove(&ino.file);
+        } else {
+            a.insert(ino.file, (ino.host, ino.version));
+        }
+    }
+
+    /// Adopt records for every foreign-born object held here (checkpoint
+    /// prologue: replay must re-register adoption before the creates).
+    pub fn adopted_records(&self) -> Vec<JournalRec> {
+        self.adopted
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(&file, &(host, version))| JournalRec::Adopt { host, version, file })
+            .collect()
     }
 
     pub fn root_ino(&self) -> Ino {
@@ -91,10 +138,14 @@ impl LocalFs {
         }
     }
 
-    /// Validate that `ino` belongs to this engine (host + version). A
-    /// version mismatch means the server restarted — the paper's `ESTALE`.
+    /// Validate that `ino` belongs to this engine (host + version, or an
+    /// adopted foreign ino after a migration). A version mismatch means
+    /// the server restarted — the paper's `ESTALE`.
     pub fn validate(&self, ino: Ino) -> FsResult<FileId> {
         if ino.host != self.host {
+            if self.adopted.read().unwrap().get(&ino.file) == Some(&(ino.host, ino.version)) {
+                return Ok(ino.file);
+            }
             return Err(FsError::NoSuchServer(ino.host));
         }
         if ino.version != self.version {
@@ -175,7 +226,7 @@ impl LocalFs {
     /// the authoritative copy of its 10-byte perm blob).
     pub fn insert_remote_entry(&self, dir: FileId, entry: DirEntry) -> FsResult<()> {
         self.require_dir(dir)?;
-        if entry.ino.host == self.host {
+        if self.owns(entry.ino) {
             return Err(FsError::Invalid("insert_remote_entry with local ino".into()));
         }
         self.dirs.insert(dir, entry.clone())?;
@@ -237,7 +288,7 @@ impl LocalFs {
         if log {
             self.log(JournalRec::Unlink { dir, name: name.to_string() });
         }
-        if entry.ino.host == self.host {
+        if self.owns(entry.ino) {
             self.drop_object_inner(entry.ino.file, log)?;
         }
         self.touch_dir(dir);
@@ -282,7 +333,7 @@ impl LocalFs {
         if entry.kind != FileKind::Directory {
             return Err(FsError::NotADirectory);
         }
-        if entry.ino.host == self.host {
+        if self.owns(entry.ino) {
             if !self.dirs.is_empty(entry.ino.file)? {
                 return Err(FsError::NotEmpty);
             }
@@ -321,7 +372,7 @@ impl LocalFs {
         self.require_dir(sdir)?;
         self.require_dir(ddir)?;
         let entry = self.dirs.rename(sdir, sname, ddir, dname)?;
-        if entry.ino.host == self.host {
+        if self.owns(entry.ino) {
             self.inodes
                 .update(entry.ino.file, |rec| {
                     rec.parent = Some(self.ino(ddir));
@@ -541,7 +592,12 @@ impl LocalFs {
         gid: u32,
     ) -> FsResult<()> {
         self.require_dir(dir)?;
-        self.inodes.reserve_through(file);
+        // only reserve ids from this host's own partition: replaying an
+        // adopted foreign id must not jump the allocator into another
+        // host's range (a later alloc_id would collide cluster-wide)
+        if id_home(file) == self.host {
+            self.inodes.reserve_through(file);
+        }
         let perm = PermBlob::new(mode, uid, gid);
         let entry = DirEntry { name: name.to_string(), ino: self.ino(file), kind, perm };
         let _ = self.dirs.remove(dir, name);
@@ -568,7 +624,9 @@ impl LocalFs {
         uid: u32,
         gid: u32,
     ) -> FsResult<()> {
-        self.inodes.reserve_through(file);
+        if id_home(file) == self.host {
+            self.inodes.reserve_through(file);
+        }
         if !self.inodes.exists(file) {
             self.inodes.insert(
                 file,
@@ -600,7 +658,10 @@ impl LocalFs {
     /// Timestamps are not preserved across a checkpoint — acceptable
     /// metadata loss, documented in DESIGN.md §10.
     pub fn snapshot_records(&self) -> Vec<JournalRec> {
-        let mut recs = Vec::new();
+        // adoption first: every Create/Orphan below reconstructs its
+        // entry ino through the adopted table, so replay must have the
+        // table loaded before the first create runs
+        let mut recs = self.adopted_records();
         let mut seen: std::collections::HashSet<FileId> = std::collections::HashSet::new();
 
         fn drain(
@@ -615,7 +676,7 @@ impl LocalFs {
                     Err(_) => continue,
                 };
                 for e in entries {
-                    if e.ino.host == fs.host {
+                    if fs.owns(e.ino) {
                         recs.push(JournalRec::Create {
                             dir,
                             file: e.ino.file,
@@ -680,6 +741,119 @@ impl LocalFs {
             }
         }
         recs
+    }
+
+    // -- subtree migration (placement subsystem) -----------------------------
+
+    /// Every FileId in the subtree rooted at `dir` that this server
+    /// holds — the dir itself first, then BFS. Dirents pointing at other
+    /// servers' objects are skipped: only their dirent migrates, inside
+    /// its parent's listing.
+    pub fn subtree_files(&self, dir: FileId) -> FsResult<Vec<FileId>> {
+        self.require_dir(dir)?;
+        let mut out = vec![dir];
+        let mut stack = vec![dir];
+        while let Some(d) = stack.pop() {
+            for e in self.dirs.list(d)? {
+                if !self.owns(e.ino) {
+                    continue;
+                }
+                out.push(e.ino.file);
+                if e.kind == FileKind::Directory {
+                    stack.push(e.ino.file);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Records that rebuild the subtree rooted at `dir` on ANOTHER
+    /// server: Adopt rows for every object's birth ino, the subtree root
+    /// as an Orphan (its dirent stays behind in the source's parent
+    /// directory, still naming the same birth ino), the BFS of child
+    /// creates/remote dirents, then contents and xattrs. Replayable via
+    /// the ordinary journal-apply path on the target.
+    pub fn subtree_records(&self, dir: FileId) -> FsResult<Vec<JournalRec>> {
+        let files = self.subtree_files(dir)?;
+        let mut recs = Vec::with_capacity(files.len() * 2);
+        for &f in &files {
+            let ino = self.ino(f);
+            recs.push(JournalRec::Adopt { host: ino.host, version: ino.version, file: f });
+        }
+        let root_rec = self.inodes.get(dir)?;
+        recs.push(JournalRec::Orphan {
+            parent: root_rec.parent.unwrap_or_else(|| self.root_ino()),
+            file: dir,
+            name: root_rec.name_in_parent.clone(),
+            kind: root_rec.kind,
+            mode: root_rec.perm.mode.0,
+            uid: root_rec.perm.uid,
+            gid: root_rec.perm.gid,
+        });
+        let mut stack = vec![dir];
+        while let Some(d) = stack.pop() {
+            for e in self.dirs.list(d)? {
+                if self.owns(e.ino) {
+                    recs.push(JournalRec::Create {
+                        dir: d,
+                        file: e.ino.file,
+                        name: e.name.clone(),
+                        kind: e.kind,
+                        mode: e.perm.mode.0,
+                        uid: e.perm.uid,
+                        gid: e.perm.gid,
+                    });
+                    if e.kind == FileKind::Directory {
+                        stack.push(e.ino.file);
+                    }
+                } else {
+                    recs.push(JournalRec::RemoteEntry { dir: d, entry: e });
+                }
+            }
+        }
+        for &f in &files {
+            let rec = match self.inodes.get(f) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            if rec.kind == FileKind::Regular && rec.size > 0 {
+                if let Ok(data) = self.data.read(f, 0, rec.size.min(u32::MAX as u64) as u32) {
+                    recs.push(JournalRec::Write { file: f, off: 0, data });
+                }
+            }
+            for (k, v) in &rec.xattrs {
+                recs.push(JournalRec::Xattr { file: f, key: k.clone(), value: v.clone() });
+            }
+        }
+        Ok(recs)
+    }
+
+    /// Drop one migrated-away object: inode, directory body, data bytes
+    /// and adoption row. The parent directory's dirent to a migrated
+    /// subtree ROOT is deliberately kept — it still names the birth ino,
+    /// and routing to the new owner is the placement map's job. Used
+    /// both live (after the handoff commits) and by `MovedOut` replay.
+    pub fn evict_file(&self, file: FileId) {
+        if let Ok(rec) = self.inodes.remove(file) {
+            if rec.kind == FileKind::Regular {
+                let _ = self.data.delete(file);
+            }
+        }
+        self.dirs.drop_dir(file);
+        self.adopted.write().unwrap().remove(&file);
+        self.bump();
+    }
+
+    /// Evict the whole subtree rooted at `dir` (post-migration source
+    /// cleanup). Returns how many objects were dropped. Not journaled:
+    /// the server layer journals one `MovedOut` per file, whose replay
+    /// re-runs `evict_file`.
+    pub fn evict_subtree(&self, dir: FileId) -> FsResult<u64> {
+        let files = self.subtree_files(dir)?;
+        for &f in &files {
+            self.evict_file(f);
+        }
+        Ok(files.len() as u64)
     }
 }
 
@@ -836,5 +1010,80 @@ mod tests {
         let e0 = f.epoch();
         f.create(ROOT_FILE_ID, "a", 0o644, FileKind::Regular, 1, 1).unwrap();
         assert!(f.epoch() > e0);
+    }
+
+    #[test]
+    fn host_partitioned_allocators_never_collide_across_servers() {
+        let a = LocalFs::new(0, 0, Box::new(MemData::new()));
+        let b = LocalFs::new(1, 0, Box::new(MemData::new()));
+        let ea = a.create(ROOT_FILE_ID, "f", 0o644, FileKind::Regular, 1, 1).unwrap();
+        let eb = b.create(ROOT_FILE_ID, "f", 0o644, FileKind::Regular, 1, 1).unwrap();
+        assert_ne!(ea.ino.file, eb.ino.file, "FileIds are globally unique");
+        assert_eq!(crate::store::inode::id_home(ea.ino.file), 0);
+        assert_eq!(crate::store::inode::id_home(eb.ino.file), 1);
+    }
+
+    /// Mirror of `BServer::apply_journal_rec` for pure-fs tests: Adopt
+    /// routes to `adopt`, MovedOut to `evict_file`, the rest replay.
+    fn apply(fs: &LocalFs, recs: Vec<JournalRec>) {
+        for r in recs {
+            match r {
+                JournalRec::Adopt { host, version, file } => {
+                    fs.adopt(Ino::new(host, version, file))
+                }
+                JournalRec::MovedOut { file, .. } => fs.evict_file(file),
+                other => {
+                    other.replay(fs).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subtree_records_rebuild_on_another_host_with_birth_inos() {
+        let a = LocalFs::new(0, 0, Box::new(MemData::new()));
+        let b = LocalFs::new(1, 0, Box::new(MemData::new()));
+        let hot = a.create(ROOT_FILE_ID, "hot", 0o755, FileKind::Directory, 1, 1).unwrap();
+        let f1 = a.create(hot.ino.file, "f1", 0o644, FileKind::Regular, 1, 1).unwrap();
+        a.write(f1.ino.file, 0, b"payload").unwrap();
+        let sub = a.create(hot.ino.file, "sub", 0o750, FileKind::Directory, 1, 1).unwrap();
+        let f2 = a.create(sub.ino.file, "f2", 0o600, FileKind::Regular, 2, 2).unwrap();
+        a.set_xattr(f2.ino.file, "k", vec![9]).unwrap();
+
+        apply(&b, a.subtree_records(hot.ino.file).unwrap());
+
+        // the adopted objects answer to their BIRTH inos on the target
+        assert!(b.owns(hot.ino) && b.owns(f1.ino) && b.owns(f2.ino));
+        assert_eq!(b.validate(f1.ino).unwrap(), f1.ino.file);
+        assert_eq!(b.ino(f1.ino.file), f1.ino, "dirents keep the birth ino");
+        assert_eq!(b.lookup(hot.ino.file, "f1").unwrap().ino, f1.ino);
+        assert_eq!(b.read(f1.ino.file, 0, 100).unwrap().0, b"payload");
+        assert_eq!(b.lookup(sub.ino.file, "f2").unwrap().perm.mode.0, 0o600);
+        assert_eq!(b.get_xattr(f2.ino.file, "k").unwrap(), Some(vec![9]));
+        // and b's own allocator was NOT jumped into host 0's range
+        let fresh = b.create(ROOT_FILE_ID, "own", 0o644, FileKind::Regular, 1, 1).unwrap();
+        assert_eq!(crate::store::inode::id_home(fresh.ino.file), 1);
+
+        // source eviction drops the objects but keeps the parent dirent
+        a.evict_subtree(hot.ino.file).unwrap();
+        assert_eq!(a.getattr(f1.ino.file), Err(FsError::NotFound));
+        assert_eq!(a.getattr(hot.ino.file), Err(FsError::NotFound));
+        assert_eq!(a.lookup(ROOT_FILE_ID, "hot").unwrap().ino, hot.ino);
+    }
+
+    #[test]
+    fn checkpoint_snapshot_preserves_adopted_subtrees() {
+        let a = LocalFs::new(0, 0, Box::new(MemData::new()));
+        let b = LocalFs::new(1, 0, Box::new(MemData::new()));
+        let hot = a.create(ROOT_FILE_ID, "hot", 0o755, FileKind::Directory, 1, 1).unwrap();
+        let f1 = a.create(hot.ino.file, "f1", 0o644, FileKind::Regular, 1, 1).unwrap();
+        a.write(f1.ino.file, 0, b"x").unwrap();
+        apply(&b, a.subtree_records(hot.ino.file).unwrap());
+        // b checkpoints: its snapshot must carry the adopted subtree
+        let c = LocalFs::new(1, 0, Box::new(MemData::new()));
+        apply(&c, b.snapshot_records());
+        assert!(c.owns(f1.ino), "snapshot must not drop adopted objects");
+        assert_eq!(c.read(f1.ino.file, 0, 10).unwrap().0, b"x");
+        assert_eq!(c.lookup(hot.ino.file, "f1").unwrap().ino, f1.ino);
     }
 }

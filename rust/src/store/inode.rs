@@ -61,13 +61,33 @@ impl InodeRec {
 }
 
 /// Concurrent inode table with a monotone FileId allocator.
-/// FileId 1 is reserved for the root directory of host 0.
+/// FileId 1 is reserved for the root directory of every host; all other
+/// ids are **host-partitioned** — host `h` allocates from
+/// `(h << ID_HOST_SHIFT) + 2` upward, so every non-root FileId in the
+/// cluster is globally unique and names its birth allocator. Host 0's
+/// range starts at 2, identical to the historical single-range layout,
+/// so old journals replay unchanged.
 pub struct InodeTable {
     inodes: RwLock<HashMap<FileId, InodeRec>>,
     next_id: AtomicU64,
 }
 
 pub const ROOT_FILE_ID: FileId = 1;
+
+/// Bits below the host tag in a FileId. 2^40 ids per host leaves room
+/// for the full u16 host space in a u64.
+pub const ID_HOST_SHIFT: u32 = 40;
+
+/// First allocatable FileId of a host's partition.
+pub fn id_base(host: u16) -> FileId {
+    ((host as u64) << ID_HOST_SHIFT) | (ROOT_FILE_ID + 1)
+}
+
+/// The host whose allocator minted `id` (its "birth host"). Root is
+/// special: every host has a FileId-1 root, outside any partition.
+pub fn id_home(id: FileId) -> u16 {
+    (id >> ID_HOST_SHIFT) as u16
+}
 
 impl Default for InodeTable {
     fn default() -> Self {
@@ -77,7 +97,12 @@ impl Default for InodeTable {
 
 impl InodeTable {
     pub fn new() -> InodeTable {
-        InodeTable { inodes: RwLock::new(HashMap::new()), next_id: AtomicU64::new(ROOT_FILE_ID + 1) }
+        Self::for_host(0)
+    }
+
+    /// Table whose allocator mints ids in `host`'s partition.
+    pub fn for_host(host: u16) -> InodeTable {
+        InodeTable { inodes: RwLock::new(HashMap::new()), next_id: AtomicU64::new(id_base(host)) }
     }
 
     pub fn alloc_id(&self) -> FileId {
@@ -86,6 +111,9 @@ impl InodeTable {
 
     /// Advance the allocator past `id` (journal replay inserts records
     /// with explicit ids; later live allocations must not collide).
+    /// Callers must only pass ids from this table's own partition —
+    /// reserving through an adopted foreign id would jump the allocator
+    /// into another host's range (see `LocalFs::replay_create`).
     pub fn reserve_through(&self, id: FileId) {
         self.next_id.fetch_max(id + 1, Ordering::Relaxed);
     }
@@ -216,6 +244,23 @@ mod tests {
         let mut ids = t.ids();
         ids.sort();
         assert_eq!(ids, vec![a, b]);
+    }
+
+    #[test]
+    fn host_partitioned_ids_never_collide() {
+        // host 0 keeps the historical layout
+        assert_eq!(id_base(0), ROOT_FILE_ID + 1);
+        assert_eq!(InodeTable::for_host(0).alloc_id(), 2);
+        // other hosts mint from disjoint ranges that name them
+        let t1 = InodeTable::for_host(1);
+        let t2 = InodeTable::for_host(2);
+        let a = t1.alloc_id();
+        let b = t2.alloc_id();
+        assert_ne!(a, b);
+        assert_eq!(id_home(a), 1);
+        assert_eq!(id_home(b), 2);
+        assert_eq!(id_home(2), 0);
+        assert_eq!(id_home(ROOT_FILE_ID), 0, "root sits outside every partition");
     }
 
     #[test]

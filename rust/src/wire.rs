@@ -198,6 +198,30 @@ pub enum Request {
     /// cursor to the current segment's start — safe because every
     /// segment opens with a full checkpoint snapshot of server state.
     JournalFetch { gen: u64, offset: u64, max_bytes: u32 },
+    /// Fetch the server's view of the directory placement map when the
+    /// client's cached copy (version `since`) went stale — answered with
+    /// [`Response::PlacementMap`]. Any server can answer: the map is
+    /// shared cluster state flipped at migration commit.
+    PlacementFetch { since: u64 },
+    /// Admin/balancer→server: migrate the subtree rooted at `dir` (a
+    /// directory this server owns) to `target`, live. `grace` bounds how
+    /// many straggler ops the source forwards per migrated file after
+    /// the placement flip before answering hard
+    /// [`crate::error::FsError::WrongServer`] redirects.
+    MigrateSubtree { dir: Ino, target: HostId, grace: u32 },
+    /// Server↔server: the migration payload — a run of raw journal
+    /// frames (snapshot of the subtree, its lease epochs, and the
+    /// source's dedup ledger) the target adopts, applies and journals.
+    SubtreeImport { frames: Vec<u8> },
+}
+
+/// One override row of the directory placement map: the subtree rooted
+/// at `dir` is owned by `owner` (everything else lives with its ino's
+/// birth host).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementEntry {
+    pub dir: Ino,
+    pub owner: HostId,
 }
 
 /// One directory listing returned by a [`Request::ResolvePath`] walk:
@@ -249,6 +273,13 @@ pub enum Response {
     /// primary's segment `gen`, ending at byte `offset` (the standby's
     /// next cursor). `more` = the segment has further frames to pull.
     JournalChunk { gen: u64, offset: u64, frames: Vec<u8>, more: bool },
+    /// Reply to [`Request::PlacementFetch`]: the full override table at
+    /// `version` (small: one row per migrated subtree root).
+    PlacementMap { version: u64, entries: Vec<PlacementEntry> },
+    /// Reply to [`Request::MigrateSubtree`]: the handoff committed —
+    /// `files` objects moved, and the placement map now reads
+    /// `map_version`.
+    Migrated { files: u64, map_version: u64 },
 }
 
 /// Server→client push messages (the §3.4 consistency protocol).
@@ -313,6 +344,9 @@ impl Request {
             Request::JournalShip { .. } => "replicate",
             Request::Stamped { inner, .. } => inner.op(),
             Request::JournalFetch { .. } => "replicate",
+            Request::PlacementFetch { .. } => "placement",
+            Request::MigrateSubtree { .. } => "migrate",
+            Request::SubtreeImport { .. } => "migrate",
         }
     }
 
@@ -343,6 +377,7 @@ impl Request {
             }
             Request::JournalShip { frames } => 64 + frames.len(),
             Request::Stamped { inner, .. } => 24 + inner.wire_size(),
+            Request::SubtreeImport { frames } => 64 + frames.len(),
             _ => 64,
         }
     }
@@ -362,6 +397,7 @@ impl Response {
             }
             Response::OpenedInline { data, .. } => 64 + data.as_ref().map_or(0, |d| d.len()),
             Response::JournalChunk { frames, .. } => 32 + frames.len(),
+            Response::PlacementMap { entries, .. } => 32 + entries.len() * 16,
             _ => 32,
         }
     }
@@ -709,6 +745,20 @@ impl Wire for Request {
                 e.u64(*offset);
                 e.u32(*max_bytes);
             }
+            Request::PlacementFetch { since } => {
+                tagged!(e, 37);
+                e.u64(*since);
+            }
+            Request::MigrateSubtree { dir, target, grace } => {
+                tagged!(e, 38);
+                dir.enc(e);
+                e.u16(*target);
+                e.u32(*grace);
+            }
+            Request::SubtreeImport { frames } => {
+                tagged!(e, 39);
+                e.bytes(frames);
+            }
         }
     }
 
@@ -865,6 +915,9 @@ impl Wire for Request {
                 offset: d.u64()?,
                 max_bytes: d.u32()?,
             },
+            37 => Request::PlacementFetch { since: d.u64()? },
+            38 => Request::MigrateSubtree { dir: Ino::dec(d)?, target: d.u16()?, grace: d.u32()? },
+            39 => Request::SubtreeImport { frames: d.bytes()? },
             t => return Err(FsError::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -921,7 +974,7 @@ impl Wire for Response {
                 tagged!(e, 9);
                 let (code, msg) = err.to_wire();
                 e.u16(code);
-                e.str(msg);
+                e.str(&msg);
                 e.u16(err.wire_aux());
             }
             Response::Walked { dirs, walked, next } => {
@@ -968,6 +1021,16 @@ impl Wire for Response {
                 e.u64(*offset);
                 e.bytes(frames);
                 e.bool(*more);
+            }
+            Response::PlacementMap { version, entries } => {
+                tagged!(e, 16);
+                e.u64(*version);
+                entries.enc(e);
+            }
+            Response::Migrated { files, map_version } => {
+                tagged!(e, 17);
+                e.u64(*files);
+                e.u64(*map_version);
             }
         }
     }
@@ -1035,6 +1098,11 @@ impl Wire for Response {
                 frames: d.bytes()?,
                 more: d.bool()?,
             },
+            16 => Response::PlacementMap {
+                version: d.u64()?,
+                entries: Vec::<PlacementEntry>::dec(d)?,
+            },
+            17 => Response::Migrated { files: d.u64()?, map_version: d.u64()? },
             t => return Err(FsError::Protocol(format!("bad response tag {t}"))),
         })
     }
@@ -1047,6 +1115,16 @@ impl Wire for WalkedDir {
     }
     fn dec(d: &mut Dec) -> FsResult<Self> {
         Ok(WalkedDir { attr: Attr::dec(d)?, entries: Vec::<DirEntry>::dec(d)? })
+    }
+}
+
+impl Wire for PlacementEntry {
+    fn enc(&self, e: &mut Enc) {
+        self.dir.enc(e);
+        e.u16(self.owner);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(PlacementEntry { dir: Ino::dec(d)?, owner: d.u16()? })
     }
 }
 
@@ -1216,6 +1294,9 @@ mod tests {
                 inner: Box::new(Request::Chmod { ino, mode: 0o600, cred: cred() }),
             },
             Request::JournalFetch { gen: 3, offset: 4096, max_bytes: 1 << 20 },
+            Request::PlacementFetch { since: 12 },
+            Request::MigrateSubtree { dir: ino, target: 2, grace: 64 },
+            Request::SubtreeImport { frames: vec![0xca, 0xfe] },
         ]
     }
 
@@ -1278,6 +1359,16 @@ mod tests {
             },
             Response::JournalChunk { gen: 0, offset: 0, frames: vec![], more: false },
             Response::Err(FsError::JournalFailed("disk gone".into())),
+            Response::PlacementMap {
+                version: 3,
+                entries: vec![
+                    PlacementEntry { dir: Ino::new(0, 0, 5), owner: 1 },
+                    PlacementEntry { dir: Ino::new(1, 0, 9), owner: 0 },
+                ],
+            },
+            Response::PlacementMap { version: 0, entries: vec![] },
+            Response::Migrated { files: 40, map_version: 4 },
+            Response::Err(FsError::WrongServer { owner: 2, map_version: 7 }),
         ]
     }
 

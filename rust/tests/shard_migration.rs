@@ -1,0 +1,662 @@
+//! Elastic namespace acceptance: live directory migration, versioned
+//! placement redirects, grace-window forwarding, load-driven
+//! rebalancing and pool grow/shrink (DESIGN.md §12).
+//!
+//! The invariants under test:
+//! * an acked op is never lost and never double-applied across a live
+//!   migration — even with 8 mutator threads racing the handoff;
+//! * a stale client pays at most ONE `WrongServer` redirect per op,
+//!   then routes directly via its placement cache;
+//! * open `Dir`/`File` handles survive migration — dirfd ops re-resolve
+//!   their lease exactly once at the new owner, reads need no
+//!   server-side open record at all;
+//! * a source that crashes after the `MovedOut` commit fence recovers
+//!   redirecting; a failed import rolls back with nothing leaked.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use buffetfs::agent::BAgent;
+use buffetfs::api::Client;
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::placement::{Balancer, BalancerConfig};
+use buffetfs::cluster::{Backing, BuffetCluster, ClusterView};
+use buffetfs::error::FsError;
+use buffetfs::metrics::RpcMetrics;
+use buffetfs::server::journal::JournalConfig;
+use buffetfs::server::BServer;
+use buffetfs::simnet::{LatencyModel, NetConfig};
+use buffetfs::store::data::MemData;
+use buffetfs::store::fs::LocalFs;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::transport::chan::ChanTransport;
+use buffetfs::transport::Service;
+use buffetfs::types::{Credentials, Ino, OpenFlags};
+use buffetfs::wire::{Request, Response};
+
+fn two_hosts() -> BuffetCluster {
+    BuffetCluster::spawn_with(
+        2,
+        NetConfig::zero(),
+        Backing::Mem,
+        false, // co-located placement: /hot is born whole on host 0
+        ServiceConfig::unbounded(),
+    )
+}
+
+/// Drive one migration straight on the source server (what the
+/// balancer's `rebalance_step` does), returning `(files, map_version)`.
+fn migrate(cluster: &BuffetCluster, src: u16, dir: Ino, target: u16, grace: u32) -> (u64, u64) {
+    let src = cluster.server(src).expect("source server");
+    match src.handle(Request::MigrateSubtree { dir, target, grace }) {
+        Response::Migrated { files, map_version } => (files, map_version),
+        other => panic!("migration failed: {other:?}"),
+    }
+}
+
+fn tdir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU32 = AtomicU32::new(0);
+    std::env::temp_dir().join(format!(
+        "buffetfs-shard-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn journal_cfg() -> JournalConfig {
+    JournalConfig { sync_data: false, ..JournalConfig::default() }
+}
+
+fn quiesce(metrics: &RpcMetrics) {
+    let mut last = metrics.total_rpcs();
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(5));
+        let now = metrics.total_rpcs();
+        if now == last {
+            return;
+        }
+        last = now;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol validations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn migration_rejects_root_self_and_non_directories() {
+    let cluster = two_hosts();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/d", 0o755).unwrap();
+    p.put("/f", b"x").unwrap();
+    let d = p.stat("/d").unwrap().ino;
+    let f = p.stat("/f").unwrap().ino;
+    let s = &cluster.servers[0];
+
+    match s.handle(Request::MigrateSubtree { dir: cluster.root(), target: 1, grace: 0 }) {
+        Response::Err(FsError::Invalid(_)) => {}
+        other => panic!("migrating the root must be refused: {other:?}"),
+    }
+    match s.handle(Request::MigrateSubtree { dir: d, target: 0, grace: 0 }) {
+        Response::Err(FsError::Invalid(_)) => {}
+        other => panic!("self-target must be refused: {other:?}"),
+    }
+    match s.handle(Request::MigrateSubtree { dir: f, target: 1, grace: 0 }) {
+        Response::Err(FsError::NotADirectory) => {}
+        other => panic!("migrating a file must be refused: {other:?}"),
+    }
+    match s.handle(Request::MigrateSubtree { dir: d, target: 9, grace: 0 }) {
+        Response::Err(_) => {}
+        other => panic!("unknown peer must be refused: {other:?}"),
+    }
+    // nothing of the above left gate entries behind
+    p.put("/d/ok", b"still writable").unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Redirects and the placement cache
+// ---------------------------------------------------------------------------
+
+#[test]
+fn migrated_subtree_serves_at_target_with_one_redirect_per_op() {
+    let cluster = two_hosts();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.mkdir("/hot", 0o755).unwrap();
+    for i in 0..4 {
+        p.put(&format!("/hot/f{i}"), format!("body {i}").as_bytes()).unwrap();
+    }
+    let hot = p.stat("/hot").unwrap().ino;
+
+    let (files, map_version) = migrate(&cluster, 0, hot, 1, 0);
+    assert_eq!(files, 5, "dir + 4 files must move");
+    assert_eq!(map_version, 1);
+    assert_eq!(cluster.shard_map.owner(hot), Some(1));
+
+    // the stale client transparently follows the redirect…
+    let before = agent.stats.redirects.load(Ordering::Relaxed);
+    assert_eq!(p.get("/hot/f0", 64).unwrap(), b"body 0");
+    let after_first = agent.stats.redirects.load(Ordering::Relaxed);
+    assert!(after_first > before, "the first post-migration op must be redirected");
+    assert!(after_first - before <= 2, "redirect per op is bounded (open + read)");
+
+    // …learning each ino it touches: a full pass costs at most one
+    // redirect per newly-touched ino, and a second pass costs none
+    for i in 0..4 {
+        assert_eq!(p.get(&format!("/hot/f{i}"), 64).unwrap(), format!("body {i}").as_bytes());
+    }
+    let learned = agent.stats.redirects.load(Ordering::Relaxed);
+    assert!(learned - before <= 5, "at most one redirect per touched ino (dir + 4 files)");
+    for i in 0..4 {
+        assert_eq!(p.get(&format!("/hot/f{i}"), 64).unwrap(), format!("body {i}").as_bytes());
+    }
+    assert_eq!(
+        agent.stats.redirects.load(Ordering::Relaxed),
+        learned,
+        "a primed placement cache must not be redirected again"
+    );
+    assert!(cluster.servers[0].stats.redirects_served.load(Ordering::Relaxed) >= 1);
+
+    // new files under the migrated directory are minted by the new owner
+    p.put("/hot/new", b"made at the target").unwrap();
+    assert_eq!(p.stat("/hot/new").unwrap().ino.host, 1);
+    assert_eq!(p.get("/hot/new", 64).unwrap(), b"made at the target");
+}
+
+#[test]
+fn grace_budget_forwards_stragglers_then_redirects() {
+    let cluster = two_hosts();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/hot", 0o755).unwrap();
+    p.put("/hot/f", b"x").unwrap();
+    let hot = p.stat("/hot").unwrap().ino;
+    let f = p.stat("/hot/f").unwrap().ino;
+
+    migrate(&cluster, 0, hot, 1, 2);
+    let src = &cluster.servers[0];
+
+    // the first `grace` stragglers are forwarded whole to the new owner
+    for _ in 0..2 {
+        match src.handle(Request::GetAttr { ino: f }) {
+            Response::AttrR(a) => assert_eq!(a.ino, f),
+            other => panic!("straggler inside the grace window must be forwarded: {other:?}"),
+        }
+    }
+    assert_eq!(src.stats.forwards.load(Ordering::Relaxed), 2);
+
+    // the budget is spent: from now on the client is told to re-route
+    match src.handle(Request::GetAttr { ino: f }) {
+        Response::Err(FsError::WrongServer { owner: 1, map_version }) => {
+            assert_eq!(map_version, 1);
+        }
+        other => panic!("expected WrongServer after the grace budget: {other:?}"),
+    }
+    assert!(src.stats.redirects_served.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn placement_fetch_primes_the_cache_and_confirms_when_current() {
+    let cluster = two_hosts();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/hot", 0o755).unwrap();
+    p.put("/hot/f", b"x").unwrap();
+    let hot = p.stat("/hot").unwrap().ino;
+    migrate(&cluster, 0, hot, 1, 0);
+
+    // a fresh client pre-fetches the map and is never redirected at all
+    let (agent2, metrics2) = cluster.make_agent();
+    assert_eq!(agent2.fetch_placement().unwrap(), 1);
+    assert_eq!(agent2.placement().version(), 1);
+    assert_eq!(agent2.placement().route(hot), Some(1));
+
+    // a second fetch at the same version is an empty-delta confirmation:
+    // the cached table must survive it
+    assert_eq!(agent2.fetch_placement().unwrap(), 1);
+    assert_eq!(agent2.placement().route(hot), Some(1));
+    assert_eq!(metrics2.count("placement"), 2);
+
+    // directory-targeted ops route straight to the new owner: no
+    // WrongServer bounce at all with a pre-fetched map
+    let p2 = Buffet::process(agent2.clone(), Credentials::root());
+    assert!(p2.stat("/hot/f").is_ok());
+    assert_eq!(
+        agent2.stats.redirects.load(Ordering::Relaxed),
+        0,
+        "a pre-fetched placement map means zero redirects for dir-targeted ops"
+    );
+    // a file-ino op may pay one first-touch redirect (the map only
+    // carries subtree roots), never more
+    assert_eq!(p2.get("/hot/f", 64).unwrap(), b"x");
+    assert!(agent2.stats.redirects.load(Ordering::Relaxed) <= 1);
+}
+
+// ---------------------------------------------------------------------------
+// Open handles across a migration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn open_handles_survive_migration_with_exactly_one_lease_reresolve() {
+    let cluster = two_hosts();
+    let (agent, metrics) = cluster.make_agent();
+    let admin = Client::new(agent.clone(), Credentials::root());
+    let root = admin.root().unwrap();
+    let hot = root.mkdir("hot", 0o777).unwrap();
+    let f = hot.create("f0", 0o644).unwrap();
+    f.write(b"before the move").unwrap();
+    f.fsync().unwrap();
+    // keep `hot` (a leased dirfd) and a read handle open across the move
+    let g = hot.open_file("f0", OpenFlags::RDONLY).unwrap();
+    quiesce(&metrics);
+
+    migrate(&cluster, 0, hot.node(), 1, 0);
+
+    // the dirfd op: one WrongServer redirect, one StaleLease re-resolve
+    let stale_before = metrics.stale_retries("getattr");
+    let redirects_before = agent.stats.redirects.load(Ordering::Relaxed);
+    let attr = hot.stat("f0").unwrap();
+    assert_eq!(attr.size, 15);
+    assert_eq!(
+        metrics.stale_retries("getattr"),
+        stale_before + 1,
+        "the revoked lease must re-resolve exactly once"
+    );
+    assert!(agent.stats.redirects.load(Ordering::Relaxed) > redirects_before);
+
+    // …and only once: the same handle is now warm at the new owner
+    let settled = (metrics.stale_retries("getattr"), agent.stats.redirects.load(Ordering::Relaxed));
+    hot.stat("f0").unwrap();
+    assert_eq!(
+        (metrics.stale_retries("getattr"), agent.stats.redirects.load(Ordering::Relaxed)),
+        settled,
+        "later dirfd ops must be free of both redirects and stale retries"
+    );
+
+    // the open file handle keeps reading — no server-side open record
+    // needed, the data migrated with the subtree
+    assert_eq!(g.read_at(0, 64).unwrap(), b"before the move");
+    g.close().unwrap();
+
+    // creation through the surviving dirfd is minted by the new owner
+    let h = hot.create("after", 0o644).unwrap();
+    assert_eq!(h.ino().host, 1);
+    h.close().unwrap();
+    let _ = f.close();
+}
+
+// ---------------------------------------------------------------------------
+// Rename racing a migration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rename_within_a_migrated_directory_applies_exactly_once() {
+    let cluster = two_hosts();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/hot", 0o755).unwrap();
+    p.put("/hot/a", b"payload").unwrap();
+    let hot = p.stat("/hot").unwrap().ino;
+    migrate(&cluster, 0, hot, 1, 0);
+
+    // the stale client's rename redirects, then applies exactly once
+    p.rename("/hot/a", "/hot/b").unwrap();
+    assert_eq!(p.stat("/hot/a").unwrap_err(), FsError::NotFound);
+    assert_eq!(p.get("/hot/b", 64).unwrap(), b"payload");
+    // a literal retry is AlreadyApplied territory: the source is gone
+    assert_eq!(p.rename("/hot/a", "/hot/b").unwrap_err(), FsError::NotFound);
+}
+
+#[test]
+fn rename_into_a_migrated_directory_lands_at_exactly_one_name() {
+    let cluster = two_hosts();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/hot", 0o755).unwrap();
+    p.mkdir("/cold", 0o755).unwrap();
+    p.put("/cold/x", b"crossing").unwrap();
+    let hot = p.stat("/hot").unwrap().ino;
+    migrate(&cluster, 0, hot, 1, 0);
+
+    // source dir still lives on host 0, destination now on host 1: the
+    // rename either completes (redirect followed) or fails cleanly —
+    // but the file is at exactly one of the two names, with its bytes
+    let res = p.rename("/cold/x", "/hot/y");
+    let at_src = p.stat("/cold/x").is_ok();
+    let at_dst = p.stat("/hot/y").is_ok();
+    assert!(
+        at_src != at_dst,
+        "rename racing migration must land at exactly one name (res={res:?} src={at_src} dst={at_dst})"
+    );
+    if res.is_ok() {
+        assert!(at_dst, "an acked rename must be visible at the destination");
+    }
+    let kept = if at_dst { "/hot/y" } else { "/cold/x" };
+    assert_eq!(p.get(kept, 64).unwrap(), b"crossing");
+}
+
+// ---------------------------------------------------------------------------
+// The storm: 8 mutator threads racing a live migration
+// ---------------------------------------------------------------------------
+
+enum Fate {
+    At(String),
+    Gone(String),
+    AtOneOf(String, String),
+    Bytes(String, Vec<u8>),
+}
+
+/// One storm worker on paths unique to `w`, all under `dir`. Ops whose
+/// final RPC errored (e.g. the freeze-window `Busy` budget ran out) are
+/// indeterminate and recorded only as loosely as the truth allows;
+/// double-applies panic on the spot.
+fn storm_worker(p: &Buffet, dir: &str, w: u32, ops: u32, fates: &Mutex<Vec<Fate>>, errors: &AtomicU64) {
+    let mut mine = Vec::new();
+    for i in 0..ops {
+        if i % 4 == 3 {
+            let path = format!("{dir}/p{w}x{i}");
+            let body = format!("storm body {w}/{i}").into_bytes();
+            match p.put(&path, &body) {
+                Ok(()) => mine.push(Fate::Bytes(path, body)),
+                Err(_) => {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            continue;
+        }
+        let a = format!("{dir}/c{w}x{i}");
+        let b = format!("{dir}/c{w}x{i}r");
+        match p.create(&a, 0o644) {
+            Ok(_) => {}
+            Err(FsError::AlreadyExists) => {
+                panic!("exactly-once violated: create {a} applied twice")
+            }
+            Err(_) => {
+                errors.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        }
+        match p.rename(&a, &b) {
+            Ok(()) => mine.push(Fate::Gone(a)),
+            Err(FsError::NotFound) => {
+                panic!("exactly-once violated: rename {a} applied twice")
+            }
+            Err(_) => {
+                errors.fetch_add(1, Ordering::Relaxed);
+                mine.push(Fate::AtOneOf(a, b));
+                continue;
+            }
+        }
+        match p.unlink(&b) {
+            Ok(()) if i % 3 == 0 => {
+                mine.push(Fate::Gone(b));
+                continue;
+            }
+            Ok(()) => {
+                // re-create so At(b) still holds below
+                match p.put(&b, b"recreated") {
+                    Ok(()) => mine.push(Fate::At(b)),
+                    Err(_) => {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                continue;
+            }
+            Err(FsError::NotFound) => panic!("exactly-once violated: unlink {b} applied twice"),
+            Err(_) => {
+                errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    fates.lock().unwrap().extend(mine);
+}
+
+fn sweep(p: &Buffet, fates: &[Fate]) {
+    for f in fates {
+        match f {
+            Fate::At(path) => {
+                p.stat(path).unwrap_or_else(|e| panic!("acked {path} lost: {e:?}"));
+            }
+            Fate::Gone(path) => match p.stat(path) {
+                Err(FsError::NotFound) => {}
+                other => panic!("acked removal of {path} undone: {other:?}"),
+            },
+            Fate::AtOneOf(a, b) => {
+                let (at_a, at_b) = (p.stat(a).is_ok(), p.stat(b).is_ok());
+                assert!(
+                    at_a != at_b,
+                    "exactly-once violated: {a}={at_a} {b}={at_b} (must be at exactly one)"
+                );
+            }
+            Fate::Bytes(path, body) => {
+                let got =
+                    p.get(path, 1 << 16).unwrap_or_else(|e| panic!("acked {path} lost: {e:?}"));
+                assert_eq!(&got, body, "{path} bytes diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn live_migration_under_mutation_storm_loses_no_acked_op() {
+    let cluster = two_hosts();
+    let (agent, _) = cluster.make_agent();
+    let admin = Buffet::process(agent.clone(), Credentials::root());
+    admin.mkdir("/hot", 0o777).unwrap();
+    let hot = admin.stat("/hot").unwrap().ino;
+
+    let fates = Mutex::new(Vec::new());
+    let errors = AtomicU64::new(0);
+    let migrated = std::thread::scope(|scope| {
+        for w in 0..8u32 {
+            let agent = agent.clone();
+            let (fates, errors) = (&fates, &errors);
+            scope.spawn(move || {
+                let p = Buffet::with_pid(agent, 100 + w, Credentials::root());
+                storm_worker(&p, "/hot", w, 40, fates, errors);
+            });
+        }
+        // mid-storm, the balancer decides /hot belongs on host 1: the
+        // freeze gate bounces racing mutators into their bounded
+        // busy-retry loop, the drain barriers behind in-flight ops
+        std::thread::sleep(Duration::from_millis(3));
+        migrate(&cluster, 0, hot, 1, 64)
+    });
+    assert!(migrated.0 >= 1, "the storm directory must have moved");
+    assert_eq!(cluster.shard_map.owner(hot), Some(1));
+
+    // verify from a FRESH client (cold placement cache): every acked op
+    // is present exactly once at the new owner, each sweep op needing
+    // at most one redirect before the cache is primed
+    let (agent2, _) = cluster.make_agent();
+    let p2 = Buffet::with_pid(agent2.clone(), 999, Credentials::root());
+    let fates = fates.into_inner().unwrap();
+    assert!(!fates.is_empty(), "the storm must ack some ops");
+    sweep(&p2, &fates);
+    let sweep_ops = fates.len() as u64 * 2;
+    assert!(
+        agent2.stats.redirects.load(Ordering::Relaxed) <= sweep_ops,
+        "client blip is bounded: at most one redirect retry per op"
+    );
+
+    // and the storm's directory keeps taking new work at the target
+    p2.put("/hot/coda", b"after the storm").unwrap();
+    assert_eq!(p2.stat("/hot/coda").unwrap().ino.host, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Crash safety: the MovedOut commit fence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn source_crash_after_handoff_recovers_redirecting_with_no_acked_op_lost() {
+    let sdir = tdir("src");
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let tgt = BServer::new(LocalFs::new(1, 0, Box::new(MemData::new())));
+    tgt.enable_elastic();
+
+    let mut acked: Vec<(String, Vec<u8>)> = Vec::new();
+    let hot;
+    {
+        let src = BServer::recover(0, 0, Box::new(MemData::new()), &sdir, journal_cfg()).unwrap();
+        src.enable_elastic();
+        src.add_peer(1, ChanTransport::new(tgt.clone(), net.clone(), Arc::new(RpcMetrics::new())));
+        tgt.add_peer(0, ChanTransport::new(src.clone(), net.clone(), Arc::new(RpcMetrics::new())));
+
+        let metrics = Arc::new(RpcMetrics::new());
+        let view = ClusterView::new(src.fs.root_ino());
+        view.add(0, 0, ChanTransport::new(src.clone(), net.clone(), metrics.clone()));
+        view.add(1, 0, ChanTransport::new(tgt.clone(), net.clone(), metrics.clone()));
+        let p = Buffet::process(BAgent::new(1, view, metrics), Credentials::root());
+
+        p.mkdir("/hot", 0o755).unwrap();
+        for i in 0..20 {
+            let path = format!("/hot/f{i}");
+            let body = format!("durable {i}").into_bytes();
+            p.put(&path, &body).unwrap();
+            acked.push((path, body));
+        }
+        hot = p.stat("/hot").unwrap().ino;
+        match src.handle(Request::MigrateSubtree { dir: hot, target: 1, grace: 0 }) {
+            Response::Migrated { files, .. } => assert_eq!(files, 21),
+            other => panic!("migration failed: {other:?}"),
+        }
+        // the source machine dies here: all in-memory state is gone,
+        // only its journal directory (with the MovedOut fence) survives
+    }
+
+    let src2 = BServer::recover(0, 0, Box::new(MemData::new()), &sdir, journal_cfg()).unwrap();
+    src2.enable_elastic();
+    let metrics = Arc::new(RpcMetrics::new());
+    let view = ClusterView::new(src2.fs.root_ino());
+    view.add(0, 0, ChanTransport::new(src2.clone(), net.clone(), metrics.clone()));
+    view.add(1, 0, ChanTransport::new(tgt.clone(), net, metrics.clone()));
+    let agent = BAgent::new(2, view, metrics);
+    let p = Buffet::process(agent.clone(), Credentials::root());
+
+    // replayed MovedOut records make the reborn source redirect — every
+    // acked byte is served by the target, nothing lost, nothing doubled
+    for (path, body) in &acked {
+        let got = p
+            .get(path, 1 << 16)
+            .unwrap_or_else(|e| panic!("acked {path} lost across the source crash: {e:?}"));
+        assert_eq!(&got, body, "{path} bytes diverged across the source crash");
+    }
+    assert!(agent.stats.redirects.load(Ordering::Relaxed) >= 1);
+    assert!(src2.stats.redirects_served.load(Ordering::Relaxed) >= 1);
+    // and the reborn source did not resurrect the migrated subtree
+    assert!(!src2.fs.owns(hot) || src2.fs.getattr(hot.file).is_err());
+    let _ = std::fs::remove_dir_all(&sdir);
+}
+
+#[test]
+fn failed_import_rolls_back_and_the_source_keeps_serving() {
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let src = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    src.enable_elastic();
+    // the target never opted into elastic mode: it refuses the import
+    let tgt = BServer::new(LocalFs::new(1, 0, Box::new(MemData::new())));
+    src.add_peer(1, ChanTransport::new(tgt.clone(), net.clone(), Arc::new(RpcMetrics::new())));
+
+    let metrics = Arc::new(RpcMetrics::new());
+    let view = ClusterView::new(src.fs.root_ino());
+    view.add(0, 0, ChanTransport::new(src.clone(), net, metrics.clone()));
+    let p = Buffet::process(BAgent::new(1, view, metrics), Credentials::root());
+    p.mkdir("/hot", 0o755).unwrap();
+    p.put("/hot/a", b"stays home").unwrap();
+    let hot = p.stat("/hot").unwrap().ino;
+
+    match src.handle(Request::MigrateSubtree { dir: hot, target: 1, grace: 4 }) {
+        Response::Err(FsError::PermissionDenied) => {}
+        other => panic!("a non-elastic target must refuse the import: {other:?}"),
+    }
+
+    // full rollback: the map never flipped, no gate entries linger, the
+    // subtree serves locally with zero redirects
+    assert_eq!(src.shard_map.version(), 0);
+    assert_eq!(src.shard_map.owner(hot), None);
+    assert_eq!(p.get("/hot/a", 64).unwrap(), b"stays home");
+    p.put("/hot/b", b"still writable").unwrap();
+    assert_eq!(src.stats.redirects_served.load(Ordering::Relaxed), 0);
+    assert_eq!(src.stats.forwards.load(Ordering::Relaxed), 0);
+    assert_eq!(src.stats.migrated_dirs.load(Ordering::Relaxed), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Elastic pool: grow, load-driven rebalance, shrink
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grow_rebalance_and_shrink_roundtrip() {
+    let cluster = BuffetCluster::spawn_with(
+        1,
+        NetConfig::zero(),
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    );
+    let (agent, metrics) = cluster.make_agent();
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.mkdir("/hot", 0o755).unwrap();
+    for i in 0..8 {
+        p.put(&format!("/hot/f{i}"), format!("hot {i}").as_bytes()).unwrap();
+    }
+    p.put("/background", b"root traffic").unwrap();
+    let hot = p.stat("/hot").unwrap().ino;
+
+    // an empty newcomer joins the pool and is wired into the live client
+    let newcomer = cluster.grow();
+    assert_eq!(newcomer, 1);
+    assert!(cluster.server(1).is_some());
+
+    // drive a hot spot: mutations under /hot dominate the op-rate
+    // accounting (writes always reach the server; reads may be served
+    // out of client caches and would count nothing)
+    for round in 0..25 {
+        for i in 0..8 {
+            p.put(&format!("/hot/f{i}"), format!("hot {i}").as_bytes())
+                .unwrap_or_else(|e| panic!("round {round}: {e:?}"));
+        }
+    }
+    p.stat("/background").unwrap();
+
+    // grace 0 keeps the client-visible effect deterministic below: the
+    // first straggler op is redirected, not silently forwarded
+    let balancer = Balancer::new(BalancerConfig { imbalance: 1.2, min_total_ops: 16, grace: 0 });
+    let plan = cluster
+        .rebalance_step(&balancer)
+        .unwrap()
+        .expect("a lopsided load must produce a plan");
+    assert_eq!(plan.dir, hot, "the hottest directory moves");
+    assert_eq!(plan.from, 0);
+    assert_eq!(plan.to, 1);
+    assert_eq!(cluster.shard_map.owner(hot), Some(1));
+
+    // the pool cannot shrink while the newcomer owns a subtree
+    assert_eq!(cluster.shrink(1).unwrap_err(), FsError::Busy);
+
+    // the live client keeps reading through the move (≤1 redirect each)
+    assert_eq!(p.get("/hot/f0", 64).unwrap(), b"hot 0");
+    assert!(agent.stats.redirects.load(Ordering::Relaxed) >= 1);
+
+    // drain the newcomer: migrate the subtree back home…
+    quiesce(&metrics); // let the async close tail drain first
+    migrate(&cluster, 1, hot, 0, 0);
+    assert_eq!(
+        cluster.shard_map.owner(hot),
+        None,
+        "returning home erases the override instead of stacking one"
+    );
+    // …and now the pool contracts
+    cluster.shrink(1).unwrap();
+    assert!(cluster.server(1).is_none());
+
+    // the client's placement cache may still say host 1; the route
+    // falls back to the birth server, which owns the subtree again
+    assert_eq!(p.get("/hot/f3", 64).unwrap(), b"hot 3");
+    p.put("/hot/back-home", b"written after shrink").unwrap();
+    assert_eq!(p.stat("/hot/back-home").unwrap().ino.host, 0);
+}
