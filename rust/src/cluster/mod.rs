@@ -187,6 +187,11 @@ pub struct BuffetCluster {
     /// Servers added by `grow` after bootstrap (host ids continue where
     /// the seed pool stopped), with their capacity frontends.
     extras: RwLock<Vec<(Arc<BServer>, Arc<CapService>)>>,
+    /// High-water mark for host id allocation. Monotone and never
+    /// rewound by `shrink`: a retired host's id partitions FileIds that
+    /// clients (and placement history) may still hold, so reusing it
+    /// would let a fresh server mint colliding ids.
+    next_host: std::sync::atomic::AtomicU32,
     /// Live agents' cluster views, so `grow`/`shrink` can retune every
     /// client's host map in place.
     views: RwLock<Vec<(ClientId, Weak<BAgent>)>>,
@@ -251,6 +256,7 @@ impl BuffetCluster {
             shard_map,
             backing,
             extras: RwLock::new(Vec::new()),
+            next_host: std::sync::atomic::AtomicU32::new(n_servers as u32),
             views: RwLock::new(Vec::new()),
             peer_metrics,
         }
@@ -281,7 +287,14 @@ impl BuffetCluster {
     /// silently re-home future files, which is the balancer's job now.
     pub fn grow(&self) -> HostId {
         let existing = self.all_servers();
-        let host = existing.len() as HostId;
+        let host = HostId::try_from(
+            self.next_host.fetch_add(1, std::sync::atomic::Ordering::SeqCst),
+        )
+        .expect("host id space exhausted");
+        assert!(
+            existing.iter().all(|(s, _)| s.host() != host),
+            "host id {host} already live"
+        );
         let s = BServer::with_shard_map(
             LocalFs::new(host, 0, self.backing.make(host)),
             Placement::Local,
@@ -404,6 +417,22 @@ impl BuffetCluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn grow_after_shrink_never_reuses_host_ids() {
+        let cluster = BuffetCluster::spawn(2, NetConfig::zero(), Backing::Mem, false);
+        let a = cluster.grow();
+        let b = cluster.grow();
+        assert_eq!((a, b), (2, 3));
+        cluster.shrink(a).unwrap();
+        // retired ids stay retired: a reused id would alias the old
+        // host's FileId partition and collide with live identifiers
+        let c = cluster.grow();
+        assert_eq!(c, 4);
+        assert!(cluster.server(a).is_none());
+        assert!(cluster.server(b).is_some());
+        assert!(cluster.server(c).is_some());
+    }
 
     #[test]
     fn view_resolves_by_host_and_version() {

@@ -123,12 +123,15 @@ impl PlacementCache {
 
     /// Absorb a bulk `PlacementMap` reply. A reply older than what the
     /// cache already knows is dropped whole; a fresher one replaces the
-    /// table (the server ships the complete override set).
+    /// table (the server ships the complete override set). The version
+    /// check happens under the write lock: a stale reply that loses the
+    /// race to a fresher one must never clear the fresher table while
+    /// the version counter stays high.
     pub fn absorb(&self, version: u64, entries: &[PlacementEntry]) {
+        let mut o = self.overrides.write().unwrap();
         if version < self.version() {
             return;
         }
-        let mut o = self.overrides.write().unwrap();
         o.clear();
         for e in entries {
             o.insert(e.dir, (e.owner, version));

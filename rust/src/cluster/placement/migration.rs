@@ -73,19 +73,29 @@ pub fn migrate(s: &BServer, dir: Ino, target: HostId, grace: u32) -> FsResult<(u
     // After the first pass no op can newly enter the subtree — every
     // namespace mutation keys on the now-gated directory — so the
     // listing stabilizes on the second pass.
+    // `gated` is the union of every FileId seen in any pass — a file
+    // unlinked between passes drops out of the final listing but its
+    // gate entry must still be cleared, or its FileId answers Busy
+    // forever to any straggler holding a stale handle.
+    let mut gated: std::collections::HashSet<FileId> = std::collections::HashSet::new();
     let mut files: Vec<FileId> = Vec::new();
     loop {
-        let now = s.fs.subtree_files(dir_file)?;
+        let mut now = s.fs.subtree_files(dir_file)?;
+        now.sort_unstable();
         {
             let mut moved = s.moved_out.write().unwrap();
             for &f in &now {
                 moved.entry(f).or_insert(Moved::Freezing);
+                gated.insert(f);
             }
         }
         for &f in &now {
             drop(s.locks.write(f));
         }
-        let stable = now.len() == files.len();
+        // stability is set equality, not length equality: one create +
+        // one unlink between passes keeps the count while changing the
+        // membership, and the newcomer would escape the drain
+        let stable = now == files;
         files = now;
         if stable {
             break;
@@ -93,18 +103,23 @@ pub fn migrate(s: &BServer, dir: Ino, target: HostId, grace: u32) -> FsResult<(u
     }
     let mut flipped = false;
     let res = transfer(s, &peer, dir, dir_file, target, grace, &files, &mut flipped);
+    {
+        // success or rollback, every gate entry still Freezing must be
+        // resolved: transfer() switched the final `files` to Gone, so
+        // what remains is exactly the between-pass churn in `gated`.
+        let mut moved = s.moved_out.write().unwrap();
+        for &f in &gated {
+            if matches!(moved.get(&f), Some(Moved::Freezing)) {
+                moved.remove(&f);
+            }
+        }
+    }
     if res.is_err() {
         // rollback: the subtree stays here and ops resume. A failed
         // transfer may have left an unreferenced copy on the target;
         // it is garbage, never routed to (the map was rolled back).
         if flipped {
             s.shard_map.set(dir, s.fs.host);
-        }
-        let mut moved = s.moved_out.write().unwrap();
-        for &f in &files {
-            if matches!(moved.get(&f), Some(Moved::Freezing)) {
-                moved.remove(&f);
-            }
         }
     }
     res
@@ -159,17 +174,28 @@ fn transfer(
     }
 
     // -- FLIPPED: journal the commit fence -----------------------------------
+    // The MovedOut batch is appended *and* fsynced atomically: a failure
+    // leaves no frame behind for a later unrelated commit to make
+    // durable (which a crash would then replay into a split-brain —
+    // the rolled-back source serving a subtree recovery evicts).
     let map_version = s.shard_map.set(dir, target);
     *flipped = true;
     if let Some(j) = s.fs.journal() {
-        for &f in files {
-            j.append(&JournalRec::MovedOut { file: f, owner: target, map_version });
-        }
-        j.commit()?;
+        let recs: Vec<JournalRec> = files
+            .iter()
+            .map(|&f| JournalRec::MovedOut { file: f, owner: target, map_version })
+            .collect();
+        j.append_committed(&recs)?;
     }
 
     // -- GONE: evict and arm the redirect + grace forwarding ------------------
-    let evicted = s.fs.evict_subtree(dir_file)?;
+    // Past the fence nothing may fail: the durable MovedOut records
+    // will replay eviction on recovery, so the live path must reach the
+    // same state. Per-file eviction over the frozen listing is
+    // infallible (and equals the subtree walk — the freeze pinned it).
+    for &f in files {
+        s.fs.evict_file(f);
+    }
     {
         let mut moved = s.moved_out.write().unwrap();
         for &f in files {
@@ -180,5 +206,5 @@ fn transfer(
         }
     }
     s.stats.migrated_dirs.fetch_add(1, Ordering::Relaxed);
-    Ok((evicted, map_version))
+    Ok((files.len() as u64, map_version))
 }

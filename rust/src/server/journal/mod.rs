@@ -97,6 +97,11 @@ pub enum JournalRec {
     /// re-registers the adoption so every client-held Ino keeps
     /// validating after the target recovers.
     Adopt { host: HostId, version: Version, file: FileId },
+    /// Re-point a local object's parent/name bookkeeping after its
+    /// dirent moved on a *different* server (rename of a remote or
+    /// migrated-away entry). Namespace truth lives in the dirent; this
+    /// keeps the owner's inode metadata from going silently stale.
+    SetParent { file: FileId, parent: Ino, name: String },
 }
 
 impl Wire for JournalRec {
@@ -215,6 +220,12 @@ impl Wire for JournalRec {
                 e.u16(*version);
                 e.u64(*file);
             }
+            JournalRec::SetParent { file, parent, name } => {
+                e.u8(19);
+                e.u64(*file);
+                parent.enc(e);
+                e.str(name);
+            }
         }
     }
 
@@ -260,6 +271,7 @@ impl Wire for JournalRec {
             16 => JournalRec::OpLowWater { client: d.u32()?, upto: d.u64()? },
             17 => JournalRec::MovedOut { file: d.u64()?, owner: d.u16()?, map_version: d.u64()? },
             18 => JournalRec::Adopt { host: d.u16()?, version: d.u16()?, file: d.u64()? },
+            19 => JournalRec::SetParent { file: d.u64()?, parent: Ino::dec(d)?, name: d.str()? },
             t => return Err(FsError::Protocol(format!("bad journal record tag {t}"))),
         })
     }
@@ -300,6 +312,9 @@ impl JournalRec {
             JournalRec::Write { file, off, data } => fs.replay_write(*file, *off, data),
             JournalRec::Truncate { file, size } => fs.replay_truncate(*file, *size),
             JournalRec::Xattr { file, key, value } => fs.replay_xattr(*file, key, value.clone()),
+            JournalRec::SetParent { file, parent, name } => {
+                fs.replay_set_parent(*file, *parent, name)
+            }
             JournalRec::LeaseEpoch { .. }
             | JournalRec::DataGen { .. }
             | JournalRec::OpResult { .. }
@@ -615,6 +630,70 @@ impl Journal {
         w.appended += n;
         w.unsynced += n;
         self.stats.appends.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Append a batch of records and make it durable **atomically**:
+    /// either every record is written and fsynced, or the file is
+    /// rewound to its pre-batch length and nothing of the batch
+    /// survives. The wal lock is held across write+fsync+rollback, so
+    /// no concurrent op's frames interleave with (or land after) the
+    /// batch — a failure can always truncate exactly the batch and
+    /// nothing else. This is what a protocol commit fence needs: a
+    /// plain `append`+`commit` pair that fails between the two leaves
+    /// the frames in the file, where the *next* unrelated commit makes
+    /// them durable behind the caller's back.
+    ///
+    /// On success the batch also ships to the backup; a ship failure
+    /// demotes the backup (local-only durability, the designed
+    /// response) but does not fail the call — the local fsync is the
+    /// fence, and by then the batch is durable and must not be
+    /// rolled back.
+    pub fn append_committed(&self, recs: &[JournalRec]) -> FsResult<()> {
+        {
+            let _shared = self.gate.read().unwrap();
+            let mut w = self.wal.lock().unwrap();
+            if let Some(e) = &w.broken {
+                return Err(FsError::JournalFailed(e.clone()));
+            }
+            let start = w
+                .file
+                .metadata()
+                .map_err(|e| FsError::Io(format!("journal metadata: {e}")))?
+                .len();
+            let mut framed = Vec::new();
+            for rec in recs {
+                framed.extend_from_slice(&frame(&rec.to_bytes()));
+            }
+            if let Err(e) = w.file.write_all(&framed) {
+                // drop the partial batch; only a failed truncate wedges
+                if let Err(t) = w.file.set_len(start) {
+                    w.broken = Some(format!("rewind after failed batch: {t}"));
+                    self.stats.wedged.store(true, Ordering::Relaxed);
+                }
+                return Err(FsError::JournalFailed(format!("batch append: {e}")));
+            }
+            if self.cfg.sync_data {
+                if let Err(e) = w.file.sync_data() {
+                    // durability of everything outstanding is now
+                    // indeterminate: rewind the batch and wedge
+                    let _ = w.file.set_len(start);
+                    w.broken = Some(format!("fsync: {e}"));
+                    self.stats.wedged.store(true, Ordering::Relaxed);
+                    return Err(FsError::JournalFailed(format!("fsync: {e}")));
+                }
+            }
+            let n = recs.len() as u64;
+            // the fsync covered every frame outstanding, not just ours
+            let batch = w.unsynced + n;
+            w.appended += n;
+            w.unsynced = 0;
+            w.pending_ship.extend_from_slice(&framed);
+            self.stats.appends.fetch_add(n, Ordering::Relaxed);
+            self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
+            self.stats.batch.lock().unwrap().record(batch);
+        }
+        let _ = self.commit(); // ship to the backup; failure only demotes
+        Ok(())
     }
 
     /// The commit point: fsync everything appended since the last sync,
@@ -964,6 +1043,7 @@ mod tests {
             JournalRec::OpLowWater { client: 7, upto: 41 },
             JournalRec::MovedOut { file: 2, owner: 3, map_version: 5 },
             JournalRec::Adopt { host: 0, version: 0, file: 2 },
+            JournalRec::SetParent { file: 2, parent: Ino::new(1, 0, 4), name: "moved".into() },
         ]
     }
 
@@ -1079,6 +1159,53 @@ mod tests {
         drop(j);
         let (_, recs) = Journal::open(&dir, JournalConfig::default()).unwrap();
         assert_eq!(recs, vec![sample_recs()[0].clone(), sample_recs()[7].clone()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_committed_is_durable_without_a_separate_commit() {
+        let dir = tdir("atomic");
+        let (j, _) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        j.append_committed(&sample_recs()).unwrap();
+        assert_eq!(j.stats().fsyncs.load(Ordering::Relaxed), 1);
+        drop(j);
+        let (_, recs) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert_eq!(recs, sample_recs());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_committed_rides_the_group_commit() {
+        let dir = tdir("atomic-group");
+        let (j, _) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        // an earlier op appended but has not committed yet: the batch's
+        // fsync covers it, and that op's later commit is then free
+        j.append(&sample_recs()[0]);
+        j.append_committed(&sample_recs()[1..3]).unwrap();
+        assert_eq!(j.stats().fsyncs.load(Ordering::Relaxed), 1);
+        j.commit().unwrap();
+        assert_eq!(j.stats().fsyncs.load(Ordering::Relaxed), 1);
+        drop(j);
+        let (_, recs) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert_eq!(recs, sample_recs()[..3]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_committed_on_a_wedged_journal_fails_with_no_residue() {
+        let dir = tdir("atomic-wedge");
+        let (j, _) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        j.append(&sample_recs()[0]);
+        j.commit().unwrap();
+        j.force_wedge("disk on fire");
+        match j.append_committed(&sample_recs()[1..3]) {
+            Err(FsError::JournalFailed(m)) => assert!(m.contains("disk on fire")),
+            other => panic!("wedged batch returned {other:?}"),
+        }
+        drop(j);
+        // nothing of the refused batch reached the segment
+        let (_, recs) = Journal::open(&dir, JournalConfig::default()).unwrap();
+        assert_eq!(recs, vec![sample_recs()[0].clone()]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

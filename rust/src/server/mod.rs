@@ -612,6 +612,20 @@ impl BServer {
             .ok_or(FsError::NoSuchServer(host))
     }
 
+    /// Where a migrated-away FileId now lives, per this server's gate:
+    /// `Ok(None)` = never moved, `Err(Busy)` = mid-freeze (retry),
+    /// `Ok(Some((owner, map_version)))` = gone to `owner`. Handlers use
+    /// this to route ops at a *named child* whose object moved while its
+    /// dirent stayed in a still-local parent directory — the moved-out
+    /// dispatch gate only covers the op's own target ino.
+    pub(crate) fn moved_owner(&self, file: FileId) -> FsResult<Option<(HostId, u64)>> {
+        match self.moved_out.read().unwrap().get(&file) {
+            None => Ok(None),
+            Some(Moved::Freezing) => Err(FsError::Busy),
+            Some(Moved::Gone { owner, map_version, .. }) => Ok(Some((*owner, *map_version))),
+        }
+    }
+
     // -- §3.4: invalidate-then-apply ---------------------------------------
 
     /// Push `Invalidate(dir)` to every client caching it; wait for all

@@ -88,6 +88,7 @@ fn index(req: &Request) -> usize {
         Request::PlacementFetch { .. } => 37,
         Request::MigrateSubtree { .. } => 38,
         Request::SubtreeImport { .. } => 39,
+        Request::UpdateParentMeta { .. } => 40,
     }
 }
 
@@ -126,11 +127,12 @@ fn is_mutating(req: &Request) -> bool {
             | Request::WriteBatch { .. }
             | Request::MigrateSubtree { .. }
             | Request::SubtreeImport { .. }
+            | Request::UpdateParentMeta { .. }
     )
 }
 
 /// The handler table, ordered by wire tag (same order as [`index`]).
-static HANDLERS: [Handler; 40] = [
+static HANDLERS: [Handler; 41] = [
     meta::lookup,              // 0
     meta::read_dir,            // 1
     meta::get_attr,            // 2
@@ -171,6 +173,7 @@ static HANDLERS: [Handler; 40] = [
     shard::placement_fetch,    // 37
     shard::migrate_subtree,    // 38
     shard::subtree_import,     // 39
+    namespace::update_parent_meta, // 40
 ];
 
 /// The exactly-once envelope handler (DESIGN.md §11). Unwraps a
@@ -336,6 +339,7 @@ mod tests {
             Request::PlacementFetch { since: 0 },
             Request::MigrateSubtree { dir: ino, target: 1, grace: 0 },
             Request::SubtreeImport { frames: vec![] },
+            Request::UpdateParentMeta { ino, parent: ino, name: "p".into() },
         ];
         assert_eq!(all.len(), HANDLERS.len(), "one sample per table entry");
         for (i, req) in all.into_iter().enumerate() {

@@ -84,12 +84,21 @@ pub fn unlink(s: &BServer, req: Request) -> FsResult<Response> {
     let dir_file = s.fs.validate(dir)?;
     s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
     let _g = s.locks.write(dir_file);
+    // resolve the drop target before mutating: a mid-freeze child must
+    // bounce with Busy while the dirent is still intact, and a
+    // migrated-away child's object lives at the placement owner, not
+    // its birth host
+    let moved_to = match s.fs.lookup(dir_file, &name) {
+        Ok(e) => s.moved_owner(e.ino.file)?,
+        Err(_) => None,
+    };
     s.invalidate_barrier(dir_file);
     let entry = s.fs.unlink(dir_file, &name)?;
     if !s.fs.owns(entry.ino) {
-        // remote data object: ask its server to drop it
+        // remote data object: ask its current server to drop it
+        let target = moved_to.map(|(o, _)| o).unwrap_or(entry.ino.host);
         s.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
-        let _ = s.peer(entry.ino.host)?.call(Request::DropObject { ino: entry.ino });
+        let _ = s.peer(target)?.call(Request::DropObject { ino: entry.ino });
     } else {
         s.locks.forget(entry.ino.file);
         s.forget_data_gen(entry.ino.file);
@@ -116,6 +125,28 @@ pub fn rmdir(s: &BServer, req: Request) -> FsResult<Response> {
     let dir_file = s.fs.validate(dir)?;
     s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
     let _g = s.locks.write(dir_file);
+    let peeked = s.fs.lookup(dir_file, &name)?;
+    if peeked.kind != FileKind::Directory {
+        return Err(FsError::NotADirectory);
+    }
+    if !s.fs.owns(peeked.ino) {
+        // the dir body lives elsewhere (migrated away, or imported as a
+        // remote dirent): emptiness must be checked — and the object
+        // dropped — at its current owner, BEFORE our dirent goes. A
+        // mid-freeze child bounces with Busy via `moved_owner`.
+        let target = match s.moved_owner(peeked.ino.file)? {
+            Some((owner, _)) => owner,
+            None => s.shard_map.owner(peeked.ino).unwrap_or(peeked.ino.host),
+        };
+        s.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+        match s.peer(target)?.call(Request::DropObject { ino: peeked.ino })? {
+            Response::Unit => {}
+            // object already gone: just drop the dangling dirent below
+            Response::Err(FsError::NotFound) => {}
+            Response::Err(e) => return Err(e),
+            other => return Err(FsError::Protocol(format!("peer rmdir returned {other:?}"))),
+        }
+    }
     s.invalidate_barrier(dir_file);
     let entry = s.fs.rmdir(dir_file, &name)?;
     // the removed dir itself may be cached by clients
@@ -149,6 +180,38 @@ pub fn rename(s: &BServer, req: Request) -> FsResult<Response> {
         s.bump_lease(dst);
         s.invalidate_barrier(dst);
     }
+    // bounce a mid-freeze source entry before mutating anything, and
+    // learn where a migrated-away one now lives
+    let moved_to = match s.fs.lookup(src, &sname) {
+        Ok(e) => s.moved_owner(e.ino.file)?,
+        Err(_) => None,
+    };
     let entry = s.fs.rename(src, sname.as_str(), dst, dname.as_str())?;
+    if !s.fs.owns(entry.ino) {
+        // the dirent is the namespace truth and it just moved: keep the
+        // owner's inode parent/name bookkeeping honest (best-effort —
+        // the dirent rename above is already durable and authoritative)
+        let target = moved_to.map(|(o, _)| o).unwrap_or(entry.ino.host);
+        s.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+        if let Ok(p) = s.peer(target) {
+            let _ = p.call(Request::UpdateParentMeta {
+                ino: entry.ino,
+                parent: s.fs.ino(dst),
+                name: dname.clone(),
+            });
+        }
+    }
     Ok(Response::Created(entry))
+}
+
+/// Server↔server: a rename moved `ino`'s dirent on the calling server;
+/// re-point the local inode's parent/name so `parent_of` and later
+/// chmod/chown dirent-syncs follow the entry to its new directory.
+pub fn update_parent_meta(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::UpdateParentMeta { ino, parent, name } = req else {
+        return Err(misrouted("updateparentmeta"));
+    };
+    let file = s.fs.validate(ino)?;
+    s.fs.set_parent_meta(file, parent, &name)?;
+    Ok(Response::Unit)
 }

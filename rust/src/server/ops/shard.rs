@@ -35,7 +35,8 @@ pub(crate) fn shard_target(req: &Request) -> Option<Ino> {
         | Request::Truncate { ino, .. }
         | Request::DropObject { ino }
         | Request::ReadBatch { ino, .. }
-        | Request::WriteBatch { ino, .. } => Some(*ino),
+        | Request::WriteBatch { ino, .. }
+        | Request::UpdateParentMeta { ino, .. } => Some(*ino),
         // rename gates on the source dir here; `route_moved` checks the
         // destination separately so a half-migrated pair never applies
         Request::Rename { sdir, .. } => Some(*sdir),

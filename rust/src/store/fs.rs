@@ -33,6 +33,12 @@ pub struct LocalFs {
     /// server minted. Clients keep routing by that birth ino (via the
     /// placement map), so the adopted object must keep answering to it.
     adopted: RwLock<HashMap<FileId, (HostId, Version)>>,
+    /// Birth-local objects a migration moved *away*. `owns` must say no
+    /// for these even though host+version still match — a still-local
+    /// parent dirent naming a migrated subtree root would otherwise
+    /// steer rmdir/rename into evicted local state instead of the
+    /// placement owner. Cleared if the object migrates back home.
+    evicted: RwLock<std::collections::HashSet<FileId>>,
     /// Write-ahead journal sink. When attached, every mutating method
     /// appends a state-level record right after its table mutation; the
     /// dispatch layer fsyncs (commit) before the reply is sent. The
@@ -54,6 +60,7 @@ impl LocalFs {
             data,
             epoch: AtomicU64::new(1),
             adopted: RwLock::new(HashMap::new()),
+            evicted: RwLock::new(std::collections::HashSet::new()),
             journal: RwLock::new(None),
         };
         fs.inodes.insert(
@@ -75,10 +82,11 @@ impl LocalFs {
     }
 
     /// Does this engine hold `ino`'s object — born here (host+version
-    /// match) or adopted from its birth server by a migration?
+    /// match, not migrated away) or adopted from its birth server by a
+    /// migration?
     pub fn owns(&self, ino: Ino) -> bool {
         if ino.host == self.host {
-            ino.version == self.version
+            ino.version == self.version && !self.evicted.read().unwrap().contains(&ino.file)
         } else {
             self.adopted.read().unwrap().get(&ino.file) == Some(&(ino.host, ino.version))
         }
@@ -86,12 +94,13 @@ impl LocalFs {
 
     /// Register `ino` as adopted (non-logging; the migration import
     /// journals the `Adopt` record itself). Adopting a local ino clears
-    /// any stale entry — an object that migrated away and later returned
-    /// home.
+    /// any stale adoption or eviction entry — an object that migrated
+    /// away and later returned home.
     pub fn adopt(&self, ino: Ino) {
         let mut a = self.adopted.write().unwrap();
         if ino.host == self.host {
             a.remove(&ino.file);
+            self.evicted.write().unwrap().remove(&ino.file);
         } else {
             a.insert(ino.file, (ino.host, ino.version));
         }
@@ -307,10 +316,18 @@ impl LocalFs {
     }
 
     fn drop_object_inner(&self, file: FileId, log: bool) -> FsResult<()> {
-        let rec = self.inodes.remove(file)?;
-        if rec.kind == FileKind::Regular {
+        let kind = self.inodes.get(file)?.kind;
+        if kind == FileKind::Directory {
+            // built-in emptiness guard: NotEmpty aborts before the
+            // inode goes (the cross-server rmdir path lands here — the
+            // parent holds only the dirent, this server holds the body)
+            self.dirs.remove_dir(file)?;
+        }
+        self.inodes.remove(file)?;
+        if kind == FileKind::Regular {
             self.data.delete(file)?;
         }
+        self.adopted.write().unwrap().remove(&file);
         self.bump();
         if log {
             self.log(JournalRec::DropObject { file });
@@ -395,6 +412,28 @@ impl LocalFs {
             });
         }
         Ok(entry)
+    }
+
+    /// Re-point a local object's parent/name bookkeeping. Invoked via
+    /// `Request::UpdateParentMeta` when a rename moved the object's
+    /// dirent on a *different* server (remote or migrated-away entry):
+    /// the dirent is the namespace truth, this keeps `parent_of` and
+    /// later chmod dirent-syncs honest on the owner.
+    pub fn set_parent_meta(&self, file: FileId, parent: Ino, name: &str) -> FsResult<()> {
+        self.replay_set_parent(file, parent, name)?;
+        self.log(JournalRec::SetParent { file, parent, name: name.to_string() });
+        Ok(())
+    }
+
+    /// Non-logging parent-meta update (recovery replay / backup apply).
+    pub fn replay_set_parent(&self, file: FileId, parent: Ino, name: &str) -> FsResult<()> {
+        self.inodes.update(file, |rec| {
+            rec.parent = Some(parent);
+            rec.name_in_parent = name.to_string();
+            rec.ctime = unix_now();
+        })?;
+        self.bump();
+        Ok(())
     }
 
     // -- permission mutations -------------------------------------------------
@@ -840,7 +879,12 @@ impl LocalFs {
             }
         }
         self.dirs.drop_dir(file);
-        self.adopted.write().unwrap().remove(&file);
+        let was_adopted = self.adopted.write().unwrap().remove(&file).is_some();
+        if !was_adopted && id_home(file) == self.host {
+            // a birth-local object moved out: host+version still match
+            // its ino, so `owns` needs the explicit tombstone
+            self.evicted.write().unwrap().insert(file);
+        }
         self.bump();
     }
 

@@ -213,6 +213,10 @@ pub enum Request {
     /// frames (snapshot of the subtree, its lease epochs, and the
     /// source's dedup ledger) the target adopts, applies and journals.
     SubtreeImport { frames: Vec<u8> },
+    /// Server↔server: a rename moved `ino`'s dirent on the sending
+    /// server; the owner re-points its inode's parent/name bookkeeping
+    /// so `parent_of` and later perm dirent-syncs stay honest.
+    UpdateParentMeta { ino: Ino, parent: Ino, name: String },
 }
 
 /// One override row of the directory placement map: the subtree rooted
@@ -347,6 +351,7 @@ impl Request {
             Request::PlacementFetch { .. } => "placement",
             Request::MigrateSubtree { .. } => "migrate",
             Request::SubtreeImport { .. } => "migrate",
+            Request::UpdateParentMeta { .. } => "rename",
         }
     }
 
@@ -759,6 +764,12 @@ impl Wire for Request {
                 tagged!(e, 39);
                 e.bytes(frames);
             }
+            Request::UpdateParentMeta { ino, parent, name } => {
+                tagged!(e, 40);
+                ino.enc(e);
+                parent.enc(e);
+                e.str(name);
+            }
         }
     }
 
@@ -918,6 +929,11 @@ impl Wire for Request {
             37 => Request::PlacementFetch { since: d.u64()? },
             38 => Request::MigrateSubtree { dir: Ino::dec(d)?, target: d.u16()?, grace: d.u32()? },
             39 => Request::SubtreeImport { frames: d.bytes()? },
+            40 => Request::UpdateParentMeta {
+                ino: Ino::dec(d)?,
+                parent: Ino::dec(d)?,
+                name: d.str()?,
+            },
             t => return Err(FsError::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -1297,6 +1313,11 @@ mod tests {
             Request::PlacementFetch { since: 12 },
             Request::MigrateSubtree { dir: ino, target: 2, grace: 64 },
             Request::SubtreeImport { frames: vec![0xca, 0xfe] },
+            Request::UpdateParentMeta {
+                ino,
+                parent: Ino::new(1, 0, 7),
+                name: "moved".into(),
+            },
         ]
     }
 

@@ -339,6 +339,76 @@ fn rename_into_a_migrated_directory_lands_at_exactly_one_name() {
 }
 
 // ---------------------------------------------------------------------------
+// Ops on a migrated subtree ROOT through its still-local parent dirent
+// ---------------------------------------------------------------------------
+// The subtree root is the one migrated object whose dirent stays behind
+// on the source: its parent directory never moved. Rmdir/rename arrive
+// at the source via that dirent, so the source must treat the evicted
+// body as remote and route to the placement owner — not take the
+// owns-it-locally branch against its own tombstone.
+
+#[test]
+fn rmdir_of_a_migrated_subtree_root_routes_to_the_new_owner() {
+    let cluster = two_hosts();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/parent", 0o755).unwrap();
+    p.mkdir("/parent/sub", 0o755).unwrap();
+    p.put("/parent/sub/f", b"x").unwrap();
+    let sub = p.stat("/parent/sub").unwrap().ino;
+    migrate(&cluster, 0, sub, 1, 0);
+
+    // non-empty: emptiness is decided by the CURRENT owner's copy, and
+    // the refusal leaves both the dirent and the body fully intact
+    assert_eq!(p.rmdir("/parent/sub").unwrap_err(), FsError::NotEmpty);
+    assert!(p.stat("/parent/sub").is_ok());
+    assert_eq!(p.get("/parent/sub/f", 64).unwrap(), b"x");
+
+    // emptied, the rmdir succeeds: the source drops its dirent and the
+    // new owner drops the directory body — nothing orphaned either side
+    p.unlink("/parent/sub/f").unwrap();
+    p.rmdir("/parent/sub").unwrap();
+    assert_eq!(p.stat("/parent/sub").unwrap_err(), FsError::NotFound);
+    assert!(
+        cluster.servers[1].fs.getattr(sub.file).is_err(),
+        "the migrated body must be dropped at the owner"
+    );
+    // the parent keeps working on the source afterwards
+    p.put("/parent/again", b"still writable").unwrap();
+}
+
+#[test]
+fn rename_of_a_migrated_subtree_root_updates_the_owners_parent_meta() {
+    let cluster = two_hosts();
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/a", 0o755).unwrap();
+    p.mkdir("/b", 0o755).unwrap();
+    p.mkdir("/a/sub", 0o755).unwrap();
+    p.put("/a/sub/f", b"payload").unwrap();
+    let sub = p.stat("/a/sub").unwrap().ino;
+    let b = p.stat("/b").unwrap().ino;
+    migrate(&cluster, 0, sub, 1, 0);
+
+    // the dirent moves on the source; the body stays with the new owner
+    p.rename("/a/sub", "/b/sub2").unwrap();
+    assert_eq!(p.stat("/a/sub").unwrap_err(), FsError::NotFound);
+    let moved = p.stat("/b/sub2").unwrap();
+    assert_eq!(moved.ino, sub, "rename moves the dirent, not the object");
+    assert_eq!(p.get("/b/sub2/f", 64).unwrap(), b"payload");
+
+    // and the owner's inode bookkeeping followed the dirent, so later
+    // chmod/chown dirent-syncs chase the entry to its new directory
+    let (parent, name) = cluster.servers[1]
+        .fs
+        .parent_of(sub.file)
+        .unwrap()
+        .expect("a migrated subtree root keeps its parent pointer");
+    assert_eq!(parent, b, "owner's parent pointer must follow the rename");
+    assert_eq!(name, "sub2", "owner's name bookkeeping must follow the rename");
+}
+
+// ---------------------------------------------------------------------------
 // The storm: 8 mutator threads racing a live migration
 // ---------------------------------------------------------------------------
 
