@@ -138,4 +138,41 @@ fn main() {
         agent.stats.lease_grants.load(std::sync::atomic::Ordering::Relaxed),
     );
     println!("\nRPCs by op:\n{}", metrics.report());
+
+    // ---- telemetry plane (DESIGN.md §13) -----------------------------------
+    // Tracing is on by default, so every op above already recorded a
+    // causally-linked span tree: the client root, one child per RPC
+    // attempt, and the server's dispatch span nested under the attempt
+    // that carried it. Pull the most recent `open` trace and render it
+    // exactly the way `buffetfs trace --addr <host:port> --id <id>` does.
+    let client_spans = agent.tracer().snapshot();
+    let root = client_spans
+        .iter()
+        .rev()
+        .find(|s| s.parent == 0 && s.name == "open")
+        .expect("the opens above left a root span in the client ring");
+    let mut spans = agent.tracer().trace(root.trace_id);
+    for s in &cluster.servers {
+        spans.extend(s.obs.trace.trace(root.trace_id));
+    }
+    println!("trace {:#x} ({} spans):", root.trace_id, spans.len());
+    println!("{}", buffetfs::obs::render_tree(&spans));
+    // Sample shape (timings vary):
+    //   open [client1] 412µs
+    //     open [client1] 403µs
+    //       open [server0] 21µs
+
+    // The server half of the same plane: the snapshot `buffetfs stats
+    // --addr <host:port> --sections ops,server` fetches over TCP via
+    // `Request::StatsFetch`, here called in-process on host 0.
+    if let buffetfs::wire::Response::Stats { json, .. } =
+        cluster.servers[0].stats_snapshot(buffetfs::obs::SEC_OPS | buffetfs::obs::SEC_SERVER, 0)
+    {
+        println!("\nStatsFetch snapshot, host 0:\n{json}");
+    }
+    // Sample shape (counts depend on the run):
+    //   {"host":0,"ops":{"open":{"n":5,"err":0,"p50_us":14.0,"p99_us":52.0},
+    //    "read":{"n":2,"err":0,"p50_us":9.0,"p99_us":9.0},...},
+    //    "admission":{"sheds":0},"server":{...},
+    //    "trace":{"recorded":31,"slow":0}}
 }

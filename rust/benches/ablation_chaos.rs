@@ -64,6 +64,8 @@ fn main() {
     primary
         .set_backup(ChanTransport::new(backup.clone(), net.clone(), Arc::new(RpcMetrics::new())));
 
+    let pair = [primary.clone(), backup.clone()];
+    let obs0 = buffetfs::harness::obs_counters(&pair);
     let metrics = Arc::new(RpcMetrics::new());
     let view = ClusterView::new(primary.fs.root_ino());
     let faulty_primary = FaultyTransport::new(
@@ -98,6 +100,9 @@ fn main() {
         }
     }
     let storm_ms = t0.elapsed().as_millis();
+    // server-side truth for the storm window (DESIGN.md §13): journal
+    // appends/fsyncs and ledger traffic explain the blip numbers
+    let obs = buffetfs::harness::obs_counters(&pair).delta(&obs0);
     lat_us.sort_unstable();
     let (p50, p99, max) =
         (pct(&lat_us, 50.0), pct(&lat_us, 99.0), lat_us.last().copied().unwrap_or(0));
@@ -142,10 +147,11 @@ fn main() {
          \"dedup_hits\": {hits},\n  \"dedup_misses\": {misses},\n  \
          \"ledger_entries\": {entries},\n  \"failovers\": {},\n  \"busy_retries\": {},\n  \
          \"catchup_bytes\": {catchup_bytes},\n  \"catchup_records\": {catchup_records},\n  \
-         \"catchup_ms\": {catchup_ms}\n}}\n",
+         \"catchup_ms\": {catchup_ms},\n  \"obs\": {}\n}}\n",
         lat_us.len(),
         metrics.failovers(),
         metrics.busy_retries(),
+        obs.json(),
     );
     match std::fs::write("BENCH_chaos.json", &json) {
         Ok(()) => println!("\nwrote BENCH_chaos.json"),

@@ -1,0 +1,199 @@
+//! Telemetry-plane ablation (DESIGN.md §13): what end-to-end tracing
+//! costs on the hot path.
+//!
+//! One in-process server, one pipelined connection at depth 16, waves of
+//! 16 small-file opens — the §9 storm shape. Two seed-paired runs over
+//! identical schedules: UNTRACED (bare requests) and TRACED (every
+//! request wrapped in the `Traced` envelope, so the chan mux strips it
+//! into the 16-byte `FLAG_TRACE` frame-header extension and the server
+//! opens + records a span per dispatch).
+//!
+//! The acceptance bar: traced p50 within 3% of untraced p50 at depth 16.
+//! Each phase is stamped with the server's `ObsCounters` delta — the
+//! traced phase must show one span per op, the untraced phase none.
+//!
+//! Results print as a table and land in `BENCH_obs.json`.
+//!
+//! `cargo bench --bench ablation_obs` (OBS_SEED varies the simnet
+//! jitter schedule).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use buffetfs::harness;
+use buffetfs::metrics::RpcMetrics;
+use buffetfs::server::BServer;
+use buffetfs::simnet::{LatencyModel, NetConfig};
+use buffetfs::store::data::MemData;
+use buffetfs::store::fs::LocalFs;
+use buffetfs::transport::chan::ChanTransport;
+use buffetfs::transport::{wait_all, Transport};
+use buffetfs::types::{Credentials, FileKind, Ino, OpenFlags};
+use buffetfs::wire::{Request, Response};
+
+const DEPTH: usize = 16;
+const WAVES: usize = 400;
+const WARMUP_WAVES: usize = 20;
+
+fn net(seed: u64) -> NetConfig {
+    NetConfig { one_way_us: 100, per_kb_us: 0, jitter_us: 5, seed }
+}
+
+/// Ids threaded through both phases so every open handle (and trace id)
+/// is globally unique.
+struct Seq {
+    handle: u64,
+    trace: u64,
+}
+
+/// `waves` storm waves of DEPTH opens over `t`; returns summed wall
+/// time (µs).
+fn storm(t: &Arc<ChanTransport>, inos: &[Ino], traced: bool, seq: &mut Seq, waves: usize) -> f64 {
+    let cred = Credentials::root();
+    let mut total_us = 0.0;
+    for _ in 0..waves {
+        let t0 = Instant::now();
+        let pending: Vec<_> = inos
+            .iter()
+            .take(DEPTH)
+            .map(|ino| {
+                seq.handle += 1;
+                let open = Request::Open {
+                    ino: *ino,
+                    flags: OpenFlags::RDONLY,
+                    cred: cred.clone(),
+                    client: 1,
+                    handle: seq.handle,
+                    want_inline: true,
+                };
+                let req = if traced {
+                    seq.trace += 1;
+                    Request::Traced { trace_id: seq.trace, parent_span: 1, inner: Box::new(open) }
+                } else {
+                    open
+                };
+                t.submit(req).expect("submit")
+            })
+            .collect();
+        for r in wait_all(t.as_ref(), pending) {
+            r.expect("storm open");
+        }
+        total_us += t0.elapsed().as_secs_f64() * 1e6;
+    }
+    total_us
+}
+
+struct RunResult {
+    p50_us: f64,
+    p99_us: f64,
+    wave_us: f64,
+    obs_delta: buffetfs::obs::ObsCounters,
+}
+
+/// One phase: warmup on a throwaway connection, then `WAVES` measured
+/// waves on a fresh connection (fresh `RpcMetrics`, so the exported
+/// percentiles cover exactly the measured ops) bracketed by
+/// `ObsCounters` samples.
+fn run(server: &Arc<BServer>, inos: &[Ino], seed: u64, traced: bool, seq: &mut Seq) -> RunResult {
+    let warm = ChanTransport::new(
+        server.clone(),
+        Arc::new(LatencyModel::new(net(seed))),
+        Arc::new(RpcMetrics::new()),
+    );
+    warm.set_pipeline_depth(DEPTH);
+    storm(&warm, inos, traced, seq, WARMUP_WAVES);
+
+    let metrics = Arc::new(RpcMetrics::new());
+    let t = ChanTransport::new(server.clone(), Arc::new(LatencyModel::new(net(seed))), metrics.clone());
+    t.set_pipeline_depth(DEPTH);
+    let before = harness::obs_counters(std::slice::from_ref(server));
+    let wall_us = storm(&t, inos, traced, seq, WAVES);
+    let after = harness::obs_counters(std::slice::from_ref(server));
+
+    let (p50_us, _p90, p99_us) = metrics.percentiles_us("open").unwrap_or((0.0, 0.0, 0.0));
+    RunResult { p50_us, p99_us, wave_us: wall_us / WAVES as f64, obs_delta: after.delta(&before) }
+}
+
+fn main() {
+    let seed: u64 = std::env::var("OBS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x0B5);
+    println!(
+        "obs ablation: depth-{DEPTH} pipelined open storm, {WAVES} waves \
+         (+{WARMUP_WAVES} warmup), one_way 100us jitter 5us, seed {seed:#x}"
+    );
+
+    let server = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    let root = server.fs.root_ino();
+    let cred = Credentials::root();
+    let mut inos = Vec::with_capacity(DEPTH);
+    for i in 0..DEPTH {
+        let e = match server.handle(Request::Create {
+            dir: root,
+            name: format!("storm{i}.dat"),
+            mode: 0o644,
+            kind: FileKind::Regular,
+            cred: cred.clone(),
+            client: 0,
+        }) {
+            Response::Created(e) => e,
+            other => panic!("obs setup create: {other:?}"),
+        };
+        server.handle(Request::Write { ino: e.ino, off: 0, data: vec![7u8; 1024], open_ctx: None });
+        inos.push(e.ino);
+    }
+
+    let mut seq = Seq { handle: 1, trace: 1 };
+    let off = run(&server, &inos, seed, false, &mut seq);
+    let on = run(&server, &inos, seed, true, &mut seq);
+
+    for (name, r) in [("untraced", &off), ("traced  ", &on)] {
+        println!(
+            "  {name}: p50 {:.1}us p99 {:.1}us wave {:.1}us | obs delta {}",
+            r.p50_us,
+            r.p99_us,
+            r.wave_us,
+            r.obs_delta.json()
+        );
+    }
+    let overhead_p50 = if off.p50_us > 0.0 { (on.p50_us - off.p50_us) / off.p50_us } else { 0.0 };
+    let overhead_p99 = if off.p99_us > 0.0 { (on.p99_us - off.p99_us) / off.p99_us } else { 0.0 };
+    let accept = overhead_p50 <= 0.03;
+    println!(
+        "  overhead: p50 {:+.2}% p99 {:+.2}% — acceptance (p50 <= 3%): {}",
+        overhead_p50 * 100.0,
+        overhead_p99 * 100.0,
+        if accept { "PASS" } else { "FAIL" }
+    );
+    let ops = (WAVES * DEPTH) as u64;
+    assert_eq!(
+        on.obs_delta.dispatch_total, ops,
+        "every traced op must dispatch exactly once (no envelope double-count)"
+    );
+    assert_eq!(
+        on.obs_delta.spans, ops,
+        "the traced phase must record exactly one server span per op"
+    );
+    assert_eq!(off.obs_delta.spans, 0, "the untraced phase must record no spans");
+
+    let json = format!(
+        "{{\n  \"bench\": \"obs\",\n  \"seed\": {seed},\n  \"depth\": {DEPTH},\n  \
+         \"waves\": {WAVES},\n  \"ops_per_run\": {ops},\n  \
+         \"untraced\": {{ \"p50_us\": {:.2}, \"p99_us\": {:.2}, \"wave_us\": {:.2}, \
+         \"obs\": {} }},\n  \
+         \"traced\": {{ \"p50_us\": {:.2}, \"p99_us\": {:.2}, \"wave_us\": {:.2}, \
+         \"obs\": {} }},\n  \
+         \"overhead_p50\": {overhead_p50:.4},\n  \"overhead_p99\": {overhead_p99:.4},\n  \
+         \"acceptance_p50_within_3pct\": {accept}\n}}\n",
+        off.p50_us,
+        off.p99_us,
+        off.wave_us,
+        off.obs_delta.json(),
+        on.p50_us,
+        on.p99_us,
+        on.wave_us,
+        on.obs_delta.json(),
+    );
+    match std::fs::write("BENCH_obs.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_obs.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_obs.json: {e}"),
+    }
+}

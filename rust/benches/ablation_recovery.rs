@@ -29,7 +29,13 @@ use buffetfs::store::data::MemData;
 use buffetfs::transport::chan::ChanTransport;
 use buffetfs::types::Credentials;
 
-fn recovery_json(one_way_us: u64, iters: usize, rows: &[RecoveryRow], counters: &str) -> String {
+fn recovery_json(
+    one_way_us: u64,
+    iters: usize,
+    rows: &[RecoveryRow],
+    counters: &str,
+    obs: &str,
+) -> String {
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"crash_recovery\",\n");
     out.push_str(&format!("  \"one_way_us\": {one_way_us},\n"));
@@ -51,15 +57,17 @@ fn recovery_json(one_way_us: u64, iters: usize, rows: &[RecoveryRow], counters: 
         ));
     }
     out.push_str("  ],\n");
-    out.push_str(&format!("  \"journal_counters\": {counters}\n"));
+    out.push_str(&format!("  \"journal_counters\": {counters},\n"));
+    out.push_str(&format!("  \"obs\": {obs}\n"));
     out.push_str("}\n");
     out
 }
 
 /// Exercise a journaled primary/backup pair and return the primary's
-/// raw journal counters (`JournalStats::json()`): appends, fsyncs,
-/// group-commit batch sizes, shipped/acked bytes.
-fn exercised_counters(net: NetConfig) -> String {
+/// raw journal counters (`JournalStats::json()`) plus its unified
+/// `ObsCounters` delta (DESIGN.md §13): appends, fsyncs, group-commit
+/// batch sizes, shipped/acked bytes, per-op dispatch totals.
+fn exercised_counters(net: NetConfig) -> (String, String) {
     let seq = std::process::id();
     let pdir = std::env::temp_dir().join(format!("buffetfs-bench-counters-p-{seq}"));
     let bdir = std::env::temp_dir().join(format!("buffetfs-bench-counters-b-{seq}"));
@@ -73,6 +81,7 @@ fn exercised_counters(net: NetConfig) -> String {
     let lat = Arc::new(LatencyModel::new(net));
     primary.set_backup(ChanTransport::new(backup, lat.clone(), Arc::new(RpcMetrics::new())));
 
+    let obs0 = primary.obs_counters();
     let metrics = Arc::new(RpcMetrics::new());
     let view = ClusterView::new(primary.fs.root_ino());
     view.add(0, 0, ChanTransport::new(primary.clone(), lat, metrics.clone()));
@@ -93,9 +102,10 @@ fn exercised_counters(net: NetConfig) -> String {
         .journal()
         .map(|j| j.stats().json())
         .unwrap_or_else(|| "{}".into());
+    let obs = primary.obs_counters().delta(&obs0).json();
     let _ = std::fs::remove_dir_all(&pdir);
     let _ = std::fs::remove_dir_all(&bdir);
-    counters
+    (counters, obs)
 }
 
 fn main() {
@@ -109,10 +119,11 @@ fn main() {
         "\n(replay is pure local CPU + page cache: no RPCs, no client involvement; \
          the blip is promotion + one capped backoff + the retried op)"
     );
-    let counters = exercised_counters(net);
+    let (counters, obs) = exercised_counters(net);
     println!("\njournal counters (4-thread put storm, shipped to a live backup):");
     println!("  {counters}");
-    let json = recovery_json(one_way_us, iters, &rows, &counters);
+    println!("  obs delta: {obs}");
+    let json = recovery_json(one_way_us, iters, &rows, &counters, &obs);
     match std::fs::write("BENCH_recovery.json", &json) {
         Ok(()) => println!("\nwrote BENCH_recovery.json"),
         Err(e) => eprintln!("\ncould not write BENCH_recovery.json: {e}"),

@@ -113,7 +113,7 @@ fn pipeline_json(one_way_us: u64, iters: usize, rows: &[PipelineRow]) -> String 
             "    {{\"depth\": {}, \"lockstep_us\": {:.1}, \"pipelined_us\": {:.1}, \
              \"speedup\": {:.2}, \"ooo_completions\": {}, \"submits\": {}, \
              \"inflight_depth_mean\": {:.2}, \"open_p50_us\": {:.1}, \"open_p90_us\": {:.1}, \
-             \"open_p99_us\": {:.1}}}{}\n",
+             \"open_p99_us\": {:.1}, \"obs\": {}}}{}\n",
             r.depth,
             r.lockstep_us,
             r.pipelined_us,
@@ -124,6 +124,7 @@ fn pipeline_json(one_way_us: u64, iters: usize, rows: &[PipelineRow]) -> String 
             r.p50_us,
             r.p90_us,
             r.p99_us,
+            r.obs.json(),
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }

@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 
 use buffetfs::blib::Buffet;
 use buffetfs::cluster::placement::{Balancer, BalancerConfig};
+use buffetfs::harness;
 use buffetfs::cluster::{Backing, BuffetCluster};
 use buffetfs::simnet::NetConfig;
 use buffetfs::transport::capacity::ServiceConfig;
@@ -55,6 +56,9 @@ struct RunResult {
     redirects: u64,
     migrations: u64,
     wall_ms: u128,
+    /// Server-side truth for the measured window (DESIGN.md §13): why
+    /// the run was fast or slow, not just how fast it went.
+    obs: buffetfs::obs::ObsCounters,
 }
 
 /// One full workload run. `rebalance` arms the balancer thread; both
@@ -83,6 +87,7 @@ fn run(seed: u64, rebalance: bool) -> RunResult {
     // (phase, latency) samples: phase 1 = after the hot-spot shift
     let samples: Mutex<Vec<(u8, u64)>> = Mutex::new(Vec::new());
 
+    let obs0 = harness::obs_counters(&cluster.servers);
     let t0 = Instant::now();
     std::thread::scope(|scope| {
         if rebalance {
@@ -135,6 +140,7 @@ fn run(seed: u64, rebalance: bool) -> RunResult {
         }
     });
     let wall_ms = t0.elapsed().as_millis();
+    let obs = harness::obs_counters(&cluster.servers).delta(&obs0);
 
     let samples = samples.into_inner().unwrap();
     let mut all: Vec<u64> = samples.iter().map(|&(_, us)| us).collect();
@@ -150,6 +156,7 @@ fn run(seed: u64, rebalance: bool) -> RunResult {
         redirects: redirects.load(Ordering::Relaxed),
         migrations: migrations.load(Ordering::Relaxed),
         wall_ms,
+        obs,
     }
 }
 
@@ -180,15 +187,17 @@ fn main() {
          \"files_per_dir\": {FILES_PER_DIR},\n  \"threads\": {THREADS},\n  \
          \"ops_per_thread\": {OPS_PER_THREAD},\n  \"zipf_s\": {ZIPF_S},\n  \
          \"off\": {{ \"p50_us\": {}, \"p99_us\": {}, \"post_shift_p99_us\": {}, \
-         \"errors\": {}, \"wall_ms\": {} }},\n  \
+         \"errors\": {}, \"wall_ms\": {}, \"obs\": {} }},\n  \
          \"on\": {{ \"p50_us\": {}, \"p99_us\": {}, \"post_shift_p99_us\": {}, \
-         \"errors\": {}, \"migrations\": {}, \"redirects\": {}, \"wall_ms\": {} }},\n  \
+         \"errors\": {}, \"migrations\": {}, \"redirects\": {}, \"wall_ms\": {}, \
+         \"obs\": {} }},\n  \
          \"p99_speedup\": {gain:.3},\n  \"post_shift_p99_speedup\": {post_gain:.3}\n}}\n",
         off.p50_us,
         off.p99_us,
         off.post_shift_p99_us,
         off.errors,
         off.wall_ms,
+        off.obs.json(),
         on.p50_us,
         on.p99_us,
         on.post_shift_p99_us,
@@ -196,6 +205,7 @@ fn main() {
         on.migrations,
         on.redirects,
         on.wall_ms,
+        on.obs.json(),
     );
     match std::fs::write("BENCH_shard.json", &json) {
         Ok(()) => println!("\nwrote BENCH_shard.json"),

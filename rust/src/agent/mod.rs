@@ -150,6 +150,8 @@ pub struct AgentStats {
     /// `WrongServer` redirects followed (placement cache refreshed, op
     /// re-sent once to the new owner — elastic namespace, §12).
     pub redirects: AtomicU64,
+    /// Permanent downgrades to untraced requests (old-server fallback).
+    pub trace_downgrades: AtomicU64,
 }
 
 /// Result of a path resolution: the leaf entry plus the perm-blob chain
@@ -200,19 +202,29 @@ pub struct BAgent {
     /// Learned from `WrongServer` redirects and `PlacementFetch` replies;
     /// consulted before the birth-host route on every call.
     placement: PlacementCache,
+    /// Request tracing enabled? Cleared permanently when a server rejects
+    /// [`Request::Traced`] (protocol downgrade — the envelope tag is
+    /// decoded before any inner tag, so tracing downgrades independently
+    /// of stamping), or by [`BAgent::set_tracing`] for ablation runs.
+    tracing: AtomicBool,
+    /// Client-side span sink (DESIGN.md §13): one ring per agent.
+    tracer: Arc<crate::obs::Recorder>,
     pub stats: AgentStats,
 }
 
 impl BAgent {
     pub fn new(id: ClientId, cluster: ClusterView, metrics: Arc<RpcMetrics>) -> Arc<BAgent> {
         let root = cluster.root();
+        let tracer = crate::obs::Recorder::new();
+        let datapath = Datapath::new(metrics.clone());
+        datapath.set_tracer(tracer.clone(), id);
         Arc::new(BAgent {
             id,
             cluster,
             cache: CacheTree::new(root),
             fds: Mutex::new(FdTable::new()),
             handle_seq: AtomicU64::new(1),
-            datapath: Datapath::new(metrics.clone()),
+            datapath,
             metrics,
             checker: RwLock::new(None),
             batched: AtomicBool::new(true),
@@ -221,6 +233,8 @@ impl BAgent {
             outstanding: Mutex::new(std::collections::BTreeSet::new()),
             leases: Mutex::new(HashMap::new()),
             placement: PlacementCache::new(),
+            tracing: AtomicBool::new(true),
+            tracer,
             stats: AgentStats::default(),
         })
     }
@@ -335,6 +349,39 @@ impl BAgent {
         }
     }
 
+    /// Toggle request tracing (ablation: `false` measures the untraced
+    /// baseline; see `benches/ablation_obs`).
+    pub fn set_tracing(&self, on: bool) {
+        self.tracing.store(on, Ordering::Relaxed);
+    }
+
+    pub fn tracing_enabled(&self) -> bool {
+        self.tracing.load(Ordering::Relaxed)
+    }
+
+    fn downgrade_tracing(&self) {
+        if self.tracing.swap(false, Ordering::Relaxed) {
+            self.stats.trace_downgrades.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The client-side span ring (tests / the `buffetfs trace` CLI).
+    pub fn tracer(&self) -> &Arc<crate::obs::Recorder> {
+        &self.tracer
+    }
+
+    /// Open the root span of a top-level file operation. Every RPC the
+    /// op issues (and every retry annotation) nests under it via the
+    /// thread-local context; `None` when tracing is off keeps the hot
+    /// path allocation-free.
+    fn op_span(&self, name: &'static str) -> Option<crate::obs::SpanGuard> {
+        if self.tracing_enabled() {
+            Some(self.tracer.span(name, self.id, false))
+        } else {
+            None
+        }
+    }
+
     /// Allocate the next stamped op id and register it in flight.
     fn begin_op(&self) -> u64 {
         let id = self.op_seq.fetch_add(1, Ordering::Relaxed) + 1;
@@ -410,7 +457,39 @@ impl BAgent {
         let mut attempt = 0;
         let mut redirected = false;
         loop {
-            let e = match self.route(ino)?.call(req.clone()) {
+            // One rpc span per attempt (retries become sibling spans);
+            // only inside an op's root span — a bare bootstrap call has
+            // no trace to join. The wire envelope carries THIS span as
+            // the server span's parent.
+            let rpc = if self.tracing_enabled() {
+                crate::obs::current().map(|_| self.tracer.span(req.op(), self.id, false))
+            } else {
+                None
+            };
+            let sent = match &rpc {
+                Some(g) => Request::Traced {
+                    trace_id: g.ctx().trace_id,
+                    parent_span: g.span_id(),
+                    inner: Box::new(req.clone()),
+                },
+                None => req.clone(),
+            };
+            let wrapped = rpc.is_some();
+            let e = match self.route(ino)?.call(sent) {
+                Err(FsError::Protocol(m)) if wrapped && m.contains("bad request tag 42") => {
+                    // Old server: the Traced envelope's tag is decoded
+                    // before any inner tag, so this rejection is about
+                    // tracing itself — the inner op was never attempted.
+                    // Downgrade stickily and re-send bare (free retry: a
+                    // rejected decode never executed). If the peer also
+                    // predates Stamped, the bare re-send's own tag error
+                    // bubbles to `call_ino`'s stamping-downgrade arm.
+                    if let Some(g) = &rpc {
+                        g.annotate("trace_downgrade");
+                    }
+                    self.downgrade_tracing();
+                    continue;
+                }
                 Err(FsError::Transport(m)) => FsError::Transport(m),
                 Err(FsError::WrongServer { owner, map_version }) if !redirected => {
                     // Stale placement: the gate rejected the request
@@ -422,6 +501,9 @@ impl BAgent {
                     // re-migration and surfaces as an error instead of
                     // a chase.
                     redirected = true;
+                    if let Some(g) = &rpc {
+                        g.annotate(&format!("wrong_server->{owner}"));
+                    }
                     self.placement.learn(ino, owner, map_version);
                     self.stats.redirects.fetch_add(1, Ordering::Relaxed);
                     self.metrics.record("redirect", 0, 0, std::time::Duration::ZERO);
@@ -431,6 +513,9 @@ impl BAgent {
                     // Shed at admission, never executed — safe to re-send
                     // even unstamped. Does not consume failover attempts.
                     busy += 1;
+                    if let Some(g) = &rpc {
+                        g.annotate("busy_retry");
+                    }
                     self.metrics.record_busy_retry();
                     let base = BUSY_BACKOFF_US << busy.min(6);
                     std::thread::sleep(std::time::Duration::from_micros(base + rng.below(base)));
@@ -438,6 +523,10 @@ impl BAgent {
                 }
                 other => return other,
             };
+            if let Some(g) = &rpc {
+                g.annotate("failover");
+            }
+            drop(rpc);
             if attempt == 0 {
                 // first failure on this call: swap in the standby. A
                 // concurrent thread may have promoted already — then the
@@ -471,6 +560,7 @@ impl BAgent {
     /// the directory's current attr and lease epoch, caches the epoch,
     /// and registers this client for §3.4 invalidation pushes on it.
     pub fn lease(&self, node: Ino, cred: &Credentials) -> FsResult<(crate::types::Attr, u64)> {
+        let _span = self.op_span("lease");
         self.stats.lease_grants.fetch_add(1, Ordering::Relaxed);
         let resp = self.call_ino(node, Request::Lease {
             node,
@@ -512,6 +602,7 @@ impl BAgent {
             match self.call_ino(node, build(stamp)) {
                 Err(FsError::StaleLease) => {
                     self.stats.stale_lease_retries.fetch_add(1, Ordering::Relaxed);
+                    self.tracer.event("stale_lease_retry", op, self.id, false);
                     self.metrics.record_stale_retry(op);
                     self.lease(node, cred)?;
                 }
@@ -552,6 +643,7 @@ impl BAgent {
             match self.call_ino(snode, req) {
                 Err(FsError::StaleLease) => {
                     self.stats.stale_lease_retries.fetch_add(1, Ordering::Relaxed);
+                    self.tracer.event("stale_lease_retry", "rename", self.id, false);
                     self.metrics.record_stale_retry("rename");
                     // either stamp may be the stale one: refresh both
                     self.lease(snode, cred)?;
@@ -767,6 +859,7 @@ impl BAgent {
 
     /// Resolve `path` to its leaf entry + perm-blob chain (root → leaf).
     pub fn resolve(&self, path: &str, cred: &Credentials) -> FsResult<Resolved> {
+        let _span = self.op_span("resolve");
         let comps = Self::split_path(path)?;
         let root = self.cluster.root();
         // One batched RPC primes root + the whole owned prefix; even an
@@ -817,6 +910,7 @@ impl BAgent {
     /// mark. No RPC on the happy path (cache warm, no O_CREAT/O_TRUNC/
     /// O_APPEND).
     pub fn open(&self, pid: Pid, path: &str, flags: OpenFlags, cred: &Credentials) -> FsResult<Fd> {
+        let _span = self.op_span("open");
         let rpcs_before = self.metrics.total_rpcs();
         let want = flags.access_mask();
 
@@ -1028,6 +1122,7 @@ impl BAgent {
     }
 
     pub fn read(&self, pid: Pid, fd: Fd, len: u32) -> FsResult<Vec<u8>> {
+        let _span = self.op_span("read");
         // Reserve [offset, offset+len) under the FdTable lock BEFORE the
         // RPC: concurrent read()s on one fd consume disjoint ranges —
         // neither the old rewind (snapshot + n, duplicating bytes) nor a
@@ -1067,6 +1162,7 @@ impl BAgent {
     }
 
     pub fn pread(&self, pid: Pid, fd: Fd, off: u64, len: u32) -> FsResult<Vec<u8>> {
+        let _span = self.op_span("pread");
         let h = self.snapshot_handle(pid, fd)?;
         if !h.flags.read {
             return Err(FsError::PermissionDenied);
@@ -1110,6 +1206,7 @@ impl BAgent {
     }
 
     pub fn write(&self, pid: Pid, fd: Fd, data: &[u8]) -> FsResult<u32> {
+        let _span = self.op_span("write");
         // same reservation discipline as read(): concurrent write()s on
         // one fd land in disjoint ranges instead of clobbering each
         // other at a shared snapshot offset
@@ -1144,6 +1241,7 @@ impl BAgent {
     }
 
     pub fn pwrite(&self, pid: Pid, fd: Fd, off: u64, data: &[u8]) -> FsResult<u32> {
+        let _span = self.op_span("pwrite");
         let h = self.snapshot_handle(pid, fd)?;
         if !h.flags.write && !h.flags.append {
             return Err(FsError::PermissionDenied);
@@ -1197,6 +1295,7 @@ impl BAgent {
     /// RPC. A no-op (zero RPCs) without the data plane — the classic
     /// write path is already synchronous.
     pub fn fsync(&self, pid: Pid, fd: Fd) -> FsResult<()> {
+        let _span = self.op_span("fsync");
         let h = self.snapshot_handle(pid, fd)?;
         // only writable fds flush: a read-only fd must neither attach
         // its (read-only) open context to a WriteBatch nor break another
@@ -1222,6 +1321,7 @@ impl BAgent {
     /// is flushed *synchronously* first — close() is the durability
     /// point that keeps the baseline comparison honest.
     pub fn close(&self, pid: Pid, fd: Fd) -> FsResult<()> {
+        let _span = self.op_span("close");
         let h = self.fds.lock().unwrap().close(pid, fd)?;
         self.finish_close(h)
     }
@@ -1275,6 +1375,7 @@ impl BAgent {
     // retries once (`relative_call`).
 
     pub fn stat(&self, path: &str, cred: &Credentials) -> FsResult<crate::types::Attr> {
+        let _span = self.op_span("stat");
         let r = self.resolve(path, cred)?;
         // ancestors need X
         if perm::check_path(&r.chain[..r.chain.len() - 1], cred, AccessMask::EXEC).is_err() {
@@ -1300,6 +1401,7 @@ impl BAgent {
     }
 
     pub fn readdir(&self, path: &str, cred: &Credentials) -> FsResult<Vec<DirEntry>> {
+        let _span = self.op_span("readdir");
         let r = self.resolve(path, cred)?;
         if r.leaf.kind != FileKind::Directory {
             return Err(FsError::NotADirectory);
@@ -1319,6 +1421,7 @@ impl BAgent {
     }
 
     pub fn mkdir(&self, path: &str, mode: u16, cred: &Credentials) -> FsResult<DirEntry> {
+        let _span = self.op_span("mkdir");
         let (parent, name) = self.resolve_parent(path, cred)?;
         self.stats.local_checks.fetch_add(1, Ordering::Relaxed);
         if perm::check_path(&parent.chain, cred, AccessMask(W_OK | X_OK)).is_err() {
@@ -1341,6 +1444,7 @@ impl BAgent {
     }
 
     pub fn create_file(&self, path: &str, mode: u16, cred: &Credentials) -> FsResult<DirEntry> {
+        let _span = self.op_span("create");
         let (parent, name) = self.resolve_parent(path, cred)?;
         self.stats.local_checks.fetch_add(1, Ordering::Relaxed);
         if perm::check_path(&parent.chain, cred, AccessMask(W_OK | X_OK)).is_err() {
@@ -1365,6 +1469,7 @@ impl BAgent {
     }
 
     pub fn unlink(&self, path: &str, cred: &Credentials) -> FsResult<()> {
+        let _span = self.op_span("unlink");
         let (parent, name) = self.resolve_parent(path, cred)?;
         self.relative_call("unlink", parent.leaf.ino, cred, |lease| Request::UnlinkAt {
             lease,
@@ -1376,6 +1481,7 @@ impl BAgent {
     }
 
     pub fn rmdir(&self, path: &str, cred: &Credentials) -> FsResult<()> {
+        let _span = self.op_span("rmdir");
         let (parent, name) = self.resolve_parent(path, cred)?;
         self.relative_call("rmdir", parent.leaf.ino, cred, |lease| Request::RmdirAt {
             lease,
@@ -1387,6 +1493,7 @@ impl BAgent {
     }
 
     pub fn chmod(&self, path: &str, mode: u16, cred: &Credentials) -> FsResult<()> {
+        let _span = self.op_span("chmod");
         let r = self.resolve(path, cred)?;
         // the chmod RPC goes to the server *owning the inode* (§3.2);
         // that server runs the §3.4 invalidation barrier (which will call
@@ -1400,6 +1507,7 @@ impl BAgent {
     }
 
     pub fn chown(&self, path: &str, uid: u32, gid: u32, cred: &Credentials) -> FsResult<()> {
+        let _span = self.op_span("chown");
         let r = self.resolve(path, cred)?;
         self.call_ino(r.leaf.ino, Request::Chown {
             ino: r.leaf.ino,
@@ -1411,12 +1519,14 @@ impl BAgent {
     }
 
     pub fn rename(&self, src: &str, dst: &str, cred: &Credentials) -> FsResult<()> {
+        let _span = self.op_span("rename");
         let (sparent, sname) = self.resolve_parent(src, cred)?;
         let (dparent, dname) = self.resolve_parent(dst, cred)?;
         self.rename_at_nodes(sparent.leaf.ino, sname, dparent.leaf.ino, dname, cred)
     }
 
     pub fn truncate(&self, path: &str, size: u64, cred: &Credentials) -> FsResult<()> {
+        let _span = self.op_span("truncate");
         let r = self.resolve(path, cred)?;
         self.stats.local_checks.fetch_add(1, Ordering::Relaxed);
         if perm::check_path(&r.chain, cred, AccessMask::WRITE).is_err() {

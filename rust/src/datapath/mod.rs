@@ -225,6 +225,10 @@ pub struct Datapath {
     inner: RwLock<Inner>,
     metas: Vec<Mutex<HashMap<Ino, InodeMeta>>>,
     metrics: Arc<RpcMetrics>,
+    /// Client span recorder + agent id, for `stale_data_retry` trace
+    /// events (DESIGN.md §13). Set once by the owning agent; absent in
+    /// unit tests, and a no-op outside an op's root span either way.
+    tracer: std::sync::OnceLock<(Arc<crate::obs::Recorder>, u32)>,
 }
 
 impl Datapath {
@@ -238,6 +242,20 @@ impl Datapath {
             }),
             metas: (0..META_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             metrics,
+            tracer: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Wire up the owning agent's span recorder (id = agent id).
+    pub fn set_tracer(&self, tracer: Arc<crate::obs::Recorder>, id: u32) {
+        let _ = self.tracer.set((tracer, id));
+    }
+
+    /// A StaleData drop-and-retry happened under the current op span:
+    /// record the retry class into the trace.
+    fn note_stale_retry_span(&self) {
+        if let Some((t, id)) = self.tracer.get() {
+            t.event("stale_data_retry", "", *id, false);
         }
     }
 
@@ -535,6 +553,7 @@ impl Datapath {
                             // page and retry once with no expectation —
                             // no stale byte is ever returned
                             self.metrics.record_stale_data_retry();
+                            self.note_stale_retry_span();
                             self.invalidate(ino);
                             continue;
                         }
@@ -682,6 +701,7 @@ impl Datapath {
                     // is untainted (own bytes only) — drop the view, put
                     // the extents back, retry unguarded
                     self.metrics.record_stale_data_retry();
+                    self.note_stale_retry_span();
                     self.invalidate(ino);
                     let mut shard = self.meta_shard(ino).lock().unwrap();
                     let meta = shard.entry(ino).or_default();

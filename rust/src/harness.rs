@@ -802,6 +802,9 @@ pub struct PipelineRow {
     pub p50_us: f64,
     pub p90_us: f64,
     pub p99_us: f64,
+    /// Server-side counter delta for this depth's waves (both
+    /// schedules) — the §13 "why" stamp carried into `BENCH_pipeline.json`.
+    pub obs: crate::obs::ObsCounters,
 }
 
 /// Build one in-process server holding `max(depths)` 1 KiB files, then
@@ -860,6 +863,7 @@ pub fn ablation_pipeline(net: NetConfig, depths: &[usize], iters: usize) -> Vec<
         let t_pipe = ChanTransport::new(server.clone(), lat, pipe_metrics.clone());
         t_pipe.set_pipeline_depth(d);
 
+        let obs0 = obs_counters(std::slice::from_ref(&server));
         let mut lockstep_us = 0.0;
         let mut pipelined_us = 0.0;
         for _ in 0..iters {
@@ -896,6 +900,7 @@ pub fn ablation_pipeline(net: NetConfig, depths: &[usize], iters: usize) -> Vec<
             p50_us,
             p90_us,
             p99_us,
+            obs: obs_counters(std::slice::from_ref(&server)).delta(&obs0),
         });
     }
     rows
@@ -1105,6 +1110,39 @@ pub fn print_recovery(rows: &[RecoveryRow]) {
 pub fn steady_access(sut: &Sut, spec: &FileSetSpec, stream: &mut AccessStream, pid: u32) {
     let idx = stream.next_index();
     sut.access_once(pid, &spec.path(idx), spec.file_size);
+}
+
+// ---------------------------------------------------------------------------
+// Unified telemetry stamping (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+/// Sum the unified obs counters across a pool of servers. Take one
+/// sample before the measured phase and one after —
+/// [`crate::obs::ObsCounters::delta`] of the pair is what each
+/// `BENCH_*.json` is stamped with, so every published number carries
+/// the server-side work (dispatches, fsyncs, sheds, spans) that
+/// produced it.
+pub fn obs_counters(servers: &[Arc<crate::server::BServer>]) -> crate::obs::ObsCounters {
+    let mut sum = crate::obs::ObsCounters::default();
+    for s in servers {
+        let c = s.obs_counters();
+        sum.dispatch_total += c.dispatch_total;
+        sum.dispatch_errors += c.dispatch_errors;
+        sum.sheds += c.sheds;
+        sum.spans += c.spans;
+        sum.slow_ops += c.slow_ops;
+        sum.journal_appends += c.journal_appends;
+        sum.journal_fsyncs += c.journal_fsyncs;
+        sum.ledger_hits += c.ledger_hits;
+        sum.ledger_misses += c.ledger_misses;
+    }
+    sum
+}
+
+/// The `"obs"` JSON fragment for a bench stamp: the counter delta
+/// across the measured phase.
+pub fn obs_stamp(before: &crate::obs::ObsCounters, after: &crate::obs::ObsCounters) -> String {
+    format!("\"obs\": {}", after.delta(before).json())
 }
 
 // ---------------------------------------------------------------------------

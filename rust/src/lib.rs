@@ -24,6 +24,7 @@ pub mod datapath;
 pub mod error;
 pub mod harness;
 pub mod metrics;
+pub mod obs;
 pub mod perm;
 pub mod runtime;
 pub mod server;

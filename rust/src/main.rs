@@ -10,6 +10,8 @@
 //! buffetfs bench dom    [--writes 0,0.5,1.0] [--procs 8]
 //! buffetfs serve  --addr 127.0.0.1:7700 [--host 0] [--dir /tmp/buffet0]
 //! buffetfs client --addr 127.0.0.1:7700 [--op put|get] --path /f [--data xyz]
+//! buffetfs stats  --addr 127.0.0.1:7700 [--sections all|ops,server,journal,ledger,dirload,spans,slow]
+//! buffetfs trace  --addr 127.0.0.1:7700 --id <trace_id>
 //! buffetfs selftest
 //! ```
 
@@ -29,9 +31,11 @@ fn main() {
         Some("bench") => bench(&args, pos.get(1).map(|s| s.as_str()).unwrap_or("fig3")),
         Some("serve") => serve(&args),
         Some("client") => client(&args),
+        Some("stats") => stats(&args),
+        Some("trace") => trace(&args),
         Some("selftest") => selftest(),
         _ => {
-            eprintln!("usage: buffetfs <bench fig3|fig4|motivation|rtt|fanout|dom | serve | client | selftest> [--flags]");
+            eprintln!("usage: buffetfs <bench fig3|fig4|motivation|rtt|fanout|dom | serve | client | stats | trace | selftest> [--flags]");
             eprintln!("(see module docs at the top of rust/src/main.rs)");
             std::process::exit(2);
         }
@@ -177,7 +181,10 @@ fn serve(args: &Args) {
     let dir = args.get_or("dir", "/tmp/buffetfs-data").to_string();
     let fs = LocalFs::new(host, 0, Box::new(DiskData::new(&dir).expect("data dir")));
     let server = BServer::new(fs);
-    let tcp = TcpServer::spawn(&addr, server).expect("bind");
+    // obs-aware spawn: admission sheds land in the same registry the
+    // remote `buffetfs stats` scrape reads
+    let obs = server.obs.clone();
+    let tcp = TcpServer::spawn_obs(&addr, server, Some(obs)).expect("bind");
     println!("BServer host={host} serving on {} (data under {dir}); Ctrl-C to stop", tcp.local_addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -258,6 +265,60 @@ fn client(args: &Args) {
         }
     }
     let _ = Request::Hello { client: 1 }.to_bytes(); // keep Wire import honest
+}
+
+/// Dial a running server and fetch its unified telemetry snapshot
+/// (DESIGN.md §13): one `StatsFetch` RPC, printed as JSON plus a span
+/// summary.
+fn stats(args: &Args) {
+    use buffetfs::metrics::RpcMetrics;
+    use buffetfs::transport::tcp::{ReconnectConfig, ReconnectTransport};
+    use buffetfs::transport::Transport as _;
+    use buffetfs::wire::{Request, Response};
+
+    let addr = args.get_or("addr", "127.0.0.1:7700").to_string();
+    let sections = buffetfs::obs::parse_sections(args.get_or("sections", "all"));
+    let metrics = Arc::new(RpcMetrics::new());
+    let cfg = ReconnectConfig { pipelined: true, ..ReconnectConfig::default() };
+    let t = ReconnectTransport::connect(&addr, cfg, metrics).expect("connect");
+    match t.call(Request::StatsFetch { sections, trace_id: 0 }).expect("stats fetch") {
+        Response::Stats { json, spans } => {
+            println!("{json}");
+            if !spans.is_empty() {
+                println!("-- {} spans --", spans.len());
+                println!("{}", buffetfs::obs::render_tree(&spans));
+            }
+        }
+        other => panic!("stats fetch returned {other:?}"),
+    }
+}
+
+/// Fetch one trace's server-side spans and print the causal tree.
+fn trace(args: &Args) {
+    use buffetfs::metrics::RpcMetrics;
+    use buffetfs::transport::tcp::{ReconnectConfig, ReconnectTransport};
+    use buffetfs::transport::Transport as _;
+    use buffetfs::wire::{Request, Response};
+
+    let addr = args.get_or("addr", "127.0.0.1:7700").to_string();
+    let id = args.get_u64("id", 0);
+    if id == 0 {
+        eprintln!("usage: buffetfs trace --addr <host:port> --id <trace_id>");
+        std::process::exit(2);
+    }
+    let metrics = Arc::new(RpcMetrics::new());
+    let cfg = ReconnectConfig { pipelined: true, ..ReconnectConfig::default() };
+    let t = ReconnectTransport::connect(&addr, cfg, metrics).expect("connect");
+    match t.call(Request::StatsFetch { sections: 0, trace_id: id }).expect("trace fetch") {
+        Response::Stats { spans, .. } => {
+            if spans.is_empty() {
+                println!("trace {id}: no spans resident (ring overwritten or wrong id)");
+            } else {
+                println!("{}", buffetfs::obs::render_tree(&spans));
+            }
+        }
+        other => panic!("trace fetch returned {other:?}"),
+    }
 }
 
 /// Quick end-to-end smoke across the whole stack.

@@ -12,12 +12,20 @@ use std::time::Duration;
 
 use crate::util::hist::Histogram;
 
-/// Known op names (fixed set → lock-free counters by index).
+/// Known op names (fixed set → lock-free counters by index). The final
+/// `"other"` entry is a dedicated catch-all: an op name outside this set
+/// must land there, never in a real op's counter.
 pub const OPS: &[&str] = &[
     "lookup", "readdir", "getattr", "open", "read", "write", "close", "create", "mkdir",
     "unlink", "rmdir", "rename", "chmod", "chown", "truncate", "statfs", "hello", "resolve",
-    "lease", "replicate", "migrate", "placement", "redirect", "invalidate",
+    "lease", "replicate", "migrate", "placement", "redirect", "invalidate", "stats", "other",
 ];
+
+/// Control-plane bookkeeping: connection setup, replication shipping,
+/// redirect learning and telemetry scrapes. These are not the metadata
+/// RPCs the paper's §2.1 motivation counts — a client would issue none
+/// of them on a plain POSIX workload.
+pub const CONTROL_OPS: &[&str] = &["hello", "replicate", "redirect", "stats"];
 
 fn op_index(op: &str) -> usize {
     OPS.iter().position(|&o| o == op).unwrap_or(OPS.len() - 1)
@@ -34,7 +42,7 @@ fn lease_op_index(op: &str) -> usize {
 
 #[derive(Default)]
 pub struct RpcMetrics {
-    counts: [AtomicU64; 24],
+    counts: [AtomicU64; OPS.len()],
     bytes_out: AtomicU64,
     bytes_in: AtomicU64,
     lat: Mutex<BTreeMap<&'static str, Histogram>>,
@@ -121,9 +129,14 @@ impl RpcMetrics {
         self.total_rpcs() - self.count("close") - self.count("hello")
     }
 
+    /// Metadata RPCs in the paper's §2.1 sense: everything except the
+    /// data plane (`read`/`write`), control-plane bookkeeping
+    /// ([`CONTROL_OPS`]) and the unclassifiable `"other"` bucket.
     pub fn metadata_rpcs(&self) -> u64 {
         OPS.iter()
-            .filter(|&&op| op != "read" && op != "write")
+            .filter(|&&op| {
+                op != "read" && op != "write" && op != "other" && !CONTROL_OPS.contains(&op)
+            })
             .map(|&op| self.count(op))
             .sum()
     }
@@ -439,10 +452,49 @@ mod tests {
     }
 
     #[test]
-    fn unknown_op_goes_to_last_bucket() {
+    fn unknown_op_goes_to_other_not_invalidate() {
         let m = RpcMetrics::new();
+        // regression: op_index used to fall back to the LAST bucket,
+        // which was the real op "invalidate" — unknown names silently
+        // corrupted its counter
+        m.record("some-future-op", 1, 1, Duration::from_nanos(5));
+        assert_eq!(m.count("other"), 1, "unknowns must land in the dedicated bucket");
+        assert_eq!(m.count("invalidate"), 0, "a real op must never absorb unknowns");
+        // the real op still counts normally
         m.record("invalidate", 1, 1, Duration::from_nanos(5));
         assert_eq!(m.count("invalidate"), 1);
+        assert_eq!(m.count("other"), 1);
+    }
+
+    #[test]
+    fn metadata_rpcs_pins_the_set() {
+        // one record of every known op; metadata_rpcs must count exactly
+        // the ops that are neither data, control-plane, nor "other"
+        let m = RpcMetrics::new();
+        for &op in OPS {
+            m.record(op, 1, 1, Duration::from_nanos(1));
+        }
+        let expected: Vec<&str> = OPS
+            .iter()
+            .copied()
+            .filter(|op| {
+                *op != "read" && *op != "write" && *op != "other" && !CONTROL_OPS.contains(op)
+            })
+            .collect();
+        assert_eq!(m.metadata_rpcs(), expected.len() as u64);
+        // pin the exclusions explicitly: control-plane bookkeeping must
+        // not inflate the §2.1 motivation numbers
+        for op in ["hello", "replicate", "redirect", "stats"] {
+            assert!(CONTROL_OPS.contains(&op), "{op} must stay control-plane");
+        }
+        let m2 = RpcMetrics::new();
+        m2.record("hello", 1, 1, Duration::from_nanos(1));
+        m2.record("replicate", 1, 1, Duration::from_nanos(1));
+        m2.record("redirect", 0, 0, Duration::ZERO);
+        m2.record("stats", 1, 1, Duration::from_nanos(1));
+        assert_eq!(m2.metadata_rpcs(), 0, "control-plane ops are not metadata RPCs");
+        m2.record("getattr", 1, 1, Duration::from_nanos(1));
+        assert_eq!(m2.metadata_rpcs(), 1);
     }
 
     #[test]

@@ -1,0 +1,785 @@
+//! Unified telemetry plane (DESIGN.md §13).
+//!
+//! Three pieces, one module:
+//!
+//! * **Request-scoped tracing** — a [`TraceCtx`] `{ trace_id, parent_span }`
+//!   is allocated at each top-level agent op and propagated on the wire
+//!   (a `FLAG_TRACE` mux frame extension on pipelined connections, a
+//!   `Request::Traced` envelope on lockstep/legacy paths). Client and
+//!   server record [`Span`]s into per-process [`SpanRing`]s so one
+//!   `open()` yields a causally-linked tree covering resolve → lease →
+//!   redirect-retry → failover → journal-commit, with annotations for
+//!   every retry class.
+//! * **Unified server metrics** — [`ServerMetrics`] on `BServer` absorbs
+//!   the previously-scattered counters (per-op dispatch counts + latency
+//!   histograms at the `ops::dispatch` boundary, admission sheds, plus
+//!   journal / ledger / dir-load truth pulled in by
+//!   `BServer::stats_snapshot`) behind one JSON snapshot.
+//! * **Slow-op log** — spans whose wall time exceeds a configurable
+//!   threshold are copied to a side log that ring overwrite never evicts;
+//!   `Request::StatsFetch` can drain it remotely.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::codec::{Dec, Enc, Wire};
+use crate::error::FsResult;
+use crate::metrics::OPS;
+use crate::util::hist::Histogram;
+
+/// Default span ring capacity (per process side).
+pub const RING_CAP: usize = 4096;
+/// Hard cap on the slow-op side log; beyond it the oldest entry is
+/// dropped and `slow_dropped` counts the loss (the log is bounded, just
+/// never evicted by *ring* overwrite).
+pub const SLOW_CAP: usize = 1024;
+
+// --- StatsFetch section bitmask -------------------------------------------
+
+pub const SEC_OPS: u32 = 1 << 0;
+pub const SEC_SERVER: u32 = 1 << 1;
+pub const SEC_JOURNAL: u32 = 1 << 2;
+pub const SEC_LEDGER: u32 = 1 << 3;
+pub const SEC_DIRLOAD: u32 = 1 << 4;
+pub const SEC_SPANS: u32 = 1 << 5;
+/// Including this bit *drains* the slow-op log (read-and-clear).
+pub const SEC_SLOW: u32 = 1 << 6;
+pub const SEC_ALL: u32 =
+    SEC_OPS | SEC_SERVER | SEC_JOURNAL | SEC_LEDGER | SEC_DIRLOAD | SEC_SPANS | SEC_SLOW;
+
+/// Parse a CLI `--sections` value: `"all"` or a comma list of
+/// `ops,server,journal,ledger,dirload,spans,slow`. Unknown names are
+/// ignored so older CLIs keep working against newer servers.
+pub fn parse_sections(s: &str) -> u32 {
+    if s == "all" {
+        return SEC_ALL;
+    }
+    let mut out = 0;
+    for part in s.split(',') {
+        out |= match part.trim() {
+            "ops" => SEC_OPS,
+            "server" => SEC_SERVER,
+            "journal" => SEC_JOURNAL,
+            "ledger" => SEC_LEDGER,
+            "dirload" => SEC_DIRLOAD,
+            "spans" => SEC_SPANS,
+            "slow" => SEC_SLOW,
+            _ => 0,
+        };
+    }
+    out
+}
+
+// --- ids and clock ---------------------------------------------------------
+
+/// Trace/span ids are drawn from one per-process counter whose start is
+/// salted with wall-clock nanoseconds, so ids from distinct processes
+/// (client vs `buffetfs serve`) do not collide in practice. Within one
+/// process (the simnet clusters the tests run on) they are strictly
+/// unique.
+fn id_counter() -> &'static AtomicU64 {
+    static IDS: OnceLock<AtomicU64> = OnceLock::new();
+    IDS.get_or_init(|| {
+        let salt = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1);
+        // spread the salt over the high bits, keep low bits sequential
+        AtomicU64::new((salt.wrapping_mul(0x9e37_79b9_7f4a_7c15) & !0xffff_ffff) | 1)
+    })
+}
+
+pub fn next_id() -> u64 {
+    id_counter().fetch_add(1, Ordering::Relaxed)
+}
+
+/// Monotonic per-process epoch all `start_us` stamps are relative to.
+fn epoch() -> Instant {
+    static T0: OnceLock<Instant> = OnceLock::new();
+    *T0.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+// --- trace context ---------------------------------------------------------
+
+/// What travels on the wire: which trace a request belongs to and which
+/// client span caused it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub parent_span: u64,
+}
+
+thread_local! {
+    /// Stack of (trace_id, span_id) for the spans currently open on this
+    /// thread; the top is the parent of any new span or outgoing RPC.
+    static STACK: RefCell<Vec<(u64, u64)>> = RefCell::new(Vec::new());
+}
+
+/// The innermost open span on this thread, if any.
+pub fn current() -> Option<(u64, u64)> {
+    STACK.with(|s| s.borrow().last().copied())
+}
+
+// --- spans -----------------------------------------------------------------
+
+/// One recorded unit of work. `parent == 0` marks a trace root.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent: u64,
+    pub name: String,
+    /// Semicolon-joined annotations: retry classes, redirect targets,
+    /// failover attempts, downgrade events.
+    pub note: String,
+    /// Agent id for client spans, server host for server spans.
+    pub host: u32,
+    pub server: bool,
+    /// Microseconds since the process obs epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl Wire for Span {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.trace_id);
+        e.u64(self.span_id);
+        e.u64(self.parent);
+        e.str(&self.name);
+        e.str(&self.note);
+        e.u32(self.host);
+        e.bool(self.server);
+        e.u64(self.start_us);
+        e.u64(self.dur_us);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(Span {
+            trace_id: d.u64()?,
+            span_id: d.u64()?,
+            parent: d.u64()?,
+            name: d.str()?,
+            note: d.str()?,
+            host: d.u32()?,
+            server: d.bool()?,
+            start_us: d.u64()?,
+            dur_us: d.u64()?,
+        })
+    }
+}
+
+impl Span {
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"trace\":{},\"span\":{},\"parent\":{},\"name\":{},\"note\":{},\"host\":{},\"server\":{},\"start_us\":{},\"dur_us\":{}}}",
+            self.trace_id,
+            self.span_id,
+            self.parent,
+            json_str(&self.name),
+            json_str(&self.note),
+            self.host,
+            self.server,
+            self.start_us,
+            self.dur_us
+        )
+    }
+}
+
+/// Fixed-capacity overwrite-oldest span store. The write cursor is one
+/// wait-free `fetch_add`; each slot is guarded by its own (uncontended
+/// except on wrap races) mutex, so recording never blocks on readers.
+pub struct SpanRing {
+    slots: Box<[Mutex<Option<Span>>]>,
+    head: AtomicU64,
+}
+
+impl SpanRing {
+    pub fn new(cap: usize) -> SpanRing {
+        let slots: Vec<Mutex<Option<Span>>> =
+            (0..cap.max(1)).map(|_| Mutex::new(None)).collect();
+        SpanRing { slots: slots.into_boxed_slice(), head: AtomicU64::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total spans ever recorded (not the resident count).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    pub fn record(&self, s: Span) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        *self.slots[i].lock().unwrap() = Some(s);
+    }
+
+    /// Every resident span, oldest first (best effort under concurrent
+    /// writes).
+    pub fn snapshot(&self) -> Vec<Span> {
+        let head = self.head.load(Ordering::Relaxed) as usize;
+        let cap = self.slots.len();
+        let mut out = Vec::new();
+        for k in 0..cap {
+            // walk in insertion order starting at the oldest live slot
+            let i = (head + k) % cap;
+            if let Some(s) = self.slots[i].lock().unwrap().clone() {
+                out.push(s);
+            }
+        }
+        out.sort_by_key(|s| s.start_us);
+        out
+    }
+
+    pub fn trace(&self, trace_id: u64) -> Vec<Span> {
+        let mut out: Vec<Span> =
+            self.snapshot().into_iter().filter(|s| s.trace_id == trace_id).collect();
+        out.sort_by_key(|s| s.start_us);
+        out
+    }
+}
+
+// --- recorder --------------------------------------------------------------
+
+/// Per-process (one per agent / per server in the simnet clusters) span
+/// sink: the ring plus the slow-op side log.
+pub struct Recorder {
+    ring: SpanRing,
+    slow: Mutex<Vec<Span>>,
+    /// Spans with `dur_us >= threshold` are copied to the slow log.
+    /// 0 disables the log.
+    slow_threshold_us: AtomicU64,
+    pub slow_dropped: AtomicU64,
+    pub spans_recorded: AtomicU64,
+}
+
+impl Recorder {
+    pub fn new() -> Arc<Recorder> {
+        Recorder::with_capacity(RING_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> Arc<Recorder> {
+        Arc::new(Recorder {
+            ring: SpanRing::new(cap),
+            slow: Mutex::new(Vec::new()),
+            slow_threshold_us: AtomicU64::new(0),
+            slow_dropped: AtomicU64::new(0),
+            spans_recorded: AtomicU64::new(0),
+        })
+    }
+
+    pub fn set_slow_threshold_us(&self, us: u64) {
+        self.slow_threshold_us.store(us, Ordering::Relaxed);
+    }
+
+    pub fn slow_threshold_us(&self) -> u64 {
+        self.slow_threshold_us.load(Ordering::Relaxed)
+    }
+
+    pub fn record(&self, s: Span) {
+        self.spans_recorded.fetch_add(1, Ordering::Relaxed);
+        let thr = self.slow_threshold_us();
+        if thr > 0 && s.dur_us >= thr {
+            let mut slow = self.slow.lock().unwrap();
+            if slow.len() >= SLOW_CAP {
+                slow.remove(0);
+                self.slow_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            slow.push(s.clone());
+        }
+        self.ring.record(s);
+    }
+
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.ring.snapshot()
+    }
+
+    pub fn trace(&self, trace_id: u64) -> Vec<Span> {
+        self.ring.trace(trace_id)
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.ring.recorded()
+    }
+
+    pub fn slow_len(&self) -> usize {
+        self.slow.lock().unwrap().len()
+    }
+
+    /// Read-and-clear the slow-op log.
+    pub fn drain_slow(&self) -> Vec<Span> {
+        std::mem::take(&mut *self.slow.lock().unwrap())
+    }
+
+    /// Open a span as a child of the thread's current span (or a new
+    /// trace root if none). The guard records on drop.
+    pub fn span(self: &Arc<Self>, name: &'static str, host: u32, server: bool) -> SpanGuard {
+        let (trace_id, parent) = current().unwrap_or((0, 0));
+        let trace_id = if trace_id == 0 { next_id() } else { trace_id };
+        SpanGuard::open(self, name, trace_id, parent, host, server)
+    }
+
+    /// Open a span under an explicit remote context (the server side of
+    /// a traced RPC).
+    pub fn span_under(
+        self: &Arc<Self>,
+        name: &'static str,
+        trace_id: u64,
+        parent: u64,
+        host: u32,
+        server: bool,
+    ) -> SpanGuard {
+        SpanGuard::open(self, name, trace_id, parent, host, server)
+    }
+
+    /// Record an instantaneous annotation span (dur 0) under the current
+    /// context — used for retry-class events fired from deep call paths
+    /// that don't own a guard.
+    pub fn event(self: &Arc<Self>, name: &'static str, note: &str, host: u32, server: bool) {
+        let Some((trace_id, parent)) = current() else { return };
+        self.record(Span {
+            trace_id,
+            span_id: next_id(),
+            parent,
+            name: name.to_string(),
+            note: note.to_string(),
+            host,
+            server,
+            start_us: now_us(),
+            dur_us: 0,
+        });
+    }
+}
+
+/// RAII span: pushes itself on the thread-local stack at open, records
+/// into its [`Recorder`] at drop. Guards nest strictly (stack order).
+pub struct SpanGuard {
+    rec: Arc<Recorder>,
+    trace_id: u64,
+    span_id: u64,
+    parent: u64,
+    name: &'static str,
+    host: u32,
+    server: bool,
+    start_us: u64,
+    t0: Instant,
+    note: Mutex<String>,
+}
+
+impl SpanGuard {
+    fn open(
+        rec: &Arc<Recorder>,
+        name: &'static str,
+        trace_id: u64,
+        parent: u64,
+        host: u32,
+        server: bool,
+    ) -> SpanGuard {
+        let span_id = next_id();
+        STACK.with(|s| s.borrow_mut().push((trace_id, span_id)));
+        SpanGuard {
+            rec: Arc::clone(rec),
+            trace_id,
+            span_id,
+            parent,
+            name,
+            host,
+            server,
+            start_us: now_us(),
+            t0: Instant::now(),
+            note: Mutex::new(String::new()),
+        }
+    }
+
+    /// `(trace_id, span_id)` — what an outgoing RPC carries as its
+    /// parent context.
+    pub fn ctx(&self) -> TraceCtx {
+        TraceCtx { trace_id: self.trace_id, parent_span: self.span_id }
+    }
+
+    pub fn span_id(&self) -> u64 {
+        self.span_id
+    }
+
+    pub fn annotate(&self, note: &str) {
+        let mut n = self.note.lock().unwrap();
+        if !n.is_empty() {
+            n.push(';');
+        }
+        n.push_str(note);
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        STACK.with(|s| {
+            let mut st = s.borrow_mut();
+            // strict LIFO in practice; be defensive about mixed-up drops
+            if st.last() == Some(&(self.trace_id, self.span_id)) {
+                st.pop();
+            } else if let Some(i) = st.iter().rposition(|&e| e == (self.trace_id, self.span_id)) {
+                st.remove(i);
+            }
+        });
+        self.rec.record(Span {
+            trace_id: self.trace_id,
+            span_id: self.span_id,
+            parent: self.parent,
+            name: self.name.to_string(),
+            note: std::mem::take(&mut *self.note.lock().unwrap()),
+            host: self.host,
+            server: self.server,
+            start_us: self.start_us,
+            dur_us: self.t0.elapsed().as_micros() as u64,
+        });
+    }
+}
+
+// --- unified server metrics ------------------------------------------------
+
+const N_OPS: usize = OPS.len();
+
+fn op_slot(op: &str) -> usize {
+    OPS.iter().position(|&o| o == op).unwrap_or(N_OPS - 1)
+}
+
+/// The one registry `BServer` hangs its telemetry off: per-op dispatch
+/// counts and latency histograms at the `ops::dispatch` boundary,
+/// admission sheds (bumped by the TCP acceptor), and the server-side
+/// trace recorder. Journal / ledger / dir-load truth stays owned by its
+/// subsystems and is pulled in by `BServer::stats_snapshot`.
+pub struct ServerMetrics {
+    dispatched: [AtomicU64; N_OPS],
+    errored: [AtomicU64; N_OPS],
+    lat: Mutex<BTreeMap<&'static str, Histogram>>,
+    pub sheds: AtomicU64,
+    pub trace: Arc<Recorder>,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        ServerMetrics {
+            dispatched: Default::default(),
+            errored: Default::default(),
+            lat: Mutex::new(BTreeMap::new()),
+            sheds: AtomicU64::new(0),
+            trace: Recorder::new(),
+        }
+    }
+}
+
+impl ServerMetrics {
+    pub fn new() -> Arc<ServerMetrics> {
+        Arc::new(ServerMetrics::default())
+    }
+
+    pub fn record_dispatch(&self, op: &'static str, dur: Duration, err: bool) {
+        self.dispatched[op_slot(op)].fetch_add(1, Ordering::Relaxed);
+        if err {
+            self.errored[op_slot(op)].fetch_add(1, Ordering::Relaxed);
+        }
+        self.lat.lock().unwrap().entry(op).or_default().record(dur.as_nanos() as u64);
+    }
+
+    pub fn dispatch_count(&self, op: &str) -> u64 {
+        self.dispatched[op_slot(op)].load(Ordering::Relaxed)
+    }
+
+    pub fn error_count(&self, op: &str) -> u64 {
+        self.errored[op_slot(op)].load(Ordering::Relaxed)
+    }
+
+    pub fn dispatch_total(&self) -> u64 {
+        self.dispatched.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn error_total(&self) -> u64 {
+        self.errored.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// `{"open":{"n":5,"err":0,"p50_us":12.0,"p99_us":40.0}, ...}` —
+    /// only ops that were actually dispatched appear.
+    pub fn ops_json(&self) -> String {
+        let lat = self.lat.lock().unwrap();
+        let mut parts = Vec::new();
+        for (i, &op) in OPS.iter().enumerate() {
+            let n = self.dispatched[i].load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            let (p50, p99) = lat
+                .get(op)
+                .map(|h| {
+                    (h.percentile(50.0) as f64 / 1e3, h.percentile(99.0) as f64 / 1e3)
+                })
+                .unwrap_or((0.0, 0.0));
+            parts.push(format!(
+                "{}:{{\"n\":{},\"err\":{},\"p50_us\":{:.1},\"p99_us\":{:.1}}}",
+                json_str(op),
+                n,
+                self.errored[i].load(Ordering::Relaxed),
+                p50,
+                p99
+            ));
+        }
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// A flat counter sample used for BENCH stamping: take one before the
+/// measured phase, one after, and `delta` explains what the run did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ObsCounters {
+    pub dispatch_total: u64,
+    pub dispatch_errors: u64,
+    pub sheds: u64,
+    pub spans: u64,
+    pub slow_ops: u64,
+    pub journal_appends: u64,
+    pub journal_fsyncs: u64,
+    pub ledger_hits: u64,
+    pub ledger_misses: u64,
+}
+
+impl ObsCounters {
+    pub fn delta(&self, earlier: &ObsCounters) -> ObsCounters {
+        ObsCounters {
+            dispatch_total: self.dispatch_total - earlier.dispatch_total,
+            dispatch_errors: self.dispatch_errors - earlier.dispatch_errors,
+            sheds: self.sheds - earlier.sheds,
+            spans: self.spans - earlier.spans,
+            slow_ops: self.slow_ops.saturating_sub(earlier.slow_ops),
+            journal_appends: self.journal_appends - earlier.journal_appends,
+            journal_fsyncs: self.journal_fsyncs - earlier.journal_fsyncs,
+            ledger_hits: self.ledger_hits - earlier.ledger_hits,
+            ledger_misses: self.ledger_misses - earlier.ledger_misses,
+        }
+    }
+
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"dispatch_total\":{},\"dispatch_errors\":{},\"sheds\":{},\"spans\":{},\"slow_ops\":{},\"journal_appends\":{},\"journal_fsyncs\":{},\"ledger_hits\":{},\"ledger_misses\":{}}}",
+            self.dispatch_total,
+            self.dispatch_errors,
+            self.sheds,
+            self.spans,
+            self.slow_ops,
+            self.journal_appends,
+            self.journal_fsyncs,
+            self.ledger_hits,
+            self.ledger_misses
+        )
+    }
+}
+
+// --- rendering / json helpers ---------------------------------------------
+
+/// Minimal JSON string escaping (quotes, backslashes, control bytes).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+pub fn spans_json(spans: &[Span]) -> String {
+    let parts: Vec<String> = spans.iter().map(|s| s.json()).collect();
+    format!("[{}]", parts.join(","))
+}
+
+/// Render one trace as an indented causal tree (what `buffetfs trace`
+/// prints). Orphan parents (e.g. the client half of a trace when only
+/// the server ring was scraped) are shown as roots.
+pub fn render_tree(spans: &[Span]) -> String {
+    let mut children: BTreeMap<u64, Vec<&Span>> = BTreeMap::new();
+    let ids: std::collections::BTreeSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    let mut roots: Vec<&Span> = Vec::new();
+    for s in spans {
+        if s.parent != 0 && ids.contains(&s.parent) {
+            children.entry(s.parent).or_default().push(s);
+        } else {
+            roots.push(s);
+        }
+    }
+    for v in children.values_mut() {
+        v.sort_by_key(|s| s.start_us);
+    }
+    roots.sort_by_key(|s| s.start_us);
+    fn walk(s: &Span, depth: usize, children: &BTreeMap<u64, Vec<&Span>>, out: &mut String) {
+        let side = if s.server { format!("server{}", s.host) } else { format!("client{}", s.host) };
+        out.push_str(&format!(
+            "{}{} [{}] {}µs{}\n",
+            "  ".repeat(depth),
+            s.name,
+            side,
+            s.dur_us,
+            if s.note.is_empty() { String::new() } else { format!("  ({})", s.note) }
+        ));
+        for c in children.get(&s.span_id).into_iter().flatten() {
+            walk(c, depth + 1, children, out);
+        }
+    }
+    let mut out = String::new();
+    for r in &roots {
+        walk(r, 0, &children, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64, id: u64, parent: u64, name: &str, dur_us: u64) -> Span {
+        Span {
+            trace_id: trace,
+            span_id: id,
+            parent,
+            name: name.into(),
+            note: String::new(),
+            host: 0,
+            server: false,
+            start_us: id,
+            dur_us,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let r = SpanRing::new(4);
+        for i in 1..=10u64 {
+            r.record(span(1, i, 0, "op", 1));
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 4);
+        let ids: Vec<u64> = snap.iter().map(|s| s.span_id).collect();
+        assert_eq!(ids, vec![7, 8, 9, 10], "oldest overwritten, newest kept");
+        assert_eq!(r.recorded(), 10);
+    }
+
+    #[test]
+    fn slow_log_survives_ring_overwrite() {
+        let rec = Recorder::with_capacity(4);
+        rec.set_slow_threshold_us(100);
+        rec.record(span(1, 1, 0, "slow", 500));
+        for i in 2..=20u64 {
+            rec.record(span(1, i, 0, "fast", 1));
+        }
+        assert!(rec.trace(1).iter().all(|s| s.span_id != 1), "ring evicted the slow span");
+        let slow = rec.drain_slow();
+        assert_eq!(slow.len(), 1, "slow log kept it");
+        assert_eq!(slow[0].span_id, 1);
+        assert_eq!(rec.slow_len(), 0, "drain clears");
+    }
+
+    #[test]
+    fn slow_log_is_bounded() {
+        let rec = Recorder::with_capacity(4);
+        rec.set_slow_threshold_us(1);
+        for i in 0..(SLOW_CAP + 10) as u64 {
+            rec.record(span(1, i + 1, 0, "slow", 10));
+        }
+        assert_eq!(rec.slow_len(), SLOW_CAP);
+        assert_eq!(rec.slow_dropped.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn guards_nest_and_link() {
+        let rec = Recorder::with_capacity(64);
+        {
+            let root = rec.span("open", 7, false);
+            let ctx = root.ctx();
+            assert_eq!(current(), Some((ctx.trace_id, root.span_id())));
+            {
+                let child = rec.span("rpc", 7, false);
+                assert_eq!(child.ctx().trace_id, ctx.trace_id, "child joins the trace");
+                child.annotate("busy_retry");
+                child.annotate("redirect->1");
+            }
+            rec.event("stale_lease_retry", "lease", 7, false);
+        }
+        assert_eq!(current(), None, "stack unwinds");
+        let spans = rec.snapshot();
+        assert_eq!(spans.len(), 3);
+        let root = spans.iter().find(|s| s.name == "open").unwrap();
+        let child = spans.iter().find(|s| s.name == "rpc").unwrap();
+        let ev = spans.iter().find(|s| s.name == "stale_lease_retry").unwrap();
+        assert_eq!(root.parent, 0);
+        assert_eq!(child.parent, root.span_id);
+        assert_eq!(ev.parent, root.span_id);
+        assert_eq!(child.note, "busy_retry;redirect->1");
+        assert!(spans.iter().all(|s| s.trace_id == root.trace_id));
+    }
+
+    #[test]
+    fn span_wire_roundtrip() {
+        let s = Span {
+            trace_id: 9,
+            span_id: 10,
+            parent: 3,
+            name: "open".into(),
+            note: "failover;redirect->2".into(),
+            host: 4,
+            server: true,
+            start_us: 1234,
+            dur_us: 56,
+        };
+        assert_eq!(Span::from_bytes(&s.to_bytes()).unwrap(), s);
+    }
+
+    #[test]
+    fn server_metrics_count_and_export() {
+        let m = ServerMetrics::new();
+        m.record_dispatch("open", Duration::from_micros(10), false);
+        m.record_dispatch("open", Duration::from_micros(20), false);
+        m.record_dispatch("read", Duration::from_micros(5), true);
+        m.record_dispatch("definitely-unknown", Duration::from_micros(1), false);
+        assert_eq!(m.dispatch_count("open"), 2);
+        assert_eq!(m.dispatch_count("read"), 1);
+        assert_eq!(m.error_count("read"), 1);
+        assert_eq!(m.dispatch_count("other"), 1, "unknown ops land in the other bucket");
+        assert_eq!(m.dispatch_total(), 4);
+        let json = m.ops_json();
+        assert!(json.contains("\"open\":{\"n\":2"), "got {json}");
+        assert!(json.contains("\"read\":{\"n\":1,\"err\":1"), "got {json}");
+    }
+
+    #[test]
+    fn render_tree_indents_children() {
+        let spans = vec![
+            span(1, 10, 0, "open", 100),
+            span(1, 11, 10, "rpc", 80),
+            span(1, 12, 11, "server-open", 60),
+        ];
+        let out = render_tree(&spans);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("open"));
+        assert!(lines[1].starts_with("  rpc"));
+        assert!(lines[2].starts_with("    server-open"));
+    }
+
+    #[test]
+    fn sections_parse() {
+        assert_eq!(parse_sections("all"), SEC_ALL);
+        assert_eq!(parse_sections("ops,journal"), SEC_OPS | SEC_JOURNAL);
+        assert_eq!(parse_sections("nonsense"), 0);
+    }
+}

@@ -86,6 +86,36 @@ pub struct ServerStats {
     pub migrated_dirs: AtomicU64,
 }
 
+impl ServerStats {
+    /// The `"server"` section of [`BServer::stats_snapshot`].
+    pub fn json(&self) -> String {
+        let l = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        format!(
+            "{{\"deferred_opens\":{},\"explicit_opens\":{},\"invalidation_barriers\":{},\
+             \"invalidations_pushed\":{},\"cross_server_ops\":{},\"batch_walks\":{},\
+             \"lease_grants\":{},\"stale_leases\":{},\"inline_opens\":{},\"batch_reads\":{},\
+             \"batch_writes\":{},\"stale_data\":{},\"data_invalidations_pushed\":{},\
+             \"redirects_served\":{},\"forwards\":{},\"migrated_dirs\":{}}}",
+            l(&self.deferred_opens),
+            l(&self.explicit_opens),
+            l(&self.invalidation_barriers),
+            l(&self.invalidations_pushed),
+            l(&self.cross_server_ops),
+            l(&self.batch_walks),
+            l(&self.lease_grants),
+            l(&self.stale_leases),
+            l(&self.inline_opens),
+            l(&self.batch_reads),
+            l(&self.batch_writes),
+            l(&self.stale_data),
+            l(&self.data_invalidations_pushed),
+            l(&self.redirects_served),
+            l(&self.forwards),
+            l(&self.migrated_dirs),
+        )
+    }
+}
+
 /// Gate state of an object this server no longer owns (DESIGN.md §12).
 pub enum Moved {
     /// Mid-migration freeze: new ops bounce with `Busy` and retry into
@@ -161,6 +191,10 @@ pub struct BServer {
     /// credentials and writes the whole subtree, so the role is opt-in.
     elastic: AtomicBool,
     pub stats: ServerStats,
+    /// Unified telemetry plane (DESIGN.md §13): per-op dispatch counters
+    /// + latency histograms, admission sheds, and the server-side span
+    /// recorder — everything [`Request::StatsFetch`] scrapes remotely.
+    pub obs: Arc<crate::obs::ServerMetrics>,
 }
 
 impl BServer {
@@ -201,6 +235,7 @@ impl BServer {
             migrations: Mutex::new(()),
             elastic: AtomicBool::new(false),
             stats: ServerStats::default(),
+            obs: crate::obs::ServerMetrics::new(),
         })
     }
 
@@ -457,6 +492,92 @@ impl BServer {
 
     pub fn host(&self) -> HostId {
         self.fs.host
+    }
+
+    /// Assemble the [`Request::StatsFetch`] reply: the JSON sections
+    /// selected by the `sections` bitmask (`crate::obs::SEC_*`) plus raw
+    /// spans. A non-zero `trace_filter` returns exactly that trace's
+    /// server-side spans; otherwise `SEC_SPANS` snapshots the whole ring
+    /// and `SEC_SLOW` *drains* the slow-op log (destructive by design —
+    /// each slow op is reported once).
+    pub fn stats_snapshot(&self, sections: u32, trace_filter: u64) -> Response {
+        use crate::obs::{SEC_DIRLOAD, SEC_JOURNAL, SEC_LEDGER, SEC_OPS, SEC_SERVER, SEC_SLOW, SEC_SPANS};
+        let mut parts = vec![format!("\"host\":{}", self.host())];
+        if sections & SEC_OPS != 0 {
+            parts.push(format!("\"ops\":{}", self.obs.ops_json()));
+            parts.push(format!(
+                "\"admission\":{{\"sheds\":{}}}",
+                self.obs.sheds.load(Ordering::Relaxed)
+            ));
+        }
+        if sections & SEC_SERVER != 0 {
+            parts.push(format!("\"server\":{}", self.stats.json()));
+        }
+        if sections & SEC_JOURNAL != 0 {
+            match self.fs.journal() {
+                Some(j) => parts.push(format!("\"journal\":{}", j.stats().json())),
+                None => parts.push("\"journal\":null".into()),
+            }
+        }
+        if sections & SEC_LEDGER != 0 {
+            parts.push(format!(
+                "\"ledger\":{{\"entries\":{},\"hits\":{},\"misses\":{}}}",
+                self.ledger.entries(),
+                self.ledger.hits.load(Ordering::Relaxed),
+                self.ledger.misses.load(Ordering::Relaxed),
+            ));
+        }
+        if sections & SEC_DIRLOAD != 0 {
+            // read-only peek: draining belongs to the load balancer's
+            // `take_dir_loads`, a scrape must not zero its counters
+            let load = self.dir_load.read().unwrap();
+            let mut pairs: Vec<(FileId, u64)> =
+                load.iter().map(|(f, n)| (*f, *n)).collect();
+            drop(load);
+            pairs.sort_unstable();
+            let body: Vec<String> =
+                pairs.iter().map(|(f, n)| format!("\"{f}\":{n}")).collect();
+            parts.push(format!("\"dir_load\":{{{}}}", body.join(",")));
+        }
+        parts.push(format!(
+            "\"trace\":{{\"recorded\":{},\"slow\":{}}}",
+            self.obs.trace.recorded(),
+            self.obs.trace.slow_len(),
+        ));
+        let mut spans = if trace_filter != 0 {
+            self.obs.trace.trace(trace_filter)
+        } else if sections & SEC_SPANS != 0 {
+            self.obs.trace.snapshot()
+        } else {
+            Vec::new()
+        };
+        if sections & SEC_SLOW != 0 {
+            spans.extend(self.obs.trace.drain_slow());
+        }
+        Response::Stats { json: format!("{{{}}}", parts.join(",")), spans }
+    }
+
+    /// The counters stamped into `BENCH_*.json` as before/after deltas
+    /// (see [`crate::obs::ObsCounters`]).
+    pub fn obs_counters(&self) -> crate::obs::ObsCounters {
+        let (journal_appends, journal_fsyncs) = match self.fs.journal() {
+            Some(j) => (
+                j.stats().appends.load(Ordering::Relaxed),
+                j.stats().fsyncs.load(Ordering::Relaxed),
+            ),
+            None => (0, 0),
+        };
+        crate::obs::ObsCounters {
+            dispatch_total: self.obs.dispatch_total(),
+            dispatch_errors: self.obs.error_total(),
+            sheds: self.obs.sheds.load(Ordering::Relaxed),
+            spans: self.obs.trace.recorded(),
+            slow_ops: self.obs.trace.slow_len() as u64,
+            journal_appends,
+            journal_fsyncs,
+            ledger_hits: self.ledger.hits.load(Ordering::Relaxed),
+            ledger_misses: self.ledger.misses.load(Ordering::Relaxed),
+        }
     }
 
     /// Wire up a peer server (cluster bootstrap).

@@ -29,6 +29,7 @@
 pub mod file;
 pub mod meta;
 pub mod namespace;
+pub mod obs;
 pub mod perm;
 pub mod relative;
 pub mod shard;
@@ -89,6 +90,8 @@ fn index(req: &Request) -> usize {
         Request::MigrateSubtree { .. } => 38,
         Request::SubtreeImport { .. } => 39,
         Request::UpdateParentMeta { .. } => 40,
+        Request::StatsFetch { .. } => 41,
+        Request::Traced { .. } => 42,
     }
 }
 
@@ -98,7 +101,7 @@ fn index(req: &Request) -> usize {
 /// included because O_TRUNC/deferred-create paths mutate; `commit` is
 /// a no-op when the handler appended nothing.
 fn is_mutating(req: &Request) -> bool {
-    if let Request::Stamped { inner, .. } = req {
+    if let Request::Stamped { inner, .. } | Request::Traced { inner, .. } = req {
         return is_mutating(inner);
     }
     matches!(
@@ -132,7 +135,7 @@ fn is_mutating(req: &Request) -> bool {
 }
 
 /// The handler table, ordered by wire tag (same order as [`index`]).
-static HANDLERS: [Handler; 41] = [
+static HANDLERS: [Handler; 43] = [
     meta::lookup,              // 0
     meta::read_dir,            // 1
     meta::get_attr,            // 2
@@ -174,6 +177,8 @@ static HANDLERS: [Handler; 41] = [
     shard::migrate_subtree,    // 38
     shard::subtree_import,     // 39
     namespace::update_parent_meta, // 40
+    obs::stats_fetch,          // 41
+    obs::traced,               // 42
 ];
 
 /// The exactly-once envelope handler (DESIGN.md §11). Unwraps a
@@ -193,6 +198,7 @@ fn stamped(s: &BServer, req: Request) -> FsResult<Response> {
     if matches!(
         inner,
         Request::Stamped { .. }
+            | Request::Traced { .. }
             | Request::JournalShip { .. }
             | Request::JournalFetch { .. }
             | Request::MigrateSubtree { .. }
@@ -245,7 +251,25 @@ fn stamped(s: &BServer, req: Request) -> FsResult<Response> {
 /// succeeded, drive the journal commit point (group fsync + backup
 /// ship) before returning — the reply frame is the acknowledgement, so
 /// it must not leave until the op is durable.
+///
+/// This is also the unified-metrics boundary: every dispatched op lands
+/// one count + latency sample in [`BServer::obs`] under its op name. A
+/// [`Request::Traced`] envelope is peeled first — its handler opens the
+/// server-side span and recursively dispatches the inner op, so the
+/// inner op is gated, counted and committed exactly once and the
+/// envelope itself never appears in the per-op stats.
 pub fn dispatch(s: &BServer, req: Request) -> FsResult<Response> {
+    if matches!(req, Request::Traced { .. }) {
+        return obs::traced(s, req);
+    }
+    let op = req.op();
+    let t0 = std::time::Instant::now();
+    let resp = dispatch_gated(s, req);
+    s.obs.record_dispatch(op, t0.elapsed(), resp.is_err());
+    resp
+}
+
+fn dispatch_gated(s: &BServer, req: Request) -> FsResult<Response> {
     // elastic-namespace gate first: an op aimed at a migrated-away
     // object is forwarded (grace window) or redirected (`WrongServer`)
     // before any handler sees it — and only locally-owned targets are
@@ -262,6 +286,10 @@ pub fn dispatch(s: &BServer, req: Request) -> FsResult<Response> {
     let resp = HANDLERS[index(&req)](s, req);
     if mutating && resp.is_ok() {
         if let Some(j) = s.fs.journal() {
+            // traced mutations get a journal_commit child span so the
+            // trace tree shows where the durability wait went
+            let _g = crate::obs::current()
+                .map(|_| s.obs.trace.span("journal_commit", s.host() as u32, true));
             j.commit()?;
             s.maybe_checkpoint(&j)?;
         }
@@ -340,6 +368,12 @@ mod tests {
             Request::MigrateSubtree { dir: ino, target: 1, grace: 0 },
             Request::SubtreeImport { frames: vec![] },
             Request::UpdateParentMeta { ino, parent: ino, name: "p".into() },
+            Request::StatsFetch { sections: crate::obs::SEC_ALL, trace_id: 0 },
+            Request::Traced {
+                trace_id: 1,
+                parent_span: 0,
+                inner: Box::new(Request::GetAttr { ino }),
+            },
         ];
         assert_eq!(all.len(), HANDLERS.len(), "one sample per table entry");
         for (i, req) in all.into_iter().enumerate() {

@@ -1,0 +1,45 @@
+//! Telemetry handlers (DESIGN.md §13): the `Traced` envelope that opens
+//! the server-side span of a client trace, and the `StatsFetch` remote
+//! scrape of the unified [`crate::obs::ServerMetrics`] snapshot.
+
+use crate::error::{FsError, FsResult};
+use crate::server::BServer;
+use crate::wire::{Request, Response};
+
+use super::{dispatch, misrouted};
+
+/// Handle a [`Request::Traced`]: open a server-side span under the
+/// client's context (pushed on the thread-local stack so any nested
+/// span — journal commit, forwarded ops — parents correctly), then
+/// recursively [`dispatch`] the inner op. The inner op therefore passes
+/// the moved-out gate, the per-op metrics boundary and the journal
+/// commit point exactly once; the envelope itself is never counted.
+pub fn traced(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Traced { trace_id, parent_span, inner } = req else {
+        return Err(misrouted("traced"));
+    };
+    let inner = *inner;
+    // one envelope per request: nesting would double-open spans
+    if matches!(inner, Request::Traced { .. }) {
+        return Err(FsError::Protocol("traced envelope cannot nest".into()));
+    }
+    let guard =
+        s.obs.trace.span_under(inner.op(), trace_id, parent_span, s.host() as u32, true);
+    let resp = dispatch(s, inner);
+    if let Err(e) = &resp {
+        guard.annotate(&format!("err:{e}"));
+    }
+    drop(guard);
+    resp
+}
+
+/// Handle a [`Request::StatsFetch`]: assemble the requested JSON
+/// sections plus raw spans (the filtered trace, or the ring snapshot /
+/// slow-log drain) — the whole snapshot lives server-side, so the
+/// scrape is one RPC.
+pub fn stats_fetch(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::StatsFetch { sections, trace_id } = req else {
+        return Err(misrouted("stats"));
+    };
+    Ok(s.stats_snapshot(sections, trace_id))
+}

@@ -51,6 +51,8 @@ pub(crate) fn shard_target(req: &Request) -> Option<Ino> {
         | Request::RmdirAt { lease, .. } => Some(lease.node),
         Request::RenameAt { src, .. } => Some(src.node),
         Request::Stamped { inner, .. } => shard_target(inner),
+        // Traced is peeled by `dispatch` before the gate ever runs; the
+        // envelope itself has no placement subject
         Request::Hello { .. }
         | Request::Statfs { .. }
         | Request::CreateOrphan { .. }
@@ -58,7 +60,9 @@ pub(crate) fn shard_target(req: &Request) -> Option<Ino> {
         | Request::JournalFetch { .. }
         | Request::PlacementFetch { .. }
         | Request::MigrateSubtree { .. }
-        | Request::SubtreeImport { .. } => None,
+        | Request::SubtreeImport { .. }
+        | Request::StatsFetch { .. }
+        | Request::Traced { .. } => None,
     }
 }
 

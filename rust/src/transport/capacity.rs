@@ -61,6 +61,11 @@ impl ServiceConfig {
                 let total: u64 = segs.iter().map(|s| s.data.len() as u64).sum();
                 self.data_us + self.data_us_per_4k * total.div_ceil(4096)
             }
+            // envelopes cost what their payload op costs — a stamped or
+            // traced WriteBatch is still a data op on the server's CPU
+            Request::Stamped { inner, .. } | Request::Traced { inner, .. } => {
+                return self.service_time(inner);
+            }
             _ => self.meta_us,
         };
         Duration::from_micros(us)
@@ -179,6 +184,23 @@ mod tests {
             cfg.service_time(&Request::GetAttr { ino: Ino::new(0, 0, 1) }),
             Duration::ZERO
         );
+        // envelopes are charged for their payload, not as metadata ops
+        let wrapped = Request::Traced {
+            trace_id: 1,
+            parent_span: 0,
+            inner: Box::new(Request::Stamped {
+                client: 1,
+                op_id: 1,
+                ack_upto: 0,
+                inner: Box::new(Request::Read {
+                    ino: Ino::new(0, 0, 1),
+                    off: 0,
+                    len: 8192,
+                    open_ctx: None,
+                }),
+            }),
+        };
+        assert_eq!(cfg.service_time(&wrapped), Duration::from_micros(2000));
     }
 
     #[test]

@@ -109,9 +109,19 @@ impl ChanTransport {
                     let Some((id, frame)) = pipe.pop_or_wait(&shutdown) else { return };
                     // request leg: the framed bytes cross the wire
                     net.transmit(frame.len());
-                    let resp = match mux::decode_frame(&frame)
-                        .and_then(|(_, _, payload)| Request::from_bytes(payload))
-                    {
+                    // a FLAG_TRACE header extension is rebuilt into the
+                    // Traced envelope the dispatch layer understands
+                    let resp = match mux::decode_frame_ext(&frame).and_then(|(_, _, trace, payload)| {
+                        let req = Request::from_bytes(payload)?;
+                        Ok(match trace {
+                            Some((trace_id, parent_span)) => Request::Traced {
+                                trace_id,
+                                parent_span,
+                                inner: Box::new(req),
+                            },
+                            None => req,
+                        })
+                    }) {
                         Ok(req) => service.handle(req),
                         Err(e) => Response::Err(e),
                     };
@@ -212,10 +222,12 @@ impl Transport for ChanTransport {
 
     fn submit(&self, req: Request) -> FsResult<Pending> {
         self.ensure_pipe_workers();
+        // a Traced envelope rides in the frame header, not the payload
+        let (trace, req) = mux::split_trace(req);
         let payload = req.to_bytes();
         // blocks at the depth cap: bounded in-flight backpressure
         let id = self.table.begin(req.op(), payload.len())?;
-        let frame = mux::encode_frame(id, mux::FLAG_NONE, &payload);
+        let frame = mux::encode_frame_ext(id, mux::FLAG_NONE, trace, &payload);
         self.pipe.push((id, frame));
         Ok(Pending::Mux(id))
     }
@@ -429,6 +441,38 @@ mod tests {
         }
         drop(t); // workers drain-then-exit without hanging
         assert_eq!(metrics.count("getattr"), 5);
+    }
+
+    #[test]
+    fn traced_submit_rides_the_frame_header() {
+        // the envelope is stripped into the frame header on the way out
+        // and rebuilt for the service on the way in
+        let seen = Arc::new(AtomicU64::new(0));
+        let seen2 = Arc::clone(&seen);
+        let svc: Arc<dyn Service> = Arc::new(move |req: Request| match req {
+            Request::Traced { trace_id, inner, .. } => {
+                seen2.store(trace_id, Ordering::Relaxed);
+                match *inner {
+                    Request::GetAttr { .. } => Response::Unit,
+                    _ => Response::Err(FsError::Invalid("bad inner".into())),
+                }
+            }
+            _ => Response::Err(FsError::Invalid("expected traced envelope".into())),
+        });
+        let metrics = Arc::new(RpcMetrics::new());
+        let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+        let t = ChanTransport::new(svc, net, metrics.clone());
+        let p = t
+            .submit(Request::Traced {
+                trace_id: 99,
+                parent_span: 7,
+                inner: Box::new(Request::GetAttr { ino: Ino::new(0, 0, 1) }),
+            })
+            .unwrap();
+        assert_eq!(t.wait(p).unwrap(), Response::Unit);
+        assert_eq!(seen.load(Ordering::Relaxed), 99);
+        // client metrics count the op under the inner name, not "stats"
+        assert_eq!(metrics.count("getattr"), 1);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! * **Frame header** — pipelined frames prefix the wire payload with
 //!   `[magic, version, flags:u16, request_id:u64]`. The magic byte can
 //!   never be confused with a legacy frame (legacy payloads start with
-//!   a request/response tag ≤ 33), which is what makes the `Hello`
+//!   a small request/response tag), which is what makes the `Hello`
 //!   version handshake — and the sticky downgrade to lockstep framing
 //!   against legacy peers — possible.
 //! * **[`InflightTable`]** — the client's request-id → waiter-slot map.
@@ -32,10 +32,10 @@ use std::time::{Duration, Instant};
 
 use crate::error::{FsError, FsResult};
 use crate::metrics::RpcMetrics;
-use crate::wire::Response;
+use crate::wire::{Request, Response};
 
 /// First byte of a pipelined frame payload. Legacy payloads start with
-/// a wire tag (requests 0..=33, responses 0..=14), so this byte is
+/// a wire tag (requests 0..=42, responses 0..=18), so this byte is
 /// unambiguous: a legacy peer decoding it fails cleanly with "bad
 /// request tag 181" and the handshake downgrades.
 pub const FRAME_MAGIC: u8 = 0xB5;
@@ -51,16 +51,45 @@ pub const HEADER_LEN: usize = 12;
 /// priority, streaming); peers must ignore unknown bits.
 pub const FLAG_NONE: u16 = 0;
 
+/// The frame carries a trace-context header extension: 16 bytes
+/// (`trace_id` u64 LE, `parent_span` u64 LE) between the fixed header
+/// and the wire payload. Mux transports ship [`Request::Traced`] this
+/// way — header bytes instead of an envelope inside the payload — so
+/// tracing adds zero re-encoding of the inner request.
+pub const FLAG_TRACE: u16 = 0x1;
+
+/// Byte length of the [`FLAG_TRACE`] header extension.
+pub const TRACE_EXT_LEN: usize = 16;
+
 /// Default bound on client-side in-flight requests per connection.
 pub const DEFAULT_PIPELINE_DEPTH: usize = 32;
 
 /// Prefix `payload` with the pipelined frame header.
 pub fn encode_frame(request_id: u64, flags: u16, payload: &[u8]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    encode_frame_ext(request_id, flags, None, payload)
+}
+
+/// Like [`encode_frame`], optionally appending the [`FLAG_TRACE`]
+/// header extension `(trace_id, parent_span)`. When `trace` is `Some`,
+/// the flag bit is set automatically; `None` emits a byte-identical
+/// frame to the pre-tracing wire format.
+pub fn encode_frame_ext(
+    request_id: u64,
+    flags: u16,
+    trace: Option<(u64, u64)>,
+    payload: &[u8],
+) -> Vec<u8> {
+    let ext = if trace.is_some() { TRACE_EXT_LEN } else { 0 };
+    let flags = if trace.is_some() { flags | FLAG_TRACE } else { flags & !FLAG_TRACE };
+    let mut out = Vec::with_capacity(HEADER_LEN + ext + payload.len());
     out.push(FRAME_MAGIC);
     out.push(MUX_VERSION);
     out.extend_from_slice(&flags.to_le_bytes());
     out.extend_from_slice(&request_id.to_le_bytes());
+    if let Some((trace_id, parent_span)) = trace {
+        out.extend_from_slice(&trace_id.to_le_bytes());
+        out.extend_from_slice(&parent_span.to_le_bytes());
+    }
     out.extend_from_slice(payload);
     out
 }
@@ -71,7 +100,17 @@ pub fn is_mux_frame(frame: &[u8]) -> bool {
 }
 
 /// Split a pipelined frame into (request_id, flags, wire payload).
+/// Skips (discards) a [`FLAG_TRACE`] extension if present — callers
+/// that care about the trace context use [`decode_frame_ext`].
 pub fn decode_frame(frame: &[u8]) -> FsResult<(u64, u16, &[u8])> {
+    let (id, flags, _trace, body) = decode_frame_ext(frame)?;
+    Ok((id, flags, body))
+}
+
+/// Split a pipelined frame into (request_id, flags, trace context,
+/// wire payload). The trace context is `Some((trace_id, parent_span))`
+/// exactly when the sender set [`FLAG_TRACE`].
+pub fn decode_frame_ext(frame: &[u8]) -> FsResult<(u64, u16, Option<(u64, u64)>, &[u8])> {
     if frame.len() < HEADER_LEN {
         return Err(FsError::Protocol(format!("short mux frame: {} bytes", frame.len())));
     }
@@ -83,7 +122,32 @@ pub fn decode_frame(frame: &[u8]) -> FsResult<(u64, u16, &[u8])> {
     }
     let flags = u16::from_le_bytes([frame[2], frame[3]]);
     let id = u64::from_le_bytes(frame[4..12].try_into().expect("12-byte header"));
-    Ok((id, flags, &frame[HEADER_LEN..]))
+    if flags & FLAG_TRACE != 0 {
+        let end = HEADER_LEN + TRACE_EXT_LEN;
+        if frame.len() < end {
+            return Err(FsError::Protocol(format!(
+                "short trace extension: {} bytes",
+                frame.len() - HEADER_LEN
+            )));
+        }
+        let trace_id = u64::from_le_bytes(frame[12..20].try_into().expect("ext"));
+        let parent_span = u64::from_le_bytes(frame[20..28].try_into().expect("ext"));
+        Ok((id, flags, Some((trace_id, parent_span)), &frame[end..]))
+    } else {
+        Ok((id, flags, None, &frame[HEADER_LEN..]))
+    }
+}
+
+/// Peel a [`Request::Traced`] envelope off `req` so a mux transport can
+/// carry the trace context in the frame header instead: returns the
+/// context (if any) and the bare inner request.
+pub fn split_trace(req: Request) -> (Option<(u64, u64)>, Request) {
+    match req {
+        Request::Traced { trace_id, parent_span, inner } => {
+            (Some((trace_id, parent_span)), *inner)
+        }
+        other => (None, other),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -421,12 +485,55 @@ mod tests {
 
     #[test]
     fn legacy_payloads_are_never_mux_frames() {
-        // every legacy request/response payload starts with a tag ≤ 33
+        // every legacy request/response payload starts with a small tag
         let req = Request::Hello { client: 1 }.to_bytes();
         assert!(!is_mux_frame(&req));
         let resp = Response::Unit.to_bytes();
         assert!(!is_mux_frame(&resp));
         assert!(decode_frame(&req).is_err());
+    }
+
+    #[test]
+    fn trace_extension_roundtrips() {
+        let req = Request::GetAttr { ino: Ino::new(0, 0, 7) };
+        let payload = req.to_bytes();
+        let frame = encode_frame_ext(9, FLAG_NONE, Some((0xabcd, 0x42)), &payload);
+        assert!(is_mux_frame(&frame));
+        let (id, flags, trace, body) = decode_frame_ext(&frame).unwrap();
+        assert_eq!(id, 9);
+        assert_ne!(flags & FLAG_TRACE, 0);
+        assert_eq!(trace, Some((0xabcd, 0x42)));
+        assert_eq!(Request::from_bytes(body).unwrap(), req);
+        // plain decode_frame skips the extension transparently
+        let (id2, _, body2) = decode_frame(&frame).unwrap();
+        assert_eq!(id2, 9);
+        assert_eq!(Request::from_bytes(body2).unwrap(), req);
+    }
+
+    #[test]
+    fn untraced_frames_are_byte_identical_to_legacy_encoding() {
+        let payload = Request::Hello { client: 3 }.to_bytes();
+        assert_eq!(
+            encode_frame_ext(5, FLAG_NONE, None, &payload),
+            encode_frame(5, FLAG_NONE, &payload),
+        );
+        let truncated = &encode_frame_ext(5, FLAG_NONE, Some((1, 2)), &payload)[..HEADER_LEN + 4];
+        assert!(decode_frame_ext(truncated).is_err(), "short trace ext must fail cleanly");
+    }
+
+    #[test]
+    fn split_trace_peels_the_envelope() {
+        let inner = Request::GetAttr { ino: Ino::new(0, 0, 1) };
+        let (ctx, bare) = split_trace(Request::Traced {
+            trace_id: 11,
+            parent_span: 22,
+            inner: Box::new(inner.clone()),
+        });
+        assert_eq!(ctx, Some((11, 22)));
+        assert_eq!(bare, inner);
+        let (ctx, bare) = split_trace(inner.clone());
+        assert_eq!(ctx, None);
+        assert_eq!(bare, inner);
     }
 
     #[test]

@@ -151,6 +151,18 @@ pub struct TcpServer {
 
 impl TcpServer {
     pub fn spawn(addr: &str, service: Arc<dyn Service>) -> FsResult<TcpServer> {
+        Self::spawn_obs(addr, service, None)
+    }
+
+    /// Like [`TcpServer::spawn`], mirroring shed counts into the
+    /// server's unified [`crate::obs::ServerMetrics`] registry so a
+    /// remote `StatsFetch` sees admission pressure, not just the
+    /// process-local [`TcpServerStats`].
+    pub fn spawn_obs(
+        addr: &str,
+        service: Arc<dyn Service>,
+        obs: Option<Arc<crate::obs::ServerMetrics>>,
+    ) -> FsResult<TcpServer> {
         let listener = TcpListener::bind(addr).map_err(io_err)?;
         let local_addr = listener.local_addr().map_err(io_err)?;
         listener.set_nonblocking(true).map_err(io_err)?;
@@ -170,10 +182,11 @@ impl TcpServer {
                             let svc = Arc::clone(&service);
                             let stop3 = Arc::clone(&stop2);
                             let st = Arc::clone(&stats2);
+                            let ob = obs.clone();
                             conns.push(
                                 std::thread::Builder::new()
                                     .name("tcp-conn".into())
-                                    .spawn(move || serve_conn(stream, svc, stop3, st))
+                                    .spawn(move || serve_conn(stream, svc, stop3, st, ob))
                                     .expect("spawn conn thread"),
                             );
                         }
@@ -213,6 +226,7 @@ fn serve_conn(
     service: Arc<dyn Service>,
     stop: Arc<AtomicBool>,
     stats: Arc<TcpServerStats>,
+    obs: Option<Arc<crate::obs::ServerMetrics>>,
 ) {
     let idle = std::time::Duration::from_millis(100);
     stream.set_read_timeout(Some(idle)).ok();
@@ -232,7 +246,7 @@ fn serve_conn(
     };
     if mux::is_mux_frame(&first) {
         stats.pipelined_conns.fetch_add(1, Ordering::Relaxed);
-        serve_conn_pipelined(stream, first, service, stop, stats, idle);
+        serve_conn_pipelined(stream, first, service, stop, stats, obs, idle);
     } else {
         stats.legacy_conns.fetch_add(1, Ordering::Relaxed);
         serve_conn_lockstep(stream, first, service, stop, stats, idle);
@@ -279,6 +293,7 @@ fn serve_conn_pipelined(
     service: Arc<dyn Service>,
     stop: Arc<AtomicBool>,
     stats: Arc<TcpServerStats>,
+    obs: Option<Arc<crate::obs::ServerMetrics>>,
     idle: std::time::Duration,
 ) {
     let Ok(writer_stream) = stream.try_clone() else { return };
@@ -310,7 +325,7 @@ fn serve_conn_pipelined(
     }
 
     let dispatch = |frame: Vec<u8>| -> bool {
-        let (id, _flags, payload) = match mux::decode_frame(&frame) {
+        let (id, _flags, trace, payload) = match mux::decode_frame_ext(&frame) {
             Ok(parts) => parts,
             Err(_) => return false, // a mid-connection framing switch is fatal
         };
@@ -320,12 +335,23 @@ fn serve_conn_pipelined(
                 write_frame(&mut writer.lock().unwrap(), &f).is_ok()
             }
             Ok(req) => {
+                // a FLAG_TRACE extension is rebuilt into the Traced
+                // envelope the dispatch layer understands
+                let req = match trace {
+                    Some((trace_id, parent_span)) => {
+                        Request::Traced { trace_id, parent_span, inner: Box::new(req) }
+                    }
+                    None => req,
+                };
                 if admission.try_admit() {
                     queue.push((id, req));
                     true
                 } else {
                     // past the hard cap: shed instead of queueing
                     stats.shed_busy.fetch_add(1, Ordering::Relaxed);
+                    if let Some(ob) = &obs {
+                        ob.sheds.fetch_add(1, Ordering::Relaxed);
+                    }
                     let f = mux::encode_frame(
                         id,
                         mux::FLAG_NONE,
@@ -607,8 +633,14 @@ impl TcpTransport {
     /// Put one mux frame on the wire for an already-allocated id. A
     /// timed-out or partial write desynchronizes the *outbound* stream,
     /// which no amount of demuxing can repair — whole-connection poison.
-    fn send_frame(&self, pipe: &Pipe, id: u64, payload: &[u8]) -> FsResult<()> {
-        let frame = mux::encode_frame(id, mux::FLAG_NONE, payload);
+    fn send_frame(
+        &self,
+        pipe: &Pipe,
+        id: u64,
+        trace: Option<(u64, u64)>,
+        payload: &[u8],
+    ) -> FsResult<()> {
+        let frame = mux::encode_frame_ext(id, mux::FLAG_NONE, trace, payload);
         let mut w = pipe.writer.lock().unwrap();
         if let Err(e) = write_frame(&mut w, &frame) {
             drop(w);
@@ -624,9 +656,11 @@ impl TcpTransport {
                 "connection poisoned by an earlier stream failure; reconnect".into(),
             ));
         }
+        // a Traced envelope rides in the frame header, not the payload
+        let (trace, req) = mux::split_trace(req);
         let payload = req.to_bytes();
         let id = pipe.table.begin(req.op(), payload.len())?;
-        self.send_frame(pipe, id, &payload)?;
+        self.send_frame(pipe, id, trace, &payload)?;
         Ok(id)
     }
 }
@@ -665,10 +699,11 @@ impl Transport for TcpTransport {
                 if self.poisoned.load(Ordering::Acquire) {
                     return Err(FsError::Transport("connection poisoned".into()));
                 }
+                let (trace, req) = mux::split_trace(req);
                 let payload = req.to_bytes();
                 // fire-and-forget: completion frees the slot, nobody waits
                 let id = pipe.table.begin_forget(req.op(), payload.len())?;
-                self.send_frame(pipe, id, &payload)
+                self.send_frame(pipe, id, trace, &payload)
             }
         }
     }

@@ -217,6 +217,23 @@ pub enum Request {
     /// server; the owner re-points its inode's parent/name bookkeeping
     /// so `parent_of` and later perm dirent-syncs stay honest.
     UpdateParentMeta { ino: Ino, parent: Ino, name: String },
+    /// Remote telemetry scrape: ask the server for its unified metrics
+    /// snapshot (see [`crate::obs::ServerMetrics`]). `sections` is a
+    /// bitmask of `crate::obs::SEC_*` selecting which JSON sections to
+    /// assemble; `trace_id` ≠ 0 additionally returns every server-side
+    /// span of that trace (for `buffetfs trace`). Answered with
+    /// [`Response::Stats`]. Old servers reject the unknown tag with a
+    /// protocol error — the CLI reports that plainly.
+    StatsFetch { sections: u32, trace_id: u64 },
+    /// Tracing envelope: carries the client's trace context so the
+    /// server records its spans under the same `trace_id`, causally
+    /// linked beneath `parent_span`. Always the *outermost* envelope
+    /// (wraps `Stamped`, never the reverse) so a legacy peer fails on
+    /// this tag first and the agent can sticky-downgrade tracing alone,
+    /// exactly like the `Stamped`/`ResolvePath` negotiation. Mux
+    /// transports strip it into a frame-header extension instead of
+    /// shipping the envelope bytes.
+    Traced { trace_id: u64, parent_span: u64, inner: Box<Request> },
 }
 
 /// One override row of the directory placement map: the subtree rooted
@@ -284,6 +301,11 @@ pub enum Response {
     /// `files` objects moved, and the placement map now reads
     /// `map_version`.
     Migrated { files: u64, map_version: u64 },
+    /// Reply to [`Request::StatsFetch`]: the requested metric sections
+    /// rendered as one JSON object, plus raw server-side spans (the
+    /// requested trace's, or the slow-op drain) so the CLI can render
+    /// causal trees without a JSON parser.
+    Stats { json: String, spans: Vec<crate::obs::Span> },
 }
 
 /// Server→client push messages (the §3.4 consistency protocol).
@@ -352,6 +374,8 @@ impl Request {
             Request::MigrateSubtree { .. } => "migrate",
             Request::SubtreeImport { .. } => "migrate",
             Request::UpdateParentMeta { .. } => "rename",
+            Request::StatsFetch { .. } => "stats",
+            Request::Traced { inner, .. } => inner.op(),
         }
     }
 
@@ -359,6 +383,7 @@ impl Request {
     pub fn is_metadata(&self) -> bool {
         match self {
             Request::Stamped { inner, .. } => inner.is_metadata(),
+            Request::Traced { inner, .. } => inner.is_metadata(),
             _ => !matches!(
                 self,
                 Request::Read { .. }
@@ -382,6 +407,7 @@ impl Request {
             }
             Request::JournalShip { frames } => 64 + frames.len(),
             Request::Stamped { inner, .. } => 24 + inner.wire_size(),
+            Request::Traced { inner, .. } => 16 + inner.wire_size(),
             Request::SubtreeImport { frames } => 64 + frames.len(),
             _ => 64,
         }
@@ -403,6 +429,7 @@ impl Response {
             Response::OpenedInline { data, .. } => 64 + data.as_ref().map_or(0, |d| d.len()),
             Response::JournalChunk { frames, .. } => 32 + frames.len(),
             Response::PlacementMap { entries, .. } => 32 + entries.len() * 16,
+            Response::Stats { json, spans } => 32 + json.len() + spans.len() * 64,
             _ => 32,
         }
     }
@@ -770,6 +797,17 @@ impl Wire for Request {
                 parent.enc(e);
                 e.str(name);
             }
+            Request::StatsFetch { sections, trace_id } => {
+                tagged!(e, 41);
+                e.u32(*sections);
+                e.u64(*trace_id);
+            }
+            Request::Traced { trace_id, parent_span, inner } => {
+                tagged!(e, 42);
+                e.u64(*trace_id);
+                e.u64(*parent_span);
+                inner.enc(e);
+            }
         }
     }
 
@@ -934,6 +972,12 @@ impl Wire for Request {
                 parent: Ino::dec(d)?,
                 name: d.str()?,
             },
+            41 => Request::StatsFetch { sections: d.u32()?, trace_id: d.u64()? },
+            42 => Request::Traced {
+                trace_id: d.u64()?,
+                parent_span: d.u64()?,
+                inner: Box::new(Request::dec(d)?),
+            },
             t => return Err(FsError::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -1048,6 +1092,11 @@ impl Wire for Response {
                 e.u64(*files);
                 e.u64(*map_version);
             }
+            Response::Stats { json, spans } => {
+                tagged!(e, 18);
+                e.str(json);
+                spans.enc(e);
+            }
         }
     }
 
@@ -1119,6 +1168,10 @@ impl Wire for Response {
                 entries: Vec::<PlacementEntry>::dec(d)?,
             },
             17 => Response::Migrated { files: d.u64()?, map_version: d.u64()? },
+            18 => Response::Stats {
+                json: d.str()?,
+                spans: Vec::<crate::obs::Span>::dec(d)?,
+            },
             t => return Err(FsError::Protocol(format!("bad response tag {t}"))),
         })
     }
@@ -1318,6 +1371,23 @@ mod tests {
                 parent: Ino::new(1, 0, 7),
                 name: "moved".into(),
             },
+            Request::StatsFetch { sections: crate::obs::SEC_ALL, trace_id: 0 },
+            Request::StatsFetch { sections: crate::obs::SEC_SPANS, trace_id: 0xdead_beef },
+            Request::Traced {
+                trace_id: 77,
+                parent_span: 3,
+                inner: Box::new(Request::GetAttr { ino }),
+            },
+            Request::Traced {
+                trace_id: 78,
+                parent_span: 0,
+                inner: Box::new(Request::Stamped {
+                    client: 7,
+                    op_id: 43,
+                    ack_upto: 41,
+                    inner: Box::new(Request::Chmod { ino, mode: 0o600, cred: cred() }),
+                }),
+            },
         ]
     }
 
@@ -1390,6 +1460,21 @@ mod tests {
             Response::PlacementMap { version: 0, entries: vec![] },
             Response::Migrated { files: 40, map_version: 4 },
             Response::Err(FsError::WrongServer { owner: 2, map_version: 7 }),
+            Response::Stats { json: "{\"ops\":{}}".into(), spans: vec![] },
+            Response::Stats {
+                json: String::new(),
+                spans: vec![crate::obs::Span {
+                    trace_id: 77,
+                    span_id: 5,
+                    parent: 3,
+                    name: "getattr".into(),
+                    note: "wrong_server->2".into(),
+                    host: 1,
+                    server: true,
+                    start_us: 1000,
+                    dur_us: 120,
+                }],
+            },
         ]
     }
 

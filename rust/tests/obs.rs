@@ -1,0 +1,489 @@
+//! Unified telemetry plane acceptance (DESIGN.md §13).
+//!
+//! The invariants under test:
+//! * one top-level op yields ONE causally-linked trace tree spanning the
+//!   client ring and the server ring — across chan AND tcp transports;
+//! * a `WrongServer` redirect and a failover retry stay inside the op's
+//!   single trace, each annotated with its retry class;
+//! * a legacy peer that rejects the `Traced` envelope sticky-downgrades
+//!   the agent to untraced requests without erroring the op;
+//! * ring overwrite never evicts slow-op entries, and `SEC_SLOW` drains
+//!   them remotely;
+//! * a `StatsFetch` snapshot reconciles with the client's `RpcMetrics`
+//!   ground truth.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use buffetfs::agent::BAgent;
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster, ClusterView};
+use buffetfs::error::FsError;
+use buffetfs::metrics::{RpcMetrics, OPS};
+use buffetfs::obs::{Span, RING_CAP, SEC_OPS, SEC_SERVER, SEC_SLOW};
+use buffetfs::server::BServer;
+use buffetfs::simnet::{LatencyModel, NetConfig};
+use buffetfs::store::data::MemData;
+use buffetfs::store::fs::LocalFs;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::transport::chan::{ChanNotify, ChanTransport};
+use buffetfs::transport::tcp::{ReconnectConfig, ReconnectTransport, TcpServer};
+use buffetfs::transport::{Service, Transport};
+use buffetfs::types::{Credentials, OpenFlags};
+use buffetfs::wire::{Request, Response};
+
+fn fast_cluster(n: u16) -> BuffetCluster {
+    BuffetCluster::spawn_with(
+        n,
+        NetConfig::zero(),
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    )
+}
+
+/// Wait for in-flight async traffic (deferred closes) to retire.
+fn quiesce(metrics: &RpcMetrics) {
+    let mut last = metrics.total_rpcs();
+    for _ in 0..200 {
+        std::thread::sleep(Duration::from_millis(5));
+        let now = metrics.total_rpcs();
+        if now == last {
+            return;
+        }
+        last = now;
+    }
+}
+
+/// All spans of `trace_id`, client ring first, then the given server
+/// rings.
+fn whole_trace(agent: &Arc<BAgent>, servers: &[&Arc<BServer>], trace_id: u64) -> Vec<Span> {
+    let mut spans = agent.tracer().trace(trace_id);
+    for s in servers {
+        spans.extend(s.obs.trace.trace(trace_id));
+    }
+    spans
+}
+
+/// A trace is a single causal tree: exactly one root, and every other
+/// span's parent is present in the trace.
+fn assert_single_tree(spans: &[Span]) {
+    let ids: std::collections::BTreeSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    let roots: Vec<&Span> = spans.iter().filter(|s| s.parent == 0).collect();
+    assert_eq!(roots.len(), 1, "exactly one root, got {roots:?}");
+    for s in spans {
+        if s.parent != 0 {
+            assert!(
+                ids.contains(&s.parent),
+                "span {} ({}) orphaned: parent {} not in trace",
+                s.span_id,
+                s.name,
+                s.parent
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace tree, client → server
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cold_open_yields_one_linked_trace_tree_over_chan() {
+    let cluster = fast_cluster(1);
+    let admin = {
+        let (agent, _) = cluster.make_agent();
+        Buffet::process(agent, Credentials::root())
+    };
+    admin.mkdir("/d", 0o755).unwrap();
+    admin.put("/d/f", b"payload").unwrap();
+
+    let (agent, _metrics) = cluster.make_agent();
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    let fd = p.open("/d/f", OpenFlags::RDONLY).unwrap();
+    assert_eq!(p.read(fd, 7).unwrap(), b"payload");
+    p.close(fd).unwrap();
+
+    // the open's root span anchors the trace
+    let root = agent
+        .tracer()
+        .snapshot()
+        .into_iter()
+        .find(|s| s.name == "open" && s.parent == 0)
+        .expect("the open op must record a root span");
+    let server = cluster.server(0).unwrap();
+    let spans = whole_trace(&agent, &[&server], root.trace_id);
+    assert!(spans.len() >= 3, "open must record more than the root: {spans:?}");
+    assert_single_tree(&spans);
+    assert!(
+        spans.iter().any(|s| !s.server && s.parent == root.span_id),
+        "the open must have issued at least one client rpc span"
+    );
+    let server_spans: Vec<&Span> = spans.iter().filter(|s| s.server).collect();
+    assert!(!server_spans.is_empty(), "the server side must have joined the trace");
+    let client_ids: std::collections::BTreeSet<u64> =
+        spans.iter().filter(|s| !s.server).map(|s| s.span_id).collect();
+    for s in &server_spans {
+        assert!(
+            client_ids.contains(&s.parent),
+            "server span {} must hang off a client rpc span",
+            s.name
+        );
+    }
+}
+
+#[test]
+fn trace_ctx_rides_tcp_framing_and_statsfetch_scrapes_it() {
+    let server = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    let _tcp =
+        TcpServer::spawn_obs("127.0.0.1:0", server.clone(), Some(server.obs.clone())).expect("bind");
+    let addr = _tcp.local_addr.to_string();
+    let root = server.fs.root_ino();
+    let metrics = Arc::new(RpcMetrics::new());
+
+    // pipelined framing: the ctx travels as a FLAG_TRACE header extension
+    let cfg = ReconnectConfig { pipelined: true, ..ReconnectConfig::default() };
+    let piped = ReconnectTransport::connect(&addr, cfg, metrics.clone()).unwrap();
+    piped
+        .call(Request::Traced {
+            trace_id: 4242,
+            parent_span: 17,
+            inner: Box::new(Request::GetAttr { ino: root }),
+        })
+        .expect("traced getattr over pipelined tcp");
+
+    // lockstep framing: the whole envelope travels in the payload
+    let lock = ReconnectTransport::connect(&addr, ReconnectConfig::default(), metrics).unwrap();
+    lock.call(Request::Traced {
+        trace_id: 4243,
+        parent_span: 18,
+        inner: Box::new(Request::GetAttr { ino: root }),
+    })
+    .expect("traced getattr over lockstep tcp");
+
+    // both attempts executed exactly once, counted under the INNER op
+    assert_eq!(server.obs.dispatch_count("getattr"), 2);
+
+    // the remote scrape returns each trace with its wire-carried lineage
+    for (trace_id, parent) in [(4242u64, 17u64), (4243, 18)] {
+        match lock.call(Request::StatsFetch { sections: 0, trace_id }).unwrap() {
+            Response::Stats { spans, .. } => {
+                let s = spans
+                    .iter()
+                    .find(|s| s.trace_id == trace_id)
+                    .unwrap_or_else(|| panic!("trace {trace_id} missing from scrape"));
+                assert_eq!(s.parent, parent, "server span must parent under the wire ctx");
+                assert_eq!(s.name, "getattr");
+                assert!(s.server);
+                assert_eq!(s.host, 0);
+            }
+            other => panic!("stats fetch returned {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Retry classes stay inside one trace
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wrong_server_redirect_is_one_annotated_trace() {
+    let cluster = fast_cluster(2);
+    let (agent, _) = cluster.make_agent();
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.mkdir("/hot", 0o755).unwrap();
+    p.put("/hot/f0", b"before").unwrap();
+    let hot = p.stat("/hot").unwrap().ino;
+
+    match cluster.server(0).unwrap().handle(Request::MigrateSubtree {
+        dir: hot,
+        target: 1,
+        grace: 0,
+    }) {
+        Response::Migrated { .. } => {}
+        other => panic!("migration failed: {other:?}"),
+    }
+
+    // stale placement cache: the next mutation pays one WrongServer hop
+    p.put("/hot/f1", b"after").unwrap();
+    assert!(agent.stats.redirects.load(Ordering::Relaxed) >= 1);
+
+    let redirected = agent
+        .tracer()
+        .snapshot()
+        .into_iter()
+        .find(|s| s.note.contains("wrong_server->1"))
+        .expect("the redirected attempt must be annotated");
+    let s1 = cluster.server(1).unwrap();
+    let spans = whole_trace(&agent, &[&s1], redirected.trace_id);
+    assert_single_tree(&spans);
+    assert!(
+        spans.iter().any(|s| s.server && s.host == 1),
+        "the retried attempt must appear in host 1's ring under the SAME trace: {spans:?}"
+    );
+}
+
+/// Answers like a live server until `dead` flips, then like a severed
+/// connection.
+struct KillSwitch {
+    inner: Arc<BServer>,
+    dead: AtomicBool,
+}
+
+impl Service for KillSwitch {
+    fn handle(&self, req: Request) -> Response {
+        if self.dead.load(Ordering::Acquire) {
+            return Response::Err(FsError::Transport("primary crashed".into()));
+        }
+        self.inner.handle(req)
+    }
+}
+
+#[test]
+fn failover_retry_is_one_annotated_trace() {
+    let s = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    let metrics = Arc::new(RpcMetrics::new());
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let kill = Arc::new(KillSwitch { inner: s.clone(), dead: AtomicBool::new(false) });
+    let view = ClusterView::new(s.fs.root_ino());
+    view.add(0, 0, ChanTransport::new(kill.clone(), net.clone(), metrics.clone()));
+    // the "standby" is the same server reached directly: promotion swaps
+    // transports, which is all the trace needs to observe
+    view.register_standby(0, 0, ChanTransport::new(s.clone(), net.clone(), metrics.clone()));
+    let agent = BAgent::new(1, view, metrics.clone());
+    s.register_pusher(1, ChanNotify::new(agent.clone(), net));
+
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.put("/pre", b"x").unwrap();
+    kill.dead.store(true, Ordering::Release);
+    p.mkdir("/after", 0o755).unwrap();
+    assert!(metrics.failovers() >= 1, "the dead primary must have been failed over");
+
+    let failed_attempt = agent
+        .tracer()
+        .snapshot()
+        .into_iter()
+        .find(|s| s.note.contains("failover"))
+        .expect("the failed attempt must be annotated");
+    let spans = whole_trace(&agent, &[&s], failed_attempt.trace_id);
+    assert_single_tree(&spans);
+    assert!(
+        spans.iter().any(|sp| sp.server),
+        "the promoted retry must land a server span in the SAME trace: {spans:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Legacy interop
+// ---------------------------------------------------------------------------
+
+/// Wraps a real BServer but answers the `Traced` envelope the way a
+/// pre-telemetry binary's decoder would: protocol error on tag 42.
+struct LegacyServer {
+    inner: Arc<BServer>,
+    traced_seen: AtomicU64,
+}
+
+impl Service for LegacyServer {
+    fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Traced { .. } => {
+                self.traced_seen.fetch_add(1, Ordering::Relaxed);
+                Response::Err(FsError::Protocol("bad request tag 42".into()))
+            }
+            other => self.inner.handle(other),
+        }
+    }
+}
+
+#[test]
+fn legacy_peer_sticky_downgrades_tracing_without_erroring() {
+    let s = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    let legacy = Arc::new(LegacyServer { inner: s.clone(), traced_seen: AtomicU64::new(0) });
+    let metrics = Arc::new(RpcMetrics::new());
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let view = ClusterView::new(s.fs.root_ino());
+    view.add(0, 0, ChanTransport::new(legacy.clone(), net.clone(), metrics.clone()));
+    let agent = BAgent::new(1, view, metrics);
+    s.register_pusher(1, ChanNotify::new(agent.clone(), net));
+
+    assert!(agent.tracing_enabled());
+    let p = Buffet::process(agent.clone(), Credentials::root());
+    p.put("/t", b"payload").unwrap();
+    assert_eq!(p.get("/t", 64).unwrap(), b"payload");
+
+    assert!(!agent.tracing_enabled(), "the rejection must stick");
+    assert_eq!(agent.stats.trace_downgrades.load(Ordering::Relaxed), 1);
+    let seen = legacy.traced_seen.load(Ordering::Relaxed);
+    assert_eq!(seen, 1, "exactly one envelope probed the peer");
+    assert!(
+        agent.tracer().snapshot().iter().any(|sp| sp.note.contains("trace_downgrade")),
+        "the probe attempt must be annotated"
+    );
+
+    // downgraded for good: later ops never re-send the envelope
+    p.put("/t2", b"more").unwrap();
+    assert_eq!(p.get("/t2", 64).unwrap(), b"more");
+    assert_eq!(legacy.traced_seen.load(Ordering::Relaxed), seen);
+}
+
+// ---------------------------------------------------------------------------
+// Slow-op log vs ring overwrite, remote drain
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_overwrite_keeps_slow_ops_and_sec_slow_drains_them_remotely() {
+    let s = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    s.obs.trace.set_slow_threshold_us(100);
+    let slow = Span {
+        trace_id: 1,
+        span_id: 777,
+        parent: 0,
+        name: "slow-op".into(),
+        note: String::new(),
+        host: 0,
+        server: true,
+        start_us: 1,
+        dur_us: 5000,
+    };
+    s.obs.trace.record(slow);
+    for i in 0..(RING_CAP + 64) as u64 {
+        s.obs.trace.record(Span {
+            trace_id: 2,
+            span_id: 1000 + i,
+            parent: 0,
+            name: "fast".into(),
+            note: String::new(),
+            host: 0,
+            server: true,
+            start_us: 2 + i,
+            dur_us: 1,
+        });
+    }
+    assert!(s.obs.trace.trace(1).is_empty(), "the flood must have evicted the slow span");
+    assert_eq!(s.obs.trace.slow_len(), 1, "the slow log must have kept it");
+
+    match s.handle(Request::StatsFetch { sections: SEC_SLOW, trace_id: 0 }) {
+        Response::Stats { spans, .. } => {
+            assert!(spans.iter().any(|sp| sp.span_id == 777), "SEC_SLOW must return it");
+        }
+        other => panic!("stats fetch returned {other:?}"),
+    }
+    match s.handle(Request::StatsFetch { sections: SEC_SLOW, trace_id: 0 }) {
+        Response::Stats { spans, .. } => {
+            assert!(spans.is_empty(), "SEC_SLOW drains: a second fetch must come up empty");
+        }
+        other => panic!("stats fetch returned {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot reconciliation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn statsfetch_snapshot_reconciles_with_client_rpc_metrics() {
+    let cluster = fast_cluster(1);
+    let (agent, metrics) = cluster.make_agent();
+    let p = Buffet::process(agent, Credentials::root());
+    p.mkdir("/w", 0o755).unwrap();
+    for i in 0..3 {
+        p.put(&format!("/w/f{i}"), format!("body {i}").as_bytes()).unwrap();
+    }
+    assert_eq!(p.get("/w/f0", 64).unwrap(), b"body 0");
+    p.readdir("/w").unwrap();
+    p.stat("/w/f1").unwrap();
+    quiesce(&metrics);
+
+    let s = cluster.server(0).unwrap();
+    // wait for the last async closes to be dispatched server-side too
+    for _ in 0..200 {
+        if s.obs.dispatch_total() == metrics.total_rpcs() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(
+        s.obs.dispatch_total(),
+        metrics.total_rpcs(),
+        "every client RPC dispatches exactly once (Traced envelopes are never double-counted)"
+    );
+    for op in OPS {
+        assert_eq!(
+            s.obs.dispatch_count(op),
+            metrics.count(op),
+            "per-op reconciliation failed for {op}"
+        );
+    }
+
+    let expected_creates = s.obs.dispatch_count("create");
+    assert!(expected_creates >= 3);
+    match s.handle(Request::StatsFetch { sections: SEC_OPS | SEC_SERVER, trace_id: 0 }) {
+        Response::Stats { json, spans } => {
+            assert!(spans.is_empty(), "no span sections requested");
+            assert!(json.contains("\"host\":0"), "got {json}");
+            assert!(
+                json.contains(&format!("\"create\":{{\"n\":{expected_creates}")),
+                "ops section must carry the true create count: {json}"
+            );
+            assert!(json.contains("\"server\":{"), "got {json}");
+            assert!(json.contains("\"admission\":{\"sheds\":0}"), "got {json}");
+            assert!(!json.contains("\"replicate\""), "never-dispatched ops must be omitted: {json}");
+        }
+        other => panic!("stats fetch returned {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Storm acceptance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn open_storm_traces_stay_single_linked_trees() {
+    let cluster = fast_cluster(1);
+    let admin = {
+        let (agent, _) = cluster.make_agent();
+        Buffet::process(agent, Credentials::root())
+    };
+    admin.mkdir("/s", 0o755).unwrap();
+    for i in 0..32 {
+        admin.put(&format!("/s/f{i}"), format!("body {i}").as_bytes()).unwrap();
+    }
+
+    let (agent, _metrics) = cluster.make_agent();
+    std::thread::scope(|scope| {
+        for w in 0..4u32 {
+            let agent = agent.clone();
+            scope.spawn(move || {
+                let p = Buffet::with_pid(agent, 100 + w, Credentials::root());
+                for i in (w * 8)..(w * 8 + 8) {
+                    let fd = p.open(&format!("/s/f{i}"), OpenFlags::RDONLY).unwrap();
+                    assert_eq!(p.read(fd, 64).unwrap(), format!("body {i}").into_bytes());
+                    p.close(fd).unwrap();
+                }
+            });
+        }
+    });
+
+    let server = cluster.server(0).unwrap();
+    let roots: Vec<Span> = agent
+        .tracer()
+        .snapshot()
+        .into_iter()
+        .filter(|s| s.name == "open" && s.parent == 0)
+        .collect();
+    assert!(roots.len() >= 32, "every open records a root span, got {}", roots.len());
+    let mut with_server_half = 0;
+    for root in &roots {
+        let spans = whole_trace(&agent, &[&server], root.trace_id);
+        assert_single_tree(&spans);
+        if spans.iter().any(|s| s.server) {
+            with_server_half += 1;
+        }
+    }
+    assert!(
+        with_server_half >= 1,
+        "cold opens under the storm must link client and server halves"
+    );
+}
