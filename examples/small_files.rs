@@ -11,11 +11,21 @@
 //! Run:  `cargo run --release --example small_files -- [--scale 10] [--paper]`
 //! `--paper` = the full 100 000-file / 1000-access configuration.
 //! Results are recorded in EXPERIMENTS.md.
+//!
+//! A closing **ingest smoke** (skip with `--no-ingest`) runs the write
+//! side — an over-the-wire untar with metadata speculation off vs on
+//! (DESIGN.md §14) — reporting per-phase wall-clock and
+//! `metadata_rpcs()`.
 
+use buffetfs::agent::spec::SpecConfig;
+use buffetfs::api::Client;
 use buffetfs::baseline::{LustreCluster, LustreMode};
 use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::datapath::DatapathConfig;
 use buffetfs::harness::{print_fig4, BenchCfg, Fig4Row, Sut, SystemKind, ALL_SYSTEMS};
 use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::Credentials;
 use buffetfs::util::args::Args;
 use buffetfs::workload::{build_fileset_buffet, build_fileset_lustre, AccessStream, FileSetSpec};
 
@@ -124,5 +134,95 @@ fn main() {
     );
 
     std::fs::remove_dir_all(&tmp).ok();
+
+    if !args.flag("no-ingest") {
+        ingest_smoke();
+    }
     let _ = NetConfig::zero(); // keep import used under all feature combos
+}
+
+/// Ingest smoke (DESIGN.md §14): the same small-file shape, but the
+/// *write* side — an over-the-wire untar with metadata speculation off
+/// vs on, reporting wall-clock and `metadata_rpcs()` per phase. A quick
+/// echo of `ablation_spec`'s headline bars (≥2× wall-clock, ≥5× fewer
+/// critical-path metadata RPCs at 500 µs one-way); `--no-ingest` skips.
+fn ingest_smoke() {
+    const IN_FILES: usize = 256;
+    const IN_DIRS: usize = 16;
+    let wan = NetConfig { one_way_us: 500, per_kb_us: 2, jitter_us: 10, seed: 0x57EC };
+    let body = vec![0xab_u8; 4096];
+    println!(
+        "\ningest smoke: {IN_FILES} x 4 KiB files across {IN_DIRS} dirs at 500us one-way, \
+         speculation off vs on"
+    );
+    println!(
+        "{:<9} {:>8} {:>8} {:>9} | {:>8} {:>10} {:>8} {:>10}",
+        "run", "mkdir_s", "untar_s", "barrier_s", "mk_meta", "untar_meta", "bar_meta", "crit_meta"
+    );
+    let mut wall = [0.0_f64; 2];
+    let mut crit = [0_u64; 2];
+    for (slot, spec_on) in [(0_usize, false), (1, true)] {
+        let cluster =
+            BuffetCluster::spawn_with(1, wan, Backing::Mem, false, ServiceConfig::unbounded());
+        let (agent, metrics) = cluster.make_agent();
+        agent.enable_datapath(DatapathConfig::default());
+        if spec_on {
+            agent.enable_speculation(SpecConfig::default());
+        }
+        let client = Client::new(agent.clone(), Credentials::root());
+        let root = client.root().expect("root");
+        root.readdir().expect("warm root"); // decided cache → speculation live
+        let (m0, c0) = (metrics.metadata_rpcs(), metrics.count("close"));
+
+        let t = std::time::Instant::now();
+        let dirs: Vec<_> = (0..IN_DIRS)
+            .map(|d| root.mkdir(&format!("pkg{d:02}"), 0o755).expect("mkdir"))
+            .collect();
+        let mkdir_s = t.elapsed().as_secs_f64();
+        let m1 = metrics.metadata_rpcs();
+
+        let t = std::time::Instant::now();
+        for i in 0..IN_FILES {
+            let f = dirs[i % IN_DIRS].create(&format!("f{i:04}.dat"), 0o644).expect("create");
+            f.write(&body).expect("write");
+            f.close().expect("close");
+        }
+        let untar_s = t.elapsed().as_secs_f64();
+        let m2 = metrics.metadata_rpcs();
+
+        let t = std::time::Instant::now();
+        agent.spec_drain().expect("barrier"); // no-op when speculation is off
+        let barrier_s = t.elapsed().as_secs_f64();
+        loop {
+            // let in-flight async close wrap-ups land before counting
+            let n = metrics.total_rpcs();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            if metrics.total_rpcs() == n {
+                break;
+            }
+        }
+        let m3 = metrics.metadata_rpcs();
+
+        wall[slot] = mkdir_s + untar_s + barrier_s;
+        // asynchronous single-op closes never stall the untar: the
+        // critical-path count omits them, mirroring ablation_spec
+        crit[slot] = (m3 - m0) - (metrics.count("close") - c0);
+        println!(
+            "{:<9} {:>8.3} {:>8.3} {:>9.3} | {:>8} {:>10} {:>8} {:>10}",
+            if spec_on { "spec-on" } else { "spec-off" },
+            mkdir_s,
+            untar_s,
+            barrier_s,
+            m1 - m0,
+            m2 - m1,
+            m3 - m2,
+            crit[slot]
+        );
+    }
+    println!(
+        "ingest: {:.2}x wall-clock, {:.1}x fewer critical-path metadata RPCs \
+         (full sweep: cargo bench --bench ablation_spec)",
+        wall[0] / wall[1].max(1e-9),
+        crit[0] as f64 / crit[1].max(1) as f64
+    );
 }

@@ -1,0 +1,198 @@
+//! Speculation ablation (DESIGN.md §14): what metadata write-behind
+//! buys an untar-shaped workload at WAN latency.
+//!
+//! The workload is the paper's small-file nemesis: 1,000 × 4 KiB files
+//! unpacked across 32 directories over a 500 µs one-way link (1 ms
+//! RTT). Two seed-paired runs against fresh clusters:
+//!
+//! * **spec-off** — the baseline client (write-back data plane enabled,
+//!   so the comparison isolates *metadata* write-behind): every create
+//!   is a synchronous RPC, every close flushes its bytes in line.
+//! * **spec-on** — `enable_speculation`: creates/mkdirs acknowledge
+//!   locally, chains drain as one `MetaBatch` per directory, deferred
+//!   closes flush data 8-wide and batch their wrap-ups.
+//!
+//! Acceptance (the PR bar): spec-on must finish the untar at least 2×
+//! faster and issue at least 5× fewer critical-path metadata RPCs
+//! (metadata RPCs minus the asynchronous single-op closes).
+//!
+//! Results print as a table and land in `BENCH_spec.json`.
+//! `cargo bench --bench ablation_spec` (SPEC_SEED varies the simnet
+//! jitter schedule).
+
+use std::time::Instant;
+
+use buffetfs::agent::spec::SpecConfig;
+use buffetfs::api::Client;
+use buffetfs::cluster::{Backing, BuffetCluster};
+use buffetfs::datapath::DatapathConfig;
+use buffetfs::simnet::NetConfig;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::types::Credentials;
+
+const FILES: usize = 1000;
+const DIRS: usize = 32;
+const FILE_BYTES: usize = 4096;
+const ONE_WAY_US: u64 = 500;
+
+struct RunStats {
+    wall_s: f64,
+    meta_rpcs: u64,
+    crit_meta_rpcs: u64,
+    total_rpcs: u64,
+    spec_flushes: u64,
+    spec_queued: u64,
+    spec_elided: u64,
+}
+
+fn wan(seed: u64) -> NetConfig {
+    NetConfig { one_way_us: ONE_WAY_US, per_kb_us: 2, jitter_us: 10, seed }
+}
+
+/// Untar: 32 directory stanzas, each `mkdir` + its slice of the 1,000
+/// files (create → one 4 KiB write → close), tar's dir-major order.
+fn untar(seed: u64, spec: bool) -> RunStats {
+    let cluster =
+        BuffetCluster::spawn_with(1, wan(seed), Backing::Mem, false, ServiceConfig::unbounded());
+    let (agent, metrics) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig::default());
+    if spec {
+        agent.enable_speculation(SpecConfig::default());
+    }
+    let client = Client::new(agent.clone(), Credentials::root());
+    let root = client.root().expect("root");
+    root.readdir().expect("warm root"); // decided cache → speculation live
+    let meta0 = metrics.metadata_rpcs();
+    let close0 = metrics.count("close");
+    let total0 = metrics.total_rpcs();
+    let body = vec![0x5a_u8; FILE_BYTES];
+
+    let t0 = Instant::now();
+    for d in 0..DIRS {
+        let dir = root.mkdir(&format!("pkg{d}"), 0o755).expect("mkdir");
+        let lo = FILES * d / DIRS;
+        let hi = FILES * (d + 1) / DIRS;
+        for i in lo..hi {
+            let f = dir.create(&format!("src{i}.c"), 0o644).expect("create");
+            f.write(&body).expect("write");
+            f.close().expect("close");
+        }
+    }
+    if spec {
+        agent.spec_drain().expect("drain");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let meta_rpcs = metrics.metadata_rpcs() - meta0;
+    // single-op closes are asynchronous (fire-and-forget) in BuffetFS:
+    // they never stall the untar, so the critical-path count omits them
+    let crit_meta_rpcs = meta_rpcs - (metrics.count("close") - close0);
+    RunStats {
+        wall_s,
+        meta_rpcs,
+        crit_meta_rpcs,
+        total_rpcs: metrics.total_rpcs() - total0,
+        spec_flushes: metrics.count("specflush"),
+        spec_queued: metrics.spec_queued(),
+        spec_elided: metrics.spec_elided(),
+    }
+}
+
+fn verify(seed: u64) {
+    // correctness spot-check on a fresh spec-on run: every file lands
+    let cluster =
+        BuffetCluster::spawn_with(1, NetConfig::zero(), Backing::Mem, false, ServiceConfig::unbounded());
+    let (agent, _m) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig::default());
+    agent.enable_speculation(SpecConfig::default());
+    let client = Client::new(agent.clone(), Credentials::root());
+    let root = client.root().expect("root");
+    root.readdir().expect("warm");
+    let dir = root.mkdir("pkg", 0o755).expect("mkdir");
+    for i in 0..64 {
+        let f = dir.create(&format!("f{i}"), 0o644).expect("create");
+        f.write(format!("file {i} seed {seed}").as_bytes()).expect("write");
+        f.close().expect("close");
+    }
+    agent.spec_drain().expect("drain");
+    let (a2, _m2) = cluster.make_agent();
+    let c2 = Client::new(a2, Credentials::root());
+    let listing = c2.root().expect("root").open_dir("pkg").expect("open").readdir().expect("ls");
+    assert_eq!(listing.len(), 64, "spec-on untar must land every file");
+}
+
+fn main() {
+    let seed: u64 =
+        std::env::var("SPEC_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x57EC);
+    println!(
+        "speculation ablation: untar {FILES} x {FILE_BYTES}B files across {DIRS} dirs, \
+         one_way {ONE_WAY_US}us, seed {seed:#x}"
+    );
+    verify(seed);
+
+    let off = untar(seed, false);
+    let on = untar(seed, true);
+    println!(
+        "\n{:<9} {:>9} {:>11} {:>11} {:>10} {:>10} {:>9} {:>9}",
+        "run", "wall_s", "meta_rpcs", "crit_meta", "total_rpc", "specflush", "queued", "elided"
+    );
+    for (name, r) in [("spec-off", &off), ("spec-on", &on)] {
+        println!(
+            "{:<9} {:>9.3} {:>11} {:>11} {:>10} {:>10} {:>9} {:>9}",
+            name,
+            r.wall_s,
+            r.meta_rpcs,
+            r.crit_meta_rpcs,
+            r.total_rpcs,
+            r.spec_flushes,
+            r.spec_queued,
+            r.spec_elided
+        );
+    }
+    let speedup = if on.wall_s > 0.0 { off.wall_s / on.wall_s } else { f64::INFINITY };
+    let rpc_ratio = if on.crit_meta_rpcs > 0 {
+        off.crit_meta_rpcs as f64 / on.crit_meta_rpcs as f64
+    } else {
+        f64::INFINITY
+    };
+    let pass = speedup >= 2.0 && rpc_ratio >= 5.0;
+    println!(
+        "\nspeedup {speedup:.2}x, critical-path metadata RPC reduction {rpc_ratio:.1}x — \
+         acceptance (>=2x wall, >=5x fewer RPCs): {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"spec\",\n  \"seed\": {seed},\n  \"files\": {FILES},\n  \
+         \"dirs\": {DIRS},\n  \"file_bytes\": {FILE_BYTES},\n  \"one_way_us\": {ONE_WAY_US},\n  \
+         \"spec_off\": {{ \"wall_s\": {:.4}, \"meta_rpcs\": {}, \"crit_meta_rpcs\": {}, \
+         \"total_rpcs\": {} }},\n  \
+         \"spec_on\": {{ \"wall_s\": {:.4}, \"meta_rpcs\": {}, \"crit_meta_rpcs\": {}, \
+         \"total_rpcs\": {}, \"spec_flushes\": {}, \"spec_queued\": {}, \"spec_elided\": {} }},\n  \
+         \"speedup\": {speedup:.3},\n  \"crit_meta_rpc_ratio\": {rpc_ratio:.3},\n  \
+         \"acceptance_2x_wall_5x_rpc\": {pass}\n}}\n",
+        off.wall_s,
+        off.meta_rpcs,
+        off.crit_meta_rpcs,
+        off.total_rpcs,
+        on.wall_s,
+        on.meta_rpcs,
+        on.crit_meta_rpcs,
+        on.total_rpcs,
+        on.spec_flushes,
+        on.spec_queued,
+        on.spec_elided,
+    );
+    match std::fs::write("BENCH_spec.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_spec.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_spec.json: {e}"),
+    }
+    assert!(
+        speedup >= 2.0,
+        "speculation must at least halve the untar wall-clock, got {speedup:.2}x"
+    );
+    assert!(
+        rpc_ratio >= 5.0,
+        "speculation must cut critical-path metadata RPCs >=5x, got {rpc_ratio:.1}x"
+    );
+}

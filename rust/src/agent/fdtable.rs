@@ -106,6 +106,22 @@ impl FdTable {
         self.procs.remove(&pid).map(|c| c.fds.into_values().collect()).unwrap_or_default()
     }
 
+    /// Rewrite every handle on `old` to point at `new`: a speculated
+    /// create materialized and the server assigned the real ino
+    /// (DESIGN.md §14). Returns how many handles moved.
+    pub fn remap_ino(&mut self, old: Ino, new: Ino) -> usize {
+        let mut n = 0;
+        for ctx in self.procs.values_mut() {
+            for fh in ctx.fds.values_mut() {
+                if fh.ino == old {
+                    fh.ino = new;
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
     pub fn open_count(&self, pid: Pid) -> usize {
         self.procs.get(&pid).map_or(0, |c| c.fds.len())
     }

@@ -31,6 +31,7 @@
 
 pub mod cache;
 pub mod fdtable;
+pub mod spec;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -113,6 +114,10 @@ fn retry_safe(req: &Request) -> bool {
             | Request::ReadDirAt { .. }
             | Request::ReadBatch { .. }
             | Request::PlacementFetch { .. }
+            // every item carries its own exactly-once op_id against the
+            // server's dedup ledger, so the whole batch is blind-retry
+            // safe without a Stamped envelope (DESIGN.md §14)
+            | Request::MetaBatch { .. }
     )
 }
 
@@ -209,6 +214,10 @@ pub struct BAgent {
     tracing: AtomicBool,
     /// Client-side span sink (DESIGN.md §13): one ring per agent.
     tracer: Arc<crate::obs::Recorder>,
+    /// Speculative metadata write-behind (DESIGN.md §14). Off until
+    /// [`BAgent::enable_speculation`] — synchronous per-op RPCs stay
+    /// the default.
+    spec: spec::SpecState,
     pub stats: AgentStats,
 }
 
@@ -235,6 +244,7 @@ impl BAgent {
             placement: PlacementCache::new(),
             tracing: AtomicBool::new(true),
             tracer,
+            spec: spec::SpecState::new(),
             stats: AgentStats::default(),
         })
     }
@@ -629,6 +639,16 @@ impl BAgent {
         dname: &str,
         cred: &Credentials,
     ) -> FsResult<()> {
+        // a synchronous rename depends on everything speculated under
+        // either directory: materialize provisional dirs, flush chains
+        let snode = self.spec_resolve_ino(snode)?;
+        let dnode = self.spec_resolve_ino(dnode)?;
+        if self.spec_dir_pending(snode) {
+            self.spec_barrier_dir(snode)?;
+        }
+        if dnode != snode && self.spec_dir_pending(dnode) {
+            self.spec_barrier_dir(dnode)?;
+        }
         if snode.host != dnode.host {
             return Err(FsError::Invalid("cross-server rename unsupported".into()));
         }
@@ -743,6 +763,12 @@ impl BAgent {
             if let Some(p) = self.cache.dir_perm_if_listed(dir) {
                 return Ok(p);
             }
+            if spec::is_provisional(dir) {
+                // a speculative dir's listing is client-authored truth —
+                // rebuild it locally; its ino must never reach the wire
+                self.spec_reinstall_dir(dir)?;
+                continue;
+            }
             // fetch the whole directory: entries + blobs, and register for
             // invalidations (§3.4). If an invalidation lands while the fetch
             // is in flight the listing is untrusted — drop it and refetch.
@@ -772,6 +798,12 @@ impl BAgent {
     fn prime_dir(&self, dir: Ino, lookahead: &[&str], cred: &Credentials) -> FsResult<PermBlob> {
         if let Some(p) = self.cache.dir_perm_if_listed(dir) {
             return Ok(p);
+        }
+        if spec::is_provisional(dir) {
+            // speculative dir: no server knows it yet — reinstall the
+            // client-authored listing instead of fetching
+            self.spec_reinstall_dir(dir)?;
+            return self.cache.dir_perm_if_listed(dir).ok_or(FsError::CacheInvalidated);
         }
         if self.batched_enabled() {
             match self.resolve_path_rpc(dir, lookahead, cred) {
@@ -816,6 +848,12 @@ impl BAgent {
                 ChildLookup::Found(e) => return Ok(e),
                 ChildLookup::NoSuchEntry => return Err(FsError::NotFound),
                 ChildLookup::DirNotCached => {}
+            }
+            if spec::is_provisional(dir) {
+                // never fetch a speculative dir over the wire: rebuild
+                // its client-authored listing and decide locally
+                self.spec_reinstall_dir(dir)?;
+                continue;
             }
             if self.batched_enabled() {
                 match self.resolve_path_rpc(dir, rest, cred) {
@@ -948,33 +986,42 @@ impl BAgent {
         cred: &Credentials,
         incomplete: bool,
     ) -> FsResult<Fd> {
+        let mut ino = leaf.ino;
         let mut offset = 0;
         let mut size_hint = 0;
         if flags.append {
             // O_APPEND needs the current size (one GetAttr round trip —
-            // outside the paper's measured workloads)
-            let resp = self.call_ino(leaf.ino, Request::GetAttr { ino: leaf.ino })?;
+            // outside the paper's measured workloads). A provisional ino
+            // must materialize first: GetAttr crosses the wire.
+            ino = self.spec_resolve_ino(ino)?;
+            let resp = self.call_ino(ino, Request::GetAttr { ino })?;
             if let Response::AttrR(a) = resp {
                 offset = a.size;
                 size_hint = a.size;
             }
         }
         if flags.truncate {
-            self.call_ino(leaf.ino, Request::Truncate {
-                ino: leaf.ino,
-                size: 0,
-                cred: cred.clone(),
-            })?;
-            // drop the data plane's view too, or buffered write-back
-            // extents from an earlier fd would resurrect truncated bytes
-            self.datapath.truncate_local(leaf.ino, 0);
+            if spec::is_provisional(ino) {
+                // a speculated file's bytes live only in the local
+                // write-back buffers: truncating them needs no RPC
+                self.datapath.truncate_local(ino, 0);
+            } else {
+                self.call_ino(ino, Request::Truncate {
+                    ino,
+                    size: 0,
+                    cred: cred.clone(),
+                })?;
+                // drop the data plane's view too, or buffered write-back
+                // extents from an earlier fd would resurrect truncated bytes
+                self.datapath.truncate_local(ino, 0);
+            }
             offset = 0;
             size_hint = 0;
         }
         self.install_fd(
             pid,
             FileHandle {
-                ino: leaf.ino,
+                ino,
                 flags,
                 offset,
                 incomplete,
@@ -993,14 +1040,22 @@ impl BAgent {
     /// Install a fully-formed file handle into the fd table (lowest
     /// closed fd reused; `TooManyOpenFiles` past the per-pid cap).
     pub fn install_fd(&self, pid: Pid, fh: FileHandle) -> FsResult<Fd> {
+        if spec::is_provisional(fh.ino) {
+            // an open fd pins the speculation (blocks create+unlink elision)
+            self.spec_note_open(fh.ino);
+        }
         self.fds.lock().unwrap().open(pid, fh)
     }
 
     /// ftruncate(2): truncate through an open (writable) fd.
     pub fn ftruncate(&self, pid: Pid, fd: Fd, size: u64) -> FsResult<()> {
-        let h = self.snapshot_handle(pid, fd)?;
+        let mut h = self.snapshot_handle(pid, fd)?;
         if !h.flags.write && !h.flags.append && !h.flags.truncate {
             return Err(FsError::PermissionDenied);
+        }
+        // Truncate crosses the wire: materialize a speculated file first
+        if let Some(h2) = self.spec_reify(&h)? {
+            h = h2;
         }
         self.call_ino(h.ino, Request::Truncate {
             ino: h.ino,
@@ -1028,6 +1083,16 @@ impl BAgent {
             self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
+        // speculate: acknowledge locally, flush as part of the dir's chain
+        if let Some(entry) =
+            self.spec_create_at(parent.leaf.ino, name, 0o644, FileKind::Regular, cred)?
+        {
+            let mut chain = parent.chain.clone();
+            chain.push(entry.perm);
+            return Ok(Resolved { leaf: entry, chain, parent: parent.leaf.ino });
+        }
+        // synchronous fallback: barrier first so chain order is preserved
+        self.spec_barrier_dir(parent.leaf.ino)?;
         let resp = self.relative_call("create", parent.leaf.ino, cred, |lease| Request::CreateAt {
             lease,
             name: name.to_string(),
@@ -1185,6 +1250,16 @@ impl BAgent {
     /// cache-served read leaves the open incomplete (and the server
     /// unbothered), so close stays zero-RPC too.
     fn read_at_dispatch(&self, h: &FileHandle, off: u64, len: u32) -> FsResult<(Vec<u8>, bool)> {
+        // a read may miss the local buffers and RPC, and provisional inos
+        // never cross the wire: materialize the speculated create first
+        let reified;
+        let h = match self.spec_reify(h)? {
+            Some(h2) => {
+                reified = h2;
+                &reified
+            }
+            None => h,
+        };
         if self.datapath.active(h.flags) {
             self.datapath.read(self, h, off, len)
         } else {
@@ -1263,6 +1338,17 @@ impl BAgent {
     /// write-through case still drops the file's cached pages so later
     /// reads refetch under the bumped generation).
     fn write_at_dispatch(&self, h: &FileHandle, off: u64, data: &[u8]) -> FsResult<(u32, u64, bool)> {
+        // writes to a speculated file stay entirely local while they fit
+        // the write-back buffer; anything that would RPC materializes the
+        // create first (provisional inos never cross the wire)
+        let reified;
+        let h = match self.spec_gate_write(h, data.len())? {
+            Some(h2) => {
+                reified = h2;
+                &reified
+            }
+            None => h,
+        };
         if self.datapath.active(h.flags) && self.datapath.writeback_enabled() {
             self.datapath.write(self, h, off, data)
         } else {
@@ -1296,7 +1382,12 @@ impl BAgent {
     /// write path is already synchronous.
     pub fn fsync(&self, pid: Pid, fd: Fd) -> FsResult<()> {
         let _span = self.op_span("fsync");
-        let h = self.snapshot_handle(pid, fd)?;
+        let mut h = self.snapshot_handle(pid, fd)?;
+        // fsync is a speculation barrier: the defining chain flushes and
+        // any latched failure of this file's create surfaces HERE
+        if let Some(h2) = self.spec_reify(&h)? {
+            h = h2;
+        }
         // only writable fds flush: a read-only fd must neither attach
         // its (read-only) open context to a WriteBatch nor break another
         // fd's in-progress write coalescing
@@ -1327,6 +1418,13 @@ impl BAgent {
     }
 
     fn finish_close(&self, h: FileHandle) -> FsResult<()> {
+        // a speculation-born file still under its provisional identity:
+        // the wrap-up rides the chain flush as a batched Close item (or,
+        // when the speculation already failed, close is the barrier that
+        // surfaces the latched error)
+        if let Some(r) = self.spec_defer_close(&h) {
+            return r;
+        }
         let mut incomplete = h.incomplete;
         let mut flush_err = None;
         // writable fds only — closing a read-only peek of a file another
@@ -1389,7 +1487,14 @@ impl BAgent {
                 other => Err(FsError::Protocol(format!("getattr returned {other:?}"))),
             };
         }
-        let resp = self.relative_call("getattr", r.parent, cred, |lease| Request::StatAt {
+        // stat asks the server by name: a dependent sync op. Flush any
+        // speculation on the parent first so the answer reflects program
+        // order (and a provisional parent gains its real identity).
+        if spec::is_provisional(r.leaf.ino) || self.spec_dir_pending(r.parent) {
+            self.spec_barrier_dir(r.parent)?;
+        }
+        let parent = self.spec_resolve_ino(r.parent)?;
+        let resp = self.relative_call("getattr", parent, cred, |lease| Request::StatAt {
             lease,
             name: r.leaf.name.clone(),
             cred: cred.clone(),
@@ -1411,8 +1516,13 @@ impl BAgent {
             self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
-        self.prime_dir(r.leaf.ino, &[], cred)?;
-        let mut out = match self.cache.listing(r.leaf.ino) {
+        // readdir is a speculation barrier: flush this directory's chain
+        // and surface, exactly once, any failure speculated under it —
+        // after which the (now real) listing includes every survivor
+        self.spec_barrier_dir(r.leaf.ino)?;
+        let dir = self.spec_resolve_ino(r.leaf.ino)?;
+        self.prime_dir(dir, &[], cred)?;
+        let mut out = match self.cache.listing(dir) {
             Some(entries) => entries,
             None => return Err(FsError::CacheInvalidated),
         };
@@ -1428,6 +1538,12 @@ impl BAgent {
             self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
+        // speculate: acknowledge locally, flush as part of the dir's chain
+        if let Some(e) = self.spec_create_at(parent.leaf.ino, name, mode, FileKind::Directory, cred)? {
+            return Ok(e);
+        }
+        // synchronous fallback: barrier first so chain order is preserved
+        self.spec_barrier_dir(parent.leaf.ino)?;
         let resp = self.relative_call("mkdir", parent.leaf.ino, cred, |lease| Request::MkdirAt {
             lease,
             name: name.to_string(),
@@ -1451,6 +1567,12 @@ impl BAgent {
             self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
+        // speculate: acknowledge locally, flush as part of the dir's chain
+        if let Some(e) = self.spec_create_at(parent.leaf.ino, name, mode, FileKind::Regular, cred)? {
+            return Ok(e);
+        }
+        // synchronous fallback: barrier first so chain order is preserved
+        self.spec_barrier_dir(parent.leaf.ino)?;
         let resp = self.relative_call("create", parent.leaf.ino, cred, |lease| Request::CreateAt {
             lease,
             name: name.to_string(),
@@ -1471,6 +1593,12 @@ impl BAgent {
     pub fn unlink(&self, path: &str, cred: &Credentials) -> FsResult<()> {
         let _span = self.op_span("unlink");
         let (parent, name) = self.resolve_parent(path, cred)?;
+        // speculate (and elide entirely when it cancels a still-queued
+        // speculative create of the same name)
+        if self.spec_unlink_at(parent.leaf.ino, name, false, cred)?.is_some() {
+            return Ok(());
+        }
+        self.spec_barrier_dir(parent.leaf.ino)?;
         self.relative_call("unlink", parent.leaf.ino, cred, |lease| Request::UnlinkAt {
             lease,
             name: name.to_string(),
@@ -1483,6 +1611,10 @@ impl BAgent {
     pub fn rmdir(&self, path: &str, cred: &Credentials) -> FsResult<()> {
         let _span = self.op_span("rmdir");
         let (parent, name) = self.resolve_parent(path, cred)?;
+        if self.spec_unlink_at(parent.leaf.ino, name, true, cred)?.is_some() {
+            return Ok(());
+        }
+        self.spec_barrier_dir(parent.leaf.ino)?;
         self.relative_call("rmdir", parent.leaf.ino, cred, |lease| Request::RmdirAt {
             lease,
             name: name.to_string(),
@@ -1498,8 +1630,10 @@ impl BAgent {
         // the chmod RPC goes to the server *owning the inode* (§3.2);
         // that server runs the §3.4 invalidation barrier (which will call
         // back into this agent's NotifySink — no cache lock is held here)
-        self.call_ino(r.leaf.ino, Request::Chmod {
-            ino: r.leaf.ino,
+        // chmod crosses the wire by ino: materialize a speculated file
+        let ino = self.spec_resolve_ino(r.leaf.ino)?;
+        self.call_ino(ino, Request::Chmod {
+            ino,
             mode,
             cred: cred.clone(),
         })?;
@@ -1509,8 +1643,9 @@ impl BAgent {
     pub fn chown(&self, path: &str, uid: u32, gid: u32, cred: &Credentials) -> FsResult<()> {
         let _span = self.op_span("chown");
         let r = self.resolve(path, cred)?;
-        self.call_ino(r.leaf.ino, Request::Chown {
-            ino: r.leaf.ino,
+        let ino = self.spec_resolve_ino(r.leaf.ino)?;
+        self.call_ino(ino, Request::Chown {
+            ino,
             uid,
             gid,
             cred: cred.clone(),
@@ -1522,6 +1657,12 @@ impl BAgent {
         let _span = self.op_span("rename");
         let (sparent, sname) = self.resolve_parent(src, cred)?;
         let (dparent, dname) = self.resolve_parent(dst, cred)?;
+        // same-directory renames join the dir's speculation chain
+        if sparent.leaf.ino == dparent.leaf.ino
+            && self.spec_rename_at(sparent.leaf.ino, sname, dname, cred)?.is_some()
+        {
+            return Ok(());
+        }
         self.rename_at_nodes(sparent.leaf.ino, sname, dparent.leaf.ino, dname, cred)
     }
 
@@ -1533,12 +1674,13 @@ impl BAgent {
             self.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
-        self.call_ino(r.leaf.ino, Request::Truncate {
-            ino: r.leaf.ino,
+        let ino = self.spec_resolve_ino(r.leaf.ino)?;
+        self.call_ino(ino, Request::Truncate {
+            ino,
             size,
             cred: cred.clone(),
         })?;
-        self.datapath.truncate_local(r.leaf.ino, size);
+        self.datapath.truncate_local(ino, size);
         Ok(())
     }
 }

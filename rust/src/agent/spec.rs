@@ -1,0 +1,1188 @@
+//! Client-side speculative metadata write-behind (DESIGN.md §14).
+//!
+//! With speculation enabled, `create`/`mkdir`/`unlink`/`rmdir` and
+//! same-directory `rename` acknowledge **locally** after validating
+//! against the cached directory state (the same state the paper's
+//! local permission check trusts), and the mutation is queued into a
+//! per-directory dependency-ordered chain. Chains drain as ONE
+//! [`Request::MetaBatch`] RPC per directory — applied atomically under
+//! the server's directory lock, exactly-once per item through the same
+//! dedup ledger `Stamped` envelopes use — so an untar-shaped burst of N
+//! metadata mutations costs ~1 critical-path RPC per directory instead
+//! of N.
+//!
+//! The speculated state is self-consistent before the server ever
+//! hears about it: a speculatively created file carries a client-
+//! assigned *provisional* inode (high bit of the fileID set), is
+//! inserted into the directory cache (so `readdir` sees it and a
+//! sibling `open` resolves it with zero RPCs), and buffers write-back
+//! data under that provisional identity. An `unlink` of a still-
+//! unflushed speculative create *elides both* ops — neither ever
+//! reaches the wire.
+//!
+//! Provisional inodes never cross the wire: any operation that must
+//! talk to the server about one (read, fsync, append-open, chmod, a
+//! sync fallback on the same directory) first **materializes** it by
+//! flushing the defining chain, which remaps the provisional ino to
+//! the server-assigned one everywhere it is held (fd table, data-plane
+//! buffers, directory cache).
+//!
+//! Failure semantics: the server applies a batch in dependency order
+//! and stops at the first failure. The failed op and everything queued
+//! after it in that chain (plus any chains rooted in a rolled-back
+//! speculative directory) are rolled back — cache entries reverted —
+//! and the error is latched, surfacing **exactly once** at the next
+//! barrier on that directory: `readdir`, `fsync`/`close` of an
+//! affected file, a dependent synchronous op, or an explicit
+//! [`BAgent::spec_drain`].
+//!
+//! Talking to a pre-§14 server downgrades stickily (the familiar
+//! protocol-downgrade pattern): the queued chain replays as sequential
+//! per-op relative calls and speculation turns itself off.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::agent::cache::ChildLookup;
+use crate::agent::fdtable::FileHandle;
+use crate::agent::BAgent;
+use crate::error::{FsError, FsResult};
+use crate::perm;
+use crate::types::{AccessMask, Credentials, DirEntry, FileId, FileKind, Ino, PermBlob, W_OK, X_OK};
+use crate::wire::{BatchItem, BatchOp, Request, Response};
+
+use super::MAX_LEASE_RETRIES;
+
+/// High bit of the fileID marks a client-assigned provisional inode —
+/// the identity a speculated create/mkdir lives under until its chain
+/// flushes. Servers allocate fileIDs sequentially from 1, so the bit
+/// can never collide with a real file.
+pub const PROV_BIT: FileId = 1 << 63;
+
+/// Is this a client-assigned provisional inode (not yet materialized)?
+pub fn is_provisional(ino: Ino) -> bool {
+    ino.file & PROV_BIT != 0
+}
+
+/// Concurrency of the deferred-close data flush: this many files flush
+/// their write-back extents in parallel when a chain's closes drain.
+const FLUSH_WAYS: usize = 8;
+
+/// Knobs for the speculation layer (mirrors [`crate::datapath::DatapathConfig`]
+/// in spirit: opt-in per agent, defaults chosen for the paper's workloads).
+#[derive(Clone, Copy, Debug)]
+pub struct SpecConfig {
+    /// Flush a directory's chain when it reaches this many queued ops
+    /// (bounds both client memory and the server's per-batch lock hold).
+    pub max_batch: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> SpecConfig {
+        SpecConfig { max_batch: 128 }
+    }
+}
+
+/// One queued speculative mutation.
+struct SpecEntry {
+    /// Exactly-once identity, same id space as `Stamped` envelopes —
+    /// allocated at enqueue so the acknowledged low-water mark cannot
+    /// advance past an unflushed speculation.
+    op_id: u64,
+    op: BatchOp,
+    /// Provisional ino this op defined (Create/Mkdir).
+    prov: Option<Ino>,
+    /// Cache entry the op installed (Create/Mkdir/Rename destination)
+    /// — replayed when a raced listing refetch drops the overlay.
+    post: Option<DirEntry>,
+    /// Cache entry the op displaced (Unlink/Rmdir/Rename source) —
+    /// reinstated on rollback.
+    undo: Option<DirEntry>,
+}
+
+/// A directory's pending chain: dependency order is vector order.
+struct Chain {
+    /// All ops of one chain share a credential (the server checks the
+    /// batch's dir access once); a different-cred mutation flushes the
+    /// chain first.
+    cred: Credentials,
+    entries: Vec<SpecEntry>,
+    /// Deferred closes of speculation-born files: the wrap-up rides the
+    /// flush as `BatchOp::Close` items (or is elided when the open
+    /// never reached the server at all).
+    closes: Vec<FileHandle>,
+}
+
+impl Chain {
+    fn is_empty(&self) -> bool {
+        self.entries.is_empty() && self.closes.is_empty()
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Directory node → its pending chain. Keys may themselves be
+    /// provisional (ops under a not-yet-flushed mkdir); such a chain is
+    /// re-keyed to the real ino when the parent chain materializes it.
+    chains: HashMap<Ino, Chain>,
+    /// Provisional ino → the directory whose chain defines it. Kept
+    /// after rollback (maps to the latched-error dir); removed on
+    /// successful remap.
+    prov_dir: HashMap<Ino, Ino>,
+    /// Provisional ino → server-assigned ino, filled at flush.
+    prov_real: HashMap<Ino, Ino>,
+    /// Perm blobs of speculative directories, for reinstalling their
+    /// cached (overlay-built) listing after a raced eviction.
+    prov_dirs: HashMap<Ino, PermBlob>,
+    /// First flush failure per directory, awaiting its barrier.
+    errors: HashMap<Ino, FsError>,
+    /// Open fd count per provisional ino (an open fd blocks elision).
+    open_fds: HashMap<Ino, u32>,
+}
+
+/// Per-agent speculation state. Off until [`BAgent::enable_speculation`].
+pub(crate) struct SpecState {
+    on: AtomicBool,
+    /// Sticky protocol downgrade: a server rejected wire tag 43.
+    downgraded: AtomicBool,
+    cfg: Mutex<SpecConfig>,
+    prov_seq: AtomicU64,
+    inner: Mutex<Inner>,
+    /// Serializes whole-chain flushes so dependent chains drain in
+    /// definition order even under concurrent barriers.
+    flush_gate: Mutex<()>,
+}
+
+impl SpecState {
+    pub(crate) fn new() -> SpecState {
+        SpecState {
+            on: AtomicBool::new(false),
+            downgraded: AtomicBool::new(false),
+            cfg: Mutex::new(SpecConfig::default()),
+            prov_seq: AtomicU64::new(1),
+            inner: Mutex::new(Inner::default()),
+            flush_gate: Mutex::new(()),
+        }
+    }
+}
+
+impl BAgent {
+    /// Turn on speculative metadata write-behind with the given knobs
+    /// (opt-in per agent, like [`BAgent::enable_datapath`]).
+    pub fn enable_speculation(&self, cfg: SpecConfig) {
+        *self.spec.cfg.lock().unwrap() = cfg;
+        self.spec.downgraded.store(false, Ordering::Release);
+        self.spec.on.store(true, Ordering::Release);
+    }
+
+    /// Drain everything queued, then turn speculation off. Returns the
+    /// first latched failure, like any barrier.
+    pub fn disable_speculation(&self) -> FsResult<()> {
+        let r = self.spec_drain();
+        self.spec.on.store(false, Ordering::Release);
+        r
+    }
+
+    /// Is speculation live (enabled and not protocol-downgraded)?
+    pub fn speculation_enabled(&self) -> bool {
+        self.spec.on.load(Ordering::Acquire) && !self.spec.downgraded.load(Ordering::Acquire)
+    }
+
+    /// Queued-but-unflushed speculative ops (tests / diagnostics).
+    pub fn spec_pending_ops(&self) -> usize {
+        let inner = self.spec.inner.lock().unwrap();
+        inner.chains.values().map(|c| c.entries.len() + c.closes.len()).sum()
+    }
+
+    /// Does `dir` have a pending chain?
+    pub fn spec_dir_pending(&self, dir: Ino) -> bool {
+        let key = self.spec_live_ino(dir);
+        self.spec.inner.lock().unwrap().chains.get(&key).is_some_and(|c| !c.is_empty())
+    }
+
+    /// The live identity of an ino: the server-assigned one if a
+    /// provisional ino has been materialized, the input otherwise.
+    /// Never flushes.
+    pub fn spec_live_ino(&self, ino: Ino) -> Ino {
+        if !is_provisional(ino) {
+            return ino;
+        }
+        self.spec.inner.lock().unwrap().prov_real.get(&ino).copied().unwrap_or(ino)
+    }
+
+    fn spec_downgrade(&self) {
+        if !self.spec.downgraded.swap(true, Ordering::AcqRel) {
+            self.tracer.event("spec_downgrade", "specflush", self.id, false);
+        }
+    }
+
+    // -- enqueue --------------------------------------------------------------
+
+    /// Speculate a create (`kind: Regular`) or mkdir (`kind: Directory`)
+    /// of `name` under `dir`. The caller must already have validated
+    /// W|X on `dir` locally (every call site does — it is the paper's
+    /// local check). Returns:
+    ///
+    /// * `Ok(Some(entry))` — acknowledged locally; `entry.ino` is
+    ///   provisional, the cache already serves it.
+    /// * `Ok(None)` — not speculable (cache undecided, speculation off)
+    ///   → caller runs the synchronous path, after a chain barrier.
+    /// * `Err(AlreadyExists)` — the cached listing is decisive.
+    pub fn spec_create_at(
+        &self,
+        dir: Ino,
+        name: &str,
+        mode: u16,
+        kind: FileKind,
+        cred: &Credentials,
+    ) -> FsResult<Option<DirEntry>> {
+        if !self.speculation_enabled() {
+            return Ok(None);
+        }
+        if !self.spec_decide_name(dir, name, cred)? {
+            return Ok(None);
+        }
+        match self.cache.child(dir, name) {
+            ChildLookup::Found(_) => return Err(FsError::AlreadyExists),
+            ChildLookup::NoSuchEntry => {}
+            ChildLookup::DirNotCached => return Ok(None),
+        }
+        loop {
+            let mut inner = self.spec.inner.lock().unwrap();
+            if let Some(c) = inner.chains.get(&dir) {
+                if c.cred.uid != cred.uid || c.cred.gid != cred.gid {
+                    drop(inner);
+                    // a different credential: the server checks batch
+                    // access once, so the old chain flushes first
+                    self.spec_flush_dir(dir);
+                    continue;
+                }
+            }
+            let op_id = self.begin_op();
+            let prov = Ino::new(
+                dir.host,
+                0,
+                PROV_BIT | self.spec.prov_seq.fetch_add(1, Ordering::Relaxed),
+            );
+            let perm = PermBlob::new(mode, cred.uid, cred.gid);
+            let entry = DirEntry { name: name.to_string(), ino: prov, kind, perm };
+            let op = match kind {
+                FileKind::Directory => BatchOp::Mkdir { name: name.to_string(), mode },
+                _ => BatchOp::Create { name: name.to_string(), mode, kind },
+            };
+            let chain = inner.chains.entry(dir).or_insert_with(|| Chain {
+                cred: cred.clone(),
+                entries: Vec::new(),
+                closes: Vec::new(),
+            });
+            chain.entries.push(SpecEntry {
+                op_id,
+                op,
+                prov: Some(prov),
+                post: Some(entry.clone()),
+                undo: None,
+            });
+            let full = chain.entries.len() >= self.spec.cfg.lock().unwrap().max_batch;
+            inner.prov_dir.insert(prov, dir);
+            if kind == FileKind::Directory {
+                inner.prov_dirs.insert(prov, perm);
+            }
+            drop(inner);
+            self.metrics.record_spec_queued();
+            self.cache.insert_entry(dir, entry.clone());
+            if kind == FileKind::Directory {
+                // make the speculative dir immediately usable: an empty
+                // listing, so children speculate under it with zero RPCs
+                let _ = self.cache.install_dir(prov, perm, &[], self.cache.gen_of(prov));
+            }
+            if full {
+                // capacity flush — not a barrier: errors stay latched
+                self.spec_flush_dir(dir);
+            }
+            return Ok(Some(entry));
+        }
+    }
+
+    /// Speculate an unlink (`rmdir: false`) or rmdir (`rmdir: true`) of
+    /// `name` under `dir`. Same return contract as
+    /// [`BAgent::spec_create_at`]; local validation covers existence,
+    /// kind, W|X on the directory, and (for rmdir) cached emptiness.
+    pub fn spec_unlink_at(
+        &self,
+        dir: Ino,
+        name: &str,
+        rmdir: bool,
+        cred: &Credentials,
+    ) -> FsResult<Option<()>> {
+        if !self.speculation_enabled() {
+            return Ok(None);
+        }
+        if !self.spec_decide_name(dir, name, cred)? {
+            return Ok(None);
+        }
+        let target = match self.cache.child(dir, name) {
+            ChildLookup::Found(e) => e,
+            ChildLookup::NoSuchEntry => return Err(FsError::NotFound),
+            ChildLookup::DirNotCached => return Ok(None),
+        };
+        if rmdir != (target.kind == FileKind::Directory) {
+            // kind mismatch: defer to the server's authoritative error
+            return Ok(None);
+        }
+        if rmdir {
+            if let Some(l) = self.cache.listing(target.ino) {
+                if !l.is_empty() {
+                    return Err(FsError::NotEmpty);
+                }
+            }
+        }
+        // unlink-after-speculative-create: elide both when nothing
+        // observable depends on the file having ever existed
+        if is_provisional(target.ino) && self.spec_try_elide(dir, name, &target) {
+            return Ok(Some(()));
+        }
+        let mut inner = self.spec.inner.lock().unwrap();
+        let Some(chain) = inner.chains.get_mut(&dir) else {
+            if is_provisional(target.ino) {
+                // unflushed speculative target but its chain is gone
+                // (rolled back): nothing to remove anywhere
+                drop(inner);
+                self.cache.evict_entry(dir, name);
+                return Ok(Some(()));
+            }
+            drop(inner);
+            return self.spec_enqueue_unlink(dir, name, rmdir, cred, target);
+        };
+        if chain.cred.uid != cred.uid || chain.cred.gid != cred.gid {
+            drop(inner);
+            self.spec_flush_dir(dir);
+            return self.spec_unlink_at(dir, name, rmdir, cred);
+        }
+        let op_id = self.begin_op();
+        let op = if rmdir {
+            BatchOp::Rmdir { name: name.to_string() }
+        } else {
+            BatchOp::Unlink { name: name.to_string() }
+        };
+        chain.entries.push(SpecEntry { op_id, op, prov: None, post: None, undo: Some(target) });
+        let full = chain.entries.len() >= self.spec.cfg.lock().unwrap().max_batch;
+        drop(inner);
+        self.metrics.record_spec_queued();
+        self.cache.evict_entry(dir, name);
+        if full {
+            self.spec_flush_dir(dir);
+        }
+        Ok(Some(()))
+    }
+
+    /// Enqueue an unlink/rmdir when `dir` had no chain yet.
+    fn spec_enqueue_unlink(
+        &self,
+        dir: Ino,
+        name: &str,
+        rmdir: bool,
+        cred: &Credentials,
+        target: DirEntry,
+    ) -> FsResult<Option<()>> {
+        let mut inner = self.spec.inner.lock().unwrap();
+        let op_id = self.begin_op();
+        let op = if rmdir {
+            BatchOp::Rmdir { name: name.to_string() }
+        } else {
+            BatchOp::Unlink { name: name.to_string() }
+        };
+        inner
+            .chains
+            .entry(dir)
+            .or_insert_with(|| Chain { cred: cred.clone(), entries: Vec::new(), closes: Vec::new() })
+            .entries
+            .push(SpecEntry { op_id, op, prov: None, post: None, undo: Some(target) });
+        drop(inner);
+        self.metrics.record_spec_queued();
+        self.cache.evict_entry(dir, name);
+        Ok(Some(()))
+    }
+
+    /// Speculate a same-directory rename. `Ok(None)` falls back to the
+    /// synchronous two-stamp path (which handles cross-directory moves
+    /// and destination overwrites).
+    pub fn spec_rename_at(
+        &self,
+        dir: Ino,
+        sname: &str,
+        dname: &str,
+        cred: &Credentials,
+    ) -> FsResult<Option<()>> {
+        if !self.speculation_enabled() {
+            return Ok(None);
+        }
+        if !self.spec_decide_name(dir, sname, cred)? {
+            return Ok(None);
+        }
+        let src = match self.cache.child(dir, sname) {
+            ChildLookup::Found(e) => e,
+            ChildLookup::NoSuchEntry => return Err(FsError::NotFound),
+            ChildLookup::DirNotCached => return Ok(None),
+        };
+        match self.cache.child(dir, dname) {
+            // destination exists: overwrite semantics are the server's
+            ChildLookup::Found(_) => return Ok(None),
+            ChildLookup::NoSuchEntry => {}
+            ChildLookup::DirNotCached => return Ok(None),
+        }
+        let post = DirEntry { name: dname.to_string(), ..src.clone() };
+        let mut inner = self.spec.inner.lock().unwrap();
+        if let Some(c) = inner.chains.get(&dir) {
+            if c.cred.uid != cred.uid || c.cred.gid != cred.gid {
+                drop(inner);
+                self.spec_flush_dir(dir);
+                return self.spec_rename_at(dir, sname, dname, cred);
+            }
+        }
+        let op_id = self.begin_op();
+        inner
+            .chains
+            .entry(dir)
+            .or_insert_with(|| Chain { cred: cred.clone(), entries: Vec::new(), closes: Vec::new() })
+            .entries
+            .push(SpecEntry {
+                op_id,
+                op: BatchOp::Rename { sname: sname.to_string(), dname: dname.to_string() },
+                prov: None,
+                post: Some(post.clone()),
+                undo: Some(src),
+            });
+        drop(inner);
+        self.metrics.record_spec_queued();
+        self.cache.evict_entry(dir, sname);
+        self.cache.insert_entry(dir, post);
+        Ok(Some(()))
+    }
+
+    /// Make the cached listing of `dir` decisive for `name`: prime real
+    /// directories with one amortized ReadDir, reinstall speculative
+    /// ones from their overlay, and check W|X locally. `Ok(false)` =
+    /// cannot decide here → synchronous fallback.
+    fn spec_decide_name(&self, dir: Ino, _name: &str, cred: &Credentials) -> FsResult<bool> {
+        let perm = match self.cache.dir_perm_if_listed(dir) {
+            Some(p) => p,
+            None => {
+                if is_provisional(dir) {
+                    self.spec_reinstall_dir(dir)?;
+                } else {
+                    // one ReadDir, amortized over the whole chain; a
+                    // denied listing means sync fallback, not failure
+                    if self.prime_dir(dir, &[], cred).is_err() {
+                        return Ok(false);
+                    }
+                    self.spec_replay_overlay(dir);
+                }
+                match self.cache.dir_perm_if_listed(dir) {
+                    Some(p) => p,
+                    None => return Ok(false),
+                }
+            }
+        };
+        if !perm::check_access(&perm, cred, AccessMask(W_OK | X_OK)) {
+            if is_provisional(dir) {
+                // a speculative dir's perms are client-authored truth
+                return Err(FsError::PermissionDenied);
+            }
+            // possibly-stale local denial: let the server decide
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    /// Rebuild a speculative directory's cached listing (empty + its
+    /// chain's overlay) after a raced eviction.
+    pub(crate) fn spec_reinstall_dir(&self, dir: Ino) -> FsResult<()> {
+        let perm = self
+            .spec
+            .inner
+            .lock()
+            .unwrap()
+            .prov_dirs
+            .get(&dir)
+            .copied()
+            .ok_or(FsError::CacheInvalidated)?;
+        let _ = self.cache.install_dir(dir, perm, &[], self.cache.gen_of(dir));
+        self.spec_replay_overlay(dir);
+        Ok(())
+    }
+
+    /// Re-superimpose a chain's queued effects onto the cached listing
+    /// (after a refetch replaced it with the server's — pre-flush —
+    /// view).
+    fn spec_replay_overlay(&self, dir: Ino) {
+        let ops: Vec<(BatchOp, Option<DirEntry>)> = {
+            let inner = self.spec.inner.lock().unwrap();
+            match inner.chains.get(&dir) {
+                Some(c) => c.entries.iter().map(|e| (e.op.clone(), e.post.clone())).collect(),
+                None => return,
+            }
+        };
+        for (op, post) in ops {
+            match op {
+                BatchOp::Create { .. } | BatchOp::Mkdir { .. } => {
+                    if let Some(e) = post {
+                        self.cache.insert_entry(dir, e);
+                    }
+                }
+                BatchOp::Unlink { name } | BatchOp::Rmdir { name } => {
+                    self.cache.evict_entry(dir, &name);
+                }
+                BatchOp::Rename { sname, .. } => {
+                    self.cache.evict_entry(dir, &sname);
+                    if let Some(e) = post {
+                        self.cache.insert_entry(dir, e);
+                    }
+                }
+                BatchOp::Close { .. } => {}
+            }
+        }
+    }
+
+    /// Try to cancel a speculative create with its speculative unlink:
+    /// both vanish without ever reaching the wire. Fails (→ normal
+    /// enqueue) when anything observable still depends on the file: an
+    /// open fd, buffered write-back data, a deferred close, a queued
+    /// rename touching the name, or (for dirs) queued children.
+    fn spec_try_elide(&self, dir: Ino, name: &str, target: &DirEntry) -> bool {
+        if self.datapath.dirty_bytes(target.ino) > 0 {
+            return false;
+        }
+        let mut inner = self.spec.inner.lock().unwrap();
+        if inner.open_fds.get(&target.ino).copied().unwrap_or(0) > 0 {
+            return false;
+        }
+        if inner.prov_real.contains_key(&target.ino) {
+            return false; // already materialized: must really unlink
+        }
+        // a speculative dir with queued children cannot vanish quietly
+        if inner.chains.get(&target.ino).is_some_and(|c| !c.is_empty()) {
+            return false;
+        }
+        let Some(chain) = inner.chains.get_mut(&dir) else { return false };
+        if chain.closes.iter().any(|h| h.ino == target.ino) {
+            return false;
+        }
+        let Some(idx) = chain.entries.iter().position(|e| e.prov == Some(target.ino)) else {
+            return false;
+        };
+        // the defining create must still answer to this exact name, and
+        // nothing queued after it may reference the name
+        let defines_name = match &chain.entries[idx].op {
+            BatchOp::Create { name: n, .. } | BatchOp::Mkdir { name: n, .. } => n == name,
+            _ => false,
+        };
+        let later_ref = chain.entries[idx + 1..].iter().any(|e| match &e.op {
+            BatchOp::Create { name: n, .. }
+            | BatchOp::Mkdir { name: n, .. }
+            | BatchOp::Unlink { name: n }
+            | BatchOp::Rmdir { name: n } => n == name,
+            BatchOp::Rename { sname, dname } => sname == name || dname == name,
+            BatchOp::Close { .. } => false,
+        });
+        if !defines_name || later_ref {
+            return false;
+        }
+        let e = chain.entries.remove(idx);
+        inner.prov_dir.remove(&target.ino);
+        inner.prov_dirs.remove(&target.ino);
+        inner.open_fds.remove(&target.ino);
+        inner.chains.remove(&target.ino);
+        drop(inner);
+        self.end_op(e.op_id);
+        self.cache.evict_entry(dir, name);
+        self.metrics.record_spec_elided(2);
+        true
+    }
+
+    // -- fd plumbing ----------------------------------------------------------
+
+    /// An fd was installed over a provisional ino (blocks elision).
+    pub(crate) fn spec_note_open(&self, ino: Ino) {
+        if self.spec.on.load(Ordering::Acquire) {
+            *self.spec.inner.lock().unwrap().open_fds.entry(ino).or_insert(0) += 1;
+        }
+    }
+
+    /// Intercept `close()` of a file still living under a provisional
+    /// ino. `Some(result)` = handled here: either the wrap-up now rides
+    /// the chain flush as a deferred `BatchOp::Close`, or — when the
+    /// speculation already failed — the latched error surfaces (close
+    /// is a barrier). `None` = not provisional, normal close.
+    pub(crate) fn spec_defer_close(&self, h: &FileHandle) -> Option<FsResult<()>> {
+        if !is_provisional(h.ino) {
+            return None;
+        }
+        let mut inner = self.spec.inner.lock().unwrap();
+        if let Some(n) = inner.open_fds.get_mut(&h.ino) {
+            *n = n.saturating_sub(1);
+        }
+        let dir = inner.prov_dir.get(&h.ino).copied();
+        if let Some(d) = dir {
+            if let Some(chain) = inner.chains.get_mut(&d) {
+                chain.closes.push(h.clone());
+                return Some(Ok(()));
+            }
+        }
+        drop(inner);
+        // the chain already resolved; a still-provisional ino means the
+        // create was rolled back — surface its latched error here
+        Some(match dir {
+            Some(d) => self.spec_barrier_dir(d),
+            None => Ok(()),
+        })
+    }
+
+    /// Materialize a provisional ino because a dependent operation needs
+    /// the real identity NOW (a barrier on the defining directory).
+    /// Identity ops on non-provisional inos pass through untouched.
+    pub(crate) fn spec_resolve_ino(&self, ino: Ino) -> FsResult<Ino> {
+        if !is_provisional(ino) {
+            return Ok(ino);
+        }
+        let dir = self.spec.inner.lock().unwrap().prov_dir.get(&ino).copied();
+        if let Some(d) = dir {
+            self.spec_barrier_dir(d)?;
+        }
+        match self.spec.inner.lock().unwrap().prov_real.get(&ino) {
+            Some(r) => Ok(*r),
+            // rolled back: the barrier above reported why (once); later
+            // references see the file as never having existed
+            None => Err(FsError::NotFound),
+        }
+    }
+
+    /// Handle-flavored [`BAgent::spec_resolve_ino`]: `Some(handle)` with
+    /// the real ino patched in when the input was provisional.
+    pub(crate) fn spec_reify(&self, h: &FileHandle) -> FsResult<Option<FileHandle>> {
+        if !is_provisional(h.ino) {
+            return Ok(None);
+        }
+        let real = self.spec_resolve_ino(h.ino)?;
+        let mut h2 = h.clone();
+        h2.ino = real;
+        Ok(Some(h2))
+    }
+
+    /// Write-path gate: a buffered write-back write below the high-water
+    /// mark stays entirely local (no RPC can leak the provisional ino),
+    /// so it needs no flush. Anything else materializes first.
+    pub(crate) fn spec_gate_write(
+        &self,
+        h: &FileHandle,
+        len: usize,
+    ) -> FsResult<Option<FileHandle>> {
+        if !is_provisional(h.ino) {
+            return Ok(None);
+        }
+        if self.datapath.active(h.flags)
+            && self.datapath.writeback_enabled()
+            && self.datapath.dirty_bytes(h.ino) + len < self.datapath.config().wb_high_water
+        {
+            return Ok(None);
+        }
+        self.spec_reify(h)
+    }
+
+    // -- barriers and draining ------------------------------------------------
+
+    /// Barrier on one directory: flush its chain (stalling the caller —
+    /// counted) and surface, exactly once, any failure a speculated op
+    /// under it suffered.
+    pub fn spec_barrier_dir(&self, dir: Ino) -> FsResult<()> {
+        if !self.spec.on.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let pending = {
+            let inner = self.spec.inner.lock().unwrap();
+            inner.chains.get(&dir).is_some_and(|c| !c.is_empty())
+                || (is_provisional(dir) && !inner.prov_real.contains_key(&dir))
+        };
+        if pending {
+            self.metrics.record_spec_barrier_stall();
+            self.spec_flush_dir(dir);
+        }
+        let key = self.spec_live_ino(dir);
+        match self.spec.inner.lock().unwrap().errors.remove(&key) {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Flush every queued chain; returns the first latched failure
+    /// (exactly once — the global barrier).
+    pub fn spec_drain(&self) -> FsResult<()> {
+        if !self.spec.on.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        loop {
+            // real-keyed chains first: flushing one may re-key (or drop)
+            // provisional chains, so re-pick each round
+            let next = {
+                let inner = self.spec.inner.lock().unwrap();
+                inner
+                    .chains
+                    .iter()
+                    .filter(|(_, c)| !c.is_empty())
+                    .map(|(d, _)| *d)
+                    .min_by_key(|d| is_provisional(*d))
+            };
+            match next {
+                Some(d) => self.spec_flush_dir(d),
+                None => break,
+            }
+        }
+        let err = {
+            let mut inner = self.spec.inner.lock().unwrap();
+            let key = inner.errors.keys().next().copied();
+            key.and_then(|k| inner.errors.remove(&k))
+        };
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    // -- the flush itself -----------------------------------------------------
+
+    /// Flush one directory's chain (and, transitively, whatever parent
+    /// chain must materialize the directory itself first). Failures are
+    /// latched per directory and surfaced by the next barrier — this
+    /// function never errors.
+    pub(crate) fn spec_flush_dir(&self, dir: Ino) {
+        let _gate = self.spec.flush_gate.lock().unwrap();
+        self.spec_flush_locked(dir, 0);
+    }
+
+    fn spec_flush_locked(&self, dir: Ino, depth: usize) {
+        if depth > 64 {
+            return; // dependency chains are trees; stay bounded anyway
+        }
+        let dir = if is_provisional(dir) {
+            let (parent, real) = {
+                let inner = self.spec.inner.lock().unwrap();
+                (inner.prov_dir.get(&dir).copied(), inner.prov_real.get(&dir).copied())
+            };
+            match real {
+                Some(r) => r,
+                None => {
+                    let Some(p) = parent else { return };
+                    self.spec_flush_locked(p, depth + 1);
+                    match self.spec.inner.lock().unwrap().prov_real.get(&dir).copied() {
+                        Some(r) => r,
+                        // the defining mkdir rolled back; its rollback
+                        // already dropped this chain
+                        None => return,
+                    }
+                }
+            }
+        } else {
+            dir
+        };
+        let chain = self.spec.inner.lock().unwrap().chains.remove(&dir);
+        let Some(chain) = chain else { return };
+        self.spec_run_chain(dir, chain);
+    }
+
+    /// Send one chain as a `MetaBatch` (or replay it sequentially after
+    /// a protocol downgrade), then settle per-entry outcomes and the
+    /// deferred closes.
+    fn spec_run_chain(&self, dir: Ino, chain: Chain) {
+        let _span = self.op_span("specflush");
+        let Chain { cred, entries, closes } = chain;
+        if self.spec.downgraded.load(Ordering::Acquire) {
+            return self.spec_run_sequential(dir, &cred, entries, closes);
+        }
+        if entries.is_empty() {
+            return self.spec_run_closes(dir, &cred, closes);
+        }
+        let items: Vec<BatchItem> =
+            entries.iter().map(|e| BatchItem { op_id: e.op_id, op: e.op.clone() }).collect();
+        let results = match self.spec_send_batch(dir, &cred, items) {
+            Ok(rs) => rs,
+            Err(FsError::Protocol(msg)) if msg.contains("bad request tag") => {
+                // pre-§14 server: sticky downgrade, replay sequentially
+                self.spec_downgrade();
+                return self.spec_run_sequential(dir, &cred, entries, closes);
+            }
+            Err(e) => {
+                self.spec_rollback(dir, &entries, e);
+                return;
+            }
+        };
+        self.tracer.event("spec_flush", "specflush", self.id, false);
+        let mut failed: Option<(usize, FsError)> = None;
+        for (i, e) in entries.iter().enumerate() {
+            match results.get(i) {
+                Some(Response::Err(err)) => {
+                    failed = Some((i, err.clone()));
+                    break;
+                }
+                Some(resp) => {
+                    self.spec_commit_entry(dir, e, resp);
+                    self.end_op(e.op_id);
+                }
+                // shorter reply than request without an error slot: the
+                // tail was never attempted
+                None => {
+                    failed = Some((i, FsError::Busy));
+                    break;
+                }
+            }
+        }
+        if let Some((i, err)) = failed {
+            self.spec_rollback(dir, &entries[i..], err);
+        }
+        self.spec_run_closes(dir, &cred, closes);
+    }
+
+    /// One `MetaBatch` exchange with the stale-lease re-grant loop of
+    /// `relative_call`. Exactly-once safety comes from the per-item
+    /// op_ids, so the whole batch is blind-retry safe across failover.
+    fn spec_send_batch(
+        &self,
+        dir: Ino,
+        cred: &Credentials,
+        items: Vec<BatchItem>,
+    ) -> FsResult<Vec<Response>> {
+        let n = items.len() as u64;
+        for _ in 0..MAX_LEASE_RETRIES {
+            let req = Request::MetaBatch {
+                lease: self.assumed_stamp(dir),
+                client: self.id,
+                ack_upto: self.acked_upto(),
+                cred: cred.clone(),
+                ops: items.clone(),
+            };
+            match self.call_ino(dir, req) {
+                Ok(Response::Batch(rs)) => {
+                    self.metrics.record_spec_flush(n);
+                    return Ok(rs);
+                }
+                Ok(other) => {
+                    return Err(FsError::Protocol(format!("metabatch returned {other:?}")))
+                }
+                Err(FsError::StaleLease) => {
+                    self.stats.stale_lease_retries.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.record_stale_retry("specflush");
+                    self.lease(dir, cred)?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(FsError::Busy)
+    }
+
+    /// Settle one successfully applied entry: remap provisional
+    /// identities, follow rename lease bumps, refresh the cache with
+    /// the server's authoritative entry.
+    fn spec_commit_entry(&self, dir: Ino, e: &SpecEntry, resp: &Response) {
+        match (&e.op, resp) {
+            (BatchOp::Create { .. } | BatchOp::Mkdir { .. }, Response::Created(real)) => {
+                if let Some(prov) = e.prov {
+                    self.spec_remap(dir, prov, real);
+                }
+            }
+            (BatchOp::Rename { .. }, resp) => {
+                // the server bumped the dir's lease epoch applying it
+                self.note_own_bump(dir);
+                if let Response::Created(real) = resp {
+                    self.cache.insert_entry(dir, real.clone());
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// The provisional→real identity swap, everywhere the provisional
+    /// ino is held: spec maps, dependent chains, fd table, data-plane
+    /// buffers, and the directory cache (a materialized speculative dir
+    /// keeps its overlay listing under the real ino).
+    fn spec_remap(&self, dir: Ino, prov: Ino, real_entry: &DirEntry) {
+        let real = real_entry.ino;
+        {
+            let mut inner = self.spec.inner.lock().unwrap();
+            inner.prov_real.insert(prov, real);
+            inner.prov_dir.remove(&prov);
+            inner.prov_dirs.remove(&prov);
+            inner.open_fds.remove(&prov);
+            if let Some(chain) = inner.chains.remove(&prov) {
+                inner.chains.insert(real, chain);
+            }
+            for v in inner.prov_dir.values_mut() {
+                if *v == prov {
+                    *v = real;
+                }
+            }
+            if let Some(err) = inner.errors.remove(&prov) {
+                inner.errors.insert(real, err);
+            }
+        }
+        self.fds.lock().unwrap().remap_ino(prov, real);
+        self.datapath.remap_ino(prov, real);
+        if real_entry.kind == FileKind::Directory {
+            let listing = self.cache.listing(prov).unwrap_or_default();
+            // evict first: dropping the name also drops the provisional
+            // child node; then republish under the real identity
+            self.cache.evict_entry(dir, &real_entry.name);
+            self.cache.insert_entry(dir, real_entry.clone());
+            let _ =
+                self.cache.install_dir(real, real_entry.perm, &listing, self.cache.gen_of(real));
+        } else {
+            self.cache.insert_entry(dir, real_entry.clone());
+        }
+    }
+
+    /// Roll back a failed suffix of a chain (first failure + everything
+    /// queued after it, including chains rooted in rolled-back
+    /// speculative dirs), restore the cache, and latch the error for
+    /// the next barrier.
+    fn spec_rollback(&self, dir: Ino, tail: &[SpecEntry], err: FsError) {
+        let mut rolled = 0u64;
+        for e in tail.iter().rev() {
+            match &e.op {
+                BatchOp::Create { name, .. } | BatchOp::Mkdir { name, .. } => {
+                    self.cache.evict_entry(dir, name);
+                    if let Some(prov) = e.prov {
+                        rolled += self.spec_drop_prov(prov);
+                    }
+                }
+                BatchOp::Unlink { .. } | BatchOp::Rmdir { .. } => {
+                    if let Some(u) = &e.undo {
+                        self.cache.insert_entry(dir, u.clone());
+                    }
+                }
+                BatchOp::Rename { dname, .. } => {
+                    self.cache.evict_entry(dir, dname);
+                    if let Some(u) = &e.undo {
+                        self.cache.insert_entry(dir, u.clone());
+                    }
+                }
+                BatchOp::Close { .. } => {}
+            }
+            self.end_op(e.op_id);
+            rolled += 1;
+        }
+        self.metrics.record_spec_rollback(rolled);
+        self.tracer.event("spec_rollback", "specflush", self.id, false);
+        self.spec.inner.lock().unwrap().errors.entry(dir).or_insert(err);
+    }
+
+    /// Drop everything rooted in a rolled-back provisional ino:
+    /// descendant chains (their ops were never sent), deferred closes,
+    /// bookkeeping. Returns how many queued ops vanished. Keeps the
+    /// `prov_dir` entry so late references still find the latched error.
+    fn spec_drop_prov(&self, prov: Ino) -> u64 {
+        let chain = {
+            let mut inner = self.spec.inner.lock().unwrap();
+            inner.prov_real.remove(&prov);
+            inner.prov_dirs.remove(&prov);
+            inner.open_fds.remove(&prov);
+            inner.chains.remove(&prov)
+        };
+        let Some(chain) = chain else { return 0 };
+        let mut n = 0u64;
+        for e in chain.entries.iter().rev() {
+            if let Some(p) = e.prov {
+                n += self.spec_drop_prov(p);
+            }
+            self.end_op(e.op_id);
+            n += 1;
+        }
+        n
+    }
+
+    /// Wrap up deferred closes after the chain's creates materialized:
+    /// flush any buffered data (the flush RPC carries the deferred-open
+    /// context), then batch `Close` items for opens the server actually
+    /// saw — opens that never touched it are elided entirely.
+    ///
+    /// The data flushes — one `WriteBatch` per dirty file — run
+    /// [`FLUSH_WAYS`]-wide across worker threads: at WAN latency the
+    /// serial alternative would put the whole payload back on the
+    /// critical path, RTT by RTT, and undo the batching win.
+    fn spec_run_closes(&self, dir: Ino, cred: &Credentials, closes: Vec<FileHandle>) {
+        if closes.is_empty() {
+            return;
+        }
+        // resolve every handle to its materialized identity first
+        let mut pending: Vec<(FileHandle, bool)> = Vec::with_capacity(closes.len());
+        for h in closes {
+            let real = if is_provisional(h.ino) {
+                match self.spec.inner.lock().unwrap().prov_real.get(&h.ino).copied() {
+                    Some(r) => r,
+                    None => continue, // create rolled back: nothing to wrap up
+                }
+            } else {
+                h.ino
+            };
+            let mut h2 = h;
+            h2.ino = real;
+            let registered = !h2.incomplete;
+            pending.push((h2, registered));
+        }
+        let dirty: Vec<usize> = pending
+            .iter()
+            .enumerate()
+            .filter(|(_, (h, _))| {
+                self.datapath.enabled() && self.datapath.dirty_bytes(h.ino) > 0
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let flushed: Vec<(usize, FsResult<bool>)> = if dirty.len() <= 1 {
+            dirty.iter().map(|&i| (i, self.datapath.flush(self, &pending[i].0))).collect()
+        } else {
+            let per = dirty.len().div_ceil(FLUSH_WAYS);
+            let pending = &pending;
+            std::thread::scope(|scope| {
+                dirty
+                    .chunks(per)
+                    .map(|chunk| {
+                        scope.spawn(move || {
+                            chunk
+                                .iter()
+                                .map(|&i| (i, self.datapath.flush(self, &pending[i].0)))
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .flat_map(|w| w.join().unwrap())
+                    .collect()
+            })
+        };
+        for (i, r) in flushed {
+            match r {
+                Ok(true) => pending[i].1 = true,
+                Ok(false) => {}
+                Err(e) => {
+                    self.spec.inner.lock().unwrap().errors.entry(dir).or_insert(e);
+                }
+            }
+        }
+        let mut items: Vec<BatchItem> = Vec::new();
+        for (h2, registered) in pending {
+            if registered {
+                items.push(BatchItem {
+                    op_id: self.begin_op(),
+                    op: BatchOp::Close { ino: h2.ino, handle: h2.handle },
+                });
+            } else {
+                // the server never heard of this open: zero-RPC close
+                self.metrics.record_spec_elided(1);
+            }
+        }
+        if items.is_empty() {
+            return;
+        }
+        if self.spec.downgraded.load(Ordering::Acquire) {
+            for it in items {
+                if let BatchOp::Close { ino, handle } = it.op {
+                    if let Ok(t) = self.route(ino) {
+                        let _ =
+                            t.call_async(Request::Close { ino, client: self.id, handle });
+                    }
+                }
+                self.end_op(it.op_id);
+            }
+            return;
+        }
+        let ids: Vec<u64> = items.iter().map(|i| i.op_id).collect();
+        match self.spec_send_batch(dir, cred, items) {
+            Ok(_) => {}
+            Err(FsError::Protocol(msg)) if msg.contains("bad request tag") => {
+                self.spec_downgrade();
+            }
+            // close wrap-ups are best-effort, exactly like the async
+            // single-op close path (`let _ = call_async(..)`)
+            Err(_) => {}
+        }
+        for id in ids {
+            self.end_op(id);
+        }
+    }
+
+    /// Post-downgrade replay: the queued chain as sequential per-op
+    /// relative calls (same failure/rollback semantics, one RPC each).
+    fn spec_run_sequential(
+        &self,
+        dir: Ino,
+        cred: &Credentials,
+        entries: Vec<SpecEntry>,
+        closes: Vec<FileHandle>,
+    ) {
+        let mut failed: Option<(usize, FsError)> = None;
+        for (i, e) in entries.iter().enumerate() {
+            let sent = match &e.op {
+                BatchOp::Create { name, mode, kind } => {
+                    let (name, mode, kind) = (name.clone(), *mode, *kind);
+                    self.relative_call("create", dir, cred, move |lease| Request::CreateAt {
+                        lease,
+                        name: name.clone(),
+                        mode,
+                        kind,
+                        cred: cred.clone(),
+                        client: self.id,
+                    })
+                }
+                BatchOp::Mkdir { name, mode } => {
+                    let (name, mode) = (name.clone(), *mode);
+                    self.relative_call("mkdir", dir, cred, move |lease| Request::MkdirAt {
+                        lease,
+                        name: name.clone(),
+                        mode,
+                        cred: cred.clone(),
+                    })
+                }
+                BatchOp::Unlink { name } => {
+                    let name = name.clone();
+                    self.relative_call("unlink", dir, cred, move |lease| Request::UnlinkAt {
+                        lease,
+                        name: name.clone(),
+                        cred: cred.clone(),
+                    })
+                }
+                BatchOp::Rmdir { name } => {
+                    let name = name.clone();
+                    self.relative_call("rmdir", dir, cred, move |lease| Request::RmdirAt {
+                        lease,
+                        name: name.clone(),
+                        cred: cred.clone(),
+                    })
+                }
+                BatchOp::Rename { sname, dname } => {
+                    let (sname, dname) = (sname.clone(), dname.clone());
+                    self.relative_call("rename", dir, cred, move |lease| Request::RenameAt {
+                        src: lease,
+                        sname: sname.clone(),
+                        dst: lease,
+                        dname: dname.clone(),
+                        cred: cred.clone(),
+                    })
+                }
+                // chains never queue Close entries (those live in
+                // `closes`); tolerate anyway
+                BatchOp::Close { .. } => Ok(Response::Unit),
+            };
+            match sent {
+                Ok(resp) => {
+                    self.spec_commit_entry(dir, e, &resp);
+                    self.end_op(e.op_id);
+                }
+                Err(err) => {
+                    failed = Some((i, err));
+                    break;
+                }
+            }
+        }
+        if let Some((i, err)) = failed {
+            self.spec_rollback(dir, &entries[i..], err);
+        }
+        self.spec_run_closes(dir, cred, closes);
+    }
+}

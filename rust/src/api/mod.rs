@@ -43,6 +43,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::agent::cache::ChildLookup;
 use crate::agent::fdtable::FileHandle;
+use crate::agent::spec;
 use crate::agent::BAgent;
 use crate::error::{FsError, FsResult};
 use crate::perm;
@@ -148,6 +149,13 @@ impl Dir {
         &self.core.cred
     }
 
+    /// The node's live identity: a handle opened onto a speculatively
+    /// created directory keeps working after the chain flushes and the
+    /// server assigns the real ino (DESIGN.md §14). Never flushes.
+    fn live(&self) -> Ino {
+        self.core.agent.spec_live_ino(self.node)
+    }
+
     /// Validate the client half of the lease. If any §3.4 invalidation
     /// landed since this handle last looked (the global epoch moved),
     /// re-resolve ONCE — a single `Lease` RPC re-reads the directory's
@@ -162,6 +170,7 @@ impl Dir {
     /// so counting here too would double every RPC-backed op.
     fn ensure_fresh_counted(&self, op: &'static str, count_hit: bool) -> FsResult<PermBlob> {
         let agent = self.agent();
+        let node = self.live();
         let now = agent.cache().epoch();
         {
             let st = self.lease.lock().unwrap();
@@ -171,9 +180,14 @@ impl Dir {
                 }
                 return Ok(st.perm);
             }
+            if spec::is_provisional(node) {
+                // a still-speculative dir has no server lease to refresh;
+                // its client-authored perm IS the authority until flush
+                return Ok(st.perm);
+            }
         }
         agent.metrics().record_stale_retry(op);
-        let (attr, _epoch) = agent.lease(self.node, self.cred())?;
+        let (attr, _epoch) = agent.lease(node, self.cred())?;
         let mut st = self.lease.lock().unwrap();
         st.perm = attr.perm;
         st.cache_epoch = now;
@@ -185,8 +199,14 @@ impl Dir {
     fn fill_listing(&self) -> FsResult<()> {
         let agent = self.agent();
         let cred = self.cred();
-        let snap_gen = agent.cache().gen_of(self.node);
-        let resp = agent.relative_call("readdir", self.node, cred, |lease| Request::ReadDirAt {
+        let node = self.live();
+        if spec::is_provisional(node) {
+            // no server knows this dir yet: rebuild the client-authored
+            // listing locally instead of a doomed ReadDirAt
+            return agent.spec_reinstall_dir(node);
+        }
+        let snap_gen = agent.cache().gen_of(node);
+        let resp = agent.relative_call("readdir", node, cred, |lease| Request::ReadDirAt {
             lease,
             client: agent.id(),
             register: true,
@@ -194,7 +214,7 @@ impl Dir {
         })?;
         match resp {
             Response::Entries { dir, entries } => {
-                agent.cache().install_dir(self.node, dir.perm, &entries, snap_gen);
+                agent.cache().install_dir(node, dir.perm, &entries, snap_gen);
                 self.lease.lock().unwrap().perm = dir.perm;
                 Ok(())
             }
@@ -209,7 +229,7 @@ impl Dir {
     fn lookup_entry(&self, name: &str) -> FsResult<DirEntry> {
         let agent = self.agent();
         for _ in 0..MAX_LOOKUP_RETRIES {
-            match agent.cache().child(self.node, name) {
+            match agent.cache().child(self.live(), name) {
                 ChildLookup::Found(e) => return Ok(e),
                 ChildLookup::NoSuchEntry => return Err(FsError::NotFound),
                 ChildLookup::DirNotCached => self.fill_listing()?,
@@ -323,10 +343,13 @@ impl Dir {
     fn open_at_remote(&self, name: &str, flags: OpenFlags) -> FsResult<File> {
         let agent = self.agent();
         let cred = self.cred();
+        // a remote open is a dependent sync op: flush speculation first
+        let node = agent.spec_resolve_ino(self.node)?;
+        agent.spec_barrier_dir(node)?;
         let handle = agent.next_handle();
         let want_inline =
             agent.datapath().inline_enabled() && flags.read && !flags.direct && !flags.truncate;
-        let resp = agent.relative_call("open", self.node, cred, |lease| Request::OpenAt {
+        let resp = agent.relative_call("open", node, cred, |lease| Request::OpenAt {
             lease,
             name: name.to_string(),
             flags,
@@ -399,7 +422,36 @@ impl Dir {
             agent.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
-        let created = agent.relative_call("create", self.node, cred, |lease| Request::CreateAt {
+        let node = self.live();
+        // speculate: the create is acknowledged locally and the file is
+        // immediately openable/writable under its provisional identity
+        match agent.spec_create_at(node, name, mode, FileKind::Regular, cred) {
+            Ok(Some(entry)) => {
+                let fd = agent.open_resolved(self.core.pid, &entry, flags, cred, true)?;
+                return Ok(File::new(Arc::clone(&self.core), fd, entry.ino));
+            }
+            Ok(None) => {
+                // not speculable here: flush & surface, then go remote
+                agent.spec_barrier_dir(node)?;
+            }
+            Err(FsError::AlreadyExists) if flags.create => {
+                // O_CREAT without O_EXCL against an entry the cache knows
+                // (possibly itself still speculative): open it in place
+                let e = self.lookup_entry(name)?;
+                if e.kind == FileKind::Directory && (flags.write || flags.truncate) {
+                    return Err(FsError::IsADirectory);
+                }
+                agent.stats.local_checks.fetch_add(1, Ordering::Relaxed);
+                if perm::check_path(&[dir_perm, e.perm], cred, flags.access_mask()).is_err() {
+                    agent.stats.local_denies.fetch_add(1, Ordering::Relaxed);
+                    return Err(FsError::PermissionDenied);
+                }
+                let fd = agent.open_resolved(self.core.pid, &e, flags, cred, true)?;
+                return Ok(File::new(Arc::clone(&self.core), fd, e.ino));
+            }
+            Err(e) => return Err(e),
+        }
+        let created = agent.relative_call("create", node, cred, |lease| Request::CreateAt {
             lease,
             name: name.to_string(),
             mode,
@@ -435,7 +487,7 @@ impl Dir {
             }
             Err(e) => return Err(e),
         };
-        agent.cache().insert_entry(self.node, entry.clone());
+        agent.cache().insert_entry(node, entry.clone());
         let fd = agent.open_resolved(self.core.pid, &entry, flags, cred, true)?;
         Ok(File::new(Arc::clone(&self.core), fd, entry.ino))
     }
@@ -450,7 +502,14 @@ impl Dir {
             agent.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
-        let resp = agent.relative_call("mkdir", self.node, cred, |lease| Request::MkdirAt {
+        let node = self.live();
+        // speculate: the new dir is immediately usable as a capability —
+        // children speculate under it with zero RPCs until a barrier
+        if let Some(entry) = agent.spec_create_at(node, name, mode, FileKind::Directory, cred)? {
+            return Ok(self.child_dir(name, &entry));
+        }
+        agent.spec_barrier_dir(node)?;
+        let resp = agent.relative_call("mkdir", node, cred, |lease| Request::MkdirAt {
             lease,
             name: name.to_string(),
             mode,
@@ -460,7 +519,7 @@ impl Dir {
             Response::Created(e) => e,
             other => return Err(FsError::Protocol(format!("mkdirat returned {other:?}"))),
         };
-        agent.cache().insert_entry(self.node, entry.clone());
+        agent.cache().insert_entry(node, entry.clone());
         Ok(self.child_dir(name, &entry))
     }
 
@@ -476,7 +535,11 @@ impl Dir {
     fn stat_remote(&self, name: &str) -> FsResult<Attr> {
         let agent = self.agent();
         let cred = self.cred();
-        let resp = agent.relative_call("getattr", self.node, cred, |lease| Request::StatAt {
+        // stat asks the server by name — a dependent sync op: flush any
+        // speculation on this dir so the answer reflects program order
+        let node = agent.spec_resolve_ino(self.node)?;
+        agent.spec_barrier_dir(node)?;
+        let resp = agent.relative_call("getattr", node, cred, |lease| Request::StatAt {
             lease,
             name: name.to_string(),
             cred: cred.clone(),
@@ -489,7 +552,9 @@ impl Dir {
 
     /// stat this directory itself.
     pub fn stat_self(&self) -> FsResult<Attr> {
-        let resp = self.agent().call_ino(self.node, Request::GetAttr { ino: self.node })?;
+        // GetAttr crosses the wire: materialize a speculative dir first
+        let node = self.agent().spec_resolve_ino(self.node)?;
+        let resp = self.agent().call_ino(node, Request::GetAttr { ino: node })?;
         match resp {
             Response::AttrR(a) => Ok(a),
             other => Err(FsError::Protocol(format!("getattr returned {other:?}"))),
@@ -506,8 +571,11 @@ impl Dir {
             agent.stats.local_denies.fetch_add(1, Ordering::Relaxed);
             return Err(FsError::PermissionDenied);
         }
+        // readdir is a speculation barrier: flush this dir's chain and
+        // surface, exactly once, any failure speculated under it
+        agent.spec_barrier_dir(self.live())?;
         for _ in 0..MAX_LOOKUP_RETRIES {
-            if let Some(mut out) = agent.cache().listing(self.node) {
+            if let Some(mut out) = agent.cache().listing(self.live()) {
                 out.sort_by(|a, b| a.name.cmp(&b.name));
                 return Ok(out);
             }
@@ -520,12 +588,19 @@ impl Dir {
         let _ = self.ensure_fresh_counted("unlink", false)?;
         let agent = self.agent();
         let cred = self.cred();
-        agent.relative_call("unlink", self.node, cred, |lease| Request::UnlinkAt {
+        let node = self.live();
+        // speculate (and elide entirely when it cancels a still-queued
+        // speculative create of the same name)
+        if agent.spec_unlink_at(node, name, false, cred)?.is_some() {
+            return Ok(());
+        }
+        agent.spec_barrier_dir(node)?;
+        agent.relative_call("unlink", node, cred, |lease| Request::UnlinkAt {
             lease,
             name: name.to_string(),
             cred: cred.clone(),
         })?;
-        agent.cache().evict_entry(self.node, name);
+        agent.cache().evict_entry(node, name);
         Ok(())
     }
 
@@ -533,12 +608,17 @@ impl Dir {
         let _ = self.ensure_fresh_counted("rmdir", false)?;
         let agent = self.agent();
         let cred = self.cred();
-        agent.relative_call("rmdir", self.node, cred, |lease| Request::RmdirAt {
+        let node = self.live();
+        if agent.spec_unlink_at(node, name, true, cred)?.is_some() {
+            return Ok(());
+        }
+        agent.spec_barrier_dir(node)?;
+        agent.relative_call("rmdir", node, cred, |lease| Request::RmdirAt {
             lease,
             name: name.to_string(),
             cred: cred.clone(),
         })?;
-        agent.cache().evict_entry(self.node, name);
+        agent.cache().evict_entry(node, name);
         Ok(())
     }
 
@@ -547,7 +627,14 @@ impl Dir {
     /// by the server as part of applying it.
     pub fn rename_into(&self, sname: &str, dst: &Dir, dname: &str) -> FsResult<()> {
         let _ = self.ensure_fresh_counted("rename", false)?;
-        self.agent().rename_at_nodes(self.node, sname, dst.node, dname, self.cred())
+        let agent = self.agent();
+        let node = self.live();
+        // same-directory renames join the dir's speculation chain; the
+        // cross-directory case goes synchronous (barriers inside)
+        if node == dst.live() && agent.spec_rename_at(node, sname, dname, self.cred())?.is_some() {
+            return Ok(());
+        }
+        agent.rename_at_nodes(self.node, sname, dst.node, dname, self.cred())
     }
 }
 

@@ -355,6 +355,28 @@ impl Datapath {
         }
     }
 
+    /// Move one file's data-plane state to a new identity: a speculated
+    /// create materialized and the server assigned the real ino
+    /// (DESIGN.md §14). Dirty write-back extents — the only state a
+    /// provisional file can accumulate — move wholesale; any cached
+    /// pages under the old identity are dropped (they never had a
+    /// server generation to trust).
+    pub fn remap_ino(&self, old: Ino, new: Ino) {
+        if !self.enabled() || old == new {
+            return;
+        }
+        let (_, pages) = self.snapshot();
+        // two shards, two lock scopes — never held together
+        let meta = self.meta_shard(old).lock().unwrap().remove(&old);
+        pages.drop_ino(old);
+        if let Some(mut m) = meta {
+            m.gen = NO_GEN;
+            m.has_pages = false;
+            m.size_known = false;
+            self.meta_shard(new).lock().unwrap().insert(new, m);
+        }
+    }
+
     /// Drop the cached view of one file: pages go, the generation stamp
     /// goes, dirty write-back extents stay (they are this client's own
     /// bytes). Called on `StaleData` answers and local truncates.

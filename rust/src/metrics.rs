@@ -18,7 +18,8 @@ use crate::util::hist::Histogram;
 pub const OPS: &[&str] = &[
     "lookup", "readdir", "getattr", "open", "read", "write", "close", "create", "mkdir",
     "unlink", "rmdir", "rename", "chmod", "chown", "truncate", "statfs", "hello", "resolve",
-    "lease", "replicate", "migrate", "placement", "redirect", "invalidate", "stats", "other",
+    "lease", "replicate", "migrate", "placement", "redirect", "invalidate", "stats",
+    "specflush", "other",
 ];
 
 /// Control-plane bookkeeping: connection setup, replication shipping,
@@ -100,6 +101,21 @@ pub struct RpcMetrics {
     /// (`FsError::Busy`); shed requests never executed, so every retry
     /// is safe and these measure overload pressure, not risk.
     busy_retries: AtomicU64,
+    // -- speculative metadata write-behind (agent/spec, DESIGN.md §14) -------
+    /// Mutations acknowledged speculatively (enqueued, no RPC issued).
+    spec_queued: AtomicU64,
+    /// Queued mutations cancelled before flush (unlink-after-create and
+    /// friends) — these never touch the network at all.
+    spec_elided: AtomicU64,
+    /// Speculated entries rolled back after a flush failure surfaced at
+    /// a barrier (the failed op plus its dependents).
+    spec_rollbacks: AtomicU64,
+    /// Barriers (fsync/readdir/dependent sync op) that had to stall on
+    /// a chain flush before proceeding.
+    spec_barrier_stalls: AtomicU64,
+    /// Items carried per `MetaBatch` flush RPC (batching ratio =
+    /// spec_queued / this histogram's count).
+    spec_batch: Mutex<Histogram>,
 }
 
 impl RpcMetrics {
@@ -277,6 +293,52 @@ impl RpcMetrics {
         self.busy_retries.load(Ordering::Relaxed)
     }
 
+    // -- speculation recording (consumed by BENCH_spec.json) -----------------
+
+    /// One mutation was acknowledged speculatively (no RPC on the
+    /// critical path).
+    pub fn record_spec_queued(&self) {
+        self.spec_queued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` queued mutations were cancelled before flushing (elision).
+    pub fn record_spec_elided(&self, n: u64) {
+        self.spec_elided.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `n` speculated entries were rolled back at a barrier.
+    pub fn record_spec_rollback(&self, n: u64) {
+        self.spec_rollbacks.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A barrier stalled on an outstanding chain flush.
+    pub fn record_spec_barrier_stall(&self) {
+        self.spec_barrier_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One `MetaBatch` flush RPC went out carrying `items` mutations.
+    pub fn record_spec_flush(&self, items: u64) {
+        self.spec_batch.lock().unwrap().record(items);
+    }
+
+    pub fn spec_queued(&self) -> u64 {
+        self.spec_queued.load(Ordering::Relaxed)
+    }
+    pub fn spec_elided(&self) -> u64 {
+        self.spec_elided.load(Ordering::Relaxed)
+    }
+    pub fn spec_rollbacks(&self) -> u64 {
+        self.spec_rollbacks.load(Ordering::Relaxed)
+    }
+    pub fn spec_barrier_stalls(&self) -> u64 {
+        self.spec_barrier_stalls.load(Ordering::Relaxed)
+    }
+
+    /// Distribution of items-per-MetaBatch (empty if never flushed).
+    pub fn spec_batch_histogram(&self) -> Histogram {
+        self.spec_batch.lock().unwrap().clone()
+    }
+
     /// (p50, p90, p99) latency of one op in microseconds, if recorded.
     pub fn percentiles_us(&self, op: &str) -> Option<(f64, f64, f64)> {
         self.histogram(op).filter(|h| h.count() > 0).map(|h| {
@@ -354,10 +416,15 @@ impl RpcMetrics {
             &self.reconnects,
             &self.failovers,
             &self.busy_retries,
+            &self.spec_queued,
+            &self.spec_elided,
+            &self.spec_rollbacks,
+            &self.spec_barrier_stalls,
         ] {
             c.store(0, Ordering::Relaxed);
         }
         *self.inflight_depth.lock().unwrap() = Histogram::new();
+        *self.spec_batch.lock().unwrap() = Histogram::new();
     }
 
     /// Multi-line per-op report (counts + latency) for the CLI.
@@ -426,6 +493,20 @@ impl RpcMetrics {
                 self.reconnects(),
                 self.failovers(),
                 self.busy_retries(),
+            ));
+        }
+        if self.spec_queued() + self.spec_elided() + self.spec_rollbacks() > 0 {
+            let b = self.spec_batch_histogram();
+            out.push_str(&format!(
+                "  spec: queued={} elided={} flushes={} batch mean={:.1} max={} \
+                 rollbacks={} barrier_stalls={}\n",
+                self.spec_queued(),
+                self.spec_elided(),
+                b.count(),
+                b.mean(),
+                b.max(),
+                self.spec_rollbacks(),
+                self.spec_barrier_stalls(),
             ));
         }
         out
@@ -589,6 +670,47 @@ mod tests {
         m.record("redirect", 0, 0, Duration::ZERO);
         assert_eq!(m.count("redirect"), 1);
         assert_eq!(m.count("invalidate"), 0, "must not alias into the catch-all");
+    }
+
+    #[test]
+    fn specflush_is_a_first_class_op() {
+        let m = RpcMetrics::new();
+        m.record("specflush", 256, 128, Duration::from_micros(10));
+        assert_eq!(m.count("specflush"), 1);
+        assert_eq!(m.count("other"), 0, "must not alias into the catch-all");
+        assert_eq!(m.count("invalidate"), 0, "must not alias into a real op");
+        // a MetaBatch flush IS a metadata RPC — metadata_rpcs() stays an
+        // honest motivation number with speculation on
+        assert_eq!(m.metadata_rpcs(), 1);
+    }
+
+    #[test]
+    fn spec_counters_record_report_and_reset() {
+        let m = RpcMetrics::new();
+        for _ in 0..6 {
+            m.record_spec_queued();
+        }
+        m.record_spec_elided(2);
+        m.record_spec_flush(3);
+        m.record_spec_flush(1);
+        m.record_spec_rollback(2);
+        m.record_spec_barrier_stall();
+        assert_eq!(m.spec_queued(), 6);
+        assert_eq!(m.spec_elided(), 2);
+        assert_eq!(m.spec_rollbacks(), 2);
+        assert_eq!(m.spec_barrier_stalls(), 1);
+        let b = m.spec_batch_histogram();
+        assert_eq!(b.count(), 2);
+        assert_eq!(b.max(), 3);
+        let r = m.report();
+        assert!(r.contains("spec: queued=6 elided=2"), "report must surface speculation: {r}");
+        m.reset();
+        assert_eq!(
+            m.spec_queued() + m.spec_elided() + m.spec_rollbacks() + m.spec_barrier_stalls(),
+            0
+        );
+        assert_eq!(m.spec_batch_histogram().count(), 0);
+        assert!(!m.report().contains("spec:"), "zeroed counters stay out of the report");
     }
 
     #[test]

@@ -21,6 +21,10 @@
 //! * [`shard`] — the elastic namespace (DESIGN.md §12): the moved-out
 //!   gate every request passes first, `PlacementFetch`, and the
 //!   `MigrateSubtree`/`SubtreeImport` migration RPCs.
+//! * [`spec`] — the speculation drain (DESIGN.md §14): `MetaBatch`
+//!   applies a client's dependency-ordered chain of metadata mutations
+//!   atomically under one directory lock, each item individually
+//!   deduped against the exactly-once ledger.
 //!
 //! Every handler takes the whole [`Request`] and destructures its own
 //! variant; a table/handler mismatch surfaces as a loud protocol error,
@@ -33,6 +37,7 @@ pub mod obs;
 pub mod perm;
 pub mod relative;
 pub mod shard;
+pub mod spec;
 
 use std::sync::atomic::Ordering;
 
@@ -92,6 +97,7 @@ fn index(req: &Request) -> usize {
         Request::UpdateParentMeta { .. } => 40,
         Request::StatsFetch { .. } => 41,
         Request::Traced { .. } => 42,
+        Request::MetaBatch { .. } => 43,
     }
 }
 
@@ -131,11 +137,12 @@ fn is_mutating(req: &Request) -> bool {
             | Request::MigrateSubtree { .. }
             | Request::SubtreeImport { .. }
             | Request::UpdateParentMeta { .. }
+            | Request::MetaBatch { .. }
     )
 }
 
 /// The handler table, ordered by wire tag (same order as [`index`]).
-static HANDLERS: [Handler; 43] = [
+static HANDLERS: [Handler; 44] = [
     meta::lookup,              // 0
     meta::read_dir,            // 1
     meta::get_attr,            // 2
@@ -179,6 +186,7 @@ static HANDLERS: [Handler; 43] = [
     namespace::update_parent_meta, // 40
     obs::stats_fetch,          // 41
     obs::traced,               // 42
+    spec::meta_batch,          // 43
 ];
 
 /// The exactly-once envelope handler (DESIGN.md §11). Unwraps a
@@ -203,6 +211,7 @@ fn stamped(s: &BServer, req: Request) -> FsResult<Response> {
             | Request::JournalFetch { .. }
             | Request::MigrateSubtree { .. }
             | Request::SubtreeImport { .. }
+            | Request::MetaBatch { .. }
     ) {
         return Err(FsError::Protocol("stamped envelope cannot nest replication ops".into()));
     }
@@ -373,6 +382,13 @@ mod tests {
                 trace_id: 1,
                 parent_span: 0,
                 inner: Box::new(Request::GetAttr { ino }),
+            },
+            Request::MetaBatch {
+                lease: stamp,
+                client: 1,
+                ack_upto: 0,
+                cred: cred(),
+                ops: vec![],
             },
         ];
         assert_eq!(all.len(), HANDLERS.len(), "one sample per table entry");

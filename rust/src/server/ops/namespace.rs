@@ -7,27 +7,28 @@ use std::sync::atomic::Ordering;
 
 use crate::error::{FsError, FsResult};
 use crate::server::{name_hash, BServer, Placement};
-use crate::types::{AccessMask, FileKind, HostId, W_OK, X_OK};
+use crate::types::{AccessMask, Credentials, DirEntry, FileId, FileKind, HostId, W_OK, X_OK};
 use crate::wire::{Request, Response};
 
 use super::misrouted;
 
-pub fn create(s: &BServer, req: Request) -> FsResult<Response> {
-    let Request::Create { dir, name, mode, kind, cred, client } = req else {
-        return Err(misrouted("create"));
-    };
-    let dir_file = s.fs.validate(dir)?;
-    s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
-    // exclusive dir lock across invalidate+insert (§3.4: invalidate
-    // first, THEN apply — atomically vs readers)
-    let _g = s.locks.write(dir_file);
-    // a new entry changes the directory other clients cache
-    s.invalidate_barrier(dir_file);
-    let entry = match (s.placement, kind) {
+/// The create body, with validation, access check, the directory lock
+/// and the §3.4 barrier already done by the caller — shared between the
+/// single-op handler and the `MetaBatch` speculation drain (spec.rs),
+/// which holds ONE lock + barrier across a whole chain of these.
+pub(crate) fn create_locked(
+    s: &BServer,
+    dir_file: FileId,
+    name: &str,
+    mode: u16,
+    kind: FileKind,
+    cred: &Credentials,
+) -> FsResult<DirEntry> {
+    Ok(match (s.placement, kind) {
         (Placement::SpreadByNameHash { hosts }, FileKind::Regular) => {
-            let target = (name_hash(&name) % hosts as u64) as HostId;
+            let target = (name_hash(name) % hosts as u64) as HostId;
             if target == s.fs.host {
-                s.fs.create(dir_file, &name, mode, kind, cred.uid, cred.gid)?
+                s.fs.create(dir_file, name, mode, kind, cred.uid, cred.gid)?
             } else {
                 // allocate the object on the target server, then hang its
                 // dirent (with the authoritative perm blob) off our
@@ -36,13 +37,12 @@ pub fn create(s: &BServer, req: Request) -> FsResult<Response> {
 
                 let resp = s.peer(target)?.call(Request::CreateOrphan {
                     parent: s.fs.ino(dir_file),
-                    name: name.clone(),
+                    name: name.to_string(),
                     mode,
                     kind,
                     uid: cred.uid,
                     gid: cred.gid,
                 })?;
-                let _ = client;
                 match resp {
                     Response::Created(e) => {
                         s.fs.insert_remote_entry(dir_file, e.clone())?;
@@ -54,8 +54,23 @@ pub fn create(s: &BServer, req: Request) -> FsResult<Response> {
                 }
             }
         }
-        _ => s.fs.create(dir_file, &name, mode, kind, cred.uid, cred.gid)?,
+        _ => s.fs.create(dir_file, name, mode, kind, cred.uid, cred.gid)?,
+    })
+}
+
+pub fn create(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Create { dir, name, mode, kind, cred, client } = req else {
+        return Err(misrouted("create"));
     };
+    let _ = client;
+    let dir_file = s.fs.validate(dir)?;
+    s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+    // exclusive dir lock across invalidate+insert (§3.4: invalidate
+    // first, THEN apply — atomically vs readers)
+    let _g = s.locks.write(dir_file);
+    // a new entry changes the directory other clients cache
+    s.invalidate_barrier(dir_file);
+    let entry = create_locked(s, dir_file, &name, mode, kind, &cred)?;
     Ok(Response::Created(entry))
 }
 
@@ -69,31 +84,41 @@ pub fn create_orphan(s: &BServer, req: Request) -> FsResult<Response> {
     Ok(Response::Created(entry))
 }
 
+/// The mkdir body under a caller-held lock + barrier (see
+/// [`create_locked`]).
+pub(crate) fn mkdir_locked(
+    s: &BServer,
+    dir_file: FileId,
+    name: &str,
+    mode: u16,
+    cred: &Credentials,
+) -> FsResult<DirEntry> {
+    s.fs.create(dir_file, name, mode, FileKind::Directory, cred.uid, cred.gid)
+}
+
 pub fn mkdir(s: &BServer, req: Request) -> FsResult<Response> {
     let Request::Mkdir { dir, name, mode, cred } = req else { return Err(misrouted("mkdir")) };
     let dir_file = s.fs.validate(dir)?;
     s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
     let _g = s.locks.write(dir_file);
     s.invalidate_barrier(dir_file);
-    let entry = s.fs.create(dir_file, &name, mode, FileKind::Directory, cred.uid, cred.gid)?;
+    let entry = mkdir_locked(s, dir_file, &name, mode, &cred)?;
     Ok(Response::Created(entry))
 }
 
-pub fn unlink(s: &BServer, req: Request) -> FsResult<Response> {
-    let Request::Unlink { dir, name, cred } = req else { return Err(misrouted("unlink")) };
-    let dir_file = s.fs.validate(dir)?;
-    s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
-    let _g = s.locks.write(dir_file);
+/// The unlink body under a caller-held lock. Runs its own §3.4 barrier
+/// (after the moved-child peek, preserving the single-op ordering).
+pub(crate) fn unlink_locked(s: &BServer, dir_file: FileId, name: &str) -> FsResult<DirEntry> {
     // resolve the drop target before mutating: a mid-freeze child must
     // bounce with Busy while the dirent is still intact, and a
     // migrated-away child's object lives at the placement owner, not
     // its birth host
-    let moved_to = match s.fs.lookup(dir_file, &name) {
+    let moved_to = match s.fs.lookup(dir_file, name) {
         Ok(e) => s.moved_owner(e.ino.file)?,
         Err(_) => None,
     };
     s.invalidate_barrier(dir_file);
-    let entry = s.fs.unlink(dir_file, &name)?;
+    let entry = s.fs.unlink(dir_file, name)?;
     if !s.fs.owns(entry.ino) {
         // remote data object: ask its current server to drop it
         let target = moved_to.map(|(o, _)| o).unwrap_or(entry.ino.host);
@@ -107,6 +132,15 @@ pub fn unlink(s: &BServer, req: Request) -> FsResult<Response> {
         // the new file
         let _ = s.data_registry.take(entry.ino.file);
     }
+    Ok(entry)
+}
+
+pub fn unlink(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Unlink { dir, name, cred } = req else { return Err(misrouted("unlink")) };
+    let dir_file = s.fs.validate(dir)?;
+    s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+    let _g = s.locks.write(dir_file);
+    unlink_locked(s, dir_file, &name)?;
     Ok(Response::Unit)
 }
 
@@ -120,12 +154,11 @@ pub fn drop_object(s: &BServer, req: Request) -> FsResult<Response> {
     Ok(Response::Unit)
 }
 
-pub fn rmdir(s: &BServer, req: Request) -> FsResult<Response> {
-    let Request::Rmdir { dir, name, cred } = req else { return Err(misrouted("rmdir")) };
-    let dir_file = s.fs.validate(dir)?;
-    s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
-    let _g = s.locks.write(dir_file);
-    let peeked = s.fs.lookup(dir_file, &name)?;
+/// The rmdir body under a caller-held lock. Runs its own §3.4 barriers
+/// (after the remote-emptiness check, preserving the single-op
+/// ordering).
+pub(crate) fn rmdir_locked(s: &BServer, dir_file: FileId, name: &str) -> FsResult<DirEntry> {
+    let peeked = s.fs.lookup(dir_file, name)?;
     if peeked.kind != FileKind::Directory {
         return Err(FsError::NotADirectory);
     }
@@ -148,12 +181,53 @@ pub fn rmdir(s: &BServer, req: Request) -> FsResult<Response> {
         }
     }
     s.invalidate_barrier(dir_file);
-    let entry = s.fs.rmdir(dir_file, &name)?;
+    let entry = s.fs.rmdir(dir_file, name)?;
     // the removed dir itself may be cached by clients
     if s.fs.owns(entry.ino) {
         s.invalidate_barrier(entry.ino.file);
     }
+    Ok(entry)
+}
+
+pub fn rmdir(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::Rmdir { dir, name, cred } = req else { return Err(misrouted("rmdir")) };
+    let dir_file = s.fs.validate(dir)?;
+    s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+    let _g = s.locks.write(dir_file);
+    rmdir_locked(s, dir_file, &name)?;
     Ok(Response::Unit)
+}
+
+/// A same-directory rename under a caller-held lock: bumps the lease
+/// epoch (the name map changed → outstanding leases are stale), runs
+/// the §3.4 barrier, and applies. Used by the `MetaBatch` speculation
+/// drain — cross-directory renames are barriers on the client and never
+/// enter a batch.
+pub(crate) fn rename_same_dir_locked(
+    s: &BServer,
+    dir_file: FileId,
+    sname: &str,
+    dname: &str,
+) -> FsResult<DirEntry> {
+    s.bump_lease(dir_file);
+    s.invalidate_barrier(dir_file);
+    let moved_to = match s.fs.lookup(dir_file, sname) {
+        Ok(e) => s.moved_owner(e.ino.file)?,
+        Err(_) => None,
+    };
+    let entry = s.fs.rename(dir_file, sname, dir_file, dname)?;
+    if !s.fs.owns(entry.ino) {
+        let target = moved_to.map(|(o, _)| o).unwrap_or(entry.ino.host);
+        s.stats.cross_server_ops.fetch_add(1, Ordering::Relaxed);
+        if let Ok(p) = s.peer(target) {
+            let _ = p.call(Request::UpdateParentMeta {
+                ino: entry.ino,
+                parent: s.fs.ino(dir_file),
+                name: dname.to_string(),
+            });
+        }
+    }
+    Ok(entry)
 }
 
 pub fn rename(s: &BServer, req: Request) -> FsResult<Response> {

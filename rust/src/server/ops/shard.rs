@@ -50,6 +50,9 @@ pub(crate) fn shard_target(req: &Request) -> Option<Ino> {
         | Request::UnlinkAt { lease, .. }
         | Request::RmdirAt { lease, .. } => Some(lease.node),
         Request::RenameAt { src, .. } => Some(src.node),
+        // the whole batch targets one leased directory: gate (and
+        // redirect) it exactly like any other dirfd-relative op
+        Request::MetaBatch { lease, .. } => Some(lease.node),
         Request::Stamped { inner, .. } => shard_target(inner),
         // Traced is peeled by `dispatch` before the gate ever runs; the
         // envelope itself has no placement subject

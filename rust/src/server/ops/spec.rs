@@ -1,0 +1,135 @@
+//! The speculation drain: `MetaBatch` (DESIGN.md §14).
+//!
+//! A client with metadata write-behind enabled acknowledges
+//! `create`/`mkdir`/`unlink`/`rename` locally and flushes whole
+//! dependency chains here as ONE RPC per directory. The batch applies
+//! atomically with respect to readers: one exclusive directory lock and
+//! one §3.4 invalidate barrier cover every item.
+//!
+//! Exactly-once works per item, not per batch: every `BatchItem`
+//! carries its own `op_id` against the same dedup ledger `Stamped`
+//! envelopes use, so a blind retry of the whole batch after a failover
+//! re-applies nothing — already-applied items answer their cached
+//! replies, the rest execute.
+//!
+//! Failure semantics: items apply in dependency order; the FIRST
+//! failure stops the batch. Its slot in [`Response::Batch`] carries the
+//! error and the un-attempted tail is simply absent (the reply is
+//! shorter than the request), so the client can distinguish "failed"
+//! from "never tried" and roll back / re-flush accordingly.
+
+use std::sync::atomic::Ordering;
+
+use crate::codec::Wire;
+use crate::error::{FsError, FsResult};
+use crate::server::journal::JournalRec;
+use crate::server::BServer;
+use crate::types::{AccessMask, ClientId, Credentials, FileId, W_OK, X_OK};
+use crate::wire::{BatchItem, BatchOp, Request, Response};
+
+use super::{misrouted, namespace};
+
+pub fn meta_batch(s: &BServer, req: Request) -> FsResult<Response> {
+    let Request::MetaBatch { lease, client, ack_upto, cred, ops } = req else {
+        return Err(misrouted("metabatch"));
+    };
+    // advance the client's acknowledged low-water mark first, exactly
+    // like a Stamped envelope (journal the prune only when it moved)
+    if s.ledger.prune(client, ack_upto) {
+        if let Some(j) = s.fs.journal() {
+            j.append(&JournalRec::OpLowWater { client, upto: ack_upto });
+        }
+    }
+    // a wedged journal cannot make any item (or its ledger entry)
+    // durable: refuse the whole batch distinctly
+    if let Some(j) = s.fs.journal() {
+        if let Some(reason) = j.wedged() {
+            return Err(FsError::JournalFailed(reason));
+        }
+    }
+    // one lease check gates the whole chain: a stale client re-leases
+    // and retries the batch (per-item dedup makes the retry safe)
+    let dir_file = s.check_lease(&lease)?;
+    let namespace_items = ops.iter().any(|i| !matches!(i.op, BatchOp::Close { .. }));
+    if namespace_items {
+        s.require_dir_access(dir_file, &cred, AccessMask(W_OK | X_OK))?;
+    }
+    // ONE exclusive lock + ONE §3.4 barrier for the whole chain: the
+    // batch is atomic vs readers of this directory (Close items only
+    // touch the openlist and ride along under the same lock)
+    let _g = s.locks.write(dir_file);
+    if namespace_items {
+        s.invalidate_barrier(dir_file);
+    }
+    let mut results = Vec::with_capacity(ops.len());
+    for BatchItem { op_id, op } in ops {
+        match s.ledger.lookup(client, op_id) {
+            Err(()) => {
+                return Err(FsError::Protocol(format!(
+                    "op {op_id} of client {client} retried below its acknowledged low-water mark"
+                )))
+            }
+            Ok(Some(reply)) => {
+                s.ledger.hits.fetch_add(1, Ordering::Relaxed);
+                results.push(Response::from_bytes(&reply)?);
+                continue;
+            }
+            Ok(None) => {}
+        }
+        s.ledger.misses.fetch_add(1, Ordering::Relaxed);
+        match apply_item(s, dir_file, client, &cred, op) {
+            Ok(resp) => {
+                // only successful replies are cached (an error left no
+                // state change, so re-executing a retried item is safe)
+                let reply = resp.to_bytes();
+                s.ledger.record(client, op_id, reply.clone());
+                if let Some(j) = s.fs.journal() {
+                    j.append(&JournalRec::OpResult { client, op_id, reply });
+                }
+                results.push(resp);
+            }
+            Err(e) => {
+                // first failure stops the chain: later items depend on
+                // this one (or the client re-flushes them independently)
+                results.push(Response::Err(e));
+                break;
+            }
+        }
+    }
+    // Ok even with a trailing Err slot: dispatch's journal commit must
+    // still cover the successfully applied prefix
+    Ok(Response::Batch(results))
+}
+
+fn apply_item(
+    s: &BServer,
+    dir_file: FileId,
+    client: ClientId,
+    cred: &Credentials,
+    op: BatchOp,
+) -> FsResult<Response> {
+    match op {
+        BatchOp::Create { name, mode, kind } => {
+            namespace::create_locked(s, dir_file, &name, mode, kind, cred).map(Response::Created)
+        }
+        BatchOp::Mkdir { name, mode } => {
+            namespace::mkdir_locked(s, dir_file, &name, mode, cred).map(Response::Created)
+        }
+        BatchOp::Unlink { name } => {
+            namespace::unlink_locked(s, dir_file, &name).map(|_| Response::Unit)
+        }
+        BatchOp::Rmdir { name } => {
+            namespace::rmdir_locked(s, dir_file, &name).map(|_| Response::Unit)
+        }
+        BatchOp::Rename { sname, dname } => {
+            namespace::rename_same_dir_locked(s, dir_file, &sname, &dname).map(Response::Created)
+        }
+        BatchOp::Close { ino, handle } => {
+            // deferred wrap-up of a speculatively created file: drop its
+            // open record without a per-file Close RPC
+            let file = s.fs.validate(ino)?;
+            s.openlist.close(file, client, handle);
+            Ok(Response::Unit)
+        }
+    }
+}

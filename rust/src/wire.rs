@@ -61,6 +61,33 @@ pub struct LeaseStamp {
     pub epoch: u64,
 }
 
+/// One speculated mutation inside a [`Request::MetaBatch`]. `op_id` is
+/// the client's per-op exactly-once stamp (same id space as
+/// [`Request::Stamped`]): the server dedups each item individually
+/// against its ledger, so a blind batch retry after failover re-applies
+/// nothing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchItem {
+    pub op_id: u64,
+    pub op: BatchOp,
+}
+
+/// The mutation kinds a speculation chain can carry. All are relative
+/// to the batch's leased directory; `Rename` moves within it (the
+/// speculation layer only batches same-directory renames — cross-dir
+/// renames are barriers). `Close` retires the open record of a
+/// speculatively created file whose data already flushed, so the
+/// wrap-up RPC rides the batch instead of going out per file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BatchOp {
+    Create { name: String, mode: u16, kind: FileKind },
+    Mkdir { name: String, mode: u16 },
+    Unlink { name: String },
+    Rmdir { name: String },
+    Rename { sname: String, dname: String },
+    Close { ino: Ino, handle: u64 },
+}
+
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Request {
     /// Resolve one name in a directory (baseline path walk).
@@ -234,6 +261,24 @@ pub enum Request {
     /// transports strip it into a frame-header extension instead of
     /// shipping the envelope bytes.
     Traced { trace_id: u64, parent_span: u64, inner: Box<Request> },
+    /// Speculation drain: apply a dependency-ordered run of metadata
+    /// mutations against ONE leased directory atomically under its file
+    /// lock (DESIGN.md §14). Items apply in order; the first failure
+    /// stops the batch — its slot in [`Response::Batch`] carries the
+    /// error and later items are NOT attempted (the client rolls back
+    /// dependents and re-flushes the independent tail). Each item is
+    /// individually stamped (`BatchItem::op_id`, same ledger as
+    /// [`Request::Stamped`]) so failover retries are exactly-once;
+    /// `ack_upto` prunes the ledger like a `Stamped` envelope. Old
+    /// servers reject the unknown tag and the agent sticky-downgrades
+    /// to sequential per-op flushes.
+    MetaBatch {
+        lease: LeaseStamp,
+        client: ClientId,
+        ack_upto: u64,
+        cred: Credentials,
+        ops: Vec<BatchItem>,
+    },
 }
 
 /// One override row of the directory placement map: the subtree rooted
@@ -306,6 +351,11 @@ pub enum Response {
     /// requested trace's, or the slow-op drain) so the CLI can render
     /// causal trees without a JSON parser.
     Stats { json: String, spans: Vec<crate::obs::Span> },
+    /// Reply to [`Request::MetaBatch`]: one reply per attempted item,
+    /// in order. A failed item's slot is [`Response::Err`]; a reply
+    /// shorter than the request's `ops` means the tail was never
+    /// attempted (the server stops at the first failure).
+    Batch(Vec<Response>),
 }
 
 /// Server→client push messages (the §3.4 consistency protocol).
@@ -376,6 +426,7 @@ impl Request {
             Request::UpdateParentMeta { .. } => "rename",
             Request::StatsFetch { .. } => "stats",
             Request::Traced { inner, .. } => inner.op(),
+            Request::MetaBatch { .. } => "specflush",
         }
     }
 
@@ -408,6 +459,7 @@ impl Request {
             Request::JournalShip { frames } => 64 + frames.len(),
             Request::Stamped { inner, .. } => 24 + inner.wire_size(),
             Request::Traced { inner, .. } => 16 + inner.wire_size(),
+            Request::MetaBatch { ops, .. } => 64 + ops.len() * 48,
             Request::SubtreeImport { frames } => 64 + frames.len(),
             _ => 64,
         }
@@ -430,6 +482,7 @@ impl Response {
             Response::JournalChunk { frames, .. } => 32 + frames.len(),
             Response::PlacementMap { entries, .. } => 32 + entries.len() * 16,
             Response::Stats { json, spans } => 32 + json.len() + spans.len() * 64,
+            Response::Batch(items) => 8 + items.iter().map(|r| r.wire_size()).sum::<usize>(),
             _ => 32,
         }
     }
@@ -521,6 +574,63 @@ impl Wire for WriteSeg {
     }
     fn dec(d: &mut Dec) -> FsResult<Self> {
         Ok(WriteSeg { off: d.u64()?, data: d.bytes()? })
+    }
+}
+
+impl Wire for BatchOp {
+    fn enc(&self, e: &mut Enc) {
+        match self {
+            BatchOp::Create { name, mode, kind } => {
+                e.u8(0);
+                e.str(name);
+                e.u16(*mode);
+                kind.enc(e);
+            }
+            BatchOp::Mkdir { name, mode } => {
+                e.u8(1);
+                e.str(name);
+                e.u16(*mode);
+            }
+            BatchOp::Unlink { name } => {
+                e.u8(2);
+                e.str(name);
+            }
+            BatchOp::Rmdir { name } => {
+                e.u8(3);
+                e.str(name);
+            }
+            BatchOp::Rename { sname, dname } => {
+                e.u8(4);
+                e.str(sname);
+                e.str(dname);
+            }
+            BatchOp::Close { ino, handle } => {
+                e.u8(5);
+                ino.enc(e);
+                e.u64(*handle);
+            }
+        }
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(match d.u8()? {
+            0 => BatchOp::Create { name: d.str()?, mode: d.u16()?, kind: FileKind::dec(d)? },
+            1 => BatchOp::Mkdir { name: d.str()?, mode: d.u16()? },
+            2 => BatchOp::Unlink { name: d.str()? },
+            3 => BatchOp::Rmdir { name: d.str()? },
+            4 => BatchOp::Rename { sname: d.str()?, dname: d.str()? },
+            5 => BatchOp::Close { ino: Ino::dec(d)?, handle: d.u64()? },
+            t => return Err(FsError::Protocol(format!("bad batch op tag {t}"))),
+        })
+    }
+}
+
+impl Wire for BatchItem {
+    fn enc(&self, e: &mut Enc) {
+        e.u64(self.op_id);
+        self.op.enc(e);
+    }
+    fn dec(d: &mut Dec) -> FsResult<Self> {
+        Ok(BatchItem { op_id: d.u64()?, op: BatchOp::dec(d)? })
     }
 }
 
@@ -808,6 +918,14 @@ impl Wire for Request {
                 e.u64(*parent_span);
                 inner.enc(e);
             }
+            Request::MetaBatch { lease, client, ack_upto, cred, ops } => {
+                tagged!(e, 43);
+                lease.enc(e);
+                e.u32(*client);
+                e.u64(*ack_upto);
+                cred.enc(e);
+                ops.enc(e);
+            }
         }
     }
 
@@ -978,6 +1096,13 @@ impl Wire for Request {
                 parent_span: d.u64()?,
                 inner: Box::new(Request::dec(d)?),
             },
+            43 => Request::MetaBatch {
+                lease: LeaseStamp::dec(d)?,
+                client: d.u32()?,
+                ack_upto: d.u64()?,
+                cred: Credentials::dec(d)?,
+                ops: Vec::<BatchItem>::dec(d)?,
+            },
             t => return Err(FsError::Protocol(format!("bad request tag {t}"))),
         })
     }
@@ -1097,6 +1222,13 @@ impl Wire for Response {
                 e.str(json);
                 spans.enc(e);
             }
+            Response::Batch(items) => {
+                tagged!(e, 19);
+                e.u32(items.len() as u32);
+                for r in items {
+                    r.enc(e);
+                }
+            }
         }
     }
 
@@ -1172,6 +1304,17 @@ impl Wire for Response {
                 json: d.str()?,
                 spans: Vec::<crate::obs::Span>::dec(d)?,
             },
+            19 => {
+                let n = d.u32()? as usize;
+                if n > 65536 {
+                    return Err(FsError::Protocol(format!("oversized batch: {n}")));
+                }
+                let mut items = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    items.push(Response::dec(d)?);
+                }
+                Response::Batch(items)
+            }
             t => return Err(FsError::Protocol(format!("bad response tag {t}"))),
         })
     }
@@ -1388,6 +1531,33 @@ mod tests {
                     inner: Box::new(Request::Chmod { ino, mode: 0o600, cred: cred() }),
                 }),
             },
+            Request::MetaBatch {
+                lease: LeaseStamp { node: ino, epoch: 3 },
+                client: 3,
+                ack_upto: 40,
+                cred: cred(),
+                ops: vec![
+                    BatchItem {
+                        op_id: 41,
+                        op: BatchOp::Create { name: "f".into(), mode: 0o644, kind: FileKind::Regular },
+                    },
+                    BatchItem { op_id: 42, op: BatchOp::Mkdir { name: "d".into(), mode: 0o755 } },
+                    BatchItem { op_id: 43, op: BatchOp::Unlink { name: "old".into() } },
+                    BatchItem { op_id: 44, op: BatchOp::Rmdir { name: "gone".into() } },
+                    BatchItem {
+                        op_id: 45,
+                        op: BatchOp::Rename { sname: "x".into(), dname: "y".into() },
+                    },
+                    BatchItem { op_id: 46, op: BatchOp::Close { ino, handle: 9 } },
+                ],
+            },
+            Request::MetaBatch {
+                lease: LeaseStamp { node: ino, epoch: 0 },
+                client: 3,
+                ack_upto: 0,
+                cred: cred(),
+                ops: vec![],
+            },
         ]
     }
 
@@ -1475,6 +1645,12 @@ mod tests {
                     dur_us: 120,
                 }],
             },
+            Response::Batch(vec![
+                Response::Created(de.clone()),
+                Response::Unit,
+                Response::Err(FsError::AlreadyExists),
+            ]),
+            Response::Batch(vec![]),
         ]
     }
 

@@ -1,0 +1,481 @@
+//! Speculative metadata write-behind acceptance (DESIGN.md §14):
+//!
+//! * an untar-shaped create burst acknowledges locally and drains as
+//!   ONE `MetaBatch` RPC (`specflush`), never-registered opens elided;
+//! * speculated state is self-consistent before the server hears of it
+//!   (the file is openable and writable at zero RPCs);
+//! * a server-side EEXIST surfaces exactly ONCE, at the next barrier;
+//! * a failed speculative mkdir rolls back its dependent children;
+//! * `unlink` of an unflushed speculative create elides both ops;
+//! * a pre-§14 server downgrades stickily to sequential replay;
+//! * kill-the-primary mid-storm: zero acked-at-barrier ops lost, none
+//!   double-applied (the per-item dedup ledger survives promotion).
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use buffetfs::agent::spec::{is_provisional, SpecConfig};
+use buffetfs::agent::BAgent;
+use buffetfs::api::Client;
+use buffetfs::blib::Buffet;
+use buffetfs::cluster::{Backing, BuffetCluster, ClusterView};
+use buffetfs::datapath::DatapathConfig;
+use buffetfs::error::FsError;
+use buffetfs::metrics::RpcMetrics;
+use buffetfs::server::journal::JournalConfig;
+use buffetfs::server::BServer;
+use buffetfs::simnet::{LatencyModel, NetConfig};
+use buffetfs::store::data::MemData;
+use buffetfs::store::fs::LocalFs;
+use buffetfs::transport::capacity::ServiceConfig;
+use buffetfs::transport::chan::ChanTransport;
+use buffetfs::transport::Service;
+use buffetfs::types::{Credentials, FileKind, OpenFlags};
+use buffetfs::util::rng::XorShift;
+use buffetfs::wire::{Request, Response};
+
+fn fast_cluster() -> BuffetCluster {
+    BuffetCluster::spawn_with(
+        1,
+        NetConfig { one_way_us: 0, per_kb_us: 0, jitter_us: 0, seed: 14 },
+        Backing::Mem,
+        false,
+        ServiceConfig::unbounded(),
+    )
+}
+
+fn quiesce(metrics: &RpcMetrics) {
+    let mut last = metrics.total_rpcs();
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(5));
+        let now = metrics.total_rpcs();
+        if now == last {
+            return;
+        }
+        last = now;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The tentpole effect: N metadata mutations, ~1 critical-path RPC.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn untar_burst_coalesces_into_one_batch_rpc() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let client = Client::new(agent.clone(), Credentials::root());
+    let pool = client.root().unwrap().mkdir("pool", 0o755).unwrap();
+    agent.enable_speculation(SpecConfig::default());
+    pool.readdir().unwrap(); // warm the listing: speculation needs a decided cache
+    quiesce(&metrics);
+    let meta0 = metrics.metadata_rpcs();
+
+    for i in 0..32 {
+        let f = pool.create(&format!("f{i}"), 0o644).unwrap();
+        assert!(is_provisional(f.ino()), "speculated create must carry a provisional ino");
+        f.close().unwrap();
+    }
+    assert_eq!(metrics.metadata_rpcs(), meta0, "the burst must be acknowledged locally");
+    assert_eq!(agent.spec_pending_ops(), 64, "32 creates + 32 deferred closes queued");
+    assert_eq!(metrics.spec_queued(), 32);
+
+    agent.spec_drain().unwrap();
+    assert_eq!(metrics.count("specflush"), 1, "one MetaBatch drains the whole chain");
+    assert!(
+        metrics.metadata_rpcs() - meta0 <= 2,
+        "32 creates + 32 closes must cost ~1 metadata RPC, cost {}",
+        metrics.metadata_rpcs() - meta0
+    );
+    // the deferred opens never reached the server: their closes elide
+    assert_eq!(metrics.spec_elided(), 32);
+    assert_eq!(agent.spec_pending_ops(), 0);
+
+    // a second, cache-cold agent sees all 32 files under real inos
+    let (a2, _m2) = cluster.make_agent();
+    let c2 = Client::new(a2, Credentials::root());
+    let listing = c2.root().unwrap().open_dir("pool").unwrap().readdir().unwrap();
+    assert_eq!(listing.len(), 32);
+    for e in &listing {
+        assert_eq!(e.kind, FileKind::Regular);
+        assert!(!is_provisional(e.ino), "provisional inos must never cross the wire");
+    }
+}
+
+#[test]
+fn speculated_file_is_usable_locally_before_any_rpc() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    agent.enable_datapath(DatapathConfig::default());
+    let client = Client::new(agent.clone(), Credentials::root());
+    let d = client.root().unwrap().mkdir("d", 0o755).unwrap();
+    agent.enable_speculation(SpecConfig::default());
+    d.readdir().unwrap();
+    quiesce(&metrics);
+    let rpcs0 = metrics.total_rpcs();
+
+    let body = b"speculation: ack first, tell the server later";
+    let f = d.create("song", 0o644).unwrap();
+    assert!(is_provisional(f.ino()));
+    assert_eq!(f.write(body).unwrap() as usize, body.len());
+    // a sibling open resolves from the speculated cache entry
+    let g = d.open_file("song", OpenFlags::RDONLY).unwrap();
+    assert!(is_provisional(g.ino()));
+    assert_eq!(
+        metrics.total_rpcs(),
+        rpcs0,
+        "create + write-back write + sibling open must cost ZERO RPCs"
+    );
+
+    // fsync is a barrier: materialize the create, then flush the bytes
+    f.fsync().unwrap();
+    let real = agent.spec_live_ino(f.ino());
+    assert!(!is_provisional(real), "fsync must have materialized the ino");
+    f.close().unwrap();
+    g.close().unwrap();
+
+    // a second agent observes the materialized file, bytes and all
+    let (a2, _m2) = cluster.make_agent();
+    let b2 = Buffet::process(a2, Credentials::root());
+    assert_eq!(b2.get("/d/song", 1 << 16).unwrap(), body);
+}
+
+// ---------------------------------------------------------------------------
+// Failure semantics: exactly-once error surfacing, dependent rollback.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eexist_surfaces_exactly_once_at_the_next_barrier() {
+    let cluster = fast_cluster();
+    let (a1, m1) = cluster.make_agent();
+    let (a2, _m2) = cluster.make_agent();
+    let c1 = Client::new(a1.clone(), Credentials::root());
+    let pool = c1.root().unwrap().mkdir("pool", 0o755).unwrap();
+    a1.enable_speculation(SpecConfig::default());
+    pool.readdir().unwrap(); // decisively absent, as far as a1 knows
+
+    // another client wins the name server-side; a1's cache is now stale
+    let winner = b"the server-side winner";
+    let b2 = Buffet::process(a2, Credentials::root());
+    b2.put("/pool/clash", winner).unwrap();
+
+    // the speculative create still acks locally against the stale cache
+    let f = pool.create("clash", 0o644).unwrap();
+    assert!(is_provisional(f.ino()));
+    f.close().unwrap();
+
+    // barrier #1: the flush hits EEXIST — surfaced here, exactly once
+    let err = pool.readdir().unwrap_err();
+    assert_eq!(err, FsError::AlreadyExists);
+    assert!(m1.spec_rollbacks() >= 1, "the failed create must roll back");
+
+    // barrier #2: the latch was consumed; the directory reads clean
+    pool.readdir().unwrap();
+    assert_eq!(a1.spec_pending_ops(), 0);
+
+    // the winner's file was never disturbed
+    assert_eq!(b2.get("/pool/clash", 1 << 16).unwrap(), winner);
+}
+
+#[test]
+fn failed_speculative_mkdir_rolls_back_dependent_children() {
+    let cluster = fast_cluster();
+    let (a1, m1) = cluster.make_agent();
+    let (a2, _m2) = cluster.make_agent();
+    let c1 = Client::new(a1.clone(), Credentials::root());
+    let root = c1.root().unwrap();
+    a1.enable_speculation(SpecConfig::default());
+    root.readdir().unwrap(); // warm: "d" decisively absent
+
+    // a FILE lands at /d behind a1's back: the speculative mkdir is doomed
+    let b2 = Buffet::process(a2, Credentials::root());
+    b2.put("/d", b"a file where a dir was speculated").unwrap();
+
+    let d = root.mkdir("d", 0o755).unwrap();
+    assert!(is_provisional(d.node()));
+    // children speculate under the provisional directory at zero RPCs
+    d.create("x", 0o644).unwrap().close().unwrap();
+    d.create("y", 0o644).unwrap().close().unwrap();
+    assert!(a1.spec_pending_ops() >= 3);
+
+    // the drain is a barrier: ONE error for the whole dependent tree
+    let err = a1.spec_drain().unwrap_err();
+    assert_eq!(err, FsError::AlreadyExists);
+    assert!(
+        m1.spec_rollbacks() >= 3,
+        "mkdir + both dependent creates must roll back, saw {}",
+        m1.spec_rollbacks()
+    );
+    a1.spec_drain().unwrap(); // consumed: the second barrier is clean
+    assert_eq!(a1.spec_pending_ops(), 0);
+
+    // the rolled-back directory handle is dead — as if it never existed
+    assert_eq!(d.stat_self().unwrap_err(), FsError::NotFound);
+}
+
+#[test]
+fn unlink_after_speculative_create_elides_both_ops() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let b = Buffet::process(agent.clone(), Credentials::root());
+    b.mkdir("/d", 0o755).unwrap();
+    agent.enable_speculation(SpecConfig::default());
+    b.readdir("/d").unwrap();
+    quiesce(&metrics);
+    let meta0 = metrics.metadata_rpcs();
+
+    b.create("/d/tmp", 0o644).unwrap();
+    b.unlink("/d/tmp").unwrap();
+    assert_eq!(metrics.spec_elided(), 2, "create + unlink must cancel out");
+    assert_eq!(agent.spec_pending_ops(), 0, "nothing left to flush");
+
+    agent.spec_drain().unwrap();
+    assert_eq!(metrics.count("specflush"), 0, "neither op may reach the wire");
+    assert_eq!(metrics.metadata_rpcs(), meta0);
+    assert!(b.readdir("/d").unwrap().is_empty());
+}
+
+#[test]
+fn same_dir_rename_rides_the_chain() {
+    let cluster = fast_cluster();
+    let (agent, metrics) = cluster.make_agent();
+    let client = Client::new(agent.clone(), Credentials::root());
+    let pool = client.root().unwrap().mkdir("pool", 0o755).unwrap();
+    agent.enable_speculation(SpecConfig::default());
+    pool.readdir().unwrap();
+    quiesce(&metrics);
+    let meta0 = metrics.metadata_rpcs();
+
+    pool.create("draft", 0o644).unwrap().close().unwrap();
+    pool.rename_into("draft", &pool, "final").unwrap();
+    assert_eq!(metrics.metadata_rpcs(), meta0, "create + rename both ack locally");
+
+    agent.spec_drain().unwrap();
+    let (a2, _m2) = cluster.make_agent();
+    let c2 = Client::new(a2, Credentials::root());
+    let names: Vec<String> = c2
+        .root()
+        .unwrap()
+        .open_dir("pool")
+        .unwrap()
+        .readdir()
+        .unwrap()
+        .into_iter()
+        .map(|e| e.name)
+        .collect();
+    assert_eq!(names, vec!["final".to_string()]);
+}
+
+// ---------------------------------------------------------------------------
+// Protocol downgrade against a pre-§14 server.
+// ---------------------------------------------------------------------------
+
+/// A server from before wire tag 43 existed: `MetaBatch` bounces with
+/// the decoder's protocol error, everything else works.
+struct PreSpecServer {
+    inner: Arc<BServer>,
+}
+
+impl Service for PreSpecServer {
+    fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::MetaBatch { .. } => {
+                Response::Err(FsError::Protocol("bad request tag 43".into()))
+            }
+            other => self.inner.handle(other),
+        }
+    }
+}
+
+#[test]
+fn pre_spec_server_downgrades_stickily_to_sequential_replay() {
+    let s = BServer::new(LocalFs::new(0, 0, Box::new(MemData::new())));
+    let metrics = Arc::new(RpcMetrics::new());
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let view = ClusterView::new(s.fs.root_ino());
+    view.add(0, 0, ChanTransport::new(Arc::new(PreSpecServer { inner: s }), net, metrics.clone()));
+    let agent = BAgent::new(1, view, metrics.clone());
+    agent.enable_speculation(SpecConfig::default());
+    let b = Buffet::with_pid(agent.clone(), 1, Credentials::root());
+    b.readdir("/").unwrap();
+
+    b.create("/a", 0o644).unwrap();
+    b.create("/b", 0o644).unwrap();
+    assert!(agent.speculation_enabled());
+
+    // the batch bounces; the chain replays as per-op calls and succeeds
+    agent.spec_drain().unwrap();
+    assert!(!agent.speculation_enabled(), "the downgrade must be sticky");
+    assert!(metrics.count("create") >= 2, "the chain must replay as per-op RPCs");
+    assert_eq!(b.stat("/a").unwrap().kind, FileKind::Regular);
+    assert_eq!(b.stat("/b").unwrap().kind, FileKind::Regular);
+
+    // later mutations skip speculation entirely
+    b.create("/c", 0o644).unwrap();
+    assert_eq!(agent.spec_pending_ops(), 0);
+    assert_eq!(b.stat("/c").unwrap().kind, FileKind::Regular);
+}
+
+// ---------------------------------------------------------------------------
+// Crash safety: kill the primary mid-storm with speculation ON.
+// ---------------------------------------------------------------------------
+
+fn tdir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("buffetfs-spec-{tag}-{}", std::process::id()))
+}
+
+fn journal_cfg() -> JournalConfig {
+    JournalConfig { sync_data: false, ..JournalConfig::default() }
+}
+
+/// Hard-drop wrapper (mirrors the crash-safety suite): after
+/// `countdown` admitted requests the primary is dead — every later
+/// request answers a transport error.
+struct KillSwitch {
+    inner: Arc<BServer>,
+    countdown: AtomicU64,
+    dead: AtomicBool,
+}
+
+impl Service for KillSwitch {
+    fn handle(&self, req: Request) -> Response {
+        if self.dead.load(Ordering::Acquire) {
+            return Response::Err(FsError::Transport("primary crashed".into()));
+        }
+        let prev = self.countdown.fetch_sub(1, Ordering::AcqRel);
+        if prev <= 1 {
+            self.dead.store(true, Ordering::Release);
+            return Response::Err(FsError::Transport("primary crashed".into()));
+        }
+        self.inner.handle(req)
+    }
+}
+
+/// The invariant under test: an op is *acked* only when a later barrier
+/// (`spec_drain` returning `Ok`) covered it. Zero acked ops may be lost
+/// across the failover, and no create may apply twice (the blind batch
+/// retry after promotion must dedup through the shipped ledger).
+#[test]
+fn kill_primary_mid_spec_storm_loses_no_acked_op_and_doubles_none() {
+    let pdir = tdir("prim");
+    let bdir = tdir("back");
+    let _ = std::fs::remove_dir_all(&pdir);
+    let _ = std::fs::remove_dir_all(&bdir);
+    let net = Arc::new(LatencyModel::new(NetConfig::zero()));
+    let primary = BServer::recover(0, 0, Box::new(MemData::new()), &pdir, journal_cfg()).unwrap();
+    let backup = BServer::recover(0, 0, Box::new(MemData::new()), &bdir, journal_cfg()).unwrap();
+    backup.enable_backup_role();
+    primary.set_backup(ChanTransport::new(backup.clone(), net.clone(), Arc::new(RpcMetrics::new())));
+
+    let mut rng = XorShift::new(0x5bec);
+    let kill = Arc::new(KillSwitch {
+        inner: primary.clone(),
+        countdown: AtomicU64::new(80 + rng.below(80)),
+        dead: AtomicBool::new(false),
+    });
+    let metrics = Arc::new(RpcMetrics::new());
+    let view = ClusterView::new(primary.fs.root_ino());
+    view.add(0, 0, ChanTransport::new(kill, net.clone(), metrics.clone()));
+    view.register_standby(0, 0, ChanTransport::new(backup.clone(), net, metrics.clone()));
+    let agent = BAgent::new(1, view, metrics.clone());
+    agent.enable_speculation(SpecConfig::default());
+
+    let b = Buffet::with_pid(agent.clone(), 100, Credentials::root());
+    for k in 0..4 {
+        b.mkdir(&format!("/d{k}"), 0o755).unwrap();
+        b.readdir(&format!("/d{k}")).unwrap(); // decided cache → speculation live
+    }
+
+    // acked[path] = expected payload (empty vec for bare creates)
+    let mut acked_alive: Vec<(String, Vec<u8>)> = Vec::new();
+    let mut acked_removed: Vec<String> = Vec::new();
+    for round in 0..120u32 {
+        let dirp = format!("/d{}", round % 4);
+        let mut pending_creates: Vec<(String, Vec<u8>)> = Vec::new();
+        let mut pending_unlink: Option<String> = None;
+        let mut poisoned = false;
+        for j in 0..6u32 {
+            let path = format!("{dirp}/r{round}-f{j}");
+            match b.create(&path, 0o644) {
+                Ok(_) => pending_creates.push((path, Vec::new())),
+                Err(_) => poisoned = true,
+            }
+        }
+        if round % 3 == 0 {
+            // a put materializes its create mid-chain (write ⇒ reify)
+            let path = format!("{dirp}/r{round}-data");
+            let body = format!("payload {round}").into_bytes();
+            match b.put(&path, &body) {
+                Ok(()) => pending_creates.push((path, body)),
+                Err(_) => poisoned = true,
+            }
+        }
+        if round % 4 == 3 && acked_alive.len() > 4 {
+            let (victim, _) = acked_alive.remove(0);
+            match b.unlink(&victim) {
+                Ok(()) => pending_unlink = Some(victim),
+                Err(_) => poisoned = true,
+            }
+        }
+        // the barrier: only a clean drain acknowledges the round
+        match agent.spec_drain() {
+            Ok(()) if !poisoned => {
+                acked_alive.extend(pending_creates);
+                acked_removed.extend(pending_unlink);
+            }
+            Ok(()) => {}
+            Err(e) => {
+                // a semantic error here would mean a double-applied
+                // create (EEXIST) or a lost acked file (NOENT)
+                assert!(
+                    matches!(e, FsError::Transport(_) | FsError::Busy | FsError::Stale),
+                    "spec storm surfaced a semantic error: {e:?}"
+                );
+            }
+        }
+    }
+    assert!(metrics.failovers() >= 1, "the kill switch must have driven a promotion");
+    assert!(acked_alive.len() >= 50, "too few acked ops to be meaningful");
+    assert!(!acked_removed.is_empty(), "some acked unlinks must have happened");
+
+    // drain any tail; only transport-ish errors are tolerable
+    for _ in 0..16 {
+        match agent.spec_drain() {
+            Ok(()) => break,
+            Err(e) => assert!(
+                !matches!(e, FsError::AlreadyExists),
+                "post-storm drain surfaced a double-apply: {e:?}"
+            ),
+        }
+    }
+
+    // every acked-at-barrier op survived the promotion…
+    let v = Buffet::with_pid(agent.clone(), 999, Credentials::root());
+    for (path, body) in &acked_alive {
+        let st = v
+            .stat(path)
+            .unwrap_or_else(|e| panic!("acked {path} lost across failover: {e:?}"));
+        assert_eq!(st.kind, FileKind::Regular);
+        if !body.is_empty() {
+            assert_eq!(&v.get(path, 1 << 16).unwrap(), body, "{path} bytes diverged");
+        }
+    }
+    // …acked unlinks stayed unlinked…
+    for path in &acked_removed {
+        assert_eq!(v.stat(path).unwrap_err(), FsError::NotFound, "acked unlink of {path} undone");
+    }
+    // …and nothing applied twice: every surviving name is unique
+    for k in 0..4 {
+        let listing = v.readdir(&format!("/d{k}")).unwrap();
+        let mut seen = HashSet::new();
+        for e in &listing {
+            assert!(seen.insert(e.name.clone()), "duplicate entry {} in /d{k}", e.name);
+            assert!(!is_provisional(e.ino));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&pdir);
+    let _ = std::fs::remove_dir_all(&bdir);
+}
